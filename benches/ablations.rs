@@ -1,0 +1,183 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * **K sweep** — the paper (Supp C) tried K ∈ {4, 8, 16} and "found no
+//!   significant difference"; we sweep K on associative recall.
+//! * **ANN backend** — linear vs kd-forest vs LSH at equal settings:
+//!   learning quality (ANN recall failures would show up as worse loss)
+//!   and per-step speed.
+//! * **usage threshold δ** — §3.2's δ (default 0.005) gates which accesses
+//!   refresh a word's LRA position.
+//! * **kd-forest checks** — the FLANN quality/speed knob from Fig 1a.
+//!
+//!     cargo bench --bench ablations [-- --updates N]
+
+use sam::bench::{fmt_time, measure, save_results, Table};
+use sam::prelude::*;
+use sam::util::json::Json;
+
+fn train_best_loss(cfg: &CoreConfig, task: &dyn Task, level: usize, updates: usize) -> f64 {
+    let mut rng = Rng::new(cfg.seed);
+    let core = build_core(CoreKind::Sam, cfg, &mut rng);
+    let mut trainer = Trainer::new(
+        core,
+        Box::new(RmsProp::new(1e-3)),
+        TrainConfig {
+            batch: 4,
+            updates,
+            log_every: (updates / 8).max(1),
+            seed: cfg.seed,
+            verbose: false,
+            ..TrainConfig::default()
+        },
+    );
+    let mut cur = Curriculum::fixed(level);
+    trainer.run(task, &mut cur).best_loss()
+}
+
+fn step_speed(cfg: &CoreConfig) -> f64 {
+    let mut rng = Rng::new(cfg.seed);
+    let mut core = build_core(CoreKind::Sam, cfg, &mut rng);
+    let x = vec![0.5f32; cfg.x_dim];
+    let dy = vec![0.1f32; cfg.y_dim];
+    measure(2, || {
+        core.reset();
+        for _ in 0..10 {
+            core.forward(&x);
+        }
+        for _ in 0..10 {
+            core.backward(&dy);
+        }
+        core.end_episode();
+    })
+    .min
+        / 10.0
+}
+
+fn main() {
+    let args = Args::from_env();
+    let updates = args.usize_or("updates", 200);
+    let task = AssociativeRecall::new(6);
+    let base = CoreConfig {
+        x_dim: task.x_dim(),
+        y_dim: task.y_dim(),
+        hidden: 48,
+        heads: 2,
+        word: 16,
+        mem_words: 4096,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 31,
+        ..CoreConfig::default()
+    };
+    let mut results = Vec::new();
+
+    println!("Ablation 1 — sparse reads K (paper Supp C: K∈{{4,8,16}} indistinguishable)\n");
+    let mut t = Table::new(&["K", "best loss", "time/step"]);
+    for k in [2usize, 4, 8, 16] {
+        let cfg = CoreConfig { k, ..base.clone() };
+        let loss = train_best_loss(&cfg, &task, 4, updates);
+        let speed = step_speed(&cfg);
+        t.row(vec![k.to_string(), format!("{loss:.3}"), fmt_time(speed)]);
+        results.push(Json::obj(vec![
+            ("ablation", Json::str("k")),
+            ("k", Json::num(k as f64)),
+            ("best_loss", Json::num(loss)),
+            ("s_per_step", Json::num(speed)),
+        ]));
+    }
+    t.print();
+
+    println!("\nAblation 2 — ANN backend (quality + speed at N=4096)\n");
+    let mut t = Table::new(&["ann", "best loss", "time/step"]);
+    for (label, ann) in [
+        ("linear", AnnKind::Linear),
+        ("kd-forest", AnnKind::KdForest),
+        ("lsh", AnnKind::Lsh),
+    ] {
+        let cfg = CoreConfig { ann, ..base.clone() };
+        let loss = train_best_loss(&cfg, &task, 4, updates);
+        let speed = step_speed(&cfg);
+        t.row(vec![label.to_string(), format!("{loss:.3}"), fmt_time(speed)]);
+        results.push(Json::obj(vec![
+            ("ablation", Json::str("ann")),
+            ("backend", Json::str(label)),
+            ("best_loss", Json::num(loss)),
+            ("s_per_step", Json::num(speed)),
+        ]));
+    }
+    t.print();
+
+    println!("\nAblation 3 — usage threshold δ (paper default 0.005)\n");
+    let mut t = Table::new(&["delta", "best loss"]);
+    for delta in [0.0f32, 0.005, 0.05, 0.5] {
+        let cfg = CoreConfig { delta, ..base.clone() };
+        let loss = train_best_loss(&cfg, &task, 4, updates);
+        t.row(vec![format!("{delta}"), format!("{loss:.3}")]);
+        results.push(Json::obj(vec![
+            ("ablation", Json::str("delta")),
+            ("delta", Json::num(delta as f64)),
+            ("best_loss", Json::num(loss)),
+        ]));
+    }
+    t.print();
+
+    println!("\nAblation 4 — kd-forest `checks` budget (speed/recall trade, Fig 1a)\n");
+    let mut t = Table::new(&["checks", "time/step", "recall@4 vs exact"]);
+    {
+        use sam::ann::{AnnIndex, KdForest, LinearIndex};
+        let n = 8192;
+        let dim = 16;
+        let mut rng = Rng::new(7);
+        let pts: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let mut exact = LinearIndex::new(n, dim);
+        for (i, p) in pts.iter().enumerate() {
+            exact.insert(i, p);
+        }
+        for checks in [8usize, 32, 128, 512] {
+            let mut forest = KdForest::new(n, dim, 4, checks, 10 * n, 1);
+            for (i, p) in pts.iter().enumerate() {
+                forest.insert(i, p);
+            }
+            forest.rebuild();
+            let mut hits = 0;
+            let mut total = 0;
+            let queries: Vec<Vec<f32>> = (0..32)
+                .map(|qi| {
+                    pts[(qi * 37) % n]
+                        .iter()
+                        .map(|x| x + 0.1 * rng.normal())
+                        .collect()
+                })
+                .collect();
+            let speed = measure(3, || {
+                for q in &queries {
+                    std::hint::black_box(forest.query(q, 4));
+                }
+            })
+            .min
+                / 32.0;
+            for q in &queries {
+                let approx: std::collections::HashSet<usize> =
+                    forest.query(q, 4).into_iter().map(|(i, _)| i).collect();
+                for (i, _) in exact.query(q, 4) {
+                    total += 1;
+                    if approx.contains(&i) {
+                        hits += 1;
+                    }
+                }
+            }
+            let recall = hits as f64 / total as f64;
+            t.row(vec![checks.to_string(), fmt_time(speed), format!("{recall:.2}")]);
+            results.push(Json::obj(vec![
+                ("ablation", Json::str("checks")),
+                ("checks", Json::num(checks as f64)),
+                ("recall", Json::num(recall)),
+                ("s_per_query", Json::num(speed)),
+            ]));
+        }
+    }
+    t.print();
+    save_results("ablations", Json::arr(results));
+}

@@ -1,0 +1,105 @@
+//! Figure 1a: wall-clock time of a single forward+backward pass vs memory
+//! size N, for NTM / DAM / SAM-linear / SAM-kdtree / SAM-LSH.
+//!
+//! Paper (Supp E): LSTM-100 controller, word size 32, 4 access heads.
+//! Paper headline: at N = 1M, NTM takes 12 s vs SAM 7 ms (~1600×).
+//! Expectation here: dense models scale linearly in N, SAM stays flat
+//! (linear-index SAM grows slowly: the O(N) scan has a tiny constant).
+//!
+//!     cargo bench --bench fig1_speed [-- --paper-scale]
+
+use sam::bench::{fmt_time, measure, save_results, Table};
+use sam::prelude::*;
+use sam::util::json::Json;
+
+fn step_time(kind: CoreKind, ann: AnnKind, n: usize, t_steps: usize, reps: usize) -> f64 {
+    let cfg = CoreConfig {
+        x_dim: 8,
+        y_dim: 8,
+        hidden: 100,
+        heads: 4,
+        word: 32,
+        mem_words: n,
+        k: 4,
+        ann,
+        seed: 1,
+        ..CoreConfig::default()
+    };
+    let mut rng = Rng::new(1);
+    let mut core = build_core(kind, &cfg, &mut rng);
+    let x = vec![0.5f32; 8];
+    let dy = vec![0.1f32; 8];
+    let stats = measure(reps, || {
+        core.reset();
+        for _ in 0..t_steps {
+            core.forward(&x);
+        }
+        for _ in 0..t_steps {
+            core.backward(&dy);
+        }
+        core.end_episode();
+    });
+    stats.min / t_steps as f64 // per fwd+bwd step
+}
+
+fn main() {
+    let args = Args::from_env();
+    let paper = args.has("paper-scale");
+    let t_steps = args.usize_or("steps", 10);
+
+    // (label, kind, ann, max N) — dense models stop earlier: their per-step
+    // cost AND snapshot memory are O(N) (NTM additionally snapshots per head).
+    let dense_max = if paper { 1 << 16 } else { 1 << 12 };
+    let sparse_max = if paper { 1 << 21 } else { 1 << 16 };
+    let models: Vec<(&str, CoreKind, AnnKind, usize)> = vec![
+        ("NTM", CoreKind::Ntm, AnnKind::Linear, dense_max),
+        ("DAM", CoreKind::Dam, AnnKind::Linear, dense_max),
+        ("SAM linear", CoreKind::Sam, AnnKind::Linear, sparse_max),
+        ("SAM kd-tree", CoreKind::Sam, AnnKind::KdForest, sparse_max),
+        ("SAM LSH", CoreKind::Sam, AnnKind::Lsh, sparse_max),
+    ];
+
+    let mut ns = Vec::new();
+    let mut n = 64;
+    while n <= sparse_max {
+        ns.push(n);
+        n *= 4;
+    }
+
+    println!("Figure 1a — forward+backward wall-clock per step vs N (T={t_steps})\n");
+    let mut table = Table::new(&["model", "N", "time/step", "vs NTM@N"]);
+    let mut results = Vec::new();
+    let mut ntm_at: std::collections::HashMap<usize, f64> = Default::default();
+    for (label, kind, ann, max_n) in &models {
+        for &n in ns.iter().filter(|&&n| n <= *max_n) {
+            let reps = if n >= 1 << 18 { 1 } else { 2 };
+            let t = step_time(*kind, *ann, n, t_steps, reps);
+            if *label == "NTM" {
+                ntm_at.insert(n, t);
+            }
+            let speedup = ntm_at
+                .get(&n)
+                .map(|ntm| format!("{:.1}x", ntm / t))
+                .unwrap_or_else(|| "-".into());
+            table.row(vec![label.to_string(), n.to_string(), fmt_time(t), speedup]);
+            results.push(Json::obj(vec![
+                ("model", Json::str(*label)),
+                ("n", Json::num(n as f64)),
+                ("seconds_per_step", Json::num(t)),
+            ]));
+        }
+    }
+    table.print();
+    // Headline ratio at the largest common N.
+    let n_big = *ns.iter().filter(|&&n| n <= dense_max).max().unwrap();
+    let sam_big = step_time(CoreKind::Sam, AnnKind::KdForest, n_big, t_steps, 2);
+    if let Some(ntm_big) = ntm_at.get(&n_big) {
+        println!(
+            "\nheadline @ N={n_big}: NTM {} vs SAM(kd) {} -> {:.0}x speedup (paper: ~100-1600x as N grows)",
+            fmt_time(*ntm_big),
+            fmt_time(sam_big),
+            ntm_big / sam_big
+        );
+    }
+    save_results("fig1_speed", Json::arr(results));
+}

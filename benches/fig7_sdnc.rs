@@ -1,0 +1,103 @@
+//! Figure 7 (Supp D.2): DNC vs SDNC speed and memory at small-to-medium N.
+//!
+//! Paper headline: at N = 2048 (word 32, 4 heads, T = 10, SDNC with linear
+//! KNN) the SDNC is ~440× faster and uses ~240× less memory — the dense
+//! DNC's O(N²) temporal linkage dominates. Unlike Fig 1b this plots TOTAL
+//! memory (including initialization), since the two models' start states
+//! differ (dense L vs sparse N/P matrices).
+//!
+//!     cargo bench --bench fig7_sdnc [-- --paper-scale]
+
+use sam::bench::{fmt_bytes, fmt_time, measure, save_results, Table};
+use sam::prelude::*;
+use sam::util::alloc::MemRegion;
+use sam::util::json::Json;
+
+fn config(n: usize) -> CoreConfig {
+    CoreConfig {
+        x_dim: 8,
+        y_dim: 8,
+        hidden: 100,
+        heads: 4,
+        word: 32,
+        mem_words: n,
+        k: 4,
+        k_l: 8,
+        ann: AnnKind::Linear, // paper: SDNC benchmarked with a linear KNN
+        seed: 3,
+        ..CoreConfig::default()
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let paper = args.has("paper-scale");
+    let t_steps = args.usize_or("steps", 10);
+    let max_n = if paper { 4096 } else { 2048 };
+
+    let mut ns = vec![64, 256];
+    let mut n = 1024;
+    while n <= max_n {
+        ns.push(n);
+        n *= 2;
+    }
+
+    println!("Figure 7 — DNC vs SDNC, T={t_steps} fwd+bwd (word 32, 4 heads)\n");
+    let mut table = Table::new(&["model", "N", "time/ep", "total mem", "speedup", "mem ratio"]);
+    let mut results = Vec::new();
+    for &n in &ns {
+        let mut stats = Vec::new();
+        for kind in [CoreKind::Dnc, CoreKind::Sdnc] {
+            // Total memory including init: measure construction + episode.
+            let region = MemRegion::start();
+            let mut rng = Rng::new(3);
+            let mut core = build_core(kind, &config(n), &mut rng);
+            core.reset();
+            let x = vec![0.5f32; 8];
+            let dy = vec![0.1f32; 8];
+            let time = measure(2, || {
+                core.reset();
+                for _ in 0..t_steps {
+                    core.forward(&x);
+                }
+                for _ in 0..t_steps {
+                    core.backward(&dy);
+                }
+                core.end_episode();
+            })
+            .min;
+            let mem = region.peak_overhead();
+            drop(core);
+            stats.push((kind, time, mem));
+        }
+        let (_, t_dnc, m_dnc) = stats[0];
+        let (_, t_sdnc, m_sdnc) = stats[1];
+        for (kind, time, mem) in &stats {
+            table.row(vec![
+                format!("{kind:?}"),
+                n.to_string(),
+                fmt_time(*time),
+                fmt_bytes(*mem),
+                if matches!(kind, CoreKind::Sdnc) {
+                    format!("{:.0}x", t_dnc / t_sdnc)
+                } else {
+                    "1x".into()
+                },
+                if matches!(kind, CoreKind::Sdnc) {
+                    format!("{:.0}x", m_dnc as f64 / (m_sdnc.max(1) as f64))
+                } else {
+                    "1x".into()
+                },
+            ]);
+            results.push(Json::obj(vec![
+                ("model", Json::str(format!("{kind:?}"))),
+                ("n", Json::num(n as f64)),
+                ("seconds_per_episode", Json::num(*time)),
+                ("total_bytes", Json::num(*mem as f64)),
+            ]));
+        }
+    }
+    table.print();
+    println!("\nexpectation: speedup and memory ratio grow ~quadratically with N (paper @2048: ~440x time, ~240x memory)");
+    save_results("fig7_sdnc", Json::arr(results));
+}

@@ -1,0 +1,112 @@
+//! Tables 1-2: Babi question answering — per-family error for each model,
+//! trained jointly on all families (synthetic Babi-style generator; see
+//! DESIGN.md §3 for the substitution).
+//!
+//! Paper finding (Table 1): MANNs ≪ LSTM/NTM; sparse ≈ dense (SAM ≈ DAM,
+//! SDNC ≤ DNC); SDNC best reported. The NTM lags because it cannot
+//! allocate memory effectively.
+//!
+//!     cargo bench --bench table1_babi [-- --paper-scale --updates N]
+
+use sam::bench::{save_results, Table};
+use sam::prelude::*;
+use sam::tasks::babi::FAMILIES;
+use sam::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let paper = args.has("paper-scale");
+    let updates = args.usize_or("updates", if paper { 20_000 } else { 1500 });
+    let story_level = args.usize_or("level", 4);
+    let eval_eps = args.usize_or("eval-episodes", if paper { 100 } else { 25 });
+
+    let task = BabiTask::new();
+    let models = if paper {
+        vec![CoreKind::Lstm, CoreKind::Ntm, CoreKind::Dnc, CoreKind::Sdnc, CoreKind::Dam, CoreKind::Sam]
+    } else {
+        vec![CoreKind::Lstm, CoreKind::Dam, CoreKind::Sam, CoreKind::Sdnc]
+    };
+
+    println!("Table 1 — Babi-style per-family error % after joint training ({updates} updates)\n");
+    let mut headers: Vec<String> = vec!["family".into()];
+    headers.extend(models.iter().map(|m| format!("{m:?}")));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+
+    // errors[model][family]
+    let mut errors = vec![vec![0.0f64; FAMILIES.len()]; models.len()];
+    let mut means = vec![0.0f64; models.len()];
+    for (mi, kind) in models.iter().enumerate() {
+        let cfg = CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: if paper { 100 } else { 64 },
+            heads: if paper { 4 } else { 2 },
+            word: if paper { 32 } else { 16 },
+            mem_words: if paper { 2048 } else { 128 },
+            k: 4,
+            k_l: 8,
+            ann: AnnKind::Linear,
+            seed: 21,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(21);
+        let core = build_core(*kind, &cfg, &mut rng);
+        let mut trainer = Trainer::new(
+            core,
+            Box::new(RmsProp::new(if paper { 1e-4 } else { 3e-3 })),
+            TrainConfig {
+                batch: if paper { 8 } else { 4 },
+                updates,
+                log_every: (updates / 10).max(1),
+                seed: 21,
+                verbose: false,
+                ..TrainConfig::default()
+            },
+        );
+        let mut cur = Curriculum::fixed(story_level);
+        trainer.run(&task, &mut cur);
+        // per-family eval
+        for (fi, _) in FAMILIES.iter().enumerate() {
+            let fam_task = BabiTask::family(fi);
+            let err =
+                trainer.evaluate(&fam_task, story_level, eval_eps, 3000 + fi as u64) * 100.0;
+            errors[mi][fi] = err;
+        }
+        means[mi] = errors[mi].iter().sum::<f64>() / FAMILIES.len() as f64;
+    }
+
+    for (fi, fam) in FAMILIES.iter().enumerate() {
+        let mut row = vec![fam.to_string()];
+        for mi in 0..models.len() {
+            row.push(format!("{:.1}", errors[mi][fi]));
+        }
+        table.row(row);
+    }
+    let mut mean_row = vec!["Mean Error (%)".to_string()];
+    let mut failed_row = vec!["Failed (err > 5%)".to_string()];
+    for mi in 0..models.len() {
+        mean_row.push(format!("{:.1}", means[mi]));
+        failed_row.push(errors[mi].iter().filter(|&&e| e > 5.0).count().to_string());
+    }
+    table.row(mean_row);
+    table.row(failed_row);
+    table.print();
+
+    let results: Vec<Json> = models
+        .iter()
+        .enumerate()
+        .map(|(mi, kind)| {
+            Json::obj(vec![
+                ("model", Json::str(format!("{kind:?}"))),
+                ("mean_error_pct", Json::num(means[mi])),
+                (
+                    "per_family",
+                    Json::Arr(errors[mi].iter().map(|&e| Json::num(e)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    println!("\nexpectation: MANNs ≪ LSTM; sparse ≈ dense (paper Table 1: SDNC 2.9%, DAM 3.3%, SAM 4.1%, DNC 5.2%, NTM 17.5%, LSTM 28%)");
+    save_results("table1_babi", Json::arr(results));
+}

@@ -1,0 +1,55 @@
+// Hot-path micro-profile: break the SAM step into components.
+use sam::prelude::*;
+use sam::util::timer::Timer;
+
+fn main() {
+    let n = 65536;
+    let cfg = CoreConfig {
+        x_dim: 8, y_dim: 8, hidden: 100, heads: 4, word: 32,
+        mem_words: n, k: 4, ann: AnnKind::KdForest, seed: 1,
+        ..CoreConfig::default()
+    };
+    let mut rng = Rng::new(1);
+    let mut core = build_core(CoreKind::Sam, &cfg, &mut rng);
+    let x = vec![0.5f32; 8];
+    let dy = vec![0.1f32; 8];
+    // fwd-only vs fwd+bwd to split costs
+    for label in ["fwd", "fwd+bwd"] {
+        let t = Timer::start();
+        let reps = 20;
+        for _ in 0..reps {
+            core.reset();
+            for _ in 0..10 { core.forward(&x); }
+            if label == "fwd+bwd" {
+                for _ in 0..10 { core.backward(&dy); }
+            } else {
+                core.rollback();
+            }
+            core.end_episode();
+        }
+        println!("{label}: {:.1} µs/step", t.elapsed_s() / (reps * 10) as f64 * 1e6);
+    }
+    // isolate ANN cost
+    use sam::ann::{AnnIndex, KdForest};
+    let mut ann = KdForest::with_defaults(n, 32, 2);
+    let mut r2 = Rng::new(3);
+    for i in 0..n {
+        let v: Vec<f32> = (0..32).map(|_| r2.normal()).collect();
+        ann.insert(i, &v);
+    }
+    let q: Vec<f32> = (0..32).map(|_| r2.normal()).collect();
+    let t = Timer::start();
+    for _ in 0..1000 { std::hint::black_box(ann.query(&q, 4)); }
+    println!("ann query: {:.1} µs", t.elapsed_s() * 1e3);
+    let v: Vec<f32> = (0..32).map(|_| r2.normal()).collect();
+    let t = Timer::start();
+    for _ in 0..1000 { ann.update(7, &v); }
+    println!("ann update: {:.1} µs", t.elapsed_s() * 1e3);
+    // controller LSTM cost
+    use sam::nn::lstm::Lstm;
+    let mut lstm = Lstm::new("p", 8 + 4*32, 100, &mut rng);
+    let xin = vec![0.1f32; 8 + 4*32];
+    let t = Timer::start();
+    for _ in 0..1000 { std::hint::black_box(lstm.step(&xin)); }
+    println!("lstm step: {:.1} µs (tape {} entries)", t.elapsed_s() * 1e3, 1000);
+}

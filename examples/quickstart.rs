@@ -1,0 +1,56 @@
+//! Quickstart: train a small SAM on the copy task and watch the loss fall.
+//!
+//!     cargo run --release --example quickstart [-- --updates 400 --level 4]
+//!
+//! This is the 60-second end-to-end check that the public API composes:
+//! task → core → trainer → optimizer → metrics.
+
+use sam::prelude::*;
+
+fn main() {
+    let args = Args::from_env();
+    let updates = args.usize_or("updates", 400);
+    let level = args.usize_or("level", 4);
+    let seed = args.u64_or("seed", 7);
+
+    let task = CopyTask::new(6);
+    let cfg = CoreConfig {
+        x_dim: task.x_dim(),
+        y_dim: task.y_dim(),
+        hidden: 64,
+        heads: 2,
+        word: 16,
+        mem_words: 64,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed,
+        ..CoreConfig::default()
+    };
+    let mut rng = Rng::new(seed);
+    let core = build_core(CoreKind::Sam, &cfg, &mut rng);
+    let mut trainer = Trainer::new(
+        core,
+        Box::new(RmsProp::new(args.f32_or("lr", 3e-3))),
+        TrainConfig {
+            batch: 4,
+            updates,
+            log_every: (updates / 20).max(1),
+            seed,
+            verbose: true,
+            ..TrainConfig::default()
+        },
+    );
+    let mut curriculum = Curriculum::fixed(level);
+    let log = trainer.run(&task, &mut curriculum);
+
+    let errs = trainer.evaluate(&task, level, 20, seed ^ 1);
+    println!("\nfinal: best loss/step {:.4}, eval {errs:.2} bit-errors/episode", log.best_loss());
+    println!(
+        "loss curve: {}",
+        log.points
+            .iter()
+            .map(|p| format!("{:.3}", p.loss))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    );
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: jax → HLO *text* artifacts for the Rust PJRT runtime.
+
+Run once by ``make artifacts``; Python never touches the request path.
+
+The interchange format is HLO text, NOT a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links) rejects with
+``proto.id() <= INT_MAX``. The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and DESIGN.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--hidden 32 ...]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side can uniformly ``to_tuple()`` results)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str, config: dict) -> dict:
+    """Lower every cell in model.CELLS; returns {name: path}."""
+    os.makedirs(out_dir, exist_ok=True)
+    shapes = model.shapes_for(config)
+    written = {}
+    for name, fn in model.CELLS.items():
+        args = shapes[name]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = path
+        print(f"  {name}: {len(text)} chars -> {path}")
+    # Record the shapes the artifacts were lowered for (the Rust parity
+    # tests read this instead of hard-coding dims).
+    meta = {"config": config}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return written
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    for key, dflt in model.DEFAULT_CONFIG.items():
+        ap.add_argument(f"--{key.replace('_', '-')}", type=int, default=dflt)
+    ns = ap.parse_args()
+    config = {k: getattr(ns, k) for k in model.DEFAULT_CONFIG}
+    print(f"lowering cells with config {config}")
+    build_all(ns.out_dir, config)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

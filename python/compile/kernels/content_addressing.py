@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: dense content-based addressing (paper eq. 1-2).
+
+This is the dense models' per-step hot spot — the O(N·W) cosine-similarity
+softmax read that SAM's ANN index replaces with an O(log N) lookup. On the
+dense path it dominates the roofline, so it is the kernel worth fusing.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targeted a
+CPU (Torch7+Eigen); we re-think the operation for TPU idiom instead of
+porting loops. The memory is tiled along N into MXU-aligned blocks that
+stream HBM→VMEM; each grid step computes one q·Mᵀ block on the MXU and
+folds it into an *online softmax* (running max / denominator / weighted
+sum, flash-attention style), so the full N-sized attention row never
+materializes in HBM and VMEM holds only [BLOCK_N, W] + small accumulators.
+The accumulators are grid-persistent outputs pinned to block (0,0) — the
+standard Pallas accumulator idiom.
+
+Grid:    (N // BLOCK_N,)
+VMEM:    q [B,W], beta [B], mem block [BLOCK_N,W], read/acc [B,W], m/z [B]
+Per step: one [B,W]×[W,BLOCK_N] MXU matmul + VPU online-softmax update.
+
+interpret=True everywhere: the CPU image cannot execute Mosaic custom
+calls; real-TPU performance is estimated analytically in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_N = 128  # lane-aligned for the MXU/VPU
+
+
+def _kernel(q_ref, beta_ref, mem_ref, read_ref, m_ref, z_ref, acc_ref, *, floor):
+    """One grid step: fold memory block j into the online softmax."""
+    j = pl.program_id(0)
+    q = q_ref[...]          # [B, W]
+    mem = mem_ref[...]      # [BLOCK_N, W]
+    beta = beta_ref[...]    # [B]
+
+    # Norm-floored cosine similarities for this block: [B, BLOCK_N].
+    nq = jnp.maximum(jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True)), floor)
+    nm = jnp.maximum(jnp.sqrt(jnp.sum(mem * mem, axis=-1)), floor)
+    sims = (q @ mem.T) / (nq * nm[None, :])
+    logits = beta[:, None] * sims
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, -jnp.inf, m_ref.dtype)
+        z_ref[...] = jnp.zeros(z_ref.shape, z_ref.dtype)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    # Online-softmax recurrence (flash-attention style).
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    scale = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    z_ref[...] = z_ref[...] * scale + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * scale[:, None] + p @ mem
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(0) - 1)
+    def _finish():
+        read_ref[...] = acc_ref[...] / z_ref[...][:, None]
+
+
+def content_attention(q, beta, mem, block_n=DEFAULT_BLOCK_N):
+    """Fused content-addressed read: returns the read word [B, W].
+
+    Matches ``ref.content_attention(q, beta, mem)[0]`` to f32 tolerance.
+    q: [B, W], beta: [B] (β ≥ 1 post-activation), mem: [N, W].
+
+    Differentiable: the Pallas kernel computes the forward; the VJP is the
+    closed-form gradient of the reference attention (the usual pattern for
+    hand-written kernels — backward runs the math, not the kernel).
+    """
+    return _content_attention_vjp(q, beta, mem, min(block_n, mem.shape[0]))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _content_attention_vjp(q, beta, mem, block_n):
+    return _content_attention_fwd_kernel(q, beta, mem, block_n)
+
+
+def _content_attention_fwd(q, beta, mem, block_n):
+    return _content_attention_fwd_kernel(q, beta, mem, block_n), (q, beta, mem)
+
+
+def _content_attention_bwd(block_n, res, d_read):
+    q, beta, mem = res
+    _, vjp = jax.vjp(lambda q, b, m: ref.content_attention(q, b, m)[0], q, beta, mem)
+    return vjp(d_read)
+
+
+_content_attention_vjp.defvjp(_content_attention_fwd, _content_attention_bwd)
+
+
+def _content_attention_fwd_kernel(q, beta, mem, block_n):
+    b, w = q.shape
+    n, _ = mem.shape
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    outs = pl.pallas_call(
+        functools.partial(_kernel, floor=ref.NORM_FLOOR),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((b, w), lambda j: (0, 0)),        # q: VMEM-resident
+            pl.BlockSpec((b,), lambda j: (0,)),            # beta
+            pl.BlockSpec((block_n, w), lambda j: (j, 0)),  # memory streams
+        ],
+        out_specs=[
+            pl.BlockSpec((b, w), lambda j: (0, 0)),  # read
+            pl.BlockSpec((b,), lambda j: (0,)),      # running max
+            pl.BlockSpec((b,), lambda j: (0,)),      # running denom
+            pl.BlockSpec((b, w), lambda j: (0, 0)),  # running weighted sum
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, w), q.dtype),
+            jax.ShapeDtypeStruct((b,), q.dtype),
+            jax.ShapeDtypeStruct((b,), q.dtype),
+            jax.ShapeDtypeStruct((b, w), q.dtype),
+        ],
+        interpret=True,
+    )(q, beta, mem)
+    return outs[0]
+
+
+def vmem_footprint_bytes(b, w, block_n=DEFAULT_BLOCK_N, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (for the §Perf estimates):
+    q + beta + memory block + 4 accumulators."""
+    return dtype_bytes * (b * w + b + block_n * w + 2 * (b * w) + 2 * b)
+
+
+def mxu_flops_per_step(b, w, block_n=DEFAULT_BLOCK_N):
+    """MXU matmul FLOPs per grid step: sims (B×W×BLOCK_N) + p@mem."""
+    return 2 * b * w * block_n * 2

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+These mirror the paper's math exactly and the Rust implementation's
+numerics (same norm-floored cosine as `rust/src/cores/addressing.rs`), so
+the same reference validates (a) the Pallas kernels at build time via
+pytest and (b) the Rust cores via the HLO parity tests.
+"""
+
+import jax.numpy as jnp
+
+# Must match addressing::NORM_FLOOR on the rust side.
+NORM_FLOOR = 0.1
+
+
+def cosine_sims(q, mem):
+    """Norm-floored cosine similarity of queries against all memory rows.
+
+    q:   [B, W] queries
+    mem: [N, W] memory
+    returns [B, N]
+    """
+    nq = jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), NORM_FLOOR)  # [B,1]
+    nm = jnp.maximum(jnp.linalg.norm(mem, axis=-1, keepdims=True), NORM_FLOOR)  # [N,1]
+    return (q @ mem.T) / (nq * nm.T)
+
+
+def content_attention(q, beta, mem):
+    """Dense content-based read (paper eq. 1-2): softmax(β·cos) weights and
+    the weighted read word.
+
+    q:    [B, W], beta: [B] (post-activation, β ≥ 1), mem: [N, W]
+    returns (read [B, W], weights [B, N])
+    """
+    sims = cosine_sims(q, mem)  # [B, N]
+    logits = beta[:, None] * sims
+    weights = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    read = weights @ mem
+    return read, weights
+
+
+def sparse_read(mem, idx, weights):
+    """K-sparse read (paper eq. 4): r = Σ_k w(k) · M[s_k].
+
+    mem: [N, W], idx: [B, K] int32, weights: [B, K]
+    returns [B, W]
+    """
+    rows = mem[idx]  # [B, K, W]
+    return jnp.einsum("bk,bkw->bw", weights, rows)
+
+
+def lstm_cell(x, h, c, wx, wh, b, forget_bias=1.0):
+    """Standard LSTM cell, gate order [i, f, g, o] (matches rust nn::lstm).
+
+    x: [B, I], h/c: [B, H], wx: [4H, I], wh: [4H, H], b: [4H]
+    returns (h', c')
+    """
+    hs = h.shape[-1]
+    z = x @ wx.T + h @ wh.T + b
+    sig = lambda t: 1.0 / (1.0 + jnp.exp(-t))
+    i = sig(z[:, :hs])
+    f = sig(z[:, hs : 2 * hs] + forget_bias)
+    g = jnp.tanh(z[:, 2 * hs : 3 * hs])
+    o = sig(z[:, 3 * hs :])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: K-sparse gather read (paper eq. 4) and its scatter-add
+write dual (the sparse half of eq. 3).
+
+These are SAM's per-step memory touches: r̃ = Σ_k w̃(s_k)·M(s_k) and
+M(s_k) += w^W(s_k)·a. K is a small constant (paper: 4-8), so the kernels
+are gather/scatter-bound, not compute-bound; the Pallas expression keeps
+the K rows in VMEM and uses dynamic-slice loads indexed from SMEM-style
+scalar refs, which is exactly how a TPU would avoid streaming the whole
+memory for a K-row touch.
+
+Indices are passed as int32 tensors. interpret=True (see package docs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _read_kernel(idx_ref, w_ref, mem_ref, out_ref, *, k):
+    """out[b,:] = Σ_k w[b,k] · mem[idx[b,k],:] — K dynamic-slice row loads."""
+    b = out_ref.shape[0]
+    acc = jnp.zeros(out_ref.shape, out_ref.dtype)
+    for bi in range(b):  # B and K are small static constants: unrolled
+        row_acc = jnp.zeros((out_ref.shape[1],), out_ref.dtype)
+        for ki in range(k):
+            row = pl.load(mem_ref, (pl.dslice(idx_ref[bi, ki], 1), slice(None)))
+            row_acc = row_acc + w_ref[bi, ki] * row[0]
+        acc = acc.at[bi].set(row_acc)
+    out_ref[...] = acc
+
+
+def sparse_read(mem, idx, weights):
+    """K-sparse read. mem: [N,W] f32, idx: [B,K] i32, weights: [B,K] f32.
+    Returns [B, W]. Matches ``ref.sparse_read``.
+
+    Differentiable in (mem, weights) via a closed-form VJP — the sparse
+    gradients of Supp A.2: dL/dw̃(k) = M(s_k)·dL/dr̃ and dL/dM(s_k) =
+    w̃(k)·dL/dr̃ (zero elsewhere)."""
+    return _sparse_read_vjp(mem, idx, weights)
+
+
+@jax.custom_vjp
+def _sparse_read_vjp(mem, idx, weights):
+    return _sparse_read_kernel(mem, idx, weights)
+
+
+def _sparse_read_fwd(mem, idx, weights):
+    return _sparse_read_kernel(mem, idx, weights), (mem.shape, idx, weights, mem)
+
+
+def _sparse_read_bwd(res, d_r):
+    mem_shape, idx, weights, mem = res
+    rows = mem[idx]  # [B,K,W]
+    d_w = jnp.einsum("bw,bkw->bk", d_r, rows)
+    d_mem = jnp.zeros(mem_shape, d_r.dtype)
+    # scatter-add w(k)·dr into the touched rows
+    updates = weights[:, :, None] * d_r[:, None, :]  # [B,K,W]
+    d_mem = d_mem.at[idx].add(updates)
+    return d_mem, None, d_w
+
+
+_sparse_read_vjp.defvjp(_sparse_read_fwd, _sparse_read_bwd)
+
+
+def _sparse_read_kernel(mem, idx, weights):
+    b, k = idx.shape
+    n, w = mem.shape
+    return pl.pallas_call(
+        functools.partial(_read_kernel, k=k),
+        # Whole-array specs: the kernel dynamic-slices the K rows it needs;
+        # on real hardware M stays in HBM/ANY and only K rows hit VMEM.
+        in_specs=[
+            pl.BlockSpec((b, k), lambda: (0, 0)),
+            pl.BlockSpec((b, k), lambda: (0, 0)),
+            pl.BlockSpec((n, w), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, w), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, w), mem.dtype),
+        interpret=True,
+    )(idx, weights, mem)
+
+
+def _write_kernel(idx_ref, w_ref, word_ref, mem_ref, out_ref, *, k):
+    """Scatter-add: out = mem; out[idx[k],:] += w[k]·word  (single batch)."""
+    out_ref[...] = mem_ref[...]
+    for ki in range(k):
+        i = idx_ref[ki]
+        row = pl.load(out_ref, (pl.dslice(i, 1), slice(None)))
+        pl.store(
+            out_ref,
+            (pl.dslice(i, 1), slice(None)),
+            row + w_ref[ki] * word_ref[...][None, :],
+        )
+
+
+def sparse_write(mem, idx, weights, word):
+    """Sparse additive write (the add half of eq. 3).
+    mem: [N,W], idx: [K] i32, weights: [K], word: [W] → new [N,W]."""
+    n, w = mem.shape
+    (k,) = idx.shape
+    return pl.pallas_call(
+        functools.partial(_write_kernel, k=k),
+        in_specs=[
+            pl.BlockSpec((k,), lambda: (0,)),
+            pl.BlockSpec((k,), lambda: (0,)),
+            pl.BlockSpec((w,), lambda: (0,)),
+            pl.BlockSpec((n, w), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, w), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, w), mem.dtype),
+        interpret=True,
+    )(idx, weights, word, mem)

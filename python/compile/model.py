@@ -1,0 +1,147 @@
+"""L2: JAX compute cells for the memory cores, calling the L1 Pallas
+kernels. These are the functions `aot.py` lowers to HLO text for the Rust
+runtime — build-time only, never on the request path.
+
+Cells (all pure functions, parameters as explicit arguments so the Rust
+side can feed trained weights):
+
+* ``lstm_cell``        — the controller step (Supp B).
+* ``dam_read_cell``    — dense content read via the Pallas online-softmax
+                         kernel (eq. 1-2).
+* ``sam_read_cell``    — K-sparse read via the Pallas gather kernel (eq. 4);
+                         indices come from the Rust ANN.
+* ``dam_step_cell``    — a full DAM inference step: controller + heads +
+                         dense write + dense read + output. This is the
+                         cell the serving example drives per timestep.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import content_addressing, ref, sparse_read
+
+
+def lstm_cell(x, h, c, wx, wh, b):
+    """Controller LSTM step (matches rust nn::lstm, forget bias 1.0)."""
+    return ref.lstm_cell(x, h, c, wx, wh, b)
+
+
+def dam_read_cell(q, beta_raw, mem):
+    """Dense content read. β = softplus(β̂)+1 as in the Rust cores.
+    q: [B,W], beta_raw: [B], mem: [N,W] → read [B,W]."""
+    beta = jnp.logaddexp(beta_raw, 0.0) + 1.0  # softplus + 1
+    return content_addressing.content_attention(q, beta, mem)
+
+
+def sam_read_cell(mem, idx, weights):
+    """Sparse read of ANN-selected rows. mem: [N,W], idx: [B,K] i32,
+    weights: [B,K] → [B,W]."""
+    return sparse_read.sparse_read(mem, idx, weights)
+
+
+def sam_read_softmax_cell(mem, idx, q, beta_raw):
+    """Sparse content read as the SAM core computes it: gather the K
+    candidate rows, softmax(β·cos) over just those, then the weighted sum
+    (all fused by XLA). idx: [B,K] i32 from the Rust ANN."""
+    rows = mem[idx]  # [B,K,W]
+    nq = jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), ref.NORM_FLOOR)
+    nm = jnp.maximum(jnp.linalg.norm(rows, axis=-1), ref.NORM_FLOOR)  # [B,K]
+    sims = jnp.einsum("bw,bkw->bk", q, rows) / (nq * nm)
+    beta = jnp.logaddexp(beta_raw, 0.0) + 1.0
+    logits = beta[:, None] * sims
+    w = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    read = jnp.einsum("bk,bkw->bw", w, rows)
+    return read, w
+
+
+def dam_step_cell(
+    x, h, c, mem, usage, w_read_prev, r_prev,
+    wx, wh, b, w_head, b_head, w_out, b_out,
+):
+    """One full DAM inference step (single head, batch 1 folded out).
+
+    Mirrors cores::dam forward: controller LSTM on [x, r_prev] → head
+    params [q(W), a(W), α̂, γ̂, β̂] → interpolation write with the
+    least-used slot → Pallas dense content read → output projection.
+
+    Shapes: x [I], h/c [H], mem [N,W], usage [N], w_read_prev [N], r_prev
+    [W]; returns (y, h', c', mem', usage', w_read, r).
+    """
+    word = mem.shape[1]
+    x_in = jnp.concatenate([x, r_prev])[None, :]  # [1, I+W]
+    h1, c1 = lstm_cell(x_in, h[None, :], c[None, :], wx, wh, b)
+    p = (h1 @ w_head.T + b_head)[0]  # [2W+3]
+    q, a = p[:word], p[word : 2 * word]
+    alpha = 1.0 / (1.0 + jnp.exp(-p[2 * word]))
+    gamma = 1.0 / (1.0 + jnp.exp(-p[2 * word + 1]))
+    beta_raw = p[2 * word + 2]
+
+    # Write (eq. 5): least-used row is erased then everything gets the add.
+    lra = jnp.argmin(usage)
+    w_write = alpha * gamma * w_read_prev
+    w_write = w_write.at[lra].add(alpha * (1.0 - gamma))
+    mem = mem * (1.0 - jnp.eye(mem.shape[0])[lra])[:, None]  # erase LRA row
+    mem = mem + w_write[:, None] * a[None, :]
+
+    # Read via the fused Pallas kernel.
+    r = dam_read_cell(q[None, :], beta_raw[None], mem)[0]
+    _, w_read_full = ref.content_attention(
+        q[None, :], jnp.logaddexp(beta_raw, 0.0)[None] + 1.0, mem
+    )
+    w_read = w_read_full[0]
+
+    # Usage U⁽¹⁾ update.
+    usage = 0.99 * usage + w_write + w_read
+
+    y = jnp.concatenate([h1[0], r]) @ w_out.T + b_out
+    return y, h1[0], c1[0], mem, usage, w_read, r
+
+
+def shapes_for(config):
+    """Example-argument shapes per artifact (single source of truth for
+    aot.py and the Rust parity tests)."""
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    b, i, hdim, n, w, k = (
+        config["batch"], config["x_dim"], config["hidden"],
+        config["mem_words"], config["word"], config["k"],
+    )
+    sds = jax.ShapeDtypeStruct
+    return {
+        "lstm_cell": (
+            sds((b, i), f32), sds((b, hdim), f32), sds((b, hdim), f32),
+            sds((4 * hdim, i), f32), sds((4 * hdim, hdim), f32), sds((4 * hdim,), f32),
+        ),
+        "dam_read": (sds((b, w), f32), sds((b,), f32), sds((n, w), f32)),
+        "sam_read": (sds((n, w), f32), sds((b, k), i32), sds((b, k), f32)),
+        "sam_read_softmax": (
+            sds((n, w), f32), sds((b, k), i32), sds((b, w), f32), sds((b,), f32),
+        ),
+        "dam_step": (
+            sds((i,), f32), sds((hdim,), f32), sds((hdim,), f32),
+            sds((n, w), f32), sds((n,), f32), sds((n,), f32), sds((w,), f32),
+            sds((4 * hdim, i + w), f32), sds((4 * hdim, hdim), f32), sds((4 * hdim,), f32),
+            sds((2 * w + 3, hdim), f32), sds((2 * w + 3,), f32),
+            sds((w, hdim + w), f32), sds((w,), f32),
+        ),
+    }
+
+
+DEFAULT_CONFIG = {
+    "batch": 1,
+    "x_dim": 16,
+    "hidden": 32,
+    "mem_words": 64,
+    "word": 32,
+    "k": 4,
+}
+
+CELLS = {
+    "lstm_cell": lstm_cell,
+    "dam_read": dam_read_cell,
+    "sam_read": sam_read_cell,
+    "sam_read_softmax": sam_read_softmax_cell,
+    "dam_step": dam_step_cell,
+}

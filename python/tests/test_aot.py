@@ -1,0 +1,67 @@
+"""AOT lowering: every cell lowers to parseable HLO text with the right
+entry signature, and the manifest records the config."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    with tempfile.TemporaryDirectory() as d:
+        cfg = dict(model.DEFAULT_CONFIG)
+        cfg.update({"mem_words": 32, "hidden": 16, "x_dim": 8, "word": 16})
+        written = aot.build_all(d, cfg)
+        yield d, cfg, written
+
+
+def test_all_cells_lowered(artifacts):
+    d, _, written = artifacts
+    assert set(written) == set(model.CELLS)
+    for path in written.values():
+        assert os.path.getsize(path) > 100
+
+
+def test_hlo_text_shape(artifacts):
+    d, cfg, written = artifacts
+    text = open(written["lstm_cell"]).read()
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+    # 6 parameters for the lstm cell
+    assert text.count("parameter(") == 6
+    # lowered for the configured hidden size
+    assert f"f32[{4 * cfg['hidden']}," in text
+
+
+def test_manifest_written(artifacts):
+    d, cfg, _ = artifacts
+    meta = json.load(open(os.path.join(d, "manifest.json")))
+    assert meta["config"] == cfg
+
+
+def test_pallas_kernel_lowers_to_plain_hlo(artifacts):
+    # interpret=True must leave no custom-call in the lowered module,
+    # otherwise the Rust CPU PJRT client can't execute it.
+    d, _, written = artifacts
+    for name in ("dam_read", "sam_read"):
+        text = open(written[name]).read()
+        assert "custom-call" not in text, f"{name} contains a custom call"
+
+
+def test_repo_artifacts_match_repo_manifest():
+    # If `make artifacts` has run, the checked manifest matches DEFAULT_CONFIG.
+    repo_manifest = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+    )
+    if not os.path.exists(repo_manifest):
+        pytest.skip("artifacts not built")
+    meta = json.load(open(repo_manifest))
+    assert set(meta["config"]) == set(model.DEFAULT_CONFIG)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

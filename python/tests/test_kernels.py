@@ -1,0 +1,167 @@
+"""L1 Pallas kernels vs the pure-jnp oracle, swept with hypothesis over
+shapes, dtypes-scales, and seeds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import content_addressing as ca
+from compile.kernels import ref
+from compile.kernels import sparse_read as sr
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# content_addressing (online-softmax attention)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 4),
+    w=st.sampled_from([8, 16, 32]),
+    n_blocks=st.integers(1, 6),
+    block_n=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([0.01, 1.0, 10.0]),
+)
+def test_content_attention_matches_ref(b, w, n_blocks, block_n, seed, scale):
+    n = n_blocks * block_n
+    q = rand(seed, (b, w))
+    mem = rand(seed + 1, (n, w), scale)
+    beta = jnp.abs(rand(seed + 2, (b,))) + 1.0
+    out = ca.content_attention(q, beta, mem, block_n=block_n)
+    want, _ = ref.content_attention(q, beta, mem)
+    np.testing.assert_allclose(np.array(out), np.array(want), atol=2e-5, rtol=2e-4)
+
+
+def test_content_attention_zero_memory_is_uniform_read():
+    # All-zero memory: similarities tie at 0, weights uniform, read = 0.
+    q = rand(0, (1, 16))
+    mem = jnp.zeros((64, 16))
+    beta = jnp.array([5.0])
+    out = ca.content_attention(q, beta, mem, block_n=32)
+    np.testing.assert_allclose(np.array(out), np.zeros((1, 16)), atol=1e-6)
+
+
+def test_content_attention_sharp_beta_picks_nearest():
+    mem = rand(3, (128, 16))
+    q = mem[37:38] * 2.0  # same direction as row 37
+    beta = jnp.array([200.0])  # very sharp softmax
+    out = ca.content_attention(q, beta, mem, block_n=32)
+    np.testing.assert_allclose(np.array(out[0]), np.array(mem[37]), atol=1e-3, rtol=1e-3)
+
+
+def test_block_size_invariance():
+    q = rand(4, (2, 32))
+    mem = rand(5, (256, 32))
+    beta = jnp.array([1.0, 3.0])
+    outs = [ca.content_attention(q, beta, mem, block_n=bn) for bn in (16, 64, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.array(outs[0]), np.array(o), atol=2e-5)
+
+
+def test_vmem_and_flop_estimates_positive():
+    assert ca.vmem_footprint_bytes(1, 32) > 0
+    assert ca.mxu_flops_per_step(1, 32) > 0
+
+
+# ---------------------------------------------------------------------------
+# sparse_read / sparse_write (gather/scatter kernels)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 3),
+    k=st.integers(1, 8),
+    n=st.sampled_from([16, 64, 256]),
+    w=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_sparse_read_matches_ref(b, k, n, w, seed):
+    mem = rand(seed, (n, w))
+    key = jax.random.PRNGKey(seed + 1)
+    idx = jax.random.randint(key, (b, k), 0, n, dtype=jnp.int32)
+    weights = rand(seed + 2, (b, k))
+    out = sr.sparse_read(mem, idx, weights)
+    want = ref.sparse_read(mem, idx, weights)
+    np.testing.assert_allclose(np.array(out), np.array(want), atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_read_duplicate_indices_accumulate():
+    mem = jnp.eye(4, dtype=jnp.float32)
+    idx = jnp.array([[2, 2, 2]], dtype=jnp.int32)
+    w = jnp.array([[0.5, 0.25, 0.25]])
+    out = sr.sparse_read(mem, idx, w)
+    np.testing.assert_allclose(np.array(out[0]), np.array([0, 0, 1.0, 0]), atol=1e-6)
+
+
+@given(
+    k=st.integers(1, 6),
+    n=st.sampled_from([16, 64]),
+    w=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_sparse_write_matches_dense_scatter(k, n, w, seed):
+    mem = rand(seed, (n, w))
+    key = jax.random.PRNGKey(seed + 3)
+    idx = jax.random.randint(key, (k,), 0, n, dtype=jnp.int32)
+    weights = rand(seed + 4, (k,))
+    word = rand(seed + 5, (w,))
+    out = sr.sparse_write(mem, idx, weights, word)
+    want = np.array(mem)
+    for i, ww in zip(np.array(idx), np.array(weights)):
+        want[i] += ww * np.array(word)
+    np.testing.assert_allclose(np.array(out), want, atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_write_untouched_rows_bitexact():
+    mem = rand(9, (32, 8))
+    idx = jnp.array([5], dtype=jnp.int32)
+    out = sr.sparse_write(mem, idx, jnp.array([2.0]), jnp.ones(8))
+    m0, m1 = np.array(mem), np.array(out)
+    mask = np.ones(32, bool)
+    mask[5] = False
+    np.testing.assert_array_equal(m0[mask], m1[mask])
+
+
+# ---------------------------------------------------------------------------
+# grad flow through the kernels under jax autodiff (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def test_content_attention_differentiable():
+    q = rand(10, (1, 16))
+    mem = rand(11, (64, 16))
+    beta = jnp.array([2.0])
+
+    def loss(q):
+        return ca.content_attention(q, beta, mem, block_n=32).sum()
+
+    g = jax.grad(loss)(q)
+    gr = jax.grad(lambda q: ref.content_attention(q, beta, mem)[0].sum())(q)
+    np.testing.assert_allclose(np.array(g), np.array(gr), atol=1e-4, rtol=1e-3)
+
+
+def test_sparse_read_differentiable_in_weights():
+    mem = rand(12, (32, 8))
+    idx = jnp.array([[1, 5, 9]], dtype=jnp.int32)
+
+    def loss(w):
+        return sr.sparse_read(mem, idx, w).sum()
+
+    w0 = jnp.array([[0.2, 0.3, 0.5]])
+    g = jax.grad(loss)(w0)
+    want = np.array([mem[1].sum(), mem[5].sum(), mem[9].sum()])[None, :]
+    np.testing.assert_allclose(np.array(g), want, atol=1e-5, rtol=1e-5)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

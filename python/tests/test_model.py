@@ -1,0 +1,113 @@
+"""L2 model cells: shapes, semantics, and internal consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(jnp.float32)
+
+
+def test_lstm_cell_gates_behave():
+    b, i, h = 2, 5, 7
+    x = rand(0, (b, i))
+    h0 = jnp.zeros((b, h))
+    c0 = jnp.zeros((b, h))
+    wx = rand(1, (4 * h, i), 0.3)
+    wh = rand(2, (4 * h, h), 0.3)
+    bias = jnp.zeros(4 * h)
+    h1, c1 = model.lstm_cell(x, h0, c0, wx, wh, bias)
+    assert h1.shape == (b, h) and c1.shape == (b, h)
+    # h is bounded by tanh x sigmoid
+    assert np.abs(np.array(h1)).max() <= 1.0
+    # zero input & state with zero weights -> zero-ish state
+    h2, c2 = model.lstm_cell(jnp.zeros((b, i)), h0, c0, jnp.zeros_like(wx), jnp.zeros_like(wh), bias)
+    np.testing.assert_allclose(np.array(h2), 0.0, atol=1e-6)
+
+
+def test_dam_read_cell_matches_ref_attention():
+    q = rand(3, (1, 32))
+    mem = rand(4, (128, 32))
+    beta_raw = jnp.array([0.5])
+    out = model.dam_read_cell(q, beta_raw, mem)
+    beta = jnp.logaddexp(beta_raw, 0.0) + 1.0
+    want, _ = ref.content_attention(q, beta, mem)
+    np.testing.assert_allclose(np.array(out), np.array(want), atol=2e-5, rtol=1e-4)
+
+
+def test_sam_read_softmax_cell_weights_normalized():
+    mem = rand(5, (64, 16))
+    idx = jnp.array([[3, 17, 42, 60]], dtype=jnp.int32)
+    q = rand(6, (1, 16))
+    read, w = model.sam_read_softmax_cell(mem, idx, q, jnp.array([0.0]))
+    np.testing.assert_allclose(np.array(w.sum(axis=-1)), 1.0, atol=1e-5)
+    # read is inside the convex hull scale of gathered rows
+    rows = np.array(mem)[np.array(idx[0])]
+    assert np.abs(np.array(read)).max() <= np.abs(rows).max() + 1e-5
+
+
+def test_sam_read_softmax_matches_dense_restricted():
+    # Restricting dense attention to the K rows must equal the sparse cell.
+    mem = rand(7, (32, 8))
+    idx = jnp.array([[1, 9, 20]], dtype=jnp.int32)
+    q = rand(8, (1, 8))
+    braw = jnp.array([0.3])
+    read, w = model.sam_read_softmax_cell(mem, idx, q, braw)
+    sub = mem[idx[0]]
+    beta = jnp.logaddexp(braw, 0.0) + 1.0
+    want, wref = ref.content_attention(q, beta, sub)
+    np.testing.assert_allclose(np.array(read), np.array(want), atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.array(w), np.array(wref), atol=2e-5, rtol=1e-4)
+
+
+def test_dam_step_cell_full_semantics():
+    cfg = model.DEFAULT_CONFIG
+    i, h, n, w = cfg["x_dim"], cfg["hidden"], cfg["mem_words"], cfg["word"]
+    x = rand(10, (i,))
+    h0 = jnp.zeros(h)
+    c0 = jnp.zeros(h)
+    mem = rand(11, (n, w), 0.1)
+    usage = jnp.zeros(n)
+    w_read_prev = jnp.zeros(n)
+    r_prev = jnp.zeros(w)
+    wx = rand(12, (4 * h, i + w), 0.2)
+    wh = rand(13, (4 * h, h), 0.2)
+    b = jnp.zeros(4 * h)
+    w_head = rand(14, (2 * w + 3, h), 0.2)
+    b_head = jnp.zeros(2 * w + 3)
+    w_out = rand(15, (w, h + w), 0.2)
+    b_out = jnp.zeros(w)
+    y, h1, c1, mem1, usage1, w_read, r = model.dam_step_cell(
+        x, h0, c0, mem, usage, w_read_prev, r_prev,
+        wx, wh, b, w_head, b_head, w_out, b_out,
+    )
+    assert y.shape == (w,)
+    assert mem1.shape == (n, w)
+    # read weights are a distribution
+    np.testing.assert_allclose(float(w_read.sum()), 1.0, atol=1e-4)
+    assert float(usage1.sum()) > 0.0
+    # repeated application keeps everything finite (5 steps)
+    state = (h1, c1, mem1, usage1, w_read, r)
+    for _ in range(5):
+        y, *state = model.dam_step_cell(
+            x, *state[:2], *state[2:], wx, wh, b, w_head, b_head, w_out, b_out
+        )
+        state = tuple(state)
+    assert np.isfinite(np.array(y)).all()
+
+
+def test_shapes_for_covers_all_cells():
+    shapes = model.shapes_for(model.DEFAULT_CONFIG)
+    assert set(shapes) == set(model.CELLS)
+    # every cell traces with its declared shapes
+    for name, fn in model.CELLS.items():
+        jax.eval_shape(fn, *shapes[name])
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,480 @@
+//! Randomized k-d-tree ensemble, after FLANN (Muja & Lowe 2014), the index
+//! the paper uses for small word sizes (§3.5, Fig 1a "k-d tree: 4 trees,
+//! 32 checks").
+//!
+//! Each tree splits on a dimension drawn at random from the few highest-
+//! variance dimensions, at the mean value; queries run best-bin-first with a
+//! shared priority queue and stop after inspecting `checks` candidate
+//! points. Online inserts append to the leaf the point lands in; deletes
+//! tombstone. The forest is rebuilt from scratch every `rebuild_every`
+//! inserts — the paper rebuilds every N insertions "to ensure it does not
+//! become imbalanced".
+
+use super::{normalized, unit_dist_sq_to_cosine, AnnIndex};
+use crate::tensor::matrix::dist_sq;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+const LEAF_SIZE: usize = 16;
+/// How many top-variance dims the random split dimension is drawn from
+/// (FLANN uses 5).
+const RAND_DIM_CANDIDATES: usize = 5;
+
+#[derive(Debug, Clone)]
+enum Node {
+    Split { dim: usize, threshold: f32, left: usize, right: usize },
+    Leaf { ids: Vec<usize> },
+}
+
+#[derive(Debug, Clone)]
+struct Tree {
+    nodes: Vec<Node>,
+    root: usize,
+}
+
+/// Min-heap entry for best-bin-first traversal: (lower-bound distance, tree, node).
+struct QueueEntry {
+    bound: f32,
+    tree: usize,
+    node: usize,
+}
+
+impl PartialEq for QueueEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for QueueEntry {}
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueueEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want smallest bound first.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// FLANN-style randomized k-d forest over normalized memory rows.
+pub struct KdForest {
+    dim: usize,
+    n_trees: usize,
+    /// Best-bin-first candidate budget per query.
+    pub checks: usize,
+    rebuild_every: usize,
+    inserts_since_rebuild: usize,
+    /// Flat normalized row storage.
+    data: Vec<f32>,
+    present: Vec<bool>,
+    count: usize,
+    trees: Vec<Tree>,
+    rng: Rng,
+    /// Query-visited stamps (avoids a HashSet per query).
+    stamp: Vec<u32>,
+    stamp_now: u32,
+}
+
+impl KdForest {
+    /// Paper configuration: 4 trees, 32 checks, rebuild every N inserts.
+    pub fn with_defaults(n: usize, dim: usize, seed: u64) -> KdForest {
+        KdForest::new(n, dim, 4, 32, n.max(64), seed)
+    }
+
+    pub fn new(
+        n: usize,
+        dim: usize,
+        n_trees: usize,
+        checks: usize,
+        rebuild_every: usize,
+        seed: u64,
+    ) -> KdForest {
+        KdForest {
+            dim,
+            n_trees,
+            checks,
+            rebuild_every,
+            inserts_since_rebuild: 0,
+            data: vec![0.0; n * dim],
+            present: vec![false; n],
+            count: 0,
+            trees: Vec::new(),
+            rng: Rng::new(seed),
+            stamp: vec![0; n],
+            stamp_now: 0,
+        }
+    }
+
+    #[inline]
+    fn point(&self, id: usize) -> &[f32] {
+        &self.data[id * self.dim..(id + 1) * self.dim]
+    }
+
+    /// Choose a split dimension: random among the RAND_DIM_CANDIDATES
+    /// highest-variance dims of the ids (FLANN's randomization).
+    fn choose_split(&mut self, ids: &[usize]) -> (usize, f32) {
+        let dim = self.dim;
+        let mut mean = vec![0.0f32; dim];
+        for &id in ids {
+            for (m, x) in mean.iter_mut().zip(self.point(id)) {
+                *m += x;
+            }
+        }
+        let inv = 1.0 / ids.len() as f32;
+        mean.iter_mut().for_each(|m| *m *= inv);
+        let mut var = vec![0.0f32; dim];
+        for &id in ids {
+            for ((v, x), m) in var.iter_mut().zip(self.point(id)).zip(&mean) {
+                let d = x - m;
+                *v += d * d;
+            }
+        }
+        let mut order: Vec<usize> = (0..dim).collect();
+        order.sort_unstable_by(|&a, &b| var[b].partial_cmp(&var[a]).unwrap());
+        let pick = order[self.rng.below(RAND_DIM_CANDIDATES.min(dim))];
+        (pick, mean[pick])
+    }
+
+    fn build_subtree(&mut self, nodes: &mut Vec<Node>, mut ids: Vec<usize>) -> usize {
+        if ids.len() <= LEAF_SIZE {
+            nodes.push(Node::Leaf { ids });
+            return nodes.len() - 1;
+        }
+        let (dim, threshold) = self.choose_split(&ids);
+        let (mut l, mut r) = (Vec::new(), Vec::new());
+        for id in ids.drain(..) {
+            if self.point(id)[dim] < threshold {
+                l.push(id);
+            } else {
+                r.push(id);
+            }
+        }
+        // Degenerate split (all equal along dim): make a leaf.
+        if l.is_empty() || r.is_empty() {
+            let mut all = l;
+            all.extend(r);
+            nodes.push(Node::Leaf { ids: all });
+            return nodes.len() - 1;
+        }
+        let left = self.build_subtree(nodes, l);
+        let right = self.build_subtree(nodes, r);
+        nodes.push(Node::Split { dim, threshold, left, right });
+        nodes.len() - 1
+    }
+
+    fn build_tree(&mut self) -> Tree {
+        let ids: Vec<usize> =
+            (0..self.present.len()).filter(|&i| self.present[i]).collect();
+        let mut nodes = Vec::with_capacity(2 * ids.len() / LEAF_SIZE + 4);
+        let root = if ids.is_empty() {
+            nodes.push(Node::Leaf { ids: Vec::new() });
+            0
+        } else {
+            self.build_subtree(&mut nodes, ids)
+        };
+        Tree { nodes, root }
+    }
+
+    fn rebuild_all(&mut self) {
+        self.trees = (0..self.n_trees).map(|_| self.build_tree()).collect();
+        self.inserts_since_rebuild = 0;
+    }
+
+    /// Descend to the leaf for `v` in tree `t`, returning the node index.
+    fn find_leaf(&self, t: usize, v: &[f32]) -> usize {
+        let tree = &self.trees[t];
+        let mut node = tree.root;
+        loop {
+            match &tree.nodes[node] {
+                Node::Leaf { .. } => return node,
+                Node::Split { dim, threshold, left, right } => {
+                    node = if v[*dim] < *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    fn next_stamp(&mut self) -> u32 {
+        self.stamp_now = self.stamp_now.wrapping_add(1);
+        if self.stamp_now == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.stamp_now = 1;
+        }
+        self.stamp_now
+    }
+}
+
+impl AnnIndex for KdForest {
+    fn len(&self) -> usize {
+        self.count
+    }
+
+    fn insert(&mut self, id: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.dim);
+        if id >= self.present.len() {
+            self.present.resize(id + 1, false);
+            self.data.resize((id + 1) * self.dim, 0.0);
+            self.stamp.resize(id + 1, 0);
+        }
+        let nv = normalized(v);
+        self.data[id * self.dim..(id + 1) * self.dim].copy_from_slice(&nv);
+        if !self.present[id] {
+            self.present[id] = true;
+            self.count += 1;
+        }
+        if self.trees.is_empty() {
+            self.rebuild_all();
+            return;
+        }
+        // Online insert: append to the leaf this point lands in, per tree.
+        for t in 0..self.trees.len() {
+            let leaf = self.find_leaf(t, &nv);
+            if let Node::Leaf { ids } = &mut self.trees[t].nodes[leaf] {
+                if !ids.contains(&id) {
+                    ids.push(id);
+                }
+            }
+        }
+        self.inserts_since_rebuild += 1;
+        if self.inserts_since_rebuild >= self.rebuild_every {
+            self.rebuild_all();
+        }
+    }
+
+    fn remove(&mut self, id: usize) {
+        if id < self.present.len() && self.present[id] {
+            self.present[id] = false;
+            self.count -= 1;
+            // Lazy delete: queries filter on `present`; the id physically
+            // leaves the leaves at the next rebuild. Removing it from its
+            // current leaves here would require a find in each tree, which
+            // `update` would immediately undo.
+        }
+    }
+
+    fn update(&mut self, id: usize, v: &[f32]) {
+        // A moved point must leave its old leaves, otherwise stale copies
+        // shadow the new position. Tombstone then re-insert: the tombstoned
+        // copy is filtered by the `present` check until rebuild, and insert
+        // sets `present` again with the new coordinates.
+        // Physically drop the old copy from leaves first.
+        let nv_old_present = id < self.present.len() && self.present[id];
+        if nv_old_present {
+            let old = self.point(id).to_vec();
+            for t in 0..self.trees.len() {
+                let leaf = self.find_leaf(t, &old);
+                if let Node::Leaf { ids } = &mut self.trees[t].nodes[leaf] {
+                    ids.retain(|&x| x != id);
+                }
+            }
+            self.present[id] = false;
+            self.count -= 1;
+        }
+        self.insert(id, v);
+    }
+
+    fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        if self.trees.is_empty() {
+            self.rebuild_all();
+        }
+        let qn = normalized(q);
+        let stamp = self.next_stamp();
+        let mut heap: BinaryHeap<QueueEntry> = BinaryHeap::new();
+        for (t, tree) in self.trees.iter().enumerate() {
+            heap.push(QueueEntry { bound: 0.0, tree: t, node: tree.root });
+        }
+        let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+        let mut checked = 0usize;
+        while let Some(QueueEntry { bound, tree, node }) = heap.pop() {
+            if checked >= self.checks && best.len() >= k {
+                break;
+            }
+            // Prune cells further than the current kth distance.
+            if best.len() >= k && bound > best.last().unwrap().1 {
+                continue;
+            }
+            let mut cur = node;
+            loop {
+                match &self.trees[tree].nodes[cur] {
+                    Node::Split { dim, threshold, left, right } => {
+                        let diff = qn[*dim] - *threshold;
+                        let (near, far) =
+                            if diff < 0.0 { (*left, *right) } else { (*right, *left) };
+                        let far_bound = bound + diff * diff;
+                        heap.push(QueueEntry { bound: far_bound, tree, node: far });
+                        cur = near;
+                    }
+                    Node::Leaf { ids } => {
+                        for &id in ids {
+                            if !self.present[id] || self.stamp[id] == stamp {
+                                continue;
+                            }
+                            self.stamp[id] = stamp;
+                            checked += 1;
+                            let d2 = dist_sq(&qn, self.point(id));
+                            if best.len() < k || d2 < best.last().unwrap().1 {
+                                let pos = best.partition_point(|&(_, bd)| bd <= d2);
+                                best.insert(pos, (id, d2));
+                                if best.len() > k {
+                                    best.pop();
+                                }
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        best.into_iter()
+            .map(|(id, d2)| (id, unit_dist_sq_to_cosine(d2)))
+            .collect()
+    }
+
+    fn rebuild(&mut self) {
+        self.rebuild_all();
+    }
+
+    fn heap_bytes(&self) -> usize {
+        let tree_bytes: usize = self
+            .trees
+            .iter()
+            .map(|t| {
+                t.nodes
+                    .iter()
+                    .map(|n| match n {
+                        Node::Leaf { ids } => 48 + ids.capacity() * 8,
+                        Node::Split { .. } => 48,
+                    })
+                    .sum::<usize>()
+            })
+            .sum();
+        self.data.capacity() * 4 + self.present.capacity() + self.stamp.capacity() * 4 + tree_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::LinearIndex;
+
+    fn random_points(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect()
+    }
+
+    /// recall@k of the forest against exact KNN.
+    fn recall(forest: &mut KdForest, exact: &mut LinearIndex, queries: &[Vec<f32>], k: usize) -> f64 {
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for q in queries {
+            let approx: std::collections::HashSet<usize> =
+                forest.query(q, k).into_iter().map(|(i, _)| i).collect();
+            for (i, _) in exact.query(q, k) {
+                total += 1;
+                if approx.contains(&i) {
+                    hit += 1;
+                }
+            }
+        }
+        hit as f64 / total as f64
+    }
+
+    #[test]
+    fn forest_high_recall_on_near_queries() {
+        // The SAM regime: queries are learned to point at stored memories,
+        // so recall matters for queries *near* stored points (uniformly
+        // random queries in high dim are the known worst case for k-d
+        // trees and not the workload).
+        let dim = 16;
+        let n = 512;
+        let pts = random_points(n, dim, 11);
+        let mut forest = KdForest::new(n, dim, 4, 128, 10 * n, 1);
+        let mut exact = LinearIndex::new(n, dim);
+        for (i, p) in pts.iter().enumerate() {
+            forest.insert(i, p);
+            exact.insert(i, p);
+        }
+        forest.rebuild();
+        let mut qrng = Rng::new(99);
+        let queries: Vec<Vec<f32>> = (0..32)
+            .map(|qi| {
+                pts[(qi * 13) % n]
+                    .iter()
+                    .map(|x| x + 0.1 * qrng.normal())
+                    .collect()
+            })
+            .collect();
+        let r = recall(&mut forest, &mut exact, &queries, 4);
+        assert!(r > 0.75, "recall@4 = {r}");
+    }
+
+    #[test]
+    fn online_inserts_are_queryable() {
+        let dim = 8;
+        let mut forest = KdForest::new(64, dim, 4, 32, 1_000_000, 2);
+        let pts = random_points(64, dim, 3);
+        for (i, p) in pts.iter().enumerate() {
+            forest.insert(i, p);
+        }
+        // Insert a point identical to the query — must be found without rebuild.
+        let q = vec![0.5; 8];
+        forest.insert(63, &q);
+        let r = forest.query(&q, 1);
+        assert_eq!(r[0].0, 63);
+        assert!((r[0].1 - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn update_moves_point() {
+        let dim = 8;
+        let mut forest = KdForest::new(16, dim, 4, 64, 1_000_000, 4);
+        let pts = random_points(16, dim, 5);
+        for (i, p) in pts.iter().enumerate() {
+            forest.insert(i, p);
+        }
+        let target = vec![9.0, -9.0, 9.0, -9.0, 9.0, -9.0, 9.0, -9.0];
+        forest.update(3, &target);
+        let r = forest.query(&target, 1);
+        assert_eq!(r[0].0, 3);
+        // And the old location no longer matches id 3 best.
+        let r_old = forest.query(&pts[3], 2);
+        assert!((r_old[0].1 - 1.0).abs() > 1e-3 || r_old[0].0 != 3);
+    }
+
+    #[test]
+    fn remove_hides_point() {
+        let dim = 4;
+        let mut forest = KdForest::new(8, dim, 2, 32, 1_000_000, 6);
+        let pts = random_points(8, dim, 7);
+        for (i, p) in pts.iter().enumerate() {
+            forest.insert(i, p);
+        }
+        let r1 = forest.query(&pts[2], 1);
+        assert_eq!(r1[0].0, 2);
+        forest.remove(2);
+        let r2 = forest.query(&pts[2], 1);
+        assert_ne!(r2[0].0, 2);
+        assert_eq!(forest.len(), 7);
+    }
+
+    #[test]
+    fn rebuild_preserves_contents() {
+        let dim = 8;
+        let n = 128;
+        let pts = random_points(n, dim, 8);
+        // rebuild_every = 32 -> several automatic rebuilds during inserts
+        let mut forest = KdForest::new(n, dim, 3, 48, 32, 9);
+        for (i, p) in pts.iter().enumerate() {
+            forest.insert(i, p);
+        }
+        assert_eq!(forest.len(), n);
+        for i in (0..n).step_by(17) {
+            let r = forest.query(&pts[i], 1);
+            assert_eq!(r[0].0, i, "self-query failed for {i}");
+        }
+    }
+}

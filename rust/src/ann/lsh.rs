@@ -1,0 +1,313 @@
+//! Hyperplane locality-sensitive hashing (Charikar sim-hash), the index the
+//! paper uses for large word sizes (§3.5): random hyperplanes map points to
+//! buckets with cosine-distance-preserving collision probability
+//! P[h(a)=h(b)] = 1 - θ(a,b)/π per bit.
+//!
+//! `tables` independent hash tables of `bits` hyperplanes each; a query
+//! probes its exact bucket in every table plus all 1-bit-flip neighbour
+//! buckets (multiprobe) until enough candidates are gathered, then ranks
+//! candidates by exact cosine. Insert/remove are O(tables · bits · dim).
+
+use super::{normalized, unit_dist_sq_to_cosine, AnnIndex};
+use crate::tensor::matrix::{dist_sq, dot};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Multi-table hyperplane LSH index over normalized memory rows.
+pub struct LshIndex {
+    dim: usize,
+    bits: usize,
+    /// Hyperplane normals: tables × bits × dim, flattened.
+    planes: Vec<f32>,
+    tables: Vec<HashMap<u64, Vec<usize>>>,
+    /// Flat normalized row storage + presence.
+    data: Vec<f32>,
+    present: Vec<bool>,
+    /// Cached bucket key per (table, id) so remove() doesn't rehash.
+    keys: Vec<u64>,
+    count: usize,
+    /// Minimum candidate pool before ranking (multiprobe widens until this).
+    pub min_candidates: usize,
+    stamp: Vec<u32>,
+    stamp_now: u32,
+}
+
+impl LshIndex {
+    /// Defaults tuned for memory-word data: 8 tables × 12 bits.
+    pub fn with_defaults(n: usize, dim: usize, seed: u64) -> LshIndex {
+        LshIndex::new(n, dim, 8, 12, 64, seed)
+    }
+
+    pub fn new(
+        n: usize,
+        dim: usize,
+        n_tables: usize,
+        bits: usize,
+        min_candidates: usize,
+        seed: u64,
+    ) -> LshIndex {
+        assert!(bits <= 63);
+        let mut rng = Rng::new(seed);
+        let mut planes = vec![0.0f32; n_tables * bits * dim];
+        rng.fill_normal(&mut planes, 1.0);
+        LshIndex {
+            dim,
+            bits,
+            planes,
+            tables: vec![HashMap::new(); n_tables],
+            data: vec![0.0; n * dim],
+            present: vec![false; n],
+            keys: vec![0; n * n_tables],
+            count: 0,
+            min_candidates,
+            stamp: vec![0; n],
+            stamp_now: 0,
+        }
+    }
+
+    #[inline]
+    fn point(&self, id: usize) -> &[f32] {
+        &self.data[id * self.dim..(id + 1) * self.dim]
+    }
+
+    /// Bucket key of `v` in table `t`.
+    fn hash(&self, t: usize, v: &[f32]) -> u64 {
+        let mut key = 0u64;
+        let base = t * self.bits * self.dim;
+        for b in 0..self.bits {
+            let plane = &self.planes[base + b * self.dim..base + (b + 1) * self.dim];
+            if dot(plane, v) >= 0.0 {
+                key |= 1 << b;
+            }
+        }
+        key
+    }
+
+    fn next_stamp(&mut self) -> u32 {
+        self.stamp_now = self.stamp_now.wrapping_add(1);
+        if self.stamp_now == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.stamp_now = 1;
+        }
+        self.stamp_now
+    }
+}
+
+impl AnnIndex for LshIndex {
+    fn len(&self) -> usize {
+        self.count
+    }
+
+    fn insert(&mut self, id: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.dim);
+        if id >= self.present.len() {
+            self.present.resize(id + 1, false);
+            self.data.resize((id + 1) * self.dim, 0.0);
+            self.stamp.resize(id + 1, 0);
+            self.keys.resize((id + 1) * self.tables.len(), 0);
+        }
+        if self.present[id] {
+            self.remove(id);
+        }
+        let nv = normalized(v);
+        self.data[id * self.dim..(id + 1) * self.dim].copy_from_slice(&nv);
+        for t in 0..self.tables.len() {
+            let key = self.hash(t, &nv);
+            self.keys[id * self.tables.len() + t] = key;
+            self.tables[t].entry(key).or_default().push(id);
+        }
+        self.present[id] = true;
+        self.count += 1;
+    }
+
+    fn remove(&mut self, id: usize) {
+        if id >= self.present.len() || !self.present[id] {
+            return;
+        }
+        for t in 0..self.tables.len() {
+            let key = self.keys[id * self.tables.len() + t];
+            if let Some(bucket) = self.tables[t].get_mut(&key) {
+                bucket.retain(|&x| x != id);
+                if bucket.is_empty() {
+                    self.tables[t].remove(&key);
+                }
+            }
+        }
+        self.present[id] = false;
+        self.count -= 1;
+    }
+
+    fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        let qn = normalized(q);
+        let stamp = self.next_stamp();
+        let mut candidates: Vec<usize> = Vec::with_capacity(self.min_candidates * 2);
+
+        // Exact buckets first.
+        let keys: Vec<u64> = (0..self.tables.len()).map(|t| self.hash(t, &qn)).collect();
+        for (t, &key) in keys.iter().enumerate() {
+            if let Some(bucket) = self.tables[t].get(&key) {
+                for &id in bucket {
+                    if self.stamp[id] != stamp {
+                        self.stamp[id] = stamp;
+                        candidates.push(id);
+                    }
+                }
+            }
+        }
+        // Multiprobe: 1-bit flips until the candidate pool is large enough.
+        if candidates.len() < self.min_candidates.max(k) {
+            'probe: for b in 0..self.bits {
+                for (t, &key) in keys.iter().enumerate() {
+                    if let Some(bucket) = self.tables[t].get(&(key ^ (1 << b))) {
+                        for &id in bucket {
+                            if self.stamp[id] != stamp {
+                                self.stamp[id] = stamp;
+                                candidates.push(id);
+                            }
+                        }
+                    }
+                    if candidates.len() >= self.min_candidates.max(k) * 2 {
+                        break 'probe;
+                    }
+                }
+            }
+        }
+
+        let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+        for id in candidates {
+            let d2 = dist_sq(&qn, self.point(id));
+            if best.len() < k || d2 < best.last().unwrap().1 {
+                let pos = best.partition_point(|&(_, bd)| bd <= d2);
+                best.insert(pos, (id, d2));
+                if best.len() > k {
+                    best.pop();
+                }
+            }
+        }
+        best.into_iter()
+            .map(|(id, d2)| (id, unit_dist_sq_to_cosine(d2)))
+            .collect()
+    }
+
+    fn rebuild(&mut self) {
+        // Rehash everything (hyperplanes are static; this compacts buckets).
+        let ids: Vec<usize> =
+            (0..self.present.len()).filter(|&i| self.present[i]).collect();
+        for t in &mut self.tables {
+            t.clear();
+        }
+        for id in ids {
+            for t in 0..self.tables.len() {
+                let key = self.hash(t, &self.point(id).to_vec());
+                self.keys[id * self.tables.len() + t] = key;
+                self.tables[t].entry(key).or_default().push(id);
+            }
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        let bucket_bytes: usize = self
+            .tables
+            .iter()
+            .map(|t| t.values().map(|b| 48 + b.capacity() * 8).sum::<usize>())
+            .sum();
+        self.planes.capacity() * 4
+            + self.data.capacity() * 4
+            + self.present.capacity()
+            + self.keys.capacity() * 8
+            + self.stamp.capacity() * 4
+            + bucket_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::LinearIndex;
+
+    fn random_points(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn exact_self_query() {
+        let dim = 32;
+        let pts = random_points(256, dim, 21);
+        let mut lsh = LshIndex::with_defaults(256, dim, 1);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+        }
+        for i in (0..256).step_by(31) {
+            let r = lsh.query(&pts[i], 1);
+            assert_eq!(r[0].0, i);
+            assert!((r[0].1 - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn recall_against_exact() {
+        let dim = 32;
+        let n = 512;
+        let pts = random_points(n, dim, 22);
+        let mut lsh = LshIndex::new(n, dim, 12, 10, 96, 2);
+        let mut exact = LinearIndex::new(n, dim);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+            exact.insert(i, p);
+        }
+        // Queries near existing points (the SAM regime: queries are learned
+        // to point at stored memories).
+        let mut rng = Rng::new(77);
+        let mut hit = 0;
+        let mut total = 0;
+        for qi in 0..64 {
+            let base = &pts[(qi * 7) % n];
+            let q: Vec<f32> = base.iter().map(|x| x + 0.1 * rng.normal()).collect();
+            let approx: std::collections::HashSet<usize> =
+                lsh.query(&q, 4).into_iter().map(|(i, _)| i).collect();
+            for (i, _) in exact.query(&q, 4) {
+                total += 1;
+                if approx.contains(&i) {
+                    hit += 1;
+                }
+            }
+        }
+        let recall = hit as f64 / total as f64;
+        assert!(recall > 0.7, "recall@4 = {recall}");
+    }
+
+    #[test]
+    fn update_and_remove() {
+        let dim = 16;
+        let pts = random_points(32, dim, 23);
+        let mut lsh = LshIndex::with_defaults(32, dim, 3);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+        }
+        let target = vec![1.0; 16];
+        lsh.update(5, &target);
+        let r = lsh.query(&target, 1);
+        assert_eq!(r[0].0, 5);
+        lsh.remove(5);
+        let r = lsh.query(&target, 1);
+        assert_ne!(r[0].0, 5);
+        assert_eq!(lsh.len(), 31);
+    }
+
+    #[test]
+    fn rebuild_is_lossless() {
+        let dim = 16;
+        let pts = random_points(64, dim, 24);
+        let mut lsh = LshIndex::with_defaults(64, dim, 4);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+        }
+        lsh.rebuild();
+        assert_eq!(lsh.len(), 64);
+        let r = lsh.query(&pts[10], 1);
+        assert_eq!(r[0].0, 10);
+    }
+}

@@ -1,0 +1,244 @@
+//! Approximate nearest neighbour indexes (paper §3.5, Supp A.4).
+//!
+//! The ANN is a *structured view* of the external memory: the memory stays a
+//! dense tensor the network operates on, while the index is carried through
+//! the network as non-differentiable state, kept in sync on every write, and
+//! queried for the K nearest words under cosine similarity.
+//!
+//! We follow the paper: a FLANN-style randomized k-d-tree ensemble
+//! ([`KdForest`]) for small word sizes, hyperplane LSH ([`LshIndex`]) for
+//! large ones, and an exact [`LinearIndex`] baseline ("SAM linear"). All
+//! indexes store L2-normalized copies of the rows so that nearest-in-L2
+//! equals highest-cosine, which is the similarity used by content-based
+//! addressing (eq. 2).
+
+pub mod kdtree;
+pub mod lsh;
+
+pub use kdtree::KdForest;
+pub use lsh::LshIndex;
+
+use crate::tensor::matrix::{dist_sq, dot};
+
+/// Which ANN backs a SAM memory (CLI / config selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnnKind {
+    /// Exact linear scan — the paper's "SAM linear".
+    Linear,
+    /// Randomized k-d-tree ensemble — the paper's "SAM ANN (k-d tree)".
+    KdForest,
+    /// Hyperplane locality-sensitive hashing — "SAM ANN (LSH)".
+    Lsh,
+}
+
+impl std::str::FromStr for AnnKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "linear" => Ok(AnnKind::Linear),
+            "kdtree" | "kd" | "kdforest" => Ok(AnnKind::KdForest),
+            "lsh" => Ok(AnnKind::Lsh),
+            other => Err(format!("unknown ann kind {other:?} (linear|kdtree|lsh)")),
+        }
+    }
+}
+
+/// A point index over the memory rows, queried for K nearest by cosine.
+pub trait AnnIndex: Send {
+    /// Number of indexed rows.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert (or re-insert) row `id` with contents `v`. Implementations
+    /// normalize internally; `v` is the raw memory row.
+    fn insert(&mut self, id: usize, v: &[f32]);
+
+    /// Remove row `id` (no-op if absent).
+    fn remove(&mut self, id: usize);
+
+    /// Replace row `id`'s vector: the per-write sync operation (§3.5).
+    fn update(&mut self, id: usize, v: &[f32]) {
+        self.remove(id);
+        self.insert(id, v);
+    }
+
+    /// Return up to `k` (id, cosine-similarity) pairs, best first.
+    fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)>;
+
+    /// Rebuild internal structure from scratch (the paper rebuilds every N
+    /// insertions to keep trees balanced).
+    fn rebuild(&mut self);
+
+    /// Approximate heap footprint, for the memory benchmarks.
+    fn heap_bytes(&self) -> usize;
+}
+
+/// L2-normalize into a fresh Vec (zero vectors stay zero).
+pub(crate) fn normalized(v: &[f32]) -> Vec<f32> {
+    let n = dot(v, v).sqrt();
+    if n < 1e-12 {
+        return v.to_vec();
+    }
+    let inv = 1.0 / n;
+    v.iter().map(|x| x * inv).collect()
+}
+
+/// Convert squared L2 distance between unit vectors to cosine similarity.
+#[inline]
+pub(crate) fn unit_dist_sq_to_cosine(d2: f32) -> f32 {
+    1.0 - 0.5 * d2
+}
+
+// ---------------------------------------------------------------------------
+// Exact linear index
+// ---------------------------------------------------------------------------
+
+/// Exact KNN by linear scan over normalized rows — O(N) per query.
+/// This is the paper's "SAM linear" configuration and the ground truth the
+/// approximate indexes are property-tested against.
+pub struct LinearIndex {
+    dim: usize,
+    /// Flat normalized row storage; row i at [i*dim, (i+1)*dim).
+    data: Vec<f32>,
+    present: Vec<bool>,
+    count: usize,
+}
+
+impl LinearIndex {
+    pub fn new(capacity: usize, dim: usize) -> LinearIndex {
+        LinearIndex {
+            dim,
+            data: vec![0.0; capacity * dim],
+            present: vec![false; capacity],
+            count: 0,
+        }
+    }
+}
+
+impl AnnIndex for LinearIndex {
+    fn len(&self) -> usize {
+        self.count
+    }
+
+    fn insert(&mut self, id: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.dim);
+        if id >= self.present.len() {
+            self.present.resize(id + 1, false);
+            self.data.resize((id + 1) * self.dim, 0.0);
+        }
+        let nv = normalized(v);
+        self.data[id * self.dim..(id + 1) * self.dim].copy_from_slice(&nv);
+        if !self.present[id] {
+            self.present[id] = true;
+            self.count += 1;
+        }
+    }
+
+    fn remove(&mut self, id: usize) {
+        if id < self.present.len() && self.present[id] {
+            self.present[id] = false;
+            self.count -= 1;
+        }
+    }
+
+    fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        let qn = normalized(q);
+        // Max-heap on (negated) distance of current top-k via simple vec;
+        // k is tiny (4-16) so insertion into a sorted vec is fastest.
+        let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+        for id in 0..self.present.len() {
+            if !self.present[id] {
+                continue;
+            }
+            let d2 = dist_sq(&qn, &self.data[id * self.dim..(id + 1) * self.dim]);
+            if best.len() < k || d2 < best.last().unwrap().1 {
+                let pos = best.partition_point(|&(_, bd)| bd <= d2);
+                best.insert(pos, (id, d2));
+                if best.len() > k {
+                    best.pop();
+                }
+            }
+        }
+        best.into_iter()
+            .map(|(id, d2)| (id, unit_dist_sq_to_cosine(d2)))
+            .collect()
+    }
+
+    fn rebuild(&mut self) {}
+
+    fn heap_bytes(&self) -> usize {
+        self.data.capacity() * 4 + self.present.capacity()
+    }
+}
+
+/// Construct an index of the given kind sized for `n` rows of width `dim`.
+pub fn build_index(kind: AnnKind, n: usize, dim: usize, seed: u64) -> Box<dyn AnnIndex> {
+    match kind {
+        AnnKind::Linear => Box::new(LinearIndex::new(n, dim)),
+        AnnKind::KdForest => Box::new(KdForest::with_defaults(n, dim, seed)),
+        AnnKind::Lsh => Box::new(LshIndex::with_defaults(n, dim, seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn linear_exact_top1() {
+        let mut idx = LinearIndex::new(8, 3);
+        idx.insert(0, &[1.0, 0.0, 0.0]);
+        idx.insert(1, &[0.0, 1.0, 0.0]);
+        idx.insert(2, &[0.7, 0.7, 0.0]);
+        let r = idx.query(&[0.9, 0.1, 0.0], 2);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r[1].0, 2);
+        assert!(r[0].1 > r[1].1);
+    }
+
+    #[test]
+    fn linear_remove_and_update() {
+        let mut idx = LinearIndex::new(4, 2);
+        idx.insert(0, &[1.0, 0.0]);
+        idx.insert(1, &[0.0, 1.0]);
+        idx.remove(0);
+        let r = idx.query(&[1.0, 0.0], 1);
+        assert_eq!(r[0].0, 1);
+        idx.update(1, &[1.0, 0.0]);
+        let r = idx.query(&[1.0, 0.0], 1);
+        assert!((r[0].1 - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosine_from_unit_dist() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let a: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            let (an, bn) = (normalized(&a), normalized(&b));
+            let cos = dot(&an, &bn);
+            let d2 = dist_sq(&an, &bn);
+            assert!((unit_dist_sq_to_cosine(d2) - cos).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn query_returns_sorted_by_similarity() {
+        let mut rng = Rng::new(2);
+        let mut idx = LinearIndex::new(64, 16);
+        for i in 0..64 {
+            let v: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+            idx.insert(i, &v);
+        }
+        let q: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        let r = idx.query(&q, 8);
+        assert_eq!(r.len(), 8);
+        for w in r.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Benchmark support: a tiny criterion replacement (criterion is not
+//! available in the offline build image) shared by the `benches/` binaries
+//! that regenerate the paper's tables and figures.
+//!
+//! Conventions: every bench prints a markdown table mirroring the paper's
+//! rows/series and writes the raw numbers to `results/<bench>.json` for
+//! EXPERIMENTS.md. `cargo bench` runs them all at a reduced default scale;
+//! pass `--paper-scale` for the full sweeps.
+
+use crate::util::json::Json;
+use crate::util::timer::{time_reps, Stats};
+
+/// Markdown-ish table printer with aligned columns.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Write bench results JSON under `results/` (created on demand).
+pub fn save_results(bench: &str, value: Json) {
+    let dir = std::path::Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{bench}.json"));
+    if let Err(e) = std::fs::write(&path, value.encode()) {
+        eprintln!("warn: could not write {path:?}: {e}");
+    } else {
+        println!("\nresults written to {path:?}");
+    }
+}
+
+/// Measure a closure: warmup once, then `reps` timed runs.
+pub fn measure<F: FnMut()>(reps: usize, f: F) -> Stats {
+    time_reps(1, reps.max(1), f)
+}
+
+/// Format seconds like the paper's axes (ms / s).
+pub fn fmt_time(s: f64) -> String {
+    crate::util::timer::fmt_duration(s)
+}
+
+/// Human bytes.
+pub fn fmt_bytes(b: usize) -> String {
+    crate::util::alloc::fmt_bytes(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new(&["model", "N", "ms"]);
+        t.row(vec!["sam".into(), "65536".into(), "0.7".into()]);
+        t.row(vec!["ntm".into(), "64".into(), "12.0".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn measure_runs() {
+        let s = measure(3, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.n, 3);
+    }
+}

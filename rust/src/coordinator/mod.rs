@@ -1,0 +1,227 @@
+//! Experiment coordination: config parsing, task/core factories, checkpoint
+//! I/O, and the TCP inference server. This is the layer the `sam` binary
+//! and the examples drive.
+
+pub mod server;
+
+use crate::ann::AnnKind;
+use crate::cores::{build_core, Core, CoreConfig, CoreKind};
+use crate::curriculum::Curriculum;
+use crate::optim::{Adam, Optimizer, RmsProp};
+use crate::tasks::{
+    babi::BabiTask, copy::CopyTask, omniglot::OmniglotTask, recall::AssociativeRecall,
+    sort::PrioritySort, Task,
+};
+use crate::training::{TrainConfig, Trainer, TrainLog};
+use crate::util::args::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Everything needed to reproduce a run, assembled from CLI flags.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub core: CoreKind,
+    pub task: String,
+    pub core_cfg: CoreConfig,
+    pub train_cfg: TrainConfig,
+    /// Curriculum: None = fixed at the task's base level.
+    pub curriculum_max: Option<usize>,
+    pub curriculum_threshold: f64,
+}
+
+impl ExperimentConfig {
+    /// Parse from CLI flags with the paper's defaults (Supp C / E).
+    pub fn from_args(args: &Args) -> Result<ExperimentConfig> {
+        let core: CoreKind = args
+            .str_or("model", "sam")
+            .parse()
+            .map_err(|e: String| anyhow!(e))?;
+        let ann: AnnKind = args
+            .str_or("ann", "linear")
+            .parse()
+            .map_err(|e: String| anyhow!(e))?;
+        let task = args.str_or("task", "copy");
+        let core_cfg = CoreConfig {
+            hidden: args.usize_or("hidden", 100),
+            heads: args.usize_or("heads", 4),
+            word: args.usize_or("word", 32),
+            mem_words: args.usize_or("memory", 128),
+            k: args.usize_or("k", 4),
+            k_l: args.usize_or("kl", 8),
+            ann,
+            delta: args.f32_or("delta", 0.005),
+            lambda: args.f32_or("lambda", 0.99),
+            seed: args.u64_or("seed", 1),
+            ..CoreConfig::default()
+        };
+        let train_cfg = TrainConfig {
+            lr: args.f32_or("lr", 1e-4),
+            batch: args.usize_or("batch", 8),
+            updates: args.usize_or("updates", 200),
+            log_every: args.usize_or("log-every", 10),
+            seed: args.u64_or("seed", 1) ^ 0x5555,
+            verbose: !args.has("quiet"),
+        };
+        Ok(ExperimentConfig {
+            core,
+            task,
+            core_cfg,
+            train_cfg,
+            curriculum_max: args.get("curriculum-max").map(|v| v.parse().unwrap()),
+            curriculum_threshold: args.get_or("curriculum-threshold", 0.05f32) as f64,
+        })
+    }
+}
+
+/// Build a task by name with paper-default dimensions.
+pub fn build_task(name: &str) -> Result<Box<dyn Task>> {
+    match name {
+        "copy" => Ok(Box::new(CopyTask::new(6))),
+        "recall" => Ok(Box::new(AssociativeRecall::new(6))),
+        "sort" => Ok(Box::new(PrioritySort::new(6))),
+        "omniglot" => Ok(Box::new(OmniglotTask::new(32, 32))),
+        "babi" => Ok(Box::new(BabiTask::new())),
+        other => Err(anyhow!("unknown task {other:?} (copy|recall|sort|omniglot|babi)")),
+    }
+}
+
+/// Build core + optimizer + trainer for an experiment (task dims are filled
+/// into the core config automatically).
+pub fn build_trainer(cfg: &ExperimentConfig, task: &dyn Task) -> Trainer {
+    let mut core_cfg = cfg.core_cfg.clone();
+    core_cfg.x_dim = task.x_dim();
+    core_cfg.y_dim = task.y_dim();
+    let mut rng = Rng::new(core_cfg.seed);
+    let core = build_core(cfg.core, &core_cfg, &mut rng);
+    let opt: Box<dyn Optimizer> = if std::env::var("SAM_ADAM").is_ok() {
+        Box::new(Adam::new(cfg.train_cfg.lr))
+    } else {
+        Box::new(RmsProp::new(cfg.train_cfg.lr))
+    };
+    Trainer::new(core, opt, cfg.train_cfg.clone())
+}
+
+/// Run a full training experiment; returns (trainer, log).
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<(Trainer, TrainLog)> {
+    let task = build_task(&cfg.task)?;
+    let mut trainer = build_trainer(cfg, task.as_ref());
+    let mut curriculum = match cfg.curriculum_max {
+        Some(max) => {
+            Curriculum::exponential(task.base_level(), max, cfg.curriculum_threshold)
+        }
+        None => Curriculum::fixed(task.base_level()),
+    };
+    let log = trainer.run(task.as_ref(), &mut curriculum);
+    Ok((trainer, log))
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoints (flat f32 + JSON header)
+// ---------------------------------------------------------------------------
+
+/// Save core parameters to a simple binary checkpoint with a JSON header.
+pub fn save_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
+    let values = core.save_values();
+    let header = Json::obj(vec![
+        ("name", Json::str(core.name())),
+        ("params", Json::num(values.len() as f64)),
+        ("version", Json::num(1.0)),
+    ])
+    .encode();
+    let mut bytes = Vec::with_capacity(8 + header.len() + values.len() * 4);
+    bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(header.as_bytes());
+    for v in &values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("write checkpoint {path:?}"))?;
+    Ok(())
+}
+
+/// Load a checkpoint produced by [`save_checkpoint`] into `core`.
+pub fn load_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("read checkpoint {path:?}"))?;
+    if bytes.len() < 8 {
+        return Err(anyhow!("truncated checkpoint"));
+    }
+    let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+    let header = std::str::from_utf8(&bytes[8..8 + hlen]).context("bad header")?;
+    let meta = Json::parse(header).map_err(|e| anyhow!("header json: {e}"))?;
+    let expect = meta
+        .get("params")
+        .and_then(|j| j.as_f64())
+        .ok_or_else(|| anyhow!("header missing params"))?;
+    let body = &bytes[8 + hlen..];
+    let n = body.len() / 4;
+    if n != expect as usize {
+        return Err(anyhow!("checkpoint has {n} params, header says {expect}"));
+    }
+    let values: Vec<f32> = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    core.load_values(&values);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_from_args_defaults() {
+        let args = Args::parse(Vec::<String>::new());
+        let cfg = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.core, CoreKind::Sam);
+        assert_eq!(cfg.core_cfg.hidden, 100);
+        assert_eq!(cfg.core_cfg.heads, 4);
+        assert_eq!(cfg.core_cfg.k, 4);
+    }
+
+    #[test]
+    fn config_overrides() {
+        let args = Args::parse(
+            "--model dnc --task babi --memory 64 --ann kdtree --lr 0.001"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.core, CoreKind::Dnc);
+        assert_eq!(cfg.task, "babi");
+        assert_eq!(cfg.core_cfg.mem_words, 64);
+        assert_eq!(cfg.core_cfg.ann, AnnKind::KdForest);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let task = CopyTask::new(4);
+        let core_cfg = CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: 8,
+            heads: 1,
+            word: 6,
+            mem_words: 8,
+            seed: 3,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(3);
+        let mut core = build_core(CoreKind::Sam, &core_cfg, &mut rng);
+        let orig = core.save_values();
+        let tmp = std::env::temp_dir().join("sam_ckpt_test.bin");
+        save_checkpoint(core.as_mut(), &tmp).unwrap();
+        // perturb then reload
+        let zeros = vec![0.0f32; orig.len()];
+        core.load_values(&zeros);
+        load_checkpoint(core.as_mut(), &tmp).unwrap();
+        assert_eq!(core.save_values(), orig);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        assert!(build_task("nope").is_err());
+    }
+}

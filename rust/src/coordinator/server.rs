@@ -1,0 +1,188 @@
+//! TCP inference server: newline-delimited JSON requests against a trained
+//! core (or a PJRT-compiled cell). Python is never involved — this is the
+//! L3 request path.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"inputs": [[f32…], …]}            run an episode, return outputs
+//!   → {"ping": true}                      health check
+//!   ← {"outputs": [[f32…], …]}  /  {"pong": true}  /  {"error": "…"}
+
+use crate::cores::Core;
+use crate::training::eval_episode;
+use crate::tasks::{Episode, LossKind};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Serve `core` on `addr` ("127.0.0.1:7878"). Blocks; set `stop` from
+/// another thread to shut down after the in-flight request.
+pub fn serve(core: Arc<Mutex<Box<dyn Core>>>, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    eprintln!("sam-serve listening on {addr}");
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Err(e) = handle_client(&core, stream) {
+                    eprintln!("client error: {e:#}");
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+fn handle_client(core: &Arc<Mutex<Box<dyn Core>>>, stream: TcpStream) -> Result<()> {
+    // Bounded reads so a silent client cannot pin the accept loop forever.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Ok(()) // idle client: free the loop (single-threaded server)
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let response = match handle_request(core, line.trim()) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+        };
+        writer.write_all(response.encode().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+/// Process one request line. Public for unit testing without sockets.
+pub fn handle_request(core: &Arc<Mutex<Box<dyn Core>>>, line: &str) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    if req.get("ping").is_some() {
+        return Ok(Json::obj(vec![("pong", Json::Bool(true))]));
+    }
+    let inputs = req
+        .get("inputs")
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| anyhow!("missing inputs"))?;
+    let mut core = core.lock().map_err(|_| anyhow!("core poisoned"))?;
+    let x_dim = core.x_dim();
+    let y_dim = core.y_dim();
+    let mut xs = Vec::with_capacity(inputs.len());
+    for (t, row) in inputs.iter().enumerate() {
+        let row = row.as_arr().ok_or_else(|| anyhow!("inputs[{t}] not an array"))?;
+        if row.len() != x_dim {
+            return Err(anyhow!("inputs[{t}] has {} dims, want {x_dim}", row.len()));
+        }
+        xs.push(
+            row.iter()
+                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+                .collect::<Vec<f32>>(),
+        );
+    }
+    let t_len = xs.len();
+    let ep = Episode {
+        inputs: xs,
+        targets: vec![vec![0.0; y_dim]; t_len],
+        mask: vec![false; t_len],
+        loss: LossKind::Bits,
+        family: 0,
+    };
+    let (_, outputs) = eval_episode(core.as_mut(), &ep);
+    Ok(Json::obj(vec![(
+        "outputs",
+        Json::arr(outputs.iter().map(|o| Json::floats(o))),
+    )]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::{build_core, CoreConfig, CoreKind};
+    use crate::util::rng::Rng;
+
+    fn test_core() -> Arc<Mutex<Box<dyn Core>>> {
+        let cfg = CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 8,
+            heads: 1,
+            word: 6,
+            mem_words: 8,
+            seed: 9,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(9);
+        Arc::new(Mutex::new(build_core(CoreKind::Sam, &cfg, &mut rng)))
+    }
+
+    #[test]
+    fn ping_pong() {
+        let core = test_core();
+        let r = handle_request(&core, r#"{"ping": true}"#).unwrap();
+        assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn episode_request_returns_outputs() {
+        let core = test_core();
+        let r = handle_request(
+            &core,
+            r#"{"inputs": [[1,0,0,0],[0,1,0,0],[0,0,1,0]]}"#,
+        )
+        .unwrap();
+        let outs = r.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        let core = test_core();
+        assert!(handle_request(&core, "not json").is_err());
+        assert!(handle_request(&core, r#"{"inputs": [[1,0]]}"#).is_err()); // wrong dim
+        assert!(handle_request(&core, r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn server_round_trip_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let core = test_core();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let addr = "127.0.0.1:47391";
+        let core2 = core.clone();
+        let handle = std::thread::spawn(move || {
+            let _ = serve(core2, addr, stop2);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(b"{\"inputs\": [[1,0,0,0],[0,0,0,1]]}\n")
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(j.get("outputs").is_some(), "{line}");
+        stop.store(true, Ordering::Relaxed);
+        drop(reader); // close BOTH socket handles so the server unblocks
+        drop(stream);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,295 @@
+//! Content-based addressing (paper §2.1, eq. 2) and the SAM write-weight
+//! interpolation (eq. 5) — forward *and* hand-derived backward, shared by
+//! all cores. Dense variants cost O(N·W); sparse variants cost O(K·W).
+
+use crate::memory::store::MemoryStore;
+use crate::nn::act::{dsigmoid, dsoftplus, sigmoid, softplus};
+use crate::tensor::csr::SparseVec;
+use crate::tensor::matrix::{dot, norm, softmax_inplace, softmax_backward};
+
+/// Norm floor in the cosine denominator. Keeps similarity (and its
+/// gradients) bounded when memory rows are near zero — which is every row
+/// at episode start, since the memory initializes to zeros.
+pub const NORM_FLOOR: f32 = 0.1;
+
+/// Cosine similarity plus cached norms for the backward pass.
+/// d(q,m) = q·m / (max(|q|,f)·max(|m|,f)).
+#[derive(Debug, Clone)]
+pub struct CosSim {
+    pub value: f32,
+    pub nq: f32,
+    pub nm: f32,
+}
+
+pub fn cos_sim(q: &[f32], m: &[f32]) -> CosSim {
+    let nq = norm(q);
+    let nm = norm(m);
+    let d = nq.max(NORM_FLOOR) * nm.max(NORM_FLOOR);
+    CosSim { value: dot(q, m) / d, nq, nm }
+}
+
+/// Accumulate d(cos)/dq and d(cos)/dm given upstream dcos.
+pub fn cos_sim_backward(
+    q: &[f32],
+    m: &[f32],
+    sim: &CosSim,
+    dcos: f32,
+    dq: &mut [f32],
+    dm: &mut [f32],
+) {
+    let d = sim.nq.max(NORM_FLOOR) * sim.nm.max(NORM_FLOOR);
+    let inv_d = 1.0 / d;
+    // The self-norm terms only exist where the norm is above the floor
+    // (below it the denominator is constant in that vector).
+    let q_scale = if sim.nq > NORM_FLOOR { sim.value * sim.nm.max(NORM_FLOOR) / sim.nq } else { 0.0 };
+    let m_scale = if sim.nm > NORM_FLOOR { sim.value * sim.nq.max(NORM_FLOOR) / sim.nm } else { 0.0 };
+    for j in 0..q.len() {
+        dq[j] += dcos * (m[j] - q_scale * q[j]) * inv_d;
+        dm[j] += dcos * (q[j] - m_scale * m[j]) * inv_d;
+    }
+}
+
+/// Forward cache of a content read over an explicit candidate row set.
+/// For dense models the candidates are 0..N; for SAM they are the K rows
+/// the ANN returned.
+#[derive(Debug, Clone)]
+pub struct ContentRead {
+    /// Candidate memory rows, in weight order with `weights`.
+    pub rows: Vec<usize>,
+    pub sims: Vec<CosSim>,
+    /// softmax(β · sims) over the candidates.
+    pub weights: Vec<f32>,
+    /// β = softplus(β̂) + 1 and its pre-activation.
+    pub beta: f32,
+    pub beta_raw: f32,
+}
+
+/// Compute content weights softmax(β·cos(q, M(rows))) over `rows`.
+pub fn content_weights(q: &[f32], beta_raw: f32, mem: &MemoryStore, rows: Vec<usize>) -> ContentRead {
+    let beta = softplus(beta_raw) + 1.0;
+    let sims: Vec<CosSim> = rows.iter().map(|&i| cos_sim(q, mem.row(i))).collect();
+    let mut weights: Vec<f32> = sims.iter().map(|s| beta * s.value).collect();
+    softmax_inplace(&mut weights);
+    ContentRead { rows, sims, weights, beta, beta_raw }
+}
+
+/// Gradients of `content_weights`: given dL/dweights, accumulate dq,
+/// dβ̂ and per-row memory grads via the callback (row, dmem_row_fn).
+pub fn content_weights_backward(
+    cr: &ContentRead,
+    q: &[f32],
+    mem: &MemoryStore,
+    dweights: &[f32],
+    dq: &mut [f32],
+    dbeta_raw: &mut f32,
+    mut dmem: impl FnMut(usize, &[f32]),
+) {
+    let k = cr.rows.len();
+    let mut dlogits = vec![0.0f32; k];
+    softmax_backward(&cr.weights, dweights, &mut dlogits);
+    let mut dbeta = 0.0f32;
+    let mut dm_row = vec![0.0f32; q.len()];
+    for (j, &row) in cr.rows.iter().enumerate() {
+        dbeta += dlogits[j] * cr.sims[j].value;
+        let dsim = dlogits[j] * cr.beta;
+        if dsim != 0.0 {
+            dm_row.iter_mut().for_each(|x| *x = 0.0);
+            cos_sim_backward(q, mem.row(row), &cr.sims[j], dsim, dq, &mut dm_row);
+            dmem(row, &dm_row);
+        }
+    }
+    *dbeta_raw += dbeta * dsoftplus(cr.beta_raw);
+}
+
+/// Forward cache for the SAM/DAM write interpolation (eq. 5):
+/// w^W = α · (γ · w^R_prev + (1-γ) · 𝕀_u), α = σ(α̂), γ = σ(γ̂).
+#[derive(Debug, Clone)]
+pub struct WriteGate {
+    pub alpha: f32,
+    pub gamma: f32,
+    pub alpha_raw: f32,
+    pub gamma_raw: f32,
+    /// The least-recently-accessed target row u.
+    pub lra_row: usize,
+    /// Resulting sparse write weights.
+    pub weights: SparseVec,
+}
+
+pub fn write_gate(alpha_raw: f32, gamma_raw: f32, w_read_prev: &SparseVec, lra_row: usize) -> WriteGate {
+    let alpha = sigmoid(alpha_raw);
+    let gamma = sigmoid(gamma_raw);
+    let mut pairs: Vec<(usize, f32)> = w_read_prev
+        .iter()
+        .map(|(i, v)| (i, alpha * gamma * v))
+        .collect();
+    pairs.push((lra_row, alpha * (1.0 - gamma) + 0.0));
+    // Note: if lra_row already appears in w_read_prev the contributions add,
+    // which matches evaluating eq. 5 at that index.
+    let weights = SparseVec::from_pairs(pairs);
+    WriteGate { alpha, gamma, alpha_raw, gamma_raw, lra_row, weights }
+}
+
+/// Backward of `write_gate`. `dw` is dL/d(weights) aligned to
+/// `gate.weights`. Accumulates dα̂, dγ̂ and returns dL/d(w^R_prev).
+pub fn write_gate_backward(
+    gate: &WriteGate,
+    w_read_prev: &SparseVec,
+    dw: &SparseVec,
+    dalpha_raw: &mut f32,
+    dgamma_raw: &mut f32,
+) -> SparseVec {
+    let (a, g) = (gate.alpha, gate.gamma);
+    let mut dalpha = 0.0f32;
+    let mut dgamma = 0.0f32;
+    // Term from the previously-read component.
+    let mut dw_prev_pairs = Vec::with_capacity(w_read_prev.nnz());
+    for (i, v) in w_read_prev.iter() {
+        let dwi = dw.get(i);
+        dalpha += dwi * g * v;
+        dgamma += dwi * a * v;
+        dw_prev_pairs.push((i, dwi * a * g));
+    }
+    // Term from the LRA indicator.
+    let dwu = dw.get(gate.lra_row);
+    dalpha += dwu * (1.0 - g);
+    dgamma -= dwu * a;
+    *dalpha_raw += dalpha * dsigmoid(a);
+    *dgamma_raw += dgamma * dsigmoid(g);
+    SparseVec::from_pairs(dw_prev_pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cos_sim_backward_matches_fd() {
+        let mut rng = Rng::new(1);
+        let q: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        let m: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        let s = cos_sim(&q, &m);
+        let mut dq = vec![0.0; 6];
+        let mut dm = vec![0.0; 6];
+        cos_sim_backward(&q, &m, &s, 1.0, &mut dq, &mut dm);
+        let eps = 1e-3;
+        for j in 0..6 {
+            let mut qp = q.clone();
+            qp[j] += eps;
+            let mut qm_ = q.clone();
+            qm_[j] -= eps;
+            let fd = (cos_sim(&qp, &m).value - cos_sim(&qm_, &m).value) / (2.0 * eps);
+            assert!((fd - dq[j]).abs() < 1e-3, "dq[{j}] fd={fd} an={}", dq[j]);
+            let mut mp = m.clone();
+            mp[j] += eps;
+            let mut mm = m.clone();
+            mm[j] -= eps;
+            let fd = (cos_sim(&q, &mp).value - cos_sim(&q, &mm).value) / (2.0 * eps);
+            assert!((fd - dm[j]).abs() < 1e-3, "dm[{j}] fd={fd} an={}", dm[j]);
+        }
+    }
+
+    #[test]
+    fn content_weights_backward_matches_fd() {
+        let mut rng = Rng::new(2);
+        let (n, w) = (5, 4);
+        let mut mem = MemoryStore::zeros(n, w);
+        for i in 0..n {
+            for j in 0..w {
+                mem.row_mut(i)[j] = rng.normal();
+            }
+        }
+        let q: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+        let beta_raw = 0.4f32;
+        let rows: Vec<usize> = (0..n).collect();
+        let probe: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+
+        let loss = |q: &[f32], beta_raw: f32, mem: &MemoryStore| -> f32 {
+            let cr = content_weights(q, beta_raw, mem, rows.clone());
+            cr.weights.iter().zip(&probe).map(|(a, b)| a * b).sum()
+        };
+
+        let cr = content_weights(&q, beta_raw, &mem, rows.clone());
+        let mut dq = vec![0.0; w];
+        let mut dbeta_raw = 0.0;
+        let mut dmem_acc = vec![vec![0.0f32; w]; n];
+        content_weights_backward(&cr, &q, &mem, &probe, &mut dq, &mut dbeta_raw, |r, d| {
+            for j in 0..w {
+                dmem_acc[r][j] += d[j];
+            }
+        });
+
+        let eps = 1e-3;
+        for j in 0..w {
+            let mut qp = q.clone();
+            qp[j] += eps;
+            let mut qm = q.clone();
+            qm[j] -= eps;
+            let fd = (loss(&qp, beta_raw, &mem) - loss(&qm, beta_raw, &mem)) / (2.0 * eps);
+            assert!((fd - dq[j]).abs() < 2e-3, "dq[{j}] fd={fd} an={}", dq[j]);
+        }
+        {
+            let fd = (loss(&q, beta_raw + eps, &mem) - loss(&q, beta_raw - eps, &mem)) / (2.0 * eps);
+            assert!((fd - dbeta_raw).abs() < 2e-3, "dbeta fd={fd} an={dbeta_raw}");
+        }
+        for r in 0..n {
+            for j in 0..w {
+                let orig = mem.row(r)[j];
+                mem.row_mut(r)[j] = orig + eps;
+                let lp = loss(&q, beta_raw, &mem);
+                mem.row_mut(r)[j] = orig - eps;
+                let lm = loss(&q, beta_raw, &mem);
+                mem.row_mut(r)[j] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (fd - dmem_acc[r][j]).abs() < 2e-3,
+                    "dM[{r},{j}] fd={fd} an={}",
+                    dmem_acc[r][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn write_gate_backward_matches_fd() {
+        let w_prev = SparseVec::from_pairs(vec![(2, 0.5), (7, 0.3), (9, 0.2)]);
+        let lra = 4usize;
+        let (ar0, gr0) = (0.3f32, -0.6f32);
+        let probe = SparseVec::from_pairs(vec![(2, 0.7), (4, -0.5), (7, 0.2), (9, 1.0)]);
+        let loss = |ar: f32, gr: f32, wp: &SparseVec| -> f32 {
+            let g = write_gate(ar, gr, wp, lra);
+            g.weights.iter().map(|(i, v)| v * probe.get(i)).sum()
+        };
+        let gate = write_gate(ar0, gr0, &w_prev, lra);
+        // dL/dw aligned to gate.weights = probe restricted to its support.
+        let dw = SparseVec::from_pairs(
+            gate.weights.iter().map(|(i, _)| (i, probe.get(i))).collect(),
+        );
+        let (mut dar, mut dgr) = (0.0, 0.0);
+        let dw_prev = write_gate_backward(&gate, &w_prev, &dw, &mut dar, &mut dgr);
+        let eps = 1e-3;
+        let fd_a = (loss(ar0 + eps, gr0, &w_prev) - loss(ar0 - eps, gr0, &w_prev)) / (2.0 * eps);
+        assert!((fd_a - dar).abs() < 1e-3, "dalpha fd={fd_a} an={dar}");
+        let fd_g = (loss(ar0, gr0 + eps, &w_prev) - loss(ar0, gr0 - eps, &w_prev)) / (2.0 * eps);
+        assert!((fd_g - dgr).abs() < 1e-3, "dgamma fd={fd_g} an={dgr}");
+        for (pos, (i, v)) in w_prev.iter().enumerate() {
+            let mut wp = w_prev.clone();
+            wp.val[pos] = v + eps;
+            let lp = loss(ar0, gr0, &wp);
+            wp.val[pos] = v - eps;
+            let lm = loss(ar0, gr0, &wp);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dw_prev.get(i)).abs() < 1e-3, "dw_prev[{i}]");
+        }
+    }
+
+    #[test]
+    fn write_gate_lra_overlapping_read_support() {
+        // lra row inside the read support must combine, not duplicate.
+        let w_prev = SparseVec::from_pairs(vec![(3, 1.0)]);
+        let g = write_gate(10.0, 0.0, &w_prev, 3); // α≈1, γ=0.5
+        assert_eq!(g.weights.nnz(), 1);
+        let v = g.weights.get(3);
+        assert!((v - (0.5 + 0.5)).abs() < 1e-3, "v={v}");
+    }
+}

@@ -1,0 +1,381 @@
+//! Dense Access Memory (DAM) — the paper's dense control model for SAM
+//! (§3.2): identical architecture, but reads are a softmax over *all* N
+//! words, writes touch all N entries of w^W, usage is the time-discounted
+//! sum U⁽¹⁾, and BPTT caches a full memory snapshot per step. Costs O(N·W)
+//! time and space per step — the overhead Figures 1a/1b plot against SAM.
+
+use super::addressing::{content_weights, content_weights_backward, ContentRead};
+use super::{Controller, Core, CoreConfig};
+use crate::memory::store::MemoryStore;
+use crate::memory::usage::DiscountedUsage;
+use crate::nn::act::{dsigmoid, sigmoid};
+use crate::nn::param::{HasParams, Param};
+use crate::tensor::matrix::{dot, Matrix};
+use crate::util::rng::Rng;
+
+const fn head_dim(word: usize) -> usize {
+    2 * word + 3 // [q(W), a(W), α̂, γ̂, β̂]
+}
+
+struct HeadStep {
+    /// Dense write weights and gate scalars.
+    w_write: Vec<f32>,
+    alpha: f32,
+    gamma: f32,
+    lra_row: usize,
+    w_read_used: Vec<f32>,
+    write_word: Vec<f32>,
+    /// Read caches.
+    read: ContentRead,
+    query: Vec<f32>,
+}
+
+struct DamStep {
+    /// Snapshot of M_{t-1} (pre-write) — the O(N·W)/step BPTT cost.
+    mem_before: Vec<f32>,
+    heads: Vec<HeadStep>,
+}
+
+pub struct DamCore {
+    cfg: CoreConfig,
+    ctrl: Controller,
+    mem: MemoryStore,
+    usage: DiscountedUsage,
+    w_read_prev: Vec<Vec<f32>>,
+    r_prev: Vec<Vec<f32>>,
+    tape: Vec<DamStep>,
+    // carried backward state
+    d_r: Vec<Vec<f32>>,
+    d_wread: Vec<Vec<f32>>,
+    dmem: Matrix,
+}
+
+impl DamCore {
+    pub fn new(cfg: &CoreConfig, rng: &mut Rng) -> DamCore {
+        let mut rng = Rng::new(cfg.seed ^ rng.next_u64());
+        let ctrl = Controller::new(
+            "dam",
+            cfg.x_dim,
+            cfg.y_dim,
+            cfg.hidden,
+            cfg.heads,
+            cfg.word,
+            head_dim(cfg.word),
+            &mut rng,
+        );
+        DamCore {
+            ctrl,
+            mem: MemoryStore::zeros(cfg.mem_words, cfg.word),
+            usage: DiscountedUsage::new(cfg.mem_words, cfg.lambda),
+            w_read_prev: vec![vec![0.0; cfg.mem_words]; cfg.heads],
+            r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
+            tape: Vec::new(),
+            d_r: vec![vec![0.0; cfg.word]; cfg.heads],
+            d_wread: vec![vec![0.0; cfg.mem_words]; cfg.heads],
+            dmem: Matrix::zeros(cfg.mem_words, cfg.word),
+            cfg: cfg.clone(),
+        }
+    }
+
+    fn parse_head<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], f32, f32, f32) {
+        let w = self.cfg.word;
+        (&p[..w], &p[w..2 * w], p[2 * w], p[2 * w + 1], p[2 * w + 2])
+    }
+}
+
+impl HasParams for DamCore {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.ctrl.visit_params(f);
+    }
+}
+
+impl Core for DamCore {
+    fn name(&self) -> &'static str {
+        "dam"
+    }
+
+    fn reset(&mut self) {
+        self.ctrl.reset();
+        self.tape.clear();
+        self.mem.fill(0.0);
+        self.usage.reset();
+        for v in &mut self.w_read_prev {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.d_r {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for v in &mut self.d_wread {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.dmem.fill(0.0);
+    }
+
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        let n = self.cfg.mem_words;
+        let (h, p) = self.ctrl.step(x, &self.r_prev);
+        let hd = head_dim(self.cfg.word);
+        let mem_before = self.mem.snapshot();
+        self.usage.u.iter_mut().for_each(|u| *u *= self.usage.lambda);
+        let mut heads = Vec::with_capacity(self.cfg.heads);
+
+        // --- dense writes (eq. 5 with dense w^R_{t-1} and U⁽¹⁾ argmin) ---
+        for hi in 0..self.cfg.heads {
+            let (_q, a, ar, gr, _br) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
+            let alpha = sigmoid(ar);
+            let gamma = sigmoid(gr);
+            let lra_row = self.usage.argmin();
+            let mut w_write = vec![0.0f32; n];
+            for i in 0..n {
+                w_write[i] = alpha * gamma * self.w_read_prev[hi][i];
+            }
+            w_write[lra_row] += alpha * (1.0 - gamma);
+            // Erase the least-used row fully (R_t = 𝕀^U 1ᵀ), then dense add.
+            self.mem.row_mut(lra_row).iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..n {
+                let wv = w_write[i];
+                if wv != 0.0 {
+                    let row = self.mem.row_mut(i);
+                    for (m, &av) in row.iter_mut().zip(a) {
+                        *m += wv * av;
+                    }
+                }
+            }
+            // Usage sees this head's write immediately so the next head
+            // picks a different least-used slot.
+            for i in 0..n {
+                self.usage.u[i] += w_write[i];
+            }
+            heads.push(HeadStep {
+                w_write,
+                alpha,
+                gamma,
+                lra_row,
+                w_read_used: self.w_read_prev[hi].clone(),
+                write_word: a.to_vec(),
+                read: ContentRead { rows: vec![], sims: vec![], weights: vec![], beta: 0.0, beta_raw: 0.0 },
+                query: vec![],
+            });
+        }
+
+        // --- dense reads over all N words (eq. 1/2) ---
+        let mut reads = Vec::with_capacity(self.cfg.heads);
+        for hi in 0..self.cfg.heads {
+            let (q, _a, _ar, _gr, br) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
+            let read = content_weights(q, br, &self.mem, (0..n).collect());
+            let mut r = vec![0.0; self.cfg.word];
+            self.mem.read_dense(&read.weights, &mut r);
+            for i in 0..n {
+                self.usage.u[i] += read.weights[i];
+            }
+            self.w_read_prev[hi] = read.weights.clone();
+            heads[hi].read = read;
+            heads[hi].query = q.to_vec();
+            reads.push(r);
+        }
+
+        let y = self.ctrl.output(&h, &reads);
+        self.r_prev = reads;
+        self.tape.push(DamStep { mem_before, heads });
+        y
+    }
+
+    fn backward(&mut self, dy: &[f32]) {
+        let step = self.tape.pop().expect("backward without forward");
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let (dh, dreads) = self.ctrl.backward_output(dy);
+        let mut dp = vec![0.0f32; self.cfg.heads * hd];
+
+        // --- read backward (memory currently = M_t) ---
+        for (hi, hstep) in step.heads.iter().enumerate() {
+            let mut dr = dreads[hi].clone();
+            for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
+                *a += b;
+            }
+            let mut dweights = vec![0.0f32; n];
+            for i in 0..n {
+                dweights[i] = dot(self.mem.row(i), &dr) + self.d_wread[hi][i];
+                let wv = hstep.read.weights[i];
+                if wv != 0.0 {
+                    let row = self.dmem.row_mut(i);
+                    for (g, &d) in row.iter_mut().zip(&dr) {
+                        *g += wv * d;
+                    }
+                }
+            }
+            let dslice = &mut dp[hi * hd..(hi + 1) * hd];
+            let mut dbeta_raw = 0.0;
+            let mut dq = vec![0.0f32; w];
+            let dmem_ref = &mut self.dmem;
+            content_weights_backward(
+                &hstep.read,
+                &hstep.query,
+                &self.mem,
+                &dweights,
+                &mut dq,
+                &mut dbeta_raw,
+                |row, d| {
+                    let r = dmem_ref.row_mut(row);
+                    for (g, &x) in r.iter_mut().zip(d) {
+                        *g += x;
+                    }
+                },
+            );
+            dslice[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
+            dslice[2 * w + 2] += dbeta_raw;
+        }
+
+        // --- write backward (reverse head order) ---
+        for hi in (0..self.cfg.heads).rev() {
+            let hstep = &step.heads[hi];
+            let mut da = vec![0.0f32; w];
+            let mut dw = vec![0.0f32; n];
+            for i in 0..n {
+                let wv = hstep.w_write[i];
+                let drow = self.dmem.row(i);
+                if wv != 0.0 {
+                    for (daj, &dj) in da.iter_mut().zip(drow) {
+                        *daj += wv * dj;
+                    }
+                }
+                dw[i] = dot(&hstep.write_word, drow);
+            }
+            // Erased row's pre-write contents are irrelevant.
+            self.dmem.row_mut(hstep.lra_row).iter_mut().for_each(|v| *v = 0.0);
+            // Gate backward: w^W = α(γ·wp + (1-γ)·e_u).
+            let (a, g) = (hstep.alpha, hstep.gamma);
+            let mut dalpha = 0.0f32;
+            let mut dgamma = 0.0f32;
+            for i in 0..n {
+                let e_u = if i == hstep.lra_row { 1.0 } else { 0.0 };
+                dalpha += dw[i] * (g * hstep.w_read_used[i] + (1.0 - g) * e_u);
+                dgamma += dw[i] * a * (hstep.w_read_used[i] - e_u);
+                self.d_wread[hi][i] = dw[i] * a * g;
+            }
+            let dslice = &mut dp[hi * hd..(hi + 1) * hd];
+            dslice[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
+            dslice[2 * w] += dalpha * dsigmoid(a);
+            dslice[2 * w + 1] += dgamma * dsigmoid(g);
+        }
+
+        // Restore M_{t-1} for the next backward step.
+        self.mem.restore(&step.mem_before);
+        let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
+        self.d_r = dr_prev;
+    }
+
+    fn rollback(&mut self) {
+        if let Some(first) = self.tape.first() {
+            let m = first.mem_before.clone();
+            self.mem.restore(&m);
+        }
+        self.tape.clear();
+    }
+
+    fn end_episode(&mut self) {}
+
+    fn x_dim(&self) -> usize {
+        self.cfg.x_dim
+    }
+
+    fn y_dim(&self) -> usize {
+        self.cfg.y_dim
+    }
+
+    fn tape_bytes(&self) -> usize {
+        let step: usize = self
+            .tape
+            .iter()
+            .map(|s| {
+                s.mem_before.capacity() * 4
+                    + s.heads
+                        .iter()
+                        .map(|h| {
+                            (h.w_write.capacity()
+                                + h.w_read_used.capacity()
+                                + h.read.weights.capacity())
+                                * 4
+                                + h.read.sims.capacity() * 12
+                                + h.read.rows.capacity() * 8
+                                + (h.write_word.capacity() + h.query.capacity()) * 4
+                        })
+                        .sum::<usize>()
+            })
+            .sum();
+        step + self.ctrl.cache_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::grad_check::*;
+
+    fn small_cfg(seed: u64) -> CoreConfig {
+        CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 10,
+            heads: 2,
+            word: 6,
+            mem_words: 12,
+            seed,
+            ..CoreConfig::default()
+        }
+    }
+
+    #[test]
+    fn gradients_match_fd() {
+        let mut rng = Rng::new(13);
+        let mut core = DamCore::new(&small_cfg(13), &mut rng);
+        let (xs, ts) = random_episode(4, 3, 5, &mut rng);
+        let (checked, failed) =
+            check_core_gradients(&mut core, &xs, &ts, &mut rng, 6, 1e-2, 0.2);
+        assert!(checked >= 30);
+        // argmin-usage flips can perturb a few coordinates.
+        assert!(failed * 10 <= checked, "{failed}/{checked} failed");
+    }
+
+    #[test]
+    fn memory_restored_after_backward() {
+        let mut rng = Rng::new(14);
+        let mut core = DamCore::new(&small_cfg(14), &mut rng);
+        core.reset();
+        let start = core.mem.snapshot();
+        let (xs, ts) = random_episode(4, 3, 4, &mut rng);
+        let mut dys = Vec::new();
+        for (x, t) in xs.iter().zip(&ts) {
+            let y = core.forward(x);
+            dys.push(crate::nn::loss::sigmoid_xent(&y, t).1);
+        }
+        for dy in dys.iter().rev() {
+            core.backward(dy);
+        }
+        assert_eq!(core.mem.snapshot(), start);
+    }
+
+    #[test]
+    fn tape_grows_linearly_with_n() {
+        // The dense model's BPTT tape must scale with memory size (the
+        // pathology SAM removes).
+        let mut sizes = Vec::new();
+        for &n in &[16usize, 64] {
+            let mut rng = Rng::new(15);
+            let cfg = CoreConfig { mem_words: n, ..small_cfg(15) };
+            let mut core = DamCore::new(&cfg, &mut rng);
+            core.reset();
+            let (xs, _) = random_episode(4, 3, 6, &mut rng);
+            for x in &xs {
+                core.forward(x);
+            }
+            sizes.push(core.tape_bytes());
+            core.rollback();
+        }
+        assert!(sizes[1] as f64 > 2.5 * sizes[0] as f64, "{sizes:?}");
+    }
+}

@@ -1,0 +1,508 @@
+//! Differentiable Neural Computer (Graves et al. 2016) — dense temporal
+//! linkage baseline for the SDNC (Supp D).
+//!
+//! Reads mix three modes per head (3-way softmax): content lookup,
+//! following the temporal link matrix forward (f = L·w^r_{t-1}) and
+//! backward (b = Lᵀ·w^r_{t-1}). The linkage L ∈ [0,1]^{N×N} and precedence
+//! p are updated densely per step (eq. 11/13) — the O(N²) time and O(N²·T)
+//! BPTT-space costs that Fig 7 measures against the SDNC.
+//!
+//! Writes use the same usage-interpolation scheme as DAM (the paper's SDNC
+//! "used the same usage tracking as in SAM"; our dense DNC mirrors that
+//! with the dense U⁽¹⁾ tracker). As in the paper's SDNC, gradients are not
+//! passed through the linkage construction (Supp D.1), but do flow through
+//! the read mixture into w^r_{t-1}, queries and memory.
+
+use super::addressing::{content_weights, content_weights_backward, ContentRead};
+use super::{Controller, Core, CoreConfig};
+use crate::memory::store::MemoryStore;
+use crate::memory::usage::DiscountedUsage;
+use crate::nn::act::{dsigmoid, sigmoid};
+use crate::nn::param::{HasParams, Param};
+use crate::tensor::matrix::{dot, softmax_backward, softmax_inplace, Matrix};
+use crate::util::rng::Rng;
+
+/// Head params: [q(W), a(W), α̂, γ̂, β̂, mode(3)] — modes (backward, content, forward).
+const fn head_dim(word: usize) -> usize {
+    2 * word + 6
+}
+
+struct HeadStep {
+    // write
+    w_write: Vec<f32>,
+    alpha: f32,
+    gamma: f32,
+    lra_row: usize,
+    write_word: Vec<f32>,
+    // read
+    read: ContentRead,
+    query: Vec<f32>,
+    modes: Vec<f32>, // softmaxed (3)
+    fwd: Vec<f32>,
+    bwd: Vec<f32>,
+    w_read: Vec<f32>,
+    w_read_used: Vec<f32>,
+}
+
+struct DncStep {
+    mem_before: Vec<f32>,
+    /// L_t snapshot — needed to route read gradients; O(N²) per step.
+    link: Matrix,
+    heads: Vec<HeadStep>,
+}
+
+pub struct DncCore {
+    cfg: CoreConfig,
+    ctrl: Controller,
+    mem: MemoryStore,
+    usage: DiscountedUsage,
+    link: Matrix,
+    precedence: Vec<f32>,
+    w_read_prev: Vec<Vec<f32>>,
+    r_prev: Vec<Vec<f32>>,
+    tape: Vec<DncStep>,
+    d_r: Vec<Vec<f32>>,
+    d_wread: Vec<Vec<f32>>,
+    dmem: Matrix,
+}
+
+impl DncCore {
+    pub fn new(cfg: &CoreConfig, rng: &mut Rng) -> DncCore {
+        let mut rng = Rng::new(cfg.seed ^ rng.next_u64());
+        let ctrl = Controller::new(
+            "dnc",
+            cfg.x_dim,
+            cfg.y_dim,
+            cfg.hidden,
+            cfg.heads,
+            cfg.word,
+            head_dim(cfg.word),
+            &mut rng,
+        );
+        let n = cfg.mem_words;
+        DncCore {
+            ctrl,
+            mem: MemoryStore::zeros(n, cfg.word),
+            usage: DiscountedUsage::new(n, cfg.lambda),
+            link: Matrix::zeros(n, n),
+            precedence: vec![0.0; n],
+            w_read_prev: vec![vec![0.0; n]; cfg.heads],
+            r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
+            tape: Vec::new(),
+            d_r: vec![vec![0.0; cfg.word]; cfg.heads],
+            d_wread: vec![vec![0.0; n]; cfg.heads],
+            dmem: Matrix::zeros(n, cfg.word),
+            cfg: cfg.clone(),
+        }
+    }
+}
+
+impl HasParams for DncCore {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.ctrl.visit_params(f);
+    }
+}
+
+impl Core for DncCore {
+    fn name(&self) -> &'static str {
+        "dnc"
+    }
+
+    fn reset(&mut self) {
+        self.ctrl.reset();
+        self.tape.clear();
+        self.mem.fill(0.0);
+        self.usage.reset();
+        self.link.fill(0.0);
+        self.precedence.iter_mut().for_each(|x| *x = 0.0);
+        for v in &mut self.w_read_prev {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.d_r {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for v in &mut self.d_wread {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.dmem.fill(0.0);
+    }
+
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let (h, p) = self.ctrl.step(x, &self.r_prev);
+        let mem_before = self.mem.snapshot();
+        self.usage.u.iter_mut().for_each(|u| *u *= self.usage.lambda);
+        let mut heads = Vec::with_capacity(self.cfg.heads);
+
+        // --- writes (DAM-style dense interpolation, eq. 5) ---
+        let mut w_agg = vec![0.0f32; n];
+        for hi in 0..self.cfg.heads {
+            let ph = &p[hi * hd..(hi + 1) * hd];
+            let a = &ph[w..2 * w];
+            let alpha = sigmoid(ph[2 * w]);
+            let gamma = sigmoid(ph[2 * w + 1]);
+            let lra_row = self.usage.argmin();
+            let mut w_write = vec![0.0f32; n];
+            for i in 0..n {
+                w_write[i] = alpha * gamma * self.w_read_prev[hi][i];
+            }
+            w_write[lra_row] += alpha * (1.0 - gamma);
+            self.mem.row_mut(lra_row).iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..n {
+                let wv = w_write[i];
+                if wv != 0.0 {
+                    let row = self.mem.row_mut(i);
+                    for (m, &av) in row.iter_mut().zip(a) {
+                        *m += wv * av;
+                    }
+                }
+            }
+            for i in 0..n {
+                self.usage.u[i] += w_write[i];
+                w_agg[i] += w_write[i];
+            }
+            heads.push(HeadStep {
+                w_write,
+                alpha,
+                gamma,
+                lra_row,
+                write_word: a.to_vec(),
+                read: ContentRead { rows: vec![], sims: vec![], weights: vec![], beta: 0.0, beta_raw: 0.0 },
+                query: vec![],
+                modes: vec![],
+                fwd: vec![],
+                bwd: vec![],
+                w_read: vec![],
+                w_read_used: self.w_read_prev[hi].clone(),
+            });
+        }
+
+        // --- temporal linkage update (eq. 11, 13): dense O(N²) ---
+        let s: f32 = w_agg.iter().sum();
+        if s > 1.0 {
+            w_agg.iter_mut().for_each(|x| *x /= s);
+        }
+        let p_prev = self.precedence.clone();
+        for i in 0..n {
+            let wi = w_agg[i];
+            let lrow = self.link.row_mut(i);
+            for j in 0..n {
+                if i == j {
+                    lrow[j] = 0.0;
+                } else {
+                    lrow[j] = (1.0 - wi - w_agg[j]) * lrow[j] + wi * p_prev[j];
+                }
+            }
+        }
+        let sum_w: f32 = w_agg.iter().sum();
+        for i in 0..n {
+            self.precedence[i] = (1.0 - sum_w) * p_prev[i] + w_agg[i];
+        }
+
+        // --- reads: 3-way mode mix over content / forward / backward ---
+        let mut reads = Vec::with_capacity(self.cfg.heads);
+        for hi in 0..self.cfg.heads {
+            let ph = &p[hi * hd..(hi + 1) * hd];
+            let query = ph[..w].to_vec();
+            let beta_raw = ph[2 * w + 2];
+            let mut modes = ph[2 * w + 3..2 * w + 6].to_vec();
+            softmax_inplace(&mut modes);
+            let read = content_weights(&query, beta_raw, &self.mem, (0..n).collect());
+            // f = L w_prev, b = Lᵀ w_prev (eq. 15/16)
+            let wp = &self.w_read_prev[hi];
+            let mut fwd = vec![0.0f32; n];
+            let mut bwd = vec![0.0f32; n];
+            for i in 0..n {
+                fwd[i] = dot(self.link.row(i), wp);
+            }
+            for j in 0..n {
+                // bwd = Lᵀ wp
+                let lrow = self.link.row(j);
+                let wj = wp[j];
+                if wj != 0.0 {
+                    for i in 0..n {
+                        bwd[i] += lrow[i] * wj;
+                    }
+                }
+            }
+            let mut w_read = vec![0.0f32; n];
+            for i in 0..n {
+                w_read[i] = modes[0] * bwd[i] + modes[1] * read.weights[i] + modes[2] * fwd[i];
+            }
+            let mut r = vec![0.0; w];
+            self.mem.read_dense(&w_read, &mut r);
+            for i in 0..n {
+                self.usage.u[i] += w_read[i];
+            }
+            let hstep = &mut heads[hi];
+            hstep.read = read;
+            hstep.query = query;
+            hstep.modes = modes;
+            hstep.fwd = fwd;
+            hstep.bwd = bwd;
+            hstep.w_read = w_read.clone();
+            self.w_read_prev[hi] = w_read;
+            reads.push(r);
+        }
+
+        let y = self.ctrl.output(&h, &reads);
+        self.r_prev = reads;
+        self.tape.push(DncStep { mem_before, link: self.link.clone(), heads });
+        y
+    }
+
+    fn backward(&mut self, dy: &[f32]) {
+        let step = self.tape.pop().expect("backward without forward");
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let (dh, dreads) = self.ctrl.backward_output(dy);
+        let mut dp = vec![0.0f32; self.cfg.heads * hd];
+
+        // --- read backward (memory = M_t, linkage = L_t from the tape) ---
+        for (hi, hstep) in step.heads.iter().enumerate() {
+            let mut dr = dreads[hi].clone();
+            for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
+                *a += b;
+            }
+            // r = Σ w_read(i) M_t(i); w_read also feeds t+1 (write gate +
+            // linkage reads), whose gradient arrived in d_wread.
+            let mut dw_read = vec![0.0f32; n];
+            for i in 0..n {
+                dw_read[i] = dot(self.mem.row(i), &dr) + self.d_wread[hi][i];
+                let wv = hstep.w_read[i];
+                if wv != 0.0 {
+                    let row = self.dmem.row_mut(i);
+                    for (g, &d) in row.iter_mut().zip(&dr) {
+                        *g += wv * d;
+                    }
+                }
+            }
+            // mode mixture backward
+            let mut dmodes = vec![0.0f32; 3];
+            let mut dwc = vec![0.0f32; n];
+            let mut dfwd = vec![0.0f32; n];
+            let mut dbwd = vec![0.0f32; n];
+            for i in 0..n {
+                dmodes[0] += dw_read[i] * hstep.bwd[i];
+                dmodes[1] += dw_read[i] * hstep.read.weights[i];
+                dmodes[2] += dw_read[i] * hstep.fwd[i];
+                dbwd[i] = dw_read[i] * hstep.modes[0];
+                dwc[i] = dw_read[i] * hstep.modes[1];
+                dfwd[i] = dw_read[i] * hstep.modes[2];
+            }
+            let mut dmode_logits = vec![0.0f32; 3];
+            softmax_backward(&hstep.modes, &dmodes, &mut dmode_logits);
+            let ph = &mut dp[hi * hd..(hi + 1) * hd];
+            for k in 0..3 {
+                ph[2 * w + 3 + k] += dmode_logits[k];
+            }
+            // f = L wp → dwp += Lᵀ dfwd; b = Lᵀ wp → dwp += L dbwd.
+            // (No gradient through L itself, per Supp D.1.)
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for i in 0..n {
+                    acc += step.link.get(i, j) * dfwd[i];
+                }
+                acc += dot(step.link.row(j), &dbwd);
+                self.d_wread[hi][j] = acc; // overwritten below by write-gate term
+            }
+            // content backward
+            let mut dq = vec![0.0f32; w];
+            let mut dbeta_raw = 0.0f32;
+            let dmem_ref = &mut self.dmem;
+            content_weights_backward(
+                &hstep.read,
+                &hstep.query,
+                &self.mem,
+                &dwc,
+                &mut dq,
+                &mut dbeta_raw,
+                |row, d| {
+                    let r = dmem_ref.row_mut(row);
+                    for (g, &x) in r.iter_mut().zip(d) {
+                        *g += x;
+                    }
+                },
+            );
+            ph[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
+            ph[2 * w + 2] += dbeta_raw;
+        }
+
+        // --- write backward (reverse head order) ---
+        for hi in (0..self.cfg.heads).rev() {
+            let hstep = &step.heads[hi];
+            let mut da = vec![0.0f32; w];
+            let mut dw = vec![0.0f32; n];
+            for i in 0..n {
+                let wv = hstep.w_write[i];
+                let drow = self.dmem.row(i);
+                if wv != 0.0 {
+                    for (daj, &dj) in da.iter_mut().zip(drow) {
+                        *daj += wv * dj;
+                    }
+                }
+                dw[i] = dot(&hstep.write_word, drow);
+            }
+            self.dmem.row_mut(hstep.lra_row).iter_mut().for_each(|v| *v = 0.0);
+            let (a, g) = (hstep.alpha, hstep.gamma);
+            let mut dalpha = 0.0f32;
+            let mut dgamma = 0.0f32;
+            for i in 0..n {
+                let e_u = if i == hstep.lra_row { 1.0 } else { 0.0 };
+                dalpha += dw[i] * (g * hstep.w_read_used[i] + (1.0 - g) * e_u);
+                dgamma += dw[i] * a * (hstep.w_read_used[i] - e_u);
+                // w_read_prev feeds both the write gate AND next step's
+                // linkage reads; the linkage part was set above (at t+1's
+                // backward), so accumulate here.
+                self.d_wread[hi][i] += dw[i] * a * g;
+            }
+            let ph = &mut dp[hi * hd..(hi + 1) * hd];
+            ph[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
+            ph[2 * w] += dalpha * dsigmoid(a);
+            ph[2 * w + 1] += dgamma * dsigmoid(g);
+        }
+
+        self.mem.restore(&step.mem_before);
+        self.link = step.link; // becomes L_t; L_{t-1} is on the next tape entry
+        let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
+        self.d_r = dr_prev;
+    }
+
+    fn rollback(&mut self) {
+        if let Some(first) = self.tape.first() {
+            let m = first.mem_before.clone();
+            self.mem.restore(&m);
+        }
+        self.tape.clear();
+    }
+
+    fn end_episode(&mut self) {}
+
+    fn x_dim(&self) -> usize {
+        self.cfg.x_dim
+    }
+
+    fn y_dim(&self) -> usize {
+        self.cfg.y_dim
+    }
+
+    fn tape_bytes(&self) -> usize {
+        let step: usize = self
+            .tape
+            .iter()
+            .map(|s| {
+                s.mem_before.capacity() * 4
+                    + s.link.data.capacity() * 4
+                    + s.heads
+                        .iter()
+                        .map(|h| {
+                            (h.w_write.capacity()
+                                + h.write_word.capacity()
+                                + h.read.weights.capacity()
+                                + h.query.capacity()
+                                + h.fwd.capacity()
+                                + h.bwd.capacity()
+                                + h.w_read.capacity()
+                                + h.w_read_used.capacity())
+                                * 4
+                                + h.read.sims.capacity() * 12
+                                + h.read.rows.capacity() * 8
+                        })
+                        .sum::<usize>()
+            })
+            .sum();
+        step + self.ctrl.cache_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::grad_check::*;
+
+    fn small_cfg(seed: u64) -> CoreConfig {
+        CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 10,
+            heads: 2,
+            word: 5,
+            mem_words: 8,
+            seed,
+            ..CoreConfig::default()
+        }
+    }
+
+    #[test]
+    fn gradients_match_fd() {
+        let mut rng = Rng::new(33);
+        let mut core = DncCore::new(&small_cfg(33), &mut rng);
+        let (xs, ts) = random_episode(4, 3, 4, &mut rng);
+        let (checked, failed) =
+            check_core_gradients(&mut core, &xs, &ts, &mut rng, 6, 1e-2, 0.25);
+        assert!(checked >= 30);
+        assert!(failed * 10 <= checked, "{failed}/{checked} failed");
+    }
+
+    #[test]
+    fn linkage_diag_zero_and_bounded() {
+        let mut rng = Rng::new(34);
+        let mut core = DncCore::new(&small_cfg(34), &mut rng);
+        core.reset();
+        for _ in 0..6 {
+            core.forward(&[1.0, 0.0, 1.0, 0.0]);
+        }
+        for i in 0..8 {
+            assert_eq!(core.link.get(i, i), 0.0);
+            for j in 0..8 {
+                let v = core.link.get(i, j);
+                assert!((-0.01..=1.01).contains(&v), "L[{i},{j}]={v}");
+            }
+        }
+        core.rollback();
+    }
+
+    #[test]
+    fn memory_restored_after_backward() {
+        let mut rng = Rng::new(35);
+        let mut core = DncCore::new(&small_cfg(35), &mut rng);
+        core.reset();
+        let start = core.mem.snapshot();
+        let (xs, ts) = random_episode(4, 3, 3, &mut rng);
+        let mut dys = Vec::new();
+        for (x, t) in xs.iter().zip(&ts) {
+            let y = core.forward(x);
+            dys.push(crate::nn::loss::sigmoid_xent(&y, t).1);
+        }
+        for dy in dys.iter().rev() {
+            core.backward(dy);
+        }
+        assert_eq!(core.mem.snapshot(), start);
+    }
+
+    #[test]
+    fn tape_grows_quadratically_with_n() {
+        let mut sizes = Vec::new();
+        for &n in &[16usize, 64] {
+            let mut rng = Rng::new(36);
+            let cfg = CoreConfig { mem_words: n, ..small_cfg(36) };
+            let mut core = DncCore::new(&cfg, &mut rng);
+            core.reset();
+            let (xs, _) = random_episode(4, 3, 4, &mut rng);
+            for x in &xs {
+                core.forward(x);
+            }
+            sizes.push(core.tape_bytes());
+            core.rollback();
+        }
+        // 4x memory words -> ~16x linkage bytes; require at least 4x total
+        // (controller caches dilute the pure-linkage ratio at tiny N).
+        assert!(sizes[1] as f64 > 4.0 * sizes[0] as f64, "{sizes:?}");
+    }
+}

@@ -1,0 +1,112 @@
+//! Plain LSTM baseline (no external memory) — the paper's weakest baseline.
+//! Uses the same controller width and output projection as the MANNs so the
+//! comparison isolates the memory.
+
+use super::{Core, CoreConfig};
+use crate::nn::linear::Linear;
+use crate::nn::lstm::Lstm;
+use crate::nn::param::{HasParams, Param};
+use crate::util::rng::Rng;
+
+pub struct LstmCore {
+    lstm: Lstm,
+    out: Linear,
+    x_dim: usize,
+    y_dim: usize,
+    steps: usize,
+}
+
+impl LstmCore {
+    pub fn new(cfg: &CoreConfig, rng: &mut Rng) -> LstmCore {
+        let mut rng = Rng::new(cfg.seed ^ rng.next_u64());
+        LstmCore {
+            lstm: Lstm::new("lstm", cfg.x_dim, cfg.hidden, &mut rng),
+            out: Linear::new("lstm.out", cfg.hidden, cfg.y_dim, &mut rng),
+            x_dim: cfg.x_dim,
+            y_dim: cfg.y_dim,
+            steps: 0,
+        }
+    }
+}
+
+impl HasParams for LstmCore {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.lstm.visit_params(f);
+        self.out.visit_params(f);
+    }
+}
+
+impl Core for LstmCore {
+    fn name(&self) -> &'static str {
+        "lstm"
+    }
+
+    fn reset(&mut self) {
+        self.lstm.reset();
+        self.out.clear_cache();
+        self.steps = 0;
+    }
+
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        self.steps += 1;
+        let h = self.lstm.step(x);
+        self.out.forward(&h)
+    }
+
+    fn backward(&mut self, dy: &[f32]) {
+        let dh = self.out.backward(dy);
+        self.lstm.backward(&dh);
+        self.steps -= 1;
+    }
+
+    fn rollback(&mut self) {
+        self.reset();
+    }
+
+    fn end_episode(&mut self) {}
+
+    fn x_dim(&self) -> usize {
+        self.x_dim
+    }
+
+    fn y_dim(&self) -> usize {
+        self.y_dim
+    }
+
+    fn tape_bytes(&self) -> usize {
+        self.lstm.cache_bytes() + self.out.cache_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::grad_check::*;
+
+    #[test]
+    fn gradients_match_fd() {
+        let cfg = CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 8,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(42);
+        let mut core = LstmCore::new(&cfg, &mut rng);
+        let (xs, ts) = random_episode(4, 3, 6, &mut rng);
+        let (checked, failed) =
+            check_core_gradients(&mut core, &xs, &ts, &mut rng, 8, 1e-2, 0.15);
+        assert!(checked >= 30);
+        assert_eq!(failed, 0, "{failed}/{checked} gradient checks failed");
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let cfg = CoreConfig { x_dim: 5, y_dim: 2, hidden: 8, ..CoreConfig::default() };
+        let mut rng = Rng::new(1);
+        let mut core = LstmCore::new(&cfg, &mut rng);
+        core.reset();
+        let y = core.forward(&[1.0, 0.0, 1.0, 0.0, 1.0]);
+        assert_eq!(y.len(), 2);
+    }
+}

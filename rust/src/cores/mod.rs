@@ -1,0 +1,366 @@
+//! The model cores: LSTM baseline, NTM, DAM, SAM, DNC and SDNC — each a
+//! recurrent cell with explicit forward/backward over an episode tape.
+//!
+//! Control flow (paper §3.3, Supp Fig 6): at each step the controller LSTM
+//! receives [x_t, r_{t-1}] and emits head parameters p_t through a linear
+//! layer; the memory is written then read; the output is a linear function
+//! of [h_t, r_t].
+
+pub mod addressing;
+pub mod dam;
+pub mod dnc;
+pub mod lstm_core;
+pub mod ntm;
+pub mod sam;
+pub mod sdnc;
+
+use crate::ann::AnnKind;
+use crate::nn::linear::Linear;
+use crate::nn::lstm::Lstm;
+use crate::nn::param::{HasParams, Param};
+use crate::util::rng::Rng;
+
+/// Which model to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreKind {
+    Lstm,
+    Ntm,
+    Dam,
+    Sam,
+    Dnc,
+    Sdnc,
+}
+
+impl std::str::FromStr for CoreKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "lstm" => Ok(CoreKind::Lstm),
+            "ntm" => Ok(CoreKind::Ntm),
+            "dam" => Ok(CoreKind::Dam),
+            "sam" => Ok(CoreKind::Sam),
+            "dnc" => Ok(CoreKind::Dnc),
+            "sdnc" => Ok(CoreKind::Sdnc),
+            other => Err(format!("unknown core {other:?} (lstm|ntm|dam|sam|dnc|sdnc)")),
+        }
+    }
+}
+
+impl CoreKind {
+    pub fn all() -> [CoreKind; 6] {
+        [CoreKind::Lstm, CoreKind::Ntm, CoreKind::Dam, CoreKind::Sam, CoreKind::Dnc, CoreKind::Sdnc]
+    }
+}
+
+/// Hyper-parameters shared by every core (paper Supp C / E defaults).
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    pub x_dim: usize,
+    pub y_dim: usize,
+    /// Controller LSTM width (paper: 100).
+    pub hidden: usize,
+    /// Access heads (paper: 4).
+    pub heads: usize,
+    /// Memory word size (paper: 32).
+    pub word: usize,
+    /// Memory words N.
+    pub mem_words: usize,
+    /// Sparse reads per head (paper: K = 4).
+    pub k: usize,
+    /// ANN backend for SAM/SDNC.
+    pub ann: AnnKind,
+    /// Usage threshold δ (paper: 0.005).
+    pub delta: f32,
+    /// DAM usage discount λ.
+    pub lambda: f32,
+    /// SDNC temporal-link row truncation K_L (paper: 8).
+    pub k_l: usize,
+    pub seed: u64,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        CoreConfig {
+            x_dim: 8,
+            y_dim: 8,
+            hidden: 100,
+            heads: 4,
+            word: 32,
+            mem_words: 128,
+            k: 4,
+            ann: AnnKind::Linear,
+            delta: 0.005,
+            lambda: 0.99,
+            k_l: 8,
+            seed: 1,
+        }
+    }
+}
+
+/// A recurrent model trained with explicit BPTT:
+/// `reset` → T × `forward` → T × `backward` (reverse order) → `end_episode`.
+pub trait Core: HasParams + Send {
+    fn name(&self) -> &'static str;
+
+    /// Start a new episode (clears recurrent state and the tape).
+    fn reset(&mut self);
+
+    /// One step forward; records what backward needs on an internal tape.
+    fn forward(&mut self, x: &[f32]) -> Vec<f32>;
+
+    /// One step backward (call once per forward, in reverse order),
+    /// accumulating parameter gradients.
+    fn backward(&mut self, dy: &[f32]);
+
+    /// Discard the remaining tape without computing gradients, rolling any
+    /// in-place memory state back (used after eval-only episodes).
+    fn rollback(&mut self);
+
+    /// Called after the last `backward` of an episode (memory rolled back):
+    /// re-synchronize auxiliary structures (ANN, usage ring).
+    fn end_episode(&mut self);
+
+    fn x_dim(&self) -> usize;
+    fn y_dim(&self) -> usize;
+
+    /// Bytes of BPTT state currently held for the episode (the Fig 1b
+    /// quantity: what grows with sequence length).
+    fn tape_bytes(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// Shared controller plumbing
+// ---------------------------------------------------------------------------
+
+/// LSTM controller + head-parameter projection + output projection, shared
+/// by all memory cores.
+pub struct Controller {
+    pub lstm: Lstm,
+    /// h → heads × head_dim raw parameters.
+    pub head_lin: Linear,
+    /// [h, r_1..r_R] → y.
+    pub out_lin: Linear,
+    pub heads: usize,
+    pub word: usize,
+    pub head_dim: usize,
+    hidden: usize,
+}
+
+impl Controller {
+    pub fn new(
+        name: &str,
+        x_dim: usize,
+        y_dim: usize,
+        hidden: usize,
+        heads: usize,
+        word: usize,
+        head_dim: usize,
+        rng: &mut Rng,
+    ) -> Controller {
+        Controller {
+            lstm: Lstm::new(&format!("{name}.lstm"), x_dim + heads * word, hidden, rng),
+            head_lin: Linear::new(&format!("{name}.heads"), hidden, heads * head_dim, rng),
+            out_lin: Linear::new(&format!("{name}.out"), hidden + heads * word, y_dim, rng),
+            heads,
+            word,
+            head_dim,
+            hidden,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.lstm.reset();
+        self.head_lin.clear_cache();
+        self.out_lin.clear_cache();
+    }
+
+    /// Controller step: consume x_t and the previous reads, produce
+    /// (h_t, per-head raw params).
+    pub fn step(&mut self, x: &[f32], r_prev: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+        let mut x_in = Vec::with_capacity(x.len() + self.heads * self.word);
+        x_in.extend_from_slice(x);
+        for r in r_prev {
+            x_in.extend_from_slice(r);
+        }
+        let h = self.lstm.step(&x_in);
+        let p = self.head_lin.forward(&h);
+        (h, p)
+    }
+
+    /// Final output y_t = W_out [h_t, r_t..].
+    pub fn output(&mut self, h: &[f32], reads: &[Vec<f32>]) -> Vec<f32> {
+        let mut o_in = Vec::with_capacity(h.len() + self.heads * self.word);
+        o_in.extend_from_slice(h);
+        for r in reads {
+            o_in.extend_from_slice(r);
+        }
+        self.out_lin.forward(&o_in)
+    }
+
+    /// Backward of `output`: returns (dh, dreads-per-head).
+    pub fn backward_output(&mut self, dy: &[f32]) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let d = self.out_lin.backward(dy);
+        let dh = d[..self.hidden].to_vec();
+        let dreads = (0..self.heads)
+            .map(|hd| {
+                d[self.hidden + hd * self.word..self.hidden + (hd + 1) * self.word].to_vec()
+            })
+            .collect();
+        (dh, dreads)
+    }
+
+    /// Backward of `step`: `dh` is the total gradient on h_t, `dp` on the
+    /// raw head params. Returns (dx, d_r_prev per head).
+    pub fn backward_step(&mut self, dh: &[f32], dp: &[f32]) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let mut dh_total = self.head_lin.backward(dp);
+        for (a, b) in dh_total.iter_mut().zip(dh) {
+            *a += b;
+        }
+        let dx_in = self.lstm.backward(&dh_total);
+        let x_dim = dx_in.len() - self.heads * self.word;
+        let dx = dx_in[..x_dim].to_vec();
+        let dr = (0..self.heads)
+            .map(|hd| {
+                dx_in[x_dim + hd * self.word..x_dim + (hd + 1) * self.word].to_vec()
+            })
+            .collect();
+        (dx, dr)
+    }
+
+    pub fn cache_bytes(&self) -> usize {
+        self.lstm.cache_bytes() + self.head_lin.cache_bytes() + self.out_lin.cache_bytes()
+    }
+}
+
+impl HasParams for Controller {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.lstm.visit_params(f);
+        self.head_lin.visit_params(f);
+        self.out_lin.visit_params(f);
+    }
+}
+
+/// Build a core of the requested kind.
+pub fn build_core(kind: CoreKind, cfg: &CoreConfig, rng: &mut Rng) -> Box<dyn Core> {
+    match kind {
+        CoreKind::Lstm => Box::new(lstm_core::LstmCore::new(cfg, rng)),
+        CoreKind::Ntm => Box::new(ntm::NtmCore::new(cfg, rng)),
+        CoreKind::Dam => Box::new(dam::DamCore::new(cfg, rng)),
+        CoreKind::Sam => Box::new(sam::SamCore::new(cfg, rng)),
+        CoreKind::Dnc => Box::new(dnc::DncCore::new(cfg, rng)),
+        CoreKind::Sdnc => Box::new(sdnc::SdncCore::new(cfg, rng)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod grad_check {
+    //! Shared finite-difference gradient checker for cores. Discrete
+    //! structure (top-K selection, LRA argmin) can flip under perturbation,
+    //! so the checker requires a high fraction of sampled coordinates to
+    //! agree rather than all of them.
+
+    use super::*;
+    use crate::nn::loss::sigmoid_xent;
+
+    /// Episode loss: Σ_t sigmoid-xent(y_t, targets_t).
+    pub fn episode_loss(core: &mut dyn Core, xs: &[Vec<f32>], ts: &[Vec<f32>]) -> f32 {
+        core.reset();
+        let mut loss = 0.0;
+        for (x, t) in xs.iter().zip(ts) {
+            let y = core.forward(x);
+            loss += sigmoid_xent(&y, t).0;
+        }
+        core.rollback();
+        core.end_episode();
+        loss
+    }
+
+    /// Run fwd+bwd, then FD-check `samples_per_param` coords of every param.
+    /// Returns (checked, failed) counts.
+    pub fn check_core_gradients(
+        core: &mut dyn Core,
+        xs: &[Vec<f32>],
+        ts: &[Vec<f32>],
+        rng: &mut Rng,
+        samples_per_param: usize,
+        eps: f32,
+        tol_rel: f32,
+    ) -> (usize, usize) {
+        // Analytic gradients.
+        core.zero_grads();
+        core.reset();
+        let mut dys = Vec::new();
+        for (x, t) in xs.iter().zip(ts) {
+            let y = core.forward(x);
+            dys.push(sigmoid_xent(&y, t).1);
+        }
+        for dy in dys.iter().rev() {
+            core.backward(dy);
+        }
+        core.end_episode();
+
+        // Collect (param index, coord, analytic grad) samples.
+        let mut samples: Vec<(usize, usize, f32)> = Vec::new();
+        {
+            let mut pi = 0;
+            core.visit_params(&mut |p| {
+                for _ in 0..samples_per_param.min(p.len()) {
+                    let k = rng.below(p.len());
+                    samples.push((pi, k, p.g.data[k]));
+                }
+                pi += 1;
+            });
+        }
+
+        let mut failed = 0;
+        for &(pi, k, an) in &samples {
+            let mut orig = 0.0;
+            let mut idx = 0;
+            core.visit_params(&mut |p| {
+                if idx == pi {
+                    orig = p.w.data[k];
+                    p.w.data[k] = orig + eps;
+                }
+                idx += 1;
+            });
+            let lp = episode_loss(core, xs, ts);
+            idx = 0;
+            core.visit_params(&mut |p| {
+                if idx == pi {
+                    p.w.data[k] = orig - eps;
+                }
+                idx += 1;
+            });
+            let lm = episode_loss(core, xs, ts);
+            idx = 0;
+            core.visit_params(&mut |p| {
+                if idx == pi {
+                    p.w.data[k] = orig;
+                }
+                idx += 1;
+            });
+            let fd = (lp - lm) / (2.0 * eps);
+            let denom = fd.abs().max(an.abs()).max(0.05);
+            if (fd - an).abs() / denom > tol_rel {
+                failed += 1;
+            }
+        }
+        (samples.len(), failed)
+    }
+
+    /// Deterministic random episode for gradient tests.
+    pub fn random_episode(
+        x_dim: usize,
+        y_dim: usize,
+        t_len: usize,
+        rng: &mut Rng,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let xs = (0..t_len)
+            .map(|_| (0..x_dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let ts = (0..t_len)
+            .map(|_| (0..y_dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+            .collect();
+        (xs, ts)
+    }
+}

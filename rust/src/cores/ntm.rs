@@ -1,0 +1,473 @@
+//! Neural Turing Machine (Graves et al. 2014) — the paper's principal dense
+//! baseline (§2.3, Fig 1/2/3). Full addressing pipeline per head:
+//! content (cosine+β softmax) → interpolation (g) → circular shift (3-way
+//! softmax) → sharpening (γ ≥ 1); reads and erase/add writes share each
+//! head's addressing, as in the paper's "4 access heads" setup.
+//!
+//! Everything is dense: O(N·W) per step per head, with a full memory
+//! snapshot per head-write on the BPTT tape — the scaling pathology the
+//! paper measures in Fig 1.
+
+use super::addressing::{content_weights, content_weights_backward, ContentRead};
+use super::{Controller, Core, CoreConfig};
+use crate::memory::store::MemoryStore;
+use crate::nn::act::{dsigmoid, oneplus, sigmoid};
+use crate::nn::param::{HasParams, Param};
+use crate::tensor::matrix::{dot, softmax_backward, softmax_inplace, Matrix};
+use crate::util::rng::Rng;
+
+/// Head params: [q(W), β̂, ĝ, ŝ(3), γ̂, e(W), a(W)].
+const fn head_dim(word: usize) -> usize {
+    3 * word + 6
+}
+
+const SHARPEN_EPS: f32 = 1e-6;
+
+struct HeadStep {
+    query: Vec<f32>,
+    read: ContentRead,
+    g: f32,
+    shift: Vec<f32>,    // softmaxed (3)
+    gamma_raw: f32,
+    gamma: f32,
+    w_g: Vec<f32>,
+    w_s: Vec<f32>,
+    w_final: Vec<f32>,
+    w_prev_used: Vec<f32>,
+    erase: Vec<f32>,    // σ(ê)
+    add: Vec<f32>,
+    /// Memory snapshot taken *before* this head's write.
+    mem_before_write: Vec<f32>,
+}
+
+struct NtmStep {
+    heads: Vec<HeadStep>,
+}
+
+pub struct NtmCore {
+    cfg: CoreConfig,
+    ctrl: Controller,
+    mem: MemoryStore,
+    w_prev: Vec<Vec<f32>>,
+    r_prev: Vec<Vec<f32>>,
+    tape: Vec<NtmStep>,
+    // carried backward state
+    d_r: Vec<Vec<f32>>,
+    d_wprev: Vec<Vec<f32>>,
+    dmem: Matrix,
+}
+
+impl NtmCore {
+    pub fn new(cfg: &CoreConfig, rng: &mut Rng) -> NtmCore {
+        let mut rng = Rng::new(cfg.seed ^ rng.next_u64());
+        let ctrl = Controller::new(
+            "ntm",
+            cfg.x_dim,
+            cfg.y_dim,
+            cfg.hidden,
+            cfg.heads,
+            cfg.word,
+            head_dim(cfg.word),
+            &mut rng,
+        );
+        let n = cfg.mem_words;
+        NtmCore {
+            ctrl,
+            mem: MemoryStore::zeros(n, cfg.word),
+            w_prev: vec![vec![1.0 / n as f32; n]; cfg.heads],
+            r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
+            tape: Vec::new(),
+            d_r: vec![vec![0.0; cfg.word]; cfg.heads],
+            d_wprev: vec![vec![0.0; n]; cfg.heads],
+            dmem: Matrix::zeros(n, cfg.word),
+            cfg: cfg.clone(),
+        }
+    }
+}
+
+/// w_s(i) = Σ_k s_k · w_g((i - shift_k) mod N), shifts = {-1, 0, +1}.
+fn shift_conv(w_g: &[f32], s: &[f32]) -> Vec<f32> {
+    let n = w_g.len();
+    let mut out = vec![0.0f32; n];
+    for (k, &sk) in s.iter().enumerate() {
+        let shift = k as isize - 1; // -1, 0, +1
+        if sk == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let j = (i as isize - shift).rem_euclid(n as isize) as usize;
+            out[i] += sk * w_g[j];
+        }
+    }
+    out
+}
+
+/// Sharpen: w_i = (u_i+ε)^γ / Σ_j (u_j+ε)^γ. Returns (w, powers, z).
+fn sharpen(u: &[f32], gamma: f32) -> (Vec<f32>, Vec<f32>, f32) {
+    let p: Vec<f32> = u.iter().map(|&x| (x + SHARPEN_EPS).powf(gamma)).collect();
+    let z: f32 = p.iter().sum();
+    let w = p.iter().map(|&x| x / z).collect();
+    (w, p, z)
+}
+
+impl HasParams for NtmCore {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.ctrl.visit_params(f);
+    }
+}
+
+impl Core for NtmCore {
+    fn name(&self) -> &'static str {
+        "ntm"
+    }
+
+    fn reset(&mut self) {
+        self.ctrl.reset();
+        self.tape.clear();
+        self.mem.fill(0.0);
+        let n = self.cfg.mem_words;
+        for v in &mut self.w_prev {
+            v.iter_mut().for_each(|x| *x = 1.0 / n as f32);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.d_r {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for v in &mut self.d_wprev {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.dmem.fill(0.0);
+    }
+
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let (h, p) = self.ctrl.step(x, &self.r_prev);
+        let mut heads = Vec::with_capacity(self.cfg.heads);
+
+        // --- addressing for every head, from M_{t-1} ---
+        for hi in 0..self.cfg.heads {
+            let ph = &p[hi * hd..(hi + 1) * hd];
+            let query = ph[..w].to_vec();
+            let beta_raw = ph[w];
+            let g = sigmoid(ph[w + 1]);
+            let mut shift = ph[w + 2..w + 5].to_vec();
+            softmax_inplace(&mut shift);
+            let gamma_raw = ph[w + 5];
+            let gamma = oneplus(gamma_raw);
+            let erase: Vec<f32> = ph[w + 6..2 * w + 6].iter().map(|&v| sigmoid(v)).collect();
+            let add = ph[2 * w + 6..3 * w + 6].to_vec();
+
+            let read = content_weights(&query, beta_raw, &self.mem, (0..n).collect());
+            let mut w_g = vec![0.0f32; n];
+            for i in 0..n {
+                w_g[i] = g * read.weights[i] + (1.0 - g) * self.w_prev[hi][i];
+            }
+            let w_s = shift_conv(&w_g, &shift);
+            let (w_final, _, _) = sharpen(&w_s, gamma);
+            heads.push(HeadStep {
+                query,
+                read,
+                g,
+                shift,
+                gamma_raw,
+                gamma,
+                w_g,
+                w_s,
+                w_final,
+                w_prev_used: self.w_prev[hi].clone(),
+                erase,
+                add,
+                mem_before_write: Vec::new(),
+            });
+        }
+
+        // --- sequential erase/add writes ---
+        for hstep in heads.iter_mut() {
+            hstep.mem_before_write = self.mem.snapshot();
+            self.mem.apply_write_dense(&hstep.w_final, &hstep.erase, &hstep.add);
+        }
+
+        // --- reads from M_t ---
+        let mut reads = Vec::with_capacity(self.cfg.heads);
+        for (hi, hstep) in heads.iter().enumerate() {
+            let mut r = vec![0.0; w];
+            self.mem.read_dense(&hstep.w_final, &mut r);
+            self.w_prev[hi] = hstep.w_final.clone();
+            reads.push(r);
+        }
+
+        let y = self.ctrl.output(&h, &reads);
+        self.r_prev = reads;
+        self.tape.push(NtmStep { heads });
+        y
+    }
+
+    fn backward(&mut self, dy: &[f32]) {
+        let step = self.tape.pop().expect("backward without forward");
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let (dh, dreads) = self.ctrl.backward_output(dy);
+        let mut dp = vec![0.0f32; self.cfg.heads * hd];
+        // Accumulated gradient on each head's final weights (read + write +
+        // next step's w_prev recurrency).
+        let mut dw_final: Vec<Vec<f32>> = vec![vec![0.0f32; n]; self.cfg.heads];
+
+        // --- read backward (memory = M_t) ---
+        for (hi, hstep) in step.heads.iter().enumerate() {
+            let mut dr = dreads[hi].clone();
+            for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
+                *a += b;
+            }
+            for i in 0..n {
+                dw_final[hi][i] += dot(self.mem.row(i), &dr) + self.d_wprev[hi][i];
+                let wv = hstep.w_final[i];
+                if wv != 0.0 {
+                    let row = self.dmem.row_mut(i);
+                    for (gd, &d) in row.iter_mut().zip(&dr) {
+                        *gd += wv * d;
+                    }
+                }
+            }
+        }
+
+        // --- write backward (reverse head order, restoring memory) ---
+        for hi in (0..self.cfg.heads).rev() {
+            let hstep = &step.heads[hi];
+            // Restore M to the state before this head's write.
+            self.mem.restore(&hstep.mem_before_write);
+            let ph = &mut dp[hi * hd..(hi + 1) * hd];
+            // M'(i,j) = M(i,j)(1 - w_i e_j) + w_i a_j
+            for i in 0..n {
+                let wv = hstep.w_final[i];
+                let mrow = self.mem.row(i);
+                let drow = self.dmem.row_mut(i);
+                let mut dw_i = 0.0f32;
+                for j in 0..w {
+                    let d = drow[j];
+                    dw_i += d * (hstep.add[j] - mrow[j] * hstep.erase[j]);
+                    // de_j and da_j accumulate into head params below.
+                    ph[w + 6 + j] += d * (-mrow[j] * wv) * dsigmoid(hstep.erase[j]);
+                    ph[2 * w + 6 + j] += d * wv;
+                    drow[j] = d * (1.0 - wv * hstep.erase[j]);
+                }
+                dw_final[hi][i] += dw_i;
+            }
+        }
+
+        // --- addressing backward (memory = M_{t-1}) ---
+        for hi in (0..self.cfg.heads).rev() {
+            let hstep = &step.heads[hi];
+            let ph_start = hi * hd;
+            // sharpen backward
+            let (w_sharp, pvec, z) = sharpen(&hstep.w_s, hstep.gamma);
+            debug_assert!(w_sharp
+                .iter()
+                .zip(&hstep.w_final)
+                .all(|(a, b)| (a - b).abs() < 1e-5));
+            let dwf = &dw_final[hi];
+            let dot_dw_w: f32 = dwf.iter().zip(&w_sharp).map(|(a, b)| a * b).sum();
+            let mut dws = vec![0.0f32; n];
+            let mut dgamma = 0.0f32;
+            for i in 0..n {
+                let dp_i = (dwf[i] - dot_dw_w) / z;
+                let u = hstep.w_s[i] + SHARPEN_EPS;
+                dws[i] = dp_i * hstep.gamma * u.powf(hstep.gamma - 1.0);
+                dgamma += dp_i * pvec[i] * u.ln();
+            }
+            dp[ph_start + w + 5] += dgamma * sigmoid(hstep.gamma_raw); // oneplus'
+
+            // shift backward
+            let mut dwg = vec![0.0f32; n];
+            let mut dshift = vec![0.0f32; 3];
+            for (k, &sk) in hstep.shift.iter().enumerate() {
+                let shift = k as isize - 1;
+                for i in 0..n {
+                    let j = (i as isize - shift).rem_euclid(n as isize) as usize;
+                    dwg[j] += sk * dws[i];
+                    dshift[k] += dws[i] * hstep.w_g[j];
+                }
+            }
+            let mut dshift_logits = vec![0.0f32; 3];
+            softmax_backward(&hstep.shift, &dshift, &mut dshift_logits);
+            for k in 0..3 {
+                dp[ph_start + w + 2 + k] += dshift_logits[k];
+            }
+
+            // interpolation backward
+            let mut dwc = vec![0.0f32; n];
+            let mut dg = 0.0f32;
+            for i in 0..n {
+                dg += dwg[i] * (hstep.read.weights[i] - hstep.w_prev_used[i]);
+                dwc[i] = hstep.g * dwg[i];
+                self.d_wprev[hi][i] = (1.0 - hstep.g) * dwg[i];
+            }
+            dp[ph_start + w + 1] += dg * dsigmoid(hstep.g);
+
+            // content backward (over all N rows of M_{t-1})
+            let mut dq = vec![0.0f32; w];
+            let mut dbeta_raw = 0.0f32;
+            let dmem_ref = &mut self.dmem;
+            content_weights_backward(
+                &hstep.read,
+                &hstep.query,
+                &self.mem,
+                &dwc,
+                &mut dq,
+                &mut dbeta_raw,
+                |row, d| {
+                    let r = dmem_ref.row_mut(row);
+                    for (g, &x) in r.iter_mut().zip(d) {
+                        *g += x;
+                    }
+                },
+            );
+            dp[ph_start..ph_start + w]
+                .iter_mut()
+                .zip(&dq)
+                .for_each(|(a, b)| *a += b);
+            dp[ph_start + w] += dbeta_raw;
+        }
+
+        let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
+        self.d_r = dr_prev;
+    }
+
+    fn rollback(&mut self) {
+        if let Some(first) = self.tape.first() {
+            if let Some(h0) = first.heads.first() {
+                let m = h0.mem_before_write.clone();
+                self.mem.restore(&m);
+            }
+        }
+        self.tape.clear();
+    }
+
+    fn end_episode(&mut self) {}
+
+    fn x_dim(&self) -> usize {
+        self.cfg.x_dim
+    }
+
+    fn y_dim(&self) -> usize {
+        self.cfg.y_dim
+    }
+
+    fn tape_bytes(&self) -> usize {
+        let step: usize = self
+            .tape
+            .iter()
+            .map(|s| {
+                s.heads
+                    .iter()
+                    .map(|h| {
+                        (h.mem_before_write.capacity()
+                            + h.w_g.capacity()
+                            + h.w_s.capacity()
+                            + h.w_final.capacity()
+                            + h.w_prev_used.capacity()
+                            + h.read.weights.capacity()
+                            + h.query.capacity()
+                            + h.erase.capacity()
+                            + h.add.capacity())
+                            * 4
+                            + h.read.sims.capacity() * 12
+                            + h.read.rows.capacity() * 8
+                    })
+                    .sum::<usize>()
+            })
+            .sum();
+        step + self.ctrl.cache_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::grad_check::*;
+
+    fn small_cfg(seed: u64) -> CoreConfig {
+        CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 10,
+            heads: 2,
+            word: 5,
+            mem_words: 10,
+            seed,
+            ..CoreConfig::default()
+        }
+    }
+
+    #[test]
+    fn shift_conv_rotates() {
+        let w = vec![1.0, 0.0, 0.0, 0.0];
+        // pure +1 shift
+        let out = shift_conv(&w, &[0.0, 0.0, 1.0]);
+        assert_eq!(out, vec![0.0, 1.0, 0.0, 0.0]);
+        // pure -1 shift
+        let out = shift_conv(&w, &[1.0, 0.0, 0.0]);
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 1.0]);
+        // identity
+        let out = shift_conv(&w, &[0.0, 1.0, 0.0]);
+        assert_eq!(out, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn sharpen_normalizes_and_peaks() {
+        let u = vec![0.6, 0.3, 0.1];
+        let (w, _, _) = sharpen(&u, 2.0);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(w[0] > u[0]); // sharpening concentrates mass
+    }
+
+    #[test]
+    fn gradients_match_fd() {
+        let mut rng = Rng::new(23);
+        let mut core = NtmCore::new(&small_cfg(23), &mut rng);
+        let (xs, ts) = random_episode(4, 3, 4, &mut rng);
+        let (checked, failed) =
+            check_core_gradients(&mut core, &xs, &ts, &mut rng, 6, 1e-2, 0.2);
+        assert!(checked >= 30);
+        assert!(failed * 10 <= checked, "{failed}/{checked} failed");
+    }
+
+    #[test]
+    fn memory_restored_after_backward() {
+        let mut rng = Rng::new(24);
+        let mut core = NtmCore::new(&small_cfg(24), &mut rng);
+        core.reset();
+        let start = core.mem.snapshot();
+        let (xs, ts) = random_episode(4, 3, 4, &mut rng);
+        let mut dys = Vec::new();
+        for (x, t) in xs.iter().zip(&ts) {
+            let y = core.forward(x);
+            dys.push(crate::nn::loss::sigmoid_xent(&y, t).1);
+        }
+        for dy in dys.iter().rev() {
+            core.backward(dy);
+        }
+        assert_eq!(core.mem.snapshot(), start);
+    }
+
+    #[test]
+    fn weights_stay_normalized() {
+        let mut rng = Rng::new(25);
+        let mut core = NtmCore::new(&small_cfg(25), &mut rng);
+        core.reset();
+        for t in 0..6 {
+            core.forward(&[1.0, 0.0, 0.0, 1.0]);
+            let s = core.tape.last().unwrap();
+            for h in &s.heads {
+                let sum: f32 = h.w_final.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4, "t={t} sum={sum}");
+                assert!(h.w_final.iter().all(|&x| x >= 0.0));
+            }
+        }
+        core.rollback();
+    }
+}

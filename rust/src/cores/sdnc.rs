@@ -1,0 +1,682 @@
+//! Sparse Differentiable Neural Computer (SDNC, Supp D): SAM's sparse
+//! read/write machinery plus *sparse* temporal linkage.
+//!
+//! Instead of the DNC's dense L ∈ [0,1]^{N×N}, two row-truncated sparse
+//! matrices are maintained (eq. 17-20): N_t ≈ L and P_t ≈ Lᵀ, each row
+//! capped at K_L non-zeros, plus a K_L-sparse precedence p_t. Because
+//! P = Nᵀ, the link-following reads are sparse row gathers:
+//!     f_t = N_t·w^r_{t-1} = Σ_j w^r(j)·P_t(j,:)   (eq. 21)
+//!     b_t = P_t·w^r_{t-1} = Σ_j w^r(j)·N_t(j,:)   (eq. 22)
+//! both O(K·K_L). Linkage rows changed by a step are journaled and reverted
+//! during BPTT, like the memory itself (§3.4). As in the paper, gradients
+//! are not passed through the linkage matrices (Supp D.1), but do flow
+//! through the read mixture.
+
+use super::addressing::{
+    content_weights, content_weights_backward, write_gate, write_gate_backward, ContentRead,
+    WriteGate,
+};
+use super::sam::init_row;
+use super::{Controller, Core, CoreConfig};
+use crate::ann::{build_index, AnnIndex};
+use crate::memory::store::{MemoryStore, StepJournal, WriteOp};
+use crate::memory::usage::LraRing;
+use crate::nn::param::{HasParams, Param};
+use crate::tensor::csr::{RowSparse, SparseLinkMatrix, SparseVec};
+use crate::tensor::matrix::{dot, softmax_backward, softmax_inplace};
+use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+
+/// Head params: [q(W), a(W), α̂, γ̂, β̂, mode(3)] — modes (backward, content, forward).
+const fn head_dim(word: usize) -> usize {
+    2 * word + 6
+}
+
+struct HeadStep {
+    gate: WriteGate,
+    journal: StepJournal,
+    w_read_used: SparseVec,
+    write_word: Vec<f32>,
+    read: ContentRead,
+    query: Vec<f32>,
+    modes: Vec<f32>,
+    fwd: SparseVec,
+    bwd: SparseVec,
+    w_read: SparseVec,
+}
+
+/// Saved linkage rows for rollback (None = the row did not exist).
+struct LinkJournal {
+    n_rows: Vec<(usize, Option<SparseVec>)>,
+    p_rows: Vec<(usize, Option<SparseVec>)>,
+    precedence: SparseVec,
+}
+
+struct SdncStep {
+    heads: Vec<HeadStep>,
+    links: LinkJournal,
+}
+
+pub struct SdncCore {
+    cfg: CoreConfig,
+    ctrl: Controller,
+    mem: MemoryStore,
+    ann: Box<dyn AnnIndex>,
+    ring: LraRing,
+    n_link: SparseLinkMatrix,
+    p_link: SparseLinkMatrix,
+    precedence: SparseVec,
+    w_read_prev: Vec<SparseVec>,
+    r_prev: Vec<Vec<f32>>,
+    tape: Vec<SdncStep>,
+    touched: HashSet<usize>,
+    /// Seed for the deterministic per-row memory init (see sam::init_row).
+    mem_seed: u64,
+    // carried backward state
+    d_r: Vec<Vec<f32>>,
+    d_wread: Vec<SparseVec>,
+    dmem: RowSparse,
+    ann_dirty: bool,
+}
+
+impl SdncCore {
+    pub fn new(cfg: &CoreConfig, rng: &mut Rng) -> SdncCore {
+        let mut rng = Rng::new(cfg.seed ^ rng.next_u64());
+        let ctrl = Controller::new(
+            "sdnc",
+            cfg.x_dim,
+            cfg.y_dim,
+            cfg.hidden,
+            cfg.heads,
+            cfg.word,
+            head_dim(cfg.word),
+            &mut rng,
+        );
+        let mem_seed = rng.next_u64();
+        let mut mem = MemoryStore::zeros(cfg.mem_words, cfg.word);
+        for i in 0..cfg.mem_words {
+            init_row(mem_seed, i, mem.row_mut(i));
+        }
+        let mut ann = build_index(cfg.ann, cfg.mem_words, cfg.word, rng.next_u64());
+        for i in 0..cfg.mem_words {
+            ann.insert(i, mem.row(i));
+        }
+        SdncCore {
+            ctrl,
+            mem,
+            ann,
+            ring: LraRing::new(cfg.mem_words),
+            n_link: SparseLinkMatrix::new(cfg.k_l),
+            p_link: SparseLinkMatrix::new(cfg.k_l),
+            precedence: SparseVec::new(),
+            w_read_prev: vec![SparseVec::new(); cfg.heads],
+            r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
+            tape: Vec::new(),
+            touched: HashSet::new(),
+            mem_seed,
+            d_r: vec![vec![0.0; cfg.word]; cfg.heads],
+            d_wread: vec![SparseVec::new(); cfg.heads],
+            dmem: RowSparse::new(cfg.word),
+            ann_dirty: false,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// f/b link-follow: Σ_j w(j)·rows(j,:) over a row-sparse matrix.
+    fn follow(link: &SparseLinkMatrix, w: &SparseVec) -> SparseVec {
+        let mut pairs = Vec::new();
+        for (j, wj) in w.iter() {
+            if let Some(row) = link.row(j) {
+                for (i, v) in row.iter() {
+                    pairs.push((i, wj * v));
+                }
+            }
+        }
+        SparseVec::from_pairs(pairs)
+    }
+
+    /// Apply the sparse linkage update for aggregate write weights `w`,
+    /// returning the journal of replaced rows. (eq. 17-20)
+    fn update_links(&mut self, w: &SparseVec) -> LinkJournal {
+        let mut journal = LinkJournal {
+            n_rows: Vec::new(),
+            p_rows: Vec::new(),
+            precedence: self.precedence.clone(),
+        };
+        let p_prev = self.precedence.clone();
+        // N rows: N(i,:) = (1-w(i))·N(i,:) + w(i)·p_prev,   i ∈ supp(w), j ≠ i.
+        for (i, wi) in w.iter() {
+            let old = self.n_link.row(i).cloned();
+            let mut row = old.clone().unwrap_or_default();
+            row.scale(1.0 - wi);
+            let mut row = row.add_scaled(wi, &p_prev);
+            // zero diagonal
+            if let Ok(pos) = row.idx.binary_search(&i) {
+                row.idx.remove(pos);
+                row.val.remove(pos);
+            }
+            journal.n_rows.push((i, old));
+            self.n_link.set_row(i, row);
+        }
+        // P rows: P(i,j) = (1-w(j))·P(i,j) + w(j)·p_prev(i) for j ∈ supp(w).
+        // Affected rows: supp(p_prev) ∪ {i : P(i,j) ≠ 0 for some j ∈ supp(w)}
+        //              = supp(p_prev) ∪ ∪_{j∈supp(w)} supp(N_old(j,:)).
+        let mut affected: HashSet<usize> = p_prev.idx.iter().copied().collect();
+        for (j, _) in w.iter() {
+            for (old_j, old_row) in journal.n_rows.iter() {
+                if *old_j == j {
+                    if let Some(r) = old_row {
+                        affected.extend(r.idx.iter().copied());
+                    }
+                }
+            }
+        }
+        let mut affected: Vec<usize> = affected.into_iter().collect();
+        affected.sort_unstable();
+        for i in affected {
+            let old = self.p_link.row(i).cloned();
+            let mut row: HashMap<usize, f32> =
+                old.as_ref().map(|r| r.iter().collect()).unwrap_or_default();
+            for (j, wj) in w.iter() {
+                if i == j {
+                    continue; // diagonal stays zero
+                }
+                let cur = row.get(&j).copied().unwrap_or(0.0);
+                let nv = (1.0 - wj) * cur + wj * p_prev.get(i);
+                if nv != 0.0 {
+                    row.insert(j, nv);
+                } else {
+                    row.remove(&j);
+                }
+            }
+            journal.p_rows.push((i, old));
+            self.p_link.set_row(i, SparseVec::from_pairs(row.into_iter().collect()));
+        }
+        // precedence: p = (1-Σw)·p_prev + w, truncated to K_L.
+        let sum_w = w.sum().min(1.0);
+        let mut p = p_prev.clone();
+        p.scale(1.0 - sum_w);
+        let mut p = p.add(w);
+        p.truncate_top_k(self.cfg.k_l);
+        self.precedence = p;
+        journal
+    }
+
+    fn revert_links(&mut self, journal: LinkJournal) {
+        for (i, old) in journal.p_rows.into_iter().rev() {
+            match old {
+                Some(row) => self.p_link.set_row(i, row),
+                None => self.p_link.set_row(i, SparseVec::new()),
+            }
+        }
+        for (i, old) in journal.n_rows.into_iter().rev() {
+            match old {
+                Some(row) => self.n_link.set_row(i, row),
+                None => self.n_link.set_row(i, SparseVec::new()),
+            }
+        }
+        self.precedence = journal.precedence;
+    }
+
+    fn resync_ann(&mut self) {
+        for &row in &self.touched {
+            self.ann.update(row, self.mem.row(row));
+        }
+        self.touched.clear();
+        self.ann_dirty = false;
+    }
+}
+
+impl HasParams for SdncCore {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.ctrl.visit_params(f);
+    }
+}
+
+impl Core for SdncCore {
+    fn name(&self) -> &'static str {
+        "sdnc"
+    }
+
+    fn reset(&mut self) {
+        self.ctrl.reset();
+        self.tape.clear();
+        if self.ann_dirty || !self.touched.is_empty() {
+            let rows: Vec<usize> = self.touched.iter().copied().collect();
+            for row in rows {
+                init_row(self.mem_seed, row, self.mem.row_mut(row));
+            }
+            self.resync_ann();
+        }
+        self.ring.reset();
+        self.n_link = SparseLinkMatrix::new(self.cfg.k_l);
+        self.p_link = SparseLinkMatrix::new(self.cfg.k_l);
+        self.precedence = SparseVec::new();
+        for v in &mut self.w_read_prev {
+            *v = SparseVec::new();
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.d_r {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for d in &mut self.d_wread {
+            *d = SparseVec::new();
+        }
+        self.dmem = RowSparse::new(self.cfg.word);
+    }
+
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let (h, p) = self.ctrl.step(x, &self.r_prev);
+        let mut heads = Vec::with_capacity(self.cfg.heads);
+
+        // --- SAM-style sparse writes ---
+        let mut w_agg = SparseVec::new();
+        for hi in 0..self.cfg.heads {
+            let ph = &p[hi * hd..(hi + 1) * hd];
+            let a = ph[w..2 * w].to_vec();
+            let (ar, gr) = (ph[2 * w], ph[2 * w + 1]);
+            let lra_row = self.ring.pop_lra();
+            let gate = write_gate(ar, gr, &self.w_read_prev[hi], lra_row);
+            let op = WriteOp {
+                erase_rows: vec![lra_row],
+                weights: gate.weights.clone(),
+                word: a.clone(),
+            };
+            let journal = self.mem.apply_write(&op);
+            for (i, wv) in gate.weights.iter() {
+                if wv.abs() > self.cfg.delta {
+                    self.ring.touch(i);
+                }
+                self.touched.insert(i);
+            }
+            self.touched.insert(lra_row);
+            for row in journal.touched_rows() {
+                self.ann.update(row, self.mem.row(row));
+            }
+            self.ann_dirty = true;
+            w_agg = w_agg.add(&gate.weights);
+            heads.push(HeadStep {
+                gate,
+                journal,
+                w_read_used: self.w_read_prev[hi].clone(),
+                write_word: a,
+                read: ContentRead { rows: vec![], sims: vec![], weights: vec![], beta: 0.0, beta_raw: 0.0 },
+                query: vec![],
+                modes: vec![],
+                fwd: SparseVec::new(),
+                bwd: SparseVec::new(),
+                w_read: SparseVec::new(),
+            });
+        }
+
+        // --- sparse temporal linkage update (eq. 17-20) ---
+        let s = w_agg.sum();
+        if s > 1.0 {
+            w_agg.scale(1.0 / s);
+        }
+        let links = self.update_links(&w_agg);
+
+        // --- reads: 3-way mix of content / forward-link / backward-link ---
+        let mut reads = Vec::with_capacity(self.cfg.heads);
+        for hi in 0..self.cfg.heads {
+            let ph = &p[hi * hd..(hi + 1) * hd];
+            let query = ph[..w].to_vec();
+            let beta_raw = ph[2 * w + 2];
+            let mut modes = ph[2 * w + 3..2 * w + 6].to_vec();
+            softmax_inplace(&mut modes);
+            let neighbors = self.ann.query(&query, self.cfg.k);
+            let rows: Vec<usize> = neighbors.iter().map(|&(i, _)| i).collect();
+            let read = content_weights(&query, beta_raw, &self.mem, rows);
+            let wp = &self.w_read_prev[hi];
+            let fwd = Self::follow(&self.p_link, wp); // f = Σ w(j)·P(j,:) = N·w
+            let bwd = Self::follow(&self.n_link, wp); // b = Σ w(j)·N(j,:) = Nᵀ·w = P·w
+            let mut w_read = SparseVec::from_pairs(
+                read.rows
+                    .iter()
+                    .copied()
+                    .zip(read.weights.iter().map(|&v| v * modes[1]))
+                    .collect(),
+            );
+            w_read = w_read.add_scaled(modes[0], &bwd).add_scaled(modes[2], &fwd);
+            w_read.truncate_top_k(self.cfg.k + 2 * self.cfg.k_l);
+            let mut r = vec![0.0; w];
+            self.mem.read_sparse(&w_read, &mut r);
+            for (i, wv) in w_read.iter() {
+                if wv > self.cfg.delta {
+                    self.ring.touch(i);
+                }
+            }
+            self.w_read_prev[hi] = w_read.clone();
+            let hstep = &mut heads[hi];
+            hstep.read = read;
+            hstep.query = query;
+            hstep.modes = modes;
+            hstep.fwd = fwd;
+            hstep.bwd = bwd;
+            hstep.w_read = w_read;
+            reads.push(r);
+        }
+
+        let y = self.ctrl.output(&h, &reads);
+        self.r_prev = reads;
+        self.tape.push(SdncStep { heads, links });
+        y
+    }
+
+    fn backward(&mut self, dy: &[f32]) {
+        let step = self.tape.pop().expect("backward without forward");
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let (dh, dreads) = self.ctrl.backward_output(dy);
+        let mut dp = vec![0.0f32; self.cfg.heads * hd];
+        // Linkage contribution to the carried d_wread, accumulated before
+        // the write-gate contribution is added below.
+        let mut d_wread_next: Vec<SparseVec> = vec![SparseVec::new(); self.cfg.heads];
+
+        // --- read backward (memory = M_t, links = N_t/P_t) ---
+        for (hi, hstep) in step.heads.iter().enumerate() {
+            let mut dr = dreads[hi].clone();
+            for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
+                *a += b;
+            }
+            // dL/dw_read over supp(w_read), plus the carried gradient from
+            // step t+1's uses of w_read (gate + linkage).
+            let mut dw_pairs = Vec::with_capacity(hstep.w_read.nnz());
+            for (i, wv) in hstep.w_read.iter() {
+                let g = dot(self.mem.row(i), &dr) + self.d_wread[hi].get(i);
+                self.dmem.axpy_row(i, wv, &dr);
+                dw_pairs.push((i, g));
+            }
+            let dw_read = SparseVec::from_pairs(dw_pairs);
+            // mode mixture backward
+            let dmodes = vec![
+                dw_read.dot_sparse(&hstep.bwd),
+                hstep
+                    .read
+                    .rows
+                    .iter()
+                    .zip(&hstep.read.weights)
+                    .map(|(&i, &v)| v * dw_read.get(i))
+                    .sum::<f32>(),
+                dw_read.dot_sparse(&hstep.fwd),
+            ];
+            let mut dmode_logits = vec![0.0f32; 3];
+            softmax_backward(&hstep.modes, &dmodes, &mut dmode_logits);
+            let ph = &mut dp[hi * hd..(hi + 1) * hd];
+            for k in 0..3 {
+                ph[2 * w + 3 + k] += dmode_logits[k];
+            }
+            // content path
+            let dweights: Vec<f32> = hstep
+                .read
+                .rows
+                .iter()
+                .map(|&i| hstep.modes[1] * dw_read.get(i))
+                .collect();
+            let mut dq = vec![0.0f32; w];
+            let mut dbeta_raw = 0.0f32;
+            let dmem_ref = &mut self.dmem;
+            content_weights_backward(
+                &hstep.read,
+                &hstep.query,
+                &self.mem,
+                &dweights,
+                &mut dq,
+                &mut dbeta_raw,
+                |row, d| dmem_ref.axpy_row(row, 1.0, d),
+            );
+            ph[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
+            ph[2 * w + 2] += dbeta_raw;
+            // linkage path: f = Σ_j wp(j)·P(j,:) ⇒ dwp(j) = P(j,:)·df;
+            //               b = Σ_j wp(j)·N(j,:) ⇒ dwp(j) = N(j,:)·db.
+            let mut df = dw_read.clone();
+            df.scale(hstep.modes[2]);
+            let mut db = dw_read.clone();
+            db.scale(hstep.modes[0]);
+            let wp = &hstep.w_read_used; // NOTE: wp at read time == w_read_prev before this step's reads
+            let mut pairs = Vec::with_capacity(wp.nnz());
+            for (j, _) in wp.iter() {
+                let mut g = 0.0;
+                if let Some(prow) = self.p_link.row(j) {
+                    g += prow.dot_sparse(&df);
+                }
+                if let Some(nrow) = self.n_link.row(j) {
+                    g += nrow.dot_sparse(&db);
+                }
+                pairs.push((j, g));
+            }
+            d_wread_next[hi] = SparseVec::from_pairs(pairs);
+        }
+
+        // --- write backward (reverse head order, rolling memory back) ---
+        for hi in (0..self.cfg.heads).rev() {
+            let hstep = &step.heads[hi];
+            let mut da = vec![0.0f32; w];
+            let mut dw_pairs = Vec::with_capacity(hstep.gate.weights.nnz());
+            for (i, wv) in hstep.gate.weights.iter() {
+                if let Some(drow) = self.dmem.row(i) {
+                    for (daj, dj) in da.iter_mut().zip(drow) {
+                        *daj += wv * dj;
+                    }
+                    dw_pairs.push((i, dot(&hstep.write_word, drow)));
+                }
+            }
+            let dw = SparseVec::from_pairs(dw_pairs);
+            self.dmem.clear_row(hstep.gate.lra_row);
+            let (mut dar, mut dgr) = (0.0f32, 0.0f32);
+            let dw_prev =
+                write_gate_backward(&hstep.gate, &hstep.w_read_used, &dw, &mut dar, &mut dgr);
+            self.d_wread[hi] = d_wread_next[hi].add(&dw_prev);
+            let ph = &mut dp[hi * hd..(hi + 1) * hd];
+            ph[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
+            ph[2 * w] += dar;
+            ph[2 * w + 1] += dgr;
+            self.mem.revert(&hstep.journal);
+        }
+
+        // Roll the linkage back to N_{t-1}/P_{t-1}.
+        self.revert_links(step.links);
+
+        let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
+        self.d_r = dr_prev;
+    }
+
+    fn rollback(&mut self) {
+        while let Some(step) = self.tape.pop() {
+            for hstep in step.heads.iter().rev() {
+                self.mem.revert(&hstep.journal);
+            }
+            self.revert_links(step.links);
+        }
+    }
+
+    fn end_episode(&mut self) {
+        debug_assert!(self.tape.is_empty());
+        self.resync_ann();
+    }
+
+    fn x_dim(&self) -> usize {
+        self.cfg.x_dim
+    }
+
+    fn y_dim(&self) -> usize {
+        self.cfg.y_dim
+    }
+
+    fn tape_bytes(&self) -> usize {
+        let step: usize = self
+            .tape
+            .iter()
+            .map(|s| {
+                let link_bytes: usize = s
+                    .links
+                    .n_rows
+                    .iter()
+                    .chain(s.links.p_rows.iter())
+                    .map(|(_, r)| r.as_ref().map(|x| x.heap_bytes()).unwrap_or(0) + 24)
+                    .sum::<usize>()
+                    + s.links.precedence.heap_bytes();
+                link_bytes
+                    + s.heads
+                        .iter()
+                        .map(|h| {
+                            h.journal.heap_bytes()
+                                + h.w_read_used.heap_bytes()
+                                + h.w_read.heap_bytes()
+                                + h.fwd.heap_bytes()
+                                + h.bwd.heap_bytes()
+                                + h.gate.weights.heap_bytes()
+                                + (h.write_word.capacity() + h.query.capacity()) * 4
+                                + h.read.rows.capacity() * 8
+                                + h.read.weights.capacity() * 4
+                                + h.read.sims.capacity() * 12
+                        })
+                        .sum::<usize>()
+            })
+            .sum();
+        step + self.ctrl.cache_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::AnnKind;
+    use crate::cores::grad_check::*;
+
+    fn small_cfg(seed: u64) -> CoreConfig {
+        CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 10,
+            heads: 2,
+            word: 5,
+            mem_words: 16,
+            k: 3,
+            k_l: 4,
+            ann: AnnKind::Linear,
+            seed,
+            ..CoreConfig::default()
+        }
+    }
+
+    #[test]
+    fn gradients_match_fd() {
+        let mut rng = Rng::new(43);
+        let mut core = SdncCore::new(&small_cfg(43), &mut rng);
+        let (xs, ts) = random_episode(4, 3, 4, &mut rng);
+        let (checked, failed) =
+            check_core_gradients(&mut core, &xs, &ts, &mut rng, 6, 1e-2, 0.25);
+        assert!(checked >= 30);
+        assert!(failed * 10 <= checked, "{failed}/{checked} failed");
+    }
+
+    #[test]
+    fn memory_and_links_roll_back() {
+        let mut rng = Rng::new(44);
+        let mut core = SdncCore::new(&small_cfg(44), &mut rng);
+        core.reset();
+        let start = core.mem.snapshot();
+        let (xs, ts) = random_episode(4, 3, 5, &mut rng);
+        let mut dys = Vec::new();
+        for (x, t) in xs.iter().zip(&ts) {
+            let y = core.forward(x);
+            dys.push(crate::nn::loss::sigmoid_xent(&y, t).1);
+        }
+        assert!(core.n_link.nnz() > 0, "writes should populate the linkage");
+        for dy in dys.iter().rev() {
+            core.backward(dy);
+        }
+        core.end_episode();
+        assert_eq!(core.mem.snapshot(), start);
+        assert_eq!(core.n_link.nnz(), 0, "linkage must roll back to empty");
+        assert_eq!(core.p_link.nnz(), 0);
+        assert_eq!(core.precedence.nnz(), 0);
+    }
+
+    /// The sparse linkage must approximate the dense DNC linkage on the
+    /// common support: simulate both for a few steps of random sparse
+    /// writes and compare f/b reads.
+    #[test]
+    fn sparse_links_track_dense_reference() {
+        let n = 12;
+        let k_l = 12; // no truncation -> should match the dense recurrence
+        let mut rng = Rng::new(45);
+        let mut core = SdncCore::new(&CoreConfig { mem_words: n, k_l, ..small_cfg(45) }, &mut rng);
+        // dense reference
+        let mut l_dense = vec![vec![0.0f32; n]; n];
+        let mut p_dense = vec![0.0f32; n];
+        for _ in 0..8 {
+            let k = rng.int_in(1, 3);
+            let idx = rng.sample_indices(n, k);
+            let mut w = SparseVec::from_pairs(
+                idx.iter().map(|&i| (i, rng.uniform() * 0.5)).collect(),
+            );
+            let s = w.sum();
+            if s > 1.0 {
+                w.scale(1.0 / s);
+            }
+            core.update_links(&w);
+            // dense update
+            let wd = w.to_dense(n);
+            for i in 0..n {
+                for j in 0..n {
+                    if i == j {
+                        l_dense[i][j] = 0.0;
+                    } else {
+                        l_dense[i][j] =
+                            (1.0 - wd[i] - wd[j]) * l_dense[i][j] + wd[i] * p_dense[j];
+                    }
+                }
+            }
+            let sum_w: f32 = wd.iter().sum();
+            for i in 0..n {
+                p_dense[i] = (1.0 - sum_w) * p_dense[i] + wd[i];
+            }
+        }
+        // Compare N against the "decay only on write rows" sparse recurrence:
+        // rows never written stay zero in both. For written rows the sparse
+        // N uses (1-w(i)) where dense L uses (1-w(i)-w(j)); tolerance is
+        // loose to cover that deliberate approximation (eq. 19 vs 13).
+        let wp = SparseVec::from_pairs((0..n).map(|i| (i, 1.0 / n as f32)).collect());
+        let f_sparse = SdncCore::follow(&core.p_link, &wp).to_dense(n);
+        let mut f_dense = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..n {
+                f_dense[i] += l_dense[i][j] * wp.get(j);
+            }
+        }
+        for i in 0..n {
+            assert!(
+                (f_sparse[i] - f_dense[i]).abs() < 0.05,
+                "f[{i}] sparse={} dense={}",
+                f_sparse[i],
+                f_dense[i]
+            );
+        }
+    }
+
+    #[test]
+    fn linkage_rows_bounded_by_kl() {
+        let mut rng = Rng::new(46);
+        let cfg = small_cfg(46);
+        let mut core = SdncCore::new(&cfg, &mut rng);
+        core.reset();
+        let (xs, _) = random_episode(4, 3, 10, &mut rng);
+        for x in &xs {
+            core.forward(x);
+        }
+        for (_, row) in core.n_link.rows.iter() {
+            assert!(row.nnz() <= cfg.k_l);
+        }
+        for (_, row) in core.p_link.rows.iter() {
+            assert!(row.nnz() <= cfg.k_l);
+        }
+        core.rollback();
+        core.end_episode();
+    }
+}

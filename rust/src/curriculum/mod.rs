@@ -1,0 +1,136 @@
+//! Exponential curriculum (paper §4.3): sample the difficulty level of each
+//! episode uniformly from U(base, h); double the ceiling h whenever the
+//! average training loss drops below a threshold for a window of episodes.
+//! Doubling (rather than incrementing) keeps total training cost O(T) in
+//! the final sequence length instead of O(T²).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Curriculum {
+    /// Minimum level (task base difficulty).
+    pub base: usize,
+    /// Current ceiling h.
+    pub h: usize,
+    /// Hard cap on h.
+    pub max_h: usize,
+    /// Average per-step loss below which the level advances.
+    pub loss_threshold: f64,
+    /// Number of consecutive qualifying episodes required.
+    pub patience: usize,
+    streak: usize,
+    /// Number of times h was doubled (diagnostics).
+    pub advances: usize,
+}
+
+impl Curriculum {
+    /// The paper's scheme: start at the task's base difficulty and double.
+    pub fn exponential(base: usize, max_h: usize, loss_threshold: f64) -> Curriculum {
+        Curriculum {
+            base,
+            h: base,
+            max_h,
+            loss_threshold,
+            patience: 20,
+            streak: 0,
+            advances: 0,
+        }
+    }
+
+    /// Fixed difficulty (no curriculum).
+    pub fn fixed(level: usize) -> Curriculum {
+        Curriculum {
+            base: level,
+            h: level,
+            max_h: level,
+            loss_threshold: 0.0,
+            patience: usize::MAX,
+            streak: 0,
+            advances: 0,
+        }
+    }
+
+    /// Sample a level for the next episode: U(base, h) inclusive.
+    pub fn sample_level(&self, rng: &mut Rng) -> usize {
+        if self.h <= self.base {
+            self.base
+        } else {
+            rng.int_in(self.base, self.h)
+        }
+    }
+
+    /// Report an episode's average per-scored-step loss; possibly advance.
+    /// Returns true when h was doubled.
+    pub fn report(&mut self, avg_loss: f64) -> bool {
+        if self.h >= self.max_h {
+            return false;
+        }
+        if avg_loss < self.loss_threshold {
+            self.streak += 1;
+            if self.streak >= self.patience {
+                self.h = (self.h * 2).min(self.max_h);
+                self.streak = 0;
+                self.advances += 1;
+                return true;
+            }
+        } else {
+            self.streak = 0;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles_after_patience() {
+        let mut c = Curriculum::exponential(4, 64, 0.1);
+        c.patience = 3;
+        assert!(!c.report(0.05));
+        assert!(!c.report(0.05));
+        assert!(c.report(0.05));
+        assert_eq!(c.h, 8);
+        // streak resets on a bad episode
+        assert!(!c.report(0.05));
+        assert!(!c.report(0.5));
+        assert!(!c.report(0.05));
+        assert!(!c.report(0.05));
+        assert!(c.report(0.05));
+        assert_eq!(c.h, 16);
+    }
+
+    #[test]
+    fn respects_max() {
+        let mut c = Curriculum::exponential(4, 10, 1.0);
+        c.patience = 1;
+        c.report(0.0);
+        assert_eq!(c.h, 8);
+        c.report(0.0);
+        assert_eq!(c.h, 10);
+        assert!(!c.report(0.0));
+        assert_eq!(c.h, 10);
+    }
+
+    #[test]
+    fn sample_within_bounds() {
+        let c = Curriculum { h: 16, ..Curriculum::exponential(4, 64, 0.1) };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let l = c.sample_level(&mut rng);
+            assert!((4..=16).contains(&l));
+        }
+    }
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut c = Curriculum::fixed(7);
+        for _ in 0..100 {
+            c.report(0.0);
+        }
+        assert_eq!(c.h, 7);
+        let mut rng = Rng::new(2);
+        assert_eq!(c.sample_level(&mut rng), 7);
+    }
+}

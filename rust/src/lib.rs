@@ -1,0 +1,61 @@
+//! # sam — Sparse Access Memory
+//!
+//! A production-grade reproduction of *"Scaling Memory-Augmented Neural
+//! Networks with Sparse Reads and Writes"* (Rae et al., NIPS 2016).
+//!
+//! The crate implements six memory-augmented model cores (LSTM, NTM, DAM,
+//! SAM, DNC, SDNC) with hand-derived backward passes, the sparse-memory
+//! substrates that give SAM its asymptotics (approximate-nearest-neighbour
+//! indexes, a least-recently-accessed ring, CSR sparse tensors, and a
+//! rollback journal for O(1)-space BPTT), the paper's task suite and
+//! curriculum, a trainer, and a PJRT runtime that executes JAX/Pallas
+//! AOT-compiled cells from Rust.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+//!
+//! ```no_run
+//! use sam::prelude::*;
+//!
+//! let mut rng = Rng::new(42);
+//! let cfg = CoreConfig { mem_words: 1 << 16, ann: AnnKind::KdForest, ..CoreConfig::default() };
+//! let mut core = build_core(CoreKind::Sam, &cfg, &mut rng);
+//! core.reset();
+//! let y = core.forward(&vec![0.0; cfg.x_dim]);
+//! assert_eq!(y.len(), cfg.y_dim);
+//! ```
+
+pub mod ann;
+pub mod bench;
+pub mod cores;
+pub mod coordinator;
+pub mod curriculum;
+pub mod memory;
+pub mod nn;
+pub mod optim;
+pub mod runtime;
+pub mod tasks;
+pub mod tensor;
+pub mod training;
+pub mod util;
+
+/// Counting allocator so every binary in the crate can report the paper's
+/// memory-overhead benchmarks (Fig 1b / 7b).
+#[global_allocator]
+static GLOBAL_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;
+
+/// Convenient re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::ann::AnnKind;
+    pub use crate::cores::{build_core, Core, CoreConfig, CoreKind};
+    pub use crate::curriculum::Curriculum;
+    pub use crate::nn::param::HasParams;
+    pub use crate::optim::{GradClip, Optimizer, RmsProp};
+    pub use crate::tasks::{
+        babi::BabiTask, copy::CopyTask, omniglot::OmniglotTask, recall::AssociativeRecall,
+        sort::PrioritySort, Episode, Task,
+    };
+    pub use crate::training::{TrainConfig, Trainer};
+    pub use crate::util::args::Args;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,141 @@
+//! `sam` — CLI for the Sparse Access Memory reproduction.
+//!
+//! Subcommands:
+//!   train   — train a core on a task (paper defaults; see --help)
+//!   eval    — evaluate a checkpoint
+//!   serve   — TCP inference server over a (checkpointed) core
+//!   info    — model/param/artifact summary
+//!
+//! Examples:
+//!   sam train --model sam --task copy --memory 65536 --ann kdtree --updates 500
+//!   sam train --model sam --task recall --curriculum-max 4096
+//!   sam serve --model sam --task copy --checkpoint ckpt.bin --addr 127.0.0.1:7878
+
+use anyhow::{anyhow, Result};
+use sam::coordinator::{
+    build_task, build_trainer, load_checkpoint, run_experiment, save_checkpoint, server,
+    ExperimentConfig,
+};
+use sam::util::args::Args;
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+
+const HELP: &str = "\
+sam — Sparse Access Memory (Rae et al., NIPS 2016) reproduction
+
+USAGE: sam <train|eval|serve|info> [flags]
+
+Common flags (paper defaults in parens):
+  --model lstm|ntm|dam|sam|dnc|sdnc   (sam)
+  --task copy|recall|sort|omniglot|babi (copy)
+  --memory N        memory words (128)
+  --word W          word size (32)
+  --heads R         access heads (4)
+  --k K             sparse reads per head (4)
+  --ann linear|kdtree|lsh  (linear)
+  --hidden H        controller LSTM size (100)
+  --lr LR           learning rate (1e-4)
+  --batch B         episodes per update (8)
+  --updates U       parameter updates (200)
+  --curriculum-max H  enable exponential curriculum up to H
+  --seed S          RNG seed (1)
+  --checkpoint PATH save/load parameters
+  --addr HOST:PORT  serve address (127.0.0.1:7878)
+  --quiet           suppress progress lines
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => train(&args),
+        "eval" => eval(&args),
+        "serve" => serve_cmd(&args),
+        "info" => info(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    println!(
+        "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?})",
+        cfg.core, cfg.task, cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads,
+        cfg.core_cfg.k, cfg.core_cfg.ann
+    );
+    let (mut trainer, log) = run_experiment(&cfg)?;
+    println!(
+        "done: {} episodes, best loss/step {:.4}, final level {}",
+        log.total_episodes,
+        log.best_loss(),
+        log.final_level
+    );
+    if let Some(path) = args.get("checkpoint") {
+        save_checkpoint(trainer.core.as_mut(), &PathBuf::from(path))?;
+        println!("checkpoint written to {path}");
+    }
+    if let Some(path) = args.get("log-json") {
+        std::fs::write(path, log.to_json().encode())?;
+        println!("training log written to {path}");
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let task = build_task(&cfg.task)?;
+    let mut trainer = build_trainer(&cfg, task.as_ref());
+    if let Some(path) = args.get("checkpoint") {
+        load_checkpoint(trainer.core.as_mut(), &PathBuf::from(path))?;
+    }
+    let level = args.usize_or("level", task.base_level());
+    let episodes = args.usize_or("episodes", 20);
+    let errs = trainer.evaluate(task.as_ref(), level, episodes, args.u64_or("seed", 17));
+    println!(
+        "eval {:?} on {:?} level {}: {:.3} errors/episode over {} episodes",
+        cfg.core, cfg.task, level, errs, episodes
+    );
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let task = build_task(&cfg.task)?;
+    let mut trainer = build_trainer(&cfg, task.as_ref());
+    if let Some(path) = args.get("checkpoint") {
+        load_checkpoint(trainer.core.as_mut(), &PathBuf::from(path))?;
+        println!("loaded checkpoint {path}");
+    }
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let core = Arc::new(Mutex::new(trainer.core));
+    let stop = Arc::new(AtomicBool::new(false));
+    server::serve(core, &addr, stop).map_err(|e| anyhow!("server: {e:#}"))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let task = build_task(&cfg.task)?;
+    let mut trainer = build_trainer(&cfg, task.as_ref());
+    println!("model: {:?}", cfg.core);
+    println!("task:  {} (x_dim {}, y_dim {})", cfg.task, task.x_dim(), task.y_dim());
+    println!("params: {}", trainer.core.param_count());
+    println!(
+        "memory: {} words x {} (heads {}, K {}, ann {:?})",
+        cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads, cfg.core_cfg.k,
+        cfg.core_cfg.ann
+    );
+    // PJRT artifacts, if built.
+    let dir = sam::runtime::artifacts_dir();
+    match sam::runtime::Runtime::cpu() {
+        Ok(mut rt) => match rt.load_dir(&dir) {
+            Ok(names) => println!("artifacts ({dir:?}): {names:?} on {}", rt.platform()),
+            Err(_) => println!("artifacts: none at {dir:?} (run `make artifacts`)"),
+        },
+        Err(e) => println!("pjrt unavailable: {e:#}"),
+    }
+    Ok(())
+}

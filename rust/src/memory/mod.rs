@@ -1,0 +1,4 @@
+//! External-memory substrates: the dense store with sparse-write rollback
+//! journal (§3.4) and usage tracking (§3.2, Supp A.3).
+pub mod store;
+pub mod usage;

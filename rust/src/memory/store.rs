@@ -1,0 +1,313 @@
+//! The external memory M ∈ R^{N×W} with sparse writes and O(1) rollback.
+//!
+//! This implements the paper's memory-efficient BPTT (§3.4, Supp Fig 5):
+//! instead of caching the full memory at every time step (O(N·T) space),
+//! each write records a [`StepJournal`] with the *old contents of the few
+//! rows it touches* (O(K·W) = O(1) space per step). During the backward
+//! pass the journals are reverted in reverse order, rolling the memory back
+//! to its state at each step — bit-exactly, because we restore saved bytes
+//! rather than subtracting float updates.
+//!
+//! A pleasant corollary used by the trainer: after a full backward pass the
+//! memory has rolled all the way back to its episode-start state, so no
+//! O(N) reset is needed between episodes.
+
+use crate::tensor::csr::SparseVec;
+
+/// Dense external memory of `n` words (rows) of width `w`.
+#[derive(Debug, Clone)]
+pub struct MemoryStore {
+    n: usize,
+    w: usize,
+    data: Vec<f32>,
+}
+
+/// One write step's sparse modification record: the prior contents of every
+/// row the step touched. Reverting = copying these rows back.
+#[derive(Debug, Clone, Default)]
+pub struct StepJournal {
+    saved: Vec<(usize, Vec<f32>)>,
+}
+
+impl StepJournal {
+    pub fn touched_rows(&self) -> impl Iterator<Item = usize> + '_ {
+        self.saved.iter().map(|(i, _)| *i)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.saved.is_empty()
+    }
+
+    /// Heap bytes held (for the Fig 1b accounting): K+1 rows of W floats.
+    pub fn heap_bytes(&self) -> usize {
+        self.saved
+            .iter()
+            .map(|(_, row)| row.capacity() * 4 + 24)
+            .sum::<usize>()
+            + self.saved.capacity() * 32
+    }
+}
+
+/// A sparse write (paper eq. 3/8): zero the erased rows (R_t = I^U 1ᵀ),
+/// then add the outer product w^W aᵀ restricted to w^W's support.
+#[derive(Debug, Clone)]
+pub struct WriteOp {
+    /// Rows fully erased before writing (the least-recently-accessed word).
+    pub erase_rows: Vec<usize>,
+    /// Sparse write weights w^W (K+1 non-zeros for SAM).
+    pub weights: SparseVec,
+    /// The write word a_t (length W).
+    pub word: Vec<f32>,
+}
+
+impl MemoryStore {
+    /// Allocate an n×w memory initialized to zero (O(N) — the one-off init
+    /// cost of Supp A.1).
+    pub fn zeros(n: usize, w: usize) -> MemoryStore {
+        MemoryStore { n, w, data: vec![0.0; n * w] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn word_size(&self) -> usize {
+        self.w
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.w..(i + 1) * self.w]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.w..(i + 1) * self.w]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Sparse read r = Σᵢ w̃(sᵢ) M(sᵢ) (paper eq. 4) in O(K·W).
+    pub fn read_sparse(&self, weights: &SparseVec, out: &mut [f32]) {
+        assert_eq!(out.len(), self.w);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for (i, wv) in weights.iter() {
+            let row = self.row(i);
+            for (o, m) in out.iter_mut().zip(row) {
+                *o += wv * m;
+            }
+        }
+    }
+
+    /// Dense read r = Σᵢ w(i) M(i) (paper eq. 1) in O(N·W).
+    pub fn read_dense(&self, weights: &[f32], out: &mut [f32]) {
+        assert_eq!(weights.len(), self.n);
+        assert_eq!(out.len(), self.w);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for (i, &wv) in weights.iter().enumerate() {
+            if wv != 0.0 {
+                let row = self.row(i);
+                for (o, m) in out.iter_mut().zip(row) {
+                    *o += wv * m;
+                }
+            }
+        }
+    }
+
+    /// Apply a sparse write, journaling prior contents of touched rows.
+    /// O(K·W) time and space, independent of N.
+    pub fn apply_write(&mut self, op: &WriteOp) -> StepJournal {
+        assert_eq!(op.word.len(), self.w);
+        // Save each distinct touched row once (erase ∪ add supports).
+        let mut journal = StepJournal::default();
+        let save = |store: &Vec<f32>, j: &mut StepJournal, i: usize, w: usize| {
+            if !j.saved.iter().any(|(r, _)| *r == i) {
+                j.saved.push((i, store[i * w..(i + 1) * w].to_vec()));
+            }
+        };
+        for &i in &op.erase_rows {
+            save(&self.data, &mut journal, i, self.w);
+        }
+        for (i, _) in op.weights.iter() {
+            save(&self.data, &mut journal, i, self.w);
+        }
+        // Erase then add (paper: the LRA word is set to zero before writing).
+        for &i in &op.erase_rows {
+            self.row_mut(i).iter_mut().for_each(|x| *x = 0.0);
+        }
+        for (i, wv) in op.weights.iter() {
+            let row = self.row_mut(i);
+            for (m, a) in row.iter_mut().zip(&op.word) {
+                *m += wv * a;
+            }
+        }
+        journal
+    }
+
+    /// Dense write M ← (1-R)⊙M + A with R = w^W eᵀ, A = w^W aᵀ (paper
+    /// eq. 3, NTM-style). O(N·W): for the dense baselines the caller caches
+    /// the full memory per step instead of journaling.
+    pub fn apply_write_dense(&mut self, weights: &[f32], erase: &[f32], add: &[f32]) {
+        assert_eq!(weights.len(), self.n);
+        assert_eq!(erase.len(), self.w);
+        assert_eq!(add.len(), self.w);
+        for i in 0..self.n {
+            let wv = weights[i];
+            if wv == 0.0 {
+                continue;
+            }
+            let row = self.row_mut(i);
+            for j in 0..row.len() {
+                row[j] = row[j] * (1.0 - wv * erase[j]) + wv * add[j];
+            }
+        }
+    }
+
+    /// Revert a journaled write: restore the saved rows (bit-exact).
+    pub fn revert(&mut self, journal: &StepJournal) {
+        for (i, old) in journal.saved.iter().rev() {
+            self.row_mut(*i).copy_from_slice(old);
+        }
+    }
+
+    /// Full snapshot (used by the dense baselines' BPTT tape — this O(N·W)
+    /// copy per step is exactly the overhead SAM eliminates).
+    pub fn snapshot(&self) -> Vec<f32> {
+        self.data.clone()
+    }
+
+    pub fn restore(&mut self, snap: &[f32]) {
+        self.data.copy_from_slice(snap);
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.data.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_store(n: usize, w: usize, rng: &mut Rng) -> MemoryStore {
+        let mut m = MemoryStore::zeros(n, w);
+        for i in 0..n {
+            for j in 0..w {
+                m.row_mut(i)[j] = rng.normal();
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn sparse_read_matches_dense() {
+        let mut rng = Rng::new(1);
+        let m = random_store(32, 8, &mut rng);
+        let sw = SparseVec::from_pairs(vec![(3, 0.5), (17, 0.25), (31, 0.25)]);
+        let dw = sw.to_dense(32);
+        let mut rs = vec![0.0; 8];
+        let mut rd = vec![0.0; 8];
+        m.read_sparse(&sw, &mut rs);
+        m.read_dense(&dw, &mut rd);
+        for (a, b) in rs.iter().zip(&rd) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn write_then_revert_is_bit_exact() {
+        let mut rng = Rng::new(2);
+        let mut m = random_store(16, 4, &mut rng);
+        let before = m.snapshot();
+        let op = WriteOp {
+            erase_rows: vec![5],
+            weights: SparseVec::from_pairs(vec![(5, 1.0), (2, 0.3), (9, -0.7)]),
+            word: vec![1.5, -2.0, 0.25, 3.0],
+        };
+        let j = m.apply_write(&op);
+        assert_ne!(m.snapshot(), before);
+        m.revert(&j);
+        assert_eq!(m.snapshot(), before, "rollback must be bit-exact");
+    }
+
+    /// Property test: T random sparse writes then T reverts restores the
+    /// start state exactly, for many seeds.
+    #[test]
+    fn multi_step_rollback_property() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed);
+            let n = 64;
+            let w = 8;
+            let mut m = random_store(n, w, &mut rng);
+            let start = m.snapshot();
+            let t_steps = 50;
+            let mut journals = Vec::new();
+            for _ in 0..t_steps {
+                let k = rng.int_in(1, 4);
+                let idx = rng.sample_indices(n, k);
+                let weights = SparseVec::from_pairs(
+                    idx.iter().map(|&i| (i, rng.normal())).collect(),
+                );
+                let erase_rows = if rng.bernoulli(0.8) {
+                    vec![rng.below(n)]
+                } else {
+                    vec![]
+                };
+                let word: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+                journals.push(m.apply_write(&WriteOp { erase_rows, weights, word }));
+            }
+            for j in journals.iter().rev() {
+                m.revert(j);
+            }
+            assert_eq!(m.snapshot(), start, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn erase_zeroes_before_add() {
+        let mut m = MemoryStore::zeros(4, 2);
+        m.row_mut(1).copy_from_slice(&[9.0, 9.0]);
+        let op = WriteOp {
+            erase_rows: vec![1],
+            weights: SparseVec::from_pairs(vec![(1, 0.5)]),
+            word: vec![2.0, 4.0],
+        };
+        m.apply_write(&op);
+        assert_eq!(m.row(1), &[1.0, 2.0]); // 0 + 0.5*word, old 9s gone
+    }
+
+    #[test]
+    fn dense_write_matches_formula() {
+        let mut m = MemoryStore::zeros(2, 2);
+        m.row_mut(0).copy_from_slice(&[1.0, 2.0]);
+        m.row_mut(1).copy_from_slice(&[3.0, 4.0]);
+        let weights = [0.5, 0.0];
+        let erase = [1.0, 0.5];
+        let add = [10.0, 10.0];
+        m.apply_write_dense(&weights, &erase, &add);
+        // row0: [1*(1-0.5*1)+0.5*10, 2*(1-0.5*0.5)+0.5*10] = [5.5, 6.5]
+        assert_eq!(m.row(0), &[5.5, 6.5]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn journal_size_is_constant_in_n() {
+        let mut rng = Rng::new(3);
+        let op = WriteOp {
+            erase_rows: vec![0],
+            weights: SparseVec::from_pairs(vec![(0, 1.0), (1, 0.5)]),
+            word: vec![1.0; 32],
+        };
+        let mut sizes = Vec::new();
+        for &n in &[128usize, 1024, 8192] {
+            let mut m = random_store(n, 32, &mut rng);
+            let j = m.apply_write(&op);
+            sizes.push(j.heap_bytes());
+        }
+        assert_eq!(sizes[0], sizes[1]);
+        assert_eq!(sizes[1], sizes[2]);
+    }
+}

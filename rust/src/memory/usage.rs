@@ -1,0 +1,259 @@
+//! Memory-usage tracking: which word is least recently / least heavily used?
+//!
+//! Two schemes from the paper (§3.2):
+//!
+//! * **U⁽²⁾, used by SAM** — "time steps since a non-negligible access",
+//!   maintained in O(1) by [`LraRing`], the circular linked list of Supp
+//!   A.3: the head is the least-recently-accessed word; touching a word
+//!   splices it to the back; popping advances the head.
+//!
+//! * **U⁽¹⁾, used by DAM** — the time-discounted access sum
+//!   U_T(i) = Σ_t λ^{T-t}(w^W_t(i) + w^R_t(i)), maintained densely in O(N)
+//!   per step by [`DiscountedUsage`] (DAM is the dense control model, so
+//!   O(N) is by design).
+
+use crate::tensor::csr::SparseVec;
+
+/// Circular doubly-linked list over word indices preserving strict temporal
+/// access order. All operations O(1). (Supp A.3.)
+#[derive(Debug, Clone)]
+pub struct LraRing {
+    next: Vec<usize>,
+    prev: Vec<usize>,
+    /// Least recently accessed element (front of the ring).
+    head: usize,
+    n: usize,
+}
+
+impl LraRing {
+    /// Initialize with order 0,1,…,n-1 (0 = least recently accessed).
+    pub fn new(n: usize) -> LraRing {
+        assert!(n >= 2);
+        let next: Vec<usize> = (0..n).map(|i| (i + 1) % n).collect();
+        let prev: Vec<usize> = (0..n).map(|i| (i + n - 1) % n).collect();
+        LraRing { next, prev, head: 0, n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The least-recently-accessed index (the write target 𝕀ᵁ).
+    pub fn lra(&self) -> usize {
+        self.head
+    }
+
+    /// Mark `i` as most-recently-accessed: splice it out and insert it just
+    /// before the head (= at the back of the ring). O(1).
+    pub fn touch(&mut self, i: usize) {
+        debug_assert!(i < self.n);
+        if i == self.head {
+            // Touching the front: the head simply advances.
+            self.head = self.next[self.head];
+            return;
+        }
+        let tail = self.prev[self.head];
+        if i == tail {
+            return; // already most recent
+        }
+        // Unlink i.
+        let (p, nx) = (self.prev[i], self.next[i]);
+        self.next[p] = nx;
+        self.prev[nx] = p;
+        // Insert between tail and head.
+        self.next[tail] = i;
+        self.prev[i] = tail;
+        self.next[i] = self.head;
+        self.prev[self.head] = i;
+    }
+
+    /// Pop the LRA element for writing: returns it and marks it most
+    /// recently accessed (head advances). O(1).
+    pub fn pop_lra(&mut self) -> usize {
+        let h = self.head;
+        self.head = self.next[h];
+        h
+    }
+
+    /// Reset to the initial 0..n order. O(N) — episode-boundary only.
+    pub fn reset(&mut self) {
+        let n = self.n;
+        for i in 0..n {
+            self.next[i] = (i + 1) % n;
+            self.prev[i] = (i + n - 1) % n;
+        }
+        self.head = 0;
+    }
+
+    /// Access order from least- to most-recently used (O(N); test/debug).
+    pub fn order(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.n);
+        let mut cur = self.head;
+        for _ in 0..self.n {
+            out.push(cur);
+            cur = self.next[cur];
+        }
+        out
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        (self.next.capacity() + self.prev.capacity()) * std::mem::size_of::<usize>()
+    }
+}
+
+/// Dense time-discounted usage U⁽¹⁾ for DAM. O(N) per step.
+#[derive(Debug, Clone)]
+pub struct DiscountedUsage {
+    pub u: Vec<f32>,
+    pub lambda: f32,
+}
+
+impl DiscountedUsage {
+    pub fn new(n: usize, lambda: f32) -> DiscountedUsage {
+        DiscountedUsage { u: vec![0.0; n], lambda }
+    }
+
+    /// U ← λU + w^R + w^W (dense weights).
+    pub fn update_dense(&mut self, read_w: &[f32], write_w: &[f32]) {
+        for i in 0..self.u.len() {
+            self.u[i] = self.lambda * self.u[i] + read_w[i] + write_w[i];
+        }
+    }
+
+    /// Same with sparse weights (still decays all N entries).
+    pub fn update_sparse(&mut self, read_w: &SparseVec, write_w: &SparseVec) {
+        for v in self.u.iter_mut() {
+            *v *= self.lambda;
+        }
+        for (i, w) in read_w.iter() {
+            self.u[i] += w;
+        }
+        for (i, w) in write_w.iter() {
+            self.u[i] += w;
+        }
+    }
+
+    /// argmin U — the least-used word (𝕀ᵁ for DAM).
+    pub fn argmin(&self) -> usize {
+        let mut best = 0;
+        let mut bv = f32::INFINITY;
+        for (i, &v) in self.u.iter().enumerate() {
+            if v < bv {
+                bv = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn reset(&mut self) {
+        self.u.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Naive reference: a Vec kept in LRA order, O(N) per op.
+    struct NaiveLra {
+        order: Vec<usize>,
+    }
+
+    impl NaiveLra {
+        fn new(n: usize) -> Self {
+            NaiveLra { order: (0..n).collect() }
+        }
+        fn lra(&self) -> usize {
+            self.order[0]
+        }
+        fn touch(&mut self, i: usize) {
+            self.order.retain(|&x| x != i);
+            self.order.push(i);
+        }
+        fn pop_lra(&mut self) -> usize {
+            let h = self.order.remove(0);
+            self.order.push(h);
+            h
+        }
+    }
+
+    #[test]
+    fn ring_matches_naive_reference_property() {
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(seed);
+            let n = 16;
+            let mut ring = LraRing::new(n);
+            let mut naive = NaiveLra::new(n);
+            for _ in 0..500 {
+                match rng.below(3) {
+                    0 => {
+                        let i = rng.below(n);
+                        ring.touch(i);
+                        naive.touch(i);
+                    }
+                    1 => {
+                        assert_eq!(ring.pop_lra(), naive.pop_lra());
+                    }
+                    _ => {
+                        assert_eq!(ring.lra(), naive.lra());
+                    }
+                }
+                assert_eq!(ring.order(), naive.order, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_basics() {
+        let mut ring = LraRing::new(4);
+        assert_eq!(ring.lra(), 0);
+        ring.touch(0); // 0 becomes most recent
+        assert_eq!(ring.lra(), 1);
+        assert_eq!(ring.pop_lra(), 1);
+        assert_eq!(ring.lra(), 2);
+        ring.touch(2);
+        assert_eq!(ring.lra(), 3);
+        ring.reset();
+        assert_eq!(ring.order(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn touching_tail_is_noop() {
+        let mut ring = LraRing::new(3);
+        ring.touch(1);
+        let before = ring.order();
+        ring.touch(1); // 1 is already most recent
+        assert_eq!(ring.order(), before);
+    }
+
+    #[test]
+    fn discounted_usage_decays() {
+        let mut u = DiscountedUsage::new(3, 0.5);
+        u.update_dense(&[1.0, 0.0, 0.0], &[0.0, 0.0, 0.0]);
+        u.update_dense(&[0.0, 1.0, 0.0], &[0.0, 0.0, 0.0]);
+        // u = [0.5, 1.0, 0.0] -> argmin = 2
+        assert_eq!(u.argmin(), 2);
+        assert!((u.u[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn discounted_sparse_matches_dense() {
+        let mut a = DiscountedUsage::new(8, 0.9);
+        let mut b = DiscountedUsage::new(8, 0.9);
+        let r = SparseVec::from_pairs(vec![(1, 0.5), (4, 0.5)]);
+        let w = SparseVec::from_pairs(vec![(4, 1.0)]);
+        for _ in 0..5 {
+            a.update_dense(&r.to_dense(8), &w.to_dense(8));
+            b.update_sparse(&r, &w);
+        }
+        for (x, y) in a.u.iter().zip(&b.u) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Pointwise activations and their exact derivatives (in terms of outputs,
+//! so the forward caches only the activation values).
+
+/// σ(x), numerically stable on both tails.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// dσ/dx expressed via y = σ(x).
+#[inline]
+pub fn dsigmoid(y: f32) -> f32 {
+    y * (1.0 - y)
+}
+
+#[inline]
+pub fn tanh(x: f32) -> f32 {
+    x.tanh()
+}
+
+/// d tanh/dx via y = tanh(x).
+#[inline]
+pub fn dtanh(y: f32) -> f32 {
+    1.0 - y * y
+}
+
+/// softplus(x) = log(1 + eˣ), stable.
+#[inline]
+pub fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// d softplus/dx = σ(x).
+#[inline]
+pub fn dsoftplus(x: f32) -> f32 {
+    sigmoid(x)
+}
+
+/// "oneplus" = 1 + softplus(x) — the DNC's ≥1 sharpening transform.
+#[inline]
+pub fn oneplus(x: f32) -> f32 {
+    1.0 + softplus(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd(f: impl Fn(f32) -> f32, x: f32) -> f32 {
+        let e = 1e-3;
+        (f(x + e) - f(x - e)) / (2.0 * e)
+    }
+
+    #[test]
+    fn sigmoid_stable_tails() {
+        assert!((sigmoid(100.0) - 1.0).abs() < 1e-6);
+        assert!(sigmoid(-100.0) < 1e-6);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn derivatives_match_fd() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            assert!((dsigmoid(sigmoid(x)) - fd(sigmoid, x)).abs() < 1e-3);
+            assert!((dtanh(tanh(x)) - fd(tanh, x)).abs() < 1e-3);
+            assert!((dsoftplus(x) - fd(softplus, x)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn oneplus_at_least_one() {
+        for &x in &[-50.0f32, -1.0, 0.0, 5.0] {
+            assert!(oneplus(x) >= 1.0);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Fully-connected layer with manual backward and an explicit activation
+//! cache stack (supports arbitrarily long BPTT: one push per forward call,
+//! one pop per backward call).
+
+use super::param::{HasParams, Param};
+use crate::tensor::matrix::{axpy, dot, outer_acc, Matrix};
+use crate::util::rng::Rng;
+
+/// y = W x + b.
+pub struct Linear {
+    pub w: Param, // out × in
+    pub b: Param, // 1 × out
+    /// Cached inputs, one per un-backpropagated forward call.
+    cache_x: Vec<Vec<f32>>,
+}
+
+impl Linear {
+    pub fn new(name: &str, in_dim: usize, out_dim: usize, rng: &mut Rng) -> Linear {
+        Linear {
+            w: Param::fan_in(&format!("{name}.w"), out_dim, in_dim, in_dim, rng),
+            b: Param::zeros(&format!("{name}.b"), 1, out_dim),
+            cache_x: Vec::new(),
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.w.cols
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.w.rows
+    }
+
+    /// Forward one vector; caches `x` for the matching backward.
+    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim());
+        let mut y = self.b.w.data.clone();
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi += dot(self.w.w.row(i), x);
+        }
+        self.cache_x.push(x.to_vec());
+        y
+    }
+
+    /// Backward the most recent un-backpropagated forward; accumulates
+    /// parameter grads and returns dL/dx.
+    pub fn backward(&mut self, dy: &[f32]) -> Vec<f32> {
+        assert_eq!(dy.len(), self.out_dim());
+        let x = self.cache_x.pop().expect("backward without forward");
+        outer_acc(&mut self.w.g, dy, &x);
+        axpy(&mut self.b.g.data, 1.0, dy);
+        let mut dx = vec![0.0; x.len()];
+        for (i, &dyi) in dy.iter().enumerate() {
+            if dyi != 0.0 {
+                axpy(&mut dx, dyi, self.w.w.row(i));
+            }
+        }
+        dx
+    }
+
+    /// Drop any cached activations (episode reset).
+    pub fn clear_cache(&mut self) {
+        self.cache_x.clear();
+    }
+
+    pub fn cache_bytes(&self) -> usize {
+        self.cache_x.iter().map(|x| x.capacity() * 4 + 24).sum()
+    }
+}
+
+impl HasParams for Linear {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.w);
+        f(&mut self.b);
+    }
+}
+
+/// Stateless matrix helper for gradient-check tests: y = Wx+b as pure fn.
+pub fn linear_apply(w: &Matrix, b: &[f32], x: &[f32]) -> Vec<f32> {
+    let mut y = b.to_vec();
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi += dot(w.row(i), x);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_matches_manual() {
+        let mut rng = Rng::new(1);
+        let mut lin = Linear::new("t", 3, 2, &mut rng);
+        lin.w.w.data = vec![1., 2., 3., 4., 5., 6.];
+        lin.b.w.data = vec![0.5, -0.5];
+        let y = lin.forward(&[1., 1., 1.]);
+        assert_eq!(y, vec![6.5, 14.5]);
+    }
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let mut rng = Rng::new(2);
+        let mut lin = Linear::new("t", 4, 3, &mut rng);
+        let x: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+        let dy = vec![0.3, -0.7, 0.2];
+        // loss = dy . y (linear probe)
+        let loss = |lin: &mut Linear, x: &[f32]| -> f32 {
+            let y = lin.forward(x);
+            lin.cache_x.pop();
+            y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        lin.forward(&x);
+        let dx = lin.backward(&dy);
+        let eps = 1e-2;
+        // check dW
+        for k in 0..lin.w.w.data.len() {
+            let orig = lin.w.w.data[k];
+            lin.w.w.data[k] = orig + eps;
+            let lp = loss(&mut lin, &x);
+            lin.w.w.data[k] = orig - eps;
+            let lm = loss(&mut lin, &x);
+            lin.w.w.data[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - lin.w.g.data[k]).abs() < 1e-3, "W[{k}]");
+        }
+        // check dx
+        for k in 0..x.len() {
+            let mut xp = x.clone();
+            xp[k] += eps;
+            let lp = loss(&mut lin, &xp);
+            xp[k] -= 2.0 * eps;
+            let lm = loss(&mut lin, &xp);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dx[k]).abs() < 1e-3, "x[{k}]");
+        }
+    }
+
+    #[test]
+    fn cache_stack_lifo() {
+        let mut rng = Rng::new(3);
+        let mut lin = Linear::new("t", 2, 2, &mut rng);
+        lin.forward(&[1.0, 0.0]);
+        lin.forward(&[0.0, 1.0]);
+        // backward for second call first: dW row contributions come from x2.
+        lin.backward(&[1.0, 0.0]);
+        assert_eq!(lin.w.g.get(0, 1), 1.0); // x2 = e2
+        lin.backward(&[1.0, 0.0]);
+        assert_eq!(lin.w.g.get(0, 0), 1.0); // x1 = e1
+        assert_eq!(lin.cache_bytes(), 0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Losses: sigmoid cross-entropy over bits (the NTM algorithmic tasks
+//! report "bits" error) and softmax cross-entropy over classes (Omniglot /
+//! Babi word prediction).
+
+use crate::tensor::matrix::softmax_inplace;
+
+/// Numerically-stable sigmoid cross entropy between logits and {0,1}
+/// targets. Returns (loss-sum-in-nats, dL/dlogits).
+pub fn sigmoid_xent(logits: &[f32], targets: &[f32]) -> (f32, Vec<f32>) {
+    assert_eq!(logits.len(), targets.len());
+    let mut loss = 0.0f32;
+    let mut grad = vec![0.0f32; logits.len()];
+    for i in 0..logits.len() {
+        let (l, t) = (logits[i], targets[i]);
+        // max(l,0) - l t + log(1 + exp(-|l|))
+        loss += l.max(0.0) - l * t + (-l.abs()).exp().ln_1p();
+        let s = super::act::sigmoid(l);
+        grad[i] = s - t;
+    }
+    (loss, grad)
+}
+
+/// Bits wrong after thresholding logits at 0 (the paper's task metric).
+pub fn bit_errors(logits: &[f32], targets: &[f32]) -> usize {
+    logits
+        .iter()
+        .zip(targets)
+        .filter(|(&l, &t)| (l > 0.0) != (t > 0.5))
+        .count()
+}
+
+/// Softmax cross entropy against a 1-hot class index.
+/// Returns (loss-nats, dL/dlogits).
+pub fn softmax_xent(logits: &[f32], target: usize) -> (f32, Vec<f32>) {
+    assert!(target < logits.len());
+    let mut p = logits.to_vec();
+    softmax_inplace(&mut p);
+    let loss = -(p[target].max(1e-12)).ln();
+    let mut grad = p;
+    grad[target] -= 1.0;
+    (loss, grad)
+}
+
+/// Argmax helper for classification accuracy.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_xent_matches_fd() {
+        let logits = vec![0.5f32, -1.2, 2.0, 0.0];
+        let targets = vec![1.0f32, 0.0, 1.0, 0.0];
+        let (_, grad) = sigmoid_xent(&logits, &targets);
+        let eps = 1e-3;
+        for k in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp[k] += eps;
+            let mut lm = logits.clone();
+            lm[k] -= eps;
+            let fd = (sigmoid_xent(&lp, &targets).0 - sigmoid_xent(&lm, &targets).0) / (2.0 * eps);
+            assert!((fd - grad[k]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn sigmoid_xent_extreme_logits_finite() {
+        let (loss, grad) = sigmoid_xent(&[1000.0, -1000.0], &[1.0, 0.0]);
+        assert!(loss.is_finite() && loss < 1e-3);
+        assert!(grad.iter().all(|g| g.is_finite()));
+    }
+
+    #[test]
+    fn softmax_xent_matches_fd() {
+        let logits = vec![0.1f32, 1.5, -0.7];
+        let (_, grad) = softmax_xent(&logits, 2);
+        let eps = 1e-3;
+        for k in 0..3 {
+            let mut lp = logits.clone();
+            lp[k] += eps;
+            let mut lm = logits.clone();
+            lm[k] -= eps;
+            let fd = (softmax_xent(&lp, 2).0 - softmax_xent(&lm, 2).0) / (2.0 * eps);
+            assert!((fd - grad[k]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn bit_errors_counts() {
+        assert_eq!(bit_errors(&[1.0, -1.0, 1.0], &[1.0, 0.0, 0.0]), 1);
+        assert_eq!(bit_errors(&[-1.0, 1.0], &[1.0, 0.0]), 2);
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+    }
+}

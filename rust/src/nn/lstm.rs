@@ -1,0 +1,267 @@
+//! Single-layer LSTM cell with manual BPTT (the controller of every core,
+//! paper §3.3: "We use a one layer LSTM for the controller throughout").
+
+use super::act::{dsigmoid, dtanh, sigmoid, tanh};
+use super::param::{HasParams, Param};
+use crate::tensor::matrix::{axpy, dot, outer_acc};
+use crate::util::rng::Rng;
+
+/// Per-step cache for the backward pass.
+struct StepCache {
+    x: Vec<f32>,
+    h_prev: Vec<f32>,
+    c_prev: Vec<f32>,
+    /// Gate activations [i, f, g, o], each of length H.
+    gates: Vec<f32>,
+    c: Vec<f32>,
+}
+
+/// LSTM cell. Gate order in the packed weight matrices: i, f, g, o.
+pub struct Lstm {
+    pub hidden: usize,
+    pub input: usize,
+    pub wx: Param, // 4H × I
+    pub wh: Param, // 4H × H
+    pub b: Param,  // 1 × 4H
+    /// Current recurrent state.
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+    /// Carried gradient state during the backward sweep.
+    dh_next: Vec<f32>,
+    dc_next: Vec<f32>,
+    tape: Vec<StepCache>,
+    forget_bias: f32,
+}
+
+impl Lstm {
+    pub fn new(name: &str, input: usize, hidden: usize, rng: &mut Rng) -> Lstm {
+        Lstm {
+            hidden,
+            input,
+            wx: Param::fan_in(&format!("{name}.wx"), 4 * hidden, input, input, rng),
+            wh: Param::fan_in(&format!("{name}.wh"), 4 * hidden, hidden, hidden, rng),
+            b: Param::zeros(&format!("{name}.b"), 1, 4 * hidden),
+            h: vec![0.0; hidden],
+            c: vec![0.0; hidden],
+            dh_next: vec![0.0; hidden],
+            dc_next: vec![0.0; hidden],
+            tape: Vec::new(),
+            forget_bias: 1.0,
+        }
+    }
+
+    /// Reset recurrent state and drop the tape (episode boundary).
+    pub fn reset(&mut self) {
+        self.h.iter_mut().for_each(|x| *x = 0.0);
+        self.c.iter_mut().for_each(|x| *x = 0.0);
+        self.dh_next.iter_mut().for_each(|x| *x = 0.0);
+        self.dc_next.iter_mut().for_each(|x| *x = 0.0);
+        self.tape.clear();
+    }
+
+    /// One forward step; returns h_t (also kept in `self.h`).
+    pub fn step(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.input);
+        let hs = self.hidden;
+        let mut z = self.b.w.data.clone(); // 4H
+        for (r, zi) in z.iter_mut().enumerate() {
+            *zi += dot(self.wx.w.row(r), x) + dot(self.wh.w.row(r), &self.h);
+        }
+        let mut gates = vec![0.0f32; 4 * hs];
+        for j in 0..hs {
+            gates[j] = sigmoid(z[j]); // i
+            gates[hs + j] = sigmoid(z[hs + j] + self.forget_bias); // f
+            gates[2 * hs + j] = tanh(z[2 * hs + j]); // g
+            gates[3 * hs + j] = sigmoid(z[3 * hs + j]); // o
+        }
+        let c_prev = self.c.clone();
+        let h_prev = self.h.clone();
+        let mut c = vec![0.0f32; hs];
+        let mut h = vec![0.0f32; hs];
+        for j in 0..hs {
+            c[j] = gates[hs + j] * c_prev[j] + gates[j] * gates[2 * hs + j];
+            h[j] = gates[3 * hs + j] * tanh(c[j]);
+        }
+        self.c = c.clone();
+        self.h = h.clone();
+        self.tape.push(StepCache { x: x.to_vec(), h_prev, c_prev, gates, c });
+        h
+    }
+
+    /// Backward the most recent un-backpropagated step. `dh` is dL/dh_t from
+    /// this step's consumers; the recurrent grads (from t+1) are carried
+    /// internally. Returns dL/dx_t.
+    pub fn backward(&mut self, dh_ext: &[f32]) -> Vec<f32> {
+        let cache = self.tape.pop().expect("lstm backward without forward");
+        let hs = self.hidden;
+        let mut dh = dh_ext.to_vec();
+        axpy(&mut dh, 1.0, &self.dh_next);
+        let mut dz = vec![0.0f32; 4 * hs];
+        let mut dc_prev = vec![0.0f32; hs];
+        for j in 0..hs {
+            let (i, f, g, o) = (
+                cache.gates[j],
+                cache.gates[hs + j],
+                cache.gates[2 * hs + j],
+                cache.gates[3 * hs + j],
+            );
+            let tc = tanh(cache.c[j]);
+            let d_o = dh[j] * tc;
+            let dc = self.dc_next[j] + dh[j] * o * dtanh(tc);
+            let d_i = dc * g;
+            let d_f = dc * cache.c_prev[j];
+            let d_g = dc * i;
+            dc_prev[j] = dc * f;
+            dz[j] = d_i * dsigmoid(i);
+            dz[hs + j] = d_f * dsigmoid(f);
+            dz[2 * hs + j] = d_g * dtanh(g);
+            dz[3 * hs + j] = d_o * dsigmoid(o);
+        }
+        // Parameter grads.
+        outer_acc(&mut self.wx.g, &dz, &cache.x);
+        outer_acc(&mut self.wh.g, &dz, &cache.h_prev);
+        axpy(&mut self.b.g.data, 1.0, &dz);
+        // Input grad and carried recurrent grads.
+        let mut dx = vec![0.0f32; self.input];
+        let mut dh_prev = vec![0.0f32; hs];
+        for (r, &dzr) in dz.iter().enumerate() {
+            if dzr != 0.0 {
+                axpy(&mut dx, dzr, self.wx.w.row(r));
+                axpy(&mut dh_prev, dzr, self.wh.w.row(r));
+            }
+        }
+        self.dh_next = dh_prev;
+        self.dc_next = dc_prev;
+        dx
+    }
+
+    pub fn tape_len(&self) -> usize {
+        self.tape.len()
+    }
+
+    pub fn cache_bytes(&self) -> usize {
+        self.tape
+            .iter()
+            .map(|s| {
+                (s.x.capacity()
+                    + s.h_prev.capacity()
+                    + s.c_prev.capacity()
+                    + s.gates.capacity()
+                    + s.c.capacity())
+                    * 4
+                    + 5 * 24
+            })
+            .sum()
+    }
+}
+
+impl HasParams for Lstm {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.wx);
+        f(&mut self.wh);
+        f(&mut self.b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run T steps, probe-loss = Σ_t probe_t · h_t. Used for FD checks.
+    fn run_loss(lstm: &mut Lstm, xs: &[Vec<f32>], probes: &[Vec<f32>]) -> f32 {
+        lstm.reset();
+        let mut loss = 0.0;
+        for (x, p) in xs.iter().zip(probes) {
+            let h = lstm.step(x);
+            loss += dot(&h, p);
+        }
+        loss
+    }
+
+    #[test]
+    fn bptt_gradients_match_fd() {
+        let (input, hidden, t_len) = (3, 4, 5);
+        let mut rng = Rng::new(10);
+        let mut lstm = Lstm::new("t", input, hidden, &mut rng);
+        let xs: Vec<Vec<f32>> = (0..t_len)
+            .map(|_| (0..input).map(|_| rng.normal()).collect())
+            .collect();
+        let probes: Vec<Vec<f32>> = (0..t_len)
+            .map(|_| (0..hidden).map(|_| rng.normal()).collect())
+            .collect();
+
+        // Analytic grads.
+        run_loss(&mut lstm, &xs, &probes);
+        let mut dxs = Vec::new();
+        for t in (0..t_len).rev() {
+            dxs.push(lstm.backward(&probes[t]));
+        }
+        dxs.reverse();
+
+        let eps = 1e-2f32;
+        // Check all wx entries and a few wh/b entries.
+        let mut checked = 0;
+        for (pi, idxs) in [(0usize, 0..12usize), (1, 0..8), (2, 0..8)] {
+            for k in idxs {
+                let (orig, an) = {
+                    let p = match pi {
+                        0 => &mut lstm.wx,
+                        1 => &mut lstm.wh,
+                        _ => &mut lstm.b,
+                    };
+                    if k >= p.w.data.len() {
+                        continue;
+                    }
+                    (p.w.data[k], p.g.data[k])
+                };
+                let set = |l: &mut Lstm, v: f32| match pi {
+                    0 => l.wx.w.data[k] = v,
+                    1 => l.wh.w.data[k] = v,
+                    _ => l.b.w.data[k] = v,
+                };
+                set(&mut lstm, orig + eps);
+                let lp = run_loss(&mut lstm, &xs, &probes);
+                set(&mut lstm, orig - eps);
+                let lm = run_loss(&mut lstm, &xs, &probes);
+                set(&mut lstm, orig);
+                let fd = (lp - lm) / (2.0 * eps);
+                let err = (fd - an).abs() / (1.0f32).max(fd.abs());
+                assert!(err < 2e-2, "param {pi} [{k}]: fd={fd} an={an}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 20);
+
+        // Check dx at t=0 (full recurrent path).
+        lstm.reset();
+        for k in 0..input {
+            let mut xp = xs.clone();
+            xp[0][k] += eps;
+            let lp = run_loss(&mut lstm, &xp, &probes);
+            xp[0][k] -= 2.0 * eps;
+            let lm = run_loss(&mut lstm, &xp, &probes);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dxs[0][k]).abs() < 2e-2, "dx[{k}]: fd={fd} an={}", dxs[0][k]);
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut rng = Rng::new(11);
+        let mut lstm = Lstm::new("t", 2, 3, &mut rng);
+        lstm.step(&[1.0, -1.0]);
+        assert!(lstm.h.iter().any(|&x| x != 0.0));
+        lstm.reset();
+        assert!(lstm.h.iter().all(|&x| x == 0.0));
+        assert_eq!(lstm.tape_len(), 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let mut a = Lstm::new("a", 2, 2, &mut r1);
+        let mut b = Lstm::new("b", 2, 2, &mut r2);
+        assert_eq!(a.step(&[0.5, 0.5]), b.step(&[0.5, 0.5]));
+    }
+}

@@ -1,0 +1,6 @@
+//! Neural building blocks with hand-derived backward passes.
+pub mod act;
+pub mod linear;
+pub mod loss;
+pub mod lstm;
+pub mod param;

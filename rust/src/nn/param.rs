@@ -1,0 +1,141 @@
+//! Trainable parameters: a value matrix, its gradient accumulator, and
+//! optimizer slots (RMSProp mean-square / Adam moments live here so the
+//! optimizer stays stateless over a `visit_params` walk).
+
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// One trainable tensor (matrices; vectors are 1×n or n×1 matrices).
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    /// Value.
+    pub w: Matrix,
+    /// Gradient accumulator (zeroed by the optimizer after each update).
+    pub g: Matrix,
+    /// Optimizer slot 1 (RMSProp mean-square / Adam v).
+    pub m1: Matrix,
+    /// Optimizer slot 2 (Adam m); lazily sized.
+    pub m2: Matrix,
+}
+
+impl Param {
+    pub fn zeros(name: &str, rows: usize, cols: usize) -> Param {
+        Param {
+            name: name.to_string(),
+            w: Matrix::zeros(rows, cols),
+            g: Matrix::zeros(rows, cols),
+            m1: Matrix::zeros(rows, cols),
+            m2: Matrix::zeros(rows, cols),
+        }
+    }
+
+    /// Uniform(-bound, bound) init (the classic fan-in scaling).
+    pub fn uniform(name: &str, rows: usize, cols: usize, bound: f32, rng: &mut Rng) -> Param {
+        let mut p = Param::zeros(name, rows, cols);
+        for v in p.w.data.iter_mut() {
+            *v = rng.uniform_in(-bound, bound);
+        }
+        p
+    }
+
+    /// Fan-in scaled uniform init: bound = 1/sqrt(fan_in).
+    pub fn fan_in(name: &str, rows: usize, cols: usize, fan_in: usize, rng: &mut Rng) -> Param {
+        Param::uniform(name, rows, cols, 1.0 / (fan_in as f32).sqrt(), rng)
+    }
+
+    pub fn len(&self) -> usize {
+        self.w.data.len()
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.g.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Anything that owns parameters exposes them for the optimizer and for
+/// serialization through this visitor.
+pub trait HasParams {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param));
+
+    fn param_count(&mut self) -> usize {
+        let mut n = 0;
+        self.visit_params(&mut |p| n += p.len());
+        n
+    }
+
+    fn zero_grads(&mut self) {
+        self.visit_params(&mut |p| p.zero_grad());
+    }
+
+    /// Global L2 norm of all gradients (for clipping diagnostics).
+    fn grad_norm(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        self.visit_params(&mut |p| s += p.g.norm_sq());
+        s.sqrt()
+    }
+
+    /// Flatten all parameter values (checkpointing).
+    fn save_values(&mut self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.visit_params(&mut |p| out.extend_from_slice(&p.w.data));
+        out
+    }
+
+    /// Restore from `save_values` output. Panics on length mismatch.
+    fn load_values(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        self.visit_params(&mut |p| {
+            let n = p.w.data.len();
+            p.w.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        });
+        assert_eq!(off, flat.len(), "checkpoint size mismatch");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Two {
+        a: Param,
+        b: Param,
+    }
+
+    impl HasParams for Two {
+        fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+            f(&mut self.a);
+            f(&mut self.b);
+        }
+    }
+
+    #[test]
+    fn visitor_counts_and_roundtrips() {
+        let mut rng = Rng::new(1);
+        let mut t = Two {
+            a: Param::fan_in("a", 3, 4, 4, &mut rng),
+            b: Param::fan_in("b", 2, 2, 2, &mut rng),
+        };
+        assert_eq!(t.param_count(), 16);
+        let saved = t.save_values();
+        let orig_a = t.a.w.data.clone();
+        t.a.w.data.iter_mut().for_each(|x| *x = 0.0);
+        t.load_values(&saved);
+        assert_eq!(t.a.w.data, orig_a);
+    }
+
+    #[test]
+    fn grad_norm_and_zero() {
+        let mut rng = Rng::new(2);
+        let mut t = Two {
+            a: Param::fan_in("a", 2, 2, 2, &mut rng),
+            b: Param::fan_in("b", 2, 2, 2, &mut rng),
+        };
+        t.a.g.data = vec![3.0, 0.0, 0.0, 0.0];
+        t.b.g.data = vec![4.0, 0.0, 0.0, 0.0];
+        assert!((t.grad_norm() - 5.0).abs() < 1e-6);
+        t.zero_grads();
+        assert_eq!(t.grad_norm(), 0.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Optimizers: RMSProp (the paper's choice, Supp C) and Adam, plus global
+//! gradient-norm clipping. Optimizer slots live inside each [`Param`].
+
+use crate::nn::param::{HasParams, Param};
+
+/// An optimizer consumes accumulated gradients and updates values in place,
+/// then zeroes the gradients.
+pub trait Optimizer: Send {
+    fn step(&mut self, model: &mut dyn HasParams);
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// RMSProp (Tieleman & Hinton 2012) as used in the paper (Supp C).
+pub struct RmsProp {
+    pub lr: f32,
+    pub decay: f32,
+    pub eps: f32,
+    /// Optional global-norm clip applied before the update.
+    pub clip: Option<GradClip>,
+}
+
+impl RmsProp {
+    pub fn new(lr: f32) -> RmsProp {
+        RmsProp { lr, decay: 0.9, eps: 1e-8, clip: Some(GradClip { max_norm: 10.0 }) }
+    }
+
+    fn update_param(&self, p: &mut Param, scale: f32) {
+        for k in 0..p.w.data.len() {
+            let g = p.g.data[k] * scale;
+            let ms = self.decay * p.m1.data[k] + (1.0 - self.decay) * g * g;
+            p.m1.data[k] = ms;
+            p.w.data[k] -= self.lr * g / (ms.sqrt() + self.eps);
+            p.g.data[k] = 0.0;
+        }
+    }
+}
+
+impl Optimizer for RmsProp {
+    fn step(&mut self, model: &mut dyn HasParams) {
+        let scale = self.clip.as_ref().map(|c| c.scale(model)).unwrap_or(1.0);
+        self.update_param_all(model, scale);
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+impl RmsProp {
+    fn update_param_all(&self, model: &mut dyn HasParams, scale: f32) {
+        model.visit_params(&mut |p| self.update_param(p, scale));
+    }
+}
+
+/// Adam (for ablations; the paper used RMSProp).
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub clip: Option<GradClip>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, clip: Some(GradClip { max_norm: 10.0 }), t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, model: &mut dyn HasParams) {
+        self.t += 1;
+        let scale = self.clip.as_ref().map(|c| c.scale(model)).unwrap_or(1.0);
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (b1, b2, lr, eps) = (self.beta1, self.beta2, self.lr, self.eps);
+        model.visit_params(&mut |p| {
+            for k in 0..p.w.data.len() {
+                let g = p.g.data[k] * scale;
+                p.m2.data[k] = b1 * p.m2.data[k] + (1.0 - b1) * g;
+                p.m1.data[k] = b2 * p.m1.data[k] + (1.0 - b2) * g * g;
+                let mhat = p.m2.data[k] / bc1;
+                let vhat = p.m1.data[k] / bc2;
+                p.w.data[k] -= lr * mhat / (vhat.sqrt() + eps);
+                p.g.data[k] = 0.0;
+            }
+        });
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Global L2-norm gradient clip.
+pub struct GradClip {
+    pub max_norm: f32,
+}
+
+impl GradClip {
+    /// Returns the scale to apply to every gradient.
+    pub fn scale(&self, model: &mut dyn HasParams) -> f32 {
+        let norm = model.grad_norm();
+        if norm > self.max_norm && norm > 0.0 {
+            self.max_norm / norm
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::param::Param;
+
+    struct One {
+        p: Param,
+    }
+    impl HasParams for One {
+        fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+            f(&mut self.p);
+        }
+    }
+
+    /// Minimize (w-3)^2 with RMSProp: dL/dw = 2(w-3).
+    #[test]
+    fn rmsprop_converges_on_quadratic() {
+        let mut m = One { p: Param::zeros("w", 1, 1) };
+        let mut opt = RmsProp::new(0.05);
+        for _ in 0..500 {
+            m.p.g.data[0] = 2.0 * (m.p.w.data[0] - 3.0);
+            opt.step(&mut m);
+        }
+        assert!((m.p.w.data[0] - 3.0).abs() < 0.05, "w={}", m.p.w.data[0]);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut m = One { p: Param::zeros("w", 1, 1) };
+        let mut opt = Adam::new(0.05);
+        for _ in 0..500 {
+            m.p.g.data[0] = 2.0 * (m.p.w.data[0] + 1.5);
+            opt.step(&mut m);
+        }
+        assert!((m.p.w.data[0] + 1.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn clip_bounds_update() {
+        let mut m = One { p: Param::zeros("w", 1, 2) };
+        m.p.g.data = vec![300.0, 400.0]; // norm 500
+        let clip = GradClip { max_norm: 5.0 };
+        let s = clip.scale(&mut m);
+        assert!((s - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_zeroes_grads() {
+        let mut m = One { p: Param::zeros("w", 1, 2) };
+        m.p.g.data = vec![1.0, -1.0];
+        RmsProp::new(0.01).step(&mut m);
+        assert_eq!(m.p.g.data, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,459 @@
+//! Synthetic Babi-style question answering (paper §4.4, Tables 1-2).
+//!
+//! **Substitution** (documented in DESIGN.md): the licensed bAbI download
+//! is unavailable offline, so we generate stories from the same recipe
+//! Weston et al. used — a simulated world of actors, objects and locations
+//! with template sentences over a ~150-word vocabulary — covering eight of
+//! the twenty task families. Stories stream one 1-hot word per step; the
+//! model must emit the answer word at the step after the question mark.
+//! This exercises the identical model path (long-context fact retrieval
+//! from memory) and yields the same-shaped per-family error table.
+
+use super::{Episode, LossKind, Task};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+pub const FAMILIES: [&str; 8] = [
+    "1:one-supporting-fact",
+    "2:two-supporting-facts",
+    "5:three-arg-relations",
+    "6:yes-no",
+    "7:counting",
+    "8:lists-sets",
+    "11:coreference",
+    "16:induction",
+];
+
+const ACTORS: [&str; 6] = ["john", "mary", "sandra", "daniel", "bill", "julie"];
+const LOCATIONS: [&str; 8] = [
+    "kitchen", "garden", "office", "bathroom", "bedroom", "hallway", "park", "school",
+];
+const OBJECTS: [&str; 6] = ["apple", "football", "milk", "book", "key", "hammer"];
+const ANIMALS: [&str; 4] = ["frog", "swan", "lion", "rhino"];
+const COLORS: [&str; 4] = ["green", "white", "yellow", "gray"];
+const NUMBERS: [&str; 5] = ["zero", "one", "two", "three", "four"];
+const MISC: [&str; 18] = [
+    "went", "to", "picked", "up", "dropped", "gave", "where", "is", "what", "how", "many",
+    "carrying", "objects", "yes", "no", "none", "he", "she",
+];
+const PUNCT: [&str; 2] = [".", "?"];
+
+/// Word-level 1-hot vocabulary shared by all families.
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl Vocab {
+    pub fn build() -> Vocab {
+        let mut words: Vec<String> = Vec::new();
+        for list in [
+            &ACTORS[..],
+            &LOCATIONS[..],
+            &OBJECTS[..],
+            &ANIMALS[..],
+            &COLORS[..],
+            &NUMBERS[..],
+            &MISC[..],
+            &PUNCT[..],
+        ] {
+            for w in list {
+                words.push((*w).to_string());
+            }
+        }
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i))
+            .collect();
+        Vocab { words, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn id(&self, w: &str) -> usize {
+        *self
+            .index
+            .get(w)
+            .unwrap_or_else(|| panic!("word {w:?} not in vocab"))
+    }
+
+    pub fn word(&self, id: usize) -> &str {
+        &self.words[id]
+    }
+}
+
+/// A story being generated: sentences (word lists) plus the final question
+/// and its one-word answer.
+struct Qa {
+    sentences: Vec<Vec<String>>,
+    question: Vec<String>,
+    answer: String,
+}
+
+pub struct BabiTask {
+    pub vocab: Vocab,
+    /// Restrict generation to one family (None = sample uniformly — the
+    /// paper's joint training).
+    pub only_family: Option<usize>,
+}
+
+impl BabiTask {
+    pub fn new() -> BabiTask {
+        BabiTask { vocab: Vocab::build(), only_family: None }
+    }
+
+    pub fn family(fam: usize) -> BabiTask {
+        BabiTask { vocab: Vocab::build(), only_family: Some(fam) }
+    }
+
+    fn s(words: &[&str]) -> Vec<String> {
+        words.iter().map(|w| w.to_string()).collect()
+    }
+
+    /// family 0 — one supporting fact: track an actor's latest location.
+    fn gen_one_fact(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let mut locs: HashMap<&str, &str> = HashMap::new();
+        let mut sentences = Vec::new();
+        for _ in 0..n_facts {
+            let a = ACTORS[rng.below(ACTORS.len())];
+            let l = LOCATIONS[rng.below(LOCATIONS.len())];
+            locs.insert(a, l);
+            sentences.push(Self::s(&[a, "went", "to", l, "."]));
+        }
+        let known: Vec<&&str> = locs.keys().collect();
+        let a = *known[rng.below(known.len())];
+        Qa {
+            sentences,
+            question: Self::s(&["where", "is", a, "?"]),
+            answer: locs[&a[..]].to_string(),
+        }
+    }
+
+    /// family 1 — two supporting facts: where is the object? (actor carried
+    /// it somewhere).
+    fn gen_two_facts(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let mut locs: HashMap<&str, &str> = HashMap::new();
+        let mut holding: HashMap<&str, &str> = HashMap::new(); // object -> actor
+        let mut sentences = Vec::new();
+        // Seed: someone picks up the queried object.
+        let obj = OBJECTS[rng.below(OBJECTS.len())];
+        let holder = ACTORS[rng.below(ACTORS.len())];
+        holding.insert(obj, holder);
+        sentences.push(Self::s(&[holder, "picked", "up", obj, "."]));
+        let l0 = LOCATIONS[rng.below(LOCATIONS.len())];
+        locs.insert(holder, l0);
+        sentences.push(Self::s(&[holder, "went", "to", l0, "."]));
+        for _ in 0..n_facts {
+            let a = ACTORS[rng.below(ACTORS.len())];
+            let l = LOCATIONS[rng.below(LOCATIONS.len())];
+            locs.insert(a, l);
+            sentences.push(Self::s(&[a, "went", "to", l, "."]));
+        }
+        let answer = locs[holding[obj]].to_string();
+        Qa { sentences, question: Self::s(&["where", "is", obj, "?"]), answer }
+    }
+
+    /// family 2 — three-argument relations: "gave" transfers possession.
+    fn gen_three_arg(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let obj = OBJECTS[rng.below(OBJECTS.len())];
+        let mut owner = ACTORS[rng.below(ACTORS.len())];
+        let mut sentences = vec![Self::s(&[owner, "picked", "up", obj, "."])];
+        for _ in 0..n_facts.max(1) {
+            let next = ACTORS[rng.below(ACTORS.len())];
+            if next == owner {
+                continue;
+            }
+            sentences.push(Self::s(&[owner, "gave", obj, "to", next, "."]));
+            owner = next;
+        }
+        Qa {
+            sentences,
+            question: Self::s(&["where", "is", obj, "carrying", "?"]), // "who is carrying obj"
+            answer: owner.to_string(),
+        }
+    }
+
+    /// family 3 — yes/no questions: is actor in location?
+    fn gen_yes_no(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let mut locs: HashMap<&str, &str> = HashMap::new();
+        let mut sentences = Vec::new();
+        for _ in 0..n_facts.max(1) {
+            let a = ACTORS[rng.below(ACTORS.len())];
+            let l = LOCATIONS[rng.below(LOCATIONS.len())];
+            locs.insert(a, l);
+            sentences.push(Self::s(&[a, "went", "to", l, "."]));
+        }
+        let known: Vec<&&str> = locs.keys().collect();
+        let a = *known[rng.below(known.len())];
+        let actual = locs[&a[..]];
+        let asked = if rng.bernoulli(0.5) {
+            actual
+        } else {
+            LOCATIONS[rng.below(LOCATIONS.len())]
+        };
+        let answer = if asked == actual { "yes" } else { "no" };
+        Qa {
+            sentences,
+            question: Self::s(&["is", &a, "to", asked, "?"]),
+            answer: answer.to_string(),
+        }
+    }
+
+    /// family 4 — counting: how many objects is the actor carrying?
+    fn gen_counting(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let a = ACTORS[rng.below(ACTORS.len())];
+        let mut count: usize = 0;
+        let mut held: Vec<&str> = Vec::new();
+        let mut sentences = Vec::new();
+        for _ in 0..n_facts.max(2) {
+            if !held.is_empty() && rng.bernoulli(0.35) {
+                let i = rng.below(held.len());
+                let o = held.remove(i);
+                count -= 1;
+                sentences.push(Self::s(&[a, "dropped", o, "."]));
+            } else if count < NUMBERS.len() - 1 {
+                let o = OBJECTS[rng.below(OBJECTS.len())];
+                if held.contains(&o) {
+                    continue;
+                }
+                held.push(o);
+                count += 1;
+                sentences.push(Self::s(&[a, "picked", "up", o, "."]));
+            }
+        }
+        Qa {
+            sentences,
+            question: Self::s(&["how", "many", "objects", &a, "?"]),
+            answer: NUMBERS[count].to_string(),
+        }
+    }
+
+    /// family 5 — lists/sets: what is the actor carrying (most recent)?
+    fn gen_lists(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let a = ACTORS[rng.below(ACTORS.len())];
+        let mut latest = OBJECTS[rng.below(OBJECTS.len())];
+        let mut sentences = vec![Self::s(&[a, "picked", "up", latest, "."])];
+        for _ in 0..n_facts {
+            // distractors from other actors
+            let other = ACTORS[rng.below(ACTORS.len())];
+            let o = OBJECTS[rng.below(OBJECTS.len())];
+            if other == a {
+                latest = o;
+            }
+            sentences.push(Self::s(&[other, "picked", "up", o, "."]));
+        }
+        Qa {
+            sentences,
+            question: Self::s(&["what", "is", &a, "carrying", "?"]),
+            answer: latest.to_string(),
+        }
+    }
+
+    /// family 6 — basic coreference: "he/she" refers to the last actor.
+    fn gen_coreference(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let a = ACTORS[rng.below(ACTORS.len())];
+        let pronoun = if matches!(a, "mary" | "sandra" | "julie") { "she" } else { "he" };
+        let l1 = LOCATIONS[rng.below(LOCATIONS.len())];
+        let mut sentences = vec![Self::s(&[a, "went", "to", l1, "."])];
+        let mut cur = l1;
+        for _ in 0..n_facts.max(1) {
+            let l = LOCATIONS[rng.below(LOCATIONS.len())];
+            cur = l;
+            sentences.push(Self::s(&[pronoun, "went", "to", l, "."]));
+        }
+        Qa {
+            sentences,
+            question: Self::s(&["where", "is", a, "?"]),
+            answer: cur.to_string(),
+        }
+    }
+
+    /// family 7 — basic induction: animals of a species share a color.
+    fn gen_induction(&self, n_facts: usize, rng: &mut Rng) -> Qa {
+        let mut color_of: HashMap<&str, &str> = HashMap::new();
+        let mut sentences = Vec::new();
+        let mut exemplars: Vec<(&str, &str)> = Vec::new(); // (name=actor, species)
+        for _ in 0..n_facts.max(2) {
+            let species = ANIMALS[rng.below(ANIMALS.len())];
+            let color = *color_of
+                .entry(species)
+                .or_insert_with(|| COLORS[rng.below(COLORS.len())]);
+            let name = ACTORS[rng.below(ACTORS.len())];
+            // "<name> is <species> . <species> is <color> ."
+            sentences.push(Self::s(&[name, "is", species, "."]));
+            sentences.push(Self::s(&[species, "is", color, "."]));
+            exemplars.push((name, species));
+        }
+        let (name, species) = exemplars[rng.below(exemplars.len())];
+        Qa {
+            sentences,
+            question: Self::s(&["what", "is", name, "?"]),
+            answer: color_of[species].to_string(),
+        }
+    }
+
+    fn generate(&self, family: usize, level: usize, rng: &mut Rng) -> Qa {
+        let n = level.max(2);
+        match family {
+            0 => self.gen_one_fact(n, rng),
+            1 => self.gen_two_facts(n, rng),
+            2 => self.gen_three_arg(n, rng),
+            3 => self.gen_yes_no(n, rng),
+            4 => self.gen_counting(n, rng),
+            5 => self.gen_lists(n, rng),
+            6 => self.gen_coreference(n, rng),
+            7 => self.gen_induction(n, rng),
+            _ => unreachable!(),
+        }
+    }
+}
+
+impl Default for BabiTask {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Task for BabiTask {
+    fn name(&self) -> &'static str {
+        "babi"
+    }
+
+    fn x_dim(&self) -> usize {
+        self.vocab.len()
+    }
+
+    fn y_dim(&self) -> usize {
+        self.vocab.len()
+    }
+
+    fn base_level(&self) -> usize {
+        3
+    }
+
+    fn sample(&self, level: usize, rng: &mut Rng) -> Episode {
+        let family = self
+            .only_family
+            .unwrap_or_else(|| rng.below(FAMILIES.len()));
+        let qa = self.generate(family, level, rng);
+        let v = self.vocab.len();
+        let mut word_ids: Vec<usize> = Vec::new();
+        for s in &qa.sentences {
+            for w in s {
+                word_ids.push(self.vocab.id(w));
+            }
+        }
+        for w in &qa.question {
+            word_ids.push(self.vocab.id(w));
+        }
+        let t_total = word_ids.len() + 1; // +1 answer slot
+        let mut inputs = vec![vec![0.0; v]; t_total];
+        let mut targets = vec![vec![0.0; v]; t_total];
+        let mut mask = vec![false; t_total];
+        for (t, &id) in word_ids.iter().enumerate() {
+            inputs[t][id] = 1.0;
+        }
+        let ans = self.vocab.id(&qa.answer);
+        targets[t_total - 1][ans] = 1.0;
+        mask[t_total - 1] = true;
+        Episode { inputs, targets, mask, loss: LossKind::Classes, family }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_babi_scale() {
+        let v = Vocab::build();
+        assert!(v.len() >= 40 && v.len() <= 160, "vocab {}", v.len());
+        assert_eq!(v.word(v.id("kitchen")), "kitchen");
+    }
+
+    #[test]
+    fn all_families_generate_valid_episodes() {
+        let mut rng = Rng::new(1);
+        for fam in 0..FAMILIES.len() {
+            let task = BabiTask::family(fam);
+            for _ in 0..10 {
+                let ep = task.sample(4, &mut rng);
+                assert_eq!(ep.family, fam);
+                assert_eq!(ep.scored_steps(), 1);
+                assert_eq!(ep.loss, LossKind::Classes);
+                // inputs are 1-hot except the answer slot
+                for t in 0..ep.len() - 1 {
+                    assert_eq!(
+                        ep.inputs[t].iter().filter(|&&x| x == 1.0).count(),
+                        1,
+                        "family {fam} step {t}"
+                    );
+                }
+                // answer is a valid 1-hot word
+                let last = &ep.targets[ep.len() - 1];
+                assert_eq!(last.iter().filter(|&&x| x == 1.0).count(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn one_fact_answer_is_latest_location() {
+        let task = BabiTask::family(0);
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let qa = task.gen_one_fact(5, &mut rng);
+            // find queried actor
+            let actor = qa.question[2].clone();
+            // last sentence mentioning the actor gives the answer
+            let mut latest = None;
+            for s in &qa.sentences {
+                if s[0] == actor {
+                    latest = Some(s[3].clone());
+                }
+            }
+            assert_eq!(latest.unwrap(), qa.answer);
+        }
+    }
+
+    #[test]
+    fn counting_answers_in_number_range() {
+        let task = BabiTask::family(4);
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let qa = task.gen_counting(6, &mut rng);
+            assert!(NUMBERS.contains(&qa.answer.as_str()));
+        }
+    }
+
+    #[test]
+    fn yes_no_balanced_enough() {
+        let task = BabiTask::family(3);
+        let mut rng = Rng::new(4);
+        let mut yes = 0;
+        for _ in 0..200 {
+            let qa = task.gen_yes_no(3, &mut rng);
+            if qa.answer == "yes" {
+                yes += 1;
+            }
+        }
+        assert!((40..=160).contains(&yes), "yes={yes}/200");
+    }
+
+    #[test]
+    fn joint_sampling_covers_families() {
+        let task = BabiTask::new();
+        let mut rng = Rng::new(5);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(task.sample(3, &mut rng).family);
+        }
+        assert_eq!(seen.len(), FAMILIES.len());
+    }
+}

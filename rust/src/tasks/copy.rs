@@ -1,0 +1,109 @@
+//! Copy task (paper §4.2, task 1; from the NTM paper): emit a verbatim copy
+//! of a random binary sequence after a delimiter. Level = sequence length.
+//!
+//! Input layout: [bits… , write-phase flag, delimiter flag].
+//! During the recall phase inputs are zero and targets carry the bits.
+
+use super::{Episode, LossKind, Task};
+use crate::util::rng::Rng;
+
+pub struct CopyTask {
+    pub bits: usize,
+}
+
+impl CopyTask {
+    /// Paper setup: 6-bit words, lengths 1-20 at base difficulty.
+    pub fn new(bits: usize) -> CopyTask {
+        CopyTask { bits }
+    }
+}
+
+impl Task for CopyTask {
+    fn name(&self) -> &'static str {
+        "copy"
+    }
+
+    fn x_dim(&self) -> usize {
+        self.bits + 2
+    }
+
+    fn y_dim(&self) -> usize {
+        self.bits
+    }
+
+    fn base_level(&self) -> usize {
+        // The paper trains on lengths 1..20 before the curriculum scales.
+        20
+    }
+
+    fn sample(&self, level: usize, rng: &mut Rng) -> Episode {
+        let len = rng.int_in(1, level.max(1));
+        let x_dim = self.x_dim();
+        let t_total = 2 * len + 1;
+        let mut inputs = vec![vec![0.0; x_dim]; t_total];
+        let mut targets = vec![vec![0.0; self.bits]; t_total];
+        let mut mask = vec![false; t_total];
+        let payload: Vec<Vec<f32>> = (0..len)
+            .map(|_| (0..self.bits).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+            .collect();
+        for (t, word) in payload.iter().enumerate() {
+            inputs[t][..self.bits].copy_from_slice(word);
+            inputs[t][self.bits] = 1.0; // write phase
+        }
+        inputs[len][self.bits + 1] = 1.0; // delimiter
+        for (i, word) in payload.iter().enumerate() {
+            let t = len + 1 + i;
+            targets[t].copy_from_slice(word);
+            mask[t] = true;
+        }
+        Episode { inputs, targets, mask, loss: LossKind::Bits, family: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_is_write_delim_recall() {
+        let task = CopyTask::new(6);
+        let mut rng = Rng::new(1);
+        let ep = task.sample(10, &mut rng);
+        let len = (ep.len() - 1) / 2;
+        assert!(len >= 1 && len <= 10);
+        assert_eq!(ep.len(), 2 * len + 1);
+        // delimiter at position len
+        assert_eq!(ep.inputs[len][7], 1.0);
+        // recall phase inputs are zero, targets masked on
+        for t in len + 1..ep.len() {
+            assert!(ep.inputs[t].iter().all(|&x| x == 0.0));
+            assert!(ep.mask[t]);
+        }
+        assert_eq!(ep.scored_steps(), len);
+    }
+
+    #[test]
+    fn target_equals_payload() {
+        let task = CopyTask::new(4);
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let ep = task.sample(8, &mut rng);
+            let len = (ep.len() - 1) / 2;
+            for i in 0..len {
+                let input_bits = &ep.inputs[i][..4];
+                let target_bits = &ep.targets[len + 1 + i][..];
+                assert_eq!(input_bits, target_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn level_bounds_length() {
+        let task = CopyTask::new(6);
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let ep = task.sample(3, &mut rng);
+            assert!(ep.len() <= 7);
+        }
+    }
+}

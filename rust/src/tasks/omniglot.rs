@@ -1,0 +1,213 @@
+//! Omniglot-style one-shot classification (paper §4.5, Fig 4), following
+//! Santoro et al. 2016: at each step the model sees a character example
+//! together with the *previous* step's correct label, and must emit the
+//! current example's label. Labels are randomly assigned per episode, so
+//! the model must bind example→label in memory on first presentation.
+//!
+//! **Substitution** (no Omniglot images offline, documented in DESIGN.md):
+//! a "character class" is a random unit prototype vector; an "example" of
+//! it is the prototype passed through a random per-example affine
+//! distortion (scaling + rotation in random 2-D subspaces) plus noise —
+//! mirroring the paper's rotate/stretch augmentation in embedding space.
+//! The memory system consumes an embedding either way; the one-shot
+//! recall structure is identical.
+//!
+//! Level = number of character classes in the episode; each class appears
+//! `presentations` times (paper: 10).
+
+use super::{Episode, LossKind, Task};
+use crate::util::rng::Rng;
+
+pub struct OmniglotTask {
+    /// Embedding dimension of a "character image".
+    pub embed_dim: usize,
+    /// Output label space (max classes per episode).
+    pub max_classes: usize,
+    /// Times each class appears per episode (paper: 10).
+    pub presentations: usize,
+    /// Per-example distortion noise.
+    pub noise: f32,
+}
+
+impl OmniglotTask {
+    pub fn new(embed_dim: usize, max_classes: usize) -> OmniglotTask {
+        OmniglotTask { embed_dim, max_classes, presentations: 10, noise: 0.15 }
+    }
+
+    fn prototype(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..self.embed_dim).map(|_| rng.normal()).collect();
+        let n = crate::tensor::matrix::norm(&v).max(1e-6);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    }
+
+    /// Distort a prototype: random 2-D rotation + scale + additive noise.
+    fn example_of(&self, proto: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let mut v = proto.to_vec();
+        // a few random planar rotations ("rotate")
+        for _ in 0..3 {
+            let i = rng.below(self.embed_dim);
+            let j = rng.below(self.embed_dim);
+            if i == j {
+                continue;
+            }
+            let theta = rng.uniform_in(-0.4, 0.4);
+            let (s, c) = theta.sin_cos();
+            let (vi, vj) = (v[i], v[j]);
+            v[i] = c * vi - s * vj;
+            v[j] = s * vi + c * vj;
+        }
+        // per-example scale ("stretch") and noise
+        let scale = rng.uniform_in(0.8, 1.2);
+        for x in v.iter_mut() {
+            *x = *x * scale + self.noise * rng.normal();
+        }
+        v
+    }
+}
+
+impl Task for OmniglotTask {
+    fn name(&self) -> &'static str {
+        "omniglot"
+    }
+
+    fn x_dim(&self) -> usize {
+        self.embed_dim + self.max_classes
+    }
+
+    fn y_dim(&self) -> usize {
+        self.max_classes
+    }
+
+    fn base_level(&self) -> usize {
+        3
+    }
+
+    fn sample(&self, level: usize, rng: &mut Rng) -> Episode {
+        let classes = level.clamp(2, self.max_classes);
+        let protos: Vec<Vec<f32>> = (0..classes).map(|_| self.prototype(rng)).collect();
+        // Random label assignment per episode (the one-shot twist).
+        let mut labels: Vec<usize> = (0..self.max_classes).collect();
+        rng.shuffle(&mut labels);
+        let labels = &labels[..classes];
+
+        // presentation order: each class `presentations` times, shuffled.
+        let mut order: Vec<usize> = (0..classes)
+            .flat_map(|c| std::iter::repeat(c).take(self.presentations))
+            .collect();
+        rng.shuffle(&mut order);
+
+        let t_total = order.len();
+        let x_dim = self.x_dim();
+        let mut inputs = vec![vec![0.0; x_dim]; t_total];
+        let mut targets = vec![vec![0.0; self.max_classes]; t_total];
+        let mut mask = vec![false; t_total];
+        let mut prev_label: Option<usize> = None;
+        for (t, &c) in order.iter().enumerate() {
+            let ex = self.example_of(&protos[c], rng);
+            inputs[t][..self.embed_dim].copy_from_slice(&ex);
+            if let Some(pl) = prev_label {
+                inputs[t][self.embed_dim + pl] = 1.0;
+            }
+            targets[t][labels[c]] = 1.0;
+            mask[t] = true;
+            prev_label = Some(labels[c]);
+        }
+        Episode { inputs, targets, mask, loss: LossKind::Classes, family: 0 }
+    }
+
+    /// Fraction of wrong predictions on presentations ≥ 2 of each class
+    /// (the first sighting is unguessable; the paper's errors-per-episode
+    /// metric likewise reflects post-first-presentation recall).
+    fn errors(&self, ep: &Episode, outputs: &[Vec<f32>]) -> f64 {
+        let mut seen = std::collections::HashSet::new();
+        let mut errs = 0.0;
+        let mut scored = 0.0;
+        for t in 0..ep.len() {
+            let want = crate::nn::loss::argmax(&ep.targets[t]);
+            if seen.insert(want) {
+                continue; // first presentation
+            }
+            scored += 1.0;
+            if crate::nn::loss::argmax(&outputs[t]) != want {
+                errs += 1.0;
+            }
+        }
+        if scored > 0.0 {
+            errs / scored
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matrix::cosine;
+
+    #[test]
+    fn episode_structure() {
+        let task = OmniglotTask::new(16, 8);
+        let mut rng = Rng::new(1);
+        let ep = task.sample(5, &mut rng);
+        assert_eq!(ep.len(), 5 * 10);
+        assert!(ep.mask.iter().all(|&m| m));
+        assert_eq!(ep.loss, LossKind::Classes);
+        // each target is one-hot
+        for t in &ep.targets {
+            assert_eq!(t.iter().filter(|&&x| x == 1.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn examples_cluster_by_class() {
+        let task = OmniglotTask::new(32, 4);
+        let mut rng = Rng::new(2);
+        let p1 = task.prototype(&mut rng);
+        let p2 = task.prototype(&mut rng);
+        let e1a = task.example_of(&p1, &mut rng);
+        let e1b = task.example_of(&p1, &mut rng);
+        let e2 = task.example_of(&p2, &mut rng);
+        let same = cosine(&e1a, &e1b, 1e-6);
+        let diff = cosine(&e1a, &e2, 1e-6);
+        assert!(same > diff + 0.2, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn prev_label_channel_lags_by_one() {
+        let task = OmniglotTask::new(8, 6);
+        let mut rng = Rng::new(3);
+        let ep = task.sample(3, &mut rng);
+        for t in 1..ep.len() {
+            let prev_target = crate::nn::loss::argmax(&ep.targets[t - 1]);
+            let chan: Vec<f32> = ep.inputs[t][8..].to_vec();
+            assert_eq!(crate::nn::loss::argmax(&chan), prev_target);
+            assert_eq!(chan.iter().sum::<f32>(), 1.0);
+        }
+        // first step has no previous label
+        assert!(ep.inputs[0][8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn error_metric_skips_first_presentations() {
+        let task = OmniglotTask::new(8, 4);
+        let mut rng = Rng::new(4);
+        let ep = task.sample(2, &mut rng);
+        // Perfect outputs -> zero error.
+        let outs: Vec<Vec<f32>> = ep.targets.clone();
+        assert_eq!(task.errors(&ep, &outs), 0.0);
+        // All-wrong outputs -> error 1.0 (on scored steps).
+        let bad: Vec<Vec<f32>> = ep
+            .targets
+            .iter()
+            .map(|t| {
+                let mut v = vec![0.0; t.len()];
+                let w = crate::nn::loss::argmax(t);
+                v[(w + 1) % t.len()] = 1.0;
+                v
+            })
+            .collect();
+        assert_eq!(task.errors(&ep, &bad), 1.0);
+    }
+}

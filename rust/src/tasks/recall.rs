@@ -1,0 +1,112 @@
+//! Associative recall (paper §4.2, task 2): present (key, value) pairs,
+//! then cue with one key; the model must return the associated value.
+//! Level = number of pairs stored (the paper's curriculum pushes this past
+//! 4000 pairs ⇒ episodes of thousands of steps, Fig 3a / Fig 8).
+//!
+//! Input layout: [bits…, key flag, value flag, query flag].
+
+use super::{Episode, LossKind, Task};
+use crate::util::rng::Rng;
+
+pub struct AssociativeRecall {
+    pub bits: usize,
+}
+
+impl AssociativeRecall {
+    /// Paper base setup: 3-6 pairs of 6-bit words.
+    pub fn new(bits: usize) -> AssociativeRecall {
+        AssociativeRecall { bits }
+    }
+
+    fn rand_word(&self, rng: &mut Rng) -> Vec<f32> {
+        (0..self.bits).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+impl Task for AssociativeRecall {
+    fn name(&self) -> &'static str {
+        "recall"
+    }
+
+    fn x_dim(&self) -> usize {
+        self.bits + 3
+    }
+
+    fn y_dim(&self) -> usize {
+        self.bits
+    }
+
+    fn base_level(&self) -> usize {
+        6
+    }
+
+    fn sample(&self, level: usize, rng: &mut Rng) -> Episode {
+        let pairs = rng.int_in(1.max(level.min(3)), level.max(3));
+        let x_dim = self.x_dim();
+        let t_total = 2 * pairs + 2;
+        let mut inputs = vec![vec![0.0; x_dim]; t_total];
+        let mut targets = vec![vec![0.0; self.bits]; t_total];
+        let mut mask = vec![false; t_total];
+
+        // Distinct keys so the answer is unambiguous.
+        let mut keys: Vec<Vec<f32>> = Vec::with_capacity(pairs);
+        while keys.len() < pairs {
+            let k = self.rand_word(rng);
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+        let values: Vec<Vec<f32>> = (0..pairs).map(|_| self.rand_word(rng)).collect();
+
+        for i in 0..pairs {
+            inputs[2 * i][..self.bits].copy_from_slice(&keys[i]);
+            inputs[2 * i][self.bits] = 1.0; // key flag
+            inputs[2 * i + 1][..self.bits].copy_from_slice(&values[i]);
+            inputs[2 * i + 1][self.bits + 1] = 1.0; // value flag
+        }
+        let q = rng.below(pairs);
+        let tq = 2 * pairs;
+        inputs[tq][..self.bits].copy_from_slice(&keys[q]);
+        inputs[tq][self.bits + 2] = 1.0; // query flag
+        targets[tq + 1].copy_from_slice(&values[q]);
+        mask[tq + 1] = true;
+        Episode { inputs, targets, mask, loss: LossKind::Bits, family: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_key_matches_a_stored_pair() {
+        let task = AssociativeRecall::new(6);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let ep = task.sample(5, &mut rng);
+            let pairs = (ep.len() - 2) / 2;
+            let tq = 2 * pairs;
+            assert_eq!(ep.inputs[tq][6 + 2], 1.0, "query flag");
+            // find the queried key among stored keys
+            let qkey = &ep.inputs[tq][..6];
+            let mut found = None;
+            for i in 0..pairs {
+                if &ep.inputs[2 * i][..6] == qkey {
+                    found = Some(i);
+                }
+            }
+            let i = found.expect("query key must be stored");
+            assert_eq!(&ep.inputs[2 * i + 1][..6], &ep.targets[tq + 1][..]);
+            assert_eq!(ep.scored_steps(), 1);
+        }
+    }
+
+    #[test]
+    fn level_scales_pairs() {
+        let task = AssociativeRecall::new(6);
+        let mut rng = Rng::new(2);
+        let ep = task.sample(50, &mut rng);
+        assert!(ep.len() >= 2 * 3 + 2);
+        assert!(ep.len() <= 2 * 50 + 2);
+    }
+}

@@ -1,0 +1,99 @@
+//! Priority sort (paper §4.2, task 3; from the NTM paper): given random
+//! keys with scalar priorities, return the top ⌈4/5·n⌉ keys in descending
+//! priority order. Level = number of input items (paper base: 20 in / 16 out).
+//!
+//! Input layout: [bits…, priority, input flag, delimiter flag].
+
+use super::{Episode, LossKind, Task};
+use crate::util::rng::Rng;
+
+pub struct PrioritySort {
+    pub bits: usize,
+}
+
+impl PrioritySort {
+    pub fn new(bits: usize) -> PrioritySort {
+        PrioritySort { bits }
+    }
+}
+
+impl Task for PrioritySort {
+    fn name(&self) -> &'static str {
+        "sort"
+    }
+
+    fn x_dim(&self) -> usize {
+        self.bits + 3
+    }
+
+    fn y_dim(&self) -> usize {
+        self.bits
+    }
+
+    fn base_level(&self) -> usize {
+        20
+    }
+
+    fn sample(&self, level: usize, rng: &mut Rng) -> Episode {
+        let n_in = level.max(2);
+        let n_out = ((4 * n_in) / 5).max(1);
+        let x_dim = self.x_dim();
+        let t_total = n_in + 1 + n_out;
+        let mut inputs = vec![vec![0.0; x_dim]; t_total];
+        let mut targets = vec![vec![0.0; self.bits]; t_total];
+        let mut mask = vec![false; t_total];
+
+        let mut items: Vec<(f32, Vec<f32>)> = (0..n_in)
+            .map(|_| {
+                let word: Vec<f32> =
+                    (0..self.bits).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+                (rng.uniform_in(-1.0, 1.0), word)
+            })
+            .collect();
+        for (t, (prio, word)) in items.iter().enumerate() {
+            inputs[t][..self.bits].copy_from_slice(word);
+            inputs[t][self.bits] = *prio;
+            inputs[t][self.bits + 1] = 1.0; // input flag
+        }
+        inputs[n_in][self.bits + 2] = 1.0; // delimiter
+        items.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for i in 0..n_out {
+            let t = n_in + 1 + i;
+            targets[t].copy_from_slice(&items[i].1);
+            mask[t] = true;
+        }
+        Episode { inputs, targets, mask, loss: LossKind::Bits, family: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_are_sorted_inputs() {
+        let task = PrioritySort::new(5);
+        let mut rng = Rng::new(1);
+        let ep = task.sample(10, &mut rng);
+        let n_in = 10;
+        let n_out = 8;
+        assert_eq!(ep.len(), n_in + 1 + n_out);
+        // reconstruct priorities and verify target order is descending
+        let mut pairs: Vec<(f32, Vec<f32>)> = (0..n_in)
+            .map(|t| (ep.inputs[t][5], ep.inputs[t][..5].to_vec()))
+            .collect();
+        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for i in 0..n_out {
+            assert_eq!(&ep.targets[n_in + 1 + i][..], &pairs[i].1[..], "rank {i}");
+        }
+        assert_eq!(ep.scored_steps(), n_out);
+    }
+
+    #[test]
+    fn paper_default_is_20_to_16() {
+        let task = PrioritySort::new(6);
+        let mut rng = Rng::new(2);
+        let ep = task.sample(task.base_level(), &mut rng);
+        assert_eq!(ep.len(), 20 + 1 + 16);
+    }
+}

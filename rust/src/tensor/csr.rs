@@ -1,0 +1,333 @@
+//! Sparse vector and CSR matrix formats.
+//!
+//! These play the role Eigen's CSC/CSR formats played in the paper's
+//! implementation (Supp E): sparse read/write weights `w̃`, the SDNC's
+//! row-truncated temporal link matrices `N_t`/`P_t` (Supp D), and the
+//! sparse gradients of Supp A. All per-step operations touch only the
+//! stored non-zeros, which is what delivers the paper's O(1)-per-step
+//! claims once the non-zero counts are bounded by K.
+
+use std::collections::HashMap;
+
+/// Sparse vector: parallel (index, value) arrays, indices strictly ascending.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SparseVec {
+    pub idx: Vec<usize>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new() -> SparseVec {
+        SparseVec::default()
+    }
+
+    /// Build from unsorted pairs, combining duplicate indices by addition.
+    pub fn from_pairs(mut pairs: Vec<(usize, f32)>) -> SparseVec {
+        pairs.sort_unstable_by_key(|p| p.0);
+        let mut out = SparseVec::new();
+        for (i, v) in pairs {
+            if let Some(&last) = out.idx.last() {
+                if last == i {
+                    *out.val.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            out.idx.push(i);
+            out.val.push(v);
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, f32)> + '_ {
+        self.idx.iter().copied().zip(self.val.iter().copied())
+    }
+
+    /// Value at index i (binary search), 0.0 if absent.
+    pub fn get(&self, i: usize) -> f32 {
+        match self.idx.binary_search(&i) {
+            Ok(p) => self.val[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, a: f32) {
+        for v in &mut self.val {
+            *v *= a;
+        }
+    }
+
+    /// Sum of values (∑ᵢ w(i) — used by DNC precedence updates).
+    pub fn sum(&self) -> f32 {
+        self.val.iter().sum()
+    }
+
+    /// Sparse a + b (union of supports).
+    pub fn add(&self, other: &SparseVec) -> SparseVec {
+        let mut pairs: Vec<(usize, f32)> = self.iter().collect();
+        pairs.extend(other.iter());
+        SparseVec::from_pairs(pairs)
+    }
+
+    /// self + scale * other.
+    pub fn add_scaled(&self, scale: f32, other: &SparseVec) -> SparseVec {
+        let mut pairs: Vec<(usize, f32)> = self.iter().collect();
+        pairs.extend(other.iter().map(|(i, v)| (i, scale * v)));
+        SparseVec::from_pairs(pairs)
+    }
+
+    /// Dot with another sparse vector (two-pointer merge).
+    pub fn dot_sparse(&self, other: &SparseVec) -> f32 {
+        let (mut i, mut j, mut s) = (0usize, 0usize, 0.0f32);
+        while i < self.nnz() && j < other.nnz() {
+            match self.idx[i].cmp(&other.idx[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    s += self.val[i] * other.val[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// Keep the k largest entries by |value| (the paper's top-K truncation).
+    pub fn truncate_top_k(&mut self, k: usize) {
+        if self.nnz() <= k {
+            return;
+        }
+        let mut order: Vec<usize> = (0..self.nnz()).collect();
+        order.sort_unstable_by(|&a, &b| {
+            self.val[b].abs().partial_cmp(&self.val[a].abs()).unwrap()
+        });
+        order.truncate(k);
+        order.sort_unstable();
+        self.idx = order.iter().map(|&p| self.idx[p]).collect();
+        self.val = order.iter().map(|&p| self.val[p]).collect();
+    }
+
+    /// Densify into a length-n vector.
+    pub fn to_dense(&self, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0; n];
+        for (i, v) in self.iter() {
+            out[i] = v;
+        }
+        out
+    }
+
+    /// Build from a dense slice keeping entries with |v| > threshold.
+    pub fn from_dense_thresholded(x: &[f32], threshold: f32) -> SparseVec {
+        let mut out = SparseVec::new();
+        for (i, &v) in x.iter().enumerate() {
+            if v.abs() > threshold {
+                out.idx.push(i);
+                out.val.push(v);
+            }
+        }
+        out
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.idx.capacity() * std::mem::size_of::<usize>()
+            + self.val.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Row-sparse matrix: a map from row index to a dense row vector.
+///
+/// This is the natural format for the gradients ∂L/∂M of Supp A: only rows
+/// touched by a (sparse) read in the *future* of the backward pass are live,
+/// and a full-row erase kills a row outright. It also backs the SDNC's
+/// K_L-truncated link matrices where each stored row has ≤ K_L non-zeros.
+#[derive(Debug, Clone, Default)]
+pub struct RowSparse {
+    pub cols: usize,
+    pub rows: HashMap<usize, Vec<f32>>,
+}
+
+impl RowSparse {
+    pub fn new(cols: usize) -> RowSparse {
+        RowSparse { cols, rows: HashMap::new() }
+    }
+
+    pub fn nnz_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn row(&self, i: usize) -> Option<&[f32]> {
+        self.rows.get(&i).map(|v| v.as_slice())
+    }
+
+    /// Mutable access, inserting a zero row if absent.
+    pub fn row_mut(&mut self, i: usize) -> &mut Vec<f32> {
+        let cols = self.cols;
+        self.rows.entry(i).or_insert_with(|| vec![0.0; cols])
+    }
+
+    /// row(i) += a * x
+    pub fn axpy_row(&mut self, i: usize, a: f32, x: &[f32]) {
+        assert_eq!(x.len(), self.cols);
+        let r = self.row_mut(i);
+        for (ri, xi) in r.iter_mut().zip(x) {
+            *ri += a * xi;
+        }
+    }
+
+    pub fn clear_row(&mut self, i: usize) {
+        self.rows.remove(&i);
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.rows.len() * (self.cols * std::mem::size_of::<f32>() + 64)
+    }
+}
+
+/// CSR matrix with a bounded number of non-zeros per row (the SDNC's
+/// `N_t`, `P_t` ∈ [0,1]^{N×N} with ≤ K_L entries per row, Supp D eq 17-20).
+///
+/// Rows are stored in a HashMap keyed by row index so that the structure
+/// costs O(#touched-rows), not O(N): for the SDNC only rows that were ever
+/// written to exist at all.
+#[derive(Debug, Clone, Default)]
+pub struct SparseLinkMatrix {
+    /// Per-row sparse entries (col -> value), each row holds ≤ k_max entries.
+    pub rows: HashMap<usize, SparseVec>,
+    pub k_max: usize,
+}
+
+impl SparseLinkMatrix {
+    pub fn new(k_max: usize) -> SparseLinkMatrix {
+        SparseLinkMatrix { rows: HashMap::new(), k_max }
+    }
+
+    pub fn row(&self, i: usize) -> Option<&SparseVec> {
+        self.rows.get(&i)
+    }
+
+    /// Replace row i, truncating to the k_max largest entries.
+    pub fn set_row(&mut self, i: usize, mut row: SparseVec) {
+        row.truncate_top_k(self.k_max);
+        if row.nnz() == 0 {
+            self.rows.remove(&i);
+        } else {
+            self.rows.insert(i, row);
+        }
+    }
+
+    /// y = Self · w  for sparse w: only rows in `row_filter` (the candidate
+    /// output support) need evaluating. For the SDNC the candidate support
+    /// is the set of rows that exist, intersected per eq (21).
+    pub fn mul_sparse(&self, w: &SparseVec) -> SparseVec {
+        // Touch only existing rows: O(#rows * K_L) worst case, but callers
+        // keep #rows bounded by the write history, and the product of two
+        // K-sparse structures is cheap.
+        let mut pairs = Vec::new();
+        for (&i, row) in &self.rows {
+            let v = row.dot_sparse(w);
+            if v != 0.0 {
+                pairs.push((i, v));
+            }
+        }
+        SparseVec::from_pairs(pairs)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.values().map(|r| r.nnz()).sum()
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.rows.values().map(|r| r.heap_bytes() + 64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_pairs_sorts_and_merges() {
+        let v = SparseVec::from_pairs(vec![(5, 1.0), (2, 2.0), (5, 3.0)]);
+        assert_eq!(v.idx, vec![2, 5]);
+        assert_eq!(v.val, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn get_and_dense_roundtrip() {
+        let v = SparseVec::from_pairs(vec![(1, 0.5), (7, -2.0)]);
+        assert_eq!(v.get(1), 0.5);
+        assert_eq!(v.get(3), 0.0);
+        let d = v.to_dense(10);
+        assert_eq!(d[7], -2.0);
+        let back = SparseVec::from_dense_thresholded(&d, 0.0);
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn add_scaled_union() {
+        let a = SparseVec::from_pairs(vec![(0, 1.0), (2, 1.0)]);
+        let b = SparseVec::from_pairs(vec![(2, 1.0), (5, 4.0)]);
+        let c = a.add_scaled(0.5, &b);
+        assert_eq!(c.to_dense(6), vec![1.0, 0.0, 1.5, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn dot_sparse_matches_dense() {
+        let a = SparseVec::from_pairs(vec![(1, 2.0), (4, 3.0), (9, -1.0)]);
+        let b = SparseVec::from_pairs(vec![(0, 5.0), (4, 2.0), (9, 2.0)]);
+        let dense: f32 = a
+            .to_dense(10)
+            .iter()
+            .zip(b.to_dense(10).iter())
+            .map(|(x, y)| x * y)
+            .sum();
+        assert_eq!(a.dot_sparse(&b), dense);
+    }
+
+    #[test]
+    fn truncate_keeps_largest() {
+        let mut v = SparseVec::from_pairs(vec![(0, 0.1), (1, -5.0), (2, 2.0), (3, 0.01)]);
+        v.truncate_top_k(2);
+        assert_eq!(v.idx, vec![1, 2]);
+        assert_eq!(v.val, vec![-5.0, 2.0]);
+    }
+
+    #[test]
+    fn row_sparse_axpy() {
+        let mut m = RowSparse::new(3);
+        m.axpy_row(7, 2.0, &[1.0, 0.0, 3.0]);
+        m.axpy_row(7, 1.0, &[0.0, 1.0, 0.0]);
+        assert_eq!(m.row(7).unwrap(), &[2.0, 1.0, 6.0]);
+        assert!(m.row(0).is_none());
+        m.clear_row(7);
+        assert_eq!(m.nnz_rows(), 0);
+    }
+
+    #[test]
+    fn link_matrix_mul_matches_dense() {
+        // 4x4 dense reference
+        let mut lm = SparseLinkMatrix::new(3);
+        lm.set_row(0, SparseVec::from_pairs(vec![(1, 0.5), (2, 0.5)]));
+        lm.set_row(2, SparseVec::from_pairs(vec![(3, 1.0)]));
+        let w = SparseVec::from_pairs(vec![(1, 1.0), (3, 2.0)]);
+        let y = lm.mul_sparse(&w);
+        // row0 . w = 0.5, row2 . w = 2.0
+        assert_eq!(y.to_dense(4), vec![0.5, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn link_matrix_row_truncation() {
+        let mut lm = SparseLinkMatrix::new(2);
+        lm.set_row(
+            0,
+            SparseVec::from_pairs(vec![(0, 0.9), (1, 0.1), (2, 0.5), (3, 0.01)]),
+        );
+        assert_eq!(lm.row(0).unwrap().nnz(), 2);
+        assert_eq!(lm.row(0).unwrap().idx, vec![0, 2]);
+    }
+}

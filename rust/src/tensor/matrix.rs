@@ -1,0 +1,292 @@
+//! Dense row-major f32 matrix and the handful of BLAS-like kernels the
+//! cores need. This fills the role Eigen played in the paper's reference
+//! implementation (Supp E). Hot loops are written to autovectorize.
+
+/// Dense row-major matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Frobenius norm squared.
+    pub fn norm_sq(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    /// self += other * scale
+    pub fn axpy(&mut self, scale: f32, other: &Matrix) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += scale * b;
+        }
+    }
+
+    /// Heap bytes held by this matrix (for the memory benchmarks).
+    pub fn heap_bytes(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<f32>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector kernels
+// ---------------------------------------------------------------------------
+
+/// y += a * x
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 8 independent accumulator lanes over bounds-check-free chunks so
+    // LLVM emits wide FMA SIMD without reassociating a serial reduction.
+    const LANES: usize = 8;
+    let mut acc = [0.0f32; LANES];
+    let (ca, ra) = a.split_at(a.len() - a.len() % LANES);
+    let (cb, rb) = b.split_at(ca.len());
+    for (xa, xb) in ca.chunks_exact(LANES).zip(cb.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Cosine similarity with epsilon guard (the paper's d(q, M(i))).
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32], eps: f32) -> f32 {
+    dot(a, b) / (norm(a) * norm(b) + eps)
+}
+
+// ---------------------------------------------------------------------------
+// GEMM-like kernels (all accumulate into the output: C += op(A) op(B))
+// ---------------------------------------------------------------------------
+
+/// y += A x  (A: m×n, x: n, y: m)
+pub fn gemv(y: &mut [f32], a: &Matrix, x: &[f32]) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    for i in 0..a.rows {
+        y[i] += dot(a.row(i), x);
+    }
+}
+
+/// y += Aᵀ x  (A: m×n, x: m, y: n)
+pub fn gemv_t(y: &mut [f32], a: &Matrix, x: &[f32]) {
+    assert_eq!(a.rows, x.len());
+    assert_eq!(a.cols, y.len());
+    for i in 0..a.rows {
+        axpy(y, x[i], a.row(i));
+    }
+}
+
+/// C += A B  (A: m×k, B: k×n, C: m×n); ikj loop order for cache-friendliness.
+pub fn gemm(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let n = b.cols;
+    for i in 0..a.rows {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for k in 0..a.cols {
+            let aik = a.get(i, k);
+            if aik != 0.0 {
+                axpy(crow, aik, b.row(k));
+            }
+        }
+    }
+}
+
+/// C += a bᵀ (outer product; a: m, b: n, C: m×n)
+pub fn outer_acc(c: &mut Matrix, a: &[f32], b: &[f32]) {
+    assert_eq!(c.rows, a.len());
+    assert_eq!(c.cols, b.len());
+    for i in 0..a.len() {
+        axpy(c.row_mut(i), a[i], b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax and friends
+// ---------------------------------------------------------------------------
+
+/// In-place stable softmax. Returns nothing; `x` becomes the distribution.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Backward of softmax: given y = softmax(x) and dL/dy, compute dL/dx.
+pub fn softmax_backward(y: &[f32], dy: &[f32], dx: &mut [f32]) {
+    let s = dot(y, dy);
+    for i in 0..y.len() {
+        dx[i] = y[i] * (dy[i] - s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Matrix::from_rows(vec![vec![1., 2., 3.], vec![4., 5., 6.]]);
+        let b = Matrix::from_rows(vec![vec![7., 8.], vec![9., 10.], vec![11., 12.]]);
+        let mut c = Matrix::zeros(2, 2);
+        gemm(&mut c, &a, &b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+        // accumulation semantics
+        gemm(&mut c, &a, &b);
+        assert_eq!(c.data, vec![116., 128., 278., 308.]);
+    }
+
+    #[test]
+    fn gemv_and_transpose() {
+        let a = Matrix::from_rows(vec![vec![1., 2.], vec![3., 4.], vec![5., 6.]]);
+        let mut y = vec![0.0; 3];
+        gemv(&mut y, &a, &[1., 1.]);
+        assert_eq!(y, vec![3., 7., 11.]);
+        let mut yt = vec![0.0; 2];
+        gemv_t(&mut yt, &a, &[1., 1., 1.]);
+        assert_eq!(yt, vec![9., 12.]);
+    }
+
+    #[test]
+    fn dot_odd_lengths() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = (0..13).map(|i| (i * i * 2) as f32).sum();
+        assert_eq!(dot(&a, &b), expect);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = [1.0, 0.0, 0.0];
+        let b = [1.0, 0.0, 0.0];
+        let c = [-1.0, 0.0, 0.0];
+        assert!((cosine(&a, &b, 1e-6) - 1.0).abs() < 1e-4);
+        assert!((cosine(&a, &c, 1e-6) + 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn softmax_backward_matches_fd() {
+        let x0 = vec![0.3f32, -0.7, 1.1, 0.05];
+        let dy = vec![0.2f32, -0.1, 0.4, 0.3];
+        let mut y = x0.clone();
+        softmax_inplace(&mut y);
+        let mut dx = vec![0.0; 4];
+        softmax_backward(&y, &dy, &mut dx);
+        let eps = 1e-3;
+        for i in 0..4 {
+            let mut xp = x0.clone();
+            xp[i] += eps;
+            softmax_inplace(&mut xp);
+            let mut xm = x0.clone();
+            xm[i] -= eps;
+            softmax_inplace(&mut xm);
+            let fd: f32 = (0..4).map(|j| (xp[j] - xm[j]) / (2.0 * eps) * dy[j]).sum();
+            assert!((fd - dx[i]).abs() < 1e-3, "i={i} fd={fd} an={}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn outer_product() {
+        let mut c = Matrix::zeros(2, 3);
+        outer_acc(&mut c, &[2.0, 3.0], &[1.0, 10.0, 100.0]);
+        assert_eq!(c.data, vec![2., 20., 200., 3., 30., 300.]);
+    }
+}

@@ -1,0 +1,4 @@
+//! Dense and sparse tensor kernels (the role Eigen played in the paper's
+//! Torch implementation).
+pub mod csr;
+pub mod matrix;

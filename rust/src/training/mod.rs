@@ -1,0 +1,266 @@
+//! Training stack: episode runner, BPTT trainer with curriculum, and
+//! (optionally) multi-worker data parallelism ([`workers`]).
+
+pub mod workers;
+
+use crate::cores::Core;
+use crate::curriculum::Curriculum;
+use crate::optim::Optimizer;
+use crate::tasks::{episode_loss_grad, Episode, Task};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Trainer hyper-parameters (paper Supp C: RMSProp, minibatch 8).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f32,
+    /// Episodes accumulated per parameter update.
+    pub batch: usize,
+    /// Parameter updates to run.
+    pub updates: usize,
+    pub log_every: usize,
+    pub seed: u64,
+    /// Print progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { lr: 1e-4, batch: 8, updates: 200, log_every: 10, seed: 7, verbose: false }
+    }
+}
+
+/// One logged point of a training run.
+#[derive(Debug, Clone)]
+pub struct LogPoint {
+    pub update: usize,
+    /// Mean loss per scored step over the logging window.
+    pub loss: f64,
+    /// Mean task errors per episode over the window.
+    pub errors: f64,
+    /// Curriculum ceiling h at this point.
+    pub level: usize,
+    pub wall_s: f64,
+}
+
+/// Full run record (serializable for EXPERIMENTS.md).
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub points: Vec<LogPoint>,
+    pub final_level: usize,
+    pub total_episodes: usize,
+}
+
+impl TrainLog {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("final_level", Json::num(self.final_level as f64)),
+            ("total_episodes", Json::num(self.total_episodes as f64)),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|p| {
+                    Json::obj(vec![
+                        ("update", Json::num(p.update as f64)),
+                        ("loss", Json::num(p.loss)),
+                        ("errors", Json::num(p.errors)),
+                        ("level", Json::num(p.level as f64)),
+                        ("wall_s", Json::num(p.wall_s)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Smallest loss seen over the run.
+    pub fn best_loss(&self) -> f64 {
+        self.points.iter().map(|p| p.loss).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Run one training episode: forward, per-step loss, backward, gradients
+/// accumulated into the core's params. Returns (total loss, scored steps,
+/// task errors, outputs).
+pub fn train_episode(core: &mut dyn Core, ep: &Episode) -> (f64, usize, Vec<Vec<f32>>) {
+    core.reset();
+    let mut dys: Vec<Vec<f32>> = Vec::with_capacity(ep.len());
+    let mut outputs = Vec::with_capacity(ep.len());
+    let mut loss = 0.0f64;
+    for t in 0..ep.len() {
+        let y = core.forward(&ep.inputs[t]);
+        let (l, dy) = episode_loss_grad(ep, t, &y);
+        loss += l as f64;
+        dys.push(dy);
+        outputs.push(y);
+    }
+    for dy in dys.iter().rev() {
+        core.backward(dy);
+    }
+    core.end_episode();
+    (loss, ep.scored_steps(), outputs)
+}
+
+/// Evaluate an episode without gradients (forward + rollback).
+pub fn eval_episode(core: &mut dyn Core, ep: &Episode) -> (f64, Vec<Vec<f32>>) {
+    core.reset();
+    let mut outputs = Vec::with_capacity(ep.len());
+    let mut loss = 0.0f64;
+    for t in 0..ep.len() {
+        let y = core.forward(&ep.inputs[t]);
+        let (l, _) = episode_loss_grad(ep, t, &y);
+        loss += l as f64;
+        outputs.push(y);
+    }
+    core.rollback();
+    core.end_episode();
+    (loss, outputs)
+}
+
+/// Single-threaded trainer driving core + optimizer + curriculum.
+pub struct Trainer {
+    pub core: Box<dyn Core>,
+    pub opt: Box<dyn Optimizer>,
+    pub cfg: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(core: Box<dyn Core>, opt: Box<dyn Optimizer>, cfg: TrainConfig) -> Trainer {
+        Trainer { core, opt, cfg }
+    }
+
+    /// Train on `task` under `curriculum` for `cfg.updates` updates.
+    pub fn run(&mut self, task: &dyn Task, curriculum: &mut Curriculum) -> TrainLog {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut log = TrainLog::default();
+        let timer = Timer::start();
+        let mut window_loss = 0.0f64;
+        let mut window_scored = 0usize;
+        let mut window_errors = 0.0f64;
+        let mut window_eps = 0usize;
+        for update in 1..=self.cfg.updates {
+            for _ in 0..self.cfg.batch {
+                let level = curriculum.sample_level(&mut rng);
+                let ep = task.sample(level, &mut rng);
+                let (loss, scored, outputs) = train_episode(self.core.as_mut(), &ep);
+                let scored = scored.max(1);
+                curriculum.report(loss / scored as f64);
+                window_loss += loss;
+                window_scored += scored;
+                window_errors += task.errors(&ep, &outputs);
+                window_eps += 1;
+                log.total_episodes += 1;
+            }
+            self.opt.step(self.core.as_mut());
+            if update % self.cfg.log_every == 0 || update == self.cfg.updates {
+                let point = LogPoint {
+                    update,
+                    loss: window_loss / window_scored.max(1) as f64,
+                    errors: window_errors / window_eps.max(1) as f64,
+                    level: curriculum.h,
+                    wall_s: timer.elapsed_s(),
+                };
+                if self.cfg.verbose {
+                    println!(
+                        "[{}] update {:>5} loss/step {:.4} errors/ep {:.3} level {} ({:.1}s)",
+                        self.core.name(),
+                        point.update,
+                        point.loss,
+                        point.errors,
+                        point.level,
+                        point.wall_s
+                    );
+                }
+                log.points.push(point);
+                window_loss = 0.0;
+                window_scored = 0;
+                window_errors = 0.0;
+                window_eps = 0;
+            }
+        }
+        log.final_level = curriculum.h;
+        log
+    }
+
+    /// Mean task errors per episode over `n` eval episodes at `level`.
+    pub fn evaluate(&mut self, task: &dyn Task, level: usize, n: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut errors = 0.0;
+        for _ in 0..n {
+            let ep = task.sample(level, &mut rng);
+            let (_, outputs) = eval_episode(self.core.as_mut(), &ep);
+            errors += task.errors(&ep, &outputs);
+        }
+        errors / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::{build_core, CoreConfig, CoreKind};
+    use crate::optim::RmsProp;
+    use crate::tasks::copy::CopyTask;
+
+    fn tiny_trainer(kind: CoreKind, updates: usize) -> (Trainer, CopyTask) {
+        let task = CopyTask::new(4);
+        let cfg = CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: 16,
+            heads: 1,
+            word: 8,
+            mem_words: 16,
+            k: 2,
+            seed: 99,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(99);
+        let core = build_core(kind, &cfg, &mut rng);
+        let t = Trainer::new(
+            core,
+            Box::new(RmsProp::new(3e-3)),
+            TrainConfig { batch: 2, updates, log_every: 5, seed: 5, ..TrainConfig::default() },
+        );
+        (t, task)
+    }
+
+    #[test]
+    fn loss_decreases_on_tiny_copy_sam() {
+        let (mut trainer, task) = tiny_trainer(CoreKind::Sam, 150);
+        let mut cur = Curriculum::fixed(2);
+        let log = trainer.run(&task, &mut cur);
+        let first = log.points.first().unwrap().loss;
+        let best = log.best_loss();
+        assert!(
+            best < first * 0.85,
+            "no learning: first {first:.4} best {best:.4}"
+        );
+    }
+
+    #[test]
+    fn loss_decreases_on_tiny_copy_lstm() {
+        let (mut trainer, task) = tiny_trainer(CoreKind::Lstm, 60);
+        let mut cur = Curriculum::fixed(2);
+        let log = trainer.run(&task, &mut cur);
+        assert!(log.best_loss() < log.points[0].loss);
+    }
+
+    #[test]
+    fn evaluate_runs_cleanly() {
+        let (mut trainer, task) = tiny_trainer(CoreKind::Sam, 2);
+        let mut cur = Curriculum::fixed(2);
+        trainer.run(&task, &mut cur);
+        let errs = trainer.evaluate(&task, 2, 4, 123);
+        assert!(errs >= 0.0);
+    }
+
+    #[test]
+    fn log_serializes() {
+        let (mut trainer, task) = tiny_trainer(CoreKind::Lstm, 5);
+        let mut cur = Curriculum::fixed(2);
+        let log = trainer.run(&task, &mut cur);
+        let j = log.to_json().encode();
+        assert!(j.contains("points"));
+        crate::util::json::Json::parse(&j).unwrap();
+    }
+}

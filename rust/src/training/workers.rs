@@ -1,0 +1,207 @@
+//! Asynchronous data-parallel workers (paper Supp C: "8 asynchronous
+//! workers to speed up training").
+//!
+//! Each worker owns a full replica of the core (memory, ANN, ring are
+//! per-replica state; parameters are what's shared). Before each round the
+//! replicas load the current parameter vector; each runs a slice of the
+//! batch; gradients are summed into the primary and the optimizer steps.
+//! This is synchronous data parallelism — on the paper's 6-core Xeon the
+//! asynchrony bought wall-clock speed, not a different algorithm; on this
+//! 1-core container the worker count is a fidelity knob, not a speedup.
+
+use crate::cores::Core;
+use crate::curriculum::Curriculum;
+use crate::optim::Optimizer;
+use crate::tasks::Task;
+use crate::training::{train_episode, TrainConfig, TrainLog, LogPoint};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// Multi-worker trainer. `factory(i)` builds worker i's core replica.
+pub struct ParallelTrainer {
+    pub workers: Vec<Box<dyn Core>>,
+    pub opt: Box<dyn Optimizer>,
+    pub cfg: TrainConfig,
+}
+
+impl ParallelTrainer {
+    pub fn new(
+        factory: &mut dyn FnMut(usize) -> Box<dyn Core>,
+        n_workers: usize,
+        opt: Box<dyn Optimizer>,
+        cfg: TrainConfig,
+    ) -> ParallelTrainer {
+        assert!(n_workers >= 1);
+        let workers = (0..n_workers).map(|i| factory(i)).collect();
+        ParallelTrainer { workers, opt, cfg }
+    }
+
+    pub fn run(&mut self, task: &(dyn Task + Sync), curriculum: &mut Curriculum) -> TrainLog {
+        let n_workers = self.workers.len();
+        let mut log = TrainLog::default();
+        let timer = Timer::start();
+        let mut window_loss = 0.0f64;
+        let mut window_scored = 0usize;
+        let mut window_errors = 0.0f64;
+        let mut window_eps = 0usize;
+        let mut rng = Rng::new(self.cfg.seed);
+
+        for update in 1..=self.cfg.updates {
+            // Broadcast parameters from worker 0.
+            let flat = self.workers[0].save_values();
+            for wi in 1..n_workers {
+                self.workers[wi].load_values(&flat);
+                self.workers[wi].zero_grads();
+            }
+            // Pre-sample episodes (levels drawn on the main thread so the
+            // curriculum stays deterministic).
+            let per_worker = self.cfg.batch.div_ceil(n_workers);
+            let episodes: Vec<Vec<_>> = (0..n_workers)
+                .map(|_| {
+                    (0..per_worker)
+                        .map(|_| {
+                            let level = curriculum.sample_level(&mut rng);
+                            task.sample(level, &mut rng)
+                        })
+                        .collect()
+                })
+                .collect();
+
+            // Run workers in parallel over their episode slices.
+            let results: Vec<Vec<(f64, usize, f64)>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .zip(episodes.iter())
+                    .map(|(core, eps)| {
+                        scope.spawn(move || {
+                            eps.iter()
+                                .map(|ep| {
+                                    let (loss, scored, outputs) =
+                                        train_episode(core.as_mut(), ep);
+                                    (loss, scored, crate::tasks::default_errors(ep, &outputs))
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            // Reduce gradients into worker 0 and report to the curriculum.
+            for wi in 1..n_workers {
+                let mut grads: Vec<f32> = Vec::new();
+                self.workers[wi].visit_params(&mut |p| grads.extend_from_slice(&p.g.data));
+                let mut off = 0;
+                self.workers[0].visit_params(&mut |p| {
+                    for v in p.g.data.iter_mut() {
+                        *v += grads[off];
+                        off += 1;
+                    }
+                });
+            }
+            for per in &results {
+                for &(loss, scored, errors) in per {
+                    let scored = scored.max(1);
+                    curriculum.report(loss / scored as f64);
+                    window_loss += loss;
+                    window_scored += scored;
+                    window_errors += errors;
+                    window_eps += 1;
+                    log.total_episodes += 1;
+                }
+            }
+            self.opt.step(self.workers[0].as_mut());
+
+            if update % self.cfg.log_every == 0 || update == self.cfg.updates {
+                let point = LogPoint {
+                    update,
+                    loss: window_loss / window_scored.max(1) as f64,
+                    errors: window_errors / window_eps.max(1) as f64,
+                    level: curriculum.h,
+                    wall_s: timer.elapsed_s(),
+                };
+                if self.cfg.verbose {
+                    println!(
+                        "[{}x{}] update {:>5} loss/step {:.4} errors/ep {:.3} level {}",
+                        self.workers[0].name(),
+                        n_workers,
+                        point.update,
+                        point.loss,
+                        point.errors,
+                        point.level
+                    );
+                }
+                log.points.push(point);
+                window_loss = 0.0;
+                window_scored = 0;
+                window_errors = 0.0;
+                window_eps = 0;
+            }
+        }
+        log.final_level = curriculum.h;
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::{build_core, CoreConfig, CoreKind};
+    use crate::optim::RmsProp;
+    use crate::tasks::copy::CopyTask;
+
+    #[test]
+    fn parallel_matches_learning_signal() {
+        let task = CopyTask::new(4);
+        let core_cfg = CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: 12,
+            heads: 1,
+            word: 6,
+            mem_words: 12,
+            k: 2,
+            seed: 5,
+            ..CoreConfig::default()
+        };
+        let mut seed_rng = Rng::new(5);
+        let mut factory = |_i: usize| build_core(CoreKind::Sam, &core_cfg, &mut seed_rng);
+        let mut pt = ParallelTrainer::new(
+            &mut factory,
+            2,
+            Box::new(RmsProp::new(3e-3)),
+            TrainConfig { batch: 4, updates: 30, log_every: 5, ..TrainConfig::default() },
+        );
+        let mut cur = Curriculum::fixed(2);
+        let log = pt.run(&task, &mut cur);
+        assert_eq!(log.total_episodes, 30 * 4);
+        assert!(log.best_loss() < log.points[0].loss * 1.05);
+    }
+
+    #[test]
+    fn single_worker_is_degenerate_case() {
+        let task = CopyTask::new(4);
+        let core_cfg = CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: 8,
+            heads: 1,
+            word: 6,
+            mem_words: 8,
+            seed: 6,
+            ..CoreConfig::default()
+        };
+        let mut seed_rng = Rng::new(6);
+        let mut factory = |_i: usize| build_core(CoreKind::Lstm, &core_cfg, &mut seed_rng);
+        let mut pt = ParallelTrainer::new(
+            &mut factory,
+            1,
+            Box::new(RmsProp::new(1e-3)),
+            TrainConfig { batch: 2, updates: 5, log_every: 5, ..TrainConfig::default() },
+        );
+        let mut cur = Curriculum::fixed(2);
+        let log = pt.run(&task, &mut cur);
+        assert_eq!(log.total_episodes, 10);
+    }
+}

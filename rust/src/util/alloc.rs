@@ -1,0 +1,142 @@
+//! Counting global allocator for the paper's memory benchmarks (Fig 1b, Fig 7b).
+//!
+//! The paper reports "physical memory used to train over a sequence of 100
+//! time steps, excluding initialization of external memory". We reproduce
+//! that with a global allocator wrapper that tracks live and peak bytes;
+//! benchmarks snapshot the counters around the region of interest
+//! (`MemRegion`), so initialization can be excluded exactly as the paper did.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Live (currently allocated) bytes.
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+/// High-water mark of `LIVE`.
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+/// Total bytes ever allocated (monotonic).
+static TOTAL: AtomicUsize = AtomicUsize::new(0);
+
+/// Global allocator that counts bytes. Install with:
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
+/// (done in `lib.rs` so every binary in the crate gets it).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            track_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+            track_alloc(new_size);
+        }
+        p
+    }
+}
+
+#[inline]
+fn track_alloc(size: usize) {
+    TOTAL.fetch_add(size, Ordering::Relaxed);
+    let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+    // Racy max update is fine: benches are effectively single-threaded.
+    let mut peak = PEAK.load(Ordering::Relaxed);
+    while live > peak {
+        match PEAK.compare_exchange_weak(peak, live, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
+
+/// Currently live heap bytes.
+pub fn live_bytes() -> usize {
+    LIVE.load(Ordering::Relaxed)
+}
+
+/// Peak live heap bytes since process start (or last `reset_peak`).
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Total bytes ever allocated.
+pub fn total_bytes() -> usize {
+    TOTAL.load(Ordering::Relaxed)
+}
+
+/// Reset the peak high-water mark to the current live value.
+pub fn reset_peak() {
+    PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+/// Measures the *additional* peak heap consumed by a region of code,
+/// relative to the live bytes at region entry — this is exactly the
+/// paper's "memory used to train over a sequence, excluding initialization".
+pub struct MemRegion {
+    base_live: usize,
+}
+
+impl MemRegion {
+    /// Start measuring; resets the peak to the current live level.
+    pub fn start() -> Self {
+        reset_peak();
+        MemRegion { base_live: live_bytes() }
+    }
+
+    /// Extra peak bytes over the baseline since `start`.
+    pub fn peak_overhead(&self) -> usize {
+        peak_bytes().saturating_sub(self.base_live)
+    }
+
+    /// Extra live bytes over the baseline right now.
+    pub fn live_overhead(&self) -> usize {
+        live_bytes().saturating_sub(self.base_live)
+    }
+}
+
+/// Pretty-print a byte count (MiB/GiB) the way the paper does.
+pub fn fmt_bytes(b: usize) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_vec_alloc() {
+        let region = MemRegion::start();
+        let v = vec![0u8; 1 << 20];
+        assert!(region.peak_overhead() >= 1 << 20, "peak {}", region.peak_overhead());
+        drop(v);
+        // After drop, live overhead should fall back near zero.
+        assert!(region.live_overhead() < 1 << 16);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(29 * 1024 * 1024 * 1024), "29.00 GiB");
+    }
+}

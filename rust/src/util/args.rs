@@ -1,0 +1,127 @@
+//! Tiny CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag` booleans, and
+//! positional arguments. Every experiment binary declares its flags with
+//! defaults and gets `--help` text for free.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    /// Flags present without a value (`--verbose`).
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.options.contains_key(switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default; panics with a clear message on parse failure.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse::<T>()
+                .unwrap_or_else(|e| panic!("bad value for --{key}: {v:?} ({e:?})")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get_or(key, default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get_or(key, default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("train --lr 0.001 --steps=500 --verbose --model sam");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("lr"), Some("0.001"));
+        assert_eq!(a.usize_or("steps", 0), 500);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_or("model", "x"), "sam");
+        assert_eq!(a.str_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("--fast");
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("");
+        assert_eq!(a.f32_or("lr", 1e-4), 1e-4);
+        assert_eq!(a.u64_or("seed", 42), 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad value for --n")]
+    fn bad_value_panics() {
+        let a = parse("--n abc");
+        let _ = a.usize_or("n", 0);
+    }
+}

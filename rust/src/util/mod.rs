@@ -1,0 +1,8 @@
+//! Infrastructure substrates built from scratch (the offline build image has
+//! no rand/serde/clap/criterion): PRNG, JSON, CLI args, allocator counters,
+//! timers.
+pub mod alloc;
+pub mod args;
+pub mod json;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,251 @@
+//! Integration tests: the JAX/Pallas AOT artifacts executed via PJRT must
+//! agree numerically with the native Rust implementations on identical
+//! inputs/weights. This is the cross-check between L1/L2 (python, build
+//! time) and L3 (rust, run time).
+//!
+//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`; the
+//! tests skip (with a notice) when artifacts are absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use sam::cores::addressing::content_weights;
+use sam::memory::store::MemoryStore;
+use sam::nn::lstm::Lstm;
+use sam::runtime::{Runtime, Tensor};
+use sam::tensor::csr::SparseVec;
+use sam::util::json::Json;
+use sam::util::rng::Rng;
+use std::path::PathBuf;
+
+struct Ctx {
+    rt: Runtime,
+    cfg: ManifestCfg,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ManifestCfg {
+    x_dim: usize,
+    hidden: usize,
+    mem_words: usize,
+    word: usize,
+    k: usize,
+}
+
+fn setup() -> Option<Ctx> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+    let j = Json::parse(&manifest).ok()?;
+    let c = j.get("config")?;
+    let get = |k: &str| c.get(k).and_then(|v| v.as_f64()).map(|v| v as usize);
+    let cfg = ManifestCfg {
+        x_dim: get("x_dim")?,
+        hidden: get("hidden")?,
+        mem_words: get("mem_words")?,
+        word: get("word")?,
+        k: get("k")?,
+    };
+    let mut rt = Runtime::cpu().expect("pjrt cpu client");
+    rt.load_dir(&dir).expect("load artifacts");
+    Some(Ctx { rt, cfg })
+}
+
+fn assert_close(a: &[f32], b: &[f32], atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol + 1e-4 * y.abs().max(x.abs()),
+            "{what}[{i}]: rust={x} hlo={y}"
+        );
+    }
+}
+
+fn random_mem(n: usize, w: usize, rng: &mut Rng) -> MemoryStore {
+    let mut mem = MemoryStore::zeros(n, w);
+    for i in 0..n {
+        for v in mem.row_mut(i) {
+            *v = rng.normal();
+        }
+    }
+    mem
+}
+
+#[test]
+fn lstm_cell_matches_rust() {
+    let Some(ctx) = setup() else { return };
+    let (i_dim, h_dim) = (ctx.cfg.x_dim, ctx.cfg.hidden);
+    let mut rng = Rng::new(101);
+    let mut lstm = Lstm::new("parity", i_dim, h_dim, &mut rng);
+    // Random state + input.
+    let x: Vec<f32> = (0..i_dim).map(|_| rng.normal()).collect();
+    let h0: Vec<f32> = (0..h_dim).map(|_| rng.normal() * 0.5).collect();
+    let c0: Vec<f32> = (0..h_dim).map(|_| rng.normal() * 0.5).collect();
+    lstm.h = h0.clone();
+    lstm.c = c0.clone();
+    let h1 = lstm.step(&x);
+    let c1 = lstm.c.clone();
+
+    let out = ctx
+        .rt
+        .exec(
+            "lstm_cell",
+            &[
+                (&x, &[1, i_dim]),
+                (&h0, &[1, h_dim]),
+                (&c0, &[1, h_dim]),
+                (&lstm.wx.w.data, &[4 * h_dim, i_dim]),
+                (&lstm.wh.w.data, &[4 * h_dim, h_dim]),
+                (&lstm.b.w.data, &[4 * h_dim]),
+            ],
+        )
+        .expect("exec lstm_cell");
+    assert_eq!(out.len(), 2, "lstm_cell returns (h', c')");
+    assert_close(&h1, &out[0], 1e-4, "h'");
+    assert_close(&c1, &out[1], 1e-4, "c'");
+}
+
+#[test]
+fn dam_read_matches_rust_dense_content_read() {
+    let Some(ctx) = setup() else { return };
+    let (n, w) = (ctx.cfg.mem_words, ctx.cfg.word);
+    let mut rng = Rng::new(202);
+    let mem = random_mem(n, w, &mut rng);
+    let q: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+    let beta_raw = 0.7f32;
+
+    // Rust reference: softmax(β·cos) over all N then weighted read.
+    let cr = content_weights(&q, beta_raw, &mem, (0..n).collect());
+    let mut r_rust = vec![0.0f32; w];
+    mem.read_dense(&cr.weights, &mut r_rust);
+
+    // HLO (Pallas online-softmax kernel inside).
+    let mut mem_flat = Vec::with_capacity(n * w);
+    for i in 0..n {
+        mem_flat.extend_from_slice(mem.row(i));
+    }
+    let out = ctx
+        .rt
+        .exec(
+            "dam_read",
+            &[(&q, &[1, w]), (&[beta_raw][..], &[1]), (&mem_flat, &[n, w])],
+        )
+        .expect("exec dam_read");
+    assert_close(&r_rust, &out[0], 2e-4, "dam read");
+}
+
+#[test]
+fn sam_read_softmax_matches_rust_sparse_read() {
+    let Some(ctx) = setup() else { return };
+    let (n, w, k) = (ctx.cfg.mem_words, ctx.cfg.word, ctx.cfg.k);
+    let mut rng = Rng::new(303);
+    let mem = random_mem(n, w, &mut rng);
+    let q: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+    let beta_raw = -0.2f32;
+    let rows: Vec<usize> = rng.sample_indices(n, k);
+
+    // Rust: content weights over exactly those K rows, then sparse read.
+    let cr = content_weights(&q, beta_raw, &mem, rows.clone());
+    let wsp = SparseVec::from_pairs(
+        cr.rows.iter().copied().zip(cr.weights.iter().copied()).collect(),
+    );
+    let mut r_rust = vec![0.0f32; w];
+    mem.read_sparse(&wsp, &mut r_rust);
+
+    // Two artifacts cover the sparse path: `sam_read` (explicit weights →
+    // the Pallas gather kernel) and `sam_read_softmax` (β/cos softmax over
+    // the K ANN rows, fully fused). Check both against the rust numerics.
+    let mut mem_flat = Vec::with_capacity(n * w);
+    for i in 0..n {
+        mem_flat.extend_from_slice(mem.row(i));
+    }
+    let idx: Vec<i32> = rows.iter().map(|&i| i as i32).collect();
+    let out = ctx
+        .rt
+        .exec_tensors(
+            "sam_read",
+            &[
+                Tensor::F32(&mem_flat, &[n, w]),
+                Tensor::I32(&idx, &[1, k]),
+                Tensor::F32(&cr.weights, &[1, k]),
+            ],
+        )
+        .expect("exec sam_read");
+    assert_close(&r_rust, &out[0], 2e-4, "sam sparse read (pallas gather)");
+
+    let out2 = ctx
+        .rt
+        .exec_tensors(
+            "sam_read_softmax",
+            &[
+                Tensor::F32(&mem_flat, &[n, w]),
+                Tensor::I32(&idx, &[1, k]),
+                Tensor::F32(&q, &[1, w]),
+                Tensor::F32(&[beta_raw], &[1]),
+            ],
+        )
+        .expect("exec sam_read_softmax");
+    assert_close(&r_rust, &out2[0], 2e-4, "sam fused softmax read");
+    assert_close(&cr.weights, &out2[1], 2e-4, "sam read weights");
+}
+
+#[test]
+fn dam_step_executes_and_is_stateful() {
+    let Some(ctx) = setup() else { return };
+    let (i_dim, h_dim, n, w) = (ctx.cfg.x_dim, ctx.cfg.hidden, ctx.cfg.mem_words, ctx.cfg.word);
+    let mut rng = Rng::new(404);
+    let rand = |len: usize, rng: &mut Rng, s: f32| -> Vec<f32> {
+        (0..len).map(|_| rng.normal() * s).collect()
+    };
+    let x = rand(i_dim, &mut rng, 1.0);
+    let h = vec![0.0f32; h_dim];
+    let c = vec![0.0f32; h_dim];
+    let mem = rand(n * w, &mut rng, 0.1);
+    let usage = vec![0.0f32; n];
+    let w_read_prev = vec![0.0f32; n];
+    let r_prev = vec![0.0f32; w];
+    let fan = |f: usize| 1.0 / (f as f32).sqrt();
+    let wx = rand(4 * h_dim * (i_dim + w), &mut rng, fan(i_dim + w));
+    let wh = rand(4 * h_dim * h_dim, &mut rng, fan(h_dim));
+    let b = vec![0.0f32; 4 * h_dim];
+    let w_head = rand((2 * w + 3) * h_dim, &mut rng, fan(h_dim));
+    let b_head = vec![0.0f32; 2 * w + 3];
+    let w_out = rand(w * (h_dim + w), &mut rng, fan(h_dim + w));
+    let b_out = vec![0.0f32; w];
+
+    let dims: Vec<Vec<usize>> = vec![
+        vec![i_dim],
+        vec![h_dim],
+        vec![h_dim],
+        vec![n, w],
+        vec![n],
+        vec![n],
+        vec![w],
+        vec![4 * h_dim, i_dim + w],
+        vec![4 * h_dim, h_dim],
+        vec![4 * h_dim],
+        vec![2 * w + 3, h_dim],
+        vec![2 * w + 3],
+        vec![w, h_dim + w],
+        vec![w],
+    ];
+    let data: Vec<&[f32]> = vec![
+        &x, &h, &c, &mem, &usage, &w_read_prev, &r_prev, &wx, &wh, &b, &w_head, &b_head,
+        &w_out, &b_out,
+    ];
+    let inputs: Vec<(&[f32], &[usize])> =
+        data.into_iter().zip(dims.iter().map(|d| d.as_slice())).collect();
+    let out = ctx.rt.exec("dam_step", &inputs).expect("exec dam_step");
+    // (y, h', c', mem', usage', w_read, r)
+    assert_eq!(out.len(), 7);
+    assert_eq!(out[0].len(), w);
+    assert_eq!(out[3].len(), n * w);
+    assert!(out.iter().flatten().all(|v| v.is_finite()));
+    // The write must have modified the memory and usage.
+    assert_ne!(out[3], mem, "memory should change after a step");
+    assert!(out[4].iter().sum::<f32>() > 0.0, "usage should accumulate");
+    // Read weights are a distribution over N.
+    let wsum: f32 = out[5].iter().sum();
+    assert!((wsum - 1.0).abs() < 1e-3, "read weights sum {wsum}");
+}
