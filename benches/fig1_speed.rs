@@ -6,11 +6,16 @@
 //! Expectation here: dense models scale linearly in N, SAM stays flat
 //! (linear-index SAM grows slowly: the O(N) scan has a tiny constant).
 //!
-//!     cargo bench --bench fig1_speed [-- --paper-scale]
+//! Also measures Supp C's data-parallel training: the same seed must give
+//! bit-identical losses at every worker count (deterministic fixed-order
+//! reduction), with wall-clock falling as workers are added.
+//!
+//!     cargo bench --bench fig1_speed [-- --paper-scale --workers 4]
 
 use sam::bench::{fmt_time, measure, save_results, Table};
 use sam::prelude::*;
 use sam::util::json::Json;
+use sam::util::timer::Timer;
 
 fn step_time(kind: CoreKind, ann: AnnKind, n: usize, t_steps: usize, reps: usize) -> f64 {
     let cfg = CoreConfig {
@@ -40,6 +45,47 @@ fn step_time(kind: CoreKind, ann: AnnKind, n: usize, t_steps: usize, reps: usize
         core.end_episode();
     });
     stats.min / t_steps as f64 // per fwd+bwd step
+}
+
+/// Train SAM-linear for a few updates on `workers` threads; returns
+/// (wall seconds, per-log-point losses). ann=Linear keeps episode
+/// gradients content-deterministic, so losses must agree bitwise across
+/// worker counts (see training::workers).
+fn parallel_training_run(workers: usize, updates: usize) -> (f64, Vec<f64>) {
+    let task = CopyTask::new(4);
+    let cfg = CoreConfig {
+        x_dim: task.x_dim(),
+        y_dim: task.y_dim(),
+        hidden: 48,
+        heads: 2,
+        word: 16,
+        mem_words: 256,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 5,
+        ..CoreConfig::default()
+    };
+    let mut factory = |_i: usize| {
+        let mut rng = Rng::new(5);
+        build_core(CoreKind::Sam, &cfg, &mut rng)
+    };
+    let mut pt = ParallelTrainer::new(
+        &mut factory,
+        workers,
+        Box::new(RmsProp::new(1e-3)),
+        TrainConfig {
+            batch: 8,
+            updates,
+            log_every: 1,
+            seed: 5,
+            verbose: false,
+            ..TrainConfig::default()
+        },
+    );
+    let mut cur = Curriculum::fixed(4);
+    let t = Timer::start();
+    let log = pt.run(&task, &mut cur);
+    (t.elapsed_s(), log.points.iter().map(|p| p.loss).collect())
 }
 
 fn main() {
@@ -101,5 +147,41 @@ fn main() {
             ntm_big / sam_big
         );
     }
+    // --- Supp C: data-parallel training throughput + determinism ---------
+    let max_workers = args.usize_or("workers", 4).max(1);
+    let train_updates = args.usize_or("train-updates", 6);
+    println!("\nSupp C — data-parallel training (SAM linear, batch 8, {train_updates} updates)\n");
+    let mut ptable = Table::new(&["workers", "wall", "speedup vs 1", "losses bit-identical"]);
+    let mut presults = Vec::new();
+    let mut base_wall = 0.0f64;
+    let mut base_losses: Vec<f64> = Vec::new();
+    let mut w = 1;
+    while w <= max_workers {
+        let (wall, losses) = parallel_training_run(w, train_updates);
+        if w == 1 {
+            base_wall = wall;
+            base_losses = losses.clone();
+        }
+        let identical = losses.len() == base_losses.len()
+            && losses
+                .iter()
+                .zip(&base_losses)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        ptable.row(vec![
+            w.to_string(),
+            fmt_time(wall),
+            format!("{:.2}x", base_wall / wall),
+            if identical { "yes".into() } else { "NO — DETERMINISM BUG".into() },
+        ]);
+        presults.push(Json::obj(vec![
+            ("workers", Json::num(w as f64)),
+            ("wall_s", Json::num(wall)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+        w *= 2;
+    }
+    ptable.print();
+    results.extend(presults);
+
     save_results("fig1_speed", Json::arr(results));
 }

@@ -1,9 +1,12 @@
 //! Curriculum scaling demo (the paper's §4.3 workflow): train SAM on
 //! associative recall with an exponentially-increasing difficulty ceiling
 //! and a memory far larger than any dense model could train with, and
-//! watch the level climb.
+//! watch the level climb. With `--workers N` the batch runs on N
+//! data-parallel threads (Supp C) — same seed, same learning trajectory,
+//! less wall-clock.
 //!
 //!     cargo run --release --example curriculum_scaling -- --updates 800 --memory 16384
+//!     cargo run --release --example curriculum_scaling -- --workers 4
 
 use sam::prelude::*;
 
@@ -12,6 +15,7 @@ fn main() {
     let updates = args.usize_or("updates", 800);
     let memory = args.usize_or("memory", 1 << 14);
     let seed = args.u64_or("seed", 3);
+    let workers = args.usize_or("workers", 1).max(1);
 
     let task = AssociativeRecall::new(6);
     let cfg = CoreConfig {
@@ -27,32 +31,43 @@ fn main() {
         ..CoreConfig::default()
     };
     println!(
-        "SAM on associative recall, N={} words ({}), exponential curriculum",
+        "SAM on associative recall, N={} words ({}), exponential curriculum, {} worker(s)",
         memory,
-        args.str_or("ann", "kdtree")
+        args.str_or("ann", "kdtree"),
+        workers
     );
-    let mut rng = Rng::new(seed);
-    let core = build_core(CoreKind::Sam, &cfg, &mut rng);
-    let mut trainer = Trainer::new(
-        core,
-        Box::new(RmsProp::new(args.f32_or("lr", 1e-3))),
-        TrainConfig {
-            batch: 4,
-            updates,
-            log_every: (updates / 20).max(1),
-            seed,
-            verbose: true,
-            ..TrainConfig::default()
-        },
-    );
+    let train_cfg = TrainConfig {
+        batch: 4,
+        updates,
+        log_every: (updates / 20).max(1),
+        seed,
+        verbose: true,
+        ..TrainConfig::default()
+    };
+    let lr = args.f32_or("lr", 1e-3);
     let mut curriculum = Curriculum::exponential(2, 1 << 16, 0.15);
     curriculum.patience = 10;
-    let log = trainer.run(&task, &mut curriculum);
+
+    // Identical replicas per worker: fresh seeded Rng every factory call.
+    let mut factory = |_i: usize| {
+        let mut rng = Rng::new(seed);
+        build_core(CoreKind::Sam, &cfg, &mut rng)
+    };
+    let mut pt = ParallelTrainer::new(
+        &mut factory,
+        workers,
+        Box::new(RmsProp::new(lr)),
+        train_cfg.clone(),
+    );
+    let log = pt.run(&task, &mut curriculum);
     println!(
         "\nreached difficulty level {} after {} episodes ({} doublings)",
         log.final_level, log.total_episodes, curriculum.advances
     );
-    // Show generalization one level beyond the curriculum (Fig 8 flavor).
+    // Show generalization one level beyond the curriculum (Fig 8 flavor),
+    // evaluating on the primary replica through the serial trainer.
+    let (core, opt) = pt.into_primary();
+    let mut trainer = Trainer::new(core, opt, train_cfg);
     let beyond = log.final_level * 2;
     let errs = trainer.evaluate(&task, beyond, 5, seed ^ 9);
     println!("eval at {}x difficulty ({beyond}): {errs:.2} bit-errors/episode (chance 3.0)", 2);

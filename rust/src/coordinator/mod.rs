@@ -12,6 +12,7 @@ use crate::tasks::{
     babi::BabiTask, copy::CopyTask, omniglot::OmniglotTask, recall::AssociativeRecall,
     sort::PrioritySort, Task,
 };
+use crate::training::workers::ParallelTrainer;
 use crate::training::{TrainConfig, Trainer, TrainLog};
 use crate::util::args::Args;
 use crate::util::json::Json;
@@ -29,6 +30,9 @@ pub struct ExperimentConfig {
     /// Curriculum: None = fixed at the task's base level.
     pub curriculum_max: Option<usize>,
     pub curriculum_threshold: f64,
+    /// Data-parallel worker threads (1 = serial trainer). Same seed ⇒ same
+    /// result at any count; see `training::workers`.
+    pub workers: usize,
 }
 
 impl ExperimentConfig {
@@ -71,6 +75,7 @@ impl ExperimentConfig {
             train_cfg,
             curriculum_max: args.get("curriculum-max").map(|v| v.parse().unwrap()),
             curriculum_threshold: args.get_or("curriculum-threshold", 0.05f32) as f64,
+            workers: args.usize_or("workers", 1).max(1),
         })
     }
 }
@@ -87,32 +92,61 @@ pub fn build_task(name: &str) -> Result<Box<dyn Task>> {
     }
 }
 
-/// Build core + optimizer + trainer for an experiment (task dims are filled
-/// into the core config automatically).
-pub fn build_trainer(cfg: &ExperimentConfig, task: &dyn Task) -> Trainer {
+/// Core config with the task's dimensions filled in.
+fn resolved_core_cfg(cfg: &ExperimentConfig, task: &dyn Task) -> CoreConfig {
     let mut core_cfg = cfg.core_cfg.clone();
     core_cfg.x_dim = task.x_dim();
     core_cfg.y_dim = task.y_dim();
-    let mut rng = Rng::new(core_cfg.seed);
-    let core = build_core(cfg.core, &core_cfg, &mut rng);
-    let opt: Box<dyn Optimizer> = if std::env::var("SAM_ADAM").is_ok() {
+    core_cfg
+}
+
+fn make_optimizer(cfg: &ExperimentConfig) -> Box<dyn Optimizer> {
+    if std::env::var("SAM_ADAM").is_ok() {
         Box::new(Adam::new(cfg.train_cfg.lr))
     } else {
         Box::new(RmsProp::new(cfg.train_cfg.lr))
-    };
-    Trainer::new(core, opt, cfg.train_cfg.clone())
+    }
 }
 
-/// Run a full training experiment; returns (trainer, log).
+/// Build core + optimizer + trainer for an experiment (task dims are filled
+/// into the core config automatically).
+pub fn build_trainer(cfg: &ExperimentConfig, task: &dyn Task) -> Trainer {
+    let core_cfg = resolved_core_cfg(cfg, task);
+    let mut rng = Rng::new(core_cfg.seed);
+    let core = build_core(cfg.core, &core_cfg, &mut rng);
+    Trainer::new(core, make_optimizer(cfg), cfg.train_cfg.clone())
+}
+
+/// Build the data-parallel trainer with `cfg.workers` identical replicas
+/// (each constructed from a fresh seeded Rng so replicas agree bit-for-bit).
+pub fn build_parallel_trainer(cfg: &ExperimentConfig, task: &dyn Task) -> ParallelTrainer {
+    let core_cfg = resolved_core_cfg(cfg, task);
+    let mut factory = |_i: usize| {
+        let mut rng = Rng::new(core_cfg.seed);
+        build_core(cfg.core, &core_cfg, &mut rng)
+    };
+    ParallelTrainer::new(&mut factory, cfg.workers, make_optimizer(cfg), cfg.train_cfg.clone())
+}
+
+/// Run a full training experiment; returns (trainer, log). With
+/// `cfg.workers > 1` training runs on the threaded [`ParallelTrainer`] and
+/// the primary replica is handed back wrapped in a serial [`Trainer`] so
+/// checkpointing/eval flows are identical either way.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<(Trainer, TrainLog)> {
     let task = build_task(&cfg.task)?;
-    let mut trainer = build_trainer(cfg, task.as_ref());
     let mut curriculum = match cfg.curriculum_max {
         Some(max) => {
             Curriculum::exponential(task.base_level(), max, cfg.curriculum_threshold)
         }
         None => Curriculum::fixed(task.base_level()),
     };
+    if cfg.workers > 1 {
+        let mut pt = build_parallel_trainer(cfg, task.as_ref());
+        let log = pt.run(task.as_ref(), &mut curriculum);
+        let (core, opt) = pt.into_primary();
+        return Ok((Trainer::new(core, opt, cfg.train_cfg.clone()), log));
+    }
+    let mut trainer = build_trainer(cfg, task.as_ref());
     let log = trainer.run(task.as_ref(), &mut curriculum);
     Ok((trainer, log))
 }
@@ -192,6 +226,33 @@ mod tests {
         assert_eq!(cfg.task, "babi");
         assert_eq!(cfg.core_cfg.mem_words, 64);
         assert_eq!(cfg.core_cfg.ann, AnnKind::KdForest);
+    }
+
+    #[test]
+    fn workers_flag_parsed_and_defaulted() {
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().workers, 1);
+        let args = Args::parse("--workers 4".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().workers, 4);
+        let args = Args::parse("--workers 0".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().workers, 1);
+    }
+
+    #[test]
+    fn run_experiment_parallel_path() {
+        let args = Args::parse(
+            "--model lstm --task copy --hidden 8 --memory 8 --word 6 --heads 1 \
+             --batch 2 --updates 3 --workers 2 --quiet"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ExperimentConfig::from_args(&args).unwrap();
+        let (mut trainer, log) = run_experiment(&cfg).unwrap();
+        assert_eq!(log.total_episodes, 6);
+        // The handed-back primary still evaluates.
+        let task = build_task("copy").unwrap();
+        let errs = trainer.evaluate(task.as_ref(), 2, 2, 7);
+        assert!(errs >= 0.0);
     }
 
     #[test]

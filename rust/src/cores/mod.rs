@@ -252,12 +252,13 @@ pub fn build_core(kind: CoreKind, cfg: &CoreConfig, rng: &mut Rng) -> Box<dyn Co
     }
 }
 
-#[cfg(test)]
-pub(crate) mod grad_check {
-    //! Shared finite-difference gradient checker for cores. Discrete
-    //! structure (top-K selection, LRA argmin) can flip under perturbation,
-    //! so the checker requires a high fraction of sampled coordinates to
-    //! agree rather than all of them.
+pub mod grad_check {
+    //! Shared finite-difference gradient checker for cores, used by the
+    //! per-core unit tests and the `rust/tests/grad_check.rs` integration
+    //! suite (hence not `#[cfg(test)]`). Discrete structure (top-K
+    //! selection, LRA argmin) can flip under perturbation, so the checker
+    //! requires a high fraction of sampled coordinates to agree rather
+    //! than all of them.
 
     use super::*;
     use crate::nn::loss::sigmoid_xent;

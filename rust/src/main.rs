@@ -39,6 +39,8 @@ Common flags (paper defaults in parens):
   --batch B         episodes per update (8)
   --updates U       parameter updates (200)
   --curriculum-max H  enable exponential curriculum up to H
+  --workers N       data-parallel worker threads (1); same seed ⇒ same
+                    result at any N (deterministic fixed-order reduction)
   --seed S          RNG seed (1)
   --checkpoint PATH save/load parameters
   --addr HOST:PORT  serve address (127.0.0.1:7878)
@@ -63,9 +65,9 @@ fn main() -> Result<()> {
 fn train(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
     println!(
-        "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?})",
+        "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?}, workers={})",
         cfg.core, cfg.task, cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads,
-        cfg.core_cfg.k, cfg.core_cfg.ann
+        cfg.core_cfg.k, cfg.core_cfg.ann, cfg.workers
     );
     let (mut trainer, log) = run_experiment(&cfg)?;
     println!(

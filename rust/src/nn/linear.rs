@@ -1,17 +1,33 @@
 //! Fully-connected layer with manual backward and an explicit activation
 //! cache stack (supports arbitrarily long BPTT: one push per forward call,
 //! one pop per backward call).
+//!
+//! Two hot-path upgrades over a naive per-sample implementation:
+//!
+//! * **Batched GEMM API** — [`Linear::forward_batch`]/[`Linear::backward_batch`]
+//!   process a whole T×in matrix of samples with three GEMMs
+//!   (Y = X Wᵀ + b, dW += dYᵀ X, dX = dY W).
+//! * **Deferred weight gradients** — the per-step [`Linear::backward`] no
+//!   longer does a rank-1 `outer_acc` per call; it queues (dy, x) pairs and
+//!   folds the whole episode's weight gradient in as one `dW += dYᵀ X` GEMM
+//!   when the cache stack empties (or on [`Linear::clear_cache`]). Same
+//!   flops, one cache-friendly pass, and a single deterministic summation
+//!   order shared by the serial and data-parallel trainers.
 
 use super::param::{HasParams, Param};
-use crate::tensor::matrix::{axpy, dot, outer_acc, Matrix};
+use crate::tensor::matrix::{axpy, col_sum_acc, dot, gemm, gemm_nt, gemm_tn, Matrix};
 use crate::util::rng::Rng;
 
 /// y = W x + b.
 pub struct Linear {
     pub w: Param, // out × in
     pub b: Param, // 1 × out
-    /// Cached inputs, one per un-backpropagated forward call.
+    /// Cached inputs, one per un-backpropagated step forward call.
     cache_x: Vec<Vec<f32>>,
+    /// Cached input matrices, one per un-backpropagated batch forward call.
+    cache_batch: Vec<Matrix>,
+    /// (dy, x) pairs awaiting the episode-level GEMM gradient flush.
+    pending: Vec<(Vec<f32>, Vec<f32>)>,
 }
 
 impl Linear {
@@ -20,6 +36,8 @@ impl Linear {
             w: Param::fan_in(&format!("{name}.w"), out_dim, in_dim, in_dim, rng),
             b: Param::zeros(&format!("{name}.b"), 1, out_dim),
             cache_x: Vec::new(),
+            cache_batch: Vec::new(),
+            pending: Vec::new(),
         }
     }
 
@@ -42,29 +60,85 @@ impl Linear {
         y
     }
 
-    /// Backward the most recent un-backpropagated forward; accumulates
-    /// parameter grads and returns dL/dx.
+    /// Backward the most recent un-backpropagated forward; returns dL/dx.
+    /// Weight gradients are queued and folded in by one GEMM when the last
+    /// cached step has been backpropagated (see module docs).
     pub fn backward(&mut self, dy: &[f32]) -> Vec<f32> {
         assert_eq!(dy.len(), self.out_dim());
         let x = self.cache_x.pop().expect("backward without forward");
-        outer_acc(&mut self.w.g, dy, &x);
-        axpy(&mut self.b.g.data, 1.0, dy);
         let mut dx = vec![0.0; x.len()];
         for (i, &dyi) in dy.iter().enumerate() {
             if dyi != 0.0 {
                 axpy(&mut dx, dyi, self.w.w.row(i));
             }
         }
+        self.pending.push((dy.to_vec(), x));
+        if self.cache_x.is_empty() {
+            self.flush_grads();
+        }
         dx
     }
 
-    /// Drop any cached activations (episode reset).
+    /// Batched forward: Y = X Wᵀ + b over T samples (X: T×in, Y: T×out),
+    /// one GEMM. Caches X for the matching [`Linear::backward_batch`].
+    pub fn forward_batch(&mut self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.in_dim());
+        let mut y = Matrix::zeros(x.rows, self.out_dim());
+        for t in 0..y.rows {
+            y.row_mut(t).copy_from_slice(&self.b.w.data);
+        }
+        gemm_nt(&mut y, x, &self.w.w);
+        self.cache_batch.push(x.clone());
+        y
+    }
+
+    /// Batched backward for the most recent [`Linear::forward_batch`]:
+    /// accumulates dW += dYᵀ X and db += colsum(dY), returns dX = dY W.
+    pub fn backward_batch(&mut self, dy: &Matrix) -> Matrix {
+        assert_eq!(dy.cols, self.out_dim());
+        let x = self.cache_batch.pop().expect("backward_batch without forward_batch");
+        assert_eq!(dy.rows, x.rows);
+        gemm_tn(&mut self.w.g, dy, &x);
+        col_sum_acc(&mut self.b.g.data, dy);
+        let mut dx = Matrix::zeros(dy.rows, self.in_dim());
+        gemm(&mut dx, dy, &self.w.w);
+        dx
+    }
+
+    /// Fold all queued per-step weight gradients in as one GEMM:
+    /// dW += dYᵀ X, db += colsum(dY).
+    fn flush_grads(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let t = self.pending.len();
+        let mut dy = Matrix::zeros(t, self.out_dim());
+        let mut x = Matrix::zeros(t, self.in_dim());
+        for (r, (dyr, xr)) in self.pending.drain(..).enumerate() {
+            dy.row_mut(r).copy_from_slice(&dyr);
+            x.row_mut(r).copy_from_slice(&xr);
+        }
+        gemm_tn(&mut self.w.g, &dy, &x);
+        col_sum_acc(&mut self.b.g.data, &dy);
+    }
+
+    /// Drop any cached activations (episode reset). A partially
+    /// backpropagated episode's queued weight gradients are flushed first
+    /// so truncated BPTT keeps its gradients.
     pub fn clear_cache(&mut self) {
+        self.flush_grads();
         self.cache_x.clear();
+        self.cache_batch.clear();
     }
 
     pub fn cache_bytes(&self) -> usize {
-        self.cache_x.iter().map(|x| x.capacity() * 4 + 24).sum()
+        self.cache_x.iter().map(|x| x.capacity() * 4 + 24).sum::<usize>()
+            + self.cache_batch.iter().map(|m| m.heap_bytes() + 24).sum::<usize>()
+            + self
+                .pending
+                .iter()
+                .map(|(d, x)| (d.capacity() + x.capacity()) * 4 + 48)
+                .sum::<usize>()
     }
 }
 
@@ -137,16 +211,75 @@ mod tests {
     }
 
     #[test]
-    fn cache_stack_lifo() {
+    fn cache_stack_lifo_with_deferred_flush() {
         let mut rng = Rng::new(3);
         let mut lin = Linear::new("t", 2, 2, &mut rng);
         lin.forward(&[1.0, 0.0]);
         lin.forward(&[0.0, 1.0]);
-        // backward for second call first: dW row contributions come from x2.
+        // backward for second call first (LIFO); the weight gradient is
+        // deferred until the stack empties, then flushed as one GEMM.
+        lin.backward(&[1.0, 0.0]);
+        assert_eq!(lin.w.g.get(0, 1), 0.0, "grads deferred until stack empty");
         lin.backward(&[1.0, 0.0]);
         assert_eq!(lin.w.g.get(0, 1), 1.0); // x2 = e2
-        lin.backward(&[1.0, 0.0]);
         assert_eq!(lin.w.g.get(0, 0), 1.0); // x1 = e1
+        assert_eq!(lin.b.g.data, vec![2.0, 0.0]);
         assert_eq!(lin.cache_bytes(), 0);
+    }
+
+    #[test]
+    fn clear_cache_flushes_partial_backward() {
+        let mut rng = Rng::new(4);
+        let mut lin = Linear::new("t", 2, 2, &mut rng);
+        lin.forward(&[1.0, 0.0]);
+        lin.forward(&[0.0, 1.0]);
+        lin.backward(&[1.0, 0.0]); // truncated BPTT: only one step back
+        lin.clear_cache();
+        assert_eq!(lin.w.g.get(0, 1), 1.0, "truncated grads must survive reset");
+        assert_eq!(lin.cache_bytes(), 0);
+    }
+
+    #[test]
+    fn batch_matches_per_step() {
+        let mut rng = Rng::new(5);
+        let mut a = Linear::new("a", 3, 2, &mut rng);
+        let mut rng2 = Rng::new(5);
+        let mut b = Linear::new("b", 3, 2, &mut rng2);
+        let xs = vec![
+            vec![0.5, -1.0, 2.0],
+            vec![1.0, 0.0, 0.0],
+            vec![-0.3, 0.7, 0.1],
+        ];
+        let dys = vec![vec![1.0, -1.0], vec![0.5, 0.5], vec![0.0, 2.0]];
+
+        // Per-step path.
+        let mut ys = Vec::new();
+        for x in &xs {
+            ys.push(a.forward(x));
+        }
+        let mut dxs = Vec::new();
+        for dy in dys.iter().rev() {
+            dxs.push(a.backward(dy));
+        }
+        dxs.reverse();
+
+        // Batched path.
+        let yb = b.forward_batch(&Matrix::from_rows(xs.clone()));
+        let dxb = b.backward_batch(&Matrix::from_rows(dys.clone()));
+
+        for (t, y) in ys.iter().enumerate() {
+            for (j, v) in y.iter().enumerate() {
+                assert!((v - yb.get(t, j)).abs() < 1e-5, "y[{t}][{j}]");
+            }
+            for (j, v) in dxs[t].iter().enumerate() {
+                assert!((v - dxb.get(t, j)).abs() < 1e-5, "dx[{t}][{j}]");
+            }
+        }
+        for (ga, gb) in a.w.g.data.iter().zip(&b.w.g.data) {
+            assert!((ga - gb).abs() < 1e-5, "dW mismatch");
+        }
+        for (ga, gb) in a.b.g.data.iter().zip(&b.b.g.data) {
+            assert!((ga - gb).abs() < 1e-5, "db mismatch");
+        }
     }
 }

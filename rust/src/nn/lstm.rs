@@ -1,9 +1,22 @@
 //! Single-layer LSTM cell with manual BPTT (the controller of every core,
 //! paper §3.3: "We use a one layer LSTM for the controller throughout").
+//!
+//! Hot-path structure (the controller is the densest compute in every core):
+//!
+//! * the per-step gate pre-activations are two GEMVs (`Wx·x`, `Wh·h`);
+//! * [`Lstm::forward_seq`] batches the input projection of a whole episode
+//!   into one `Z_x = X Wxᵀ` GEMM before the (inherently sequential)
+//!   recurrence — usable whenever the inputs are known up front;
+//! * the backward pass defers both weight gradients: instead of two rank-1
+//!   `outer_acc` updates per step it queues (dz, x, h_prev) rows and folds
+//!   the episode in as `dWx += dZᵀ X`, `dWh += dZᵀ H` — two GEMMs — when
+//!   the tape empties (or on [`Lstm::reset`]). Same flops, cache-friendly,
+//!   and one deterministic summation order shared by the serial and
+//!   data-parallel trainers.
 
 use super::act::{dsigmoid, dtanh, sigmoid, tanh};
 use super::param::{HasParams, Param};
-use crate::tensor::matrix::{axpy, dot, outer_acc};
+use crate::tensor::matrix::{axpy, col_sum_acc, gemm_nt, gemm_tn, gemv, Matrix};
 use crate::util::rng::Rng;
 
 /// Per-step cache for the backward pass.
@@ -30,6 +43,8 @@ pub struct Lstm {
     dh_next: Vec<f32>,
     dc_next: Vec<f32>,
     tape: Vec<StepCache>,
+    /// (dz, x, h_prev) rows awaiting the episode-level GEMM gradient flush.
+    pending: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
     forget_bias: f32,
 }
 
@@ -46,12 +61,16 @@ impl Lstm {
             dh_next: vec![0.0; hidden],
             dc_next: vec![0.0; hidden],
             tape: Vec::new(),
+            pending: Vec::new(),
             forget_bias: 1.0,
         }
     }
 
-    /// Reset recurrent state and drop the tape (episode boundary).
+    /// Reset recurrent state and drop the tape (episode boundary). A
+    /// partially backpropagated episode's queued weight gradients are
+    /// flushed first so truncated BPTT keeps its gradients.
     pub fn reset(&mut self) {
+        self.flush_grads();
         self.h.iter_mut().for_each(|x| *x = 0.0);
         self.c.iter_mut().for_each(|x| *x = 0.0);
         self.dh_next.iter_mut().for_each(|x| *x = 0.0);
@@ -62,11 +81,32 @@ impl Lstm {
     /// One forward step; returns h_t (also kept in `self.h`).
     pub fn step(&mut self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.input);
-        let hs = self.hidden;
-        let mut z = self.b.w.data.clone(); // 4H
-        for (r, zi) in z.iter_mut().enumerate() {
-            *zi += dot(self.wx.w.row(r), x) + dot(self.wh.w.row(r), &self.h);
+        let mut zx = vec![0.0f32; 4 * self.hidden];
+        gemv(&mut zx, &self.wx.w, x);
+        self.step_with_zx(x.to_vec(), zx)
+    }
+
+    /// Forward a whole episode whose inputs are known up front (one row per
+    /// step): the input projection of every step runs as a single
+    /// `Z_x = X Wxᵀ` GEMM, then the recurrence consumes one row at a time.
+    /// Equivalent to calling [`Lstm::step`] per row; returns the h_t rows.
+    pub fn forward_seq(&mut self, xs: &Matrix) -> Matrix {
+        assert_eq!(xs.cols, self.input);
+        let mut zx = Matrix::zeros(xs.rows, 4 * self.hidden);
+        gemm_nt(&mut zx, xs, &self.wx.w);
+        let mut hs = Matrix::zeros(xs.rows, self.hidden);
+        for t in 0..xs.rows {
+            let h = self.step_with_zx(xs.row(t).to_vec(), zx.row(t).to_vec());
+            hs.row_mut(t).copy_from_slice(&h);
         }
+        hs
+    }
+
+    /// Shared step body: `z` arrives holding Wx·x and picks up b + Wh·h.
+    fn step_with_zx(&mut self, x: Vec<f32>, mut z: Vec<f32>) -> Vec<f32> {
+        let hs = self.hidden;
+        axpy(&mut z, 1.0, &self.b.w.data);
+        gemv(&mut z, &self.wh.w, &self.h);
         let mut gates = vec![0.0f32; 4 * hs];
         for j in 0..hs {
             gates[j] = sigmoid(z[j]); // i
@@ -74,23 +114,22 @@ impl Lstm {
             gates[2 * hs + j] = tanh(z[2 * hs + j]); // g
             gates[3 * hs + j] = sigmoid(z[3 * hs + j]); // o
         }
-        let c_prev = self.c.clone();
-        let h_prev = self.h.clone();
-        let mut c = vec![0.0f32; hs];
-        let mut h = vec![0.0f32; hs];
+        let c_prev = std::mem::replace(&mut self.c, vec![0.0; hs]);
+        let h_prev = std::mem::replace(&mut self.h, vec![0.0; hs]);
         for j in 0..hs {
-            c[j] = gates[hs + j] * c_prev[j] + gates[j] * gates[2 * hs + j];
-            h[j] = gates[3 * hs + j] * tanh(c[j]);
+            self.c[j] = gates[hs + j] * c_prev[j] + gates[j] * gates[2 * hs + j];
+            self.h[j] = gates[3 * hs + j] * tanh(self.c[j]);
         }
-        self.c = c.clone();
-        self.h = h.clone();
-        self.tape.push(StepCache { x: x.to_vec(), h_prev, c_prev, gates, c });
+        let h = self.h.clone();
+        let c = self.c.clone();
+        self.tape.push(StepCache { x, h_prev, c_prev, gates, c });
         h
     }
 
     /// Backward the most recent un-backpropagated step. `dh` is dL/dh_t from
     /// this step's consumers; the recurrent grads (from t+1) are carried
-    /// internally. Returns dL/dx_t.
+    /// internally. Returns dL/dx_t. Weight gradients are queued and folded
+    /// in as two GEMMs when the last taped step has been backpropagated.
     pub fn backward(&mut self, dh_ext: &[f32]) -> Vec<f32> {
         let cache = self.tape.pop().expect("lstm backward without forward");
         let hs = self.hidden;
@@ -117,11 +156,7 @@ impl Lstm {
             dz[2 * hs + j] = d_g * dtanh(g);
             dz[3 * hs + j] = d_o * dsigmoid(o);
         }
-        // Parameter grads.
-        outer_acc(&mut self.wx.g, &dz, &cache.x);
-        outer_acc(&mut self.wh.g, &dz, &cache.h_prev);
-        axpy(&mut self.b.g.data, 1.0, &dz);
-        // Input grad and carried recurrent grads.
+        // Input grad and carried recurrent grads (need W, not the caches).
         let mut dx = vec![0.0f32; self.input];
         let mut dh_prev = vec![0.0f32; hs];
         for (r, &dzr) in dz.iter().enumerate() {
@@ -132,7 +167,32 @@ impl Lstm {
         }
         self.dh_next = dh_prev;
         self.dc_next = dc_prev;
+        // Defer the weight gradients to the episode-level GEMM flush.
+        self.pending.push((dz, cache.x, cache.h_prev));
+        if self.tape.is_empty() {
+            self.flush_grads();
+        }
         dx
+    }
+
+    /// Fold all queued per-step weight gradients in as two GEMMs:
+    /// dWx += dZᵀ X, dWh += dZᵀ H_prev, db += colsum(dZ).
+    fn flush_grads(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let t = self.pending.len();
+        let mut dz = Matrix::zeros(t, 4 * self.hidden);
+        let mut x = Matrix::zeros(t, self.input);
+        let mut hp = Matrix::zeros(t, self.hidden);
+        for (r, (dzr, xr, hr)) in self.pending.drain(..).enumerate() {
+            dz.row_mut(r).copy_from_slice(&dzr);
+            x.row_mut(r).copy_from_slice(&xr);
+            hp.row_mut(r).copy_from_slice(&hr);
+        }
+        gemm_tn(&mut self.wx.g, &dz, &x);
+        gemm_tn(&mut self.wh.g, &dz, &hp);
+        col_sum_acc(&mut self.b.g.data, &dz);
     }
 
     pub fn tape_len(&self) -> usize {
@@ -151,7 +211,12 @@ impl Lstm {
                     * 4
                     + 5 * 24
             })
-            .sum()
+            .sum::<usize>()
+            + self
+                .pending
+                .iter()
+                .map(|(a, b, c)| (a.capacity() + b.capacity() + c.capacity()) * 4 + 72)
+                .sum::<usize>()
     }
 }
 
@@ -166,6 +231,7 @@ impl HasParams for Lstm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::matrix::dot;
 
     /// Run T steps, probe-loss = Σ_t probe_t · h_t. Used for FD checks.
     fn run_loss(lstm: &mut Lstm, xs: &[Vec<f32>], probes: &[Vec<f32>]) -> f32 {
@@ -254,6 +320,7 @@ mod tests {
         lstm.reset();
         assert!(lstm.h.iter().all(|&x| x == 0.0));
         assert_eq!(lstm.tape_len(), 0);
+        assert_eq!(lstm.cache_bytes(), 0);
     }
 
     #[test]
@@ -263,5 +330,52 @@ mod tests {
         let mut a = Lstm::new("a", 2, 2, &mut r1);
         let mut b = Lstm::new("b", 2, 2, &mut r2);
         assert_eq!(a.step(&[0.5, 0.5]), b.step(&[0.5, 0.5]));
+    }
+
+    #[test]
+    fn forward_seq_matches_step_loop() {
+        let (input, hidden, t_len) = (3, 5, 7);
+        let mut r1 = Rng::new(12);
+        let mut r2 = Rng::new(12);
+        let mut a = Lstm::new("a", input, hidden, &mut r1);
+        let mut b = Lstm::new("b", input, hidden, &mut r2);
+        let mut xr = Rng::new(13);
+        let xs: Vec<Vec<f32>> = (0..t_len)
+            .map(|_| (0..input).map(|_| xr.normal()).collect())
+            .collect();
+        let hs_seq = a.forward_seq(&Matrix::from_rows(xs.clone()));
+        for (t, x) in xs.iter().enumerate() {
+            let h = b.step(x);
+            for (j, v) in h.iter().enumerate() {
+                assert!(
+                    (v - hs_seq.get(t, j)).abs() < 1e-5,
+                    "h[{t}][{j}]: {} vs {}",
+                    v,
+                    hs_seq.get(t, j)
+                );
+            }
+        }
+        assert_eq!(a.tape_len(), t_len, "seq forward must tape every step");
+        // Backward works identically off the shared tape.
+        let probe = vec![1.0f32; hidden];
+        for _ in 0..t_len {
+            a.backward(&probe);
+            b.backward(&probe);
+        }
+        for (ga, gb) in a.wx.g.data.iter().zip(&b.wx.g.data) {
+            assert!((ga - gb).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn truncated_backward_keeps_grads_on_reset() {
+        let mut rng = Rng::new(14);
+        let mut lstm = Lstm::new("t", 2, 3, &mut rng);
+        lstm.step(&[1.0, 0.0]);
+        lstm.step(&[0.0, 1.0]);
+        lstm.backward(&[1.0, 1.0, 1.0]); // only the last step
+        assert_eq!(lstm.wx.g.norm_sq(), 0.0, "grads deferred while tape live");
+        lstm.reset();
+        assert!(lstm.wx.g.norm_sq() > 0.0, "reset must flush queued grads");
     }
 }

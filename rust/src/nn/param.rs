@@ -92,6 +92,27 @@ pub trait HasParams {
         });
         assert_eq!(off, flat.len(), "checkpoint size mismatch");
     }
+
+    /// Flatten all accumulated gradients (same layout as `save_values`).
+    /// The trainers use this to extract per-episode gradients so batch
+    /// reduction happens in one fixed order regardless of worker count.
+    fn save_grads(&mut self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.visit_params(&mut |p| out.extend_from_slice(&p.g.data));
+        out
+    }
+
+    /// Overwrite all gradient accumulators from `save_grads` output.
+    /// Panics on length mismatch.
+    fn load_grads(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        self.visit_params(&mut |p| {
+            let n = p.g.data.len();
+            p.g.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        });
+        assert_eq!(off, flat.len(), "gradient size mismatch");
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +144,22 @@ mod tests {
         t.a.w.data.iter_mut().for_each(|x| *x = 0.0);
         t.load_values(&saved);
         assert_eq!(t.a.w.data, orig_a);
+    }
+
+    #[test]
+    fn grad_save_load_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut t = Two {
+            a: Param::fan_in("a", 2, 2, 2, &mut rng),
+            b: Param::fan_in("b", 2, 2, 2, &mut rng),
+        };
+        t.a.g.data = vec![1.0, 2.0, 3.0, 4.0];
+        t.b.g.data = vec![5.0, 6.0, 7.0, 8.0];
+        let g = t.save_grads();
+        assert_eq!(g, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        t.zero_grads();
+        t.load_grads(&g);
+        assert_eq!(t.save_grads(), g);
     }
 
     #[test]

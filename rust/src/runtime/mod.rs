@@ -1,132 +1,24 @@
-//! PJRT runtime: loads the JAX/Pallas AOT artifacts (`artifacts/*.hlo.txt`,
-//! produced once by `make artifacts`) and executes them from Rust. Python
-//! is never on this path — the interchange format is HLO *text* (see
-//! `python/compile/aot.py` and DESIGN.md; serialized protos from jax ≥ 0.5
-//! are rejected by xla_extension 0.5.1).
+//! PJRT runtime seam: executes the JAX/Pallas AOT artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) from Rust.
 //!
-//! Each artifact is compiled once at load and cached; execution takes and
-//! returns flat `f32` buffers.
+//! Two backends share one public API:
+//!
+//! * **feature `pjrt`** — the real XLA/PJRT client ([`pjrt`]), which needs
+//!   the external `xla` crate (not vendorable in the offline build image).
+//! * **default** — a stub that constructs fine, reports the platform as
+//!   `"cpu-stub"`, refuses to *compile* artifacts with a clear error, and
+//!   reports unknown artifacts on `exec`. Everything that merely probes the
+//!   runtime (the `sam info` subcommand, the parity tests' skip path, the
+//!   serving example's graceful bail-out) behaves identically.
 
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// A compiled HLO program plus its human-readable name.
-pub struct CompiledCell {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-/// PJRT CPU client with a registry of compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cells: HashMap<String, CompiledCell>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client, cells: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile a single HLO-text artifact under `name`.
-    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.cells
-            .insert(name.to_string(), CompiledCell { name: name.to_string(), exe });
-        Ok(())
-    }
-
-    /// Load every `*.hlo.txt` in a directory; the artifact name is the file
-    /// stem (e.g. `lstm_cell.hlo.txt` → "lstm_cell").
-    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
-        let mut loaded = Vec::new();
-        let entries =
-            std::fs::read_dir(dir).with_context(|| format!("read artifacts dir {dir:?}"))?;
-        let mut paths: Vec<PathBuf> = entries
-            .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.file_name().and_then(|s| s.to_str()).is_some_and(|s| s.ends_with(".hlo.txt")))
-            .collect();
-        paths.sort();
-        for p in paths {
-            let stem = p
-                .file_name()
-                .and_then(|s| s.to_str())
-                .unwrap()
-                .trim_end_matches(".hlo.txt")
-                .to_string();
-            self.load(&stem, &p)?;
-            loaded.push(stem);
-        }
-        Ok(loaded)
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.cells.values().map(|c| c.name.as_str()).collect();
-        v.sort();
-        v
-    }
-
-    pub fn has(&self, name: &str) -> bool {
-        self.cells.contains_key(name)
-    }
-
-    /// Execute `name` with f32 tensor inputs given as (data, dims) pairs.
-    /// The artifact returns a tuple (aot.py lowers with return_tuple=True);
-    /// each tuple element comes back as a flat f32 vector.
-    pub fn exec(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let tensors: Vec<Tensor> =
-            inputs.iter().map(|(d, s)| Tensor::F32(d, s)).collect();
-        self.exec_tensors(name, &tensors)
-    }
-
-    /// Execute with mixed-dtype inputs (f32 data + i32 index tensors, e.g.
-    /// the sparse-read cell whose row indices come from the Rust ANN).
-    pub fn exec_tensors(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        let cell = self
-            .cells
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name:?} (loaded: {:?})", self.names()))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let (lit, dims) = match t {
-                Tensor::F32(data, dims) => (xla::Literal::vec1(data), *dims),
-                Tensor::I32(data, dims) => (xla::Literal::vec1(data), *dims),
-            };
-            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-            let lit = lit
-                .reshape(&dims_i64)
-                .map_err(|e| anyhow!("reshape input to {dims:?}: {e:?}"))?;
-            literals.push(lit);
-        }
-        let result = cell
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let mut vecs = Vec::with_capacity(parts.len());
-        for p in parts {
-            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
-        }
-        Ok(vecs)
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
 /// One runtime input tensor: flat data + dims.
 pub enum Tensor<'a> {
@@ -139,6 +31,90 @@ pub fn artifacts_dir() -> PathBuf {
     std::env::var("SAM_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Enumerate `*.hlo.txt` artifacts in `dir` as (stem, path), sorted by path.
+pub(crate) fn discover_artifacts(dir: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("read artifacts dir {dir:?}"))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|s| s.to_str())
+                .is_some_and(|s| s.ends_with(".hlo.txt"))
+        })
+        .collect();
+    paths.sort();
+    Ok(paths
+        .into_iter()
+        .map(|p| {
+            let stem = p
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap()
+                .trim_end_matches(".hlo.txt")
+                .to_string();
+            (stem, p)
+        })
+        .collect())
+}
+
+/// Stub runtime used when the `pjrt` feature is off: constructs fine,
+/// never loads an artifact, and reports every `exec` target as unknown.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Create the stub "client" (always succeeds).
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime)
+    }
+
+    pub fn platform(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    /// The stub cannot compile HLO; report why instead of pretending.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        Err(anyhow!(
+            "cannot compile artifact {name:?} from {path:?}: \
+             sam was built without the `pjrt` feature (xla backend unavailable)"
+        ))
+    }
+
+    /// Load every `*.hlo.txt` in a directory. Errors on a missing directory
+    /// (same as the real backend) and on the first artifact otherwise.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        for (stem, path) in discover_artifacts(dir)? {
+            self.load(&stem, &path)?;
+            loaded.push(stem);
+        }
+        Ok(loaded)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    /// Execute `name` with f32 tensor inputs given as (data, dims) pairs.
+    pub fn exec(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let tensors: Vec<Tensor> =
+            inputs.iter().map(|(d, s)| Tensor::F32(d, s)).collect();
+        self.exec_tensors(name, &tensors)
+    }
+
+    /// Execute with mixed-dtype inputs. No artifact can be loaded in the
+    /// stub, so this always reports the artifact as unknown.
+    pub fn exec_tensors(&self, name: &str, _inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("unknown artifact {name:?} (loaded: {:?})", self.names()))
+    }
 }
 
 #[cfg(test)]
@@ -159,5 +135,14 @@ mod tests {
     fn load_dir_missing_errors() {
         let mut rt = Runtime::cpu().expect("cpu client");
         assert!(rt.load_dir(Path::new("/definitely/missing")).is_err());
+    }
+
+    #[test]
+    fn artifacts_dir_defaults_to_relative() {
+        // Avoid asserting on the env var (other tests run in parallel);
+        // the default path is what matters for the repo layout.
+        if std::env::var("SAM_ARTIFACTS").is_err() {
+            assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+        }
     }
 }

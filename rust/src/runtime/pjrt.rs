@@ -1,0 +1,120 @@
+//! Real PJRT runtime backend (feature `pjrt`): loads the JAX/Pallas AOT
+//! artifacts (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and
+//! executes them from Rust. Python is never on this path — the interchange
+//! format is HLO *text* (see `python/compile/aot.py` and DESIGN.md;
+//! serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+//!
+//! Each artifact is compiled once at load and cached; execution takes and
+//! returns flat `f32` buffers. Compiling this module requires the external
+//! `xla` crate, which the offline build image cannot fetch — hence the
+//! feature gate; the default build uses the stub in `runtime/mod.rs` with
+//! the identical public API.
+
+use super::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled HLO program plus its human-readable name.
+pub struct CompiledCell {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client with a registry of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cells: HashMap<String, CompiledCell>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, cells: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile a single HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.cells
+            .insert(name.to_string(), CompiledCell { name: name.to_string(), exe });
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; the artifact name is the file
+    /// stem (e.g. `lstm_cell.hlo.txt` → "lstm_cell").
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        for (stem, path) in super::discover_artifacts(dir)? {
+            self.load(&stem, &path)?;
+            loaded.push(stem);
+        }
+        Ok(loaded)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.cells.values().map(|c| c.name.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.cells.contains_key(name)
+    }
+
+    /// Execute `name` with f32 tensor inputs given as (data, dims) pairs.
+    /// The artifact returns a tuple (aot.py lowers with return_tuple=True);
+    /// each tuple element comes back as a flat f32 vector.
+    pub fn exec(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let tensors: Vec<Tensor> =
+            inputs.iter().map(|(d, s)| Tensor::F32(d, s)).collect();
+        self.exec_tensors(name, &tensors)
+    }
+
+    /// Execute with mixed-dtype inputs (f32 data + i32 index tensors, e.g.
+    /// the sparse-read cell whose row indices come from the Rust ANN).
+    pub fn exec_tensors(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let cell = self
+            .cells
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (loaded: {:?})", self.names()))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let (lit, dims) = match t {
+                Tensor::F32(data, dims) => (xla::Literal::vec1(data), *dims),
+                Tensor::I32(data, dims) => (xla::Literal::vec1(data), *dims),
+            };
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = lit
+                .reshape(&dims_i64)
+                .map_err(|e| anyhow!("reshape input to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = cell
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for p in parts {
+            vecs.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(vecs)
+    }
+}

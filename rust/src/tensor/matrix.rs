@@ -181,6 +181,51 @@ pub fn outer_acc(c: &mut Matrix, a: &[f32], b: &[f32]) {
     }
 }
 
+/// C += Aᵀ B  (A: k×m, B: k×n, C: m×n).
+///
+/// This is the batched form of `outer_acc`: a stack of k outer products
+/// `Σ_t A(t,:) B(t,:)ᵀ` done as one GEMM. The layers' deferred backward
+/// passes use it to turn T per-step rank-1 weight-gradient updates into a
+/// single cache-friendly matrix multiply over the whole episode.
+pub fn gemm_tn(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!(c.rows, a.cols);
+    assert_eq!(c.cols, b.cols);
+    for t in 0..a.rows {
+        let arow = a.row(t);
+        for (i, &ati) in arow.iter().enumerate() {
+            if ati != 0.0 {
+                axpy(c.row_mut(i), ati, b.row(t));
+            }
+        }
+    }
+}
+
+/// C += A Bᵀ  (A: m×k, B: n×k, C: m×n).
+///
+/// The batched linear forward Y = X Wᵀ (X: T×in, W: out×in) is this with
+/// no transposition of the stored row-major weights.
+pub fn gemm_nt(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            *cj += dot(arow, b.row(j));
+        }
+    }
+}
+
+/// y += Σ_t A(t, :)  (column sums; A: k×n, y: n).
+pub fn col_sum_acc(y: &mut [f32], a: &Matrix) {
+    assert_eq!(y.len(), a.cols);
+    for t in 0..a.rows {
+        axpy(y, 1.0, a.row(t));
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Softmax and friends
 // ---------------------------------------------------------------------------
@@ -288,5 +333,52 @@ mod tests {
         let mut c = Matrix::zeros(2, 3);
         outer_acc(&mut c, &[2.0, 3.0], &[1.0, 10.0, 100.0]);
         assert_eq!(c.data, vec![2., 20., 200., 3., 30., 300.]);
+    }
+
+    #[test]
+    fn gemm_tn_matches_stacked_outer_products() {
+        // A: 3×2, B: 3×4 — Aᵀ B must equal Σ_t outer(A(t,:), B(t,:)).
+        let a = Matrix::from_rows(vec![vec![1., 2.], vec![-0.5, 3.], vec![0., 1.5]]);
+        let b = Matrix::from_rows(vec![
+            vec![1., 0., 2., -1.],
+            vec![0.5, 1., 0., 2.],
+            vec![-1., 3., 1., 0.],
+        ]);
+        let mut c = Matrix::zeros(2, 4);
+        gemm_tn(&mut c, &a, &b);
+        let mut want = Matrix::zeros(2, 4);
+        for t in 0..3 {
+            outer_acc(&mut want, &[a.get(t, 0), a.get(t, 1)], b.row(t));
+        }
+        for (x, y) in c.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_gemv_per_row() {
+        // A: 2×3, B: 4×3 — row i of A Bᵀ is B·A(i,:).
+        let a = Matrix::from_rows(vec![vec![1., 2., 3.], vec![0., -1., 0.5]]);
+        let b = Matrix::from_rows(vec![
+            vec![1., 0., 0.],
+            vec![0., 1., 0.],
+            vec![0., 0., 1.],
+            vec![1., 1., 1.],
+        ]);
+        let mut c = Matrix::zeros(2, 4);
+        gemm_nt(&mut c, &a, &b);
+        for i in 0..2 {
+            let mut want = vec![0.0; 4];
+            gemv(&mut want, &b, a.row(i));
+            assert_eq!(c.row(i), &want[..]);
+        }
+    }
+
+    #[test]
+    fn col_sums() {
+        let a = Matrix::from_rows(vec![vec![1., 2.], vec![3., 4.], vec![5., 6.]]);
+        let mut y = vec![1.0, 0.0];
+        col_sum_acc(&mut y, &a);
+        assert_eq!(y, vec![10.0, 12.0]);
     }
 }

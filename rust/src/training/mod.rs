@@ -80,7 +80,7 @@ impl TrainLog {
 
 /// Run one training episode: forward, per-step loss, backward, gradients
 /// accumulated into the core's params. Returns (total loss, scored steps,
-/// task errors, outputs).
+/// outputs).
 pub fn train_episode(core: &mut dyn Core, ep: &Episode) -> (f64, usize, Vec<Vec<f32>>) {
     core.reset();
     let mut dys: Vec<Vec<f32>> = Vec::with_capacity(ep.len());
@@ -98,6 +98,60 @@ pub fn train_episode(core: &mut dyn Core, ep: &Episode) -> (f64, usize, Vec<Vec<
     }
     core.end_episode();
     (loss, ep.scored_steps(), outputs)
+}
+
+/// One episode's contribution to a batched parameter update.
+#[derive(Debug, Clone)]
+pub struct EpisodeGrad {
+    pub loss: f64,
+    pub scored: usize,
+    pub errors: f64,
+    /// Flat gradient of this episode alone (`HasParams::save_grads` layout).
+    pub grad: Vec<f32>,
+}
+
+/// Run one episode from zeroed gradients and extract its flat gradient.
+///
+/// This is the unit of work of the canonical batch protocol shared by
+/// [`Trainer`] and [`workers::ParallelTrainer`]: every episode's gradient
+/// is computed in isolation and the batch gradient is the sum of the
+/// per-episode vectors *in episode order*. Because that fixed-order
+/// reduction always happens on one thread, a given seed produces
+/// bit-identical updates at any worker count (see `workers`).
+pub fn episode_grad(core: &mut dyn Core, task: &dyn Task, ep: &Episode) -> EpisodeGrad {
+    core.zero_grads();
+    let (loss, scored, outputs) = train_episode(core, ep);
+    EpisodeGrad { loss, scored, errors: task.errors(ep, &outputs), grad: core.save_grads() }
+}
+
+/// Draw one update's episodes up-front, levels in episode order. Sampling
+/// the whole batch before any training keeps the RNG stream — and thus the
+/// episodes — identical between the serial and data-parallel trainers.
+pub fn sample_batch(
+    task: &dyn Task,
+    curriculum: &Curriculum,
+    rng: &mut Rng,
+    batch: usize,
+) -> Vec<Episode> {
+    (0..batch)
+        .map(|_| {
+            let level = curriculum.sample_level(rng);
+            task.sample(level, rng)
+        })
+        .collect()
+}
+
+/// Sum per-episode gradients in episode order into `core`'s accumulators.
+/// One fixed association for every worker count ⇒ bitwise determinism.
+pub(crate) fn reduce_episode_grads(core: &mut dyn Core, results: &[EpisodeGrad]) {
+    if results.is_empty() {
+        return;
+    }
+    let mut batch_grad = vec![0.0f32; results[0].grad.len()];
+    for r in results {
+        crate::tensor::matrix::axpy(&mut batch_grad, 1.0, &r.grad);
+    }
+    core.load_grads(&batch_grad);
 }
 
 /// Evaluate an episode without gradients (forward + rollback).
@@ -129,6 +183,12 @@ impl Trainer {
     }
 
     /// Train on `task` under `curriculum` for `cfg.updates` updates.
+    ///
+    /// Follows the canonical batch protocol (see [`episode_grad`]): the
+    /// whole batch is sampled up-front, each episode's gradient is computed
+    /// from zeroed accumulators, and the batch gradient is reduced in
+    /// episode order — so this serial trainer is bit-identical to
+    /// [`workers::ParallelTrainer`] at any worker count.
     pub fn run(&mut self, task: &dyn Task, curriculum: &mut Curriculum) -> TrainLog {
         let mut rng = Rng::new(self.cfg.seed);
         let mut log = TrainLog::default();
@@ -138,15 +198,18 @@ impl Trainer {
         let mut window_errors = 0.0f64;
         let mut window_eps = 0usize;
         for update in 1..=self.cfg.updates {
-            for _ in 0..self.cfg.batch {
-                let level = curriculum.sample_level(&mut rng);
-                let ep = task.sample(level, &mut rng);
-                let (loss, scored, outputs) = train_episode(self.core.as_mut(), &ep);
-                let scored = scored.max(1);
-                curriculum.report(loss / scored as f64);
-                window_loss += loss;
+            let episodes = sample_batch(task, curriculum, &mut rng, self.cfg.batch);
+            let results: Vec<EpisodeGrad> = episodes
+                .iter()
+                .map(|ep| episode_grad(self.core.as_mut(), task, ep))
+                .collect();
+            reduce_episode_grads(self.core.as_mut(), &results);
+            for r in &results {
+                let scored = r.scored.max(1);
+                curriculum.report(r.loss / scored as f64);
+                window_loss += r.loss;
                 window_scored += scored;
-                window_errors += task.errors(&ep, &outputs);
+                window_errors += r.errors;
                 window_eps += 1;
                 log.total_episodes += 1;
             }

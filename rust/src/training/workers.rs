@@ -1,19 +1,40 @@
-//! Asynchronous data-parallel workers (paper Supp C: "8 asynchronous
+//! Multi-threaded data-parallel workers (paper Supp C: "8 asynchronous
 //! workers to speed up training").
 //!
-//! Each worker owns a full replica of the core (memory, ANN, ring are
-//! per-replica state; parameters are what's shared). Before each round the
-//! replicas load the current parameter vector; each runs a slice of the
-//! batch; gradients are summed into the primary and the optimizer steps.
-//! This is synchronous data parallelism — on the paper's 6-core Xeon the
-//! asynchrony bought wall-clock speed, not a different algorithm; on this
-//! 1-core container the worker count is a fidelity knob, not a speedup.
+//! Each worker owns a full core replica (memory, ANN and ring are
+//! per-replica state; parameters are what's shared) and runs on its own OS
+//! thread inside `std::thread::scope`. Per update:
+//!
+//! 1. the primary replica's parameters are broadcast to every worker;
+//! 2. the whole batch is sampled on the main thread in episode order
+//!    (curriculum + RNG stay single-threaded and deterministic);
+//! 3. episodes are dealt round-robin (episode e → worker e mod W) and each
+//!    worker computes *per-episode* gradients for its slice in parallel;
+//! 4. the main thread reduces the per-episode gradients **in episode
+//!    order** into the primary and the optimizer steps.
+//!
+//! Because every episode's gradient is computed from zeroed accumulators
+//! against the same broadcast parameters, and the reduction is one fixed
+//! left-to-right summation over episode indices, a given seed produces
+//! bit-identical parameters, losses and curriculum decisions at any worker
+//! count — and identical to the serial [`crate::training::Trainer`], which
+//! follows the same protocol. (Cores whose ANN index is history-dependent across episodes —
+//! `AnnKind::KdForest` / `AnnKind::Lsh` — are deterministic per worker
+//! count but can diverge *across* counts because each replica's index sees
+//! a different episode subsequence; with `AnnKind::Linear` and all dense
+//! cores the guarantee is exact. See DESIGN.md.)
+//!
+//! Worker count therefore buys wall-clock speed, never a different
+//! algorithm — the synchronous analogue of the paper's asynchrony.
 
 use crate::cores::Core;
 use crate::curriculum::Curriculum;
 use crate::optim::Optimizer;
 use crate::tasks::Task;
-use crate::training::{train_episode, TrainConfig, TrainLog, LogPoint};
+use crate::training::{
+    episode_grad, reduce_episode_grads, sample_batch, EpisodeGrad, LogPoint, TrainConfig,
+    TrainLog,
+};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -25,6 +46,10 @@ pub struct ParallelTrainer {
 }
 
 impl ParallelTrainer {
+    /// Build `n_workers` replicas. The factory **must** return identical
+    /// replicas (same parameters and same internal seeds — e.g. construct
+    /// from a fresh `Rng::new(seed)` on every call); parameter equality is
+    /// asserted here, and parameters are re-broadcast every update anyway.
     pub fn new(
         factory: &mut dyn FnMut(usize) -> Box<dyn Core>,
         n_workers: usize,
@@ -32,11 +57,28 @@ impl ParallelTrainer {
         cfg: TrainConfig,
     ) -> ParallelTrainer {
         assert!(n_workers >= 1);
-        let workers = (0..n_workers).map(|i| factory(i)).collect();
+        let mut workers: Vec<Box<dyn Core>> = (0..n_workers).map(|i| factory(i)).collect();
+        let reference = workers[0].save_values();
+        for (i, w) in workers.iter_mut().enumerate().skip(1) {
+            assert_eq!(
+                w.save_values(),
+                reference,
+                "worker {i} replica differs from the primary — the factory must \
+                 build identical replicas (fresh Rng::new(seed) per call)"
+            );
+        }
         ParallelTrainer { workers, opt, cfg }
     }
 
-    pub fn run(&mut self, task: &(dyn Task + Sync), curriculum: &mut Curriculum) -> TrainLog {
+    /// Hand back the primary replica and optimizer (for checkpointing or
+    /// wrapping in a serial [`crate::training::Trainer`] after training).
+    pub fn into_primary(mut self) -> (Box<dyn Core>, Box<dyn Optimizer>) {
+        (self.workers.swap_remove(0), self.opt)
+    }
+
+    pub fn run(&mut self, task: &dyn Task, curriculum: &mut Curriculum) -> TrainLog {
+        // `Task: Send + Sync` are supertraits, so `&dyn Task` crosses the
+        // scoped-thread boundary without an explicit `+ Sync` in the type.
         let n_workers = self.workers.len();
         let mut log = TrainLog::default();
         let timer = Timer::start();
@@ -47,69 +89,52 @@ impl ParallelTrainer {
         let mut rng = Rng::new(self.cfg.seed);
 
         for update in 1..=self.cfg.updates {
-            // Broadcast parameters from worker 0.
-            let flat = self.workers[0].save_values();
-            for wi in 1..n_workers {
-                self.workers[wi].load_values(&flat);
-                self.workers[wi].zero_grads();
+            // Broadcast parameters from the primary replica.
+            if n_workers > 1 {
+                let flat = self.workers[0].save_values();
+                for wi in 1..n_workers {
+                    self.workers[wi].load_values(&flat);
+                }
             }
-            // Pre-sample episodes (levels drawn on the main thread so the
-            // curriculum stays deterministic).
-            let per_worker = self.cfg.batch.div_ceil(n_workers);
-            let episodes: Vec<Vec<_>> = (0..n_workers)
-                .map(|_| {
-                    (0..per_worker)
-                        .map(|_| {
-                            let level = curriculum.sample_level(&mut rng);
-                            task.sample(level, &mut rng)
-                        })
-                        .collect()
-                })
-                .collect();
+            // Pre-sample the batch on the main thread, in episode order.
+            let episodes = sample_batch(task, curriculum, &mut rng, self.cfg.batch);
 
-            // Run workers in parallel over their episode slices.
-            let results: Vec<Vec<(f64, usize, f64)>> = std::thread::scope(|scope| {
+            // Deal episodes round-robin and run the slices in parallel,
+            // tagging each result with its global episode index.
+            let mut results: Vec<(usize, EpisodeGrad)> = std::thread::scope(|scope| {
+                let eps = &episodes;
                 let handles: Vec<_> = self
                     .workers
                     .iter_mut()
-                    .zip(episodes.iter())
-                    .map(|(core, eps)| {
+                    .enumerate()
+                    .map(|(w, core)| {
                         scope.spawn(move || {
-                            eps.iter()
-                                .map(|ep| {
-                                    let (loss, scored, outputs) =
-                                        train_episode(core.as_mut(), ep);
-                                    (loss, scored, crate::tasks::default_errors(ep, &outputs))
-                                })
-                                .collect()
+                            let mut out = Vec::new();
+                            let mut e = w;
+                            while e < eps.len() {
+                                out.push((e, episode_grad(core.as_mut(), task, &eps[e])));
+                                e += n_workers;
+                            }
+                            out
                         })
                     })
                     .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
             });
 
-            // Reduce gradients into worker 0 and report to the curriculum.
-            for wi in 1..n_workers {
-                let mut grads: Vec<f32> = Vec::new();
-                self.workers[wi].visit_params(&mut |p| grads.extend_from_slice(&p.g.data));
-                let mut off = 0;
-                self.workers[0].visit_params(&mut |p| {
-                    for v in p.g.data.iter_mut() {
-                        *v += grads[off];
-                        off += 1;
-                    }
-                });
-            }
-            for per in &results {
-                for &(loss, scored, errors) in per {
-                    let scored = scored.max(1);
-                    curriculum.report(loss / scored as f64);
-                    window_loss += loss;
-                    window_scored += scored;
-                    window_errors += errors;
-                    window_eps += 1;
-                    log.total_episodes += 1;
-                }
+            // Deterministic fixed-order reduction: episode order, on this
+            // thread, regardless of which worker produced what when.
+            results.sort_by_key(|&(e, _)| e);
+            let ordered: Vec<EpisodeGrad> = results.into_iter().map(|(_, r)| r).collect();
+            reduce_episode_grads(self.workers[0].as_mut(), &ordered);
+            for r in &ordered {
+                let scored = r.scored.max(1);
+                curriculum.report(r.loss / scored as f64);
+                window_loss += r.loss;
+                window_scored += scored;
+                window_errors += r.errors;
+                window_eps += 1;
+                log.total_episodes += 1;
             }
             self.opt.step(self.workers[0].as_mut());
 
@@ -165,8 +190,11 @@ mod tests {
             seed: 5,
             ..CoreConfig::default()
         };
-        let mut seed_rng = Rng::new(5);
-        let mut factory = |_i: usize| build_core(CoreKind::Sam, &core_cfg, &mut seed_rng);
+        // Identical replicas: a fresh seeded Rng per factory call.
+        let mut factory = |_i: usize| {
+            let mut rng = Rng::new(5);
+            build_core(CoreKind::Sam, &core_cfg, &mut rng)
+        };
         let mut pt = ParallelTrainer::new(
             &mut factory,
             2,
@@ -192,8 +220,10 @@ mod tests {
             seed: 6,
             ..CoreConfig::default()
         };
-        let mut seed_rng = Rng::new(6);
-        let mut factory = |_i: usize| build_core(CoreKind::Lstm, &core_cfg, &mut seed_rng);
+        let mut factory = |_i: usize| {
+            let mut rng = Rng::new(6);
+            build_core(CoreKind::Lstm, &core_cfg, &mut rng)
+        };
         let mut pt = ParallelTrainer::new(
             &mut factory,
             1,
@@ -203,5 +233,58 @@ mod tests {
         let mut cur = Curriculum::fixed(2);
         let log = pt.run(&task, &mut cur);
         assert_eq!(log.total_episodes, 10);
+    }
+
+    #[test]
+    fn more_workers_than_batch_is_fine() {
+        let task = CopyTask::new(4);
+        let core_cfg = CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: 8,
+            heads: 1,
+            word: 6,
+            mem_words: 8,
+            seed: 8,
+            ..CoreConfig::default()
+        };
+        let mut factory = |_i: usize| {
+            let mut rng = Rng::new(8);
+            build_core(CoreKind::Lstm, &core_cfg, &mut rng)
+        };
+        let mut pt = ParallelTrainer::new(
+            &mut factory,
+            4,
+            Box::new(RmsProp::new(1e-3)),
+            TrainConfig { batch: 2, updates: 3, log_every: 3, ..TrainConfig::default() },
+        );
+        let mut cur = Curriculum::fixed(2);
+        let log = pt.run(&task, &mut cur);
+        assert_eq!(log.total_episodes, 6, "exactly `batch` episodes per update");
+    }
+
+    #[test]
+    #[should_panic(expected = "replica differs")]
+    fn mismatched_replicas_rejected() {
+        let task = CopyTask::new(4);
+        let core_cfg = CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: 8,
+            heads: 1,
+            word: 6,
+            mem_words: 8,
+            seed: 9,
+            ..CoreConfig::default()
+        };
+        // A shared Rng across factory calls produces different replicas.
+        let mut shared = Rng::new(9);
+        let mut factory = |_i: usize| build_core(CoreKind::Lstm, &core_cfg, &mut shared);
+        let _ = ParallelTrainer::new(
+            &mut factory,
+            2,
+            Box::new(RmsProp::new(1e-3)),
+            TrainConfig::default(),
+        );
     }
 }

@@ -1,0 +1,145 @@
+//! ANN correctness: KdForest and LSH top-k results must overlap the exact
+//! brute-force cosine top-k (LinearIndex) above a recall threshold, on
+//! random key sets and across rebuild boundaries.
+//!
+//! Queries are sampled *near stored points* — the SAM regime (§3.5):
+//! read queries are learned to point at stored memories. Uniformly random
+//! queries in high dimension are the known worst case for space-partition
+//! indexes and are not the workload.
+
+use sam::ann::{AnnIndex, KdForest, LinearIndex, LshIndex};
+use sam::util::rng::Rng;
+
+fn random_points(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+/// Queries perturbed around stored points.
+fn near_queries(pts: &[Vec<f32>], count: usize, noise: f32, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|qi| {
+            pts[(qi * 13) % pts.len()]
+                .iter()
+                .map(|x| x + noise * rng.normal())
+                .collect()
+        })
+        .collect()
+}
+
+/// recall@k of `idx` against the exact index.
+fn recall(
+    idx: &mut dyn AnnIndex,
+    exact: &mut LinearIndex,
+    queries: &[Vec<f32>],
+    k: usize,
+) -> f64 {
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for q in queries {
+        let approx: std::collections::HashSet<usize> =
+            idx.query(q, k).into_iter().map(|(i, _)| i).collect();
+        for (i, _) in exact.query(q, k) {
+            total += 1;
+            if approx.contains(&i) {
+                hit += 1;
+            }
+        }
+    }
+    hit as f64 / total.max(1) as f64
+}
+
+const RECALL_THRESHOLD: f64 = 0.7;
+
+#[test]
+fn kdforest_recall_across_rebuild_boundaries() {
+    let (n, dim, k) = (512, 16, 4);
+    let pts = random_points(n, dim, 11);
+    // rebuild_every = 64 → the insert stream crosses several automatic
+    // rebuild boundaries; recall must hold straight after the build.
+    let mut forest = KdForest::new(n, dim, 4, 128, 64, 1);
+    let mut exact = LinearIndex::new(n, dim);
+    for (i, p) in pts.iter().enumerate() {
+        forest.insert(i, p);
+        exact.insert(i, p);
+    }
+    let queries = near_queries(&pts, 48, 0.1, 99);
+    let r = recall(&mut forest, &mut exact, &queries, k);
+    assert!(r >= RECALL_THRESHOLD, "kd recall@{k} after online inserts = {r}");
+
+    // An explicit rebuild must not lose points or recall.
+    forest.rebuild();
+    assert_eq!(forest.len(), n);
+    let r = recall(&mut forest, &mut exact, &queries, k);
+    assert!(r >= RECALL_THRESHOLD, "kd recall@{k} after explicit rebuild = {r}");
+
+    // A wave of updates (moving a third of the points) crossing another
+    // rebuild boundary: the index must track the moved contents.
+    let moved = random_points(n / 3, dim, 12);
+    for (i, p) in moved.iter().enumerate() {
+        forest.update(i, p);
+        exact.update(i, p);
+    }
+    let mut all: Vec<Vec<f32>> = moved;
+    all.extend_from_slice(&pts[n / 3..]);
+    let queries = near_queries(&all, 48, 0.1, 100);
+    let r = recall(&mut forest, &mut exact, &queries, k);
+    assert!(r >= RECALL_THRESHOLD, "kd recall@{k} after update wave = {r}");
+}
+
+#[test]
+fn lsh_recall_across_rebuild_boundaries() {
+    let (n, dim, k) = (512, 32, 4);
+    let pts = random_points(n, dim, 21);
+    let mut lsh = LshIndex::new(n, dim, 12, 10, 96, 2);
+    let mut exact = LinearIndex::new(n, dim);
+    for (i, p) in pts.iter().enumerate() {
+        lsh.insert(i, p);
+        exact.insert(i, p);
+    }
+    let queries = near_queries(&pts, 48, 0.1, 77);
+    let r = recall(&mut lsh, &mut exact, &queries, k);
+    assert!(r >= RECALL_THRESHOLD, "lsh recall@{k} = {r}");
+
+    // rebuild() rehashes/compacts buckets; contents and recall must survive.
+    lsh.rebuild();
+    assert_eq!(lsh.len(), n);
+    let r = recall(&mut lsh, &mut exact, &queries, k);
+    assert!(r >= RECALL_THRESHOLD, "lsh recall@{k} after rebuild = {r}");
+
+    let moved = random_points(n / 3, dim, 22);
+    for (i, p) in moved.iter().enumerate() {
+        lsh.update(i, p);
+        exact.update(i, p);
+    }
+    let mut all: Vec<Vec<f32>> = moved;
+    all.extend_from_slice(&pts[n / 3..]);
+    let queries = near_queries(&all, 48, 0.1, 78);
+    let r = recall(&mut lsh, &mut exact, &queries, k);
+    assert!(r >= RECALL_THRESHOLD, "lsh recall@{k} after update wave = {r}");
+}
+
+#[test]
+fn exact_self_queries_always_hit() {
+    // Self-queries (noise 0) are the floor case: the stored point itself
+    // must come back as the top-1 with cosine ≈ 1 for every backend.
+    let (n, dim) = (128, 16);
+    let pts = random_points(n, dim, 31);
+    let mut forest = KdForest::with_defaults(n, dim, 3);
+    let mut lsh = LshIndex::with_defaults(n, dim, 4);
+    for (i, p) in pts.iter().enumerate() {
+        forest.insert(i, p);
+        lsh.insert(i, p);
+    }
+    for i in (0..n).step_by(13) {
+        let rf = forest.query(&pts[i], 1);
+        assert_eq!(rf[0].0, i, "kd self-query {i}");
+        assert!((rf[0].1 - 1.0).abs() < 1e-4);
+        let rl = lsh.query(&pts[i], 1);
+        assert_eq!(rl[0].0, i, "lsh self-query {i}");
+        assert!((rl[0].1 - 1.0).abs() < 1e-4);
+    }
+}

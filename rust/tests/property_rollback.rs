@@ -1,0 +1,165 @@
+//! Property tests for the rollback substrate that O(1)-space BPTT rests on
+//! (paper §3.4): journaled sparse writes must revert bit-exactly — verified
+//! against the brute-force `snapshot`/`restore` path — and the CSR sparse
+//! vector must round-trip dense↔sparse under random masks.
+
+use sam::memory::store::{MemoryStore, WriteOp};
+use sam::tensor::csr::SparseVec;
+use sam::util::rng::Rng;
+
+fn random_store(n: usize, w: usize, rng: &mut Rng) -> MemoryStore {
+    let mut m = MemoryStore::zeros(n, w);
+    for i in 0..n {
+        for v in m.row_mut(i) {
+            *v = rng.normal();
+        }
+    }
+    m
+}
+
+fn random_write(n: usize, w: usize, rng: &mut Rng) -> WriteOp {
+    let k = rng.int_in(1, 5);
+    let idx = rng.sample_indices(n, k);
+    let weights =
+        SparseVec::from_pairs(idx.iter().map(|&i| (i, rng.normal())).collect());
+    let erase_rows = match rng.below(3) {
+        0 => vec![],
+        1 => vec![rng.below(n)],
+        // Erase can overlap the write support — the journal must still
+        // record each touched row exactly once.
+        _ => vec![rng.below(n), idx[0]],
+    };
+    let word: Vec<f32> = (0..w).map(|_| rng.normal()).collect();
+    WriteOp { erase_rows, weights, word }
+}
+
+/// Every intermediate state reached by a sequence of journaled writes must
+/// be restored bit-exactly by reverting in reverse order — compared against
+/// the ground-truth snapshots taken before each write.
+#[test]
+fn journal_revert_matches_snapshot_restore_at_every_step() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let (n, w) = (48, 6);
+        let mut m = random_store(n, w, &mut rng);
+        let t_steps = 40;
+        let mut journals = Vec::with_capacity(t_steps);
+        let mut snapshots = Vec::with_capacity(t_steps);
+        for _ in 0..t_steps {
+            snapshots.push(m.snapshot());
+            journals.push(m.apply_write(&random_write(n, w, &mut rng)));
+        }
+        for (j, snap) in journals.iter().zip(&snapshots).rev() {
+            m.revert(j);
+            assert_eq!(&m.snapshot(), snap, "seed {seed}: intermediate state differs");
+        }
+    }
+}
+
+/// Reverting must agree with the O(N·W) restore path on the same op.
+#[test]
+fn single_write_revert_equals_restore() {
+    for seed in 100..120u64 {
+        let mut rng = Rng::new(seed);
+        let (n, w) = (32, 8);
+        let mut via_journal = random_store(n, w, &mut rng);
+        let mut via_restore = via_journal.clone();
+        let op = random_write(n, w, &mut rng);
+
+        let before = via_restore.snapshot();
+        let j = via_journal.apply_write(&op);
+        via_restore.apply_write(&op);
+
+        via_journal.revert(&j);
+        via_restore.restore(&before);
+        assert_eq!(
+            via_journal.snapshot(),
+            via_restore.snapshot(),
+            "seed {seed}: journal revert != snapshot restore"
+        );
+        assert_eq!(via_journal.snapshot(), before, "seed {seed}: state not restored");
+    }
+}
+
+/// Journals are O(K·W): their size must not depend on N.
+#[test]
+fn journal_cost_independent_of_memory_size() {
+    let op = WriteOp {
+        erase_rows: vec![1],
+        weights: SparseVec::from_pairs(vec![(1, 0.5), (3, -0.25), (7, 1.0)]),
+        word: vec![0.5; 16],
+    };
+    let mut sizes = Vec::new();
+    for &n in &[64usize, 1024, 16384] {
+        let mut rng = Rng::new(9);
+        let mut m = random_store(n, 16, &mut rng);
+        sizes.push(m.apply_write(&op).heap_bytes());
+    }
+    assert_eq!(sizes[0], sizes[1]);
+    assert_eq!(sizes[1], sizes[2]);
+}
+
+/// Dense → sparse → dense round-trips exactly under random masks, and
+/// sparse → dense → sparse preserves the support and values.
+#[test]
+fn sparse_vec_roundtrips_under_random_masks() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.int_in(1, 128);
+
+        // Random mask with a spread of densities, including all-zero.
+        let density = rng.uniform();
+        let dense: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.bernoulli(density) {
+                    let v = rng.normal();
+                    if v == 0.0 {
+                        1.0
+                    } else {
+                        v
+                    }
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+
+        // dense → sparse → dense is exact (threshold 0 keeps every nonzero).
+        let sv = SparseVec::from_dense_thresholded(&dense, 0.0);
+        assert_eq!(sv.to_dense(n), dense, "seed {seed}: dense roundtrip");
+        assert_eq!(sv.nnz(), dense.iter().filter(|&&v| v != 0.0).count());
+
+        // Index/value invariants: strictly ascending support, get() agrees.
+        assert!(sv.idx.windows(2).all(|w| w[0] < w[1]), "seed {seed}: unsorted idx");
+        for (i, &d) in dense.iter().enumerate() {
+            assert_eq!(sv.get(i), d, "seed {seed}: get({i})");
+        }
+
+        // sparse → dense → sparse is exact for nonzero distinct pairs.
+        let back = SparseVec::from_dense_thresholded(&sv.to_dense(n), 0.0);
+        assert_eq!(back, sv, "seed {seed}: sparse roundtrip");
+    }
+}
+
+/// from_pairs must behave like dense accumulation (duplicate indices add).
+#[test]
+fn from_pairs_matches_dense_accumulation() {
+    for seed in 200..230u64 {
+        let mut rng = Rng::new(seed);
+        let n = 32;
+        let pairs: Vec<(usize, f32)> = (0..rng.int_in(0, 20))
+            .map(|_| (rng.below(n), rng.normal()))
+            .collect();
+        let mut dense = vec![0.0f32; n];
+        for &(i, v) in &pairs {
+            dense[i] += v;
+        }
+        let sv = SparseVec::from_pairs(pairs);
+        for (i, &d) in dense.iter().enumerate() {
+            assert!(
+                (sv.get(i) - d).abs() < 1e-5,
+                "seed {seed}: accumulated value differs at {i}"
+            );
+        }
+    }
+}

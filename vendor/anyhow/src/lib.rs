@@ -1,0 +1,190 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so the crate ships this small
+//! vendored stand-in providing exactly the surface the repo uses:
+//!
+//! * [`Error`] — an opaque error value holding a context chain
+//! * [`Result<T>`] — `std::result::Result<T, Error>` with a default error
+//! * [`anyhow!`] — construct an [`Error`] from a format string or a value
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`/`Option`
+//!
+//! Formatting matches upstream closely enough for logs and tests:
+//! `{e}` prints the outermost context, `{e:#}` prints the whole chain
+//! separated by `": "`.
+
+use std::fmt;
+
+/// Opaque error: a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message (what `{}` prints).
+    pub fn root_context(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket From possible.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error of a `Result` or to a `None`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { chain: vec![context.to_string(), e.to_string()] })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { chain: vec![f().to_string(), e.to_string()] })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (with inline captures) or
+/// from any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| format!("reading {}", "x.bin"))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading x.bin");
+        assert_eq!(format!("{e:#}"), "reading x.bin: missing thing");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("got {n} items from {}", "src");
+        assert_eq!(b.to_string(), "got 3 items from src");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "missing thing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+        assert_eq!(Some(5u32).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("failed with code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with code 7");
+    }
+}
