@@ -50,7 +50,72 @@ fn episode_peak(kind: CoreKind, n: usize, t_steps: usize) -> (usize, usize) {
     (region.peak_overhead(), peak_fwd)
 }
 
+/// Guard for the Fig 1b numbers: check the engine's per-part heap reports
+/// against *independently computed* expectations (sizes derived here from
+/// N and W, not from the engine's own accessors), so a refactor that adds
+/// or resizes engine state without accounting for it trips before any
+/// figure is emitted.
+fn assert_engine_accounting() {
+    let (n, word, t_steps) = (256usize, 32usize, 8usize);
+    let cfg = CoreConfig {
+        x_dim: 8,
+        y_dim: 8,
+        hidden: 32,
+        heads: 4,
+        word,
+        mem_words: n,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 7,
+        ..CoreConfig::default()
+    };
+    let mut rng = Rng::new(7);
+    let mut core = sam::cores::sam::SamCore::new(&cfg, &mut rng);
+    core.reset();
+    let x = vec![0.5f32; 8];
+    for _ in 0..t_steps {
+        core.forward(&x);
+    }
+    let e = core.engine();
+    // Ground truths: the store is exactly N·W f32s; the ring exactly two
+    // usize arrays of N; the Linear ANN holds at least its own N·W
+    // normalized copy of the rows.
+    assert_eq!(e.store_heap_bytes(), n * word * 4, "store accounting drifted");
+    assert_eq!(
+        e.ring_heap_bytes(),
+        2 * n * std::mem::size_of::<usize>(),
+        "ring accounting drifted"
+    );
+    assert!(e.ann_heap_bytes() >= n * word * 4, "ANN must account its row copies");
+    // The journal tape must carry one journal per head-step while the
+    // episode is live: ≥K distinct rows once reads are warm (steps ≥ 2),
+    // ≥1 row (the LRA erase) on the first step where w̃^R is still empty.
+    let min_journal = cfg.heads * ((t_steps - 1) * cfg.k + 1) * word * 4;
+    assert!(
+        e.journal_heap_bytes() >= min_journal,
+        "live tape accounts {} B, expected >= {min_journal} B",
+        e.journal_heap_bytes()
+    );
+    // ...and the total must be the sum of the declared parts.
+    assert_eq!(
+        e.heap_bytes(),
+        e.store_heap_bytes()
+            + e.ann_heap_bytes()
+            + e.ring_heap_bytes()
+            + e.journal_heap_bytes()
+            + e.grad_heap_bytes()
+    );
+    core.rollback();
+    core.end_episode();
+    assert_eq!(
+        core.engine().journal_heap_bytes(),
+        0,
+        "rollback must drain the journal tape"
+    );
+}
+
 fn main() {
+    assert_engine_accounting();
     let args = Args::from_env();
     let paper = args.has("paper-scale");
     let t_steps = args.usize_or("steps", if paper { 100 } else { 50 });

@@ -2,8 +2,11 @@
 //! associative recall with an exponentially-increasing difficulty ceiling
 //! and a memory far larger than any dense model could train with, and
 //! watch the level climb. With `--workers N` the batch runs on N
-//! data-parallel threads (Supp C) — same seed, same learning trajectory,
-//! less wall-clock.
+//! data-parallel threads (Supp C) — less wall-clock, and with
+//! `--ann linear` the same seed gives the same learning trajectory at any
+//! worker count (the approximate kd/LSH indexes carry per-replica history,
+//! so they are deterministic per count but can diverge across counts —
+//! see DESIGN.md).
 //!
 //!     cargo run --release --example curriculum_scaling -- --updates 800 --memory 16384
 //!     cargo run --release --example curriculum_scaling -- --workers 4

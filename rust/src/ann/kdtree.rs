@@ -75,6 +75,9 @@ pub struct KdForest {
     /// Query-visited stamps (avoids a HashSet per query).
     stamp: Vec<u32>,
     stamp_now: u32,
+    /// Full forest rebuilds performed (initial build included); lets tests
+    /// assert the incremental update path stays incremental.
+    rebuilds: usize,
 }
 
 impl KdForest {
@@ -104,6 +107,7 @@ impl KdForest {
             rng: Rng::new(seed),
             stamp: vec![0; n],
             stamp_now: 0,
+            rebuilds: 0,
         }
     }
 
@@ -180,6 +184,7 @@ impl KdForest {
     fn rebuild_all(&mut self) {
         self.trees = (0..self.n_trees).map(|_| self.build_tree()).collect();
         self.inserts_since_rebuild = 0;
+        self.rebuilds += 1;
     }
 
     /// Descend to the leaf for `v` in tree `t`, returning the node index.
@@ -334,6 +339,10 @@ impl AnnIndex for KdForest {
 
     fn rebuild(&mut self) {
         self.rebuild_all();
+    }
+
+    fn full_rebuilds(&self) -> usize {
+        self.rebuilds
     }
 
     fn heap_bytes(&self) -> usize {

@@ -30,6 +30,13 @@ pub struct LshIndex {
     pub min_candidates: usize,
     stamp: Vec<u32>,
     stamp_now: u32,
+    /// Inserts since the last bucket compaction. Bucket vectors only grow
+    /// (remove() retains capacity), so a long update stream slowly bloats
+    /// the tables; every `compact_every` inserts we rehash once, amortizing
+    /// the O(N) compaction over O(N) incremental updates.
+    ops_since_compact: usize,
+    compact_every: usize,
+    rebuilds: usize,
 }
 
 impl LshIndex {
@@ -62,6 +69,9 @@ impl LshIndex {
             min_candidates,
             stamp: vec![0; n],
             stamp_now: 0,
+            ops_since_compact: 0,
+            compact_every: 8 * n.max(64),
+            rebuilds: 0,
         }
     }
 
@@ -118,6 +128,10 @@ impl AnnIndex for LshIndex {
         }
         self.present[id] = true;
         self.count += 1;
+        self.ops_since_compact += 1;
+        if self.ops_since_compact >= self.compact_every {
+            self.rebuild();
+        }
     }
 
     fn remove(&mut self, id: usize) {
@@ -203,6 +217,12 @@ impl AnnIndex for LshIndex {
                 self.tables[t].entry(key).or_default().push(id);
             }
         }
+        self.ops_since_compact = 0;
+        self.rebuilds += 1;
+    }
+
+    fn full_rebuilds(&self) -> usize {
+        self.rebuilds
     }
 
     fn heap_bytes(&self) -> usize {

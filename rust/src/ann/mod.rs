@@ -65,12 +65,44 @@ pub trait AnnIndex: Send {
         self.insert(id, v);
     }
 
+    /// Incremental per-row replacement — the write-time sync path used by
+    /// [`crate::memory::engine::SparseMemoryEngine`]. Semantically identical
+    /// to [`AnnIndex::update`], but implementations treat it as the hot path:
+    /// service it in place (no full resync) and amortize any structural
+    /// maintenance through their internal rebuild counters.
+    fn update_row(&mut self, id: usize, v: &[f32]) {
+        self.update(id, v);
+    }
+
+    /// Incremental removal twin of [`AnnIndex::update_row`].
+    fn remove_row(&mut self, id: usize) {
+        self.remove(id);
+    }
+
     /// Return up to `k` (id, cosine-similarity) pairs, best first.
     fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)>;
 
+    /// Batched K-nearest lookup: answer every query in one call so a
+    /// multi-head read step costs one index traversal, not one per head.
+    /// Takes borrowed slices so the hot path never clones query vectors.
+    /// Results are identical to issuing `query` per element in order; the
+    /// default does exactly that, and backends override where a genuinely
+    /// shared traversal exists (see [`LinearIndex`]).
+    fn query_many(&mut self, queries: &[&[f32]], k: usize) -> Vec<Vec<(usize, f32)>> {
+        queries.iter().map(|q| self.query(q, k)).collect()
+    }
+
     /// Rebuild internal structure from scratch (the paper rebuilds every N
-    /// insertions to keep trees balanced).
+    /// insertions to keep trees balanced). Incremental maintenance makes
+    /// this an amortized background concern, not a per-episode requirement.
     fn rebuild(&mut self);
+
+    /// How many full rebuilds the index has performed (initial builds
+    /// included). Lets callers assert the incremental path stays
+    /// incremental — see `rust/tests/ann_recall.rs`.
+    fn full_rebuilds(&self) -> usize {
+        0
+    }
 
     /// Approximate heap footprint, for the memory benchmarks.
     fn heap_bytes(&self) -> usize;
@@ -144,6 +176,12 @@ impl AnnIndex for LinearIndex {
         }
     }
 
+    fn update_row(&mut self, id: usize, v: &[f32]) {
+        // Overwriting the slot is the whole update; skip the remove/insert
+        // count churn of the default.
+        self.insert(id, v);
+    }
+
     fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
         let qn = normalized(q);
         // Max-heap on (negated) distance of current top-k via simple vec;
@@ -164,6 +202,40 @@ impl AnnIndex for LinearIndex {
         }
         best.into_iter()
             .map(|(id, d2)| (id, unit_dist_sq_to_cosine(d2)))
+            .collect()
+    }
+
+    /// One pass over the data services every query: each memory row is read
+    /// from cache once and scored against all H queries, instead of H full
+    /// scans. Per-query results are bit-identical to sequential `query`
+    /// calls (same comparisons in the same id order).
+    fn query_many(&mut self, queries: &[&[f32]], k: usize) -> Vec<Vec<(usize, f32)>> {
+        let qns: Vec<Vec<f32>> = queries.iter().map(|q| normalized(q)).collect();
+        let mut bests: Vec<Vec<(usize, f32)>> =
+            (0..queries.len()).map(|_| Vec::with_capacity(k + 1)).collect();
+        for id in 0..self.present.len() {
+            if !self.present[id] {
+                continue;
+            }
+            let row = &self.data[id * self.dim..(id + 1) * self.dim];
+            for (qn, best) in qns.iter().zip(bests.iter_mut()) {
+                let d2 = dist_sq(qn, row);
+                if best.len() < k || d2 < best.last().unwrap().1 {
+                    let pos = best.partition_point(|&(_, bd)| bd <= d2);
+                    best.insert(pos, (id, d2));
+                    if best.len() > k {
+                        best.pop();
+                    }
+                }
+            }
+        }
+        bests
+            .into_iter()
+            .map(|best| {
+                best.into_iter()
+                    .map(|(id, d2)| (id, unit_dist_sq_to_cosine(d2)))
+                    .collect()
+            })
             .collect()
     }
 
@@ -223,6 +295,24 @@ mod tests {
             let cos = dot(&an, &bn);
             let d2 = dist_sq(&an, &bn);
             assert!((unit_dist_sq_to_cosine(d2) - cos).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn query_many_matches_sequential_queries() {
+        let mut rng = Rng::new(5);
+        let mut idx = LinearIndex::new(64, 8);
+        for i in 0..64 {
+            let v: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            idx.insert(i, &v);
+        }
+        let queries: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let batched = idx.query_many(&qrefs, 4);
+        assert_eq!(batched.len(), queries.len());
+        for (q, b) in queries.iter().zip(&batched) {
+            assert_eq!(idx.query(q, 4), *b);
         }
     }
 

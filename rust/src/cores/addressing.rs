@@ -73,6 +73,23 @@ pub fn content_weights(q: &[f32], beta_raw: f32, mem: &MemoryStore, rows: Vec<us
     ContentRead { rows, sims, weights, beta, beta_raw }
 }
 
+/// Batched `content_weights` over every head's (query, β̂) pair — the
+/// step-level entry point paired with `AnnIndex::query_many`, so a
+/// multi-head read computes all its softmaxes from one candidate-selection
+/// traversal. `rows_per_query[i]` is the candidate set for `queries[i]`.
+pub fn content_weights_many(
+    queries: &[(Vec<f32>, f32)],
+    mem: &MemoryStore,
+    rows_per_query: Vec<Vec<usize>>,
+) -> Vec<ContentRead> {
+    assert_eq!(queries.len(), rows_per_query.len());
+    queries
+        .iter()
+        .zip(rows_per_query)
+        .map(|((q, beta_raw), rows)| content_weights(q, *beta_raw, mem, rows))
+        .collect()
+}
+
 /// Gradients of `content_weights`: given dL/dweights, accumulate dq,
 /// dβ̂ and per-row memory grads via the callback (row, dmem_row_fn).
 pub fn content_weights_backward(

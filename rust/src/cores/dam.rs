@@ -3,10 +3,14 @@
 //! words, writes touch all N entries of w^W, usage is the time-discounted
 //! sum U⁽¹⁾, and BPTT caches a full memory snapshot per step. Costs O(N·W)
 //! time and space per step — the overhead Figures 1a/1b plot against SAM.
+//!
+//! The memory itself lives in a dense-mode [`SparseMemoryEngine`] (no ANN,
+//! snapshot/restore instead of journals); DAM keeps only its discounted
+//! usage U⁽¹⁾ and dense gradient state locally.
 
 use super::addressing::{content_weights, content_weights_backward, ContentRead};
 use super::{Controller, Core, CoreConfig};
-use crate::memory::store::MemoryStore;
+use crate::memory::engine::SparseMemoryEngine;
 use crate::memory::usage::DiscountedUsage;
 use crate::nn::act::{dsigmoid, sigmoid};
 use crate::nn::param::{HasParams, Param};
@@ -39,7 +43,7 @@ struct DamStep {
 pub struct DamCore {
     cfg: CoreConfig,
     ctrl: Controller,
-    mem: MemoryStore,
+    engine: SparseMemoryEngine,
     usage: DiscountedUsage,
     w_read_prev: Vec<Vec<f32>>,
     r_prev: Vec<Vec<f32>>,
@@ -65,7 +69,7 @@ impl DamCore {
         );
         DamCore {
             ctrl,
-            mem: MemoryStore::zeros(cfg.mem_words, cfg.word),
+            engine: SparseMemoryEngine::new_dense(cfg.mem_words, cfg.word),
             usage: DiscountedUsage::new(cfg.mem_words, cfg.lambda),
             w_read_prev: vec![vec![0.0; cfg.mem_words]; cfg.heads],
             r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
@@ -97,7 +101,7 @@ impl Core for DamCore {
     fn reset(&mut self) {
         self.ctrl.reset();
         self.tape.clear();
-        self.mem.fill(0.0);
+        self.engine.fill(0.0);
         self.usage.reset();
         for v in &mut self.w_read_prev {
             v.iter_mut().for_each(|x| *x = 0.0);
@@ -118,7 +122,7 @@ impl Core for DamCore {
         let n = self.cfg.mem_words;
         let (h, p) = self.ctrl.step(x, &self.r_prev);
         let hd = head_dim(self.cfg.word);
-        let mem_before = self.mem.snapshot();
+        let mem_before = self.engine.snapshot();
         self.usage.u.iter_mut().for_each(|u| *u *= self.usage.lambda);
         let mut heads = Vec::with_capacity(self.cfg.heads);
 
@@ -134,16 +138,7 @@ impl Core for DamCore {
             }
             w_write[lra_row] += alpha * (1.0 - gamma);
             // Erase the least-used row fully (R_t = 𝕀^U 1ᵀ), then dense add.
-            self.mem.row_mut(lra_row).iter_mut().for_each(|v| *v = 0.0);
-            for i in 0..n {
-                let wv = w_write[i];
-                if wv != 0.0 {
-                    let row = self.mem.row_mut(i);
-                    for (m, &av) in row.iter_mut().zip(a) {
-                        *m += wv * av;
-                    }
-                }
-            }
+            self.engine.dense_write(&w_write, a, lra_row);
             // Usage sees this head's write immediately so the next head
             // picks a different least-used slot.
             for i in 0..n {
@@ -165,9 +160,9 @@ impl Core for DamCore {
         let mut reads = Vec::with_capacity(self.cfg.heads);
         for hi in 0..self.cfg.heads {
             let (q, _a, _ar, _gr, br) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
-            let read = content_weights(q, br, &self.mem, (0..n).collect());
+            let read = content_weights(q, br, self.engine.store(), (0..n).collect());
             let mut r = vec![0.0; self.cfg.word];
-            self.mem.read_dense(&read.weights, &mut r);
+            self.engine.read_dense(&read.weights, &mut r);
             for i in 0..n {
                 self.usage.u[i] += read.weights[i];
             }
@@ -199,7 +194,7 @@ impl Core for DamCore {
             }
             let mut dweights = vec![0.0f32; n];
             for i in 0..n {
-                dweights[i] = dot(self.mem.row(i), &dr) + self.d_wread[hi][i];
+                dweights[i] = dot(self.engine.store().row(i), &dr) + self.d_wread[hi][i];
                 let wv = hstep.read.weights[i];
                 if wv != 0.0 {
                     let row = self.dmem.row_mut(i);
@@ -215,7 +210,7 @@ impl Core for DamCore {
             content_weights_backward(
                 &hstep.read,
                 &hstep.query,
-                &self.mem,
+                self.engine.store(),
                 &dweights,
                 &mut dq,
                 &mut dbeta_raw,
@@ -264,7 +259,7 @@ impl Core for DamCore {
         }
 
         // Restore M_{t-1} for the next backward step.
-        self.mem.restore(&step.mem_before);
+        self.engine.restore(&step.mem_before);
         let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
         self.d_r = dr_prev;
     }
@@ -272,7 +267,7 @@ impl Core for DamCore {
     fn rollback(&mut self) {
         if let Some(first) = self.tape.first() {
             let m = first.mem_before.clone();
-            self.mem.restore(&m);
+            self.engine.restore(&m);
         }
         self.tape.clear();
     }
@@ -346,7 +341,7 @@ mod tests {
         let mut rng = Rng::new(14);
         let mut core = DamCore::new(&small_cfg(14), &mut rng);
         core.reset();
-        let start = core.mem.snapshot();
+        let start = core.engine.snapshot();
         let (xs, ts) = random_episode(4, 3, 4, &mut rng);
         let mut dys = Vec::new();
         for (x, t) in xs.iter().zip(&ts) {
@@ -356,7 +351,7 @@ mod tests {
         for dy in dys.iter().rev() {
             core.backward(dy);
         }
-        assert_eq!(core.mem.snapshot(), start);
+        assert_eq!(core.engine.snapshot(), start);
     }
 
     #[test]

@@ -2,31 +2,24 @@
 //!
 //! Per step and per head:
 //!   1. **Write** (§3.2, eq. 5): w^W = α(γ·w̃^R_{t-1} + (1-γ)·𝕀^U) where 𝕀^U
-//!      is the least-recently-accessed word from the [`LraRing`]; the LRA
-//!      row is erased (R_t = 𝕀^U 1ᵀ) then the sparse add w^W a_tᵀ applied.
-//!      O(K·W) time; the prior contents of touched rows go to a journal.
+//!      is the least-recently-accessed word; the LRA row is erased
+//!      (R_t = 𝕀^U 1ᵀ) then the sparse add w^W a_tᵀ applied. O(K·W) time.
 //!   2. **Read** (§3.1, eq. 4): the ANN returns the K most similar words to
 //!      the query; w̃^R = softmax(β·cos) over those K; r̃ = Σ w̃^R(sᵢ)M(sᵢ).
 //!      O(log N) for the ANN query, O(K·W) for everything else.
 //!
-//! BPTT (§3.4, Supp Fig 5): backward reverts each step's journal, rolling
-//! the memory back in place — O(1) space per step instead of O(N). Memory
-//! gradients are row-sparse ([`RowSparse`]): rows appear when a future read
-//! touched them and die when the pass crosses the erase that created them.
+//! All memory/ANN/usage/journal state lives in the shared
+//! [`SparseMemoryEngine`]: the core owns only its controller, head
+//! parameters and the recurrent read state. BPTT (§3.4, Supp Fig 5) is the
+//! engine's journaled rollback — O(1) space per step instead of O(N); the
+//! carried row-sparse memory gradient also lives engine-side.
 
-use super::addressing::{
-    content_weights, content_weights_backward, write_gate, write_gate_backward, ContentRead,
-    WriteGate,
-};
+use super::addressing::{ContentRead, WriteGate};
 use super::{Controller, Core, CoreConfig};
-use crate::ann::{build_index, AnnIndex};
-use crate::memory::store::{MemoryStore, StepJournal, WriteOp};
-use crate::memory::usage::LraRing;
-use crate::tensor::csr::{RowSparse, SparseVec};
-use crate::tensor::matrix::dot;
+use crate::memory::engine::SparseMemoryEngine;
 use crate::nn::param::{HasParams, Param};
+use crate::tensor::csr::SparseVec;
 use crate::util::rng::Rng;
-use std::collections::HashSet;
 
 /// Raw head parameter layout: [q(W), a(W), α̂, γ̂, β̂].
 const fn head_dim(word: usize) -> usize {
@@ -34,9 +27,8 @@ const fn head_dim(word: usize) -> usize {
 }
 
 struct HeadStep {
-    /// Write-side caches.
+    /// Write-side caches (the journal itself lives on the engine's tape).
     gate: WriteGate,
-    journal: StepJournal,
     /// The w̃^R_{t-1} actually used by this step's write.
     w_read_used: SparseVec,
     write_word: Vec<f32>,
@@ -54,22 +46,14 @@ struct SamStep {
 pub struct SamCore {
     cfg: CoreConfig,
     ctrl: Controller,
-    mem: MemoryStore,
-    ann: Box<dyn AnnIndex>,
-    ring: LraRing,
+    engine: SparseMemoryEngine,
     /// Per-head previous read weights / read words (recurrent memory state).
     w_read_prev: Vec<SparseVec>,
     r_prev: Vec<Vec<f32>>,
     tape: Vec<SamStep>,
-    /// Rows whose contents changed this episode (for ANN resync).
-    touched: HashSet<usize>,
-    /// Seed for the deterministic per-row memory init (see [`init_row`]).
-    mem_seed: u64,
     // ---- carried backward state ----
     d_r: Vec<Vec<f32>>,
     d_wread: Vec<SparseVec>,
-    dmem: RowSparse,
-    ann_dirty: bool,
 }
 
 impl SamCore {
@@ -85,29 +69,22 @@ impl SamCore {
             head_dim(cfg.word),
             &mut rng,
         );
-        let mem_seed = rng.next_u64();
-        let mut mem = MemoryStore::zeros(cfg.mem_words, cfg.word);
-        for i in 0..cfg.mem_words {
-            init_row(mem_seed, i, mem.row_mut(i));
-        }
-        let mut ann = build_index(cfg.ann, cfg.mem_words, cfg.word, rng.next_u64());
-        for i in 0..cfg.mem_words {
-            ann.insert(i, mem.row(i));
-        }
+        let engine = SparseMemoryEngine::new_sparse(
+            cfg.mem_words,
+            cfg.word,
+            cfg.k,
+            cfg.delta,
+            cfg.ann,
+            &mut rng,
+        );
         SamCore {
             ctrl,
-            mem,
-            ann,
-            mem_seed,
-            ring: LraRing::new(cfg.mem_words),
+            engine,
             w_read_prev: vec![SparseVec::new(); cfg.heads],
             r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
             tape: Vec::new(),
-            touched: HashSet::new(),
             d_r: vec![vec![0.0; cfg.word]; cfg.heads],
             d_wread: vec![SparseVec::new(); cfg.heads],
-            dmem: RowSparse::new(cfg.word),
-            ann_dirty: false,
             cfg: cfg.clone(),
         }
     }
@@ -124,27 +101,10 @@ impl SamCore {
         )
     }
 
-    fn resync_ann(&mut self) {
-        for &row in &self.touched {
-            self.ann.update(row, self.mem.row(row));
-        }
-        self.touched.clear();
-        self.ann_dirty = false;
-    }
-}
-
-/// Episode-start contents of memory row `i`: small deterministic noise
-/// (std [`MEM_INIT_STD`]) regenerable per row in O(W). A strictly zero
-/// memory makes every content similarity tie at episode start, which makes
-/// the ANN's top-K selection arbitrary; tiny distinct words break the ties
-/// without carrying information. Deterministic regeneration lets `reset`
-/// restore an abandoned episode in O(touched) instead of O(N).
-pub(crate) const MEM_INIT_STD: f32 = 0.02;
-
-pub(crate) fn init_row(seed: u64, i: usize, out: &mut [f32]) {
-    let mut r = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-    for v in out {
-        *v = r.normal() * MEM_INIT_STD;
+    /// The shared memory engine (read-only) — exposed for the accounting
+    /// checks in `benches/fig1_memory.rs` and the parity tests.
+    pub fn engine(&self) -> &SparseMemoryEngine {
+        &self.engine
     }
 }
 
@@ -162,19 +122,9 @@ impl Core for SamCore {
     fn reset(&mut self) {
         self.ctrl.reset();
         self.tape.clear();
-        // If the previous episode fully rolled back (the normal train path)
-        // the memory already equals its start state and only the ANN and
-        // ring need resetting; otherwise restore the touched rows.
-        if self.ann_dirty || !self.touched.is_empty() {
-            // Memory may have residual episode contents if rollback() was
-            // skipped: regenerate the touched rows' init state (O(touched)).
-            let rows: Vec<usize> = self.touched.iter().copied().collect();
-            for row in rows {
-                init_row(self.mem_seed, row, self.mem.row_mut(row));
-            }
-            self.resync_ann();
-        }
-        self.ring.reset();
+        // Engine rollback restores memory + ANN even if the previous
+        // episode was abandoned without backward/rollback.
+        self.engine.reset();
         for wv in &mut self.w_read_prev {
             *wv = SparseVec::new();
         }
@@ -187,7 +137,6 @@ impl Core for SamCore {
         for d in &mut self.d_wread {
             *d = SparseVec::new();
         }
-        self.dmem = RowSparse::new(self.cfg.word);
     }
 
     fn forward(&mut self, x: &[f32]) -> Vec<f32> {
@@ -198,29 +147,10 @@ impl Core for SamCore {
         // --- writes (use previous step's read weights, eq. 5) ---
         for hi in 0..self.cfg.heads {
             let (_q, a, alpha_raw, gamma_raw, _beta) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
-            let lra_row = self.ring.pop_lra();
-            let gate = write_gate(alpha_raw, gamma_raw, &self.w_read_prev[hi], lra_row);
-            let op = WriteOp {
-                erase_rows: vec![lra_row],
-                weights: gate.weights.clone(),
-                word: a.clone(),
-            };
-            let journal = self.mem.apply_write(&op);
-            for (i, wv) in gate.weights.iter() {
-                if wv.abs() > self.cfg.delta {
-                    self.ring.touch(i);
-                }
-                self.touched.insert(i);
-            }
-            self.touched.insert(lra_row);
-            // Keep the ANN in sync with every changed row (§3.5).
-            for row in journal.touched_rows() {
-                self.ann.update(row, self.mem.row(row));
-            }
-            self.ann_dirty = true;
+            let gate =
+                self.engine.sparse_write(alpha_raw, gamma_raw, &self.w_read_prev[hi], &a);
             heads.push(HeadStep {
                 gate,
-                journal,
                 w_read_used: self.w_read_prev[hi].clone(),
                 write_word: a,
                 // placeholder read fields, filled below
@@ -236,28 +166,21 @@ impl Core for SamCore {
             });
         }
 
-        // --- reads (post-write memory M_t) ---
+        // --- reads (post-write memory M_t; one batched index traversal
+        //     answers every head) ---
+        let queries: Vec<(Vec<f32>, f32)> = (0..self.cfg.heads)
+            .map(|hi| {
+                let (q, _a, _ar, _gr, beta_raw) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
+                (q, beta_raw)
+            })
+            .collect();
         let mut reads = Vec::with_capacity(self.cfg.heads);
-        for hi in 0..self.cfg.heads {
-            let (q, _a, _ar, _gr, beta_raw) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
-            let neighbors = self.ann.query(&q, self.cfg.k);
-            let rows: Vec<usize> = neighbors.iter().map(|&(i, _)| i).collect();
-            let read = content_weights(&q, beta_raw, &self.mem, rows);
-            let w_sparse = SparseVec::from_pairs(
-                read.rows.iter().copied().zip(read.weights.iter().copied()).collect(),
-            );
-            let mut r = vec![0.0; self.cfg.word];
-            self.mem.read_sparse(&w_sparse, &mut r);
-            for (i, wv) in w_sparse.iter() {
-                if wv > self.cfg.delta {
-                    self.ring.touch(i);
-                }
-            }
-            self.w_read_prev[hi] = w_sparse;
-            heads[hi].read = read;
-            heads[hi].query = q;
-            heads[hi].read_out = r.clone();
-            reads.push(r);
+        for (hi, tk) in self.engine.read_topk(queries).into_iter().enumerate() {
+            self.w_read_prev[hi] = tk.weights;
+            heads[hi].read = tk.read;
+            heads[hi].query = tk.query;
+            heads[hi].read_out = tk.r.clone();
+            reads.push(tk.r);
         }
 
         let y = self.ctrl.output(&h, &reads);
@@ -281,30 +204,17 @@ impl Core for SamCore {
             for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
                 *a += b;
             }
-            // r̃ = Σ w̃ᵢ M(sᵢ)
-            let kn = hstep.read.rows.len();
-            let mut dweights = vec![0.0f32; kn];
-            for (j, &row) in hstep.read.rows.iter().enumerate() {
-                dweights[j] = dot(self.mem.row(row), &dr);
-                self.dmem.axpy_row(row, hstep.read.weights[j], &dr);
-            }
-            // w̃^R_t also fed step t+1's write gate.
-            for (j, &row) in hstep.read.rows.iter().enumerate() {
-                dweights[j] += self.d_wread[hi].get(row);
-            }
-            // softmax(β·cos) backward → dq, dβ̂, dM rows.
+            // w̃^R_t also fed step t+1's write gate (carried d_wread).
             let dslice = &mut dp[hi * hd..(hi + 1) * hd];
             let mut dbeta_raw = 0.0;
             let mut dq = vec![0.0f32; w];
-            let dmem_ref = &mut self.dmem;
-            content_weights_backward(
+            self.engine.backward_read_topk(
                 &hstep.read,
                 &hstep.query,
-                &self.mem,
-                &dweights,
+                &dr,
+                &self.d_wread[hi],
                 &mut dq,
                 &mut dbeta_raw,
-                |row, d| dmem_ref.axpy_row(row, 1.0, d),
             );
             dslice[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
             dslice[2 * w + 2] += dbeta_raw;
@@ -313,31 +223,19 @@ impl Core for SamCore {
         // --- write backward (reverse head order, rolling memory back) ---
         for hi in (0..self.cfg.heads).rev() {
             let hstep = &step.heads[hi];
-            let dslice_start = hi * hd;
-            // da and dw^W from dM (w.r.t. memory state after this head's write).
-            let mut da = vec![0.0f32; w];
-            let mut dw_pairs = Vec::with_capacity(hstep.gate.weights.nnz());
-            for (i, wv) in hstep.gate.weights.iter() {
-                if let Some(drow) = self.dmem.row(i) {
-                    for (daj, dj) in da.iter_mut().zip(drow) {
-                        *daj += wv * dj;
-                    }
-                    dw_pairs.push((i, dot(&hstep.write_word, drow)));
-                }
-            }
-            let dw = SparseVec::from_pairs(dw_pairs);
-            // The erased row's pre-write contents don't affect the loss.
-            self.dmem.clear_row(hstep.gate.lra_row);
-            // Gate backward → dα̂, dγ̂ and grad on w̃^R_{t-1} (carried).
             let (mut dar, mut dgr) = (0.0f32, 0.0f32);
-            let dw_prev = write_gate_backward(&hstep.gate, &hstep.w_read_used, &dw, &mut dar, &mut dgr);
+            let (da, dw_prev) = self.engine.backward_write(
+                &hstep.gate,
+                &hstep.write_word,
+                &hstep.w_read_used,
+                &mut dar,
+                &mut dgr,
+            );
             self.d_wread[hi] = dw_prev;
-            let dslice = &mut dp[dslice_start..dslice_start + hd];
+            let dslice = &mut dp[hi * hd..(hi + 1) * hd];
             dslice[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
             dslice[2 * w] += dar;
             dslice[2 * w + 1] += dgr;
-            // Roll the memory back below this head's write (Supp Fig 5).
-            self.mem.revert(&hstep.journal);
         }
 
         // --- controller backward ---
@@ -346,18 +244,13 @@ impl Core for SamCore {
     }
 
     fn rollback(&mut self) {
-        while let Some(step) = self.tape.pop() {
-            for hstep in step.heads.iter().rev() {
-                self.mem.revert(&hstep.journal);
-            }
-        }
+        self.tape.clear();
+        self.engine.rollback();
     }
 
     fn end_episode(&mut self) {
         debug_assert!(self.tape.is_empty(), "end_episode with live tape");
-        // Memory has rolled back to the episode-start state; resync the ANN
-        // for every row the episode touched (O(T log N), Supp A.1).
-        self.resync_ann();
+        self.engine.end_episode();
     }
 
     fn x_dim(&self) -> usize {
@@ -376,8 +269,7 @@ impl Core for SamCore {
                 s.heads
                     .iter()
                     .map(|h| {
-                        h.journal.heap_bytes()
-                            + h.w_read_used.heap_bytes()
+                        h.w_read_used.heap_bytes()
                             + (h.write_word.capacity()
                                 + h.query.capacity()
                                 + h.read_out.capacity())
@@ -390,7 +282,7 @@ impl Core for SamCore {
                     .sum::<usize>()
             })
             .sum();
-        step_bytes + self.ctrl.cache_bytes()
+        step_bytes + self.engine.tape_bytes() + self.ctrl.cache_bytes()
     }
 }
 
@@ -434,7 +326,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut core = SamCore::new(&small_cfg(2), &mut rng);
         core.reset();
-        let start = core.mem.snapshot();
+        let start = core.engine().snapshot();
         let t = 6;
         let (xs, ts) = random_episode(4, 3, t, &mut rng);
         let mut dys = Vec::new();
@@ -442,12 +334,12 @@ mod tests {
             let y = core.forward(x);
             dys.push(crate::nn::loss::sigmoid_xent(&y, tt).1);
         }
-        assert_ne!(core.mem.snapshot(), start, "writes should modify memory");
+        assert_ne!(core.engine().snapshot(), start, "writes should modify memory");
         for dy in dys.iter().rev() {
             core.backward(dy);
         }
         core.end_episode();
-        assert_eq!(core.mem.snapshot(), start, "BPTT must roll memory back bit-exactly");
+        assert_eq!(core.engine().snapshot(), start, "BPTT must roll memory back bit-exactly");
     }
 
     #[test]

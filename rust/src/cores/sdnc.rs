@@ -7,23 +7,19 @@
 //! P = Nᵀ, the link-following reads are sparse row gathers:
 //!     f_t = N_t·w^r_{t-1} = Σ_j w^r(j)·P_t(j,:)   (eq. 21)
 //!     b_t = P_t·w^r_{t-1} = Σ_j w^r(j)·N_t(j,:)   (eq. 22)
-//! both O(K·K_L). Linkage rows changed by a step are journaled and reverted
-//! during BPTT, like the memory itself (§3.4). As in the paper, gradients
-//! are not passed through the linkage matrices (Supp D.1), but do flow
-//! through the read mixture.
+//! both O(K·K_L). As in the paper, gradients are not passed through the
+//! linkage matrices (Supp D.1), but do flow through the read mixture.
+//!
+//! Memory, ANN, LRA ring, write journals and the carried memory gradient
+//! all live in the shared [`SparseMemoryEngine`]; the SDNC keeps only its
+//! temporal-link state (N/P/precedence and their per-step journals) local.
 
-use super::addressing::{
-    content_weights, content_weights_backward, write_gate, write_gate_backward, ContentRead,
-    WriteGate,
-};
-use super::sam::init_row;
+use super::addressing::{ContentRead, WriteGate};
 use super::{Controller, Core, CoreConfig};
-use crate::ann::{build_index, AnnIndex};
-use crate::memory::store::{MemoryStore, StepJournal, WriteOp};
-use crate::memory::usage::LraRing;
+use crate::memory::engine::SparseMemoryEngine;
 use crate::nn::param::{HasParams, Param};
-use crate::tensor::csr::{RowSparse, SparseLinkMatrix, SparseVec};
-use crate::tensor::matrix::{dot, softmax_backward, softmax_inplace};
+use crate::tensor::csr::{SparseLinkMatrix, SparseVec};
+use crate::tensor::matrix::{softmax_backward, softmax_inplace};
 use crate::util::rng::Rng;
 use std::collections::{HashMap, HashSet};
 
@@ -34,7 +30,6 @@ const fn head_dim(word: usize) -> usize {
 
 struct HeadStep {
     gate: WriteGate,
-    journal: StepJournal,
     w_read_used: SparseVec,
     write_word: Vec<f32>,
     read: ContentRead,
@@ -60,23 +55,16 @@ struct SdncStep {
 pub struct SdncCore {
     cfg: CoreConfig,
     ctrl: Controller,
-    mem: MemoryStore,
-    ann: Box<dyn AnnIndex>,
-    ring: LraRing,
+    engine: SparseMemoryEngine,
     n_link: SparseLinkMatrix,
     p_link: SparseLinkMatrix,
     precedence: SparseVec,
     w_read_prev: Vec<SparseVec>,
     r_prev: Vec<Vec<f32>>,
     tape: Vec<SdncStep>,
-    touched: HashSet<usize>,
-    /// Seed for the deterministic per-row memory init (see sam::init_row).
-    mem_seed: u64,
     // carried backward state
     d_r: Vec<Vec<f32>>,
     d_wread: Vec<SparseVec>,
-    dmem: RowSparse,
-    ann_dirty: bool,
 }
 
 impl SdncCore {
@@ -92,32 +80,25 @@ impl SdncCore {
             head_dim(cfg.word),
             &mut rng,
         );
-        let mem_seed = rng.next_u64();
-        let mut mem = MemoryStore::zeros(cfg.mem_words, cfg.word);
-        for i in 0..cfg.mem_words {
-            init_row(mem_seed, i, mem.row_mut(i));
-        }
-        let mut ann = build_index(cfg.ann, cfg.mem_words, cfg.word, rng.next_u64());
-        for i in 0..cfg.mem_words {
-            ann.insert(i, mem.row(i));
-        }
+        let engine = SparseMemoryEngine::new_sparse(
+            cfg.mem_words,
+            cfg.word,
+            cfg.k,
+            cfg.delta,
+            cfg.ann,
+            &mut rng,
+        );
         SdncCore {
             ctrl,
-            mem,
-            ann,
-            ring: LraRing::new(cfg.mem_words),
+            engine,
             n_link: SparseLinkMatrix::new(cfg.k_l),
             p_link: SparseLinkMatrix::new(cfg.k_l),
             precedence: SparseVec::new(),
             w_read_prev: vec![SparseVec::new(); cfg.heads],
             r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
             tape: Vec::new(),
-            touched: HashSet::new(),
-            mem_seed,
             d_r: vec![vec![0.0; cfg.word]; cfg.heads],
             d_wread: vec![SparseVec::new(); cfg.heads],
-            dmem: RowSparse::new(cfg.word),
-            ann_dirty: false,
             cfg: cfg.clone(),
         }
     }
@@ -217,14 +198,6 @@ impl SdncCore {
         }
         self.precedence = journal.precedence;
     }
-
-    fn resync_ann(&mut self) {
-        for &row in &self.touched {
-            self.ann.update(row, self.mem.row(row));
-        }
-        self.touched.clear();
-        self.ann_dirty = false;
-    }
 }
 
 impl HasParams for SdncCore {
@@ -241,14 +214,7 @@ impl Core for SdncCore {
     fn reset(&mut self) {
         self.ctrl.reset();
         self.tape.clear();
-        if self.ann_dirty || !self.touched.is_empty() {
-            let rows: Vec<usize> = self.touched.iter().copied().collect();
-            for row in rows {
-                init_row(self.mem_seed, row, self.mem.row_mut(row));
-            }
-            self.resync_ann();
-        }
-        self.ring.reset();
+        self.engine.reset();
         self.n_link = SparseLinkMatrix::new(self.cfg.k_l);
         self.p_link = SparseLinkMatrix::new(self.cfg.k_l);
         self.precedence = SparseVec::new();
@@ -264,7 +230,6 @@ impl Core for SdncCore {
         for d in &mut self.d_wread {
             *d = SparseVec::new();
         }
-        self.dmem = RowSparse::new(self.cfg.word);
     }
 
     fn forward(&mut self, x: &[f32]) -> Vec<f32> {
@@ -273,35 +238,16 @@ impl Core for SdncCore {
         let (h, p) = self.ctrl.step(x, &self.r_prev);
         let mut heads = Vec::with_capacity(self.cfg.heads);
 
-        // --- SAM-style sparse writes ---
+        // --- SAM-style sparse writes (engine journals + syncs the ANN) ---
         let mut w_agg = SparseVec::new();
         for hi in 0..self.cfg.heads {
             let ph = &p[hi * hd..(hi + 1) * hd];
             let a = ph[w..2 * w].to_vec();
             let (ar, gr) = (ph[2 * w], ph[2 * w + 1]);
-            let lra_row = self.ring.pop_lra();
-            let gate = write_gate(ar, gr, &self.w_read_prev[hi], lra_row);
-            let op = WriteOp {
-                erase_rows: vec![lra_row],
-                weights: gate.weights.clone(),
-                word: a.clone(),
-            };
-            let journal = self.mem.apply_write(&op);
-            for (i, wv) in gate.weights.iter() {
-                if wv.abs() > self.cfg.delta {
-                    self.ring.touch(i);
-                }
-                self.touched.insert(i);
-            }
-            self.touched.insert(lra_row);
-            for row in journal.touched_rows() {
-                self.ann.update(row, self.mem.row(row));
-            }
-            self.ann_dirty = true;
+            let gate = self.engine.sparse_write(ar, gr, &self.w_read_prev[hi], &a);
             w_agg = w_agg.add(&gate.weights);
             heads.push(HeadStep {
                 gate,
-                journal,
                 w_read_used: self.w_read_prev[hi].clone(),
                 write_word: a,
                 read: ContentRead { rows: vec![], sims: vec![], weights: vec![], beta: 0.0, beta_raw: 0.0 },
@@ -320,17 +266,22 @@ impl Core for SdncCore {
         }
         let links = self.update_links(&w_agg);
 
-        // --- reads: 3-way mix of content / forward-link / backward-link ---
+        // --- reads: 3-way mix of content / forward-link / backward-link,
+        //     content candidates from one batched ANN traversal ---
+        let queries: Vec<(Vec<f32>, f32)> = (0..self.cfg.heads)
+            .map(|hi| {
+                let ph = &p[hi * hd..(hi + 1) * hd];
+                (ph[..w].to_vec(), ph[2 * w + 2])
+            })
+            .collect();
+        let content_reads = self.engine.content_read_many(&queries);
         let mut reads = Vec::with_capacity(self.cfg.heads);
-        for hi in 0..self.cfg.heads {
+        for (hi, ((query, _beta_raw), read)) in
+            queries.into_iter().zip(content_reads).enumerate()
+        {
             let ph = &p[hi * hd..(hi + 1) * hd];
-            let query = ph[..w].to_vec();
-            let beta_raw = ph[2 * w + 2];
             let mut modes = ph[2 * w + 3..2 * w + 6].to_vec();
             softmax_inplace(&mut modes);
-            let neighbors = self.ann.query(&query, self.cfg.k);
-            let rows: Vec<usize> = neighbors.iter().map(|&(i, _)| i).collect();
-            let read = content_weights(&query, beta_raw, &self.mem, rows);
             let wp = &self.w_read_prev[hi];
             let fwd = Self::follow(&self.p_link, wp); // f = Σ w(j)·P(j,:) = N·w
             let bwd = Self::follow(&self.n_link, wp); // b = Σ w(j)·N(j,:) = Nᵀ·w = P·w
@@ -343,13 +294,7 @@ impl Core for SdncCore {
             );
             w_read = w_read.add_scaled(modes[0], &bwd).add_scaled(modes[2], &fwd);
             w_read.truncate_top_k(self.cfg.k + 2 * self.cfg.k_l);
-            let mut r = vec![0.0; w];
-            self.mem.read_sparse(&w_read, &mut r);
-            for (i, wv) in w_read.iter() {
-                if wv > self.cfg.delta {
-                    self.ring.touch(i);
-                }
-            }
+            let r = self.engine.read_mixture(&w_read);
             self.w_read_prev[hi] = w_read.clone();
             let hstep = &mut heads[hi];
             hstep.read = read;
@@ -385,13 +330,8 @@ impl Core for SdncCore {
             }
             // dL/dw_read over supp(w_read), plus the carried gradient from
             // step t+1's uses of w_read (gate + linkage).
-            let mut dw_pairs = Vec::with_capacity(hstep.w_read.nnz());
-            for (i, wv) in hstep.w_read.iter() {
-                let g = dot(self.mem.row(i), &dr) + self.d_wread[hi].get(i);
-                self.dmem.axpy_row(i, wv, &dr);
-                dw_pairs.push((i, g));
-            }
-            let dw_read = SparseVec::from_pairs(dw_pairs);
+            let dw_read =
+                self.engine.backward_sparse_read(&hstep.w_read, &dr, &self.d_wread[hi]);
             // mode mixture backward
             let dmodes = vec![
                 dw_read.dot_sparse(&hstep.bwd),
@@ -419,15 +359,12 @@ impl Core for SdncCore {
                 .collect();
             let mut dq = vec![0.0f32; w];
             let mut dbeta_raw = 0.0f32;
-            let dmem_ref = &mut self.dmem;
-            content_weights_backward(
+            self.engine.backward_content(
                 &hstep.read,
                 &hstep.query,
-                &self.mem,
                 &dweights,
                 &mut dq,
                 &mut dbeta_raw,
-                |row, d| dmem_ref.axpy_row(row, 1.0, d),
             );
             ph[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
             ph[2 * w + 2] += dbeta_raw;
@@ -455,27 +392,19 @@ impl Core for SdncCore {
         // --- write backward (reverse head order, rolling memory back) ---
         for hi in (0..self.cfg.heads).rev() {
             let hstep = &step.heads[hi];
-            let mut da = vec![0.0f32; w];
-            let mut dw_pairs = Vec::with_capacity(hstep.gate.weights.nnz());
-            for (i, wv) in hstep.gate.weights.iter() {
-                if let Some(drow) = self.dmem.row(i) {
-                    for (daj, dj) in da.iter_mut().zip(drow) {
-                        *daj += wv * dj;
-                    }
-                    dw_pairs.push((i, dot(&hstep.write_word, drow)));
-                }
-            }
-            let dw = SparseVec::from_pairs(dw_pairs);
-            self.dmem.clear_row(hstep.gate.lra_row);
             let (mut dar, mut dgr) = (0.0f32, 0.0f32);
-            let dw_prev =
-                write_gate_backward(&hstep.gate, &hstep.w_read_used, &dw, &mut dar, &mut dgr);
+            let (da, dw_prev) = self.engine.backward_write(
+                &hstep.gate,
+                &hstep.write_word,
+                &hstep.w_read_used,
+                &mut dar,
+                &mut dgr,
+            );
             self.d_wread[hi] = d_wread_next[hi].add(&dw_prev);
             let ph = &mut dp[hi * hd..(hi + 1) * hd];
             ph[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
             ph[2 * w] += dar;
             ph[2 * w + 1] += dgr;
-            self.mem.revert(&hstep.journal);
         }
 
         // Roll the linkage back to N_{t-1}/P_{t-1}.
@@ -486,17 +415,15 @@ impl Core for SdncCore {
     }
 
     fn rollback(&mut self) {
+        self.engine.rollback();
         while let Some(step) = self.tape.pop() {
-            for hstep in step.heads.iter().rev() {
-                self.mem.revert(&hstep.journal);
-            }
             self.revert_links(step.links);
         }
     }
 
     fn end_episode(&mut self) {
         debug_assert!(self.tape.is_empty());
-        self.resync_ann();
+        self.engine.end_episode();
     }
 
     fn x_dim(&self) -> usize {
@@ -524,8 +451,7 @@ impl Core for SdncCore {
                     + s.heads
                         .iter()
                         .map(|h| {
-                            h.journal.heap_bytes()
-                                + h.w_read_used.heap_bytes()
+                            h.w_read_used.heap_bytes()
                                 + h.w_read.heap_bytes()
                                 + h.fwd.heap_bytes()
                                 + h.bwd.heap_bytes()
@@ -538,7 +464,7 @@ impl Core for SdncCore {
                         .sum::<usize>()
             })
             .sum();
-        step + self.ctrl.cache_bytes()
+        step + self.engine.tape_bytes() + self.ctrl.cache_bytes()
     }
 }
 
@@ -580,7 +506,7 @@ mod tests {
         let mut rng = Rng::new(44);
         let mut core = SdncCore::new(&small_cfg(44), &mut rng);
         core.reset();
-        let start = core.mem.snapshot();
+        let start = core.engine.snapshot();
         let (xs, ts) = random_episode(4, 3, 5, &mut rng);
         let mut dys = Vec::new();
         for (x, t) in xs.iter().zip(&ts) {
@@ -592,7 +518,7 @@ mod tests {
             core.backward(dy);
         }
         core.end_episode();
-        assert_eq!(core.mem.snapshot(), start);
+        assert_eq!(core.engine.snapshot(), start);
         assert_eq!(core.n_link.nnz(), 0, "linkage must roll back to empty");
         assert_eq!(core.p_link.nnz(), 0);
         assert_eq!(core.precedence.nnz(), 0);

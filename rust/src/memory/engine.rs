@@ -1,0 +1,538 @@
+//! The shared sparse-memory engine (paper §3.1–3.5).
+//!
+//! Every sparse core used to carry its own copy of the same mechanism:
+//! a [`MemoryStore`], an ANN index kept in sync by a `touched`-set +
+//! end-of-episode resync loop, an LRA ring, per-step write journals and a
+//! row-sparse carried memory gradient. [`SparseMemoryEngine`] owns all of
+//! that state behind one small differentiable API, so SAM, SDNC and (via
+//! the dense sub-API) DAM share a single implementation:
+//!
+//! * **Forward**: [`sparse_write`](SparseMemoryEngine::sparse_write) applies
+//!   eq. 5's gated write, journals the touched rows, updates the LRA ring
+//!   and keeps the ANN in sync *incrementally* via
+//!   [`AnnIndex::update_row`]; [`read_topk`](SparseMemoryEngine::read_topk)
+//!   answers all heads' content reads with one batched
+//!   [`AnnIndex::query_many`] traversal (eq. 2/4).
+//! * **Backward**: [`backward_write`](SparseMemoryEngine::backward_write)
+//!   consumes the journal tape in reverse, rolling the memory back in place
+//!   (§3.4, O(1) space per step) and re-syncing the ANN rows it restores;
+//!   the read-side helpers accumulate into the carried [`RowSparse`]
+//!   memory gradient.
+//!
+//! Because the ANN is updated on *both* write and revert, it is in sync
+//! with the memory at every step boundary: there is no per-episode resync
+//! loop and no full rebuild on the default path — index restructuring is
+//! amortized inside the index implementations themselves.
+
+use crate::ann::{build_index, AnnIndex, AnnKind};
+use crate::cores::addressing::{
+    content_weights_backward, content_weights_many, write_gate, write_gate_backward, ContentRead,
+    WriteGate,
+};
+use crate::memory::store::{MemoryStore, StepJournal, WriteOp};
+use crate::memory::usage::LraRing;
+use crate::tensor::csr::{RowSparse, SparseVec};
+use crate::tensor::matrix::dot;
+use crate::util::rng::Rng;
+
+/// Episode-start contents of memory row `i`: small deterministic noise
+/// (std [`MEM_INIT_STD`]) regenerable per row in O(W). A strictly zero
+/// memory makes every content similarity tie at episode start, which makes
+/// the ANN's top-K selection arbitrary; tiny distinct words break the ties
+/// without carrying information.
+pub const MEM_INIT_STD: f32 = 0.02;
+
+pub fn init_row(seed: u64, i: usize, out: &mut [f32]) {
+    let mut r = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    for v in out {
+        *v = r.normal() * MEM_INIT_STD;
+    }
+}
+
+/// One head's batched content read: the ANN/content caches the backward
+/// pass needs, the sparse read weights w̃^R, and the read word r̃ (eq. 4).
+pub struct TopKRead {
+    pub query: Vec<f32>,
+    pub read: ContentRead,
+    pub weights: SparseVec,
+    pub r: Vec<f32>,
+}
+
+/// Owns the external memory and every auxiliary structure that must stay
+/// consistent with it. Cores own only their controller, head parameters and
+/// model-specific state (e.g. the SDNC's temporal links).
+pub struct SparseMemoryEngine {
+    mem: MemoryStore,
+    /// `None` for the dense control models (DAM), which never content-query.
+    ann: Option<Box<dyn AnnIndex>>,
+    /// `None` in dense mode — DAM selects write targets by discounted-usage
+    /// argmin, so allocating 2N usizes of LRA state would be dead weight.
+    ring: Option<LraRing>,
+    /// The episode's write tape, one journal per `sparse_write`, in write
+    /// order. `backward_write`/`rollback` consume it in reverse.
+    journals: Vec<StepJournal>,
+    /// Carried row-sparse memory gradient ∂L/∂M (Supp A).
+    dmem: RowSparse,
+    /// Sparse reads per head (paper: K = 4).
+    k: usize,
+    /// Usage threshold δ for LRA touches (paper: 0.005).
+    delta: f32,
+}
+
+impl SparseMemoryEngine {
+    /// Sparse engine (SAM/SDNC): deterministically-initialized memory rows,
+    /// an ANN index over them, and an LRA ring. Draws `mem_seed` then the
+    /// ANN seed from `rng`, in that order.
+    pub fn new_sparse(
+        n: usize,
+        word: usize,
+        k: usize,
+        delta: f32,
+        kind: AnnKind,
+        rng: &mut Rng,
+    ) -> SparseMemoryEngine {
+        let mem_seed = rng.next_u64();
+        let mut mem = MemoryStore::zeros(n, word);
+        for i in 0..n {
+            init_row(mem_seed, i, mem.row_mut(i));
+        }
+        let mut ann = build_index(kind, n, word, rng.next_u64());
+        for i in 0..n {
+            ann.insert(i, mem.row(i));
+        }
+        SparseMemoryEngine {
+            mem,
+            ann: Some(ann),
+            ring: Some(LraRing::new(n)),
+            journals: Vec::new(),
+            dmem: RowSparse::new(word),
+            k,
+            delta,
+        }
+    }
+
+    /// Dense engine (DAM): zero-initialized memory, no ANN. The dense
+    /// control models snapshot/restore instead of journaling, so the
+    /// journal tape stays empty.
+    pub fn new_dense(n: usize, word: usize) -> SparseMemoryEngine {
+        SparseMemoryEngine {
+            mem: MemoryStore::zeros(n, word),
+            ann: None,
+            ring: None,
+            journals: Vec::new(),
+            dmem: RowSparse::new(word),
+            k: 0,
+            delta: 0.0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.mem.n()
+    }
+
+    pub fn word_size(&self) -> usize {
+        self.mem.word_size()
+    }
+
+    /// Read-only view of the memory, for addressing math that takes
+    /// `&MemoryStore` (e.g. the dense models' `content_weights`).
+    pub fn store(&self) -> &MemoryStore {
+        &self.mem
+    }
+
+    // -- forward ------------------------------------------------------------
+
+    /// Gated sparse write (eq. 5/8) for one head: pops the LRA target,
+    /// interpolates the write weights, erases the LRA row, applies the
+    /// sparse add, journals the prior row contents, touches the ring and
+    /// incrementally syncs the ANN. Returns the gate cache for backward.
+    pub fn sparse_write(
+        &mut self,
+        alpha_raw: f32,
+        gamma_raw: f32,
+        w_read_prev: &SparseVec,
+        word: &[f32],
+    ) -> WriteGate {
+        let ring = self.ring.as_mut().expect("sparse_write needs a sparse engine (LRA ring)");
+        let lra_row = ring.pop_lra();
+        let gate = write_gate(alpha_raw, gamma_raw, w_read_prev, lra_row);
+        let op = WriteOp {
+            erase_rows: vec![lra_row],
+            weights: gate.weights.clone(),
+            word: word.to_vec(),
+        };
+        let journal = self.mem.apply_write(&op);
+        let ring = self.ring.as_mut().unwrap();
+        for (i, wv) in gate.weights.iter() {
+            if wv.abs() > self.delta {
+                ring.touch(i);
+            }
+        }
+        self.sync_rows(&journal);
+        self.journals.push(journal);
+        gate
+    }
+
+    /// Batched content reads for all heads (SAM's read path): one
+    /// `query_many` index traversal, then per-head softmax weights, sparse
+    /// read and ring touches, in head order.
+    pub fn read_topk(&mut self, queries: Vec<(Vec<f32>, f32)>) -> Vec<TopKRead> {
+        let reads = self.content_read_many(&queries);
+        let mut out = Vec::with_capacity(queries.len());
+        for ((query, _beta_raw), read) in queries.into_iter().zip(reads) {
+            let weights = SparseVec::from_pairs(
+                read.rows.iter().copied().zip(read.weights.iter().copied()).collect(),
+            );
+            let r = self.read_mixture(&weights);
+            out.push(TopKRead { query, read, weights, r });
+        }
+        out
+    }
+
+    /// Batched content-weight computation without the memory read or ring
+    /// touches — for cores (SDNC) that mix content weights with other
+    /// addressing modes before reading.
+    pub fn content_read_many(&mut self, queries: &[(Vec<f32>, f32)]) -> Vec<ContentRead> {
+        let ann = self.ann.as_mut().expect("content reads need a sparse engine (ANN)");
+        let qs: Vec<&[f32]> = queries.iter().map(|(q, _)| q.as_slice()).collect();
+        let rows_per_query: Vec<Vec<usize>> = ann
+            .query_many(&qs, self.k)
+            .into_iter()
+            .map(|ns| ns.into_iter().map(|(i, _)| i).collect())
+            .collect();
+        content_weights_many(queries, &self.mem, rows_per_query)
+    }
+
+    /// Sparse read r = Σᵢ w(sᵢ)·M(sᵢ) (eq. 4) with LRA touches for every
+    /// non-negligible weight.
+    pub fn read_mixture(&mut self, w_read: &SparseVec) -> Vec<f32> {
+        let mut r = vec![0.0; self.mem.word_size()];
+        self.mem.read_sparse(w_read, &mut r);
+        let ring = self.ring.as_mut().expect("read_mixture needs a sparse engine (LRA ring)");
+        for (i, wv) in w_read.iter() {
+            if wv > self.delta {
+                ring.touch(i);
+            }
+        }
+        r
+    }
+
+    // -- backward -----------------------------------------------------------
+
+    /// Backward of one head's `read_topk` result: accumulates ∂L/∂M over
+    /// the read support, folds in the carried gradient on w̃^R from step
+    /// t+1 (`carried_dw`), and backprops the content softmax into dq/dβ̂.
+    pub fn backward_read_topk(
+        &mut self,
+        read: &ContentRead,
+        query: &[f32],
+        dr: &[f32],
+        carried_dw: &SparseVec,
+        dq: &mut [f32],
+        dbeta_raw: &mut f32,
+    ) {
+        let mut dweights = vec![0.0f32; read.rows.len()];
+        for (j, &row) in read.rows.iter().enumerate() {
+            dweights[j] = dot(self.mem.row(row), dr) + carried_dw.get(row);
+            self.dmem.axpy_row(row, read.weights[j], dr);
+        }
+        self.backward_content(read, query, &dweights, dq, dbeta_raw);
+    }
+
+    /// Backward of `read_mixture`: returns dL/dw over the read support
+    /// (including the carried gradient) and accumulates ∂L/∂M.
+    pub fn backward_sparse_read(
+        &mut self,
+        w_read: &SparseVec,
+        dr: &[f32],
+        carried_dw: &SparseVec,
+    ) -> SparseVec {
+        let mut pairs = Vec::with_capacity(w_read.nnz());
+        for (i, wv) in w_read.iter() {
+            let g = dot(self.mem.row(i), dr) + carried_dw.get(i);
+            self.dmem.axpy_row(i, wv, dr);
+            pairs.push((i, g));
+        }
+        SparseVec::from_pairs(pairs)
+    }
+
+    /// Content-softmax backward (eq. 2) with ∂L/∂M rows accumulated into
+    /// the engine's carried gradient.
+    pub fn backward_content(
+        &mut self,
+        read: &ContentRead,
+        query: &[f32],
+        dweights: &[f32],
+        dq: &mut [f32],
+        dbeta_raw: &mut f32,
+    ) {
+        let mem = &self.mem;
+        let dmem = &mut self.dmem;
+        content_weights_backward(read, query, mem, dweights, dq, dbeta_raw, |row, d| {
+            dmem.axpy_row(row, 1.0, d)
+        });
+    }
+
+    /// Backward of one head's `sparse_write` (reverse head order): computes
+    /// the write-word and gate gradients from ∂L/∂M, kills the erased row's
+    /// gradient, reverts this write's journal (rolling the memory back one
+    /// head, Supp Fig 5) and re-syncs the restored ANN rows. Returns
+    /// (d(write word), dL/d(w̃^R_{t-1})).
+    pub fn backward_write(
+        &mut self,
+        gate: &WriteGate,
+        word: &[f32],
+        w_read_used: &SparseVec,
+        dalpha_raw: &mut f32,
+        dgamma_raw: &mut f32,
+    ) -> (Vec<f32>, SparseVec) {
+        let mut da = vec![0.0f32; self.mem.word_size()];
+        let mut dw_pairs = Vec::with_capacity(gate.weights.nnz());
+        for (i, wv) in gate.weights.iter() {
+            if let Some(drow) = self.dmem.row(i) {
+                for (daj, dj) in da.iter_mut().zip(drow) {
+                    *daj += wv * dj;
+                }
+                dw_pairs.push((i, dot(word, drow)));
+            }
+        }
+        let dw = SparseVec::from_pairs(dw_pairs);
+        // The erased row's pre-write contents don't affect the loss.
+        self.dmem.clear_row(gate.lra_row);
+        let dw_prev = write_gate_backward(gate, w_read_used, &dw, dalpha_raw, dgamma_raw);
+        let journal = self
+            .journals
+            .pop()
+            .expect("backward_write without a matching sparse_write");
+        self.mem.revert(&journal);
+        self.sync_rows(&journal);
+        (da, dw_prev)
+    }
+
+    // -- episode lifecycle ---------------------------------------------------
+
+    /// Discard the remaining write tape without computing gradients:
+    /// reverts every outstanding journal in reverse order, restoring the
+    /// memory (bit-exactly) and the ANN to the episode-start state.
+    pub fn rollback(&mut self) {
+        while let Some(journal) = self.journals.pop() {
+            self.mem.revert(&journal);
+            self.sync_rows(&journal);
+        }
+    }
+
+    /// Start a new episode. Outstanding journals mean the previous episode
+    /// was abandoned mid-tape; reverting them restores memory + ANN in
+    /// O(tape) — there is no touched-set bookkeeping to replay.
+    pub fn reset(&mut self) {
+        self.rollback();
+        if let Some(ring) = self.ring.as_mut() {
+            ring.reset();
+        }
+        self.dmem = RowSparse::new(self.mem.word_size());
+    }
+
+    /// Called after the last `backward` of an episode. Incremental
+    /// maintenance keeps the ANN in sync through every write and revert, so
+    /// there is nothing to resync and no full rebuild on the default path.
+    pub fn end_episode(&mut self) {
+        debug_assert!(self.journals.is_empty(), "end_episode with outstanding journals");
+    }
+
+    /// Keep the ANN rows listed in `journal` consistent with the memory —
+    /// the §3.5 per-write sync, also applied on revert so the index never
+    /// goes stale. Trade-off vs the old end-of-episode resync: roughly one
+    /// extra `update_row` per journaled row during backward, in exchange
+    /// for an always-in-sync index, no touched-set bookkeeping, and O(tape)
+    /// recovery from abandoned episodes. For `LinearIndex` (the default)
+    /// the resulting index *content* is bit-identical to the old resync;
+    /// for KdForest/LSH the extra updates shift internal rebuild cadence
+    /// and tree shape, so those backends keep per-run determinism but not
+    /// bit-parity with the pre-engine code (same caveat class as
+    /// DESIGN.md's worker-count note).
+    fn sync_rows(&mut self, journal: &StepJournal) {
+        if let Some(ann) = self.ann.as_mut() {
+            for row in journal.touched_rows() {
+                ann.update_row(row, self.mem.row(row));
+            }
+        }
+    }
+
+    // -- dense sub-API (DAM, the paper's dense control model) ----------------
+
+    /// Full memory snapshot — the O(N·W)/step BPTT cost the sparse path
+    /// eliminates; dense baselines cache one per step.
+    pub fn snapshot(&self) -> Vec<f32> {
+        self.mem.snapshot()
+    }
+
+    pub fn restore(&mut self, snap: &[f32]) {
+        self.mem.restore(snap);
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.mem.fill(v);
+    }
+
+    /// Dense read r = Σᵢ w(i)·M(i) (eq. 1) in O(N·W).
+    pub fn read_dense(&self, weights: &[f32], out: &mut [f32]) {
+        self.mem.read_dense(weights, out);
+    }
+
+    /// Dense write: erase `erase_row` fully (R_t = 𝕀^U 1ᵀ), then add
+    /// w^W aᵀ over all non-zero weights (eq. 3 with a full-row erase).
+    pub fn dense_write(&mut self, w_write: &[f32], word: &[f32], erase_row: usize) {
+        self.mem.row_mut(erase_row).iter_mut().for_each(|v| *v = 0.0);
+        let n = self.mem.n();
+        for i in 0..n {
+            let wv = w_write[i];
+            if wv != 0.0 {
+                let row = self.mem.row_mut(i);
+                for (m, &av) in row.iter_mut().zip(word) {
+                    *m += wv * av;
+                }
+            }
+        }
+    }
+
+    // -- accounting ----------------------------------------------------------
+
+    /// Bytes of per-episode BPTT state the engine holds (the Fig 1b
+    /// quantity: grows with T, constant in N).
+    pub fn tape_bytes(&self) -> usize {
+        self.journal_heap_bytes()
+    }
+
+    pub fn store_heap_bytes(&self) -> usize {
+        self.mem.heap_bytes()
+    }
+
+    pub fn ann_heap_bytes(&self) -> usize {
+        self.ann.as_ref().map(|a| a.heap_bytes()).unwrap_or(0)
+    }
+
+    pub fn ring_heap_bytes(&self) -> usize {
+        self.ring.as_ref().map(|r| r.heap_bytes()).unwrap_or(0)
+    }
+
+    pub fn journal_heap_bytes(&self) -> usize {
+        // Live journals only: the drained tape reports zero (the retained
+        // vec capacity is a warm buffer, not per-episode state).
+        self.journals.iter().map(|j| j.heap_bytes()).sum::<usize>()
+            + self.journals.len() * std::mem::size_of::<StepJournal>()
+    }
+
+    pub fn grad_heap_bytes(&self) -> usize {
+        self.dmem.heap_bytes()
+    }
+
+    /// Total engine heap: by construction exactly the sum of its parts
+    /// (asserted in `benches/fig1_memory.rs` so Fig 1b can't silently
+    /// drift).
+    pub fn heap_bytes(&self) -> usize {
+        self.store_heap_bytes()
+            + self.ann_heap_bytes()
+            + self.ring_heap_bytes()
+            + self.journal_heap_bytes()
+            + self.grad_heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse_engine(seed: u64) -> SparseMemoryEngine {
+        let mut rng = Rng::new(seed);
+        SparseMemoryEngine::new_sparse(16, 6, 3, 0.005, AnnKind::Linear, &mut rng)
+    }
+
+    fn write_some(engine: &mut SparseMemoryEngine, steps: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut w_prev = SparseVec::new();
+        for _ in 0..steps {
+            let word: Vec<f32> = (0..engine.word_size()).map(|_| rng.normal()).collect();
+            let gate = engine.sparse_write(rng.normal(), rng.normal(), &w_prev, &word);
+            w_prev = gate.weights;
+        }
+    }
+
+    #[test]
+    fn rollback_restores_memory_and_ann() {
+        let mut engine = sparse_engine(1);
+        let start = engine.snapshot();
+        let q: Vec<f32> = (0..6).map(|i| (i as f32 + 1.0) * 0.1).collect();
+        let before = engine.content_read_many(&[(q.clone(), 0.5)]);
+        write_some(&mut engine, 8, 2);
+        assert_ne!(engine.snapshot(), start, "writes should modify memory");
+        engine.rollback();
+        assert_eq!(engine.snapshot(), start, "rollback must be bit-exact");
+        // The incremental revert-sync must leave the ANN answering exactly
+        // as before the writes — no end-of-episode resync exists anymore.
+        let after = engine.content_read_many(&[(q, 0.5)]);
+        assert_eq!(before[0].rows, after[0].rows);
+        for (a, b) in before[0].weights.iter().zip(&after[0].weights) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn reset_recovers_abandoned_episode() {
+        let mut engine = sparse_engine(3);
+        let start = engine.snapshot();
+        write_some(&mut engine, 5, 4);
+        // No rollback/backward: reset alone must restore the start state.
+        engine.reset();
+        assert_eq!(engine.snapshot(), start);
+        engine.end_episode();
+    }
+
+    #[test]
+    fn read_topk_returns_normalized_weights() {
+        let mut engine = sparse_engine(5);
+        write_some(&mut engine, 4, 6);
+        let queries: Vec<(Vec<f32>, f32)> = (0..3)
+            .map(|h| ((0..6).map(|i| (h + i) as f32 * 0.2 - 0.5).collect(), 0.3))
+            .collect();
+        let reads = engine.read_topk(queries);
+        assert_eq!(reads.len(), 3);
+        for tk in &reads {
+            assert_eq!(tk.read.rows.len(), 3, "K=3 candidates");
+            let sum: f32 = tk.read.weights.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "softmax weights sum to 1");
+            assert_eq!(tk.weights.nnz(), tk.read.rows.len());
+            assert_eq!(tk.r.len(), 6);
+        }
+        engine.rollback();
+    }
+
+    #[test]
+    fn heap_bytes_is_sum_of_parts() {
+        let mut engine = sparse_engine(7);
+        write_some(&mut engine, 6, 8);
+        assert_eq!(
+            engine.heap_bytes(),
+            engine.store_heap_bytes()
+                + engine.ann_heap_bytes()
+                + engine.ring_heap_bytes()
+                + engine.journal_heap_bytes()
+                + engine.grad_heap_bytes()
+        );
+        assert!(engine.tape_bytes() > 0);
+        engine.rollback();
+    }
+
+    #[test]
+    fn dense_write_matches_manual_loop() {
+        let mut engine = SparseMemoryEngine::new_dense(4, 2);
+        engine.fill(1.0);
+        engine.dense_write(&[0.5, 0.0, 0.0, 0.25], &[2.0, 4.0], 0);
+        // row0 erased then 0.5*word; row3 gets 1 + 0.25*word.
+        assert_eq!(engine.store().row(0), &[1.0, 2.0]);
+        assert_eq!(engine.store().row(1), &[1.0, 1.0]);
+        assert_eq!(engine.store().row(3), &[1.5, 2.0]);
+        let mut out = vec![0.0; 2];
+        engine.read_dense(&[1.0, 0.0, 0.0, 0.0], &mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+}

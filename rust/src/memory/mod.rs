@@ -1,4 +1,7 @@
 //! External-memory substrates: the dense store with sparse-write rollback
-//! journal (§3.4) and usage tracking (§3.2, Supp A.3).
+//! journal (§3.4), usage tracking (§3.2, Supp A.3), and the shared
+//! [`engine::SparseMemoryEngine`] that owns store + ANN + ring + journals
+//! on behalf of the sparse cores.
+pub mod engine;
 pub mod store;
 pub mod usage;

@@ -122,6 +122,77 @@ fn lsh_recall_across_rebuild_boundaries() {
     assert!(r >= RECALL_THRESHOLD, "lsh recall@{k} after update wave = {r}");
 }
 
+/// Shared driver for the incremental-maintenance property (the engine's
+/// default path): several interleaved `update_row` waves with the full
+/// rebuild threshold set far out of reach — recall against brute force
+/// must hold after every wave, the rebuild counter must prove the index
+/// never fell back to a full rebuild, and `remove_row` must take effect
+/// immediately.
+fn incremental_waves_hold_recall(
+    idx: &mut dyn AnnIndex,
+    n: usize,
+    dim: usize,
+    pts: &[Vec<f32>],
+    label: &str,
+) {
+    let k = 4;
+    let mut exact = LinearIndex::new(n, dim);
+    for (i, p) in pts.iter().enumerate() {
+        idx.insert(i, p);
+        exact.insert(i, p);
+    }
+    let builds_after_load = idx.full_rebuilds();
+    let mut current: Vec<Vec<f32>> = pts.to_vec();
+    for wave in 0..4u64 {
+        let moved = random_points(n / 4, dim, 1000 + wave);
+        for (j, p) in moved.iter().enumerate() {
+            // Interleave moved ids across the key space so every wave
+            // touches every region of the index.
+            let id = (j * 4 + wave as usize) % n;
+            idx.update_row(id, p);
+            exact.update_row(id, p);
+            current[id] = p.clone();
+        }
+        let queries = near_queries(&current, 32, 0.1, 2000 + wave);
+        let r = recall(&mut *idx, &mut exact, &queries, k);
+        assert!(
+            r >= RECALL_THRESHOLD,
+            "{label} incremental recall@{k} after wave {wave} = {r}"
+        );
+    }
+    assert_eq!(
+        idx.full_rebuilds(),
+        builds_after_load,
+        "{label}: update waves must stay on the incremental path (no full rebuilds)"
+    );
+    // remove_row must hide the id from queries without any rebuild.
+    idx.remove_row(0);
+    let res = idx.query(&current[0], k);
+    assert!(res.iter().all(|&(i, _)| i != 0), "{label}: remove_row leaked id 0");
+    assert_eq!(idx.len(), n - 1);
+    assert_eq!(idx.full_rebuilds(), builds_after_load);
+}
+
+#[test]
+fn kdforest_incremental_updates_without_rebuilds() {
+    let (n, dim) = (256, 16);
+    let pts = random_points(n, dim, 41);
+    // rebuild_every far above the op count: the only full build is the
+    // initial one (asserted inside the driver via full_rebuilds()).
+    let mut forest = KdForest::new(n, dim, 4, 128, 1_000_000, 3);
+    incremental_waves_hold_recall(&mut forest, n, dim, &pts, "kd");
+}
+
+#[test]
+fn lsh_incremental_updates_without_rebuilds() {
+    let (n, dim) = (256, 32);
+    let pts = random_points(n, dim, 51);
+    // 256 loads + 4×64 updates = 512 ops, well under the index's amortized
+    // compaction threshold (8·n), so the whole run stays incremental.
+    let mut lsh = LshIndex::new(n, dim, 12, 10, 96, 4);
+    incremental_waves_hold_recall(&mut lsh, n, dim, &pts, "lsh");
+}
+
 #[test]
 fn exact_self_queries_always_hit() {
     // Self-queries (noise 0) are the floor case: the stored point itself
