@@ -1,0 +1,233 @@
+//! Perf-regression harness: kernel GFLOP/s and end-to-end step latency.
+//!
+//! Writes two JSON files at the repo root that every future perf PR is
+//! judged against:
+//!
+//! * `BENCH_kernels.json` — blocked vs reference GFLOP/s for
+//!   `gemm`/`gemm_tn`/`gemm_nt`/`gemv` at LSTM-sized shapes (the 256×512 ×
+//!   512×256 class the controller's batched backward produces). Acceptance
+//!   floor: blocked `gemm_nt`/`gemm_tn` ≥ 2× reference at those shapes.
+//! * `BENCH_step.json` — µs per forward+backward step for SAM / SDNC / DAM
+//!   at N ∈ {1k, 16k, 64k} (paper-style scaling points).
+//!
+//!     cargo bench --bench kernels [-- --smoke]
+//!
+//! `--smoke` runs reduced shapes/reps (CI keeps it under a minute) but
+//! still writes both files, tagged `"smoke": true`.
+
+use sam::bench::{fmt_time, gflops, measure, save_bench_root, Table};
+use sam::prelude::*;
+use sam::tensor::matrix::{self, reference, Matrix};
+use sam::util::json::Json;
+
+fn random_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = rng.normal();
+    }
+    m
+}
+
+struct KernelResult {
+    kernel: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    gflops_blocked: f64,
+    gflops_reference: f64,
+}
+
+/// Time one (blocked, reference) kernel pair on C += op(A)op(B) shapes.
+fn bench_pair(
+    kernel: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    reps: usize,
+    rng: &mut Rng,
+    blocked: impl Fn(&mut Matrix, &Matrix, &Matrix),
+    refk: impl Fn(&mut Matrix, &Matrix, &Matrix),
+    shapes: (usize, usize, usize, usize, usize, usize),
+) -> KernelResult {
+    let (ar, ac, br, bc, cr, cc) = shapes;
+    let a = random_matrix(ar, ac, rng);
+    let b = random_matrix(br, bc, rng);
+    let mut c = Matrix::zeros(cr, cc);
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let tb = measure(reps, || blocked(&mut c, &a, &b)).min;
+    c.fill(0.0);
+    let tr = measure(reps, || refk(&mut c, &a, &b)).min;
+    KernelResult {
+        kernel,
+        m,
+        k,
+        n,
+        gflops_blocked: gflops(flops, tb),
+        gflops_reference: gflops(flops, tr),
+    }
+}
+
+fn kernel_suite(smoke: bool) -> Vec<KernelResult> {
+    let mut rng = Rng::new(42);
+    // LSTM-sized shape class: T×4H ᵀ· T×I backward flush and T×I · (4H×I)ᵀ
+    // forward, plus the square GEMM. Smoke shrinks everything 4×.
+    let (m, k, n, reps) = if smoke { (64, 128, 64, 3) } else { (256, 512, 256, 7) };
+    let mut out = Vec::new();
+    out.push(bench_pair(
+        "gemm",
+        m,
+        k,
+        n,
+        reps,
+        &mut rng,
+        matrix::gemm,
+        reference::gemm,
+        (m, k, k, n, m, n),
+    ));
+    out.push(bench_pair(
+        "gemm_tn",
+        m,
+        k,
+        n,
+        reps,
+        &mut rng,
+        matrix::gemm_tn,
+        reference::gemm_tn,
+        (k, m, k, n, m, n),
+    ));
+    out.push(bench_pair(
+        "gemm_nt",
+        m,
+        k,
+        n,
+        reps,
+        &mut rng,
+        matrix::gemm_nt,
+        reference::gemm_nt,
+        (m, k, n, k, m, n),
+    ));
+    // gemv at controller shape (4H × (x + heads·word), H = 100).
+    {
+        let (gm, gn) = if smoke { (128, 132) } else { (400, 136) };
+        let a = random_matrix(gm, gn, &mut rng);
+        let x: Vec<f32> = (0..gn).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; gm];
+        let flops = 2.0 * gm as f64 * gn as f64;
+        let tb = measure(reps * 64, || matrix::gemv(&mut y, &a, &x)).min;
+        let tr = measure(reps * 64, || reference::gemv(&mut y, &a, &x)).min;
+        out.push(KernelResult {
+            kernel: "gemv",
+            m: gm,
+            k: gn,
+            n: 1,
+            gflops_blocked: gflops(flops, tb),
+            gflops_reference: gflops(flops, tr),
+        });
+    }
+    out
+}
+
+/// µs per forward+backward step for one core at memory size N.
+fn step_time_us(kind: CoreKind, n: usize, t_steps: usize, reps: usize) -> f64 {
+    let cfg = CoreConfig {
+        x_dim: 8,
+        y_dim: 8,
+        hidden: 100,
+        heads: 4,
+        word: 32,
+        mem_words: n,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 1,
+        ..CoreConfig::default()
+    };
+    let mut rng = Rng::new(1);
+    let mut core = build_core(kind, &cfg, &mut rng);
+    let x = vec![0.5f32; 8];
+    let dy = vec![0.1f32; 8];
+    let mut y = Vec::new();
+    // One throwaway episode warms the workspace pools, so the measurement
+    // sees the steady state the zero-allocation tests pin.
+    let stats = measure(reps, || {
+        core.reset();
+        for _ in 0..t_steps {
+            core.forward_into(&x, &mut y);
+        }
+        for _ in 0..t_steps {
+            core.backward(&dy);
+        }
+        core.end_episode();
+    });
+    stats.min / t_steps as f64 * 1e6
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let t_steps = args.usize_or("steps", 10);
+
+    // --- kernels ----------------------------------------------------------
+    println!("Kernel GFLOP/s — register-blocked vs reference\n");
+    let mut ktable = Table::new(&["kernel", "shape", "blocked", "reference", "speedup"]);
+    let kernels = kernel_suite(smoke);
+    let mut kjson = Vec::new();
+    for r in &kernels {
+        let speedup = r.gflops_blocked / r.gflops_reference.max(1e-12);
+        ktable.row(vec![
+            r.kernel.to_string(),
+            format!("{}x{}x{}", r.m, r.k, r.n),
+            format!("{:.2} GF/s", r.gflops_blocked),
+            format!("{:.2} GF/s", r.gflops_reference),
+            format!("{speedup:.2}x"),
+        ]);
+        kjson.push(Json::obj(vec![
+            ("kernel", Json::str(r.kernel)),
+            ("m", Json::num(r.m as f64)),
+            ("k", Json::num(r.k as f64)),
+            ("n", Json::num(r.n as f64)),
+            ("gflops_blocked", Json::num(r.gflops_blocked)),
+            ("gflops_reference", Json::num(r.gflops_reference)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    ktable.print();
+    save_bench_root(
+        "kernels",
+        Json::obj(vec![
+            ("generated_by", Json::str("benches/kernels.rs")),
+            ("smoke", Json::Bool(smoke)),
+            ("kernels", Json::arr(kjson)),
+        ]),
+    );
+
+    // --- end-to-end steps --------------------------------------------------
+    // Dense DAM is O(N·W)/step; cap it one size down in smoke mode so CI
+    // stays fast.
+    let ns: Vec<usize> = if smoke { vec![1 << 10, 1 << 12] } else { vec![1 << 10, 1 << 14, 1 << 16] };
+    let reps = if smoke { 1 } else { 2 };
+    println!("\nEnd-to-end µs/step (forward+backward, T={t_steps})\n");
+    let mut stable = Table::new(&["core", "N", "µs/step"]);
+    let mut sjson = Vec::new();
+    for (label, kind) in [("sam", CoreKind::Sam), ("sdnc", CoreKind::Sdnc), ("dam", CoreKind::Dam)]
+    {
+        for &n in &ns {
+            let us = step_time_us(kind, n, t_steps, reps);
+            stable.row(vec![label.to_string(), n.to_string(), fmt_time(us / 1e6)]);
+            sjson.push(Json::obj(vec![
+                ("core", Json::str(label)),
+                ("n", Json::num(n as f64)),
+                ("us_per_step", Json::num(us)),
+            ]));
+        }
+    }
+    stable.print();
+    save_bench_root(
+        "step",
+        Json::obj(vec![
+            ("generated_by", Json::str("benches/kernels.rs")),
+            ("smoke", Json::Bool(smoke)),
+            ("t_steps", Json::num(t_steps as f64)),
+            ("steps", Json::arr(sjson)),
+        ]),
+    );
+}

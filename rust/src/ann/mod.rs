@@ -92,6 +92,27 @@ pub trait AnnIndex: Send {
         queries.iter().map(|q| self.query(q, k)).collect()
     }
 
+    /// `query_many` into reused result buffers — the step hot path. `out`
+    /// is resized to one entry per query with inner capacities retained, so
+    /// backends that also avoid internal scratch allocations (the
+    /// [`LinearIndex`] override) answer a steady-state step with zero heap
+    /// allocations. The default delegates to [`AnnIndex::query`] and is
+    /// correct but allocating.
+    fn query_many_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        k: usize,
+        out: &mut Vec<Vec<(usize, f32)>>,
+    ) {
+        while out.len() < queries.len() {
+            out.push(Vec::new());
+        }
+        out.truncate(queries.len());
+        for (q, slot) in queries.iter().zip(out.iter_mut()) {
+            *slot = self.query(q, k);
+        }
+    }
+
     /// Rebuild internal structure from scratch (the paper rebuilds every N
     /// insertions to keep trees balanced). Incremental maintenance makes
     /// this an amortized background concern, not a per-episode requirement.
@@ -137,6 +158,9 @@ pub struct LinearIndex {
     data: Vec<f32>,
     present: Vec<bool>,
     count: usize,
+    /// Normalized-query scratch for `query_many_into` (flat, one dim-sized
+    /// segment per query), reused across steps.
+    qn_scratch: Vec<f32>,
 }
 
 impl LinearIndex {
@@ -146,6 +170,7 @@ impl LinearIndex {
             data: vec![0.0; capacity * dim],
             present: vec![false; capacity],
             count: 0,
+            qn_scratch: Vec::new(),
         }
     }
 }
@@ -161,8 +186,16 @@ impl AnnIndex for LinearIndex {
             self.present.resize(id + 1, false);
             self.data.resize((id + 1) * self.dim, 0.0);
         }
-        let nv = normalized(v);
-        self.data[id * self.dim..(id + 1) * self.dim].copy_from_slice(&nv);
+        // Normalize in place in the slot: insert is the per-write ANN sync
+        // (every sparse_write AND every backward revert), so it must not
+        // allocate a temporary like `normalized` does.
+        let n = dot(v, v).sqrt();
+        let slot = &mut self.data[id * self.dim..(id + 1) * self.dim];
+        slot.copy_from_slice(v);
+        if n >= 1e-12 {
+            let inv = 1.0 / n;
+            slot.iter_mut().for_each(|x| *x *= inv);
+        }
         if !self.present[id] {
             self.present[id] = true;
             self.count += 1;
@@ -239,6 +272,60 @@ impl AnnIndex for LinearIndex {
             .collect()
     }
 
+    /// The shared-traversal `query_many` into reused buffers: per-query
+    /// results are bit-identical to [`LinearIndex::query_many`] (same
+    /// comparisons in the same id order), with zero allocations once the
+    /// scratch and result capacities are warm.
+    fn query_many_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        k: usize,
+        out: &mut Vec<Vec<(usize, f32)>>,
+    ) {
+        let dim = self.dim;
+        self.qn_scratch.clear();
+        for q in queries {
+            assert_eq!(q.len(), dim);
+            let n = dot(q, q).sqrt();
+            let start = self.qn_scratch.len();
+            self.qn_scratch.extend_from_slice(q);
+            if n >= 1e-12 {
+                let inv = 1.0 / n;
+                self.qn_scratch[start..].iter_mut().for_each(|x| *x *= inv);
+            }
+        }
+        while out.len() < queries.len() {
+            out.push(Vec::new());
+        }
+        out.truncate(queries.len());
+        for best in out.iter_mut() {
+            best.clear();
+            best.reserve(k + 1);
+        }
+        for id in 0..self.present.len() {
+            if !self.present[id] {
+                continue;
+            }
+            let row = &self.data[id * dim..(id + 1) * dim];
+            for (qi, best) in out.iter_mut().enumerate() {
+                let qn = &self.qn_scratch[qi * dim..(qi + 1) * dim];
+                let d2 = dist_sq(qn, row);
+                if best.len() < k || d2 < best.last().unwrap().1 {
+                    let pos = best.partition_point(|&(_, bd)| bd <= d2);
+                    best.insert(pos, (id, d2));
+                    if best.len() > k {
+                        best.pop();
+                    }
+                }
+            }
+        }
+        for best in out.iter_mut() {
+            for e in best.iter_mut() {
+                e.1 = unit_dist_sq_to_cosine(e.1);
+            }
+        }
+    }
+
     fn rebuild(&mut self) {}
 
     fn heap_bytes(&self) -> usize {
@@ -313,6 +400,25 @@ mod tests {
         assert_eq!(batched.len(), queries.len());
         for (q, b) in queries.iter().zip(&batched) {
             assert_eq!(idx.query(q, 4), *b);
+        }
+    }
+
+    #[test]
+    fn query_many_into_matches_query_many() {
+        let mut rng = Rng::new(6);
+        let mut idx = LinearIndex::new(64, 8);
+        for i in 0..64 {
+            let v: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            idx.insert(i, &v);
+        }
+        let mut out = Vec::new();
+        for round in 0..3 {
+            let queries: Vec<Vec<f32>> =
+                (0..4).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let want = idx.query_many(&qrefs, 4);
+            idx.query_many_into(&queries, 4, &mut out);
+            assert_eq!(want, out, "round {round} (buffer reuse must not leak state)");
         }
     }
 

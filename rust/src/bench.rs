@@ -64,6 +64,30 @@ pub fn save_results(bench: &str, value: Json) {
     }
 }
 
+/// Write a perf-regression JSON at the repo root: `BENCH_<name>.json`
+/// (override the directory with `BENCH_OUT_DIR`). These files are the
+/// measured perf trajectory: `benches/kernels.rs` populates them, CI
+/// uploads them as artifacts, and future kernel/hot-path changes are
+/// judged against the numbers they record.
+pub fn save_bench_root(name: &str, value: Json) {
+    let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    if let Err(e) = std::fs::write(&path, value.encode()) {
+        eprintln!("warn: could not write {path:?}: {e}");
+    } else {
+        println!("\nbench results written to {path:?}");
+    }
+}
+
+/// GFLOP/s for `flops` floating-point operations done in `secs` seconds.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    if secs > 0.0 {
+        flops / secs / 1e9
+    } else {
+        0.0
+    }
+}
+
 /// Measure a closure: warmup once, then `reps` timed runs.
 pub fn measure<F: FnMut()>(reps: usize, f: F) -> Stats {
     time_reps(1, reps.max(1), f)
@@ -90,6 +114,12 @@ mod tests {
         t.row(vec!["ntm".into(), "64".into(), "12.0".into()]);
         t.print(); // should not panic
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-9);
+        assert_eq!(gflops(1e9, 0.0), 0.0);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use crate::memory::store::MemoryStore;
 use crate::nn::act::{dsigmoid, dsoftplus, sigmoid, softplus};
 use crate::tensor::csr::SparseVec;
 use crate::tensor::matrix::{dot, norm, softmax_inplace, softmax_backward};
+use crate::tensor::workspace::Workspace;
 
 /// Norm floor in the cosine denominator. Keeps similarity (and its
 /// gradients) bounded when memory rows are near zero — which is every row
@@ -64,11 +65,38 @@ pub struct ContentRead {
     pub beta_raw: f32,
 }
 
+impl ContentRead {
+    /// A placeholder with no candidates (tape-slot initialization).
+    pub fn empty() -> ContentRead {
+        ContentRead { rows: Vec::new(), sims: Vec::new(), weights: Vec::new(), beta: 0.0, beta_raw: 0.0 }
+    }
+}
+
 /// Compute content weights softmax(β·cos(q, M(rows))) over `rows`.
 pub fn content_weights(q: &[f32], beta_raw: f32, mem: &MemoryStore, rows: Vec<usize>) -> ContentRead {
+    content_weights_into(q, beta_raw, mem, rows, Vec::new(), Vec::new())
+}
+
+/// `content_weights` assembling into caller-recycled `sims`/`weights`
+/// buffers (cleared here), so a pooled step computes a content read with
+/// zero allocations. Values and op order identical to [`content_weights`].
+pub fn content_weights_into(
+    q: &[f32],
+    beta_raw: f32,
+    mem: &MemoryStore,
+    rows: Vec<usize>,
+    mut sims: Vec<CosSim>,
+    mut weights: Vec<f32>,
+) -> ContentRead {
     let beta = softplus(beta_raw) + 1.0;
-    let sims: Vec<CosSim> = rows.iter().map(|&i| cos_sim(q, mem.row(i))).collect();
-    let mut weights: Vec<f32> = sims.iter().map(|s| beta * s.value).collect();
+    sims.clear();
+    for &i in &rows {
+        sims.push(cos_sim(q, mem.row(i)));
+    }
+    weights.clear();
+    for s in &sims {
+        weights.push(beta * s.value);
+    }
     softmax_inplace(&mut weights);
     ContentRead { rows, sims, weights, beta, beta_raw }
 }
@@ -99,13 +127,30 @@ pub fn content_weights_backward(
     dweights: &[f32],
     dq: &mut [f32],
     dbeta_raw: &mut f32,
+    dmem: impl FnMut(usize, &[f32]),
+) {
+    let mut ws = Workspace::new();
+    content_weights_backward_ws(cr, q, mem, dweights, dq, dbeta_raw, &mut ws, dmem);
+}
+
+/// [`content_weights_backward`] with its scratch (softmax dlogits, per-row
+/// memory-grad staging) drawn from a workspace instead of fresh Vecs.
+#[allow(clippy::too_many_arguments)]
+pub fn content_weights_backward_ws(
+    cr: &ContentRead,
+    q: &[f32],
+    mem: &MemoryStore,
+    dweights: &[f32],
+    dq: &mut [f32],
+    dbeta_raw: &mut f32,
+    ws: &mut Workspace,
     mut dmem: impl FnMut(usize, &[f32]),
 ) {
     let k = cr.rows.len();
-    let mut dlogits = vec![0.0f32; k];
+    let mut dlogits = ws.take_f32(k);
     softmax_backward(&cr.weights, dweights, &mut dlogits);
     let mut dbeta = 0.0f32;
-    let mut dm_row = vec![0.0f32; q.len()];
+    let mut dm_row = ws.take_f32(q.len());
     for (j, &row) in cr.rows.iter().enumerate() {
         dbeta += dlogits[j] * cr.sims[j].value;
         let dsim = dlogits[j] * cr.beta;
@@ -116,6 +161,8 @@ pub fn content_weights_backward(
         }
     }
     *dbeta_raw += dbeta * dsoftplus(cr.beta_raw);
+    ws.recycle_f32(dlogits);
+    ws.recycle_f32(dm_row);
 }
 
 /// Forward cache for the SAM/DAM write interpolation (eq. 5):
@@ -133,16 +180,28 @@ pub struct WriteGate {
 }
 
 pub fn write_gate(alpha_raw: f32, gamma_raw: f32, w_read_prev: &SparseVec, lra_row: usize) -> WriteGate {
+    let mut ws = Workspace::new();
+    write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, &mut ws)
+}
+
+/// [`write_gate`] with the weight vector assembled from workspace pools.
+/// Note: if lra_row already appears in w_read_prev the contributions add,
+/// which matches evaluating eq. 5 at that index.
+pub fn write_gate_ws(
+    alpha_raw: f32,
+    gamma_raw: f32,
+    w_read_prev: &SparseVec,
+    lra_row: usize,
+    ws: &mut Workspace,
+) -> WriteGate {
     let alpha = sigmoid(alpha_raw);
     let gamma = sigmoid(gamma_raw);
-    let mut pairs: Vec<(usize, f32)> = w_read_prev
-        .iter()
-        .map(|(i, v)| (i, alpha * gamma * v))
-        .collect();
-    pairs.push((lra_row, alpha * (1.0 - gamma) + 0.0));
-    // Note: if lra_row already appears in w_read_prev the contributions add,
-    // which matches evaluating eq. 5 at that index.
-    let weights = SparseVec::from_pairs(pairs);
+    let mut pairs = ws.take_pairs();
+    pairs.extend(w_read_prev.iter().map(|(i, v)| (i, alpha * gamma * v)));
+    pairs.push((lra_row, alpha * (1.0 - gamma)));
+    let mut weights = ws.take_sparse();
+    weights.assign_from_pairs(&mut pairs);
+    ws.recycle_pairs(pairs);
     WriteGate { alpha, gamma, alpha_raw, gamma_raw, lra_row, weights }
 }
 
@@ -155,16 +214,30 @@ pub fn write_gate_backward(
     dalpha_raw: &mut f32,
     dgamma_raw: &mut f32,
 ) -> SparseVec {
+    let mut ws = Workspace::new();
+    write_gate_backward_ws(gate, w_read_prev, dw, dalpha_raw, dgamma_raw, &mut ws)
+}
+
+/// [`write_gate_backward`] returning a workspace-pooled gradient vector.
+pub fn write_gate_backward_ws(
+    gate: &WriteGate,
+    w_read_prev: &SparseVec,
+    dw: &SparseVec,
+    dalpha_raw: &mut f32,
+    dgamma_raw: &mut f32,
+    ws: &mut Workspace,
+) -> SparseVec {
     let (a, g) = (gate.alpha, gate.gamma);
     let mut dalpha = 0.0f32;
     let mut dgamma = 0.0f32;
-    // Term from the previously-read component.
-    let mut dw_prev_pairs = Vec::with_capacity(w_read_prev.nnz());
+    // Term from the previously-read component. w_read_prev is sorted, so
+    // the gradient support can be pushed directly without a from_pairs sort.
+    let mut dw_prev = ws.take_sparse();
     for (i, v) in w_read_prev.iter() {
         let dwi = dw.get(i);
         dalpha += dwi * g * v;
         dgamma += dwi * a * v;
-        dw_prev_pairs.push((i, dwi * a * g));
+        dw_prev.push(i, dwi * a * g);
     }
     // Term from the LRA indicator.
     let dwu = dw.get(gate.lra_row);
@@ -172,7 +245,7 @@ pub fn write_gate_backward(
     dgamma -= dwu * a;
     *dalpha_raw += dalpha * dsigmoid(a);
     *dgamma_raw += dgamma * dsigmoid(g);
-    SparseVec::from_pairs(dw_prev_pairs)
+    dw_prev
 }
 
 #[cfg(test)]

@@ -6,15 +6,19 @@
 //!
 //! The memory itself lives in a dense-mode [`SparseMemoryEngine`] (no ANN,
 //! snapshot/restore instead of journals); DAM keeps only its discounted
-//! usage U⁽¹⁾ and dense gradient state locally.
+//! usage U⁽¹⁾ and dense gradient state locally. The per-step O(N·W)
+//! *work* is inherent to the dense baseline, but the per-step O(N·W)
+//! *allocations* are not: snapshots, write weights and content caches all
+//! recycle through the core's [`Workspace`].
 
-use super::addressing::{content_weights, content_weights_backward, ContentRead};
+use super::addressing::{content_weights_backward_ws, content_weights_into, ContentRead, CosSim};
 use super::{Controller, Core, CoreConfig};
 use crate::memory::engine::SparseMemoryEngine;
 use crate::memory::usage::DiscountedUsage;
 use crate::nn::act::{dsigmoid, sigmoid};
 use crate::nn::param::{HasParams, Param};
-use crate::tensor::matrix::{dot, Matrix};
+use crate::tensor::matrix::{axpy, dot, Matrix};
+use crate::tensor::workspace::{Pool, Workspace};
 use crate::util::rng::Rng;
 
 const fn head_dim(word: usize) -> usize {
@@ -52,6 +56,16 @@ pub struct DamCore {
     d_r: Vec<Vec<f32>>,
     d_wread: Vec<Vec<f32>>,
     dmem: Matrix,
+    // pooled / persistent step scratch
+    ws: Workspace,
+    sim_pool: Pool<CosSim>,
+    spare_steps: Vec<DamStep>,
+    dp_buf: Vec<f32>,
+    dr_buf: Vec<f32>,
+    dq_buf: Vec<f32>,
+    da_buf: Vec<f32>,
+    dw_buf: Vec<f32>,
+    dweights_buf: Vec<f32>,
 }
 
 impl DamCore {
@@ -77,13 +91,35 @@ impl DamCore {
             d_r: vec![vec![0.0; cfg.word]; cfg.heads],
             d_wread: vec![vec![0.0; cfg.mem_words]; cfg.heads],
             dmem: Matrix::zeros(cfg.mem_words, cfg.word),
+            ws: Workspace::new(),
+            sim_pool: Pool::new(),
+            spare_steps: Vec::new(),
+            dp_buf: Vec::new(),
+            dr_buf: Vec::new(),
+            dq_buf: Vec::new(),
+            da_buf: Vec::new(),
+            dw_buf: Vec::new(),
+            dweights_buf: Vec::new(),
             cfg: cfg.clone(),
         }
     }
 
-    fn parse_head<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], f32, f32, f32) {
-        let w = self.cfg.word;
-        (&p[..w], &p[w..2 * w], p[2 * w], p[2 * w + 1], p[2 * w + 2])
+    /// Recycle a popped tape step's buffers and park its shell. The N·W
+    /// snapshot buffer stays in the shell (cleared, capacity kept): no
+    /// other DAM buffer shares its capacity class, so pooling it would
+    /// strand it and re-allocate a fresh snapshot every step.
+    fn recycle_step(&mut self, mut step: DamStep) {
+        step.mem_before.clear();
+        for h in step.heads.drain(..) {
+            self.ws.recycle_f32(h.w_write);
+            self.ws.recycle_f32(h.w_read_used);
+            self.ws.recycle_f32(h.write_word);
+            self.ws.recycle_f32(h.query);
+            self.ws.recycle_usize(h.read.rows);
+            self.ws.recycle_f32(h.read.weights);
+            self.sim_pool.recycle(h.read.sims);
+        }
+        self.spare_steps.push(step);
     }
 }
 
@@ -100,7 +136,9 @@ impl Core for DamCore {
 
     fn reset(&mut self) {
         self.ctrl.reset();
-        self.tape.clear();
+        while let Some(step) = self.tape.pop() {
+            self.recycle_step(step);
+        }
         self.engine.fill(0.0);
         self.usage.reset();
         for v in &mut self.w_read_prev {
@@ -118,64 +156,90 @@ impl Core for DamCore {
         self.dmem.fill(0.0);
     }
 
-    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
         let n = self.cfg.mem_words;
-        let (h, p) = self.ctrl.step(x, &self.r_prev);
-        let hd = head_dim(self.cfg.word);
-        let mem_before = self.engine.snapshot();
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        self.ctrl.step_hot(x, &self.r_prev);
+        let mut step = self
+            .spare_steps
+            .pop()
+            .unwrap_or_else(|| DamStep { mem_before: Vec::new(), heads: Vec::new() });
+        debug_assert!(step.heads.is_empty());
+        let mut mem_before = std::mem::take(&mut step.mem_before);
+        self.engine.snapshot_into(&mut mem_before);
+        step.mem_before = mem_before;
         self.usage.u.iter_mut().for_each(|u| *u *= self.usage.lambda);
-        let mut heads = Vec::with_capacity(self.cfg.heads);
 
         // --- dense writes (eq. 5 with dense w^R_{t-1} and U⁽¹⁾ argmin) ---
         for hi in 0..self.cfg.heads {
-            let (_q, a, ar, gr, _br) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
-            let alpha = sigmoid(ar);
-            let gamma = sigmoid(gr);
+            let (alpha, gamma, a) = {
+                let p = self.ctrl.head_params();
+                let ph = &p[hi * hd..(hi + 1) * hd];
+                (
+                    sigmoid(ph[2 * w]),
+                    sigmoid(ph[2 * w + 1]),
+                    self.ws.take_f32_copy(&ph[w..2 * w]),
+                )
+            };
             let lra_row = self.usage.argmin();
-            let mut w_write = vec![0.0f32; n];
+            let mut w_write = self.ws.take_f32(n);
             for i in 0..n {
                 w_write[i] = alpha * gamma * self.w_read_prev[hi][i];
             }
             w_write[lra_row] += alpha * (1.0 - gamma);
             // Erase the least-used row fully (R_t = 𝕀^U 1ᵀ), then dense add.
-            self.engine.dense_write(&w_write, a, lra_row);
+            self.engine.dense_write(&w_write, &a, lra_row);
             // Usage sees this head's write immediately so the next head
             // picks a different least-used slot.
             for i in 0..n {
                 self.usage.u[i] += w_write[i];
             }
-            heads.push(HeadStep {
+            let w_read_used = self.ws.take_f32_copy(&self.w_read_prev[hi]);
+            step.heads.push(HeadStep {
                 w_write,
                 alpha,
                 gamma,
                 lra_row,
-                w_read_used: self.w_read_prev[hi].clone(),
-                write_word: a.to_vec(),
-                read: ContentRead { rows: vec![], sims: vec![], weights: vec![], beta: 0.0, beta_raw: 0.0 },
-                query: vec![],
+                w_read_used,
+                write_word: a,
+                read: ContentRead::empty(),
+                query: Vec::new(),
             });
         }
 
         // --- dense reads over all N words (eq. 1/2) ---
-        let mut reads = Vec::with_capacity(self.cfg.heads);
         for hi in 0..self.cfg.heads {
-            let (q, _a, _ar, _gr, br) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
-            let read = content_weights(q, br, self.engine.store(), (0..n).collect());
-            let mut r = vec![0.0; self.cfg.word];
-            self.engine.read_dense(&read.weights, &mut r);
+            let (query, beta_raw) = {
+                let p = self.ctrl.head_params();
+                let ph = &p[hi * hd..(hi + 1) * hd];
+                (self.ws.take_f32_copy(&ph[..w]), ph[2 * w + 2])
+            };
+            let mut rows = self.ws.take_usize(n);
+            rows.extend(0..n);
+            let read = content_weights_into(
+                &query,
+                beta_raw,
+                self.engine.store(),
+                rows,
+                self.sim_pool.take(),
+                self.ws.take_f32_empty(n),
+            );
+            self.r_prev[hi].clear();
+            self.r_prev[hi].resize(w, 0.0);
+            self.engine.read_dense(&read.weights, &mut self.r_prev[hi]);
             for i in 0..n {
                 self.usage.u[i] += read.weights[i];
             }
-            self.w_read_prev[hi] = read.weights.clone();
-            heads[hi].read = read;
-            heads[hi].query = q.to_vec();
-            reads.push(r);
+            self.w_read_prev[hi].clear();
+            self.w_read_prev[hi].extend_from_slice(&read.weights);
+            let hstep = &mut step.heads[hi];
+            hstep.read = read;
+            hstep.query = query;
         }
 
-        let y = self.ctrl.output(&h, &reads);
-        self.r_prev = reads;
-        self.tape.push(DamStep { mem_before, heads });
-        y
+        self.ctrl.output_hot(&self.r_prev, y);
+        self.tape.push(step);
     }
 
     fn backward(&mut self, dy: &[f32]) {
@@ -183,37 +247,40 @@ impl Core for DamCore {
         let n = self.cfg.mem_words;
         let w = self.cfg.word;
         let hd = head_dim(w);
-        let (dh, dreads) = self.ctrl.backward_output(dy);
-        let mut dp = vec![0.0f32; self.cfg.heads * hd];
+        self.ctrl.backward_output_hot(dy);
+        self.dp_buf.clear();
+        self.dp_buf.resize(self.cfg.heads * hd, 0.0);
 
         // --- read backward (memory currently = M_t) ---
         for (hi, hstep) in step.heads.iter().enumerate() {
-            let mut dr = dreads[hi].clone();
-            for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
-                *a += b;
-            }
-            let mut dweights = vec![0.0f32; n];
+            self.dr_buf.clear();
+            self.dr_buf.extend_from_slice(&self.ctrl.dreads()[hi]);
+            axpy(&mut self.dr_buf, 1.0, &self.d_r[hi]);
+            self.dweights_buf.clear();
+            self.dweights_buf.resize(n, 0.0);
             for i in 0..n {
-                dweights[i] = dot(self.engine.store().row(i), &dr) + self.d_wread[hi][i];
+                self.dweights_buf[i] =
+                    dot(self.engine.store().row(i), &self.dr_buf) + self.d_wread[hi][i];
                 let wv = hstep.read.weights[i];
                 if wv != 0.0 {
                     let row = self.dmem.row_mut(i);
-                    for (g, &d) in row.iter_mut().zip(&dr) {
+                    for (g, &d) in row.iter_mut().zip(&self.dr_buf) {
                         *g += wv * d;
                     }
                 }
             }
-            let dslice = &mut dp[hi * hd..(hi + 1) * hd];
+            self.dq_buf.clear();
+            self.dq_buf.resize(w, 0.0);
             let mut dbeta_raw = 0.0;
-            let mut dq = vec![0.0f32; w];
             let dmem_ref = &mut self.dmem;
-            content_weights_backward(
+            content_weights_backward_ws(
                 &hstep.read,
                 &hstep.query,
                 self.engine.store(),
-                &dweights,
-                &mut dq,
+                &self.dweights_buf,
+                &mut self.dq_buf,
                 &mut dbeta_raw,
+                &mut self.ws,
                 |row, d| {
                     let r = dmem_ref.row_mut(row);
                     for (g, &x) in r.iter_mut().zip(d) {
@@ -221,24 +288,27 @@ impl Core for DamCore {
                     }
                 },
             );
-            dslice[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
+            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+            dslice[..w].iter_mut().zip(&self.dq_buf).for_each(|(a, b)| *a += b);
             dslice[2 * w + 2] += dbeta_raw;
         }
 
         // --- write backward (reverse head order) ---
         for hi in (0..self.cfg.heads).rev() {
             let hstep = &step.heads[hi];
-            let mut da = vec![0.0f32; w];
-            let mut dw = vec![0.0f32; n];
+            self.da_buf.clear();
+            self.da_buf.resize(w, 0.0);
+            self.dw_buf.clear();
+            self.dw_buf.resize(n, 0.0);
             for i in 0..n {
                 let wv = hstep.w_write[i];
                 let drow = self.dmem.row(i);
                 if wv != 0.0 {
-                    for (daj, &dj) in da.iter_mut().zip(drow) {
+                    for (daj, &dj) in self.da_buf.iter_mut().zip(drow) {
                         *daj += wv * dj;
                     }
                 }
-                dw[i] = dot(&hstep.write_word, drow);
+                self.dw_buf[i] = dot(&hstep.write_word, drow);
             }
             // Erased row's pre-write contents are irrelevant.
             self.dmem.row_mut(hstep.lra_row).iter_mut().for_each(|v| *v = 0.0);
@@ -248,20 +318,20 @@ impl Core for DamCore {
             let mut dgamma = 0.0f32;
             for i in 0..n {
                 let e_u = if i == hstep.lra_row { 1.0 } else { 0.0 };
-                dalpha += dw[i] * (g * hstep.w_read_used[i] + (1.0 - g) * e_u);
-                dgamma += dw[i] * a * (hstep.w_read_used[i] - e_u);
-                self.d_wread[hi][i] = dw[i] * a * g;
+                dalpha += self.dw_buf[i] * (g * hstep.w_read_used[i] + (1.0 - g) * e_u);
+                dgamma += self.dw_buf[i] * a * (hstep.w_read_used[i] - e_u);
+                self.d_wread[hi][i] = self.dw_buf[i] * a * g;
             }
-            let dslice = &mut dp[hi * hd..(hi + 1) * hd];
-            dslice[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
+            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+            dslice[w..2 * w].iter_mut().zip(&self.da_buf).for_each(|(x, d)| *x += d);
             dslice[2 * w] += dalpha * dsigmoid(a);
             dslice[2 * w + 1] += dgamma * dsigmoid(g);
         }
 
         // Restore M_{t-1} for the next backward step.
         self.engine.restore(&step.mem_before);
-        let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
-        self.d_r = dr_prev;
+        self.ctrl.backward_step_hot(&self.dp_buf, &mut self.d_r);
+        self.recycle_step(step);
     }
 
     fn rollback(&mut self) {
@@ -269,7 +339,9 @@ impl Core for DamCore {
             let m = first.mem_before.clone();
             self.engine.restore(&m);
         }
-        self.tape.clear();
+        while let Some(step) = self.tape.pop() {
+            self.recycle_step(step);
+        }
     }
 
     fn end_episode(&mut self) {}
@@ -352,6 +424,35 @@ mod tests {
             core.backward(dy);
         }
         assert_eq!(core.engine.snapshot(), start);
+    }
+
+    #[test]
+    fn pooled_episodes_are_bit_identical() {
+        let mut rng = Rng::new(16);
+        let mut core = DamCore::new(&small_cfg(16), &mut rng);
+        let (xs, ts) = random_episode(4, 3, 4, &mut rng);
+        let mut y = Vec::new();
+        let mut first: Vec<Vec<u32>> = Vec::new();
+        for ep in 0..3 {
+            core.zero_grads();
+            core.reset();
+            let mut dys = Vec::new();
+            let mut bits: Vec<Vec<u32>> = Vec::new();
+            for (x, t) in xs.iter().zip(&ts) {
+                core.forward_into(x, &mut y);
+                bits.push(y.iter().map(|v| v.to_bits()).collect());
+                dys.push(crate::nn::loss::sigmoid_xent(&y, t).1);
+            }
+            for dy in dys.iter().rev() {
+                core.backward(dy);
+            }
+            core.end_episode();
+            if ep == 0 {
+                first = bits;
+            } else {
+                assert_eq!(first, bits, "episode {ep} diverged bitwise");
+            }
+        }
     }
 
     #[test]

@@ -130,7 +130,7 @@ impl Core for DncCore {
         self.dmem.fill(0.0);
     }
 
-    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
         let n = self.cfg.mem_words;
         let w = self.cfg.word;
         let hd = head_dim(w);
@@ -250,10 +250,9 @@ impl Core for DncCore {
             reads.push(r);
         }
 
-        let y = self.ctrl.output(&h, &reads);
+        *y = self.ctrl.output(&h, &reads);
         self.r_prev = reads;
         self.tape.push(DncStep { mem_before, link: self.link.clone(), heads });
-        y
     }
 
     fn backward(&mut self, dy: &[f32]) {

@@ -14,6 +14,9 @@ pub struct LstmCore {
     x_dim: usize,
     y_dim: usize,
     steps: usize,
+    /// Persistent backward scratch (dh from the output layer, dx sink).
+    dh_buf: Vec<f32>,
+    dx_buf: Vec<f32>,
 }
 
 impl LstmCore {
@@ -25,6 +28,8 @@ impl LstmCore {
             x_dim: cfg.x_dim,
             y_dim: cfg.y_dim,
             steps: 0,
+            dh_buf: Vec::new(),
+            dx_buf: Vec::new(),
         }
     }
 }
@@ -47,15 +52,17 @@ impl Core for LstmCore {
         self.steps = 0;
     }
 
-    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
         self.steps += 1;
-        let h = self.lstm.step(x);
-        self.out.forward(&h)
+        self.lstm.step_hot(x);
+        self.out.forward_into(&self.lstm.h, y);
     }
 
     fn backward(&mut self, dy: &[f32]) {
-        let dh = self.out.backward(dy);
-        self.lstm.backward(&dh);
+        self.out.backward_into(dy, &mut self.dh_buf);
+        let dh = std::mem::take(&mut self.dh_buf);
+        self.lstm.backward_into(&dh, &mut self.dx_buf);
+        self.dh_buf = dh;
         self.steps -= 1;
     }
 

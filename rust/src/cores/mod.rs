@@ -105,8 +105,19 @@ pub trait Core: HasParams + Send {
     /// Start a new episode (clears recurrent state and the tape).
     fn reset(&mut self);
 
+    /// One step forward into a caller-reused output buffer; records what
+    /// backward needs on an internal tape. This is the hot-path entry: the
+    /// sparse cores perform zero heap allocations per steady-state call
+    /// (rust/tests/zero_alloc.rs).
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>);
+
     /// One step forward; records what backward needs on an internal tape.
-    fn forward(&mut self, x: &[f32]) -> Vec<f32>;
+    /// Allocating convenience over [`Core::forward_into`].
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut y = Vec::with_capacity(self.y_dim());
+        self.forward_into(x, &mut y);
+        y
+    }
 
     /// One step backward (call once per forward, in reverse order),
     /// accumulating parameter gradients.
@@ -134,6 +145,12 @@ pub trait Core: HasParams + Send {
 
 /// LSTM controller + head-parameter projection + output projection, shared
 /// by all memory cores.
+///
+/// Hot path: the `*_hot` methods compute into persistent per-step buffers
+/// (the concatenated input, raw head params, output-side gradients) so a
+/// steady-state controller step allocates nothing. The allocating
+/// `step`/`output`/`backward_output`/`backward_step` wrappers remain for
+/// the dense baselines and tests.
 pub struct Controller {
     pub lstm: Lstm,
     /// h → heads × head_dim raw parameters.
@@ -144,6 +161,23 @@ pub struct Controller {
     pub word: usize,
     pub head_dim: usize,
     hidden: usize,
+    // -- persistent per-step scratch (fixed shapes, reused every step) -----
+    /// [x_t, r_{t-1}..] concatenation.
+    x_in: Vec<f32>,
+    /// [h_t, r_t..] concatenation.
+    o_in: Vec<f32>,
+    /// Raw head parameters from the last `step_hot`.
+    p_buf: Vec<f32>,
+    /// dL/dh from the last `backward_output_hot`.
+    dh_buf: Vec<f32>,
+    /// dL/dr per head from the last `backward_output_hot`.
+    dreads: Vec<Vec<f32>>,
+    /// d[h,r..] staging for backward_output.
+    d_out_buf: Vec<f32>,
+    /// dh total staging for backward_step.
+    dh_total_buf: Vec<f32>,
+    /// d[x,r..] staging for backward_step.
+    dx_in_buf: Vec<f32>,
 }
 
 impl Controller {
@@ -165,6 +199,14 @@ impl Controller {
             word,
             head_dim,
             hidden,
+            x_in: Vec::new(),
+            o_in: Vec::new(),
+            p_buf: Vec::new(),
+            dh_buf: Vec::new(),
+            dreads: (0..heads).map(|_| Vec::new()).collect(),
+            d_out_buf: Vec::new(),
+            dh_total_buf: Vec::new(),
+            dx_in_buf: Vec::new(),
         }
     }
 
@@ -174,57 +216,120 @@ impl Controller {
         self.out_lin.clear_cache();
     }
 
-    /// Controller step: consume x_t and the previous reads, produce
-    /// (h_t, per-head raw params).
-    pub fn step(&mut self, x: &[f32], r_prev: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
-        let mut x_in = Vec::with_capacity(x.len() + self.heads * self.word);
-        x_in.extend_from_slice(x);
+    /// Hot controller step: consume x_t and the previous reads; h_t lands
+    /// in `self.lstm.h` (see [`Controller::h`]), the raw head parameters in
+    /// [`Controller::head_params`]. Zero allocations in steady state.
+    pub fn step_hot(&mut self, x: &[f32], r_prev: &[Vec<f32>]) {
+        self.x_in.clear();
+        self.x_in.extend_from_slice(x);
         for r in r_prev {
-            x_in.extend_from_slice(r);
+            self.x_in.extend_from_slice(r);
         }
-        let h = self.lstm.step(&x_in);
-        let p = self.head_lin.forward(&h);
-        (h, p)
+        self.lstm.step_hot(&self.x_in);
+        self.head_lin.forward_into(&self.lstm.h, &mut self.p_buf);
     }
 
-    /// Final output y_t = W_out [h_t, r_t..].
-    pub fn output(&mut self, h: &[f32], reads: &[Vec<f32>]) -> Vec<f32> {
-        let mut o_in = Vec::with_capacity(h.len() + self.heads * self.word);
-        o_in.extend_from_slice(h);
+    /// h_t after [`Controller::step_hot`].
+    pub fn h(&self) -> &[f32] {
+        &self.lstm.h
+    }
+
+    /// Raw head parameters after [`Controller::step_hot`].
+    pub fn head_params(&self) -> &[f32] {
+        &self.p_buf
+    }
+
+    /// Controller step: consume x_t and the previous reads, produce
+    /// (h_t, per-head raw params). Allocating wrapper over
+    /// [`Controller::step_hot`].
+    pub fn step(&mut self, x: &[f32], r_prev: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+        self.step_hot(x, r_prev);
+        (self.lstm.h.clone(), self.p_buf.clone())
+    }
+
+    /// Final output y_t = W_out [h_t, r_t..] into a caller-reused buffer,
+    /// with h_t taken from the last [`Controller::step_hot`].
+    pub fn output_hot(&mut self, reads: &[Vec<f32>], y: &mut Vec<f32>) {
+        self.o_in.clear();
+        self.o_in.extend_from_slice(&self.lstm.h);
         for r in reads {
-            o_in.extend_from_slice(r);
+            self.o_in.extend_from_slice(r);
         }
-        self.out_lin.forward(&o_in)
+        self.out_lin.forward_into(&self.o_in, y);
     }
 
-    /// Backward of `output`: returns (dh, dreads-per-head).
+    /// Final output y_t = W_out [h_t, r_t..] with an explicit h.
+    pub fn output(&mut self, h: &[f32], reads: &[Vec<f32>]) -> Vec<f32> {
+        self.o_in.clear();
+        self.o_in.extend_from_slice(h);
+        for r in reads {
+            self.o_in.extend_from_slice(r);
+        }
+        self.out_lin.forward(&self.o_in)
+    }
+
+    /// Backward of the output projection into persistent buffers: dL/dh
+    /// lands in [`Controller::dh`], dL/dr per head in
+    /// [`Controller::dreads`].
+    pub fn backward_output_hot(&mut self, dy: &[f32]) {
+        self.out_lin.backward_into(dy, &mut self.d_out_buf);
+        self.dh_buf.clear();
+        self.dh_buf.extend_from_slice(&self.d_out_buf[..self.hidden]);
+        for hd in 0..self.heads {
+            let seg =
+                &self.d_out_buf[self.hidden + hd * self.word..self.hidden + (hd + 1) * self.word];
+            self.dreads[hd].clear();
+            self.dreads[hd].extend_from_slice(seg);
+        }
+    }
+
+    /// dL/dh after [`Controller::backward_output_hot`].
+    pub fn dh(&self) -> &[f32] {
+        &self.dh_buf
+    }
+
+    /// dL/dr per head after [`Controller::backward_output_hot`].
+    pub fn dreads(&self) -> &[Vec<f32>] {
+        &self.dreads
+    }
+
+    /// Backward of `output`: returns (dh, dreads-per-head). Allocating
+    /// wrapper over [`Controller::backward_output_hot`].
     pub fn backward_output(&mut self, dy: &[f32]) -> (Vec<f32>, Vec<Vec<f32>>) {
-        let d = self.out_lin.backward(dy);
-        let dh = d[..self.hidden].to_vec();
-        let dreads = (0..self.heads)
-            .map(|hd| {
-                d[self.hidden + hd * self.word..self.hidden + (hd + 1) * self.word].to_vec()
-            })
-            .collect();
-        (dh, dreads)
+        self.backward_output_hot(dy);
+        (self.dh_buf.clone(), self.dreads.clone())
+    }
+
+    /// Backward of `step` using the dh stored by
+    /// [`Controller::backward_output_hot`]: `dp` is the gradient on the raw
+    /// head params; d(r_prev) per head is written into `dr_out` (cleared
+    /// and refilled). The input gradient is kept in `self.dx_in_buf`
+    /// (no core consumes it on the hot path).
+    pub fn backward_step_hot(&mut self, dp: &[f32], dr_out: &mut [Vec<f32>]) {
+        debug_assert_eq!(dr_out.len(), self.heads);
+        self.head_lin.backward_into(dp, &mut self.dh_total_buf);
+        for (a, b) in self.dh_total_buf.iter_mut().zip(&self.dh_buf) {
+            *a += b;
+        }
+        self.lstm.backward_into(&self.dh_total_buf, &mut self.dx_in_buf);
+        let x_dim = self.dx_in_buf.len() - self.heads * self.word;
+        for (hd, dr) in dr_out.iter_mut().enumerate() {
+            let seg = &self.dx_in_buf[x_dim + hd * self.word..x_dim + (hd + 1) * self.word];
+            dr.clear();
+            dr.extend_from_slice(seg);
+        }
     }
 
     /// Backward of `step`: `dh` is the total gradient on h_t, `dp` on the
-    /// raw head params. Returns (dx, d_r_prev per head).
+    /// raw head params. Returns (dx, d_r_prev per head). Allocating wrapper
+    /// over [`Controller::backward_step_hot`].
     pub fn backward_step(&mut self, dh: &[f32], dp: &[f32]) -> (Vec<f32>, Vec<Vec<f32>>) {
-        let mut dh_total = self.head_lin.backward(dp);
-        for (a, b) in dh_total.iter_mut().zip(dh) {
-            *a += b;
-        }
-        let dx_in = self.lstm.backward(&dh_total);
-        let x_dim = dx_in.len() - self.heads * self.word;
-        let dx = dx_in[..x_dim].to_vec();
-        let dr = (0..self.heads)
-            .map(|hd| {
-                dx_in[x_dim + hd * self.word..x_dim + (hd + 1) * self.word].to_vec()
-            })
-            .collect();
-        (dx, dr)
+        self.dh_buf.clear();
+        self.dh_buf.extend_from_slice(dh);
+        let mut dr: Vec<Vec<f32>> = (0..self.heads).map(|_| Vec::new()).collect();
+        self.backward_step_hot(dp, &mut dr);
+        let x_dim = self.dx_in_buf.len() - self.heads * self.word;
+        (self.dx_in_buf[..x_dim].to_vec(), dr)
     }
 
     pub fn cache_bytes(&self) -> usize {

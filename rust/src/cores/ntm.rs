@@ -141,7 +141,7 @@ impl Core for NtmCore {
         self.dmem.fill(0.0);
     }
 
-    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
         let n = self.cfg.mem_words;
         let w = self.cfg.word;
         let hd = head_dim(w);
@@ -200,10 +200,9 @@ impl Core for NtmCore {
             reads.push(r);
         }
 
-        let y = self.ctrl.output(&h, &reads);
+        *y = self.ctrl.output(&h, &reads);
         self.r_prev = reads;
         self.tape.push(NtmStep { heads });
-        y
     }
 
     fn backward(&mut self, dy: &[f32]) {

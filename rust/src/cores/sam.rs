@@ -13,12 +13,19 @@
 //! parameters and the recurrent read state. BPTT (§3.4, Supp Fig 5) is the
 //! engine's journaled rollback — O(1) space per step instead of O(N); the
 //! carried row-sparse memory gradient also lives engine-side.
+//!
+//! **Zero-allocation steps**: every tape buffer is pooled through the
+//! core's [`Workspace`] (or the engine's pools) and recycled during
+//! `backward`, so after one warm-up episode `forward_into` + `backward`
+//! touch the allocator zero times (rust/tests/zero_alloc.rs).
 
 use super::addressing::{ContentRead, WriteGate};
 use super::{Controller, Core, CoreConfig};
-use crate::memory::engine::SparseMemoryEngine;
+use crate::memory::engine::{SparseMemoryEngine, TopKRead};
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::SparseVec;
+use crate::tensor::matrix::axpy;
+use crate::tensor::workspace::Workspace;
 use crate::util::rng::Rng;
 
 /// Raw head parameter layout: [q(W), a(W), α̂, γ̂, β̂].
@@ -29,13 +36,13 @@ const fn head_dim(word: usize) -> usize {
 struct HeadStep {
     /// Write-side caches (the journal itself lives on the engine's tape).
     gate: WriteGate,
-    /// The w̃^R_{t-1} actually used by this step's write.
+    /// The w̃^R_{t-1} actually used by this step's write (moved off the
+    /// recurrent state, which the read phase overwrites anyway).
     w_read_used: SparseVec,
     write_word: Vec<f32>,
     /// Read-side caches.
     read: ContentRead,
     query: Vec<f32>,
-    read_out: Vec<f32>,
 }
 
 struct SamStep {
@@ -54,6 +61,19 @@ pub struct SamCore {
     // ---- carried backward state ----
     d_r: Vec<Vec<f32>>,
     d_wread: Vec<SparseVec>,
+    // ---- pooled / persistent step scratch ----
+    ws: Workspace,
+    /// Per-head query staging (persistent, overwritten each step).
+    queries: Vec<Vec<f32>>,
+    betas: Vec<f32>,
+    /// read_topk staging, drained into the tape every step.
+    topk_tmp: Vec<TopKRead>,
+    /// Drained SamStep shells (their `heads` Vec capacity).
+    spare_steps: Vec<SamStep>,
+    dp_buf: Vec<f32>,
+    dr_buf: Vec<f32>,
+    dq_buf: Vec<f32>,
+    da_buf: Vec<f32>,
 }
 
 impl SamCore {
@@ -85,26 +105,35 @@ impl SamCore {
             tape: Vec::new(),
             d_r: vec![vec![0.0; cfg.word]; cfg.heads],
             d_wread: vec![SparseVec::new(); cfg.heads],
+            ws: Workspace::new(),
+            queries: vec![Vec::new(); cfg.heads],
+            betas: vec![0.0; cfg.heads],
+            topk_tmp: Vec::new(),
+            spare_steps: Vec::new(),
+            dp_buf: Vec::new(),
+            dr_buf: Vec::new(),
+            dq_buf: Vec::new(),
+            da_buf: Vec::new(),
             cfg: cfg.clone(),
         }
-    }
-
-    /// Split one head's slice of the raw controller parameters.
-    fn parse_head(&self, p: &[f32]) -> (Vec<f32>, Vec<f32>, f32, f32, f32) {
-        let w = self.cfg.word;
-        (
-            p[..w].to_vec(),            // q
-            p[w..2 * w].to_vec(),       // a
-            p[2 * w],                   // α̂
-            p[2 * w + 1],               // γ̂
-            p[2 * w + 2],               // β̂
-        )
     }
 
     /// The shared memory engine (read-only) — exposed for the accounting
     /// checks in `benches/fig1_memory.rs` and the parity tests.
     pub fn engine(&self) -> &SparseMemoryEngine {
         &self.engine
+    }
+
+    /// Recycle a popped tape step's buffers and park its shell.
+    fn recycle_step(&mut self, mut step: SamStep) {
+        for h in step.heads.drain(..) {
+            self.ws.recycle_f32(h.write_word);
+            self.ws.recycle_f32(h.query);
+            self.ws.recycle_sparse(h.gate.weights);
+            self.ws.recycle_sparse(h.w_read_used);
+            self.engine.recycle_content_read(h.read, &mut self.ws);
+        }
+        self.spare_steps.push(step);
     }
 }
 
@@ -121,12 +150,17 @@ impl Core for SamCore {
 
     fn reset(&mut self) {
         self.ctrl.reset();
-        self.tape.clear();
+        while let Some(step) = self.tape.pop() {
+            self.recycle_step(step);
+        }
         // Engine rollback restores memory + ANN even if the previous
         // episode was abandoned without backward/rollback.
-        self.engine.reset();
-        for wv in &mut self.w_read_prev {
-            *wv = SparseVec::new();
+        self.engine.reset(&mut self.ws);
+        for hi in 0..self.cfg.heads {
+            let old = std::mem::take(&mut self.w_read_prev[hi]);
+            self.ws.recycle_sparse(old);
+            let old = std::mem::take(&mut self.d_wread[hi]);
+            self.ws.recycle_sparse(old);
         }
         for r in &mut self.r_prev {
             r.iter_mut().for_each(|x| *x = 0.0);
@@ -134,89 +168,98 @@ impl Core for SamCore {
         for r in &mut self.d_r {
             r.iter_mut().for_each(|x| *x = 0.0);
         }
-        for d in &mut self.d_wread {
-            *d = SparseVec::new();
-        }
     }
 
-    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
-        let (h, p) = self.ctrl.step(x, &self.r_prev);
-        let hd = head_dim(self.cfg.word);
-        let mut heads = Vec::with_capacity(self.cfg.heads);
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        self.ctrl.step_hot(x, &self.r_prev);
+        let mut step = self.spare_steps.pop().unwrap_or_else(|| SamStep { heads: Vec::new() });
+        debug_assert!(step.heads.is_empty());
 
         // --- writes (use previous step's read weights, eq. 5) ---
         for hi in 0..self.cfg.heads {
-            let (_q, a, alpha_raw, gamma_raw, _beta) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
-            let gate =
-                self.engine.sparse_write(alpha_raw, gamma_raw, &self.w_read_prev[hi], &a);
-            heads.push(HeadStep {
+            let (alpha_raw, gamma_raw) = {
+                let p = self.ctrl.head_params();
+                (p[hi * hd + 2 * w], p[hi * hd + 2 * w + 1])
+            };
+            let a = {
+                let p = self.ctrl.head_params();
+                self.ws.take_f32_copy(&p[hi * hd + w..hi * hd + 2 * w])
+            };
+            let gate = self.engine.sparse_write(
+                alpha_raw,
+                gamma_raw,
+                &self.w_read_prev[hi],
+                &a,
+                &mut self.ws,
+            );
+            step.heads.push(HeadStep {
                 gate,
-                w_read_used: self.w_read_prev[hi].clone(),
+                w_read_used: std::mem::take(&mut self.w_read_prev[hi]),
                 write_word: a,
                 // placeholder read fields, filled below
-                read: ContentRead {
-                    rows: vec![],
-                    sims: vec![],
-                    weights: vec![],
-                    beta: 0.0,
-                    beta_raw: 0.0,
-                },
-                query: vec![],
-                read_out: vec![],
+                read: ContentRead::empty(),
+                query: Vec::new(),
             });
         }
 
         // --- reads (post-write memory M_t; one batched index traversal
         //     answers every head) ---
-        let queries: Vec<(Vec<f32>, f32)> = (0..self.cfg.heads)
-            .map(|hi| {
-                let (q, _a, _ar, _gr, beta_raw) = self.parse_head(&p[hi * hd..(hi + 1) * hd]);
-                (q, beta_raw)
-            })
-            .collect();
-        let mut reads = Vec::with_capacity(self.cfg.heads);
-        for (hi, tk) in self.engine.read_topk(queries).into_iter().enumerate() {
-            self.w_read_prev[hi] = tk.weights;
-            heads[hi].read = tk.read;
-            heads[hi].query = tk.query;
-            heads[hi].read_out = tk.r.clone();
-            reads.push(tk.r);
+        for hi in 0..self.cfg.heads {
+            let p = self.ctrl.head_params();
+            self.queries[hi].clear();
+            self.queries[hi].extend_from_slice(&p[hi * hd..hi * hd + w]);
+            self.betas[hi] = p[hi * hd + 2 * w + 2];
         }
+        debug_assert!(self.topk_tmp.is_empty());
+        let mut topk = std::mem::take(&mut self.topk_tmp);
+        self.engine.read_topk_into(&self.queries, &self.betas, &mut topk, &mut self.ws);
+        for (hi, tk) in topk.drain(..).enumerate() {
+            self.w_read_prev[hi] = tk.weights;
+            self.r_prev[hi].clear();
+            self.r_prev[hi].extend_from_slice(&tk.r);
+            self.ws.recycle_f32(tk.r);
+            let hstep = &mut step.heads[hi];
+            hstep.read = tk.read;
+            hstep.query = self.ws.take_f32_copy(&self.queries[hi]);
+        }
+        self.topk_tmp = topk;
 
-        let y = self.ctrl.output(&h, &reads);
-        self.r_prev = reads;
-        self.tape.push(SamStep { heads });
-        y
+        self.ctrl.output_hot(&self.r_prev, y);
+        self.tape.push(step);
     }
 
     fn backward(&mut self, dy: &[f32]) {
         let step = self.tape.pop().expect("backward without forward");
         let w = self.cfg.word;
         let hd = head_dim(w);
-        let (dh, dreads) = self.ctrl.backward_output(dy);
+        self.ctrl.backward_output_hot(dy);
 
-        let mut dp = vec![0.0f32; self.cfg.heads * hd];
+        self.dp_buf.clear();
+        self.dp_buf.resize(self.cfg.heads * hd, 0.0);
 
         // --- read backward (memory is M_t here) ---
         for (hi, hstep) in step.heads.iter().enumerate() {
-            let mut dr = dreads[hi].clone();
-            // r_t also fed step t+1's controller input.
-            for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
-                *a += b;
-            }
+            // dr = dL/dr_t from the output + r_t's feed of step t+1's input.
+            self.dr_buf.clear();
+            self.dr_buf.extend_from_slice(&self.ctrl.dreads()[hi]);
+            axpy(&mut self.dr_buf, 1.0, &self.d_r[hi]);
             // w̃^R_t also fed step t+1's write gate (carried d_wread).
-            let dslice = &mut dp[hi * hd..(hi + 1) * hd];
+            self.dq_buf.clear();
+            self.dq_buf.resize(w, 0.0);
             let mut dbeta_raw = 0.0;
-            let mut dq = vec![0.0f32; w];
             self.engine.backward_read_topk(
                 &hstep.read,
                 &hstep.query,
-                &dr,
+                &self.dr_buf,
                 &self.d_wread[hi],
-                &mut dq,
+                &mut self.dq_buf,
                 &mut dbeta_raw,
+                &mut self.ws,
             );
-            dslice[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
+            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+            dslice[..w].iter_mut().zip(&self.dq_buf).for_each(|(a, b)| *a += b);
             dslice[2 * w + 2] += dbeta_raw;
         }
 
@@ -224,28 +267,37 @@ impl Core for SamCore {
         for hi in (0..self.cfg.heads).rev() {
             let hstep = &step.heads[hi];
             let (mut dar, mut dgr) = (0.0f32, 0.0f32);
-            let (da, dw_prev) = self.engine.backward_write(
+            self.da_buf.clear();
+            self.da_buf.resize(w, 0.0);
+            let dw_prev = self.engine.backward_write_into(
                 &hstep.gate,
                 &hstep.write_word,
                 &hstep.w_read_used,
                 &mut dar,
                 &mut dgr,
+                &mut self.da_buf,
+                &mut self.ws,
             );
-            self.d_wread[hi] = dw_prev;
-            let dslice = &mut dp[hi * hd..(hi + 1) * hd];
-            dslice[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
+            let old = std::mem::replace(&mut self.d_wread[hi], dw_prev);
+            self.ws.recycle_sparse(old);
+            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+            dslice[w..2 * w].iter_mut().zip(&self.da_buf).for_each(|(x, d)| *x += d);
             dslice[2 * w] += dar;
             dslice[2 * w + 1] += dgr;
         }
 
-        // --- controller backward ---
-        let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
-        self.d_r = dr_prev;
+        // --- controller backward (writes d_r_prev into self.d_r) ---
+        self.ctrl.backward_step_hot(&self.dp_buf, &mut self.d_r);
+
+        // Tape recycling: every pooled buffer this step held goes home.
+        self.recycle_step(step);
     }
 
     fn rollback(&mut self) {
-        self.tape.clear();
-        self.engine.rollback();
+        while let Some(step) = self.tape.pop() {
+            self.recycle_step(step);
+        }
+        self.engine.rollback_ws(&mut self.ws);
     }
 
     fn end_episode(&mut self) {
@@ -270,10 +322,7 @@ impl Core for SamCore {
                     .iter()
                     .map(|h| {
                         h.w_read_used.heap_bytes()
-                            + (h.write_word.capacity()
-                                + h.query.capacity()
-                                + h.read_out.capacity())
-                                * 4
+                            + (h.write_word.capacity() + h.query.capacity()) * 4
                             + h.read.rows.capacity() * 8
                             + h.read.weights.capacity() * 4
                             + h.read.sims.capacity() * 12
@@ -377,6 +426,38 @@ mod tests {
         for (a, b) in y1.iter().zip(&y2) {
             for (x, y) in a.iter().zip(b) {
                 assert!((x - y).abs() < 1e-5, "episodes not independent");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_episodes_are_bit_identical() {
+        // Stronger than `episodes_are_independent`: buffer recycling must
+        // not perturb a single bit, episode after episode, including the
+        // gradients.
+        let mut rng = Rng::new(7);
+        let mut core = SamCore::new(&small_cfg(7), &mut rng);
+        let (xs, ts) = random_episode(4, 3, 6, &mut rng);
+        let mut y = Vec::new();
+        let mut first: Vec<Vec<u32>> = Vec::new();
+        for ep in 0..4 {
+            core.zero_grads();
+            core.reset();
+            let mut dys = Vec::new();
+            let mut bits: Vec<Vec<u32>> = Vec::new();
+            for (x, t) in xs.iter().zip(&ts) {
+                core.forward_into(x, &mut y);
+                bits.push(y.iter().map(|v| v.to_bits()).collect());
+                dys.push(crate::nn::loss::sigmoid_xent(&y, t).1);
+            }
+            for dy in dys.iter().rev() {
+                core.backward(dy);
+            }
+            core.end_episode();
+            if ep == 0 {
+                first = bits;
+            } else {
+                assert_eq!(first, bits, "episode {ep} diverged bitwise");
             }
         }
     }

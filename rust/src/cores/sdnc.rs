@@ -13,15 +13,21 @@
 //! Memory, ANN, LRA ring, write journals and the carried memory gradient
 //! all live in the shared [`SparseMemoryEngine`]; the SDNC keeps only its
 //! temporal-link state (N/P/precedence and their per-step journals) local.
+//!
+//! **Zero-allocation steps**: linkage journals move the replaced rows (no
+//! clones), the N/P row updates are sorted two-pointer merges into pooled
+//! vectors (replacing the old per-step HashMap/HashSet scratch), and every
+//! tape buffer recycles through the core's [`Workspace`] during backward
+//! (rust/tests/zero_alloc.rs).
 
 use super::addressing::{ContentRead, WriteGate};
 use super::{Controller, Core, CoreConfig};
 use crate::memory::engine::SparseMemoryEngine;
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::{SparseLinkMatrix, SparseVec};
-use crate::tensor::matrix::{softmax_backward, softmax_inplace};
+use crate::tensor::matrix::{axpy, softmax_backward, softmax_inplace};
+use crate::tensor::workspace::Workspace;
 use crate::util::rng::Rng;
-use std::collections::{HashMap, HashSet};
 
 /// Head params: [q(W), a(W), α̂, γ̂, β̂, mode(3)] — modes (backward, content, forward).
 const fn head_dim(word: usize) -> usize {
@@ -30,17 +36,21 @@ const fn head_dim(word: usize) -> usize {
 
 struct HeadStep {
     gate: WriteGate,
+    /// w̃^R_{t-1}: moved off the recurrent state at write time; the read
+    /// phase's link-follows and the backward pass both read it from here.
     w_read_used: SparseVec,
     write_word: Vec<f32>,
     read: ContentRead,
     query: Vec<f32>,
-    modes: Vec<f32>,
+    modes: [f32; 3],
     fwd: SparseVec,
     bwd: SparseVec,
     w_read: SparseVec,
 }
 
-/// Saved linkage rows for rollback (None = the row did not exist).
+/// Saved linkage rows for rollback, captured *by move* (None = the row did
+/// not exist before this step).
+#[derive(Default)]
 struct LinkJournal {
     n_rows: Vec<(usize, Option<SparseVec>)>,
     p_rows: Vec<(usize, Option<SparseVec>)>,
@@ -65,6 +75,23 @@ pub struct SdncCore {
     // carried backward state
     d_r: Vec<Vec<f32>>,
     d_wread: Vec<SparseVec>,
+    /// Linkage contribution to next step's carried d_wread, staged per head
+    /// during the read backward before the gate contribution folds in.
+    d_wread_next: Vec<SparseVec>,
+    // pooled / persistent step scratch
+    ws: Workspace,
+    queries: Vec<Vec<f32>>,
+    betas: Vec<f32>,
+    content_tmp: Vec<ContentRead>,
+    spare_steps: Vec<SdncStep>,
+    dp_buf: Vec<f32>,
+    dr_buf: Vec<f32>,
+    dq_buf: Vec<f32>,
+    da_buf: Vec<f32>,
+    dweights_buf: Vec<f32>,
+    /// P-row affected-set staging for `update_links_into` (persistent: its
+    /// size varies step to step, which defeats the pool's capacity classes).
+    affected_buf: Vec<usize>,
 }
 
 impl SdncCore {
@@ -99,13 +126,27 @@ impl SdncCore {
             tape: Vec::new(),
             d_r: vec![vec![0.0; cfg.word]; cfg.heads],
             d_wread: vec![SparseVec::new(); cfg.heads],
+            d_wread_next: vec![SparseVec::new(); cfg.heads],
+            ws: Workspace::new(),
+            queries: vec![Vec::new(); cfg.heads],
+            betas: vec![0.0; cfg.heads],
+            content_tmp: Vec::new(),
+            spare_steps: Vec::new(),
+            dp_buf: Vec::new(),
+            dr_buf: Vec::new(),
+            dq_buf: Vec::new(),
+            da_buf: Vec::new(),
+            dweights_buf: Vec::new(),
+            affected_buf: Vec::new(),
             cfg: cfg.clone(),
         }
     }
 
-    /// f/b link-follow: Σ_j w(j)·rows(j,:) over a row-sparse matrix.
-    fn follow(link: &SparseLinkMatrix, w: &SparseVec) -> SparseVec {
-        let mut pairs = Vec::new();
+    /// f/b link-follow pair list: Σ_j w(j)·rows(j,:) over a row-sparse
+    /// matrix, as (index, value) pairs for `assign_from_pairs` (duplicate
+    /// indices combine by addition there, matching the old `from_pairs`).
+    fn follow_pairs(link: &SparseLinkMatrix, w: &SparseVec, pairs: &mut Vec<(usize, f32)>) {
+        pairs.clear();
         for (j, wj) in w.iter() {
             if let Some(row) = link.row(j) {
                 for (i, v) in row.iter() {
@@ -113,36 +154,109 @@ impl SdncCore {
                 }
             }
         }
-        SparseVec::from_pairs(pairs)
+    }
+
+    /// out = (1-wi)·old + wi·p_prev with the diagonal entry dropped
+    /// (eq. 19's sparse N-row update as a sorted union merge).
+    fn merge_n_row(
+        old: Option<&SparseVec>,
+        wi: f32,
+        p_prev: &SparseVec,
+        diag: usize,
+        out: &mut SparseVec,
+    ) {
+        out.clear();
+        let empty = SparseVec::new();
+        let a = old.unwrap_or(&empty);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.nnz() || j < p_prev.nnz() {
+            let ai = if i < a.nnz() { a.idx[i] } else { usize::MAX };
+            let pj = if j < p_prev.nnz() { p_prev.idx[j] } else { usize::MAX };
+            if ai < pj {
+                if ai != diag {
+                    out.push(ai, (1.0 - wi) * a.val[i]);
+                }
+                i += 1;
+            } else if pj < ai {
+                if pj != diag {
+                    out.push(pj, wi * p_prev.val[j]);
+                }
+                j += 1;
+            } else {
+                if ai != diag {
+                    out.push(ai, (1.0 - wi) * a.val[i] + wi * p_prev.val[j]);
+                }
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+
+    /// Row i of the P update (eq. 20): entries at j ∈ supp(w), j ≠ i become
+    /// (1-w(j))·P(i,j) + w(j)·p_prev(i) (dropped if exactly zero); all
+    /// other entries of the old row survive unchanged. Sorted union merge —
+    /// replaces the old per-row HashMap rebuild, same values.
+    fn merge_p_row(
+        old: Option<&SparseVec>,
+        w: &SparseVec,
+        p_prev_i: f32,
+        diag: usize,
+        out: &mut SparseVec,
+    ) {
+        out.clear();
+        let empty = SparseVec::new();
+        let a = old.unwrap_or(&empty);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.nnz() || j < w.nnz() {
+            let ai = if i < a.nnz() { a.idx[i] } else { usize::MAX };
+            let wj = if j < w.nnz() { w.idx[j] } else { usize::MAX };
+            if ai < wj {
+                out.push(ai, a.val[i]);
+                i += 1;
+            } else if wj < ai {
+                if wj != diag {
+                    let nv = w.val[j] * p_prev_i;
+                    if nv != 0.0 {
+                        out.push(wj, nv);
+                    }
+                }
+                j += 1;
+            } else {
+                if ai == diag {
+                    // Diagonal updates are skipped: the old entry survives.
+                    out.push(ai, a.val[i]);
+                } else {
+                    let nv = (1.0 - w.val[j]) * a.val[i] + w.val[j] * p_prev_i;
+                    if nv != 0.0 {
+                        out.push(ai, nv);
+                    }
+                }
+                i += 1;
+                j += 1;
+            }
+        }
     }
 
     /// Apply the sparse linkage update for aggregate write weights `w`,
-    /// returning the journal of replaced rows. (eq. 17-20)
-    fn update_links(&mut self, w: &SparseVec) -> LinkJournal {
-        let mut journal = LinkJournal {
-            n_rows: Vec::new(),
-            p_rows: Vec::new(),
-            precedence: self.precedence.clone(),
-        };
-        let p_prev = self.precedence.clone();
-        // N rows: N(i,:) = (1-w(i))·N(i,:) + w(i)·p_prev,   i ∈ supp(w), j ≠ i.
+    /// journaling replaced rows *by move* into `journal`. (eq. 17-20)
+    fn update_links_into(&mut self, w: &SparseVec, journal: &mut LinkJournal) {
+        debug_assert!(journal.n_rows.is_empty() && journal.p_rows.is_empty());
+        // Old precedence moves into the journal and serves as p_prev below.
+        journal.precedence = std::mem::replace(&mut self.precedence, self.ws.take_sparse());
+        // N rows: N(i,:) = (1-w(i))·N(i,:) + w(i)·p_prev,  i ∈ supp(w), j ≠ i.
         for (i, wi) in w.iter() {
-            let old = self.n_link.row(i).cloned();
-            let mut row = old.clone().unwrap_or_default();
-            row.scale(1.0 - wi);
-            let mut row = row.add_scaled(wi, &p_prev);
-            // zero diagonal
-            if let Ok(pos) = row.idx.binary_search(&i) {
-                row.idx.remove(pos);
-                row.val.remove(pos);
+            let old = self.n_link.take_row(i);
+            let mut new_row = self.ws.take_sparse();
+            Self::merge_n_row(old.as_ref(), wi, &journal.precedence, i, &mut new_row);
+            if let Some(displaced) = self.n_link.set_row_recycling(i, new_row) {
+                self.ws.recycle_sparse(displaced);
             }
             journal.n_rows.push((i, old));
-            self.n_link.set_row(i, row);
         }
-        // P rows: P(i,j) = (1-w(j))·P(i,j) + w(j)·p_prev(i) for j ∈ supp(w).
-        // Affected rows: supp(p_prev) ∪ {i : P(i,j) ≠ 0 for some j ∈ supp(w)}
-        //              = supp(p_prev) ∪ ∪_{j∈supp(w)} supp(N_old(j,:)).
-        let mut affected: HashSet<usize> = p_prev.idx.iter().copied().collect();
+        // P rows: affected = supp(p_prev) ∪ ∪_{j∈supp(w)} supp(N_old(j,:)).
+        let mut affected = std::mem::take(&mut self.affected_buf);
+        affected.clear();
+        affected.extend(journal.precedence.idx.iter().copied());
         for (j, _) in w.iter() {
             for (old_j, old_row) in journal.n_rows.iter() {
                 if *old_j == j {
@@ -152,51 +266,71 @@ impl SdncCore {
                 }
             }
         }
-        let mut affected: Vec<usize> = affected.into_iter().collect();
         affected.sort_unstable();
-        for i in affected {
-            let old = self.p_link.row(i).cloned();
-            let mut row: HashMap<usize, f32> =
-                old.as_ref().map(|r| r.iter().collect()).unwrap_or_default();
-            for (j, wj) in w.iter() {
-                if i == j {
-                    continue; // diagonal stays zero
-                }
-                let cur = row.get(&j).copied().unwrap_or(0.0);
-                let nv = (1.0 - wj) * cur + wj * p_prev.get(i);
-                if nv != 0.0 {
-                    row.insert(j, nv);
-                } else {
-                    row.remove(&j);
-                }
+        affected.dedup();
+        for &i in affected.iter() {
+            let old = self.p_link.take_row(i);
+            let mut new_row = self.ws.take_sparse();
+            Self::merge_p_row(old.as_ref(), w, journal.precedence.get(i), i, &mut new_row);
+            if let Some(displaced) = self.p_link.set_row_recycling(i, new_row) {
+                self.ws.recycle_sparse(displaced);
             }
             journal.p_rows.push((i, old));
-            self.p_link.set_row(i, SparseVec::from_pairs(row.into_iter().collect()));
         }
+        self.affected_buf = affected;
         // precedence: p = (1-Σw)·p_prev + w, truncated to K_L.
         let sum_w = w.sum().min(1.0);
-        let mut p = p_prev.clone();
-        p.scale(1.0 - sum_w);
-        let mut p = p.add(w);
-        p.truncate_top_k(self.cfg.k_l);
-        self.precedence = p;
-        journal
+        let mut newp = std::mem::take(&mut self.precedence);
+        w.add_scaled_into(1.0 - sum_w, &journal.precedence, &mut newp);
+        newp.truncate_top_k(self.cfg.k_l);
+        self.precedence = newp;
     }
 
-    fn revert_links(&mut self, journal: LinkJournal) {
-        for (i, old) in journal.p_rows.into_iter().rev() {
-            match old {
-                Some(row) => self.p_link.set_row(i, row),
-                None => self.p_link.set_row(i, SparseVec::new()),
+    /// Test shim for the dense-reference linkage property test.
+    #[cfg(test)]
+    fn update_links(&mut self, w: &SparseVec) {
+        let mut journal = LinkJournal::default();
+        self.update_links_into(w, &mut journal);
+    }
+
+    /// Roll the linkage back one step, draining the journal and recycling
+    /// every displaced row buffer.
+    fn revert_links(&mut self, journal: &mut LinkJournal) {
+        while let Some((i, old)) = journal.p_rows.pop() {
+            if let Some(cur) = self.p_link.take_row(i) {
+                self.ws.recycle_sparse(cur);
+            }
+            if let Some(row) = old {
+                self.p_link.set_row(i, row);
             }
         }
-        for (i, old) in journal.n_rows.into_iter().rev() {
-            match old {
-                Some(row) => self.n_link.set_row(i, row),
-                None => self.n_link.set_row(i, SparseVec::new()),
+        while let Some((i, old)) = journal.n_rows.pop() {
+            if let Some(cur) = self.n_link.take_row(i) {
+                self.ws.recycle_sparse(cur);
+            }
+            if let Some(row) = old {
+                self.n_link.set_row(i, row);
             }
         }
-        self.precedence = journal.precedence;
+        let prev = std::mem::take(&mut journal.precedence);
+        let cur = std::mem::replace(&mut self.precedence, prev);
+        self.ws.recycle_sparse(cur);
+    }
+
+    /// Recycle a popped tape step's buffers and park its shell.
+    fn recycle_step(&mut self, mut step: SdncStep) {
+        debug_assert!(step.links.n_rows.is_empty() && step.links.p_rows.is_empty());
+        for h in step.heads.drain(..) {
+            self.ws.recycle_f32(h.write_word);
+            self.ws.recycle_f32(h.query);
+            self.ws.recycle_sparse(h.gate.weights);
+            self.ws.recycle_sparse(h.w_read_used);
+            self.ws.recycle_sparse(h.fwd);
+            self.ws.recycle_sparse(h.bwd);
+            self.ws.recycle_sparse(h.w_read);
+            self.engine.recycle_content_read(h.read, &mut self.ws);
+        }
+        self.spare_steps.push(step);
     }
 }
 
@@ -213,13 +347,32 @@ impl Core for SdncCore {
 
     fn reset(&mut self) {
         self.ctrl.reset();
-        self.tape.clear();
-        self.engine.reset();
-        self.n_link = SparseLinkMatrix::new(self.cfg.k_l);
-        self.p_link = SparseLinkMatrix::new(self.cfg.k_l);
-        self.precedence = SparseVec::new();
-        for v in &mut self.w_read_prev {
-            *v = SparseVec::new();
+        // Abandoned episodes: revert outstanding linkage journals in
+        // reverse order, recycling as we go, then clear defensively.
+        while let Some(mut step) = self.tape.pop() {
+            let mut links = std::mem::take(&mut step.links);
+            self.revert_links(&mut links);
+            step.links = links;
+            self.recycle_step(step);
+        }
+        self.engine.reset(&mut self.ws);
+        let n_rows: Vec<SparseVec> = self.n_link.rows.drain().map(|(_, r)| r).collect();
+        for r in n_rows {
+            self.ws.recycle_sparse(r);
+        }
+        let p_rows: Vec<SparseVec> = self.p_link.rows.drain().map(|(_, r)| r).collect();
+        for r in p_rows {
+            self.ws.recycle_sparse(r);
+        }
+        let old = std::mem::take(&mut self.precedence);
+        self.ws.recycle_sparse(old);
+        for hi in 0..self.cfg.heads {
+            let old = std::mem::take(&mut self.w_read_prev[hi]);
+            self.ws.recycle_sparse(old);
+            let old = std::mem::take(&mut self.d_wread[hi]);
+            self.ws.recycle_sparse(old);
+            let old = std::mem::take(&mut self.d_wread_next[hi]);
+            self.ws.recycle_sparse(old);
         }
         for r in &mut self.r_prev {
             r.iter_mut().for_each(|x| *x = 0.0);
@@ -227,32 +380,42 @@ impl Core for SdncCore {
         for r in &mut self.d_r {
             r.iter_mut().for_each(|x| *x = 0.0);
         }
-        for d in &mut self.d_wread {
-            *d = SparseVec::new();
-        }
     }
 
-    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
         let w = self.cfg.word;
         let hd = head_dim(w);
-        let (h, p) = self.ctrl.step(x, &self.r_prev);
-        let mut heads = Vec::with_capacity(self.cfg.heads);
+        self.ctrl.step_hot(x, &self.r_prev);
+        let mut step = self.spare_steps.pop().unwrap_or_else(|| SdncStep {
+            heads: Vec::new(),
+            links: LinkJournal::default(),
+        });
+        debug_assert!(step.heads.is_empty());
 
         // --- SAM-style sparse writes (engine journals + syncs the ANN) ---
-        let mut w_agg = SparseVec::new();
+        let mut w_agg = self.ws.take_sparse();
         for hi in 0..self.cfg.heads {
-            let ph = &p[hi * hd..(hi + 1) * hd];
-            let a = ph[w..2 * w].to_vec();
-            let (ar, gr) = (ph[2 * w], ph[2 * w + 1]);
-            let gate = self.engine.sparse_write(ar, gr, &self.w_read_prev[hi], &a);
-            w_agg = w_agg.add(&gate.weights);
-            heads.push(HeadStep {
+            let (ar, gr) = {
+                let p = self.ctrl.head_params();
+                (p[hi * hd + 2 * w], p[hi * hd + 2 * w + 1])
+            };
+            let a = {
+                let p = self.ctrl.head_params();
+                self.ws.take_f32_copy(&p[hi * hd + w..hi * hd + 2 * w])
+            };
+            let gate =
+                self.engine.sparse_write(ar, gr, &self.w_read_prev[hi], &a, &mut self.ws);
+            let mut merged = self.ws.take_sparse();
+            w_agg.add_into(&gate.weights, &mut merged);
+            std::mem::swap(&mut w_agg, &mut merged);
+            self.ws.recycle_sparse(merged);
+            step.heads.push(HeadStep {
                 gate,
-                w_read_used: self.w_read_prev[hi].clone(),
+                w_read_used: std::mem::take(&mut self.w_read_prev[hi]),
                 write_word: a,
-                read: ContentRead { rows: vec![], sims: vec![], weights: vec![], beta: 0.0, beta_raw: 0.0 },
-                query: vec![],
-                modes: vec![],
+                read: ContentRead::empty(),
+                query: Vec::new(),
+                modes: [0.0; 3],
                 fwd: SparseVec::new(),
                 bwd: SparseVec::new(),
                 w_read: SparseVec::new(),
@@ -264,76 +427,94 @@ impl Core for SdncCore {
         if s > 1.0 {
             w_agg.scale(1.0 / s);
         }
-        let links = self.update_links(&w_agg);
+        self.update_links_into(&w_agg, &mut step.links);
+        self.ws.recycle_sparse(w_agg);
 
         // --- reads: 3-way mix of content / forward-link / backward-link,
         //     content candidates from one batched ANN traversal ---
-        let queries: Vec<(Vec<f32>, f32)> = (0..self.cfg.heads)
-            .map(|hi| {
-                let ph = &p[hi * hd..(hi + 1) * hd];
-                (ph[..w].to_vec(), ph[2 * w + 2])
-            })
-            .collect();
-        let content_reads = self.engine.content_read_many(&queries);
-        let mut reads = Vec::with_capacity(self.cfg.heads);
-        for (hi, ((query, _beta_raw), read)) in
-            queries.into_iter().zip(content_reads).enumerate()
-        {
-            let ph = &p[hi * hd..(hi + 1) * hd];
-            let mut modes = ph[2 * w + 3..2 * w + 6].to_vec();
+        for hi in 0..self.cfg.heads {
+            let p = self.ctrl.head_params();
+            self.queries[hi].clear();
+            self.queries[hi].extend_from_slice(&p[hi * hd..hi * hd + w]);
+            self.betas[hi] = p[hi * hd + 2 * w + 2];
+        }
+        debug_assert!(self.content_tmp.is_empty());
+        let mut crs = std::mem::take(&mut self.content_tmp);
+        self.engine.content_read_many_into(&self.queries, &self.betas, &mut crs, &mut self.ws);
+        for (hi, read) in crs.drain(..).enumerate() {
+            let mut modes = {
+                let p = self.ctrl.head_params();
+                [p[hi * hd + 2 * w + 3], p[hi * hd + 2 * w + 4], p[hi * hd + 2 * w + 5]]
+            };
             softmax_inplace(&mut modes);
-            let wp = &self.w_read_prev[hi];
-            let fwd = Self::follow(&self.p_link, wp); // f = Σ w(j)·P(j,:) = N·w
-            let bwd = Self::follow(&self.n_link, wp); // b = Σ w(j)·N(j,:) = Nᵀ·w = P·w
-            let mut w_read = SparseVec::from_pairs(
+            let mut fwd = self.ws.take_sparse();
+            let mut bwd = self.ws.take_sparse();
+            let mut pairs = self.ws.take_pairs();
+            {
+                let wp = &step.heads[hi].w_read_used;
+                // f = Σ w(j)·P(j,:) = N·w ; b = Σ w(j)·N(j,:) = Nᵀ·w = P·w
+                Self::follow_pairs(&self.p_link, wp, &mut pairs);
+                fwd.assign_from_pairs(&mut pairs);
+                Self::follow_pairs(&self.n_link, wp, &mut pairs);
+                bwd.assign_from_pairs(&mut pairs);
+            }
+            // w_read = modes[1]·content + modes[0]·bwd + modes[2]·fwd.
+            pairs.clear();
+            pairs.extend(
                 read.rows
                     .iter()
                     .copied()
-                    .zip(read.weights.iter().map(|&v| v * modes[1]))
-                    .collect(),
+                    .zip(read.weights.iter().map(|&v| v * modes[1])),
             );
-            w_read = w_read.add_scaled(modes[0], &bwd).add_scaled(modes[2], &fwd);
+            let mut content_part = self.ws.take_sparse();
+            content_part.assign_from_pairs(&mut pairs);
+            self.ws.recycle_pairs(pairs);
+            let mut mixed = self.ws.take_sparse();
+            content_part.add_scaled_into(modes[0], &bwd, &mut mixed);
+            let mut w_read = self.ws.take_sparse();
+            mixed.add_scaled_into(modes[2], &fwd, &mut w_read);
+            self.ws.recycle_sparse(content_part);
+            self.ws.recycle_sparse(mixed);
             w_read.truncate_top_k(self.cfg.k + 2 * self.cfg.k_l);
-            let r = self.engine.read_mixture(&w_read);
-            self.w_read_prev[hi] = w_read.clone();
-            let hstep = &mut heads[hi];
+            self.engine.read_mixture_into(&w_read, &mut self.r_prev[hi]);
+            self.w_read_prev[hi] = self.ws.take_sparse_copy(&w_read);
+            let hstep = &mut step.heads[hi];
             hstep.read = read;
-            hstep.query = query;
+            hstep.query = self.ws.take_f32_copy(&self.queries[hi]);
             hstep.modes = modes;
             hstep.fwd = fwd;
             hstep.bwd = bwd;
             hstep.w_read = w_read;
-            reads.push(r);
         }
+        self.content_tmp = crs;
 
-        let y = self.ctrl.output(&h, &reads);
-        self.r_prev = reads;
-        self.tape.push(SdncStep { heads, links });
-        y
+        self.ctrl.output_hot(&self.r_prev, y);
+        self.tape.push(step);
     }
 
     fn backward(&mut self, dy: &[f32]) {
-        let step = self.tape.pop().expect("backward without forward");
+        let mut step = self.tape.pop().expect("backward without forward");
         let w = self.cfg.word;
         let hd = head_dim(w);
-        let (dh, dreads) = self.ctrl.backward_output(dy);
-        let mut dp = vec![0.0f32; self.cfg.heads * hd];
-        // Linkage contribution to the carried d_wread, accumulated before
-        // the write-gate contribution is added below.
-        let mut d_wread_next: Vec<SparseVec> = vec![SparseVec::new(); self.cfg.heads];
+        self.ctrl.backward_output_hot(dy);
+        self.dp_buf.clear();
+        self.dp_buf.resize(self.cfg.heads * hd, 0.0);
 
         // --- read backward (memory = M_t, links = N_t/P_t) ---
         for (hi, hstep) in step.heads.iter().enumerate() {
-            let mut dr = dreads[hi].clone();
-            for (a, b) in dr.iter_mut().zip(&self.d_r[hi]) {
-                *a += b;
-            }
+            self.dr_buf.clear();
+            self.dr_buf.extend_from_slice(&self.ctrl.dreads()[hi]);
+            axpy(&mut self.dr_buf, 1.0, &self.d_r[hi]);
             // dL/dw_read over supp(w_read), plus the carried gradient from
             // step t+1's uses of w_read (gate + linkage).
-            let dw_read =
-                self.engine.backward_sparse_read(&hstep.w_read, &dr, &self.d_wread[hi]);
+            let dw_read = self.engine.backward_sparse_read(
+                &hstep.w_read,
+                &self.dr_buf,
+                &self.d_wread[hi],
+                &mut self.ws,
+            );
             // mode mixture backward
-            let dmodes = vec![
+            let dmodes = [
                 dw_read.dot_sparse(&hstep.bwd),
                 hstep
                     .read
@@ -344,39 +525,44 @@ impl Core for SdncCore {
                     .sum::<f32>(),
                 dw_read.dot_sparse(&hstep.fwd),
             ];
-            let mut dmode_logits = vec![0.0f32; 3];
+            let mut dmode_logits = [0.0f32; 3];
             softmax_backward(&hstep.modes, &dmodes, &mut dmode_logits);
-            let ph = &mut dp[hi * hd..(hi + 1) * hd];
-            for k in 0..3 {
-                ph[2 * w + 3 + k] += dmode_logits[k];
+            {
+                let ph = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+                for k in 0..3 {
+                    ph[2 * w + 3 + k] += dmode_logits[k];
+                }
             }
             // content path
-            let dweights: Vec<f32> = hstep
-                .read
-                .rows
-                .iter()
-                .map(|&i| hstep.modes[1] * dw_read.get(i))
-                .collect();
-            let mut dq = vec![0.0f32; w];
+            self.dweights_buf.clear();
+            self.dweights_buf.extend(
+                hstep.read.rows.iter().map(|&i| hstep.modes[1] * dw_read.get(i)),
+            );
+            self.dq_buf.clear();
+            self.dq_buf.resize(w, 0.0);
             let mut dbeta_raw = 0.0f32;
             self.engine.backward_content(
                 &hstep.read,
                 &hstep.query,
-                &dweights,
-                &mut dq,
+                &self.dweights_buf,
+                &mut self.dq_buf,
                 &mut dbeta_raw,
+                &mut self.ws,
             );
-            ph[..w].iter_mut().zip(&dq).for_each(|(a, b)| *a += b);
-            ph[2 * w + 2] += dbeta_raw;
+            {
+                let ph = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+                ph[..w].iter_mut().zip(&self.dq_buf).for_each(|(a, b)| *a += b);
+                ph[2 * w + 2] += dbeta_raw;
+            }
             // linkage path: f = Σ_j wp(j)·P(j,:) ⇒ dwp(j) = P(j,:)·df;
             //               b = Σ_j wp(j)·N(j,:) ⇒ dwp(j) = N(j,:)·db.
-            let mut df = dw_read.clone();
+            let mut df = self.ws.take_sparse_copy(&dw_read);
             df.scale(hstep.modes[2]);
-            let mut db = dw_read.clone();
+            let mut db = self.ws.take_sparse_copy(&dw_read);
             db.scale(hstep.modes[0]);
-            let wp = &hstep.w_read_used; // NOTE: wp at read time == w_read_prev before this step's reads
-            let mut pairs = Vec::with_capacity(wp.nnz());
-            for (j, _) in wp.iter() {
+            let mut dnext = self.ws.take_sparse();
+            // wp at read time == w_read_prev before this step's reads.
+            for (j, _) in hstep.w_read_used.iter() {
                 let mut g = 0.0;
                 if let Some(prow) = self.p_link.row(j) {
                     g += prow.dot_sparse(&df);
@@ -384,40 +570,57 @@ impl Core for SdncCore {
                 if let Some(nrow) = self.n_link.row(j) {
                     g += nrow.dot_sparse(&db);
                 }
-                pairs.push((j, g));
+                dnext.push(j, g);
             }
-            d_wread_next[hi] = SparseVec::from_pairs(pairs);
+            let old = std::mem::replace(&mut self.d_wread_next[hi], dnext);
+            self.ws.recycle_sparse(old);
+            self.ws.recycle_sparse(df);
+            self.ws.recycle_sparse(db);
+            self.ws.recycle_sparse(dw_read);
         }
 
         // --- write backward (reverse head order, rolling memory back) ---
         for hi in (0..self.cfg.heads).rev() {
             let hstep = &step.heads[hi];
             let (mut dar, mut dgr) = (0.0f32, 0.0f32);
-            let (da, dw_prev) = self.engine.backward_write(
+            self.da_buf.clear();
+            self.da_buf.resize(w, 0.0);
+            let dw_prev = self.engine.backward_write_into(
                 &hstep.gate,
                 &hstep.write_word,
                 &hstep.w_read_used,
                 &mut dar,
                 &mut dgr,
+                &mut self.da_buf,
+                &mut self.ws,
             );
-            self.d_wread[hi] = d_wread_next[hi].add(&dw_prev);
-            let ph = &mut dp[hi * hd..(hi + 1) * hd];
-            ph[w..2 * w].iter_mut().zip(&da).for_each(|(x, d)| *x += d);
+            let mut total = self.ws.take_sparse();
+            self.d_wread_next[hi].add_into(&dw_prev, &mut total);
+            self.ws.recycle_sparse(dw_prev);
+            let old = std::mem::replace(&mut self.d_wread[hi], total);
+            self.ws.recycle_sparse(old);
+            let ph = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+            ph[w..2 * w].iter_mut().zip(&self.da_buf).for_each(|(x, d)| *x += d);
             ph[2 * w] += dar;
             ph[2 * w + 1] += dgr;
         }
 
         // Roll the linkage back to N_{t-1}/P_{t-1}.
-        self.revert_links(step.links);
+        let mut links = std::mem::take(&mut step.links);
+        self.revert_links(&mut links);
+        step.links = links;
 
-        let (_dx, dr_prev) = self.ctrl.backward_step(&dh, &dp);
-        self.d_r = dr_prev;
+        self.ctrl.backward_step_hot(&self.dp_buf, &mut self.d_r);
+        self.recycle_step(step);
     }
 
     fn rollback(&mut self) {
-        self.engine.rollback();
-        while let Some(step) = self.tape.pop() {
-            self.revert_links(step.links);
+        self.engine.rollback_ws(&mut self.ws);
+        while let Some(mut step) = self.tape.pop() {
+            let mut links = std::mem::take(&mut step.links);
+            self.revert_links(&mut links);
+            step.links = links;
+            self.recycle_step(step);
         }
     }
 
@@ -524,6 +727,35 @@ mod tests {
         assert_eq!(core.precedence.nnz(), 0);
     }
 
+    #[test]
+    fn pooled_episodes_are_bit_identical() {
+        let mut rng = Rng::new(48);
+        let mut core = SdncCore::new(&small_cfg(48), &mut rng);
+        let (xs, ts) = random_episode(4, 3, 5, &mut rng);
+        let mut y = Vec::new();
+        let mut first: Vec<Vec<u32>> = Vec::new();
+        for ep in 0..4 {
+            core.zero_grads();
+            core.reset();
+            let mut dys = Vec::new();
+            let mut bits: Vec<Vec<u32>> = Vec::new();
+            for (x, t) in xs.iter().zip(&ts) {
+                core.forward_into(x, &mut y);
+                bits.push(y.iter().map(|v| v.to_bits()).collect());
+                dys.push(crate::nn::loss::sigmoid_xent(&y, t).1);
+            }
+            for dy in dys.iter().rev() {
+                core.backward(dy);
+            }
+            core.end_episode();
+            if ep == 0 {
+                first = bits;
+            } else {
+                assert_eq!(first, bits, "episode {ep} diverged bitwise");
+            }
+        }
+    }
+
     /// The sparse linkage must approximate the dense DNC linkage on the
     /// common support: simulate both for a few steps of random sparse
     /// writes and compare f/b reads.
@@ -569,11 +801,13 @@ mod tests {
         // N uses (1-w(i)) where dense L uses (1-w(i)-w(j)); tolerance is
         // loose to cover that deliberate approximation (eq. 19 vs 13).
         let wp = SparseVec::from_pairs((0..n).map(|i| (i, 1.0 / n as f32)).collect());
-        let f_sparse = SdncCore::follow(&core.p_link, &wp).to_dense(n);
+        let mut pairs = Vec::new();
+        SdncCore::follow_pairs(&core.p_link, &wp, &mut pairs);
+        let f_sparse = SparseVec::from_pairs(pairs).to_dense(n);
         let mut f_dense = vec![0.0f32; n];
-        for i in 0..n {
+        for (i, fd) in f_dense.iter_mut().enumerate() {
             for j in 0..n {
-                f_dense[i] += l_dense[i][j] * wp.get(j);
+                *fd += l_dense[i][j] * wp.get(j);
             }
         }
         for i in 0..n {
@@ -604,5 +838,32 @@ mod tests {
         }
         core.rollback();
         core.end_episode();
+    }
+
+    #[test]
+    fn merge_p_row_matches_map_reference() {
+        // Pin the merge against the old HashMap-based row rebuild.
+        let old = SparseVec::from_pairs(vec![(1, 0.3), (4, 0.2), (7, 0.5)]);
+        let w = SparseVec::from_pairs(vec![(2, 0.4), (4, 0.5), (5, 0.0), (9, 0.25)]);
+        let p_prev_i = 0.6;
+        let diag = 4usize;
+        let mut got = SparseVec::new();
+        SdncCore::merge_p_row(Some(&old), &w, p_prev_i, diag, &mut got);
+        // reference via map semantics
+        let mut map: std::collections::HashMap<usize, f32> = old.iter().collect();
+        for (j, wj) in w.iter() {
+            if j == diag {
+                continue;
+            }
+            let cur = map.get(&j).copied().unwrap_or(0.0);
+            let nv = (1.0 - wj) * cur + wj * p_prev_i;
+            if nv != 0.0 {
+                map.insert(j, nv);
+            } else {
+                map.remove(&j);
+            }
+        }
+        let want = SparseVec::from_pairs(map.into_iter().collect());
+        assert_eq!(got, want);
     }
 }

@@ -10,10 +10,10 @@
 //! * **Forward**: [`sparse_write`](SparseMemoryEngine::sparse_write) applies
 //!   eq. 5's gated write, journals the touched rows, updates the LRA ring
 //!   and keeps the ANN in sync *incrementally* via
-//!   [`AnnIndex::update_row`]; [`read_topk`](SparseMemoryEngine::read_topk)
+//!   [`AnnIndex::update_row`]; [`read_topk_into`](SparseMemoryEngine::read_topk_into)
 //!   answers all heads' content reads with one batched
-//!   [`AnnIndex::query_many`] traversal (eq. 2/4).
-//! * **Backward**: [`backward_write`](SparseMemoryEngine::backward_write)
+//!   [`AnnIndex::query_many_into`] traversal (eq. 2/4).
+//! * **Backward**: [`backward_write_into`](SparseMemoryEngine::backward_write_into)
 //!   consumes the journal tape in reverse, rolling the memory back in place
 //!   (§3.4, O(1) space per step) and re-syncing the ANN rows it restores;
 //!   the read-side helpers accumulate into the carried [`RowSparse`]
@@ -23,16 +23,27 @@
 //! with the memory at every step boundary: there is no per-episode resync
 //! loop and no full rebuild on the default path — index restructuring is
 //! amortized inside the index implementations themselves.
+//!
+//! **Zero-allocation hot path**: every per-step buffer (journal rows, gate
+//! weights, content-read caches, read words, gradient vectors) is drawn
+//! from the caller's [`Workspace`] and recycled back when its step is
+//! backpropagated, so a steady-state step performs no heap allocations
+//! (rust/tests/zero_alloc.rs). Buffers the caller keeps on its tape
+//! (ContentRead, gate weights, TopKRead parts) must be returned via
+//! [`recycle_content_read`](SparseMemoryEngine::recycle_content_read) /
+//! `Workspace::recycle_*` during backward — the same workspace must serve
+//! all of a core's engine calls.
 
 use crate::ann::{build_index, AnnIndex, AnnKind};
 use crate::cores::addressing::{
-    content_weights_backward, content_weights_many, write_gate, write_gate_backward, ContentRead,
-    WriteGate,
+    content_weights_backward_ws, content_weights_into, write_gate_backward_ws, write_gate_ws,
+    ContentRead, CosSim, WriteGate,
 };
-use crate::memory::store::{MemoryStore, StepJournal, WriteOp};
+use crate::memory::store::{MemoryStore, StepJournal};
 use crate::memory::usage::LraRing;
 use crate::tensor::csr::{RowSparse, SparseVec};
 use crate::tensor::matrix::dot;
+use crate::tensor::workspace::{Pool, Workspace};
 use crate::util::rng::Rng;
 
 /// Episode-start contents of memory row `i`: small deterministic noise
@@ -51,8 +62,9 @@ pub fn init_row(seed: u64, i: usize, out: &mut [f32]) {
 
 /// One head's batched content read: the ANN/content caches the backward
 /// pass needs, the sparse read weights w̃^R, and the read word r̃ (eq. 4).
+/// All buffers are workspace-pooled; the consuming core recycles them at
+/// backward time.
 pub struct TopKRead {
-    pub query: Vec<f32>,
     pub read: ContentRead,
     pub weights: SparseVec,
     pub r: Vec<f32>,
@@ -69,7 +81,7 @@ pub struct SparseMemoryEngine {
     /// argmin, so allocating 2N usizes of LRA state would be dead weight.
     ring: Option<LraRing>,
     /// The episode's write tape, one journal per `sparse_write`, in write
-    /// order. `backward_write`/`rollback` consume it in reverse.
+    /// order. `backward_write_into`/`rollback` consume it in reverse.
     journals: Vec<StepJournal>,
     /// Carried row-sparse memory gradient ∂L/∂M (Supp A).
     dmem: RowSparse,
@@ -77,6 +89,18 @@ pub struct SparseMemoryEngine {
     k: usize,
     /// Usage threshold δ for LRA touches (paper: 0.005).
     delta: f32,
+    // -- reusable scratch (engine-internal; never per-episode state) --------
+    /// Drained journal shells awaiting refill (their `saved` capacity).
+    spare_journals: Vec<StepJournal>,
+    /// Batched ANN result buffers, one per head.
+    neigh: Vec<Vec<(usize, f32)>>,
+    /// CosSim cache buffers for ContentRead (CosSim lives in `cores`, so
+    /// the pool lives here rather than in the type-agnostic Workspace).
+    sim_pool: Pool<CosSim>,
+    /// ContentRead staging for `read_topk_into`.
+    cr_tmp: Vec<ContentRead>,
+    /// dL/dweights staging for `backward_read_topk`.
+    dw_scratch: Vec<f32>,
 }
 
 impl SparseMemoryEngine {
@@ -108,6 +132,11 @@ impl SparseMemoryEngine {
             dmem: RowSparse::new(word),
             k,
             delta,
+            spare_journals: Vec::new(),
+            neigh: Vec::new(),
+            sim_pool: Pool::new(),
+            cr_tmp: Vec::new(),
+            dw_scratch: Vec::new(),
         }
     }
 
@@ -123,6 +152,11 @@ impl SparseMemoryEngine {
             dmem: RowSparse::new(word),
             k: 0,
             delta: 0.0,
+            spare_journals: Vec::new(),
+            neigh: Vec::new(),
+            sim_pool: Pool::new(),
+            cr_tmp: Vec::new(),
+            dw_scratch: Vec::new(),
         }
     }
 
@@ -145,23 +179,22 @@ impl SparseMemoryEngine {
     /// Gated sparse write (eq. 5/8) for one head: pops the LRA target,
     /// interpolates the write weights, erases the LRA row, applies the
     /// sparse add, journals the prior row contents, touches the ring and
-    /// incrementally syncs the ANN. Returns the gate cache for backward.
+    /// incrementally syncs the ANN. Returns the gate cache for backward;
+    /// the caller owns it (tape) and recycles `gate.weights` into `ws`
+    /// after `backward_write_into`.
     pub fn sparse_write(
         &mut self,
         alpha_raw: f32,
         gamma_raw: f32,
         w_read_prev: &SparseVec,
         word: &[f32],
+        ws: &mut Workspace,
     ) -> WriteGate {
         let ring = self.ring.as_mut().expect("sparse_write needs a sparse engine (LRA ring)");
         let lra_row = ring.pop_lra();
-        let gate = write_gate(alpha_raw, gamma_raw, w_read_prev, lra_row);
-        let op = WriteOp {
-            erase_rows: vec![lra_row],
-            weights: gate.weights.clone(),
-            word: word.to_vec(),
-        };
-        let journal = self.mem.apply_write(&op);
+        let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
+        let mut journal = self.spare_journals.pop().unwrap_or_default();
+        self.mem.journal_sparse_write(lra_row, &gate.weights, word, &mut journal, ws);
         let ring = self.ring.as_mut().unwrap();
         for (i, wv) in gate.weights.iter() {
             if wv.abs() > self.delta {
@@ -174,54 +207,90 @@ impl SparseMemoryEngine {
     }
 
     /// Batched content reads for all heads (SAM's read path): one
-    /// `query_many` index traversal, then per-head softmax weights, sparse
-    /// read and ring touches, in head order.
-    pub fn read_topk(&mut self, queries: Vec<(Vec<f32>, f32)>) -> Vec<TopKRead> {
-        let reads = self.content_read_many(&queries);
-        let mut out = Vec::with_capacity(queries.len());
-        for ((query, _beta_raw), read) in queries.into_iter().zip(reads) {
-            let weights = SparseVec::from_pairs(
-                read.rows.iter().copied().zip(read.weights.iter().copied()).collect(),
-            );
-            let r = self.read_mixture(&weights);
-            out.push(TopKRead { query, read, weights, r });
+    /// `query_many_into` index traversal, then per-head softmax weights,
+    /// sparse read and ring touches, in head order. Results append to
+    /// `out`; every buffer inside them is pooled from `ws` (plus the
+    /// engine's sim pool) and must come back via
+    /// [`recycle_content_read`](SparseMemoryEngine::recycle_content_read) /
+    /// `ws.recycle_*` at backward time.
+    pub fn read_topk_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<TopKRead>,
+        ws: &mut Workspace,
+    ) {
+        let mut crs = std::mem::take(&mut self.cr_tmp);
+        self.content_read_many_into(queries, betas, &mut crs, ws);
+        for read in crs.drain(..) {
+            let mut pairs = ws.take_pairs();
+            pairs.extend(read.rows.iter().copied().zip(read.weights.iter().copied()));
+            let mut weights = ws.take_sparse();
+            weights.assign_from_pairs(&mut pairs);
+            ws.recycle_pairs(pairs);
+            let mut r = ws.take_f32(self.mem.word_size());
+            self.read_mixture_into(&weights, &mut r);
+            out.push(TopKRead { read, weights, r });
         }
-        out
+        self.cr_tmp = crs;
     }
 
     /// Batched content-weight computation without the memory read or ring
     /// touches — for cores (SDNC) that mix content weights with other
-    /// addressing modes before reading.
-    pub fn content_read_many(&mut self, queries: &[(Vec<f32>, f32)]) -> Vec<ContentRead> {
+    /// addressing modes before reading. Appends one ContentRead per query.
+    pub fn content_read_many_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<ContentRead>,
+        ws: &mut Workspace,
+    ) {
+        assert_eq!(queries.len(), betas.len());
         let ann = self.ann.as_mut().expect("content reads need a sparse engine (ANN)");
-        let qs: Vec<&[f32]> = queries.iter().map(|(q, _)| q.as_slice()).collect();
-        let rows_per_query: Vec<Vec<usize>> = ann
-            .query_many(&qs, self.k)
-            .into_iter()
-            .map(|ns| ns.into_iter().map(|(i, _)| i).collect())
-            .collect();
-        content_weights_many(queries, &self.mem, rows_per_query)
+        ann.query_many_into(queries, self.k, &mut self.neigh);
+        for (hi, (q, &beta_raw)) in queries.iter().zip(betas).enumerate() {
+            let mut rows = ws.take_usize(self.k);
+            rows.extend(self.neigh[hi].iter().map(|&(i, _)| i));
+            let cr = content_weights_into(
+                q,
+                beta_raw,
+                &self.mem,
+                rows,
+                self.sim_pool.take(),
+                ws.take_f32_empty(self.k),
+            );
+            out.push(cr);
+        }
     }
 
     /// Sparse read r = Σᵢ w(sᵢ)·M(sᵢ) (eq. 4) with LRA touches for every
-    /// non-negligible weight.
-    pub fn read_mixture(&mut self, w_read: &SparseVec) -> Vec<f32> {
-        let mut r = vec![0.0; self.mem.word_size()];
-        self.mem.read_sparse(w_read, &mut r);
+    /// non-negligible weight, into a reused buffer (resized to word size).
+    pub fn read_mixture_into(&mut self, w_read: &SparseVec, r: &mut Vec<f32>) {
+        r.clear();
+        r.resize(self.mem.word_size(), 0.0);
+        self.mem.read_sparse(w_read, r);
         let ring = self.ring.as_mut().expect("read_mixture needs a sparse engine (LRA ring)");
         for (i, wv) in w_read.iter() {
             if wv > self.delta {
                 ring.touch(i);
             }
         }
-        r
+    }
+
+    /// Return a ContentRead's pooled buffers (tape recycling at backward).
+    pub fn recycle_content_read(&mut self, cr: ContentRead, ws: &mut Workspace) {
+        ws.recycle_usize(cr.rows);
+        ws.recycle_f32(cr.weights);
+        self.sim_pool.recycle(cr.sims);
     }
 
     // -- backward -----------------------------------------------------------
 
-    /// Backward of one head's `read_topk` result: accumulates ∂L/∂M over
-    /// the read support, folds in the carried gradient on w̃^R from step
-    /// t+1 (`carried_dw`), and backprops the content softmax into dq/dβ̂.
+    /// Backward of one head's `read_topk_into` result: accumulates ∂L/∂M
+    /// over the read support, folds in the carried gradient on w̃^R from
+    /// step t+1 (`carried_dw`), and backprops the content softmax into
+    /// dq/dβ̂.
+    #[allow(clippy::too_many_arguments)]
     pub fn backward_read_topk(
         &mut self,
         read: &ContentRead,
@@ -230,30 +299,35 @@ impl SparseMemoryEngine {
         carried_dw: &SparseVec,
         dq: &mut [f32],
         dbeta_raw: &mut f32,
+        ws: &mut Workspace,
     ) {
-        let mut dweights = vec![0.0f32; read.rows.len()];
+        let mut dws = std::mem::take(&mut self.dw_scratch);
+        dws.clear();
         for (j, &row) in read.rows.iter().enumerate() {
-            dweights[j] = dot(self.mem.row(row), dr) + carried_dw.get(row);
+            dws.push(dot(self.mem.row(row), dr) + carried_dw.get(row));
             self.dmem.axpy_row(row, read.weights[j], dr);
         }
-        self.backward_content(read, query, &dweights, dq, dbeta_raw);
+        self.backward_content(read, query, &dws, dq, dbeta_raw, ws);
+        self.dw_scratch = dws;
     }
 
-    /// Backward of `read_mixture`: returns dL/dw over the read support
-    /// (including the carried gradient) and accumulates ∂L/∂M.
+    /// Backward of a sparse mixture read: returns dL/dw over the read
+    /// support (including the carried gradient) as a pooled vector and
+    /// accumulates ∂L/∂M.
     pub fn backward_sparse_read(
         &mut self,
         w_read: &SparseVec,
         dr: &[f32],
         carried_dw: &SparseVec,
+        ws: &mut Workspace,
     ) -> SparseVec {
-        let mut pairs = Vec::with_capacity(w_read.nnz());
+        let mut out = ws.take_sparse();
         for (i, wv) in w_read.iter() {
             let g = dot(self.mem.row(i), dr) + carried_dw.get(i);
             self.dmem.axpy_row(i, wv, dr);
-            pairs.push((i, g));
+            out.push(i, g);
         }
-        SparseVec::from_pairs(pairs)
+        out
     }
 
     /// Content-softmax backward (eq. 2) with ∂L/∂M rows accumulated into
@@ -265,10 +339,11 @@ impl SparseMemoryEngine {
         dweights: &[f32],
         dq: &mut [f32],
         dbeta_raw: &mut f32,
+        ws: &mut Workspace,
     ) {
         let mem = &self.mem;
         let dmem = &mut self.dmem;
-        content_weights_backward(read, query, mem, dweights, dq, dbeta_raw, |row, d| {
+        content_weights_backward_ws(read, query, mem, dweights, dq, dbeta_raw, ws, |row, d| {
             dmem.axpy_row(row, 1.0, d)
         });
     }
@@ -276,63 +351,80 @@ impl SparseMemoryEngine {
     /// Backward of one head's `sparse_write` (reverse head order): computes
     /// the write-word and gate gradients from ∂L/∂M, kills the erased row's
     /// gradient, reverts this write's journal (rolling the memory back one
-    /// head, Supp Fig 5) and re-syncs the restored ANN rows. Returns
-    /// (d(write word), dL/d(w̃^R_{t-1})).
-    pub fn backward_write(
+    /// head, Supp Fig 5) and re-syncs the restored ANN rows. `da` must
+    /// arrive zeroed at word length; dL/d(w̃^R_{t-1}) is returned pooled.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_write_into(
         &mut self,
         gate: &WriteGate,
         word: &[f32],
         w_read_used: &SparseVec,
         dalpha_raw: &mut f32,
         dgamma_raw: &mut f32,
-    ) -> (Vec<f32>, SparseVec) {
-        let mut da = vec![0.0f32; self.mem.word_size()];
-        let mut dw_pairs = Vec::with_capacity(gate.weights.nnz());
+        da: &mut [f32],
+        ws: &mut Workspace,
+    ) -> SparseVec {
+        debug_assert_eq!(da.len(), self.mem.word_size());
+        let mut dw = ws.take_sparse();
         for (i, wv) in gate.weights.iter() {
             if let Some(drow) = self.dmem.row(i) {
                 for (daj, dj) in da.iter_mut().zip(drow) {
                     *daj += wv * dj;
                 }
-                dw_pairs.push((i, dot(word, drow)));
+                dw.push(i, dot(word, drow));
             }
         }
-        let dw = SparseVec::from_pairs(dw_pairs);
         // The erased row's pre-write contents don't affect the loss.
         self.dmem.clear_row(gate.lra_row);
-        let dw_prev = write_gate_backward(gate, w_read_used, &dw, dalpha_raw, dgamma_raw);
-        let journal = self
+        let dw_prev = write_gate_backward_ws(gate, w_read_used, &dw, dalpha_raw, dgamma_raw, ws);
+        ws.recycle_sparse(dw);
+        let mut journal = self
             .journals
             .pop()
             .expect("backward_write without a matching sparse_write");
         self.mem.revert(&journal);
         self.sync_rows(&journal);
-        (da, dw_prev)
+        journal.recycle_rows(ws);
+        self.spare_journals.push(journal);
+        dw_prev
     }
 
     // -- episode lifecycle ---------------------------------------------------
 
     /// Discard the remaining write tape without computing gradients:
     /// reverts every outstanding journal in reverse order, restoring the
-    /// memory (bit-exactly) and the ANN to the episode-start state.
-    pub fn rollback(&mut self) {
-        while let Some(journal) = self.journals.pop() {
+    /// memory (bit-exactly) and the ANN to the episode-start state. Journal
+    /// rows recycle into `ws`.
+    pub fn rollback_ws(&mut self, ws: &mut Workspace) {
+        while let Some(mut journal) = self.journals.pop() {
             self.mem.revert(&journal);
             self.sync_rows(&journal);
+            journal.recycle_rows(ws);
+            self.spare_journals.push(journal);
         }
+    }
+
+    /// [`rollback_ws`](SparseMemoryEngine::rollback_ws) without buffer
+    /// reuse (tests / cold paths).
+    pub fn rollback(&mut self) {
+        let mut ws = Workspace::new();
+        self.rollback_ws(&mut ws);
     }
 
     /// Start a new episode. Outstanding journals mean the previous episode
     /// was abandoned mid-tape; reverting them restores memory + ANN in
     /// O(tape) — there is no touched-set bookkeeping to replay.
-    pub fn reset(&mut self) {
-        self.rollback();
+    pub fn reset(&mut self, ws: &mut Workspace) {
+        self.rollback_ws(ws);
         if let Some(ring) = self.ring.as_mut() {
             ring.reset();
         }
-        self.dmem = RowSparse::new(self.mem.word_size());
+        // Clear-retain: the carried gradient's row buffers and map capacity
+        // persist across episodes, part of the zero-allocation steady state.
+        self.dmem.clear();
     }
 
-    /// Called after the last `backward` of an episode. Incremental
+    /// Called after the last backward of an episode. Incremental
     /// maintenance keeps the ANN in sync through every write and revert, so
     /// there is nothing to resync and no full rebuild on the default path.
     pub fn end_episode(&mut self) {
@@ -358,12 +450,47 @@ impl SparseMemoryEngine {
         }
     }
 
+    // -- compatibility wrappers (tests / cold paths) -------------------------
+
+    /// Allocating wrapper over [`read_topk_into`](SparseMemoryEngine::read_topk_into).
+    pub fn read_topk(&mut self, queries: Vec<(Vec<f32>, f32)>) -> Vec<TopKRead> {
+        let mut ws = Workspace::new();
+        let (qs, betas): (Vec<Vec<f32>>, Vec<f32>) = queries.into_iter().unzip();
+        let mut out = Vec::new();
+        self.read_topk_into(&qs, &betas, &mut out, &mut ws);
+        out
+    }
+
+    /// Allocating wrapper over
+    /// [`content_read_many_into`](SparseMemoryEngine::content_read_many_into).
+    pub fn content_read_many(&mut self, queries: &[(Vec<f32>, f32)]) -> Vec<ContentRead> {
+        let mut ws = Workspace::new();
+        let qs: Vec<Vec<f32>> = queries.iter().map(|(q, _)| q.clone()).collect();
+        let betas: Vec<f32> = queries.iter().map(|&(_, b)| b).collect();
+        let mut out = Vec::new();
+        self.content_read_many_into(&qs, &betas, &mut out, &mut ws);
+        out
+    }
+
+    /// Allocating wrapper over [`read_mixture_into`](SparseMemoryEngine::read_mixture_into).
+    pub fn read_mixture(&mut self, w_read: &SparseVec) -> Vec<f32> {
+        let mut r = Vec::new();
+        self.read_mixture_into(w_read, &mut r);
+        r
+    }
+
     // -- dense sub-API (DAM, the paper's dense control model) ----------------
 
     /// Full memory snapshot — the O(N·W)/step BPTT cost the sparse path
     /// eliminates; dense baselines cache one per step.
     pub fn snapshot(&self) -> Vec<f32> {
         self.mem.snapshot()
+    }
+
+    /// Snapshot into a reused buffer (the dense per-step copy without the
+    /// per-step allocation).
+    pub fn snapshot_into(&self, out: &mut Vec<f32>) {
+        self.mem.snapshot_into(out);
     }
 
     pub fn restore(&mut self, snap: &[f32]) {
@@ -448,11 +575,12 @@ mod tests {
     }
 
     fn write_some(engine: &mut SparseMemoryEngine, steps: usize, seed: u64) {
+        let mut ws = Workspace::new();
         let mut rng = Rng::new(seed);
         let mut w_prev = SparseVec::new();
         for _ in 0..steps {
             let word: Vec<f32> = (0..engine.word_size()).map(|_| rng.normal()).collect();
-            let gate = engine.sparse_write(rng.normal(), rng.normal(), &w_prev, &word);
+            let gate = engine.sparse_write(rng.normal(), rng.normal(), &w_prev, &word, &mut ws);
             w_prev = gate.weights;
         }
     }
@@ -479,10 +607,11 @@ mod tests {
     #[test]
     fn reset_recovers_abandoned_episode() {
         let mut engine = sparse_engine(3);
+        let mut ws = Workspace::new();
         let start = engine.snapshot();
         write_some(&mut engine, 5, 4);
         // No rollback/backward: reset alone must restore the start state.
-        engine.reset();
+        engine.reset(&mut ws);
         assert_eq!(engine.snapshot(), start);
         engine.end_episode();
     }
@@ -504,6 +633,34 @@ mod tests {
             assert_eq!(tk.r.len(), 6);
         }
         engine.rollback();
+    }
+
+    #[test]
+    fn pooled_read_paths_match_allocating_wrappers() {
+        // Two identical engines; one read through the hot path, one through
+        // the wrappers — results must match bitwise.
+        let mut a = sparse_engine(9);
+        let mut b = sparse_engine(9);
+        write_some(&mut a, 5, 10);
+        write_some(&mut b, 5, 10);
+        let queries: Vec<Vec<f32>> = (0..3)
+            .map(|h| (0..6).map(|i| (h + i) as f32 * 0.15 - 0.4).collect())
+            .collect();
+        let betas = vec![0.3f32; 3];
+        let mut ws = Workspace::new();
+        let mut hot = Vec::new();
+        a.read_topk_into(&queries, &betas, &mut hot, &mut ws);
+        let cold =
+            b.read_topk(queries.iter().map(|q| (q.clone(), 0.3)).collect());
+        assert_eq!(hot.len(), cold.len());
+        for (x, y) in hot.iter().zip(&cold) {
+            assert_eq!(x.read.rows, y.read.rows);
+            assert_eq!(x.read.weights, y.read.weights);
+            assert_eq!(x.weights, y.weights);
+            assert_eq!(x.r, y.r);
+        }
+        a.rollback();
+        b.rollback();
     }
 
     #[test]

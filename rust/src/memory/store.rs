@@ -13,6 +13,7 @@
 //! O(N) reset is needed between episodes.
 
 use crate::tensor::csr::SparseVec;
+use crate::tensor::workspace::Workspace;
 
 /// Dense external memory of `n` words (rows) of width `w`.
 #[derive(Debug, Clone)]
@@ -36,6 +37,14 @@ impl StepJournal {
 
     pub fn is_empty(&self) -> bool {
         self.saved.is_empty()
+    }
+
+    /// Hand the saved row buffers back to a workspace, leaving an empty
+    /// journal shell (its `saved` Vec keeps capacity) ready for reuse.
+    pub fn recycle_rows(&mut self, ws: &mut Workspace) {
+        for (_, row) in self.saved.drain(..) {
+            ws.recycle_f32(row);
+        }
     }
 
     /// Heap bytes held (for the Fig 1b accounting): K+1 rows of W floats.
@@ -146,6 +155,39 @@ impl MemoryStore {
         journal
     }
 
+    /// Hot-path twin of [`MemoryStore::apply_write`] for the engine's
+    /// single-erase-row writes: journals into the caller's (reused) journal
+    /// shell with row buffers drawn from the workspace instead of fresh
+    /// `to_vec`s. Identical write semantics and journal row order (erase
+    /// row first, then the weight support in index order, deduplicated).
+    pub fn journal_sparse_write(
+        &mut self,
+        erase_row: usize,
+        weights: &SparseVec,
+        word: &[f32],
+        journal: &mut StepJournal,
+        ws: &mut Workspace,
+    ) {
+        assert_eq!(word.len(), self.w);
+        debug_assert!(journal.is_empty(), "journal shell must arrive drained");
+        journal
+            .saved
+            .push((erase_row, ws.take_f32_copy(self.row(erase_row))));
+        for (i, _) in weights.iter() {
+            if i != erase_row {
+                let row_copy = ws.take_f32_copy(self.row(i));
+                journal.saved.push((i, row_copy));
+            }
+        }
+        self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        for (i, wv) in weights.iter() {
+            let row = self.row_mut(i);
+            for (m, a) in row.iter_mut().zip(word) {
+                *m += wv * a;
+            }
+        }
+    }
+
     /// Dense write M ← (1-R)⊙M + A with R = w^W eᵀ, A = w^W aᵀ (paper
     /// eq. 3, NTM-style). O(N·W): for the dense baselines the caller caches
     /// the full memory per step instead of journaling.
@@ -176,6 +218,13 @@ impl MemoryStore {
     /// copy per step is exactly the overhead SAM eliminates).
     pub fn snapshot(&self) -> Vec<f32> {
         self.data.clone()
+    }
+
+    /// Snapshot into a reused buffer (the dense baselines' per-step copy
+    /// without the per-step allocation).
+    pub fn snapshot_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.data);
     }
 
     pub fn restore(&mut self, snap: &[f32]) {
@@ -264,6 +313,29 @@ mod tests {
             }
             assert_eq!(m.snapshot(), start, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn journal_sparse_write_matches_apply_write() {
+        let mut rng = Rng::new(9);
+        let mut a = random_store(16, 4, &mut rng);
+        let mut b = a.clone();
+        let weights = SparseVec::from_pairs(vec![(5, 1.0), (2, 0.3), (9, -0.7)]);
+        let word = vec![1.5, -2.0, 0.25, 3.0];
+        let op = WriteOp { erase_rows: vec![5], weights: weights.clone(), word: word.clone() };
+        let j1 = a.apply_write(&op);
+        let mut ws = Workspace::new();
+        let mut j2 = StepJournal::default();
+        b.journal_sparse_write(5, &weights, &word, &mut j2, &mut ws);
+        assert_eq!(a.snapshot(), b.snapshot(), "write effects must match");
+        let rows1: Vec<usize> = j1.touched_rows().collect();
+        let rows2: Vec<usize> = j2.touched_rows().collect();
+        assert_eq!(rows1, rows2, "journal row order must match");
+        a.revert(&j1);
+        b.revert(&j2);
+        assert_eq!(a.snapshot(), b.snapshot(), "reverts must match");
+        j2.recycle_rows(&mut ws);
+        assert!(j2.is_empty());
     }
 
     #[test]

@@ -2,20 +2,26 @@
 //! cache stack (supports arbitrarily long BPTT: one push per forward call,
 //! one pop per backward call).
 //!
-//! Two hot-path upgrades over a naive per-sample implementation:
+//! Hot-path upgrades over a naive per-sample implementation:
 //!
 //! * **Batched GEMM API** — [`Linear::forward_batch`]/[`Linear::backward_batch`]
 //!   process a whole T×in matrix of samples with three GEMMs
 //!   (Y = X Wᵀ + b, dW += dYᵀ X, dX = dY W).
-//! * **Deferred weight gradients** — the per-step [`Linear::backward`] no
-//!   longer does a rank-1 `outer_acc` per call; it queues (dy, x) pairs and
-//!   folds the whole episode's weight gradient in as one `dW += dYᵀ X` GEMM
-//!   when the cache stack empties (or on [`Linear::clear_cache`]). Same
-//!   flops, one cache-friendly pass, and a single deterministic summation
-//!   order shared by the serial and data-parallel trainers.
+//! * **Deferred weight gradients** — the per-step backward no longer does a
+//!   rank-1 `outer_acc` per call; it queues (dy, x) pairs and folds the
+//!   whole episode's weight gradient in as one `dW += dYᵀ X` GEMM when the
+//!   cache stack empties (or on [`Linear::clear_cache`]). Same flops, one
+//!   cache-friendly pass, and a single deterministic summation order shared
+//!   by the serial and data-parallel trainers.
+//! * **Zero-allocation steps** — [`Linear::forward_into`]/
+//!   [`Linear::backward_into`] write into caller-reused buffers and draw
+//!   cache/tape storage from a layer-private [`Workspace`], recycled as the
+//!   episode backpropagates. The allocating [`Linear::forward`]/
+//!   [`Linear::backward`] wrappers remain for cold callers and tests.
 
 use super::param::{HasParams, Param};
 use crate::tensor::matrix::{axpy, col_sum_acc, dot, gemm, gemm_nt, gemm_tn, Matrix};
+use crate::tensor::workspace::Workspace;
 use crate::util::rng::Rng;
 
 /// y = W x + b.
@@ -28,6 +34,8 @@ pub struct Linear {
     cache_batch: Vec<Matrix>,
     /// (dy, x) pairs awaiting the episode-level GEMM gradient flush.
     pending: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Layer-private buffer pool (see [`crate::tensor::workspace`]).
+    ws: Workspace,
 }
 
 impl Linear {
@@ -38,6 +46,7 @@ impl Linear {
             cache_x: Vec::new(),
             cache_batch: Vec::new(),
             pending: Vec::new(),
+            ws: Workspace::new(),
         }
     }
 
@@ -49,33 +58,52 @@ impl Linear {
         self.w.w.rows
     }
 
-    /// Forward one vector; caches `x` for the matching backward.
-    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+    /// Forward one vector into a caller-reused output buffer; caches `x`
+    /// (pooled copy) for the matching backward.
+    pub fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
         assert_eq!(x.len(), self.in_dim());
-        let mut y = self.b.w.data.clone();
+        y.clear();
+        y.extend_from_slice(&self.b.w.data);
         for (i, yi) in y.iter_mut().enumerate() {
             *yi += dot(self.w.w.row(i), x);
         }
-        self.cache_x.push(x.to_vec());
+        let xb = self.ws.take_f32_copy(x);
+        self.cache_x.push(xb);
+    }
+
+    /// Forward one vector; caches `x` for the matching backward.
+    /// Allocating wrapper over [`Linear::forward_into`].
+    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut y = Vec::new();
+        self.forward_into(x, &mut y);
         y
     }
 
-    /// Backward the most recent un-backpropagated forward; returns dL/dx.
-    /// Weight gradients are queued and folded in by one GEMM when the last
-    /// cached step has been backpropagated (see module docs).
-    pub fn backward(&mut self, dy: &[f32]) -> Vec<f32> {
+    /// Backward the most recent un-backpropagated forward, writing dL/dx
+    /// into a caller-reused buffer. Weight gradients are queued and folded
+    /// in by one GEMM when the last cached step has been backpropagated
+    /// (see module docs).
+    pub fn backward_into(&mut self, dy: &[f32], dx: &mut Vec<f32>) {
         assert_eq!(dy.len(), self.out_dim());
         let x = self.cache_x.pop().expect("backward without forward");
-        let mut dx = vec![0.0; x.len()];
+        dx.clear();
+        dx.resize(x.len(), 0.0);
         for (i, &dyi) in dy.iter().enumerate() {
             if dyi != 0.0 {
-                axpy(&mut dx, dyi, self.w.w.row(i));
+                axpy(dx, dyi, self.w.w.row(i));
             }
         }
-        self.pending.push((dy.to_vec(), x));
+        let dyb = self.ws.take_f32_copy(dy);
+        self.pending.push((dyb, x));
         if self.cache_x.is_empty() {
             self.flush_grads();
         }
+    }
+
+    /// Allocating wrapper over [`Linear::backward_into`].
+    pub fn backward(&mut self, dy: &[f32]) -> Vec<f32> {
+        let mut dx = Vec::new();
+        self.backward_into(dy, &mut dx);
         dx
     }
 
@@ -112,14 +140,20 @@ impl Linear {
             return;
         }
         let t = self.pending.len();
-        let mut dy = Matrix::zeros(t, self.out_dim());
-        let mut x = Matrix::zeros(t, self.in_dim());
-        for (r, (dyr, xr)) in self.pending.drain(..).enumerate() {
+        let mut dy = self.ws.take_matrix(t, self.out_dim());
+        let mut x = self.ws.take_matrix(t, self.in_dim());
+        let mut pending = std::mem::take(&mut self.pending);
+        for (r, (dyr, xr)) in pending.drain(..).enumerate() {
             dy.row_mut(r).copy_from_slice(&dyr);
             x.row_mut(r).copy_from_slice(&xr);
+            self.ws.recycle_f32(dyr);
+            self.ws.recycle_f32(xr);
         }
+        self.pending = pending;
         gemm_tn(&mut self.w.g, &dy, &x);
         col_sum_acc(&mut self.b.g.data, &dy);
+        self.ws.recycle_matrix(dy);
+        self.ws.recycle_matrix(x);
     }
 
     /// Drop any cached activations (episode reset). A partially
@@ -127,7 +161,9 @@ impl Linear {
     /// so truncated BPTT keeps its gradients.
     pub fn clear_cache(&mut self) {
         self.flush_grads();
-        self.cache_x.clear();
+        while let Some(x) = self.cache_x.pop() {
+            self.ws.recycle_f32(x);
+        }
         self.cache_batch.clear();
     }
 
@@ -237,6 +273,27 @@ mod tests {
         lin.clear_cache();
         assert_eq!(lin.w.g.get(0, 1), 1.0, "truncated grads must survive reset");
         assert_eq!(lin.cache_bytes(), 0);
+    }
+
+    #[test]
+    fn into_variants_match_wrappers() {
+        let mut r1 = Rng::new(6);
+        let mut r2 = Rng::new(6);
+        let mut a = Linear::new("a", 3, 2, &mut r1);
+        let mut b = Linear::new("b", 3, 2, &mut r2);
+        let mut y = Vec::new();
+        let mut dx = Vec::new();
+        for _ in 0..3 {
+            a.forward_into(&[0.5, -1.0, 2.0], &mut y);
+            let yb = b.forward(&[0.5, -1.0, 2.0]);
+            assert_eq!(y, yb);
+            a.backward_into(&[1.0, -0.5], &mut dx);
+            let dxb = b.backward(&[1.0, -0.5]);
+            assert_eq!(dx, dxb);
+        }
+        for (ga, gb) in a.w.g.data.iter().zip(&b.w.g.data) {
+            assert_eq!(ga.to_bits(), gb.to_bits());
+        }
     }
 
     #[test]

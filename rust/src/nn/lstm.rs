@@ -13,13 +13,20 @@
 //!   the tape empties (or on [`Lstm::reset`]). Same flops, cache-friendly,
 //!   and one deterministic summation order shared by the serial and
 //!   data-parallel trainers.
+//! * every tape/scratch buffer is drawn from a layer-private [`Workspace`]
+//!   and recycled when its step is backpropagated, so steady-state steps
+//!   allocate nothing: [`Lstm::step_hot`] leaves h_t in `self.h`, and
+//!   [`Lstm::backward_into`] writes dx into a caller-reused buffer. The
+//!   allocating [`Lstm::step`]/[`Lstm::backward`] wrappers remain for cold
+//!   callers and tests.
 
 use super::act::{dsigmoid, dtanh, sigmoid, tanh};
 use super::param::{HasParams, Param};
 use crate::tensor::matrix::{axpy, col_sum_acc, gemm_nt, gemm_tn, gemv, Matrix};
+use crate::tensor::workspace::Workspace;
 use crate::util::rng::Rng;
 
-/// Per-step cache for the backward pass.
+/// Per-step cache for the backward pass (all buffers workspace-pooled).
 struct StepCache {
     x: Vec<f32>,
     h_prev: Vec<f32>,
@@ -45,6 +52,9 @@ pub struct Lstm {
     tape: Vec<StepCache>,
     /// (dz, x, h_prev) rows awaiting the episode-level GEMM gradient flush.
     pending: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    /// Layer-private buffer pool; tape buffers never escape the layer, so
+    /// the take/recycle cycle closes here.
+    ws: Workspace,
     forget_bias: f32,
 }
 
@@ -62,6 +72,7 @@ impl Lstm {
             dc_next: vec![0.0; hidden],
             tape: Vec::new(),
             pending: Vec::new(),
+            ws: Workspace::new(),
             forget_bias: 1.0,
         }
     }
@@ -75,15 +86,33 @@ impl Lstm {
         self.c.iter_mut().for_each(|x| *x = 0.0);
         self.dh_next.iter_mut().for_each(|x| *x = 0.0);
         self.dc_next.iter_mut().for_each(|x| *x = 0.0);
-        self.tape.clear();
+        while let Some(cache) = self.tape.pop() {
+            self.recycle_cache(cache);
+        }
     }
 
-    /// One forward step; returns h_t (also kept in `self.h`).
-    pub fn step(&mut self, x: &[f32]) -> Vec<f32> {
+    fn recycle_cache(&mut self, cache: StepCache) {
+        self.ws.recycle_f32(cache.x);
+        self.ws.recycle_f32(cache.h_prev);
+        self.ws.recycle_f32(cache.c_prev);
+        self.ws.recycle_f32(cache.gates);
+        self.ws.recycle_f32(cache.c);
+    }
+
+    /// One forward step; h_t is left in `self.h` (no allocation).
+    pub fn step_hot(&mut self, x: &[f32]) {
         assert_eq!(x.len(), self.input);
-        let mut zx = vec![0.0f32; 4 * self.hidden];
+        let mut zx = self.ws.take_f32(4 * self.hidden);
         gemv(&mut zx, &self.wx.w, x);
-        self.step_with_zx(x.to_vec(), zx)
+        let xb = self.ws.take_f32_copy(x);
+        self.step_with_zx(xb, zx);
+    }
+
+    /// One forward step; returns h_t (also kept in `self.h`). Allocating
+    /// wrapper over [`Lstm::step_hot`].
+    pub fn step(&mut self, x: &[f32]) -> Vec<f32> {
+        self.step_hot(x);
+        self.h.clone()
     }
 
     /// Forward a whole episode whose inputs are known up front (one row per
@@ -96,47 +125,52 @@ impl Lstm {
         gemm_nt(&mut zx, xs, &self.wx.w);
         let mut hs = Matrix::zeros(xs.rows, self.hidden);
         for t in 0..xs.rows {
-            let h = self.step_with_zx(xs.row(t).to_vec(), zx.row(t).to_vec());
-            hs.row_mut(t).copy_from_slice(&h);
+            self.step_with_zx(xs.row(t).to_vec(), zx.row(t).to_vec());
+            hs.row_mut(t).copy_from_slice(&self.h);
         }
         hs
     }
 
     /// Shared step body: `z` arrives holding Wx·x and picks up b + Wh·h.
-    fn step_with_zx(&mut self, x: Vec<f32>, mut z: Vec<f32>) -> Vec<f32> {
+    /// Takes ownership of (pooled or fresh) `x`/`z` buffers; `x` goes to
+    /// the tape, `z` is recycled.
+    fn step_with_zx(&mut self, x: Vec<f32>, mut z: Vec<f32>) {
         let hs = self.hidden;
         axpy(&mut z, 1.0, &self.b.w.data);
         gemv(&mut z, &self.wh.w, &self.h);
-        let mut gates = vec![0.0f32; 4 * hs];
+        let mut gates = self.ws.take_f32(4 * hs);
         for j in 0..hs {
             gates[j] = sigmoid(z[j]); // i
             gates[hs + j] = sigmoid(z[hs + j] + self.forget_bias); // f
             gates[2 * hs + j] = tanh(z[2 * hs + j]); // g
             gates[3 * hs + j] = sigmoid(z[3 * hs + j]); // o
         }
-        let c_prev = std::mem::replace(&mut self.c, vec![0.0; hs]);
-        let h_prev = std::mem::replace(&mut self.h, vec![0.0; hs]);
+        let mut c_new = self.ws.take_f32(hs);
+        let mut h_new = self.ws.take_f32(hs);
         for j in 0..hs {
-            self.c[j] = gates[hs + j] * c_prev[j] + gates[j] * gates[2 * hs + j];
-            self.h[j] = gates[3 * hs + j] * tanh(self.c[j]);
+            // self.c/self.h still hold c_{t-1}/h_{t-1} here.
+            c_new[j] = gates[hs + j] * self.c[j] + gates[j] * gates[2 * hs + j];
+            h_new[j] = gates[3 * hs + j] * tanh(c_new[j]);
         }
-        let h = self.h.clone();
-        let c = self.c.clone();
-        self.tape.push(StepCache { x, h_prev, c_prev, gates, c });
-        h
+        let c_prev = std::mem::replace(&mut self.c, c_new);
+        let h_prev = std::mem::replace(&mut self.h, h_new);
+        let c_copy = self.ws.take_f32_copy(&self.c);
+        self.ws.recycle_f32(z);
+        self.tape.push(StepCache { x, h_prev, c_prev, gates, c: c_copy });
     }
 
-    /// Backward the most recent un-backpropagated step. `dh` is dL/dh_t from
-    /// this step's consumers; the recurrent grads (from t+1) are carried
-    /// internally. Returns dL/dx_t. Weight gradients are queued and folded
+    /// Backward the most recent un-backpropagated step, writing dL/dx_t
+    /// into the caller-reused `dx` buffer (cleared and resized here). `dh`
+    /// is dL/dh_t from this step's consumers; the recurrent grads (from
+    /// t+1) are carried internally. Weight gradients are queued and folded
     /// in as two GEMMs when the last taped step has been backpropagated.
-    pub fn backward(&mut self, dh_ext: &[f32]) -> Vec<f32> {
+    pub fn backward_into(&mut self, dh_ext: &[f32], dx: &mut Vec<f32>) {
         let cache = self.tape.pop().expect("lstm backward without forward");
         let hs = self.hidden;
-        let mut dh = dh_ext.to_vec();
+        let mut dh = self.ws.take_f32_copy(dh_ext);
         axpy(&mut dh, 1.0, &self.dh_next);
-        let mut dz = vec![0.0f32; 4 * hs];
-        let mut dc_prev = vec![0.0f32; hs];
+        let mut dz = self.ws.take_f32(4 * hs);
+        let mut dc_prev = self.ws.take_f32(hs);
         for j in 0..hs {
             let (i, f, g, o) = (
                 cache.gates[j],
@@ -157,21 +191,34 @@ impl Lstm {
             dz[3 * hs + j] = d_o * dsigmoid(o);
         }
         // Input grad and carried recurrent grads (need W, not the caches).
-        let mut dx = vec![0.0f32; self.input];
-        let mut dh_prev = vec![0.0f32; hs];
+        dx.clear();
+        dx.resize(self.input, 0.0);
+        let mut dh_prev = self.ws.take_f32(hs);
         for (r, &dzr) in dz.iter().enumerate() {
             if dzr != 0.0 {
-                axpy(&mut dx, dzr, self.wx.w.row(r));
+                axpy(dx, dzr, self.wx.w.row(r));
                 axpy(&mut dh_prev, dzr, self.wh.w.row(r));
             }
         }
-        self.dh_next = dh_prev;
-        self.dc_next = dc_prev;
+        let old = std::mem::replace(&mut self.dh_next, dh_prev);
+        self.ws.recycle_f32(old);
+        let old = std::mem::replace(&mut self.dc_next, dc_prev);
+        self.ws.recycle_f32(old);
+        self.ws.recycle_f32(dh);
+        self.ws.recycle_f32(cache.gates);
+        self.ws.recycle_f32(cache.c);
         // Defer the weight gradients to the episode-level GEMM flush.
         self.pending.push((dz, cache.x, cache.h_prev));
+        self.ws.recycle_f32(cache.c_prev);
         if self.tape.is_empty() {
             self.flush_grads();
         }
+    }
+
+    /// Allocating wrapper over [`Lstm::backward_into`].
+    pub fn backward(&mut self, dh_ext: &[f32]) -> Vec<f32> {
+        let mut dx = Vec::new();
+        self.backward_into(dh_ext, &mut dx);
         dx
     }
 
@@ -182,17 +229,25 @@ impl Lstm {
             return;
         }
         let t = self.pending.len();
-        let mut dz = Matrix::zeros(t, 4 * self.hidden);
-        let mut x = Matrix::zeros(t, self.input);
-        let mut hp = Matrix::zeros(t, self.hidden);
-        for (r, (dzr, xr, hr)) in self.pending.drain(..).enumerate() {
+        let mut dz = self.ws.take_matrix(t, 4 * self.hidden);
+        let mut x = self.ws.take_matrix(t, self.input);
+        let mut hp = self.ws.take_matrix(t, self.hidden);
+        let mut pending = std::mem::take(&mut self.pending);
+        for (r, (dzr, xr, hr)) in pending.drain(..).enumerate() {
             dz.row_mut(r).copy_from_slice(&dzr);
             x.row_mut(r).copy_from_slice(&xr);
             hp.row_mut(r).copy_from_slice(&hr);
+            self.ws.recycle_f32(dzr);
+            self.ws.recycle_f32(xr);
+            self.ws.recycle_f32(hr);
         }
+        self.pending = pending;
         gemm_tn(&mut self.wx.g, &dz, &x);
         gemm_tn(&mut self.wh.g, &dz, &hp);
         col_sum_acc(&mut self.b.g.data, &dz);
+        self.ws.recycle_matrix(dz);
+        self.ws.recycle_matrix(x);
+        self.ws.recycle_matrix(hp);
     }
 
     pub fn tape_len(&self) -> usize {
@@ -377,5 +432,33 @@ mod tests {
         assert_eq!(lstm.wx.g.norm_sq(), 0.0, "grads deferred while tape live");
         lstm.reset();
         assert!(lstm.wx.g.norm_sq() > 0.0, "reset must flush queued grads");
+    }
+
+    #[test]
+    fn hot_path_reuses_buffers_without_changing_values() {
+        // Same seed, hot vs wrapper API: identical h and gradients.
+        let mut r1 = Rng::new(15);
+        let mut r2 = Rng::new(15);
+        let mut a = Lstm::new("a", 3, 4, &mut r1);
+        let mut b = Lstm::new("b", 3, 4, &mut r2);
+        let xs = [[0.3f32, -1.0, 0.5], [1.0, 0.2, -0.7]];
+        let mut dx = Vec::new();
+        for ep in 0..3 {
+            for x in &xs {
+                a.step_hot(x);
+                let hb = b.step(x);
+                assert_eq!(a.h, hb, "ep {ep}");
+            }
+            for _ in 0..xs.len() {
+                a.backward_into(&[1.0, 0.5, -0.5, 0.25], &mut dx);
+                let dxb = b.backward(&[1.0, 0.5, -0.5, 0.25]);
+                assert_eq!(dx, dxb, "ep {ep}");
+            }
+            for (ga, gb) in a.wx.g.data.iter().zip(&b.wx.g.data) {
+                assert_eq!(ga.to_bits(), gb.to_bits(), "ep {ep}");
+            }
+            a.reset();
+            b.reset();
+        }
     }
 }

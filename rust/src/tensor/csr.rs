@@ -23,19 +23,51 @@ impl SparseVec {
 
     /// Build from unsorted pairs, combining duplicate indices by addition.
     pub fn from_pairs(mut pairs: Vec<(usize, f32)>) -> SparseVec {
-        pairs.sort_unstable_by_key(|p| p.0);
         let mut out = SparseVec::new();
-        for (i, v) in pairs {
-            if let Some(&last) = out.idx.last() {
+        out.assign_from_pairs(&mut pairs);
+        out
+    }
+
+    /// `from_pairs` into an existing vector: sorts `pairs` in place (it is
+    /// left in sorted order for recycling) and rebuilds `self` from them,
+    /// reusing idx/val capacity. The workspace-pooled twin of
+    /// [`SparseVec::from_pairs`] — allocation-free once capacities are warm.
+    pub fn assign_from_pairs(&mut self, pairs: &mut Vec<(usize, f32)>) {
+        pairs.sort_unstable_by_key(|p| p.0);
+        self.idx.clear();
+        self.val.clear();
+        for &(i, v) in pairs.iter() {
+            if let Some(&last) = self.idx.last() {
                 if last == i {
-                    *out.val.last_mut().unwrap() += v;
+                    *self.val.last_mut().unwrap() += v;
                     continue;
                 }
             }
-            out.idx.push(i);
-            out.val.push(v);
+            self.idx.push(i);
+            self.val.push(v);
         }
-        out
+    }
+
+    /// Remove all entries, keeping capacity.
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Become a copy of `other`, reusing capacity.
+    pub fn copy_from(&mut self, other: &SparseVec) {
+        self.idx.clear();
+        self.idx.extend_from_slice(&other.idx);
+        self.val.clear();
+        self.val.extend_from_slice(&other.val);
+    }
+
+    /// Append an entry with index strictly greater than the current last
+    /// (caller guarantees ordering — debug-asserted).
+    pub fn push(&mut self, i: usize, v: f32) {
+        debug_assert!(self.idx.last().map_or(true, |&last| last < i));
+        self.idx.push(i);
+        self.val.push(v);
     }
 
     pub fn nnz(&self) -> usize {
@@ -75,9 +107,46 @@ impl SparseVec {
 
     /// self + scale * other.
     pub fn add_scaled(&self, scale: f32, other: &SparseVec) -> SparseVec {
-        let mut pairs: Vec<(usize, f32)> = self.iter().collect();
-        pairs.extend(other.iter().map(|(i, v)| (i, scale * v)));
-        SparseVec::from_pairs(pairs)
+        let mut out = SparseVec::new();
+        self.add_scaled_into(scale, other, &mut out);
+        out
+    }
+
+    /// out = self + other (sorted two-pointer union merge, no allocation
+    /// beyond `out`'s capacity growth).
+    pub fn add_into(&self, other: &SparseVec, out: &mut SparseVec) {
+        self.add_scaled_into(1.0, other, out);
+    }
+
+    /// out = self + scale·other (union merge into a reused buffer).
+    pub fn add_scaled_into(&self, scale: f32, other: &SparseVec, out: &mut SparseVec) {
+        out.clear();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.nnz() && j < other.nnz() {
+            match self.idx[i].cmp(&other.idx[j]) {
+                std::cmp::Ordering::Less => {
+                    out.push(self.idx[i], self.val[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(other.idx[j], scale * other.val[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push(self.idx[i], self.val[i] + scale * other.val[j]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        while i < self.nnz() {
+            out.push(self.idx[i], self.val[i]);
+            i += 1;
+        }
+        while j < other.nnz() {
+            out.push(other.idx[j], scale * other.val[j]);
+            j += 1;
+        }
     }
 
     /// Dot with another sparse vector (two-pointer merge).
@@ -98,18 +167,33 @@ impl SparseVec {
     }
 
     /// Keep the k largest entries by |value| (the paper's top-K truncation).
+    /// In place, allocation-free: a partial selection of the k largest
+    /// followed by an insertion sort back to ascending-index order (k is
+    /// small — ≤ K + 2·K_L in the SDNC).
     pub fn truncate_top_k(&mut self, k: usize) {
         if self.nnz() <= k {
             return;
         }
-        let mut order: Vec<usize> = (0..self.nnz()).collect();
-        order.sort_unstable_by(|&a, &b| {
-            self.val[b].abs().partial_cmp(&self.val[a].abs()).unwrap()
-        });
-        order.truncate(k);
-        order.sort_unstable();
-        self.idx = order.iter().map(|&p| self.idx[p]).collect();
-        self.val = order.iter().map(|&p| self.val[p]).collect();
+        for j in 0..k {
+            let mut best = j;
+            for t in j + 1..self.val.len() {
+                if self.val[t].abs() > self.val[best].abs() {
+                    best = t;
+                }
+            }
+            self.idx.swap(j, best);
+            self.val.swap(j, best);
+        }
+        self.idx.truncate(k);
+        self.val.truncate(k);
+        for a in 1..k {
+            let mut b = a;
+            while b > 0 && self.idx[b - 1] > self.idx[b] {
+                self.idx.swap(b - 1, b);
+                self.val.swap(b - 1, b);
+                b -= 1;
+            }
+        }
     }
 
     /// Densify into a length-n vector.
@@ -149,11 +233,15 @@ impl SparseVec {
 pub struct RowSparse {
     pub cols: usize,
     pub rows: HashMap<usize, Vec<f32>>,
+    /// Recycled row buffers: a cleared/removed row parks here and is reused
+    /// by the next insertion, so steady-state episodes (which touch the
+    /// same number of rows each time) allocate nothing after warm-up.
+    spare: Vec<Vec<f32>>,
 }
 
 impl RowSparse {
     pub fn new(cols: usize) -> RowSparse {
-        RowSparse { cols, rows: HashMap::new() }
+        RowSparse { cols, rows: HashMap::new(), spare: Vec::new() }
     }
 
     pub fn nnz_rows(&self) -> usize {
@@ -164,10 +252,18 @@ impl RowSparse {
         self.rows.get(&i).map(|v| v.as_slice())
     }
 
-    /// Mutable access, inserting a zero row if absent.
+    /// Mutable access, inserting a zero row (recycled if available) if absent.
     pub fn row_mut(&mut self, i: usize) -> &mut Vec<f32> {
         let cols = self.cols;
-        self.rows.entry(i).or_insert_with(|| vec![0.0; cols])
+        let spare = &mut self.spare;
+        self.rows.entry(i).or_insert_with(|| match spare.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.resize(cols, 0.0);
+                v
+            }
+            None => vec![0.0; cols],
+        })
     }
 
     /// row(i) += a * x
@@ -180,9 +276,19 @@ impl RowSparse {
     }
 
     pub fn clear_row(&mut self, i: usize) {
-        self.rows.remove(&i);
+        if let Some(v) = self.rows.remove(&i) {
+            self.spare.push(v);
+        }
     }
 
+    /// Drop all rows, retaining their buffers for reuse.
+    pub fn clear(&mut self) {
+        // HashMap::drain keeps the map's bucket capacity.
+        let spare = &mut self.spare;
+        spare.extend(self.rows.drain().map(|(_, v)| v));
+    }
+
+    /// Live rows only — the spare pool is scratch, not per-episode state.
     pub fn heap_bytes(&self) -> usize {
         self.rows.len() * (self.cols * std::mem::size_of::<f32>() + 64)
     }
@@ -210,14 +316,31 @@ impl SparseLinkMatrix {
         self.rows.get(&i)
     }
 
-    /// Replace row i, truncating to the k_max largest entries.
-    pub fn set_row(&mut self, i: usize, mut row: SparseVec) {
+    /// Remove and return row i by move (for journaled updates that revert
+    /// by re-inserting the old row — no clone needed).
+    pub fn take_row(&mut self, i: usize) -> Option<SparseVec> {
+        self.rows.remove(&i)
+    }
+
+    /// Replace row i, truncating to the k_max largest entries. Returns
+    /// displaced storage (the old row if any, or the new one if it
+    /// truncated to empty) so hot-path callers can recycle it; callers that
+    /// `take_row`-ed first get at most one buffer back.
+    pub fn set_row_recycling(&mut self, i: usize, mut row: SparseVec) -> Option<SparseVec> {
         row.truncate_top_k(self.k_max);
         if row.nnz() == 0 {
-            self.rows.remove(&i);
+            match self.rows.remove(&i) {
+                Some(old) => Some(old),
+                None => Some(row),
+            }
         } else {
-            self.rows.insert(i, row);
+            self.rows.insert(i, row)
         }
+    }
+
+    /// Replace row i, truncating to the k_max largest entries.
+    pub fn set_row(&mut self, i: usize, row: SparseVec) {
+        let _ = self.set_row_recycling(i, row);
     }
 
     /// y = Self · w  for sparse w: only rows in `row_filter` (the candidate

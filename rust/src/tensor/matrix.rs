@@ -1,6 +1,21 @@
-//! Dense row-major f32 matrix and the handful of BLAS-like kernels the
-//! cores need. This fills the role Eigen played in the paper's reference
-//! implementation (Supp E). Hot loops are written to autovectorize.
+//! Dense row-major f32 matrix and the BLAS-like kernels the cores need.
+//! This fills the role Eigen played in the paper's reference implementation
+//! (Supp E).
+//!
+//! The GEMM-family kernels (`gemm`, `gemm_tn`, `gemm_nt`, `gemv`) are
+//! register-blocked: a shared 4×8 micro-kernel accumulates a C tile held in
+//! registers while streaming a packed k-major A panel against rows of B,
+//! with unrolled bounds-check-free inner loops (fixed-size array views) so
+//! LLVM emits wide FMA SIMD. `gemm_nt` additionally packs the B panel
+//! (its k index is the row-contiguous one on *both* operands, so packing
+//! turns the episode-length batched backward into pure streaming loads).
+//! The pre-blocking scalar kernels live on in [`reference`] as the ground
+//! truth for the parity tests and the `benches/kernels.rs` speedup
+//! measurements (BENCH_kernels.json).
+//!
+//! NOTE: blocking reorders float additions relative to [`reference`], so
+//! results agree to ~1e-6 relative, not bitwise. The engine-parity fixture
+//! (rust/tests/engine_parity.rs) is blessed on top of the blocked kernels.
 
 /// Dense row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]
@@ -134,14 +149,138 @@ pub fn cosine(a: &[f32], b: &[f32], eps: f32) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
-// GEMM-like kernels (all accumulate into the output: C += op(A) op(B))
+// Register-blocked GEMM kernels (all accumulate: C += op(A) op(B))
 // ---------------------------------------------------------------------------
 
-/// y += A x  (A: m×n, x: n, y: m)
+/// Micro-tile rows (rows of C per register block).
+const MR: usize = 4;
+/// Micro-tile cols (cols of C per register block).
+const NR: usize = 8;
+
+std::thread_local! {
+    /// Packing scratch (A panel, B panel) reused across calls so the GEMMs
+    /// allocate nothing in steady state (the zero-allocation step property
+    /// extends through the episode-end gradient flush GEMMs).
+    static PACK: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// The shared micro-kernel: `tile[r][c] += Σ_kk ap[kk·MR+r] · b(kk)[c]`
+/// where `b(kk)` is the NR-wide slice at `bdata[bpos + kk·bstride ..]`.
+/// Fixed-size array views keep the inner 4×8 fully unrolled with no bounds
+/// checks; the tile (32 floats) stays in registers across the k loop.
+#[inline(always)]
+fn microkernel_4x8(
+    kr: usize,
+    ap: &[f32],
+    bdata: &[f32],
+    bpos: usize,
+    bstride: usize,
+    tile: &mut [[f32; NR]; MR],
+) {
+    let mut pos = bpos;
+    for kk in 0..kr {
+        let a4: &[f32; MR] = ap[kk * MR..kk * MR + MR].try_into().unwrap();
+        let b8: &[f32; NR] = bdata[pos..pos + NR].try_into().unwrap();
+        for r in 0..MR {
+            for c in 0..NR {
+                tile[r][c] += a4[r] * b8[c];
+            }
+        }
+        pos += bstride;
+    }
+}
+
+/// One MR-row block of C (rows i0..i0+MR over all n cols) accumulated from
+/// the packed k×MR A panel `ap` against B rows at `bdata[kk·bstride..]`.
+fn row_block_4(
+    cdata: &mut [f32],
+    cstride: usize,
+    i0: usize,
+    kr: usize,
+    ap: &[f32],
+    bdata: &[f32],
+    bstride: usize,
+    bcol0: usize,
+    n: usize,
+) {
+    let mut j0 = 0;
+    while j0 + NR <= n {
+        let mut tile = [[0.0f32; NR]; MR];
+        for (r, row) in tile.iter_mut().enumerate() {
+            let base = (i0 + r) * cstride + j0;
+            row.copy_from_slice(&cdata[base..base + NR]);
+        }
+        microkernel_4x8(kr, ap, bdata, bcol0 + j0, bstride, &mut tile);
+        for (r, row) in tile.iter().enumerate() {
+            let base = (i0 + r) * cstride + j0;
+            cdata[base..base + NR].copy_from_slice(row);
+        }
+        j0 += NR;
+    }
+    if j0 < n {
+        // Tail columns: same tile shape, dynamic width.
+        let tw = n - j0;
+        let mut tile = [[0.0f32; NR]; MR];
+        for (r, row) in tile.iter_mut().enumerate() {
+            for (c, t) in row.iter_mut().take(tw).enumerate() {
+                *t = cdata[(i0 + r) * cstride + j0 + c];
+            }
+        }
+        let mut pos = bcol0 + j0;
+        for kk in 0..kr {
+            let a4: &[f32; MR] = ap[kk * MR..kk * MR + MR].try_into().unwrap();
+            let b = &bdata[pos..pos + tw];
+            for (r, row) in tile.iter_mut().enumerate() {
+                for (c, &bv) in b.iter().enumerate() {
+                    row[c] += a4[r] * bv;
+                }
+            }
+            pos += bstride;
+        }
+        for (r, row) in tile.iter().enumerate() {
+            for (c, t) in row.iter().take(tw).enumerate() {
+                cdata[(i0 + r) * cstride + j0 + c] = *t;
+            }
+        }
+    }
+}
+
+/// y += A x  (A: m×n, x: n, y: m). Blocked over 4 rows × 8 lanes: x is
+/// loaded once per 4 output elements instead of once per element. The
+/// per-row summation order matches [`dot`], so results are bit-identical
+/// to the reference.
 pub fn gemv(y: &mut [f32], a: &Matrix, x: &[f32]) {
     assert_eq!(a.cols, x.len());
     assert_eq!(a.rows, y.len());
-    for i in 0..a.rows {
+    let n = a.cols;
+    let nfull = n - n % NR;
+    let m_main = a.rows - a.rows % MR;
+    let mut i0 = 0;
+    while i0 < m_main {
+        let rows: [&[f32]; MR] = [a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3)];
+        let mut acc = [[0.0f32; NR]; MR];
+        let mut kk = 0;
+        while kk < nfull {
+            let xv: &[f32; NR] = x[kk..kk + NR].try_into().unwrap();
+            for r in 0..MR {
+                let av: &[f32; NR] = rows[r][kk..kk + NR].try_into().unwrap();
+                for l in 0..NR {
+                    acc[r][l] += av[l] * xv[l];
+                }
+            }
+            kk += NR;
+        }
+        for r in 0..MR {
+            let mut s = acc[r].iter().sum::<f32>();
+            for k in nfull..n {
+                s += rows[r][k] * x[k];
+            }
+            y[i0 + r] += s;
+        }
+        i0 += MR;
+    }
+    for i in m_main..a.rows {
         y[i] += dot(a.row(i), x);
     }
 }
@@ -155,18 +294,43 @@ pub fn gemv_t(y: &mut [f32], a: &Matrix, x: &[f32]) {
     }
 }
 
-/// C += A B  (A: m×k, B: k×n, C: m×n); ikj loop order for cache-friendliness.
+/// C += A B  (A: m×k, B: k×n, C: m×n).
+///
+/// Register-blocked: per 4-row block of C the A sub-panel is packed
+/// k-major (one strided read per element, then pure streaming), and each
+/// 4×8 C tile is held in registers while B rows stream through the shared
+/// micro-kernel.
 pub fn gemm(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
-    let n = b.cols;
-    for i in 0..a.rows {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let m_main = m - m % MR;
+    PACK.with(|p| {
+        let mut packs = p.borrow_mut();
+        let ap = &mut packs.0;
+        let mut i0 = 0;
+        while i0 < m_main {
+            ap.clear();
+            for kk in 0..k {
+                for r in 0..MR {
+                    ap.push(a.get(i0 + r, kk));
+                }
+            }
+            row_block_4(&mut c.data, n, i0, k, ap, &b.data, n, 0, n);
+            i0 += MR;
+        }
+    });
+    // Tail rows: axpy sweeps (the reference kernel's shape).
+    for i in m_main..m {
         let crow = &mut c.data[i * n..(i + 1) * n];
-        for k in 0..a.cols {
-            let aik = a.get(i, k);
+        for kk in 0..k {
+            let aik = a.get(i, kk);
             if aik != 0.0 {
-                axpy(crow, aik, b.row(k));
+                axpy(crow, aik, b.row(kk));
             }
         }
     }
@@ -187,15 +351,41 @@ pub fn outer_acc(c: &mut Matrix, a: &[f32], b: &[f32]) {
 /// `Σ_t A(t,:) B(t,:)ᵀ` done as one GEMM. The layers' deferred backward
 /// passes use it to turn T per-step rank-1 weight-gradient updates into a
 /// single cache-friendly matrix multiply over the whole episode.
+///
+/// Blocked exactly like [`gemm`]; the A panel pack reads *contiguous* row
+/// segments here (A's k index is its row index), so the episode-length
+/// backward is pure streaming.
 pub fn gemm_tn(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     assert_eq!(a.rows, b.rows);
     assert_eq!(c.rows, a.cols);
     assert_eq!(c.cols, b.cols);
-    for t in 0..a.rows {
-        let arow = a.row(t);
-        for (i, &ati) in arow.iter().enumerate() {
-            if ati != 0.0 {
-                axpy(c.row_mut(i), ati, b.row(t));
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let m_main = m - m % MR;
+    PACK.with(|p| {
+        let mut packs = p.borrow_mut();
+        let ap = &mut packs.0;
+        let mut i0 = 0;
+        while i0 < m_main {
+            ap.clear();
+            for kk in 0..k {
+                ap.extend_from_slice(&a.data[kk * m + i0..kk * m + i0 + MR]);
+            }
+            row_block_4(&mut c.data, n, i0, k, ap, &b.data, n, 0, n);
+            i0 += MR;
+        }
+    });
+    // Tail rows of C: rank-1 sweeps restricted to the leftover A columns.
+    if m_main < m {
+        for kk in 0..k {
+            let arow = a.row(kk);
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (i, &ati) in arow.iter().enumerate().skip(m_main) {
+                if ati != 0.0 {
+                    axpy(&mut c.data[i * n..(i + 1) * n], ati, brow);
+                }
             }
         }
     }
@@ -205,13 +395,81 @@ pub fn gemm_tn(c: &mut Matrix, a: &Matrix, b: &Matrix) {
 ///
 /// The batched linear forward Y = X Wᵀ (X: T×in, W: out×in) is this with
 /// no transposition of the stored row-major weights.
+///
+/// Packed-panel path: both operands are row-contiguous in k, so all 8-row
+/// B panels are packed k-major up front (once — they are reused by every
+/// row block) and each 4-row A panel is packed per block; the shared
+/// micro-kernel then streams both packs with stride NR.
 pub fn gemm_nt(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     assert_eq!(a.cols, b.cols);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.rows);
-    for i in 0..a.rows {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        return;
+    }
+    let m_main = m - m % MR;
+    let n_main = n - n % NR;
+    if m_main > 0 {
+        PACK.with(|p| {
+            let mut packs = p.borrow_mut();
+            let (ap, bp) = &mut *packs;
+            // Pre-pack every full 8-row B panel k-major, exactly once — the
+            // panels are reused by all m/4 row blocks, so packing here keeps
+            // total pack traffic at O(m·k + k·n) instead of O(m·k·n/4).
+            bp.clear();
+            let mut j0 = 0;
+            while j0 < n_main {
+                for kk in 0..k {
+                    for cc in 0..NR {
+                        bp.push(b.get(j0 + cc, kk));
+                    }
+                }
+                j0 += NR;
+            }
+            let mut i0 = 0;
+            while i0 < m_main {
+                ap.clear();
+                for kk in 0..k {
+                    for r in 0..MR {
+                        ap.push(a.get(i0 + r, kk));
+                    }
+                }
+                let mut j0 = 0;
+                let mut panel = 0usize;
+                while j0 < n_main {
+                    let bpanel = &bp[panel * k * NR..(panel + 1) * k * NR];
+                    let mut tile = [[0.0f32; NR]; MR];
+                    for (r, row) in tile.iter_mut().enumerate() {
+                        let base = (i0 + r) * n + j0;
+                        row.copy_from_slice(&c.data[base..base + NR]);
+                    }
+                    microkernel_4x8(k, ap, bpanel, 0, NR, &mut tile);
+                    for (r, row) in tile.iter().enumerate() {
+                        let base = (i0 + r) * n + j0;
+                        c.data[base..base + NR].copy_from_slice(row);
+                    }
+                    j0 += NR;
+                    panel += 1;
+                }
+                // Tail B rows: scalar dots against the 4 A rows.
+                for cc in n_main..n {
+                    let brow = b.row(cc);
+                    for r in 0..MR {
+                        c.data[(i0 + r) * n + cc] += dot(a.row(i0 + r), brow);
+                    }
+                }
+                i0 += MR;
+            }
+        });
+    }
+    // Tail A rows: the reference kernel's per-element dots.
+    for i in m_main..m {
         let arow = a.row(i);
-        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
+        let crow = &mut c.data[i * n..(i + 1) * n];
         for (j, cj) in crow.iter_mut().enumerate() {
             *cj += dot(arow, b.row(j));
         }
@@ -223,6 +481,77 @@ pub fn col_sum_acc(y: &mut [f32], a: &Matrix) {
     assert_eq!(y.len(), a.cols);
     for t in 0..a.rows {
         axpy(y, 1.0, a.row(t));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference kernels
+// ---------------------------------------------------------------------------
+
+pub mod reference {
+    //! The pre-blocking scalar kernels, kept verbatim as ground truth.
+    //!
+    //! Compiled into the library (not `#[cfg(test)]`) because they serve
+    //! two callers: the odd-shape parity tests in this module, and
+    //! `benches/kernels.rs`, which measures blocked-vs-reference GFLOP/s
+    //! into BENCH_kernels.json — the perf-regression floor every future
+    //! kernel change is judged against. Nothing on the hot path calls them.
+
+    use super::{axpy, dot, Matrix};
+
+    /// y += A x, one [`dot`] per row.
+    pub fn gemv(y: &mut [f32], a: &Matrix, x: &[f32]) {
+        assert_eq!(a.cols, x.len());
+        assert_eq!(a.rows, y.len());
+        for i in 0..a.rows {
+            y[i] += dot(a.row(i), x);
+        }
+    }
+
+    /// C += A B; ikj loop order, axpy sweeps.
+    pub fn gemm(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.cols, b.rows);
+        assert_eq!(c.rows, a.rows);
+        assert_eq!(c.cols, b.cols);
+        let n = b.cols;
+        for i in 0..a.rows {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for k in 0..a.cols {
+                let aik = a.get(i, k);
+                if aik != 0.0 {
+                    axpy(crow, aik, b.row(k));
+                }
+            }
+        }
+    }
+
+    /// C += Aᵀ B as a stack of rank-1 axpy sweeps.
+    pub fn gemm_tn(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(c.rows, a.cols);
+        assert_eq!(c.cols, b.cols);
+        for t in 0..a.rows {
+            let arow = a.row(t);
+            for (i, &ati) in arow.iter().enumerate() {
+                if ati != 0.0 {
+                    axpy(c.row_mut(i), ati, b.row(t));
+                }
+            }
+        }
+    }
+
+    /// C += A Bᵀ, one [`dot`] per output element.
+    pub fn gemm_nt(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.cols, b.cols);
+        assert_eq!(c.rows, a.rows);
+        assert_eq!(c.cols, b.rows);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj += dot(arow, b.row(j));
+            }
+        }
     }
 }
 
@@ -258,6 +587,7 @@ pub fn softmax_backward(y: &[f32], dy: &[f32], dx: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn matmul_matches_naive() {
@@ -370,7 +700,9 @@ mod tests {
         for i in 0..2 {
             let mut want = vec![0.0; 4];
             gemv(&mut want, &b, a.row(i));
-            assert_eq!(c.row(i), &want[..]);
+            for (x, y) in c.row(i).iter().zip(&want) {
+                assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+            }
         }
     }
 
@@ -380,5 +712,117 @@ mod tests {
         let mut y = vec![1.0, 0.0];
         col_sum_acc(&mut y, &a);
         assert_eq!(y, vec![10.0, 12.0]);
+    }
+
+    // -- blocked vs reference parity across odd shapes ----------------------
+
+    fn random_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    /// Shapes that exercise every tile-edge case: zero/unit dims, every
+    /// residue class of the 4-row and 8-col blocking, and > one full block.
+    const DIMS: [usize; 9] = [0, 1, 2, 3, 4, 5, 7, 8, 17];
+
+    fn assert_close(tag: &str, got: &Matrix, want: &Matrix) {
+        assert_eq!(got.rows, want.rows);
+        assert_eq!(got.cols, want.cols);
+        for (i, (x, y)) in got.data.iter().zip(&want.data).enumerate() {
+            let tol = 1e-5 * y.abs().max(1.0);
+            assert!((x - y).abs() <= tol, "{tag}[{i}]: blocked {x} vs reference {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_parity_odd_shapes() {
+        let mut rng = Rng::new(101);
+        for &m in &DIMS {
+            for &k in &DIMS {
+                for &n in &DIMS {
+                    let a = random_matrix(m, k, &mut rng);
+                    let b = random_matrix(k, n, &mut rng);
+                    // Non-zero C start exercises accumulation semantics.
+                    let mut c = random_matrix(m, n, &mut rng);
+                    let mut want = c.clone();
+                    gemm(&mut c, &a, &b);
+                    reference::gemm(&mut want, &a, &b);
+                    assert_close(&format!("gemm {m}x{k}x{n}"), &c, &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tn_parity_odd_shapes() {
+        let mut rng = Rng::new(102);
+        for &k in &DIMS {
+            for &m in &DIMS {
+                for &n in &DIMS {
+                    let a = random_matrix(k, m, &mut rng);
+                    let b = random_matrix(k, n, &mut rng);
+                    let mut c = random_matrix(m, n, &mut rng);
+                    let mut want = c.clone();
+                    gemm_tn(&mut c, &a, &b);
+                    reference::gemm_tn(&mut want, &a, &b);
+                    assert_close(&format!("gemm_tn {k}x{m}x{n}"), &c, &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_parity_odd_shapes() {
+        let mut rng = Rng::new(103);
+        for &m in &DIMS {
+            for &k in &DIMS {
+                for &n in &DIMS {
+                    let a = random_matrix(m, k, &mut rng);
+                    let b = random_matrix(n, k, &mut rng);
+                    let mut c = random_matrix(m, n, &mut rng);
+                    let mut want = c.clone();
+                    gemm_nt(&mut c, &a, &b);
+                    reference::gemm_nt(&mut want, &a, &b);
+                    assert_close(&format!("gemm_nt {m}x{k}x{n}"), &c, &want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_parity_odd_shapes() {
+        let mut rng = Rng::new(104);
+        for &m in &DIMS {
+            for &n in &DIMS {
+                let a = random_matrix(m, n, &mut rng);
+                let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let mut y: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+                let mut want = y.clone();
+                gemv(&mut y, &a, &x);
+                reference::gemv(&mut want, &a, &x);
+                for (g, w) in y.iter().zip(&want) {
+                    // gemv keeps dot's summation order: exact match.
+                    assert_eq!(g.to_bits(), w.to_bits(), "gemv {m}x{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_handle_lstm_sized_shapes() {
+        // The exact shape class the LSTM backward flush produces
+        // (T×4H ᵀ· T×(I|H)) at a reduced scale, against reference.
+        let mut rng = Rng::new(105);
+        let (t, fourh, i_dim) = (23, 36, 19);
+        let dz = random_matrix(t, fourh, &mut rng);
+        let x = random_matrix(t, i_dim, &mut rng);
+        let mut g = Matrix::zeros(fourh, i_dim);
+        let mut want = Matrix::zeros(fourh, i_dim);
+        gemm_tn(&mut g, &dz, &x);
+        reference::gemm_tn(&mut want, &dz, &x);
+        assert_close("lstm flush", &g, &want);
     }
 }

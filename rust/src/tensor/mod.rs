@@ -1,4 +1,6 @@
 //! Dense and sparse tensor kernels (the role Eigen played in the paper's
-//! Torch implementation).
+//! Torch implementation), plus the reusable scratch arena the step hot
+//! path draws its buffers from.
 pub mod csr;
 pub mod matrix;
+pub mod workspace;

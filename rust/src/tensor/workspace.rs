@@ -1,0 +1,312 @@
+//! Reusable scratch arena for the step hot path.
+//!
+//! Every per-step buffer the cores, engine and layers used to allocate
+//! fresh (`vec![0.0; ..]`, `to_vec()`, `SparseVec::from_pairs`) now comes
+//! out of a [`Workspace`] and is recycled back when its step is
+//! backpropagated. After a warm-up episode the pools hold every buffer the
+//! episode shape needs, so steady-state episode execution performs **zero
+//! heap allocations** (asserted by `rust/tests/zero_alloc.rs`).
+//!
+//! Design rules (see DESIGN.md "Kernels & workspace"):
+//!
+//! * A workspace is **purely an optimization**: buffers handed out are
+//!   ordinary `Vec`s, zeroed/cleared exactly as a fresh allocation would
+//!   be, so *which* workspace serves a call can never change numerics.
+//! * `f32`/`usize` buffers are pooled in power-of-two capacity classes: a
+//!   `take_*(len)` is served by a buffer of capacity ≥ `len`'s class, so a
+//!   small recycled buffer is never grown for a large request (which would
+//!   reallocate every episode).
+//! * Buffers must be recycled to the workspace they were taken from.
+//!   Ownership is therefore simple: each core owns one `Workspace` and
+//!   threads `&mut` through its engine calls; `Lstm`/`Linear` own private
+//!   workspaces because their tape buffers never escape the layer.
+//! * Fixed-shape per-step scratch (controller concatenation buffers, dense
+//!   gradient accumulators) uses plain persistent `Vec` fields instead —
+//!   pooling only pays where buffers live on a tape with O(T) of them.
+
+use super::csr::SparseVec;
+use super::matrix::Matrix;
+
+/// Number of power-of-two capacity classes (class c holds buffers with
+/// capacity ≥ 2^c); 48 covers any realistic allocation.
+const CLASSES: usize = 48;
+
+/// Capacity class for a request of `len` elements: smallest c with
+/// 2^c ≥ len.
+#[inline]
+fn class_of_len(len: usize) -> usize {
+    (len.max(1).next_power_of_two().trailing_zeros() as usize).min(CLASSES - 1)
+}
+
+/// Capacity class a buffer with `cap` elements can *serve*: largest c with
+/// 2^c ≤ cap.
+#[inline]
+fn class_of_cap(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    ((usize::BITS - 1 - cap.leading_zeros()) as usize).min(CLASSES - 1)
+}
+
+/// A single-class LIFO free list for arbitrary element types. Buffer
+/// capacities grow monotonically toward the maximum ever requested, so a
+/// deterministic take/recycle cycle stops allocating after warm-up.
+#[derive(Debug, Default)]
+pub struct Pool<T> {
+    free: Vec<Vec<T>>,
+}
+
+impl<T> Pool<T> {
+    pub fn new() -> Pool<T> {
+        Pool { free: Vec::new() }
+    }
+
+    /// Pop a cleared buffer (empty, capacity retained) or a fresh one.
+    pub fn take(&mut self) -> Vec<T> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    pub fn recycle(&mut self, mut v: Vec<T>) {
+        v.clear();
+        if v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.free.iter().map(|v| v.capacity() * std::mem::size_of::<T>()).sum::<usize>()
+            + self.free.capacity() * std::mem::size_of::<Vec<T>>()
+    }
+}
+
+/// The scratch arena. See module docs for ownership rules.
+#[derive(Debug)]
+pub struct Workspace {
+    f32s: [Vec<Vec<f32>>; CLASSES],
+    usizes: [Vec<Vec<usize>>; CLASSES],
+    pairs: Pool<(usize, f32)>,
+    sparse: Vec<SparseVec>,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace {
+            f32s: std::array::from_fn(|_| Vec::new()),
+            usizes: std::array::from_fn(|_| Vec::new()),
+            pairs: Pool::new(),
+            sparse: Vec::new(),
+        }
+    }
+
+    // -- f32 buffers --------------------------------------------------------
+
+    fn pop_f32(&mut self, len: usize) -> Vec<f32> {
+        let c = class_of_len(len);
+        self.f32s[c].pop().unwrap_or_else(|| Vec::with_capacity(1usize << c))
+    }
+
+    /// A zero-filled buffer of exactly `len` elements — drop-in for
+    /// `vec![0.0; len]`.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.pop_f32(len);
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// A copy of `src` — drop-in for `src.to_vec()`.
+    pub fn take_f32_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.pop_f32(src.len());
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// An empty buffer of capacity ≥ `cap_hint` (for push-style building).
+    /// The hint must match the eventual fill size's class, or the buffer
+    /// will migrate classes between take and recycle and miss the pool.
+    pub fn take_f32_empty(&mut self, cap_hint: usize) -> Vec<f32> {
+        let c = class_of_len(cap_hint);
+        let mut v = self.f32s[c].pop().unwrap_or_else(|| Vec::with_capacity(1usize << c));
+        v.clear();
+        v
+    }
+
+    pub fn recycle_f32(&mut self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let c = class_of_cap(v.capacity());
+        self.f32s[c].push(v);
+    }
+
+    // -- usize buffers ------------------------------------------------------
+
+    /// An empty index buffer of capacity ≥ `cap_hint`.
+    pub fn take_usize(&mut self, cap_hint: usize) -> Vec<usize> {
+        let c = class_of_len(cap_hint);
+        let mut v = self.usizes[c].pop().unwrap_or_else(|| Vec::with_capacity(1usize << c));
+        v.clear();
+        v
+    }
+
+    pub fn recycle_usize(&mut self, v: Vec<usize>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let c = class_of_cap(v.capacity());
+        self.usizes[c].push(v);
+    }
+
+    // -- (index, value) pair buffers (SparseVec assembly) -------------------
+
+    pub fn take_pairs(&mut self) -> Vec<(usize, f32)> {
+        self.pairs.take()
+    }
+
+    pub fn recycle_pairs(&mut self, v: Vec<(usize, f32)>) {
+        self.pairs.recycle(v);
+    }
+
+    // -- sparse vectors -----------------------------------------------------
+
+    /// An empty sparse vector (idx/val capacities retained from recycling).
+    pub fn take_sparse(&mut self) -> SparseVec {
+        let mut sv = self.sparse.pop().unwrap_or_default();
+        sv.clear();
+        sv
+    }
+
+    /// A copy of `src`.
+    pub fn take_sparse_copy(&mut self, src: &SparseVec) -> SparseVec {
+        let mut sv = self.take_sparse();
+        sv.copy_from(src);
+        sv
+    }
+
+    pub fn recycle_sparse(&mut self, mut sv: SparseVec) {
+        // Capacity-less shells (e.g. `mem::take` leftovers of reset
+        // recurrent state) are dropped, not pooled: pooling them would make
+        // a later take grow a 0-capacity buffer — an allocation — while the
+        // matching real buffer idles deeper in the stack.
+        if sv.idx.capacity() == 0 && sv.val.capacity() == 0 {
+            return;
+        }
+        sv.clear();
+        self.sparse.push(sv);
+    }
+
+    // -- matrices -----------------------------------------------------------
+
+    /// A zero-filled rows×cols matrix backed by the f32 pool.
+    pub fn take_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_f32(rows * cols))
+    }
+
+    pub fn recycle_matrix(&mut self, m: Matrix) {
+        self.recycle_f32(m.data);
+    }
+
+    // -- accounting ---------------------------------------------------------
+
+    /// Bytes parked in the pools (scratch, not per-episode state).
+    pub fn heap_bytes(&self) -> usize {
+        let f: usize = self
+            .f32s
+            .iter()
+            .map(|c| c.iter().map(|v| v.capacity() * 4).sum::<usize>())
+            .sum();
+        let u: usize = self
+            .usizes
+            .iter()
+            .map(|c| c.iter().map(|v| v.capacity() * std::mem::size_of::<usize>()).sum::<usize>())
+            .sum();
+        let s: usize = self.sparse.iter().map(|v| v.heap_bytes()).sum();
+        f + u + s + self.pairs.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_f32_is_zeroed_after_reuse() {
+        let mut ws = Workspace::new();
+        let mut v = ws.take_f32(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        ws.recycle_f32(v);
+        let v2 = ws.take_f32(8);
+        assert_eq!(v2, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn classes_keep_small_requests_off_big_buffers() {
+        let mut ws = Workspace::new();
+        let big = ws.take_f32(1000);
+        let big_ptr = big.as_ptr();
+        ws.recycle_f32(big);
+        // A small request must not consume the big buffer's class.
+        let small = ws.take_f32(4);
+        assert_ne!(small.as_ptr(), big_ptr);
+        // The big request gets its buffer back.
+        let big2 = ws.take_f32(900);
+        assert_eq!(big2.as_ptr(), big_ptr);
+    }
+
+    #[test]
+    fn steady_state_take_recycle_does_not_allocate() {
+        let mut ws = Workspace::new();
+        // Warm up.
+        for _ in 0..3 {
+            let a = ws.take_f32(100);
+            let b = ws.take_f32_copy(&[1.0; 33]);
+            let s = ws.take_sparse();
+            ws.recycle_sparse(s);
+            ws.recycle_f32(a);
+            ws.recycle_f32(b);
+        }
+        let before = crate::util::alloc::thread_alloc_count();
+        for _ in 0..10 {
+            let a = ws.take_f32(100);
+            let b = ws.take_f32_copy(&[1.0; 33]);
+            let s = ws.take_sparse();
+            ws.recycle_sparse(s);
+            ws.recycle_f32(a);
+            ws.recycle_f32(b);
+        }
+        assert_eq!(crate::util::alloc::thread_alloc_count() - before, 0);
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let mut ws = Workspace::new();
+        let m = ws.take_matrix(3, 4);
+        assert_eq!(m.rows, 3);
+        assert_eq!(m.cols, 4);
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        ws.recycle_matrix(m);
+        let m2 = ws.take_matrix(2, 5);
+        assert_eq!(m2.data.len(), 10);
+    }
+
+    #[test]
+    fn class_math() {
+        assert_eq!(class_of_len(1), 0);
+        assert_eq!(class_of_len(2), 1);
+        assert_eq!(class_of_len(3), 2);
+        assert_eq!(class_of_len(1024), 10);
+        assert_eq!(class_of_cap(1024), 10);
+        assert_eq!(class_of_cap(1500), 10);
+        assert_eq!(class_of_cap(2048), 11);
+        // A class-c buffer always satisfies a class-c request.
+        for len in 1..200usize {
+            let c = class_of_len(len);
+            assert!((1usize << c) >= len);
+        }
+    }
+}

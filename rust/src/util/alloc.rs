@@ -16,6 +16,27 @@ static PEAK: AtomicUsize = AtomicUsize::new(0);
 /// Total bytes ever allocated (monotonic).
 static TOTAL: AtomicUsize = AtomicUsize::new(0);
 
+std::thread_local! {
+    /// Per-thread count of allocation events (alloc + realloc), for the
+    /// zero-allocation hot-path tests: the global counters are polluted by
+    /// concurrently running tests, a thread-local count is not. Const-init
+    /// so first access inside the allocator itself cannot recurse.
+    static THREAD_ALLOCS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+#[inline]
+fn bump_thread_allocs() {
+    // try_with: TLS may be unavailable during thread teardown.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// Number of allocation events performed by the calling thread since it
+/// started. Diff around a region to prove the region allocates nothing
+/// (see rust/tests/zero_alloc.rs).
+pub fn thread_alloc_count() -> usize {
+    THREAD_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
 /// Global allocator that counts bytes. Install with:
 /// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
 /// (done in `lib.rs` so every binary in the crate gets it).
@@ -47,6 +68,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 
 #[inline]
 fn track_alloc(size: usize) {
+    bump_thread_allocs();
     TOTAL.fetch_add(size, Ordering::Relaxed);
     let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
     // Racy max update is fine: benches are effectively single-threaded.
@@ -131,6 +153,19 @@ mod tests {
         drop(v);
         // After drop, live overhead should fall back near zero.
         assert!(region.live_overhead() < 1 << 16);
+    }
+
+    #[test]
+    fn thread_alloc_count_sees_local_allocs_only() {
+        let before = thread_alloc_count();
+        let v = vec![0u8; 4096];
+        drop(v);
+        let here = thread_alloc_count() - before;
+        assert!(here >= 1, "local alloc not counted");
+        // A no-op region counts zero even if other test threads allocate.
+        let before = thread_alloc_count();
+        std::hint::black_box(());
+        assert_eq!(thread_alloc_count() - before, 0);
     }
 
     #[test]

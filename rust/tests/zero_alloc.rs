@@ -1,0 +1,126 @@
+//! The zero-allocation steady-state guarantee: after warm-up episodes have
+//! populated the workspace pools, a SAM or SDNC step — `forward_into` +
+//! `backward` — performs **zero** heap allocations.
+//!
+//! Measurement uses the per-thread allocation-event counter in
+//! `util::alloc` (the process-wide counters are polluted by concurrently
+//! running tests), diffed around each core call so the loss computation
+//! between steps stays out of scope.
+//!
+//! The same runs double as a numerics guard: buffer recycling must not
+//! perturb a single output bit relative to the first (cold, allocating)
+//! episode.
+
+use sam::nn::loss::sigmoid_xent;
+use sam::prelude::*;
+use sam::util::alloc::thread_alloc_count;
+
+/// Episodes to run before measuring. The pools converge after one episode
+/// for stack-disciplined buffers; a few extra cover tape-held buffers that
+/// permute through the pools before every one has grown to its largest
+/// role.
+const WARMUP_EPISODES: usize = 4;
+
+fn run_core(mut core: Box<dyn Core>, x_dim: usize, y_dim: usize, label: &str) {
+    let mut rng = Rng::new(1234);
+    let t_len = 8;
+    let xs: Vec<Vec<f32>> = (0..t_len)
+        .map(|_| (0..x_dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let ts: Vec<Vec<f32>> = (0..t_len)
+        .map(|_| (0..y_dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+        .collect();
+
+    // Long-lived across episodes: the output buffer and dy staging reach
+    // steady capacity during warm-up like everything else.
+    let mut y: Vec<f32> = Vec::new();
+    let mut dys: Vec<Vec<f32>> = Vec::new();
+    let mut first_bits: Vec<Vec<u32>> = Vec::new();
+
+    for ep in 0..=WARMUP_EPISODES {
+        core.zero_grads();
+        core.reset();
+        dys.clear();
+        let mut allocs = 0usize;
+        let mut bits: Vec<Vec<u32>> = Vec::new();
+        for (x, t) in xs.iter().zip(&ts) {
+            let before = thread_alloc_count();
+            core.forward_into(x, &mut y);
+            allocs += thread_alloc_count() - before;
+            bits.push(y.iter().map(|v| v.to_bits()).collect());
+            dys.push(sigmoid_xent(&y, t).1);
+        }
+        for dy in dys.iter().rev() {
+            let before = thread_alloc_count();
+            core.backward(dy);
+            allocs += thread_alloc_count() - before;
+        }
+        core.end_episode();
+        if ep == 0 {
+            first_bits = bits;
+        } else {
+            assert_eq!(
+                first_bits, bits,
+                "{label}: buffer recycling changed outputs in episode {ep}"
+            );
+        }
+        if ep == WARMUP_EPISODES {
+            assert_eq!(
+                allocs, 0,
+                "{label}: steady-state episode performed {allocs} allocations \
+                 across {t_len} forward_into + {t_len} backward calls"
+            );
+        }
+    }
+}
+
+fn cfg(x_dim: usize, y_dim: usize) -> CoreConfig {
+    CoreConfig {
+        x_dim,
+        y_dim,
+        hidden: 16,
+        heads: 2,
+        word: 8,
+        mem_words: 64,
+        k: 3,
+        k_l: 4,
+        ann: AnnKind::Linear,
+        seed: 77,
+        ..CoreConfig::default()
+    }
+}
+
+#[test]
+fn sam_steps_allocate_nothing_after_warmup() {
+    let mut rng = Rng::new(7);
+    let core = build_core(CoreKind::Sam, &cfg(5, 4), &mut rng);
+    run_core(core, 5, 4, "sam");
+}
+
+#[test]
+fn sdnc_steps_allocate_nothing_after_warmup() {
+    let mut rng = Rng::new(8);
+    let core = build_core(CoreKind::Sdnc, &cfg(5, 4), &mut rng);
+    run_core(core, 5, 4, "sdnc");
+}
+
+#[test]
+fn sam_steps_stay_lean_at_larger_scale() {
+    // A second shape point (more heads, bigger memory) so the guarantee
+    // isn't an artifact of one tiny configuration.
+    let mut rng = Rng::new(9);
+    let c = CoreConfig {
+        x_dim: 6,
+        y_dim: 6,
+        hidden: 32,
+        heads: 4,
+        word: 16,
+        mem_words: 256,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 78,
+        ..CoreConfig::default()
+    };
+    let core = build_core(CoreKind::Sam, &c, &mut rng);
+    run_core(core, 6, 6, "sam-large");
+}
