@@ -1,0 +1,141 @@
+//! Serving-runtime perf harness: per-step latency percentiles and batched
+//! session throughput for the shared-weight inference runtime.
+//!
+//! Writes `BENCH_serve.json` at the repo root (CI uploads it as an
+//! artifact next to BENCH_kernels.json / BENCH_step.json):
+//!
+//! * p50/p95/p99 single-step latency through `SessionManager::step`;
+//! * session-steps/second through the batched `step_many` tick at several
+//!   concurrency levels (the coalesced-GEMM payoff);
+//! * per-session state bytes vs the single shared parameter copy.
+//!
+//!     cargo bench --bench serve [-- --smoke] [-- --sessions 64]
+
+use sam::bench::{fmt_bytes, save_bench_root, Table};
+use sam::cores::{CoreConfig, CoreKind};
+use sam::prelude::*;
+use sam::serving::{build_infer_model, InferModel as _, SessionConfig, SessionManager};
+use sam::util::json::Json;
+use sam::util::timer::Timer;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let i = ((sorted.len() - 1) as f64 * p) as usize;
+    sorted[i]
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let steps = args.usize_or("steps", if smoke { 64 } else { 512 });
+    let mem_words = args.usize_or("memory", if smoke { 1 << 10 } else { 1 << 14 });
+    let levels: Vec<usize> = if smoke { vec![1, 8] } else { vec![1, 8, 32, 128] };
+    let max_sessions = args.usize_or("sessions", *levels.last().unwrap());
+
+    let cfg = CoreConfig {
+        x_dim: 16,
+        y_dim: 16,
+        hidden: if smoke { 32 } else { 100 },
+        heads: 4,
+        word: 32,
+        mem_words,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 21,
+        ..CoreConfig::default()
+    };
+    let mut rng = Rng::new(21);
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let params_bytes = model.params_heap_bytes();
+    let mgr = SessionManager::new(model, SessionConfig::default());
+
+    // ---- single-step latency ---------------------------------------------
+    let id = mgr.open_seeded(Some(1));
+    let mut xrng = Rng::new(22);
+    let mut y = Vec::new();
+    // Warm the pools before timing.
+    for _ in 0..8 {
+        let x: Vec<f32> = (0..cfg.x_dim).map(|_| xrng.normal()).collect();
+        mgr.step(id, &x, &mut y).unwrap();
+    }
+    let mut lat = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let x: Vec<f32> = (0..cfg.x_dim).map(|_| xrng.normal()).collect();
+        let t = Timer::start();
+        mgr.step(id, &x, &mut y).unwrap();
+        lat.push(t.elapsed_s());
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p95, p99) = (
+        percentile(&lat, 0.5) * 1e6,
+        percentile(&lat, 0.95) * 1e6,
+        percentile(&lat, 0.99) * 1e6,
+    );
+    println!(
+        "single-step latency (N={mem_words}): p50 {p50:.1} µs  p95 {p95:.1} µs  p99 {p99:.1} µs"
+    );
+
+    // ---- batched throughput at several concurrency levels ----------------
+    let mut table = Table::new(&["sessions", "ticks", "steps/s", "state/session"]);
+    let mut level_rows = Vec::new();
+    let mut pool_ids: Vec<u64> = Vec::new();
+    for &n in levels.iter().filter(|&&n| n <= max_sessions) {
+        while pool_ids.len() < n {
+            pool_ids.push(mgr.open_seeded(Some(100 + pool_ids.len() as u64)));
+        }
+        let ids = &pool_ids[..n];
+        let ticks = (steps / n).max(4);
+        let mut outs = Vec::new();
+        // Warm tick.
+        let reqs: Vec<(u64, Vec<f32>)> = ids
+            .iter()
+            .map(|&id| (id, (0..cfg.x_dim).map(|_| xrng.normal()).collect()))
+            .collect();
+        mgr.step_many(&reqs, &mut outs);
+        let t = Timer::start();
+        for _ in 0..ticks {
+            let reqs: Vec<(u64, Vec<f32>)> = ids
+                .iter()
+                .map(|&id| (id, (0..cfg.x_dim).map(|_| xrng.normal()).collect()))
+                .collect();
+            mgr.step_many(&reqs, &mut outs);
+            for o in &outs {
+                assert!(o.is_ok(), "bench step failed: {o:?}");
+            }
+        }
+        let el = t.elapsed_s();
+        let steps_per_s = (ticks * n) as f64 / el;
+        let per_session = mgr.state_heap_bytes() / mgr.session_count();
+        table.row(vec![
+            n.to_string(),
+            ticks.to_string(),
+            format!("{steps_per_s:.0}"),
+            fmt_bytes(per_session),
+        ]);
+        level_rows.push(Json::obj(vec![
+            ("sessions", Json::num(n as f64)),
+            ("ticks", Json::num(ticks as f64)),
+            ("steps_per_s", Json::num(steps_per_s)),
+            ("state_bytes_per_session", Json::num(per_session as f64)),
+        ]));
+    }
+    table.print();
+    println!(
+        "one shared weight copy: {} · sessions resident: {}",
+        fmt_bytes(params_bytes),
+        mgr.session_count()
+    );
+
+    save_bench_root(
+        "serve",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("mem_words", Json::num(mem_words as f64)),
+            ("steps", Json::num(steps as f64)),
+            ("p50_us", Json::num(p50)),
+            ("p95_us", Json::num(p95)),
+            ("p99_us", Json::num(p99)),
+            ("params_bytes", Json::num(params_bytes as f64)),
+            ("levels", Json::Arr(level_rows)),
+        ]),
+    );
+}

@@ -1,23 +1,23 @@
-//! End-to-end AOT serving driver: Rust drives the JAX/Pallas-compiled HLO
-//! cells through PJRT on a real request stream — Python nowhere in sight.
+//! Shared-weight serving demo: one `Arc<SamCore>` of trained parameters
+//! drives many concurrent memory sessions through the serving runtime —
+//! the deployment story the paper's 1,000×-faster / 3,000×-smaller
+//! numbers enable.
 //!
-//! Pipeline per step (batch of episodes):
-//!   1. L3 (rust): ANN index selects the K nearest memory rows per query.
-//!   2. L2/L1 (AOT HLO): the fused `sam_read_softmax` Pallas kernel
-//!      computes softmax(β·cos) over those rows and the read word.
-//!   3. L3: the DAM full-step cell (`dam_step`) runs the controller,
-//!      write, dense read and output — state (h, c, M, usage) lives in
-//!      rust between calls.
+//! What it shows:
+//!   1. the parameters/state split: N sessions, ONE copy of the weights
+//!      (printed from the manager's heap accounting);
+//!   2. forward-only stepping: zero tape bytes while serving;
+//!   3. the batched tick: all sessions' controller steps coalesce into one
+//!      GEMM per projection, vs. the per-session step path.
 //!
-//! Prints latency percentiles and throughput, then serves a few episodes
-//! end-to-end. Requires `make artifacts`.
+//! Offline-native (no PJRT artifacts needed):
 //!
-//!     cargo run --release --example serve_inference [-- --requests 200]
+//!     cargo run --release --example serve_inference [-- --sessions 64 --steps 200]
 
-use sam::ann::{AnnIndex, KdForest};
-use sam::runtime::{artifacts_dir, Runtime, Tensor};
-use sam::util::args::Args;
-use sam::util::rng::Rng;
+use sam::bench::fmt_bytes;
+use sam::cores::{CoreConfig, CoreKind};
+use sam::prelude::*;
+use sam::serving::{build_infer_model, SessionConfig, SessionManager};
 use sam::util::timer::Timer;
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -27,128 +27,79 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let requests = args.usize_or("requests", 200);
-    let dir = artifacts_dir();
-    let mut rt = Runtime::cpu()?;
-    let loaded = match rt.load_dir(&dir) {
-        Ok(l) => l,
-        Err(e) => {
-            eprintln!("artifacts not found ({e:#}); run `make artifacts` first");
-            return Ok(());
-        }
+    let sessions = args.usize_or("sessions", 64);
+    let steps = args.usize_or("steps", 200);
+    let cfg = CoreConfig {
+        x_dim: 16,
+        y_dim: 16,
+        hidden: args.usize_or("hidden", 100),
+        heads: 4,
+        word: 32,
+        mem_words: args.usize_or("memory", 1 << 14),
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 11,
+        ..CoreConfig::default()
     };
-    println!("loaded artifacts {loaded:?} on {}", rt.platform());
-
-    // Shapes must match the manifest the artifacts were lowered for.
-    let manifest = std::fs::read_to_string(dir.join("manifest.json"))?;
-    let mj = sam::util::json::Json::parse(&manifest).map_err(|e| anyhow::anyhow!(e))?;
-    let cfgj = mj.get("config").unwrap();
-    let dim = |k: &str| cfgj.get(k).unwrap().as_f64().unwrap() as usize;
-    let (i_dim, h_dim, n, w, k) =
-        (dim("x_dim"), dim("hidden"), dim("mem_words"), dim("word"), dim("k"));
 
     let mut rng = Rng::new(11);
-    // Random "trained" weights for the serving demo (a checkpoint would be
-    // loaded the same way — flat f32 buffers).
-    let rand = |len: usize, rng: &mut Rng, s: f32| -> Vec<f32> {
-        (0..len).map(|_| rng.normal() * s).collect()
-    };
+    // A checkpoint would be loaded here via coordinator::read_checkpoint;
+    // the demo serves the fresh init.
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let mgr = SessionManager::new(model, SessionConfig::default());
+    let ids: Vec<u64> = (0..sessions).map(|_| mgr.open()).collect();
 
-    // ---------------- path A: SAM sparse read (ANN + fused kernel) -------
-    println!("\n== SAM sparse-read path: rust ANN -> Pallas gather/softmax HLO ==");
-    let mem: Vec<f32> = rand(n * w, &mut rng, 1.0);
-    let mut ann = KdForest::with_defaults(n, w, 3);
-    for i in 0..n {
-        ann.insert(i, &mem[i * w..(i + 1) * w]);
-    }
-    let mut lat = Vec::with_capacity(requests);
-    let mut checksum = 0.0f32;
-    for r in 0..requests {
-        let q: Vec<f32> = rand(w, &mut rng, 1.0);
+    println!(
+        "serving {} sessions · ONE weight copy {} · episodic state {} ({} /session)",
+        ids.len(),
+        fmt_bytes(mgr.params_heap_bytes()),
+        fmt_bytes(mgr.state_heap_bytes()),
+        fmt_bytes(mgr.state_heap_bytes() / ids.len().max(1)),
+    );
+
+    // ---- path A: per-session steps (the request-at-a-time shape) --------
+    let mut xrng = Rng::new(17);
+    let mut y = Vec::new();
+    let mut lat = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let id = ids[xrng.below(ids.len())];
+        let x: Vec<f32> = (0..cfg.x_dim).map(|_| xrng.normal()).collect();
         let t = Timer::start();
-        let neighbors = ann.query(&q, k); // L3: O(log N) candidate selection
-        let idx: Vec<i32> = neighbors.iter().map(|&(i, _)| i as i32).collect();
-        let out = rt.exec_tensors(
-            "sam_read_softmax",
-            &[
-                Tensor::F32(&mem, &[n, w]),
-                Tensor::I32(&idx, &[1, k]),
-                Tensor::F32(&q, &[1, w]),
-                Tensor::F32(&[0.5f32], &[1]),
-            ],
-        )?;
+        mgr.step(id, &x, &mut y).expect("step");
         lat.push(t.elapsed_s());
-        checksum += out[0][r % w];
     }
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     println!(
-        "{requests} requests: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  throughput {:.0} req/s  (checksum {checksum:.3})",
+        "single-step: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms",
         percentile(&lat, 0.5) * 1e3,
         percentile(&lat, 0.95) * 1e3,
         percentile(&lat, 0.99) * 1e3,
-        1.0 / (lat.iter().sum::<f64>() / lat.len() as f64),
     );
 
-    // ---------------- path B: full DAM step cell, stateful episode -------
-    println!("\n== DAM full-step cell: stateful episodes through `dam_step` ==");
-    let fan = |f: usize| 1.0 / (f as f32).sqrt();
-    let wx = rand(4 * h_dim * (i_dim + w), &mut rng, fan(i_dim + w));
-    let wh = rand(4 * h_dim * h_dim, &mut rng, fan(h_dim));
-    let b = vec![0.0f32; 4 * h_dim];
-    let w_head = rand((2 * w + 3) * h_dim, &mut rng, fan(h_dim));
-    let b_head = vec![0.0f32; 2 * w + 3];
-    let w_out = rand(w * (h_dim + w), &mut rng, fan(h_dim + w));
-    let b_out = vec![0.0f32; w];
-
-    let episodes = 5;
-    let steps = 20;
-    let mut step_lat = Vec::new();
-    for ep in 0..episodes {
-        // episode state, owned by rust
-        let mut h = vec![0.0f32; h_dim];
-        let mut c = vec![0.0f32; h_dim];
-        let mut m = rand(n * w, &mut rng, 0.05);
-        let mut usage = vec![0.0f32; n];
-        let mut w_read = vec![0.0f32; n];
-        let mut r_prev = vec![0.0f32; w];
-        let mut y_last = vec![0.0f32; w];
-        for _ in 0..steps {
-            let x: Vec<f32> = rand(i_dim, &mut rng, 1.0);
-            let t = Timer::start();
-            let dims: Vec<Vec<usize>> = vec![
-                vec![i_dim], vec![h_dim], vec![h_dim], vec![n, w], vec![n], vec![n], vec![w],
-                vec![4 * h_dim, i_dim + w], vec![4 * h_dim, h_dim], vec![4 * h_dim],
-                vec![2 * w + 3, h_dim], vec![2 * w + 3], vec![w, h_dim + w], vec![w],
-            ];
-            let data: Vec<&[f32]> = vec![
-                &x, &h, &c, &m, &usage, &w_read, &r_prev, &wx, &wh, &b, &w_head, &b_head,
-                &w_out, &b_out,
-            ];
-            let inputs: Vec<(&[f32], &[usize])> =
-                data.into_iter().zip(dims.iter().map(|d| d.as_slice())).collect();
-            let out = rt.exec("dam_step", &inputs)?;
-            step_lat.push(t.elapsed_s());
-            // carry state
-            y_last = out[0].clone();
-            h = out[1].clone();
-            c = out[2].clone();
-            m = out[3].clone();
-            usage = out[4].clone();
-            w_read = out[5].clone();
-            r_prev = out[6].clone();
-        }
-        println!(
-            "episode {ep}: {steps} steps, y[0..4] = {:?}",
-            &y_last[..4.min(y_last.len())]
-        );
+    // ---- path B: batched ticks (all sessions per tick, coalesced GEMMs) --
+    let ticks = (steps / ids.len()).max(4);
+    let mut outs = Vec::new();
+    let t = Timer::start();
+    for _ in 0..ticks {
+        let reqs: Vec<(u64, Vec<f32>)> = ids
+            .iter()
+            .map(|&id| (id, (0..cfg.x_dim).map(|_| xrng.normal()).collect()))
+            .collect();
+        mgr.step_many(&reqs, &mut outs);
     }
-    step_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let el = t.elapsed_s();
+    let total_steps = ticks * ids.len();
     println!(
-        "dam_step latency: p50 {:.2} ms  p95 {:.2} ms  ({} steps total)",
-        percentile(&step_lat, 0.5) * 1e3,
-        percentile(&step_lat, 0.95) * 1e3,
-        step_lat.len()
+        "batched tick: {} ticks × {} sessions = {} steps in {:.1} ms → {:.0} session-steps/s",
+        ticks,
+        ids.len(),
+        total_steps,
+        el * 1e3,
+        total_steps as f64 / el,
     );
-    println!("\nserving OK — python was never on the request path");
+    println!(
+        "tape bytes while serving: 0 by construction (journal-free infer mode)"
+    );
+    println!("serving OK — one weight copy, {} private memories", ids.len());
     Ok(())
 }

@@ -44,7 +44,11 @@ impl std::str::FromStr for AnnKind {
 }
 
 /// A point index over the memory rows, queried for K nearest by cosine.
-pub trait AnnIndex: Send {
+/// `Send + Sync` so a core holding one can be shared read-only behind an
+/// `Arc` by the serving runtime (all implementations are plain owned data
+/// with no interior mutability; queries take `&mut self` only for their
+/// scratch buffers, and serving sessions each own a private index).
+pub trait AnnIndex: Send + Sync {
     /// Number of indexed rows.
     fn len(&self) -> usize;
 

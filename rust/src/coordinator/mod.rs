@@ -92,8 +92,10 @@ pub fn build_task(name: &str) -> Result<Box<dyn Task>> {
     }
 }
 
-/// Core config with the task's dimensions filled in.
-fn resolved_core_cfg(cfg: &ExperimentConfig, task: &dyn Task) -> CoreConfig {
+/// Core config with the task's dimensions filled in — the single source of
+/// core shape for training, checkpointing AND serving (a served checkpoint
+/// must load into an identically-shaped core).
+pub fn resolved_core_cfg(cfg: &ExperimentConfig, task: &dyn Task) -> CoreConfig {
     let mut core_cfg = cfg.core_cfg.clone();
     core_cfg.x_dim = task.x_dim();
     core_cfg.y_dim = task.y_dim();
@@ -174,8 +176,11 @@ pub fn save_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a checkpoint produced by [`save_checkpoint`] into `core`.
-pub fn load_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
+/// Read a checkpoint produced by [`save_checkpoint`] back into flat f32
+/// values (`HasParams::load_values` layout). The serving runtime uses this
+/// to load trained weights into an `InferModel` at build time
+/// (`serving::build_infer_model`).
+pub fn read_checkpoint(path: &Path) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path).with_context(|| format!("read checkpoint {path:?}"))?;
     if bytes.len() < 8 {
         return Err(anyhow!("truncated checkpoint"));
@@ -192,10 +197,15 @@ pub fn load_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
     if n != expect as usize {
         return Err(anyhow!("checkpoint has {n} params, header says {expect}"));
     }
-    let values: Vec<f32> = body
+    Ok(body
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
+        .collect())
+}
+
+/// Load a checkpoint produced by [`save_checkpoint`] into `core`.
+pub fn load_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
+    let values = read_checkpoint(path)?;
     core.load_values(&values);
     Ok(())
 }

@@ -1,122 +1,411 @@
-//! TCP inference server: newline-delimited JSON requests against a trained
-//! core (or a PJRT-compiled cell). Python is never involved — this is the
-//! L3 request path.
+//! Multi-threaded TCP inference server: newline-delimited JSON over a
+//! session protocol, backed by the shared-weight serving runtime
+//! (`serving::SessionManager` + `serving::BatchScheduler`). Python is
+//! never involved — this is the L3 request path.
+//!
+//! Architecture: one accept thread (also runs idle-session expiry) feeds a
+//! connection queue drained by a pool of worker threads. A worker reads
+//! one line from a connection with a short timeout; a timeout **parks**
+//! the connection back on the queue instead of closing it — an idle
+//! keep-alive client no longer loses its connection (or the sessions it
+//! expected to keep), and no worker is ever pinned by a silent socket.
+//! Because session state lives in the `SessionManager`, any worker can
+//! serve any connection's next request. Steps route through the
+//! `BatchScheduler`, so concurrent sessions' controller math coalesces
+//! into one GEMM per tick. Sessions are connection-scoped: step/reset/
+//! close are rejected for ids the connection did not open.
+//!
+//! Known scaling limit: parked connections are polled by blocking reads
+//! (one `read_timeout` slice per connection per worker), so aggregate poll
+//! throughput is `workers / read_timeout` and tail latency grows with the
+//! idle-connection count. Fine up to a few hundred mostly-idle clients;
+//! beyond that the queue wants readiness-based multiplexing (epoll) —
+//! the ConnQueue seam is where that would slot in.
 //!
 //! Protocol (one JSON object per line):
-//!   → {"inputs": [[f32…], …]}            run an episode, return outputs
-//!   → {"ping": true}                      health check
-//!   ← {"outputs": [[f32…], …]}  /  {"pong": true}  /  {"error": "…"}
+//!   → {"open": true}                        open a session (manager-seeded memory)
+//!   → {"open": {"seed": 7}}                 open with an explicit memory seed
+//!   → {"session": id, "input": [f32…]}      one step of one session
+//!   → {"reset": id}                         restart the session's episode
+//!   → {"close": id}                         close a session
+//!   → {"inputs": [[f32…], …]}               stateless episode (open-step-close)
+//!   → {"ping": true}  /  {"stats": true}    health / accounting
+//!   ← {"session": id} / {"session": id, "output": [f32…]} / {"closed": b}
+//!     {"outputs": [[f32…], …]} / {"pong": true} / {"error": "…"}
+//!
+//! Sessions opened over a connection are closed when that connection goes
+//! away (EOF or error), never when it merely idles.
 
-use crate::cores::Core;
-use crate::training::eval_episode;
-use crate::tasks::{Episode, LossKind};
+use crate::serving::{BatchScheduler, InferModel, SessionConfig, SessionManager};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-/// Serve `core` on `addr` ("127.0.0.1:7878"). Blocks; set `stop` from
-/// another thread to shut down after the in-flight request.
-pub fn serve(core: Arc<Mutex<Box<dyn Core>>>, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+/// Server knobs (defaults match `sam serve`'s flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads draining the connection queue.
+    pub workers: usize,
+    /// Per-read timeout after which an idle connection is parked.
+    pub read_timeout: Duration,
+    /// Batch-coalescing tick of the step scheduler.
+    pub tick: Duration,
+    /// Largest number of steps coalesced into one tick.
+    pub max_batch: usize,
+    /// Session-table policy (byte budget, idle expiry, seed stream).
+    pub session: SessionConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            read_timeout: Duration::from_millis(25),
+            tick: Duration::from_micros(200),
+            max_batch: 64,
+            session: SessionConfig::default(),
+        }
+    }
+}
+
+/// Hard cap on one request line (a 1 MiB JSON step is already absurd).
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// One client connection plus the sessions it opened (closed with it).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    sessions: Vec<u64>,
+    line: String,
+}
+
+/// Blocking MPMC queue of parked connections.
+struct ConnQueue {
+    q: Mutex<VecDeque<Conn>>,
+    cv: Condvar,
+}
+
+impl ConnQueue {
+    fn new() -> ConnQueue {
+        ConnQueue { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, c: Conn) {
+        self.q.lock().unwrap().push_back(c);
+        self.cv.notify_one();
+    }
+
+    /// Pop with a bounded wait so workers can observe `stop`.
+    fn pop(&self, wait: Duration) -> Option<Conn> {
+        let mut q = self.q.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.cv.wait_timeout(q, wait).unwrap();
+            q = guard;
+        }
+        q.pop_front()
+    }
+}
+
+/// Shared per-request context handed to [`handle_request`].
+pub struct ServerCtx {
+    pub mgr: Arc<SessionManager>,
+    pub sched: Arc<BatchScheduler>,
+}
+
+/// Serve `model` on `addr`: builds the session manager from
+/// `cfg.session` and runs [`serve`]. The `sam serve` entry point.
+pub fn serve_model(
+    model: Arc<dyn InferModel>,
+    addr: &str,
+    cfg: &ServeConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mgr = Arc::new(SessionManager::new(model, cfg.session.clone()));
+    serve(mgr, addr, cfg, stop)
+}
+
+/// Serve a prebuilt session manager on `addr` ("127.0.0.1:7878"). Blocks;
+/// set `stop` from another thread to shut down.
+pub fn serve(
+    mgr: Arc<SessionManager>,
+    addr: &str,
+    cfg: &ServeConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
-    eprintln!("sam-serve listening on {addr}");
+    eprintln!(
+        "sam-serve listening on {addr} ({} workers, tick {:?}, budget {} bytes)",
+        cfg.workers, cfg.tick, cfg.session.byte_budget
+    );
+    let sched = Arc::new(BatchScheduler::start(mgr.clone(), cfg.tick, cfg.max_batch));
+    let queue = Arc::new(ConnQueue::new());
+    let ctx = Arc::new(ServerCtx { mgr: mgr.clone(), sched: sched.clone() });
+
+    let workers: Vec<_> = (0..cfg.workers.max(1))
+        .map(|_| {
+            let queue = queue.clone();
+            let ctx = ctx.clone();
+            let stop = stop.clone();
+            let read_timeout = cfg.read_timeout;
+            std::thread::spawn(move || worker_loop(&queue, &ctx, &stop, read_timeout))
+        })
+        .collect();
+
+    let mut last_expiry = std::time::Instant::now();
+    let mut accept_err: Option<std::io::Error> = None;
     loop {
         if stop.load(Ordering::Relaxed) {
-            return Ok(());
+            break;
         }
         match listener.accept() {
             Ok((stream, _)) => {
-                if let Err(e) = handle_client(&core, stream) {
-                    eprintln!("client error: {e:#}");
+                // Write timeout too: a client that stops reading must not
+                // pin a worker in write_all forever — a timed-out write
+                // closes the connection like any other I/O error.
+                let setup = stream
+                    .set_read_timeout(Some(cfg.read_timeout))
+                    .and_then(|()| stream.set_write_timeout(Some(Duration::from_secs(2))))
+                    .and_then(|()| stream.try_clone());
+                match setup {
+                    Ok(clone) => queue.push(Conn {
+                        reader: BufReader::new(clone),
+                        writer: stream,
+                        sessions: Vec::new(),
+                        line: String::new(),
+                    }),
+                    Err(e) => eprintln!("accept setup failed: {e}"),
                 }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(10));
+                std::thread::sleep(Duration::from_millis(5));
             }
-            Err(e) => return Err(e.into()),
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                accept_err = Some(e);
+                break;
+            }
+        }
+        if last_expiry.elapsed() > Duration::from_secs(1) {
+            mgr.expire_idle();
+            last_expiry = std::time::Instant::now();
+        }
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    sched.stop();
+    match accept_err {
+        Some(e) => Err(e.into()),
+        None => Ok(()),
+    }
+}
+
+fn worker_loop(queue: &ConnQueue, ctx: &ServerCtx, stop: &AtomicBool, read_timeout: Duration) {
+    while !stop.load(Ordering::Relaxed) {
+        let Some(mut conn) = queue.pop(read_timeout) else { continue };
+        match serve_one_line(&mut conn, ctx) {
+            ConnState::Park => queue.push(conn),
+            ConnState::Closed => {
+                for id in conn.sessions.drain(..) {
+                    ctx.mgr.close(id);
+                }
+            }
         }
     }
 }
 
-fn handle_client(core: &Arc<Mutex<Box<dyn Core>>>, stream: TcpStream) -> Result<()> {
-    // Bounded reads so a silent client cannot pin the accept loop forever.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) => {}
-            Err(ref e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                return Ok(()) // idle client: free the loop (single-threaded server)
-            }
-            Err(e) => return Err(e.into()),
+enum ConnState {
+    /// Connection healthy (request served, or merely idle): back on the
+    /// queue for any worker to continue. This is the idle-client fix — the
+    /// old single-threaded server returned Ok on a read timeout, silently
+    /// dropping keep-alive clients and the state they expected to keep.
+    Park,
+    /// EOF or I/O error: release the connection's sessions.
+    Closed,
+}
+
+/// Read and serve at most one request line from `conn`. `conn.line`
+/// accumulates across parks: a read timeout can land mid-line (the client
+/// wrote slowly), and the partial bytes must survive until the newline
+/// arrives — clearing on entry would corrupt the request.
+fn serve_one_line(conn: &mut Conn, ctx: &ServerCtx) -> ConnState {
+    let eof = match conn.reader.read_line(&mut conn.line) {
+        Ok(0) => true, // client hung up (any partial line still served below)
+        Ok(_) => false,
+        Err(ref e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            // Idle (possibly mid-line): park, keeping what was read.
+            return ConnState::Park;
         }
-        let response = match handle_request(core, line.trim()) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
-        };
-        writer.write_all(response.encode().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        Err(_) => return ConnState::Closed,
+    };
+    if !conn.line.ends_with('\n') && !eof {
+        // Timed out with a partial line already consumed into the buffer:
+        // park and finish the line on a later pass.
+        return ConnState::Park;
+    }
+    if conn.line.len() > MAX_LINE_BYTES {
+        // A newline-free stream must not grow the buffer without bound.
+        return ConnState::Closed;
+    }
+    if conn.line.trim().is_empty() {
+        conn.line.clear(); // blank keep-alive lines must not accumulate
+        return if eof { ConnState::Closed } else { ConnState::Park };
+    }
+    let response = match handle_request(ctx, conn.line.trim(), &mut conn.sessions) {
+        Ok(j) => j,
+        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    };
+    conn.line.clear();
+    let ok = conn
+        .writer
+        .write_all(response.encode().as_bytes())
+        .and_then(|_| conn.writer.write_all(b"\n"))
+        .and_then(|_| conn.writer.flush());
+    match (ok, eof) {
+        (Ok(()), false) => ConnState::Park,
+        _ => ConnState::Closed,
     }
 }
 
-/// Process one request line. Public for unit testing without sockets.
-pub fn handle_request(core: &Arc<Mutex<Box<dyn Core>>>, line: &str) -> Result<Json> {
+/// Parse a JSON array into finite f32s. Non-finite values (or f64s that
+/// overflow f32 to ±inf) are rejected at the door: NaN in a memory row
+/// would poison cosine comparisons deep inside the ANN backends.
+fn parse_floats(row: &[Json]) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(row.len());
+    for (i, v) in row.iter().enumerate() {
+        let f = v.as_f64().unwrap_or(0.0) as f32;
+        if !f.is_finite() {
+            return Err(anyhow!("input[{i}] is not a finite f32"));
+        }
+        out.push(f);
+    }
+    Ok(out)
+}
+
+/// Process one request line against the serving runtime. Public for unit
+/// testing without sockets; `conn_sessions` tracks session ownership for
+/// connection-drop cleanup.
+pub fn handle_request(ctx: &ServerCtx, line: &str, conn_sessions: &mut Vec<u64>) -> Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     if req.get("ping").is_some() {
         return Ok(Json::obj(vec![("pong", Json::Bool(true))]));
     }
-    let inputs = req
-        .get("inputs")
-        .and_then(|j| j.as_arr())
-        .ok_or_else(|| anyhow!("missing inputs"))?;
-    let mut core = core.lock().map_err(|_| anyhow!("core poisoned"))?;
-    let x_dim = core.x_dim();
-    let y_dim = core.y_dim();
-    let mut xs = Vec::with_capacity(inputs.len());
-    for (t, row) in inputs.iter().enumerate() {
-        let row = row.as_arr().ok_or_else(|| anyhow!("inputs[{t}] not an array"))?;
-        if row.len() != x_dim {
-            return Err(anyhow!("inputs[{t}] has {} dims, want {x_dim}", row.len()));
-        }
-        xs.push(
-            row.iter()
-                .map(|v| v.as_f64().unwrap_or(0.0) as f32)
-                .collect::<Vec<f32>>(),
-        );
+    if req.get("stats").is_some() {
+        return Ok(Json::obj(vec![
+            ("sessions", Json::num(ctx.mgr.session_count() as f64)),
+            ("state_bytes", Json::num(ctx.mgr.state_heap_bytes() as f64)),
+            ("params_bytes", Json::num(ctx.mgr.params_heap_bytes() as f64)),
+            ("params", Json::num(ctx.mgr.model().params_len() as f64)),
+        ]));
     }
-    let t_len = xs.len();
-    let ep = Episode {
-        inputs: xs,
-        targets: vec![vec![0.0; y_dim]; t_len],
-        mask: vec![false; t_len],
-        loss: LossKind::Bits,
-        family: 0,
-    };
-    let (_, outputs) = eval_episode(core.as_mut(), &ep);
-    Ok(Json::obj(vec![(
-        "outputs",
-        Json::arr(outputs.iter().map(|o| Json::floats(o))),
-    )]))
+    if let Some(open) = req.get("open") {
+        let id = match open.get("seed").and_then(|s| s.as_f64()) {
+            Some(seed) => ctx.mgr.open_seeded(Some(seed as u64)),
+            None => ctx.mgr.open(),
+        };
+        conn_sessions.push(id);
+        return Ok(Json::obj(vec![("session", Json::num(id as f64))]));
+    }
+    if let Some(id) = req.get("close").and_then(|j| j.as_f64()) {
+        let id = id as u64;
+        // Sessions are connection-scoped: ids are sequential, so without
+        // this check any client could close/step another client's session.
+        if !conn_sessions.contains(&id) {
+            return Err(anyhow!("session {id} not owned by this connection"));
+        }
+        conn_sessions.retain(|&s| s != id);
+        let existed = ctx.mgr.close(id);
+        return Ok(Json::obj(vec![("closed", Json::Bool(existed))]));
+    }
+    if let Some(id) = req.get("reset").and_then(|j| j.as_f64()) {
+        let id = id as u64;
+        if !conn_sessions.contains(&id) {
+            return Err(anyhow!("session {id} not owned by this connection"));
+        }
+        if let Err(e) = ctx.mgr.reset(id) {
+            // Evicted/expired server-side: drop the stale ownership record.
+            conn_sessions.retain(|&s| s != id);
+            return Err(anyhow!("{e}"));
+        }
+        return Ok(Json::obj(vec![("reset", Json::Bool(true))]));
+    }
+    if let Some(id) = req.get("session").and_then(|j| j.as_f64()) {
+        let id = id as u64;
+        if !conn_sessions.contains(&id) {
+            return Err(anyhow!("session {id} not owned by this connection"));
+        }
+        let input = req
+            .get("input")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow!("missing input"))?;
+        let x = parse_floats(input)?;
+        let y = match ctx.sched.step_blocking(id, x) {
+            Ok(y) => y,
+            Err(e) => {
+                if matches!(e, crate::serving::SessionError::NoSuchSession(_)) {
+                    conn_sessions.retain(|&s| s != id);
+                }
+                return Err(anyhow!("{e}"));
+            }
+        };
+        return Ok(Json::obj(vec![
+            ("session", Json::num(id as f64)),
+            ("output", Json::floats(&y)),
+        ]));
+    }
+    if let Some(inputs) = req.get("inputs").and_then(|j| j.as_arr()) {
+        // Stateless episode: an ephemeral session stepped through every
+        // row (the old protocol, kept for episode-at-a-time clients).
+        let x_dim = ctx.mgr.model().x_dim();
+        let mut xs = Vec::with_capacity(inputs.len());
+        for (t, row) in inputs.iter().enumerate() {
+            let row = row.as_arr().ok_or_else(|| anyhow!("inputs[{t}] not an array"))?;
+            if row.len() != x_dim {
+                return Err(anyhow!("inputs[{t}] has {} dims, want {x_dim}", row.len()));
+            }
+            xs.push(parse_floats(row)?);
+        }
+        // Parity seeds (`None`), not a manager-drawn random seed: the
+        // stateless episode path must stay deterministic — identical
+        // requests return identical outputs, as the pre-session server did.
+        let id = ctx.mgr.open_seeded(None);
+        let mut outs = Vec::with_capacity(xs.len());
+        for x in xs {
+            match ctx.sched.step_blocking(id, x) {
+                Ok(y) => outs.push(y),
+                Err(e) => {
+                    ctx.mgr.close(id);
+                    return Err(anyhow!("{e}"));
+                }
+            }
+        }
+        ctx.mgr.close(id);
+        return Ok(Json::obj(vec![(
+            "outputs",
+            Json::arr(outs.iter().map(|o| Json::floats(o))),
+        )]));
+    }
+    Err(anyhow!("unknown request (want open/session/close/reset/inputs/ping/stats)"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cores::{build_core, CoreConfig, CoreKind};
+    use crate::ann::AnnKind;
+    use crate::cores::{CoreConfig, CoreKind};
+    use crate::serving::build_infer_model;
     use crate::util::rng::Rng;
 
-    fn test_core() -> Arc<Mutex<Box<dyn Core>>> {
+    fn test_ctx() -> (ServerCtx, Arc<SessionManager>) {
         let cfg = CoreConfig {
             x_dim: 4,
             y_dim: 3,
@@ -128,61 +417,140 @@ mod tests {
             ..CoreConfig::default()
         };
         let mut rng = Rng::new(9);
-        Arc::new(Mutex::new(build_core(CoreKind::Sam, &cfg, &mut rng)))
+        let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+        let mgr = Arc::new(SessionManager::new(model, SessionConfig::default()));
+        let sched = Arc::new(BatchScheduler::start(
+            mgr.clone(),
+            Duration::from_micros(100),
+            16,
+        ));
+        (ServerCtx { mgr: mgr.clone(), sched }, mgr)
     }
 
     #[test]
     fn ping_pong() {
-        let core = test_core();
-        let r = handle_request(&core, r#"{"ping": true}"#).unwrap();
+        let (ctx, _) = test_ctx();
+        let mut owned = Vec::new();
+        let r = handle_request(&ctx, r#"{"ping": true}"#, &mut owned).unwrap();
         assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+        ctx.sched.stop();
     }
 
     #[test]
-    fn episode_request_returns_outputs() {
-        let core = test_core();
+    fn session_lifecycle_over_protocol() {
+        let (ctx, mgr) = test_ctx();
+        let mut owned = Vec::new();
+        let r = handle_request(&ctx, r#"{"open": true}"#, &mut owned).unwrap();
+        let id = r.get("session").unwrap().as_f64().unwrap() as u64;
+        assert_eq!(owned, vec![id]);
         let r = handle_request(
-            &core,
+            &ctx,
+            &format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#),
+            &mut owned,
+        )
+        .unwrap();
+        assert_eq!(r.get("output").unwrap().as_arr().unwrap().len(), 3);
+        let r = handle_request(&ctx, &format!(r#"{{"reset": {id}}}"#), &mut owned).unwrap();
+        assert_eq!(r.get("reset").unwrap().as_bool(), Some(true));
+        let r = handle_request(&ctx, &format!(r#"{{"close": {id}}}"#), &mut owned).unwrap();
+        assert_eq!(r.get("closed").unwrap().as_bool(), Some(true));
+        assert!(owned.is_empty());
+        assert_eq!(mgr.session_count(), 0);
+        // Stepping a closed session errors.
+        assert!(handle_request(
+            &ctx,
+            &format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#),
+            &mut owned
+        )
+        .is_err());
+        ctx.sched.stop();
+    }
+
+    #[test]
+    fn foreign_sessions_are_rejected() {
+        // Connection B must not be able to step/reset/close a session that
+        // connection A opened (ids are guessable sequential integers).
+        let (ctx, mgr) = test_ctx();
+        let mut conn_a = Vec::new();
+        let r = handle_request(&ctx, r#"{"open": true}"#, &mut conn_a).unwrap();
+        let id = r.get("session").unwrap().as_f64().unwrap() as u64;
+        let mut conn_b = Vec::new();
+        assert!(handle_request(
+            &ctx,
+            &format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#),
+            &mut conn_b
+        )
+        .is_err());
+        assert!(handle_request(&ctx, &format!(r#"{{"reset": {id}}}"#), &mut conn_b).is_err());
+        assert!(handle_request(&ctx, &format!(r#"{{"close": {id}}}"#), &mut conn_b).is_err());
+        assert_eq!(mgr.session_count(), 1, "foreign close must not remove the session");
+        // The owner still works.
+        assert!(handle_request(
+            &ctx,
+            &format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#),
+            &mut conn_a
+        )
+        .is_ok());
+        ctx.sched.stop();
+    }
+
+    #[test]
+    fn legacy_episode_request_matches_repeat_and_returns_outputs() {
+        // The stateless path must be deterministic: identical requests get
+        // identical outputs (parity seeds, not per-request random init).
+        let (ctx, mgr) = test_ctx();
+        let mut owned = Vec::new();
+        let req = r#"{"inputs": [[1,0,0,0],[0,1,0,0]]}"#;
+        let a = handle_request(&ctx, req, &mut owned).unwrap();
+        let b = handle_request(&ctx, req, &mut owned).unwrap();
+        assert_eq!(a.encode(), b.encode(), "stateless episodes must be deterministic");
+        assert_eq!(mgr.session_count(), 0);
+        ctx.sched.stop();
+    }
+
+    #[test]
+    fn legacy_episode_request_returns_outputs() {
+        let (ctx, mgr) = test_ctx();
+        let mut owned = Vec::new();
+        let r = handle_request(
+            &ctx,
             r#"{"inputs": [[1,0,0,0],[0,1,0,0],[0,0,1,0]]}"#,
+            &mut owned,
         )
         .unwrap();
         let outs = r.get("outputs").unwrap().as_arr().unwrap();
         assert_eq!(outs.len(), 3);
         assert_eq!(outs[0].as_arr().unwrap().len(), 3);
+        assert_eq!(mgr.session_count(), 0, "ephemeral session must be closed");
+        ctx.sched.stop();
     }
 
     #[test]
     fn malformed_requests_rejected() {
-        let core = test_core();
-        assert!(handle_request(&core, "not json").is_err());
-        assert!(handle_request(&core, r#"{"inputs": [[1,0]]}"#).is_err()); // wrong dim
-        assert!(handle_request(&core, r#"{}"#).is_err());
+        let (ctx, _) = test_ctx();
+        let mut owned = Vec::new();
+        assert!(handle_request(&ctx, "not json", &mut owned).is_err());
+        assert!(handle_request(&ctx, r#"{"inputs": [[1,0]]}"#, &mut owned).is_err());
+        assert!(handle_request(&ctx, r#"{}"#, &mut owned).is_err());
+        ctx.sched.stop();
     }
 
     #[test]
-    fn server_round_trip_over_tcp() {
-        use std::io::{BufRead, BufReader, Write};
-        let core = test_core();
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let addr = "127.0.0.1:47391";
-        let core2 = core.clone();
-        let handle = std::thread::spawn(move || {
-            let _ = serve(core2, addr, stop2);
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
-        stream
-            .write_all(b"{\"inputs\": [[1,0,0,0],[0,0,0,1]]}\n")
-            .unwrap();
-        let mut reader = BufReader::new(stream.try_clone().unwrap());
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        let j = Json::parse(line.trim()).unwrap();
-        assert!(j.get("outputs").is_some(), "{line}");
-        stop.store(true, Ordering::Relaxed);
-        drop(reader); // close BOTH socket handles so the server unblocks
-        drop(stream);
-        handle.join().unwrap();
+    fn stats_report_single_param_copy() {
+        let (ctx, mgr) = test_ctx();
+        let mut owned = Vec::new();
+        let before = handle_request(&ctx, r#"{"stats": true}"#, &mut owned).unwrap();
+        for _ in 0..4 {
+            handle_request(&ctx, r#"{"open": true}"#, &mut owned).unwrap();
+        }
+        let after = handle_request(&ctx, r#"{"stats": true}"#, &mut owned).unwrap();
+        assert_eq!(
+            before.get("params_bytes").unwrap().as_f64(),
+            after.get("params_bytes").unwrap().as_f64(),
+            "params bytes must not scale with session count"
+        );
+        assert!(after.get("state_bytes").unwrap().as_f64() > before.get("state_bytes").unwrap().as_f64());
+        assert_eq!(mgr.session_count(), 4);
+        ctx.sched.stop();
     }
 }

@@ -12,7 +12,7 @@
 //! recycle through the core's [`Workspace`].
 
 use super::addressing::{content_weights_backward_ws, content_weights_into, ContentRead, CosSim};
-use super::{Controller, Core, CoreConfig};
+use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
 use crate::memory::engine::SparseMemoryEngine;
 use crate::memory::usage::DiscountedUsage;
 use crate::nn::act::{dsigmoid, sigmoid};
@@ -104,6 +104,113 @@ impl DamCore {
         }
     }
 
+    // -- forward-only inference (shared weights, detached state) ------------
+
+    /// Open a detached inference session. DAM's memory is zero-initialized
+    /// (no seeds), so every session starts identically; `_seed` is accepted
+    /// for interface symmetry with the sparse cores.
+    pub fn infer_session(&self, _seed: Option<u64>) -> DamSession {
+        DamSession {
+            ctrl: self.ctrl.new_state(),
+            engine: SparseMemoryEngine::new_dense(self.cfg.mem_words, self.cfg.word),
+            usage: DiscountedUsage::new(self.cfg.mem_words, self.cfg.lambda),
+            w_read_prev: vec![vec![0.0; self.cfg.mem_words]; self.cfg.heads],
+            r_prev: vec![vec![0.0; self.cfg.word]; self.cfg.heads],
+            ws: Workspace::new(),
+            sim_pool: Pool::new(),
+        }
+    }
+
+    /// One forward-only step: bit-identical to [`Core::forward_into`] on a
+    /// freshly reset core, minus the per-step O(N·W) memory snapshot the
+    /// training tape needs — serving a dense control model still pays
+    /// O(N·W) *work* per step, but no longer O(N·W·T) *space*.
+    pub fn infer_step(&self, st: &mut DamSession, x: &[f32], y: &mut Vec<f32>) {
+        self.ctrl.infer_step(&mut st.ctrl, x, &st.r_prev);
+        self.infer_mem_phase(st);
+        self.ctrl.infer_output(&mut st.ctrl, &st.r_prev, y);
+    }
+
+    /// Batched serving tick (see [`super::infer_tick`]).
+    pub fn infer_step_batch(
+        &self,
+        batch: &mut CtrlBatch,
+        sessions: &mut [&mut DamSession],
+        xs: &[&[f32]],
+        ys: &mut [Vec<f32>],
+    ) {
+        super::infer_tick(
+            &self.ctrl,
+            batch,
+            sessions,
+            xs,
+            ys,
+            |s| &mut s.ctrl,
+            |s| &s.r_prev,
+            |s| self.infer_mem_phase(s),
+        );
+    }
+
+    /// Dense write + dense read phase of an infer step, consuming the raw
+    /// head params in `st.ctrl.p`.
+    fn infer_mem_phase(&self, st: &mut DamSession) {
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        st.usage.u.iter_mut().for_each(|u| *u *= st.usage.lambda);
+        for hi in 0..self.cfg.heads {
+            let (alpha, gamma) = (
+                sigmoid(st.ctrl.p[hi * hd + 2 * w]),
+                sigmoid(st.ctrl.p[hi * hd + 2 * w + 1]),
+            );
+            let lra_row = st.usage.argmin();
+            let mut w_write = st.ws.take_f32(n);
+            for i in 0..n {
+                w_write[i] = alpha * gamma * st.w_read_prev[hi][i];
+            }
+            w_write[lra_row] += alpha * (1.0 - gamma);
+            st.engine
+                .dense_write(&w_write, &st.ctrl.p[hi * hd + w..hi * hd + 2 * w], lra_row);
+            for i in 0..n {
+                st.usage.u[i] += w_write[i];
+            }
+            st.ws.recycle_f32(w_write);
+        }
+        for hi in 0..self.cfg.heads {
+            let beta_raw = st.ctrl.p[hi * hd + 2 * w + 2];
+            let mut rows = st.ws.take_usize(n);
+            rows.extend(0..n);
+            let read = content_weights_into(
+                &st.ctrl.p[hi * hd..hi * hd + w],
+                beta_raw,
+                st.engine.store(),
+                rows,
+                st.sim_pool.take(),
+                st.ws.take_f32_empty(n),
+            );
+            st.r_prev[hi].clear();
+            st.r_prev[hi].resize(w, 0.0);
+            st.engine.read_dense(&read.weights, &mut st.r_prev[hi]);
+            for i in 0..n {
+                st.usage.u[i] += read.weights[i];
+            }
+            st.w_read_prev[hi].clear();
+            st.w_read_prev[hi].extend_from_slice(&read.weights);
+            st.ws.recycle_usize(read.rows);
+            st.ws.recycle_f32(read.weights);
+            st.sim_pool.recycle(read.sims);
+        }
+    }
+
+    /// Heap bytes of the trained parameters.
+    pub fn params_heap_bytes(&self) -> usize {
+        self.ctrl.params_heap_bytes()
+    }
+
+    pub fn params_len(&self) -> usize {
+        self.ctrl.params_len()
+    }
+
     /// Recycle a popped tape step's buffers and park its shell. The N·W
     /// snapshot buffer stays in the shell (cleared, capacity kept): no
     /// other DAM buffer shares its capacity class, so pooling it would
@@ -120,6 +227,51 @@ impl DamCore {
             self.sim_pool.recycle(h.read.sims);
         }
         self.spare_steps.push(step);
+    }
+}
+
+/// Detached per-session episodic state for DAM serving: controller h/c,
+/// a private dense memory (no snapshots), discounted usage and the dense
+/// recurrent read state. Parameters live in the shared [`DamCore`].
+pub struct DamSession {
+    ctrl: ControllerState,
+    engine: SparseMemoryEngine,
+    usage: DiscountedUsage,
+    w_read_prev: Vec<Vec<f32>>,
+    r_prev: Vec<Vec<f32>>,
+    ws: Workspace,
+    sim_pool: Pool<CosSim>,
+}
+
+impl DamSession {
+    /// Start a new episode: memory zeroed, usage and recurrent state reset.
+    pub fn reset(&mut self) {
+        self.ctrl.reset();
+        self.engine.reinit();
+        self.usage.reset();
+        for v in &mut self.w_read_prev {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.engine.heap_bytes()
+            + self.ws.heap_bytes()
+            + self.ctrl.heap_bytes()
+            + self.usage.u.capacity() * 4
+            + self
+                .w_read_prev
+                .iter()
+                .chain(self.r_prev.iter())
+                .map(|v| v.capacity() * 4)
+                .sum::<usize>()
+    }
+
+    pub fn tape_bytes(&self) -> usize {
+        self.engine.tape_bytes()
     }
 }
 
@@ -452,6 +604,29 @@ mod tests {
             } else {
                 assert_eq!(first, bits, "episode {ep} diverged bitwise");
             }
+        }
+    }
+
+    #[test]
+    fn infer_session_matches_train_forward_bitwise() {
+        let mut rng = Rng::new(17);
+        let mut core = DamCore::new(&small_cfg(17), &mut rng);
+        let (xs, _) = random_episode(4, 3, 5, &mut rng);
+        let mut st = core.infer_session(None);
+        let mut yi = Vec::new();
+        for ep in 0..2 {
+            core.reset();
+            for x in &xs {
+                let yt = core.forward(x);
+                core.infer_step(&mut st, x, &mut yi);
+                for (a, b) in yt.iter().zip(&yi) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ep {ep}");
+                }
+            }
+            core.rollback();
+            core.end_episode();
+            st.reset();
+            assert_eq!(st.tape_bytes(), 0);
         }
     }
 

@@ -14,7 +14,7 @@
 //! the read mixture into w^r_{t-1}, queries and memory.
 
 use super::addressing::{content_weights, content_weights_backward, ContentRead};
-use super::{Controller, Core, CoreConfig};
+use super::{Controller, ControllerState, Core, CoreConfig};
 use crate::memory::store::MemoryStore;
 use crate::memory::usage::DiscountedUsage;
 use crate::nn::act::{dsigmoid, sigmoid};
@@ -94,6 +94,180 @@ impl DncCore {
             dmem: Matrix::zeros(n, cfg.word),
             cfg: cfg.clone(),
         }
+    }
+
+    /// Open a detached inference session (zero memory/linkage — same as a
+    /// freshly reset training core).
+    pub fn infer_session(&self, _seed: Option<u64>) -> DncSession {
+        let n = self.cfg.mem_words;
+        DncSession {
+            ctrl: self.ctrl.new_state(),
+            mem: MemoryStore::zeros(n, self.cfg.word),
+            usage: DiscountedUsage::new(n, self.cfg.lambda),
+            link: Matrix::zeros(n, n),
+            precedence: vec![0.0; n],
+            w_read_prev: vec![vec![0.0; n]; self.cfg.heads],
+            r_prev: vec![vec![0.0; self.cfg.word]; self.cfg.heads],
+        }
+    }
+
+    /// One forward-only step: bit-identical to [`Core::forward_into`] on a
+    /// freshly reset core, minus the O(N·W) memory snapshot and O(N²) link
+    /// snapshot of the training tape. (Dense baseline: allocating.)
+    pub fn infer_step(&self, st: &mut DncSession, x: &[f32], y: &mut Vec<f32>) {
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        self.ctrl.infer_step(&mut st.ctrl, x, &st.r_prev);
+        st.usage.u.iter_mut().for_each(|u| *u *= st.usage.lambda);
+
+        // --- writes (DAM-style dense interpolation, eq. 5) ---
+        let mut w_agg = vec![0.0f32; n];
+        for hi in 0..self.cfg.heads {
+            let (alpha, gamma) = (
+                sigmoid(st.ctrl.p[hi * hd + 2 * w]),
+                sigmoid(st.ctrl.p[hi * hd + 2 * w + 1]),
+            );
+            let lra_row = st.usage.argmin();
+            let mut w_write = vec![0.0f32; n];
+            for i in 0..n {
+                w_write[i] = alpha * gamma * st.w_read_prev[hi][i];
+            }
+            w_write[lra_row] += alpha * (1.0 - gamma);
+            st.mem.row_mut(lra_row).iter_mut().for_each(|v| *v = 0.0);
+            let a = &st.ctrl.p[hi * hd + w..hi * hd + 2 * w];
+            for i in 0..n {
+                let wv = w_write[i];
+                if wv != 0.0 {
+                    let row = st.mem.row_mut(i);
+                    for (m, &av) in row.iter_mut().zip(a) {
+                        *m += wv * av;
+                    }
+                }
+            }
+            for i in 0..n {
+                st.usage.u[i] += w_write[i];
+                w_agg[i] += w_write[i];
+            }
+        }
+
+        // --- temporal linkage update (eq. 11, 13): dense O(N²) ---
+        let s: f32 = w_agg.iter().sum();
+        if s > 1.0 {
+            w_agg.iter_mut().for_each(|x| *x /= s);
+        }
+        let p_prev = st.precedence.clone();
+        for i in 0..n {
+            let wi = w_agg[i];
+            let lrow = st.link.row_mut(i);
+            for j in 0..n {
+                if i == j {
+                    lrow[j] = 0.0;
+                } else {
+                    lrow[j] = (1.0 - wi - w_agg[j]) * lrow[j] + wi * p_prev[j];
+                }
+            }
+        }
+        let sum_w: f32 = w_agg.iter().sum();
+        for i in 0..n {
+            st.precedence[i] = (1.0 - sum_w) * p_prev[i] + w_agg[i];
+        }
+
+        // --- reads: 3-way mode mix over content / forward / backward ---
+        for hi in 0..self.cfg.heads {
+            let ph_lo = hi * hd;
+            let beta_raw = st.ctrl.p[ph_lo + 2 * w + 2];
+            let mut modes = st.ctrl.p[ph_lo + 2 * w + 3..ph_lo + 2 * w + 6].to_vec();
+            softmax_inplace(&mut modes);
+            let read = content_weights(
+                &st.ctrl.p[ph_lo..ph_lo + w],
+                beta_raw,
+                &st.mem,
+                (0..n).collect(),
+            );
+            let wp = &st.w_read_prev[hi];
+            let mut fwd = vec![0.0f32; n];
+            let mut bwd = vec![0.0f32; n];
+            for i in 0..n {
+                fwd[i] = dot(st.link.row(i), wp);
+            }
+            for j in 0..n {
+                let lrow = st.link.row(j);
+                let wj = wp[j];
+                if wj != 0.0 {
+                    for i in 0..n {
+                        bwd[i] += lrow[i] * wj;
+                    }
+                }
+            }
+            let mut w_read = vec![0.0f32; n];
+            for i in 0..n {
+                w_read[i] = modes[0] * bwd[i] + modes[1] * read.weights[i] + modes[2] * fwd[i];
+            }
+            let mut r = vec![0.0; w];
+            st.mem.read_dense(&w_read, &mut r);
+            for i in 0..n {
+                st.usage.u[i] += w_read[i];
+            }
+            st.w_read_prev[hi] = w_read;
+            st.r_prev[hi] = r;
+        }
+
+        self.ctrl.infer_output(&mut st.ctrl, &st.r_prev, y);
+    }
+
+    pub fn params_heap_bytes(&self) -> usize {
+        self.ctrl.params_heap_bytes()
+    }
+
+    pub fn params_len(&self) -> usize {
+        self.ctrl.params_len()
+    }
+}
+
+/// Detached per-session state for DNC serving (dense link matrix included —
+/// O(N²) per session, which is exactly why the SDNC is the serving core).
+pub struct DncSession {
+    ctrl: ControllerState,
+    mem: MemoryStore,
+    usage: DiscountedUsage,
+    link: Matrix,
+    precedence: Vec<f32>,
+    w_read_prev: Vec<Vec<f32>>,
+    r_prev: Vec<Vec<f32>>,
+}
+
+impl DncSession {
+    pub fn reset(&mut self) {
+        self.ctrl.reset();
+        self.mem.fill(0.0);
+        self.usage.reset();
+        self.link.fill(0.0);
+        self.precedence.iter_mut().for_each(|x| *x = 0.0);
+        for v in &mut self.w_read_prev {
+            v.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.mem.heap_bytes()
+            + self.ctrl.heap_bytes()
+            + self.link.heap_bytes()
+            + self.usage.u.capacity() * 4
+            + self.precedence.capacity() * 4
+            + self
+                .w_read_prev
+                .iter()
+                .chain(self.r_prev.iter())
+                .map(|v| v.capacity() * 4)
+                .sum::<usize>()
+    }
+
+    pub fn tape_bytes(&self) -> usize {
+        0
     }
 }
 
@@ -447,6 +621,29 @@ mod tests {
             check_core_gradients(&mut core, &xs, &ts, &mut rng, 6, 1e-2, 0.25);
         assert!(checked >= 30);
         assert!(failed * 10 <= checked, "{failed}/{checked} failed");
+    }
+
+    #[test]
+    fn infer_session_matches_train_forward_bitwise() {
+        let mut rng = Rng::new(36);
+        let mut core = DncCore::new(&small_cfg(36), &mut rng);
+        let (xs, _) = random_episode(4, 3, 5, &mut rng);
+        let mut st = core.infer_session(None);
+        let mut yi = Vec::new();
+        for ep in 0..2 {
+            core.reset();
+            for x in &xs {
+                let yt = core.forward(x);
+                core.infer_step(&mut st, x, &mut yi);
+                for (a, b) in yt.iter().zip(&yi) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ep {ep}");
+                }
+            }
+            core.rollback();
+            core.end_episode();
+            st.reset();
+            assert_eq!(st.tape_bytes(), 0);
+        }
     }
 
     #[test]

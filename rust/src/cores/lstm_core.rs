@@ -4,7 +4,7 @@
 
 use super::{Core, CoreConfig};
 use crate::nn::linear::Linear;
-use crate::nn::lstm::Lstm;
+use crate::nn::lstm::{Lstm, LstmState};
 use crate::nn::param::{HasParams, Param};
 use crate::util::rng::Rng;
 
@@ -31,6 +31,49 @@ impl LstmCore {
             dh_buf: Vec::new(),
             dx_buf: Vec::new(),
         }
+    }
+
+    /// Open a detached inference session (no external memory, so the state
+    /// is just the recurrent h/c).
+    pub fn infer_session(&self, _seed: Option<u64>) -> LstmSession {
+        LstmSession { lstm: self.lstm.new_state() }
+    }
+
+    /// One forward-only step; bit-identical to [`Core::forward_into`].
+    pub fn infer_step(&self, st: &mut LstmSession, x: &[f32], y: &mut Vec<f32>) {
+        self.lstm.infer_step(&mut st.lstm, x);
+        self.out.infer_into(&st.lstm.h, y);
+    }
+
+    pub fn params_heap_bytes(&self) -> usize {
+        self.lstm.params_heap_bytes() + self.out.params_heap_bytes()
+    }
+
+    pub fn params_len(&self) -> usize {
+        self.lstm.wx.len()
+            + self.lstm.wh.len()
+            + self.lstm.b.len()
+            + self.out.w.len()
+            + self.out.b.len()
+    }
+}
+
+/// Detached per-session state for the memoryless LSTM baseline.
+pub struct LstmSession {
+    lstm: LstmState,
+}
+
+impl LstmSession {
+    pub fn reset(&mut self) {
+        self.lstm.reset();
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.lstm.heap_bytes()
+    }
+
+    pub fn tape_bytes(&self) -> usize {
+        0
     }
 }
 

@@ -16,8 +16,9 @@ pub mod sdnc;
 
 use crate::ann::AnnKind;
 use crate::nn::linear::Linear;
-use crate::nn::lstm::Lstm;
+use crate::nn::lstm::{Lstm, LstmState};
 use crate::nn::param::{HasParams, Param};
+use crate::tensor::matrix::{gemm_nt, Matrix, GEMM_ROW_TILE};
 use crate::util::rng::Rng;
 
 /// Which model to build.
@@ -334,6 +335,248 @@ impl Controller {
 
     pub fn cache_bytes(&self) -> usize {
         self.lstm.cache_bytes() + self.head_lin.cache_bytes() + self.out_lin.cache_bytes()
+    }
+
+    // -- forward-only inference (shared weights, detached state) ------------
+
+    /// Fresh zeroed per-session controller state.
+    pub fn new_state(&self) -> ControllerState {
+        ControllerState {
+            lstm: self.lstm.new_state(),
+            p: Vec::new(),
+            x_in: Vec::new(),
+            o_in: Vec::new(),
+        }
+    }
+
+    /// Forward-only controller step against shared read-only weights:
+    /// h_t lands in `st.lstm.h`, the raw head parameters in `st.p`. Same
+    /// float-op order as [`Controller::step_hot`] (bit-identical outputs);
+    /// zero allocations once `st`'s buffers are warm.
+    pub fn infer_step(&self, st: &mut ControllerState, x: &[f32], r_prev: &[Vec<f32>]) {
+        st.x_in.clear();
+        st.x_in.extend_from_slice(x);
+        for r in r_prev {
+            st.x_in.extend_from_slice(r);
+        }
+        self.lstm.infer_step(&mut st.lstm, &st.x_in);
+        self.head_lin.infer_into(&st.lstm.h, &mut st.p);
+    }
+
+    /// Forward-only output projection y_t = W_out [h_t, r_t..].
+    pub fn infer_output(&self, st: &mut ControllerState, reads: &[Vec<f32>], y: &mut Vec<f32>) {
+        st.o_in.clear();
+        st.o_in.extend_from_slice(&st.lstm.h);
+        for r in reads {
+            st.o_in.extend_from_slice(r);
+        }
+        self.out_lin.infer_into(&st.o_in, y);
+    }
+
+    /// Heap bytes of the controller's parameters (one Arc-shared copy in
+    /// serving, regardless of session count).
+    pub fn params_heap_bytes(&self) -> usize {
+        self.lstm.params_heap_bytes()
+            + self.head_lin.params_heap_bytes()
+            + self.out_lin.params_heap_bytes()
+    }
+
+    /// Parameter scalar count through `&self` (the `HasParams` walk needs
+    /// `&mut`, which an Arc-shared model cannot offer).
+    pub fn params_len(&self) -> usize {
+        self.lstm.wx.len()
+            + self.lstm.wh.len()
+            + self.lstm.b.len()
+            + self.head_lin.w.len()
+            + self.head_lin.b.len()
+            + self.out_lin.w.len()
+            + self.out_lin.b.len()
+    }
+}
+
+/// Detached per-session controller state: the mutable half of the
+/// parameters/state split. One trained [`Controller`] (read-only, behind an
+/// `Arc`) drives any number of these concurrently.
+pub struct ControllerState {
+    pub lstm: LstmState,
+    /// Raw head parameters after the last infer step.
+    pub p: Vec<f32>,
+    /// [x_t, r_{t-1}..] staging (fixed shape, reused every step).
+    x_in: Vec<f32>,
+    /// [h_t, r_t..] staging.
+    o_in: Vec<f32>,
+}
+
+impl ControllerState {
+    /// Zero the recurrent state (session episode boundary).
+    pub fn reset(&mut self) {
+        self.lstm.reset();
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.lstm.heap_bytes()
+            + (self.p.capacity() + self.x_in.capacity() + self.o_in.capacity()) * 4
+    }
+}
+
+/// Reusable gather/scatter scratch for the batched serving tick. One per
+/// `SessionManager`; capacities converge to the largest tick seen.
+pub struct CtrlBatch {
+    x_in: Matrix,
+    h: Matrix,
+    z: Matrix,
+    zh: Matrix,
+    p: Matrix,
+    o_in: Matrix,
+    y: Matrix,
+}
+
+impl Default for CtrlBatch {
+    fn default() -> Self {
+        CtrlBatch::new()
+    }
+}
+
+impl CtrlBatch {
+    pub fn new() -> CtrlBatch {
+        CtrlBatch {
+            x_in: Matrix::zeros(0, 0),
+            h: Matrix::zeros(0, 0),
+            z: Matrix::zeros(0, 0),
+            zh: Matrix::zeros(0, 0),
+            p: Matrix::zeros(0, 0),
+            o_in: Matrix::zeros(0, 0),
+            y: Matrix::zeros(0, 0),
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.x_in.heap_bytes()
+            + self.h.heap_bytes()
+            + self.z.heap_bytes()
+            + self.zh.heap_bytes()
+            + self.p.heap_bytes()
+            + self.o_in.heap_bytes()
+            + self.y.heap_bytes()
+    }
+}
+
+/// Resize a scratch matrix in place (capacity retained, contents zeroed).
+fn fit(m: &mut Matrix, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.clear();
+    m.data.resize(rows * cols, 0.0);
+}
+
+/// One batched serving tick over B same-model sessions: the controller's
+/// four projections — input gates `X Wxᵀ`, recurrent gates `H Whᵀ`, head
+/// parameters `H' W_headᵀ` and output `[H', R] W_outᵀ` — each run as ONE
+/// GEMM across all sessions. Row counts are padded to [`GEMM_ROW_TILE`] so
+/// a session's bits never depend on how many other sessions shared its
+/// tick (pinned by `gemm_nt_rows_are_batch_size_independent_when_tile_padded`).
+/// The memory phase between head params and output is inherently
+/// per-session (sparse reads/writes on private state) and runs through the
+/// `mem_phase` callback, which consumes `ControllerState::p` and refreshes
+/// the session's read vectors.
+///
+/// Numerics note: the coalesced GEMMs reorder float additions relative to
+/// the per-session `gemv` path, so batched outputs match single-step
+/// outputs to kernel-reassociation tolerance (~1e-6 relative), not
+/// bitwise — the same caveat class as DESIGN.md's blocked-kernel note.
+/// Batched outputs ARE bitwise deterministic for a given session stream.
+pub fn infer_tick<S, M>(
+    ctrl: &Controller,
+    batch: &mut CtrlBatch,
+    sessions: &mut [&mut S],
+    xs: &[&[f32]],
+    ys: &mut [Vec<f32>],
+    ctrl_state: fn(&mut S) -> &mut ControllerState,
+    reads: fn(&S) -> &[Vec<f32>],
+    mut mem_phase: M,
+) where
+    M: FnMut(&mut S),
+{
+    let b = sessions.len();
+    assert_eq!(xs.len(), b);
+    assert_eq!(ys.len(), b);
+    if b == 0 {
+        return;
+    }
+    let bp = b.div_ceil(GEMM_ROW_TILE) * GEMM_ROW_TILE;
+    let in_dim = ctrl.lstm.input;
+    let hidden = ctrl.hidden;
+
+    // 1. Gather [x, r_prev..] rows and H_prev (pad rows stay zero).
+    fit(&mut batch.x_in, bp, in_dim);
+    fit(&mut batch.h, bp, hidden);
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let x = xs[i];
+        {
+            let row = batch.x_in.row_mut(i);
+            row[..x.len()].copy_from_slice(x);
+            let mut off = x.len();
+            for r in reads(&**s) {
+                row[off..off + r.len()].copy_from_slice(r);
+                off += r.len();
+            }
+            debug_assert_eq!(off, in_dim);
+        }
+        batch.h.row_mut(i).copy_from_slice(&ctrl_state(&mut **s).lstm.h);
+    }
+
+    // 2. Gate pre-activations: Zx = X Wxᵀ and Zh = H Whᵀ, one GEMM each.
+    fit(&mut batch.z, bp, 4 * hidden);
+    gemm_nt(&mut batch.z, &batch.x_in, &ctrl.lstm.wx.w);
+    fit(&mut batch.zh, bp, 4 * hidden);
+    gemm_nt(&mut batch.zh, &batch.h, &ctrl.lstm.wh.w);
+
+    // 3. Per-session nonlinearity; the updated h's re-fill batch.h.
+    for (i, s) in sessions.iter_mut().enumerate() {
+        {
+            let zrow = batch.z.row_mut(i);
+            for (zv, (bv, zhv)) in zrow
+                .iter_mut()
+                .zip(ctrl.lstm.b.w.data.iter().zip(batch.zh.row(i)))
+            {
+                // Same add order as the single-step path: (zx + b) + zh.
+                *zv = (*zv + bv) + zhv;
+            }
+        }
+        let st = ctrl_state(&mut **s);
+        ctrl.lstm.infer_step_with_z(&mut st.lstm, batch.z.row(i));
+        batch.h.row_mut(i).copy_from_slice(&st.lstm.h);
+    }
+
+    // 4. Head parameters: P = H' W_headᵀ + b, one GEMM; scatter, then the
+    //    per-session memory phase.
+    fit(&mut batch.p, bp, ctrl.head_lin.out_dim());
+    ctrl.head_lin.infer_batch(&batch.h, &mut batch.p);
+    for (i, s) in sessions.iter_mut().enumerate() {
+        {
+            let st = ctrl_state(&mut **s);
+            st.p.clear();
+            st.p.extend_from_slice(batch.p.row(i));
+        }
+        mem_phase(&mut **s);
+    }
+
+    // 5. Output: Y = [H', R] W_outᵀ + b, one GEMM; scatter into ys.
+    fit(&mut batch.o_in, bp, ctrl.out_lin.in_dim());
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let row = batch.o_in.row_mut(i);
+        row[..hidden].copy_from_slice(&ctrl_state(&mut **s).lstm.h);
+        let mut off = hidden;
+        for r in reads(&**s) {
+            row[off..off + r.len()].copy_from_slice(r);
+            off += r.len();
+        }
+    }
+    fit(&mut batch.y, bp, ctrl.out_lin.out_dim());
+    ctrl.out_lin.infer_batch(&batch.o_in, &mut batch.y);
+    for (i, y) in ys.iter_mut().enumerate() {
+        y.clear();
+        y.extend_from_slice(batch.y.row(i));
     }
 }
 

@@ -9,7 +9,7 @@
 //! paper measures in Fig 1.
 
 use super::addressing::{content_weights, content_weights_backward, ContentRead};
-use super::{Controller, Core, CoreConfig};
+use super::{Controller, ControllerState, Core, CoreConfig};
 use crate::memory::store::MemoryStore;
 use crate::nn::act::{dsigmoid, oneplus, sigmoid};
 use crate::nn::param::{HasParams, Param};
@@ -82,6 +82,107 @@ impl NtmCore {
             dmem: Matrix::zeros(n, cfg.word),
             cfg: cfg.clone(),
         }
+    }
+
+    /// Open a detached inference session (zero-initialized memory, uniform
+    /// initial addressing — same as a freshly reset training core).
+    pub fn infer_session(&self, _seed: Option<u64>) -> NtmSession {
+        let n = self.cfg.mem_words;
+        NtmSession {
+            ctrl: self.ctrl.new_state(),
+            mem: MemoryStore::zeros(n, self.cfg.word),
+            w_prev: vec![vec![1.0 / n as f32; n]; self.cfg.heads],
+            r_prev: vec![vec![0.0; self.cfg.word]; self.cfg.heads],
+        }
+    }
+
+    /// One forward-only step: bit-identical to [`Core::forward_into`] on a
+    /// freshly reset core, minus the per-head memory snapshots of the
+    /// training tape. (Dense baseline: the step allocates — NTM is not on
+    /// the zero-allocation serving path.)
+    pub fn infer_step(&self, st: &mut NtmSession, x: &[f32], y: &mut Vec<f32>) {
+        let n = self.cfg.mem_words;
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        self.ctrl.infer_step(&mut st.ctrl, x, &st.r_prev);
+        // Addressing for every head, from M_{t-1} (before any write).
+        let mut finals: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+            Vec::with_capacity(self.cfg.heads);
+        for hi in 0..self.cfg.heads {
+            let ph = &st.ctrl.p[hi * hd..(hi + 1) * hd];
+            let query = &ph[..w];
+            let beta_raw = ph[w];
+            let g = sigmoid(ph[w + 1]);
+            let mut shift = ph[w + 2..w + 5].to_vec();
+            softmax_inplace(&mut shift);
+            let gamma = oneplus(ph[w + 5]);
+            let erase: Vec<f32> = ph[w + 6..2 * w + 6].iter().map(|&v| sigmoid(v)).collect();
+            let add = ph[2 * w + 6..3 * w + 6].to_vec();
+            let read = content_weights(query, beta_raw, &st.mem, (0..n).collect());
+            let mut w_g = vec![0.0f32; n];
+            for i in 0..n {
+                w_g[i] = g * read.weights[i] + (1.0 - g) * st.w_prev[hi][i];
+            }
+            let w_s = shift_conv(&w_g, &shift);
+            let (w_final, _, _) = sharpen(&w_s, gamma);
+            finals.push((w_final, erase, add));
+        }
+        // Sequential erase/add writes, then reads from M_t.
+        for (wf, erase, add) in &finals {
+            st.mem.apply_write_dense(wf, erase, add);
+        }
+        for (hi, (wf, _, _)) in finals.iter().enumerate() {
+            let mut r = vec![0.0; w];
+            st.mem.read_dense(wf, &mut r);
+            st.w_prev[hi] = wf.clone();
+            st.r_prev[hi] = r;
+        }
+        self.ctrl.infer_output(&mut st.ctrl, &st.r_prev, y);
+    }
+
+    pub fn params_heap_bytes(&self) -> usize {
+        self.ctrl.params_heap_bytes()
+    }
+
+    pub fn params_len(&self) -> usize {
+        self.ctrl.params_len()
+    }
+}
+
+/// Detached per-session state for NTM serving.
+pub struct NtmSession {
+    ctrl: ControllerState,
+    mem: MemoryStore,
+    w_prev: Vec<Vec<f32>>,
+    r_prev: Vec<Vec<f32>>,
+}
+
+impl NtmSession {
+    pub fn reset(&mut self) {
+        self.ctrl.reset();
+        self.mem.fill(0.0);
+        let n = self.w_prev.first().map(|v| v.len()).unwrap_or(0);
+        for v in &mut self.w_prev {
+            v.iter_mut().for_each(|x| *x = 1.0 / n as f32);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.mem.heap_bytes()
+            + self.ctrl.heap_bytes()
+            + self
+                .w_prev
+                .iter()
+                .chain(self.r_prev.iter())
+                .map(|v| v.capacity() * 4)
+                .sum::<usize>()
+    }
+
+    pub fn tape_bytes(&self) -> usize {
+        0
     }
 }
 
@@ -451,6 +552,29 @@ mod tests {
             core.backward(dy);
         }
         assert_eq!(core.mem.snapshot(), start);
+    }
+
+    #[test]
+    fn infer_session_matches_train_forward_bitwise() {
+        let mut rng = Rng::new(26);
+        let mut core = NtmCore::new(&small_cfg(26), &mut rng);
+        let (xs, _) = random_episode(4, 3, 5, &mut rng);
+        let mut st = core.infer_session(None);
+        let mut yi = Vec::new();
+        for ep in 0..2 {
+            core.reset();
+            for x in &xs {
+                let yt = core.forward(x);
+                core.infer_step(&mut st, x, &mut yi);
+                for (a, b) in yt.iter().zip(&yi) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ep {ep}");
+                }
+            }
+            core.rollback();
+            core.end_episode();
+            st.reset();
+            assert_eq!(st.tape_bytes(), 0);
+        }
     }
 
     #[test]

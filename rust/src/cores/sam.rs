@@ -20,7 +20,7 @@
 //! touch the allocator zero times (rust/tests/zero_alloc.rs).
 
 use super::addressing::{ContentRead, WriteGate};
-use super::{Controller, Core, CoreConfig};
+use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
 use crate::memory::engine::{SparseMemoryEngine, TopKRead};
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::SparseVec;
@@ -54,6 +54,11 @@ pub struct SamCore {
     cfg: CoreConfig,
     ctrl: Controller,
     engine: SparseMemoryEngine,
+    /// Seeds the training engine was built from, recorded so
+    /// [`SamCore::infer_session`] can construct per-session engines whose
+    /// episode-start state is bit-identical to the trained core's.
+    mem_seed: u64,
+    ann_seed: u64,
     /// Per-head previous read weights / read words (recurrent memory state).
     w_read_prev: Vec<SparseVec>,
     r_prev: Vec<Vec<f32>>,
@@ -89,17 +94,24 @@ impl SamCore {
             head_dim(cfg.word),
             &mut rng,
         );
-        let engine = SparseMemoryEngine::new_sparse(
+        // Same seed draw order as `SparseMemoryEngine::new_sparse`, drawn
+        // here so sessions can re-derive the identical episode-start state.
+        let mem_seed = rng.next_u64();
+        let ann_seed = rng.next_u64();
+        let engine = SparseMemoryEngine::new_sparse_from_seeds(
             cfg.mem_words,
             cfg.word,
             cfg.k,
             cfg.delta,
             cfg.ann,
-            &mut rng,
+            mem_seed,
+            ann_seed,
         );
         SamCore {
             ctrl,
             engine,
+            mem_seed,
+            ann_seed,
             w_read_prev: vec![SparseVec::new(); cfg.heads],
             r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
             tape: Vec::new(),
@@ -124,6 +136,124 @@ impl SamCore {
         &self.engine
     }
 
+    // -- forward-only inference (shared weights, detached state) ------------
+
+    /// Open a detached inference session: fresh per-session memory and
+    /// zeroed recurrent state; the core itself is only read, so one
+    /// `Arc<SamCore>` serves any number of sessions concurrently.
+    /// `seed: None` (the parity default) reuses the trained core's own
+    /// memory/ANN seeds so session outputs are bit-identical to train-mode
+    /// forwards; `Some(s)` derives per-session init noise instead.
+    pub fn infer_session(&self, seed: Option<u64>) -> SamSession {
+        let (mem_seed, ann_seed) = match seed {
+            None => (self.mem_seed, self.ann_seed),
+            Some(s) => {
+                let mut r = Rng::new(s);
+                (r.next_u64(), r.next_u64())
+            }
+        };
+        SamSession {
+            ctrl: self.ctrl.new_state(),
+            engine: SparseMemoryEngine::new_sparse_from_seeds(
+                self.cfg.mem_words,
+                self.cfg.word,
+                self.cfg.k,
+                self.cfg.delta,
+                self.cfg.ann,
+                mem_seed,
+                ann_seed,
+            ),
+            w_read_prev: vec![SparseVec::new(); self.cfg.heads],
+            r_prev: vec![vec![0.0; self.cfg.word]; self.cfg.heads],
+            ws: Workspace::new(),
+            queries: vec![Vec::new(); self.cfg.heads],
+            betas: vec![0.0; self.cfg.heads],
+            topk_tmp: Vec::new(),
+        }
+    }
+
+    /// One forward-only step against shared read-only weights. Same math
+    /// and float-op order as [`Core::forward_into`] on a freshly reset core
+    /// (bit-identical outputs for matching seeds), but no journal, no tape
+    /// and no gradient state: steady-state calls perform **zero** heap
+    /// allocations and the session's tape bytes stay 0
+    /// (rust/tests/zero_alloc.rs, rust/tests/serving.rs).
+    pub fn infer_step(&self, st: &mut SamSession, x: &[f32], y: &mut Vec<f32>) {
+        self.ctrl.infer_step(&mut st.ctrl, x, &st.r_prev);
+        self.infer_mem_phase(st);
+        self.ctrl.infer_output(&mut st.ctrl, &st.r_prev, y);
+    }
+
+    /// Batched serving tick: the controller projections of every session
+    /// coalesce into one GEMM each (see [`super::infer_tick`]); the sparse
+    /// memory phase stays per-session.
+    pub fn infer_step_batch(
+        &self,
+        batch: &mut CtrlBatch,
+        sessions: &mut [&mut SamSession],
+        xs: &[&[f32]],
+        ys: &mut [Vec<f32>],
+    ) {
+        super::infer_tick(
+            &self.ctrl,
+            batch,
+            sessions,
+            xs,
+            ys,
+            |s| &mut s.ctrl,
+            |s| &s.r_prev,
+            |s| self.infer_mem_phase(s),
+        );
+    }
+
+    /// The memory phase of an infer step: per-head gated writes (eq. 5,
+    /// journal-free) then one batched top-K read for all heads (eq. 2/4),
+    /// consuming the raw head params in `st.ctrl.p`.
+    fn infer_mem_phase(&self, st: &mut SamSession) {
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        for hi in 0..self.cfg.heads {
+            let (alpha_raw, gamma_raw) =
+                (st.ctrl.p[hi * hd + 2 * w], st.ctrl.p[hi * hd + 2 * w + 1]);
+            let wts = st.engine.infer_write(
+                alpha_raw,
+                gamma_raw,
+                &st.w_read_prev[hi],
+                &st.ctrl.p[hi * hd + w..hi * hd + 2 * w],
+                &mut st.ws,
+            );
+            st.ws.recycle_sparse(wts);
+        }
+        for hi in 0..self.cfg.heads {
+            st.queries[hi].clear();
+            st.queries[hi].extend_from_slice(&st.ctrl.p[hi * hd..hi * hd + w]);
+            st.betas[hi] = st.ctrl.p[hi * hd + 2 * w + 2];
+        }
+        debug_assert!(st.topk_tmp.is_empty());
+        let mut topk = std::mem::take(&mut st.topk_tmp);
+        st.engine.read_topk_into(&st.queries, &st.betas, &mut topk, &mut st.ws);
+        for (hi, tk) in topk.drain(..).enumerate() {
+            let old = std::mem::replace(&mut st.w_read_prev[hi], tk.weights);
+            st.ws.recycle_sparse(old);
+            st.r_prev[hi].clear();
+            st.r_prev[hi].extend_from_slice(&tk.r);
+            st.ws.recycle_f32(tk.r);
+            st.engine.recycle_content_read(tk.read, &mut st.ws);
+        }
+        st.topk_tmp = topk;
+    }
+
+    /// Heap bytes of the trained parameters (one Arc-shared copy in
+    /// serving, regardless of session count).
+    pub fn params_heap_bytes(&self) -> usize {
+        self.ctrl.params_heap_bytes()
+    }
+
+    /// Parameter scalar count through `&self`.
+    pub fn params_len(&self) -> usize {
+        self.ctrl.params_len()
+    }
+
     /// Recycle a popped tape step's buffers and park its shell.
     fn recycle_step(&mut self, mut step: SamStep) {
         for h in step.heads.drain(..) {
@@ -134,6 +264,59 @@ impl SamCore {
             self.engine.recycle_content_read(h.read, &mut self.ws);
         }
         self.spare_steps.push(step);
+    }
+}
+
+/// Detached per-session episodic state for SAM serving: everything an
+/// infer step mutates — controller h/c, the session's private memory
+/// (store + ANN + LRA ring, no journals), recurrent read state and the
+/// buffer pools. Parameters live in the shared [`SamCore`].
+pub struct SamSession {
+    ctrl: ControllerState,
+    engine: SparseMemoryEngine,
+    w_read_prev: Vec<SparseVec>,
+    r_prev: Vec<Vec<f32>>,
+    ws: Workspace,
+    queries: Vec<Vec<f32>>,
+    betas: Vec<f32>,
+    topk_tmp: Vec<TopKRead>,
+}
+
+impl SamSession {
+    /// Start a new episode: memory back to its seeded init, recurrent
+    /// state zeroed. Allocation-free (no journals to unwind in infer mode).
+    pub fn reset(&mut self) {
+        self.ctrl.reset();
+        self.engine.reinit();
+        for hi in 0..self.w_read_prev.len() {
+            let old = std::mem::take(&mut self.w_read_prev[hi]);
+            self.ws.recycle_sparse(old);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// The session's memory engine (read-only) — for accounting tests.
+    pub fn engine(&self) -> &SparseMemoryEngine {
+        &self.engine
+    }
+
+    /// Heap bytes of this session's state; the memory store dominates.
+    /// Parameters are deliberately excluded — they are the shared model's.
+    pub fn heap_bytes(&self) -> usize {
+        self.engine.heap_bytes()
+            + self.ws.heap_bytes()
+            + self.ctrl.heap_bytes()
+            + self.w_read_prev.iter().map(|v| v.heap_bytes()).sum::<usize>()
+            + self.r_prev.iter().map(|r| r.capacity() * 4).sum::<usize>()
+            + self.queries.iter().map(|q| q.capacity() * 4).sum::<usize>()
+    }
+
+    /// BPTT tape bytes — 0 by construction in infer mode (asserted while
+    /// serving).
+    pub fn tape_bytes(&self) -> usize {
+        self.engine.tape_bytes()
     }
 }
 
@@ -482,6 +665,59 @@ mod tests {
         }
         let spread = (sizes[2] as f64 - sizes[0] as f64).abs() / sizes[0] as f64;
         assert!(spread < 0.1, "tape grows with N: {sizes:?}");
+    }
+
+    #[test]
+    fn infer_session_matches_train_forward_bitwise() {
+        let mut rng = Rng::new(9);
+        let mut core = SamCore::new(&small_cfg(9), &mut rng);
+        let (xs, _) = random_episode(4, 3, 6, &mut rng);
+        let mut st = core.infer_session(None);
+        let mut yi = Vec::new();
+        for ep in 0..2 {
+            core.reset();
+            for x in &xs {
+                let yt = core.forward(x);
+                core.infer_step(&mut st, x, &mut yi);
+                for (a, b) in yt.iter().zip(&yi) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ep {ep}");
+                }
+            }
+            core.rollback();
+            core.end_episode();
+            st.reset();
+            assert_eq!(st.tape_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn infer_batch_is_composition_independent() {
+        // The same session stream stepped alone and co-batched with others
+        // must produce identical bits (tile padding, see infer_tick docs).
+        let mut rng = Rng::new(10);
+        let core = SamCore::new(&small_cfg(10), &mut rng);
+        let (xs, _) = random_episode(4, 3, 5, &mut rng);
+        let mut batch = CtrlBatch::new();
+        let mut alone = core.infer_session(Some(42));
+        let mut co_a = core.infer_session(Some(42));
+        let mut co_b = core.infer_session(Some(43));
+        let mut co_c = core.infer_session(Some(44));
+        let mut y1 = vec![Vec::new()];
+        let mut y3 = vec![Vec::new(), Vec::new(), Vec::new()];
+        for x in &xs {
+            let xr: &[f32] = x.as_slice();
+            {
+                let mut s = [&mut alone];
+                core.infer_step_batch(&mut batch, &mut s, &[xr], &mut y1);
+            }
+            {
+                let mut s = [&mut co_a, &mut co_b, &mut co_c];
+                core.infer_step_batch(&mut batch, &mut s, &[xr, xr, xr], &mut y3);
+            }
+            for (a, b) in y1[0].iter().zip(&y3[0]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "batch composition changed bits");
+            }
+        }
     }
 
     #[test]

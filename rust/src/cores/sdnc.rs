@@ -21,7 +21,7 @@
 //! (rust/tests/zero_alloc.rs).
 
 use super::addressing::{ContentRead, WriteGate};
-use super::{Controller, Core, CoreConfig};
+use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
 use crate::memory::engine::SparseMemoryEngine;
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::{SparseLinkMatrix, SparseVec};
@@ -66,6 +66,9 @@ pub struct SdncCore {
     cfg: CoreConfig,
     ctrl: Controller,
     engine: SparseMemoryEngine,
+    /// Engine seeds recorded for [`SdncCore::infer_session`] parity.
+    mem_seed: u64,
+    ann_seed: u64,
     n_link: SparseLinkMatrix,
     p_link: SparseLinkMatrix,
     precedence: SparseVec,
@@ -107,17 +110,23 @@ impl SdncCore {
             head_dim(cfg.word),
             &mut rng,
         );
-        let engine = SparseMemoryEngine::new_sparse(
+        // Same seed draw order as `SparseMemoryEngine::new_sparse`.
+        let mem_seed = rng.next_u64();
+        let ann_seed = rng.next_u64();
+        let engine = SparseMemoryEngine::new_sparse_from_seeds(
             cfg.mem_words,
             cfg.word,
             cfg.k,
             cfg.delta,
             cfg.ann,
-            &mut rng,
+            mem_seed,
+            ann_seed,
         );
         SdncCore {
             ctrl,
             engine,
+            mem_seed,
+            ann_seed,
             n_link: SparseLinkMatrix::new(cfg.k_l),
             p_link: SparseLinkMatrix::new(cfg.k_l),
             precedence: SparseVec::new(),
@@ -317,6 +326,212 @@ impl SdncCore {
         self.ws.recycle_sparse(cur);
     }
 
+    // -- forward-only inference (shared weights, detached state) ------------
+
+    /// Open a detached inference session (see [`crate::cores::sam::SamCore::infer_session`]
+    /// for the seed contract: `None` = bit-parity with the trained core).
+    pub fn infer_session(&self, seed: Option<u64>) -> SdncSession {
+        let (mem_seed, ann_seed) = match seed {
+            None => (self.mem_seed, self.ann_seed),
+            Some(s) => {
+                let mut r = Rng::new(s);
+                (r.next_u64(), r.next_u64())
+            }
+        };
+        SdncSession {
+            ctrl: self.ctrl.new_state(),
+            engine: SparseMemoryEngine::new_sparse_from_seeds(
+                self.cfg.mem_words,
+                self.cfg.word,
+                self.cfg.k,
+                self.cfg.delta,
+                self.cfg.ann,
+                mem_seed,
+                ann_seed,
+            ),
+            n_link: SparseLinkMatrix::new(self.cfg.k_l),
+            p_link: SparseLinkMatrix::new(self.cfg.k_l),
+            precedence: SparseVec::new(),
+            w_read_prev: vec![SparseVec::new(); self.cfg.heads],
+            w_read_used: vec![SparseVec::new(); self.cfg.heads],
+            r_prev: vec![vec![0.0; self.cfg.word]; self.cfg.heads],
+            ws: Workspace::new(),
+            queries: vec![Vec::new(); self.cfg.heads],
+            betas: vec![0.0; self.cfg.heads],
+            content_tmp: Vec::new(),
+            affected_buf: Vec::new(),
+        }
+    }
+
+    /// One forward-only step: bit-identical to [`Core::forward_into`] on a
+    /// freshly reset core for matching seeds, with no journals (memory or
+    /// linkage) and zero tape bytes.
+    pub fn infer_step(&self, st: &mut SdncSession, x: &[f32], y: &mut Vec<f32>) {
+        self.ctrl.infer_step(&mut st.ctrl, x, &st.r_prev);
+        self.infer_mem_phase(st);
+        self.ctrl.infer_output(&mut st.ctrl, &st.r_prev, y);
+    }
+
+    /// Batched serving tick (see [`super::infer_tick`]).
+    pub fn infer_step_batch(
+        &self,
+        batch: &mut CtrlBatch,
+        sessions: &mut [&mut SdncSession],
+        xs: &[&[f32]],
+        ys: &mut [Vec<f32>],
+    ) {
+        super::infer_tick(
+            &self.ctrl,
+            batch,
+            sessions,
+            xs,
+            ys,
+            |s| &mut s.ctrl,
+            |s| &s.r_prev,
+            |s| self.infer_mem_phase(s),
+        );
+    }
+
+    /// Memory + linkage phase of an infer step: SAM-style journal-free
+    /// writes, the sparse temporal-link update with displaced rows recycled
+    /// instead of journaled, then the 3-way mixed reads.
+    fn infer_mem_phase(&self, st: &mut SdncSession) {
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        // --- writes (aggregate weights feed the link update, eq. 17-20) ---
+        let mut w_agg = st.ws.take_sparse();
+        for hi in 0..self.cfg.heads {
+            let (ar, gr) = (st.ctrl.p[hi * hd + 2 * w], st.ctrl.p[hi * hd + 2 * w + 1]);
+            st.w_read_used[hi] = std::mem::take(&mut st.w_read_prev[hi]);
+            let wts = st.engine.infer_write(
+                ar,
+                gr,
+                &st.w_read_used[hi],
+                &st.ctrl.p[hi * hd + w..hi * hd + 2 * w],
+                &mut st.ws,
+            );
+            let mut merged = st.ws.take_sparse();
+            w_agg.add_into(&wts, &mut merged);
+            std::mem::swap(&mut w_agg, &mut merged);
+            st.ws.recycle_sparse(merged);
+            st.ws.recycle_sparse(wts);
+        }
+        let s = w_agg.sum();
+        if s > 1.0 {
+            w_agg.scale(1.0 / s);
+        }
+        self.infer_update_links(st, &w_agg);
+        st.ws.recycle_sparse(w_agg);
+
+        // --- reads: 3-way mix of content / forward-link / backward-link ---
+        for hi in 0..self.cfg.heads {
+            st.queries[hi].clear();
+            st.queries[hi].extend_from_slice(&st.ctrl.p[hi * hd..hi * hd + w]);
+            st.betas[hi] = st.ctrl.p[hi * hd + 2 * w + 2];
+        }
+        debug_assert!(st.content_tmp.is_empty());
+        let mut crs = std::mem::take(&mut st.content_tmp);
+        st.engine.content_read_many_into(&st.queries, &st.betas, &mut crs, &mut st.ws);
+        for (hi, read) in crs.drain(..).enumerate() {
+            let mut modes = [
+                st.ctrl.p[hi * hd + 2 * w + 3],
+                st.ctrl.p[hi * hd + 2 * w + 4],
+                st.ctrl.p[hi * hd + 2 * w + 5],
+            ];
+            softmax_inplace(&mut modes);
+            let mut fwd = st.ws.take_sparse();
+            let mut bwd = st.ws.take_sparse();
+            let mut pairs = st.ws.take_pairs();
+            {
+                let wp = &st.w_read_used[hi];
+                Self::follow_pairs(&st.p_link, wp, &mut pairs);
+                fwd.assign_from_pairs(&mut pairs);
+                Self::follow_pairs(&st.n_link, wp, &mut pairs);
+                bwd.assign_from_pairs(&mut pairs);
+            }
+            pairs.clear();
+            pairs.extend(
+                read.rows
+                    .iter()
+                    .copied()
+                    .zip(read.weights.iter().map(|&v| v * modes[1])),
+            );
+            let mut content_part = st.ws.take_sparse();
+            content_part.assign_from_pairs(&mut pairs);
+            st.ws.recycle_pairs(pairs);
+            let mut mixed = st.ws.take_sparse();
+            content_part.add_scaled_into(modes[0], &bwd, &mut mixed);
+            let mut w_read = st.ws.take_sparse();
+            mixed.add_scaled_into(modes[2], &fwd, &mut w_read);
+            st.ws.recycle_sparse(content_part);
+            st.ws.recycle_sparse(mixed);
+            w_read.truncate_top_k(self.cfg.k + 2 * self.cfg.k_l);
+            st.engine.read_mixture_into(&w_read, &mut st.r_prev[hi]);
+            let old = std::mem::replace(&mut st.w_read_prev[hi], w_read);
+            st.ws.recycle_sparse(old);
+            st.ws.recycle_sparse(fwd);
+            st.ws.recycle_sparse(bwd);
+            st.engine.recycle_content_read(read, &mut st.ws);
+            let used = std::mem::take(&mut st.w_read_used[hi]);
+            st.ws.recycle_sparse(used);
+        }
+        st.content_tmp = crs;
+    }
+
+    /// The sparse linkage update (eq. 17-20) without journaling: displaced
+    /// N/P rows and the old precedence recycle into the session workspace
+    /// instead of onto a rollback tape. Same merge math and row-visit order
+    /// as [`SdncCore::update_links_into`], so values are bit-identical.
+    fn infer_update_links(&self, st: &mut SdncSession, w: &SparseVec) {
+        let p_prev = std::mem::replace(&mut st.precedence, st.ws.take_sparse());
+        let mut affected = std::mem::take(&mut st.affected_buf);
+        affected.clear();
+        affected.extend(p_prev.idx.iter().copied());
+        for (i, wi) in w.iter() {
+            let old = st.n_link.take_row(i);
+            if let Some(r) = &old {
+                affected.extend(r.idx.iter().copied());
+            }
+            let mut new_row = st.ws.take_sparse();
+            Self::merge_n_row(old.as_ref(), wi, &p_prev, i, &mut new_row);
+            if let Some(displaced) = st.n_link.set_row_recycling(i, new_row) {
+                st.ws.recycle_sparse(displaced);
+            }
+            if let Some(old) = old {
+                st.ws.recycle_sparse(old);
+            }
+        }
+        affected.sort_unstable();
+        affected.dedup();
+        for &i in affected.iter() {
+            let old = st.p_link.take_row(i);
+            let mut new_row = st.ws.take_sparse();
+            Self::merge_p_row(old.as_ref(), w, p_prev.get(i), i, &mut new_row);
+            if let Some(displaced) = st.p_link.set_row_recycling(i, new_row) {
+                st.ws.recycle_sparse(displaced);
+            }
+            if let Some(old) = old {
+                st.ws.recycle_sparse(old);
+            }
+        }
+        st.affected_buf = affected;
+        let sum_w = w.sum().min(1.0);
+        let mut newp = std::mem::take(&mut st.precedence);
+        w.add_scaled_into(1.0 - sum_w, &p_prev, &mut newp);
+        newp.truncate_top_k(self.cfg.k_l);
+        st.precedence = newp;
+        st.ws.recycle_sparse(p_prev);
+    }
+
+    /// Heap bytes of the trained parameters.
+    pub fn params_heap_bytes(&self) -> usize {
+        self.ctrl.params_heap_bytes()
+    }
+
+    pub fn params_len(&self) -> usize {
+        self.ctrl.params_len()
+    }
+
     /// Recycle a popped tape step's buffers and park its shell.
     fn recycle_step(&mut self, mut step: SdncStep) {
         debug_assert!(step.links.n_rows.is_empty() && step.links.p_rows.is_empty());
@@ -331,6 +546,79 @@ impl SdncCore {
             self.engine.recycle_content_read(h.read, &mut self.ws);
         }
         self.spare_steps.push(step);
+    }
+}
+
+/// Detached per-session episodic state for SDNC serving: controller h/c,
+/// private memory engine (no journals), sparse temporal-link state and the
+/// buffer pools. Parameters live in the shared [`SdncCore`].
+pub struct SdncSession {
+    ctrl: ControllerState,
+    engine: SparseMemoryEngine,
+    n_link: SparseLinkMatrix,
+    p_link: SparseLinkMatrix,
+    precedence: SparseVec,
+    w_read_prev: Vec<SparseVec>,
+    /// w̃^R_{t-1} staged per head for this step's write gate + link follows.
+    w_read_used: Vec<SparseVec>,
+    r_prev: Vec<Vec<f32>>,
+    ws: Workspace,
+    queries: Vec<Vec<f32>>,
+    betas: Vec<f32>,
+    content_tmp: Vec<ContentRead>,
+    affected_buf: Vec<usize>,
+}
+
+impl SdncSession {
+    /// Start a new episode: memory re-seeded, linkage cleared, recurrent
+    /// state zeroed. Allocation-free once the pools are warm.
+    pub fn reset(&mut self) {
+        self.ctrl.reset();
+        self.engine.reinit();
+        for (_, r) in self.n_link.rows.drain() {
+            self.ws.recycle_sparse(r);
+        }
+        for (_, r) in self.p_link.rows.drain() {
+            self.ws.recycle_sparse(r);
+        }
+        let old = std::mem::take(&mut self.precedence);
+        self.ws.recycle_sparse(old);
+        for hi in 0..self.w_read_prev.len() {
+            let old = std::mem::take(&mut self.w_read_prev[hi]);
+            self.ws.recycle_sparse(old);
+            let old = std::mem::take(&mut self.w_read_used[hi]);
+            self.ws.recycle_sparse(old);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        let links: usize = self
+            .n_link
+            .rows
+            .values()
+            .chain(self.p_link.rows.values())
+            .map(|r| r.heap_bytes() + 64)
+            .sum();
+        self.engine.heap_bytes()
+            + self.ws.heap_bytes()
+            + self.ctrl.heap_bytes()
+            + links
+            + self.precedence.heap_bytes()
+            + self
+                .w_read_prev
+                .iter()
+                .chain(self.w_read_used.iter())
+                .map(|v| v.heap_bytes())
+                .sum::<usize>()
+            + self.r_prev.iter().map(|r| r.capacity() * 4).sum::<usize>()
+            + self.queries.iter().map(|q| q.capacity() * 4).sum::<usize>()
+    }
+
+    pub fn tape_bytes(&self) -> usize {
+        self.engine.tape_bytes()
     }
 }
 
@@ -753,6 +1041,30 @@ mod tests {
             } else {
                 assert_eq!(first, bits, "episode {ep} diverged bitwise");
             }
+        }
+    }
+
+    #[test]
+    fn infer_session_matches_train_forward_bitwise() {
+        let mut rng = Rng::new(51);
+        let mut core = SdncCore::new(&small_cfg(51), &mut rng);
+        let (xs, _) = random_episode(4, 3, 6, &mut rng);
+        let mut st = core.infer_session(None);
+        let mut yi = Vec::new();
+        for ep in 0..2 {
+            core.reset();
+            for x in &xs {
+                let yt = core.forward(x);
+                core.infer_step(&mut st, x, &mut yi);
+                for (a, b) in yt.iter().zip(&yi) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ep {ep}");
+                }
+            }
+            core.rollback();
+            core.end_episode();
+            st.reset();
+            assert_eq!(st.tape_bytes(), 0);
+            assert_eq!(st.n_link.rows.len(), 0, "reset must clear the linkage");
         }
     }
 

@@ -34,6 +34,7 @@ pub mod memory;
 pub mod nn;
 pub mod optim;
 pub mod runtime;
+pub mod serving;
 pub mod tasks;
 pub mod tensor;
 pub mod training;
@@ -51,6 +52,9 @@ pub mod prelude {
     pub use crate::curriculum::Curriculum;
     pub use crate::nn::param::HasParams;
     pub use crate::optim::{GradClip, Optimizer, RmsProp};
+    pub use crate::serving::{
+        build_infer_model, BatchScheduler, InferModel, Session, SessionConfig, SessionManager,
+    };
     pub use crate::tasks::{
         babi::BabiTask, copy::CopyTask, omniglot::OmniglotTask, recall::AssociativeRecall,
         sort::PrioritySort, Episode, Task,

@@ -13,13 +13,16 @@
 
 use anyhow::{anyhow, Result};
 use sam::coordinator::{
-    build_task, build_trainer, load_checkpoint, run_experiment, save_checkpoint, server,
-    ExperimentConfig,
+    build_task, build_trainer, load_checkpoint, read_checkpoint, run_experiment, save_checkpoint,
+    server, ExperimentConfig,
 };
+use sam::serving::{build_infer_model, SessionConfig};
 use sam::util::args::Args;
+use sam::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::atomic::AtomicBool;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use std::time::Duration;
 
 const HELP: &str = "\
 sam — Sparse Access Memory (Rae et al., NIPS 2016) reproduction
@@ -43,8 +46,16 @@ Common flags (paper defaults in parens):
                     result at any N (deterministic fixed-order reduction)
   --seed S          RNG seed (1)
   --checkpoint PATH save/load parameters
-  --addr HOST:PORT  serve address (127.0.0.1:7878)
   --quiet           suppress progress lines
+
+Serve flags (shared-weight multi-session runtime):
+  --addr HOST:PORT      serve address (127.0.0.1:7878)
+  --serve-workers N     connection worker threads (4)
+  --tick-us T           batch-coalescing tick in µs (200)
+  --max-batch B         max sessions per tick (64)
+  --session-budget-mb M episodic-state byte budget, LRU-evicted (1024)
+  --idle-expiry-s S     drop sessions idle this long (300)
+  --read-timeout-ms T   park idle connections after this (25)
 ";
 
 fn main() -> Result<()> {
@@ -107,15 +118,34 @@ fn eval(args: &Args) -> Result<()> {
 fn serve_cmd(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
     let task = build_task(&cfg.task)?;
-    let mut trainer = build_trainer(&cfg, task.as_ref());
-    if let Some(path) = args.get("checkpoint") {
-        load_checkpoint(trainer.core.as_mut(), &PathBuf::from(path))?;
-        println!("loaded checkpoint {path}");
-    }
+    // One copy of trained weights, shared read-only across the worker pool
+    // and every session (the parameters/state split — see DESIGN.md
+    // "Serving runtime").
+    let params = match args.get("checkpoint") {
+        Some(path) => {
+            let p = read_checkpoint(&PathBuf::from(&path))?;
+            println!("loaded checkpoint {path} ({} params)", p.len());
+            Some(p)
+        }
+        None => None,
+    };
+    let core_cfg = sam::coordinator::resolved_core_cfg(&cfg, task.as_ref());
+    let mut rng = Rng::new(core_cfg.seed);
+    let model = build_infer_model(cfg.core, &core_cfg, &mut rng, params.as_deref());
+    let serve_cfg = server::ServeConfig {
+        workers: args.usize_or("serve-workers", 4),
+        read_timeout: Duration::from_millis(args.u64_or("read-timeout-ms", 25)),
+        tick: Duration::from_micros(args.u64_or("tick-us", 200)),
+        max_batch: args.usize_or("max-batch", 64),
+        session: SessionConfig {
+            byte_budget: args.usize_or("session-budget-mb", 1024) * (1 << 20),
+            idle_expiry: Duration::from_secs(args.u64_or("idle-expiry-s", 300)),
+            seed: cfg.core_cfg.seed ^ 0x5E55,
+        },
+    };
     let addr = args.str_or("addr", "127.0.0.1:7878");
-    let core = Arc::new(Mutex::new(trainer.core));
     let stop = Arc::new(AtomicBool::new(false));
-    server::serve(core, &addr, stop).map_err(|e| anyhow!("server: {e:#}"))
+    server::serve_model(model, &addr, &serve_cfg, stop).map_err(|e| anyhow!("server: {e:#}"))
 }
 
 fn info(args: &Args) -> Result<()> {

@@ -89,6 +89,10 @@ pub struct SparseMemoryEngine {
     k: usize,
     /// Usage threshold δ for LRA touches (paper: 0.005).
     delta: f32,
+    /// Seed the memory rows were initialized from ([`init_row`]); kept so a
+    /// serving session can [`reinit`](SparseMemoryEngine::reinit) back to
+    /// the episode-start state without journals, allocation-free.
+    mem_seed: u64,
     // -- reusable scratch (engine-internal; never per-episode state) --------
     /// Drained journal shells awaiting refill (their `saved` capacity).
     spare_journals: Vec<StepJournal>,
@@ -116,11 +120,28 @@ impl SparseMemoryEngine {
         rng: &mut Rng,
     ) -> SparseMemoryEngine {
         let mem_seed = rng.next_u64();
+        let ann_seed = rng.next_u64();
+        SparseMemoryEngine::new_sparse_from_seeds(n, word, k, delta, kind, mem_seed, ann_seed)
+    }
+
+    /// [`new_sparse`](SparseMemoryEngine::new_sparse) with the memory-init
+    /// and ANN seeds given explicitly. Cores record the two seeds they drew
+    /// so serving sessions can construct engines whose episode-start state
+    /// is bit-identical to the trained core's — the infer-parity guarantee.
+    pub fn new_sparse_from_seeds(
+        n: usize,
+        word: usize,
+        k: usize,
+        delta: f32,
+        kind: AnnKind,
+        mem_seed: u64,
+        ann_seed: u64,
+    ) -> SparseMemoryEngine {
         let mut mem = MemoryStore::zeros(n, word);
         for i in 0..n {
             init_row(mem_seed, i, mem.row_mut(i));
         }
-        let mut ann = build_index(kind, n, word, rng.next_u64());
+        let mut ann = build_index(kind, n, word, ann_seed);
         for i in 0..n {
             ann.insert(i, mem.row(i));
         }
@@ -132,6 +153,7 @@ impl SparseMemoryEngine {
             dmem: RowSparse::new(word),
             k,
             delta,
+            mem_seed,
             spare_journals: Vec::new(),
             neigh: Vec::new(),
             sim_pool: Pool::new(),
@@ -152,6 +174,7 @@ impl SparseMemoryEngine {
             dmem: RowSparse::new(word),
             k: 0,
             delta: 0.0,
+            mem_seed: 0,
             spare_journals: Vec::new(),
             neigh: Vec::new(),
             sim_pool: Pool::new(),
@@ -204,6 +227,70 @@ impl SparseMemoryEngine {
         self.sync_rows(&journal);
         self.journals.push(journal);
         gate
+    }
+
+    /// Forward-only gated sparse write (serving mode): identical write
+    /// semantics, LRA touches and incremental ANN sync as
+    /// [`sparse_write`](SparseMemoryEngine::sparse_write), but **nothing is
+    /// journaled** — the memory advances irreversibly and
+    /// [`tape_bytes`](SparseMemoryEngine::tape_bytes) stays 0. Returns the
+    /// ws-pooled write weights (the SDNC aggregates them for its link
+    /// update); the caller recycles them into `ws`. Zero steady-state heap
+    /// allocations.
+    pub fn infer_write(
+        &mut self,
+        alpha_raw: f32,
+        gamma_raw: f32,
+        w_read_prev: &SparseVec,
+        word: &[f32],
+        ws: &mut Workspace,
+    ) -> SparseVec {
+        let ring = self.ring.as_mut().expect("infer_write needs a sparse engine (LRA ring)");
+        let lra_row = ring.pop_lra();
+        let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
+        self.mem.apply_sparse_write(lra_row, &gate.weights, word);
+        let ring = self.ring.as_mut().unwrap();
+        for (i, wv) in gate.weights.iter() {
+            if wv.abs() > self.delta {
+                ring.touch(i);
+            }
+        }
+        // ANN sync over the same row set the journaled path touches: the
+        // erased row first, then the add support (minus the erase row).
+        if let Some(ann) = self.ann.as_mut() {
+            ann.update_row(lra_row, self.mem.row(lra_row));
+            for (i, _) in gate.weights.iter() {
+                if i != lra_row {
+                    ann.update_row(i, self.mem.row(i));
+                }
+            }
+        }
+        gate.weights
+    }
+
+    /// Re-initialize to the episode-start state without journals: memory
+    /// rows regenerate from the recorded seed, the ANN re-syncs row by row
+    /// and the ring resets. This is the serving session's episode boundary
+    /// — O(N·W) like construction, but allocation-free (rows and index
+    /// slots are overwritten in place). Dense engines zero-fill instead.
+    pub fn reinit(&mut self) {
+        debug_assert!(self.journals.is_empty(), "reinit with live journals (infer mode only)");
+        let n = self.mem.n();
+        if self.ring.is_some() {
+            for i in 0..n {
+                let seed = self.mem_seed;
+                init_row(seed, i, self.mem.row_mut(i));
+            }
+            if let Some(ann) = self.ann.as_mut() {
+                for i in 0..n {
+                    ann.update_row(i, self.mem.row(i));
+                }
+            }
+            self.ring.as_mut().unwrap().reset();
+        } else {
+            self.mem.fill(0.0);
+        }
+        self.dmem.clear();
     }
 
     /// Batched content reads for all heads (SAM's read path): one
@@ -661,6 +748,59 @@ mod tests {
         }
         a.rollback();
         b.rollback();
+    }
+
+    #[test]
+    fn infer_write_matches_sparse_write_with_zero_tape() {
+        // Same seeds, one engine written through the journaled train path,
+        // one through the journal-free infer path: memory, ANN answers and
+        // ring order must agree bitwise, and the infer engine must hold
+        // zero tape bytes throughout.
+        let mut a = sparse_engine(11);
+        let mut b = sparse_engine(11);
+        let mut ws_a = Workspace::new();
+        let mut ws_b = Workspace::new();
+        let mut rng = Rng::new(12);
+        let mut w_prev_a = SparseVec::new();
+        let mut w_prev_b = SparseVec::new();
+        for _ in 0..6 {
+            let word: Vec<f32> = (0..a.word_size()).map(|_| rng.normal()).collect();
+            let (ar, gr) = (rng.normal(), rng.normal());
+            let gate = a.sparse_write(ar, gr, &w_prev_a, &word, &mut ws_a);
+            b.infer_write(ar, gr, &w_prev_b, &word, &mut ws_b);
+            // The infer path has no gate cache; mirror the recurrent read
+            // weights through read_topk on both engines.
+            let q: Vec<f32> = (0..a.word_size()).map(|_| rng.normal()).collect();
+            let ra = a.read_topk(vec![(q.clone(), 0.4)]);
+            let rb = b.read_topk(vec![(q, 0.4)]);
+            assert_eq!(ra[0].weights, rb[0].weights);
+            assert_eq!(ra[0].r, rb[0].r);
+            w_prev_a = ra.into_iter().next().unwrap().weights;
+            w_prev_b = rb.into_iter().next().unwrap().weights;
+            drop(gate);
+            assert_eq!(b.tape_bytes(), 0, "infer path must journal nothing");
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+        a.rollback();
+    }
+
+    #[test]
+    fn infer_reinit_restores_episode_start() {
+        let mut engine = sparse_engine(13);
+        let start = engine.snapshot();
+        let q: Vec<f32> = (0..6).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+        let before = engine.content_read_many(&[(q.clone(), 0.5)]);
+        let mut ws = Workspace::new();
+        let mut rng = Rng::new(14);
+        for _ in 0..5 {
+            let word: Vec<f32> = (0..engine.word_size()).map(|_| rng.normal()).collect();
+            engine.infer_write(rng.normal(), rng.normal(), &SparseVec::new(), &word, &mut ws);
+        }
+        assert_ne!(engine.snapshot(), start);
+        engine.reinit();
+        assert_eq!(engine.snapshot(), start, "reinit must regenerate the seeded init");
+        let after = engine.content_read_many(&[(q, 0.5)]);
+        assert_eq!(before[0].rows, after[0].rows, "ANN must be back in sync");
     }
 
     #[test]

@@ -188,6 +188,22 @@ impl MemoryStore {
         }
     }
 
+    /// Journal-free twin of [`MemoryStore::journal_sparse_write`] for
+    /// forward-only inference: identical write semantics (erase the LRA row,
+    /// then the sparse add), but nothing is saved — the memory advances
+    /// irreversibly and the step costs zero tape bytes. Serving sessions
+    /// never backpropagate, so the journal would be pure overhead.
+    pub fn apply_sparse_write(&mut self, erase_row: usize, weights: &SparseVec, word: &[f32]) {
+        assert_eq!(word.len(), self.w);
+        self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        for (i, wv) in weights.iter() {
+            let row = self.row_mut(i);
+            for (m, a) in row.iter_mut().zip(word) {
+                *m += wv * a;
+            }
+        }
+    }
+
     /// Dense write M ← (1-R)⊙M + A with R = w^W eᵀ, A = w^W aᵀ (paper
     /// eq. 3, NTM-style). O(N·W): for the dense baselines the caller caches
     /// the full memory per step instead of journaling.
@@ -336,6 +352,20 @@ mod tests {
         assert_eq!(a.snapshot(), b.snapshot(), "reverts must match");
         j2.recycle_rows(&mut ws);
         assert!(j2.is_empty());
+    }
+
+    #[test]
+    fn apply_sparse_write_matches_journaled_write() {
+        let mut rng = Rng::new(11);
+        let mut a = random_store(16, 4, &mut rng);
+        let mut b = a.clone();
+        let weights = SparseVec::from_pairs(vec![(5, 1.0), (2, 0.3), (9, -0.7)]);
+        let word = vec![1.5, -2.0, 0.25, 3.0];
+        let mut ws = Workspace::new();
+        let mut j = StepJournal::default();
+        a.journal_sparse_write(5, &weights, &word, &mut j, &mut ws);
+        b.apply_sparse_write(5, &weights, &word);
+        assert_eq!(a.snapshot(), b.snapshot(), "infer write must match the journaled write");
     }
 
     #[test]

@@ -79,6 +79,38 @@ impl Linear {
         y
     }
 
+    /// Forward-only apply against shared read-only weights: no activation
+    /// cache, no gradient state. Same float-op order as
+    /// [`Linear::forward_into`] (bias copy, then one [`dot`] per row), so
+    /// infer outputs are bit-identical to train-mode forwards.
+    pub fn infer_into(&self, x: &[f32], y: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.in_dim());
+        y.clear();
+        y.extend_from_slice(&self.b.w.data);
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi += dot(self.w.w.row(i), x);
+        }
+    }
+
+    /// Forward-only batched apply: Y = X Wᵀ + b in one GEMM, no cache.
+    /// `y` must be pre-sized to x.rows × out_dim (its contents are
+    /// overwritten). The serving tick uses this to coalesce many sessions'
+    /// projections into a single [`gemm_nt`].
+    pub fn infer_batch(&self, x: &Matrix, y: &mut Matrix) {
+        assert_eq!(x.cols, self.in_dim());
+        assert_eq!(y.rows, x.rows);
+        assert_eq!(y.cols, self.out_dim());
+        for t in 0..y.rows {
+            y.row_mut(t).copy_from_slice(&self.b.w.data);
+        }
+        gemm_nt(y, x, &self.w.w);
+    }
+
+    /// Heap bytes of the weight matrices (value + optimizer slots).
+    pub fn params_heap_bytes(&self) -> usize {
+        self.w.heap_bytes() + self.b.heap_bytes()
+    }
+
     /// Backward the most recent un-backpropagated forward, writing dL/dx
     /// into a caller-reused buffer. Weight gradients are queued and folded
     /// in by one GEMM when the last cached step has been backpropagated
@@ -294,6 +326,21 @@ mod tests {
         for (ga, gb) in a.w.g.data.iter().zip(&b.w.g.data) {
             assert_eq!(ga.to_bits(), gb.to_bits());
         }
+    }
+
+    #[test]
+    fn infer_into_matches_forward_bitwise() {
+        let mut rng = Rng::new(7);
+        let mut lin = Linear::new("t", 4, 3, &mut rng);
+        let x = [0.5f32, -1.0, 2.0, 0.25];
+        let mut yi = Vec::new();
+        lin.infer_into(&x, &mut yi);
+        let yf = lin.forward(&x);
+        lin.clear_cache();
+        for (a, b) in yi.iter().zip(&yf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(lin.cache_bytes(), 0, "infer must leave no activation cache");
     }
 
     #[test]

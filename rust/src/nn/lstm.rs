@@ -26,6 +26,30 @@ use crate::tensor::matrix::{axpy, col_sum_acc, gemm_nt, gemm_tn, gemv, Matrix};
 use crate::tensor::workspace::Workspace;
 use crate::util::rng::Rng;
 
+/// Detached recurrent state for forward-only inference: everything an
+/// [`Lstm::infer_step`] mutates. The `Lstm` itself is only read, so one
+/// set of trained weights (behind an `Arc`) can drive any number of
+/// concurrent `LstmState`s — the parameters/state split the serving
+/// runtime is built on.
+pub struct LstmState {
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+    /// Gate pre-activation scratch (fixed shape, reused every step).
+    z: Vec<f32>,
+}
+
+impl LstmState {
+    /// Zero the recurrent state (episode boundary).
+    pub fn reset(&mut self) {
+        self.h.iter_mut().for_each(|x| *x = 0.0);
+        self.c.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        (self.h.capacity() + self.c.capacity() + self.z.capacity()) * 4
+    }
+}
+
 /// Per-step cache for the backward pass (all buffers workspace-pooled).
 struct StepCache {
     x: Vec<f32>,
@@ -113,6 +137,67 @@ impl Lstm {
     pub fn step(&mut self, x: &[f32]) -> Vec<f32> {
         self.step_hot(x);
         self.h.clone()
+    }
+
+    /// Fresh zeroed inference state sized for this cell.
+    pub fn new_state(&self) -> LstmState {
+        LstmState {
+            h: vec![0.0; self.hidden],
+            c: vec![0.0; self.hidden],
+            z: vec![0.0; 4 * self.hidden],
+        }
+    }
+
+    /// Forward-only step against shared read-only weights: no tape, no
+    /// cache, no gradient state — h_t lands in `st.h`. The float-op order
+    /// matches [`Lstm::step_hot`] exactly (same `gemv`/`axpy` calls, same
+    /// gate expressions), so infer-mode outputs are bit-identical to
+    /// train-mode forwards.
+    pub fn infer_step(&self, st: &mut LstmState, x: &[f32]) {
+        assert_eq!(x.len(), self.input);
+        st.z.clear();
+        st.z.resize(4 * self.hidden, 0.0);
+        gemv(&mut st.z, &self.wx.w, x);
+        self.infer_apply_gates(st);
+    }
+
+    /// Second half of an infer step: `st.z` holds Wx·x; adds b + Wh·h and
+    /// applies the gate nonlinearity, updating `st.h`/`st.c` in place.
+    fn infer_apply_gates(&self, st: &mut LstmState) {
+        axpy(&mut st.z, 1.0, &self.b.w.data);
+        gemv(&mut st.z, &self.wh.w, &st.h);
+        self.infer_nonlin(st);
+    }
+
+    /// Batched-tick entry: consume externally computed gate pre-activations
+    /// z = Wx·x + b + Wh·h (one session's rows of the tick's coalesced
+    /// GEMMs) and apply the gate nonlinearity.
+    pub fn infer_step_with_z(&self, st: &mut LstmState, z: &[f32]) {
+        assert_eq!(z.len(), 4 * self.hidden);
+        st.z.clear();
+        st.z.extend_from_slice(z);
+        self.infer_nonlin(st);
+    }
+
+    /// The gate nonlinearity over `st.z`, updating `st.h`/`st.c`.
+    fn infer_nonlin(&self, st: &mut LstmState) {
+        let hs = self.hidden;
+        for j in 0..hs {
+            let i = sigmoid(st.z[j]);
+            let f = sigmoid(st.z[hs + j] + self.forget_bias);
+            let g = tanh(st.z[2 * hs + j]);
+            let o = sigmoid(st.z[3 * hs + j]);
+            let c_new = f * st.c[j] + i * g;
+            st.c[j] = c_new;
+            st.h[j] = o * tanh(c_new);
+        }
+    }
+
+    /// Heap bytes of the weight matrices (value + optimizer slots) — the
+    /// "one copy regardless of session count" quantity the serving tests
+    /// assert on.
+    pub fn params_heap_bytes(&self) -> usize {
+        self.wx.heap_bytes() + self.wh.heap_bytes() + self.b.heap_bytes()
     }
 
     /// Forward a whole episode whose inputs are known up front (one row per
@@ -432,6 +517,31 @@ mod tests {
         assert_eq!(lstm.wx.g.norm_sq(), 0.0, "grads deferred while tape live");
         lstm.reset();
         assert!(lstm.wx.g.norm_sq() > 0.0, "reset must flush queued grads");
+    }
+
+    #[test]
+    fn infer_step_matches_train_step_bitwise() {
+        // The params/state split must not move a single bit: a detached
+        // LstmState driven by &self must track step_hot exactly.
+        let mut rng = Rng::new(21);
+        let mut lstm = Lstm::new("t", 3, 5, &mut rng);
+        let mut st = lstm.new_state();
+        let xs = [[0.4f32, -0.9, 0.1], [1.2, 0.0, -0.3], [0.0, 0.7, 0.7]];
+        for ep in 0..2 {
+            for x in &xs {
+                lstm.step_hot(x);
+                lstm.infer_step(&mut st, x);
+                for (a, b) in lstm.h.iter().zip(&st.h) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ep {ep}");
+                }
+                for (a, b) in lstm.c.iter().zip(&st.c) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ep {ep}");
+                }
+            }
+            lstm.reset();
+            st.reset();
+            assert!(st.h.iter().all(|&x| x == 0.0));
+        }
     }
 
     #[test]

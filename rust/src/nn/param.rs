@@ -51,6 +51,13 @@ impl Param {
     pub fn zero_grad(&mut self) {
         self.g.data.iter_mut().for_each(|x| *x = 0.0);
     }
+
+    /// Heap bytes held by this parameter (value, gradient and optimizer
+    /// slots). The serving tests use this to assert that shared-weight
+    /// sessions hold exactly one copy of the parameters.
+    pub fn heap_bytes(&self) -> usize {
+        self.w.heap_bytes() + self.g.heap_bytes() + self.m1.heap_bytes() + self.m2.heap_bytes()
+    }
 }
 
 /// Anything that owns parameters exposes them for the optimizer and for

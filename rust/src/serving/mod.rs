@@ -1,0 +1,312 @@
+//! The shared-weight inference runtime (the deployment story of §1: sparse
+//! access makes very large memories *cheap enough to serve*).
+//!
+//! Training couples parameters and episodic state inside one `Box<dyn
+//! Core>`; serving splits them. An [`InferModel`] is a trained core used
+//! read-only — one copy of the parameters behind an `Arc`, shareable
+//! across every worker thread — and a [`Session`] is the detachable
+//! per-user episodic state (controller h/c, a private memory store + ANN +
+//! usage ring, recurrent read vectors). Forward-only stepping skips the
+//! StepJournal, the tape buffers and the carried memory gradient entirely:
+//! a serving step allocates nothing in steady state and `tape_bytes()`
+//! stays 0 (rust/tests/zero_alloc.rs, rust/tests/serving.rs).
+//!
+//! ```text
+//!   Arc<dyn InferModel>  (one copy of trained weights)
+//!        │  step / step_batch (&self — read-only)
+//!        ▼
+//!   Session #1   Session #2   …   Session #N     (per-user memory + h/c)
+//! ```
+//!
+//! [`SessionManager`](session::SessionManager) owns the session table
+//! (create/step/close, LRU eviction under a byte budget, idle expiry);
+//! [`BatchScheduler`](scheduler::BatchScheduler) coalesces concurrent
+//! sessions' steps into one controller GEMM per tick via
+//! [`crate::cores::infer_tick`]. The TCP protocol lives in
+//! `coordinator::server`.
+
+pub mod scheduler;
+pub mod session;
+
+pub use scheduler::BatchScheduler;
+pub use session::{SessionConfig, SessionError, SessionManager};
+
+use crate::cores::dam::{DamCore, DamSession};
+use crate::cores::dnc::{DncCore, DncSession};
+use crate::cores::lstm_core::{LstmCore, LstmSession};
+use crate::cores::ntm::{NtmCore, NtmSession};
+use crate::cores::sam::{SamCore, SamSession};
+use crate::cores::sdnc::{SdncCore, SdncSession};
+use crate::cores::{Core, CoreConfig, CoreKind, CtrlBatch};
+use crate::nn::param::HasParams;
+use crate::util::rng::Rng;
+use std::any::Any;
+use std::sync::Arc;
+
+/// Detachable per-session episodic state: everything an infer step
+/// mutates. Parameters are deliberately absent — they live in the shared
+/// [`InferModel`], which is what makes thousand-session serving hold
+/// exactly one copy of the weights.
+pub trait Session: Send {
+    /// Downcast hook; each model steps only its own session type.
+    fn as_any(&mut self) -> &mut dyn Any;
+
+    /// Heap bytes held by this session (memory store dominates; parameters
+    /// excluded by construction).
+    fn heap_bytes(&self) -> usize;
+
+    /// BPTT tape bytes — 0 by construction in infer mode; asserted while
+    /// serving.
+    fn tape_bytes(&self) -> usize;
+
+    /// Start a new episode: memory back to its seeded init, recurrent
+    /// state zeroed.
+    fn reset(&mut self);
+}
+
+/// A trained model served read-only: `&self` everywhere, `Send + Sync`, so
+/// one `Arc<dyn InferModel>` drives any number of sessions from any number
+/// of threads.
+pub trait InferModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn x_dim(&self) -> usize;
+    fn y_dim(&self) -> usize;
+
+    /// Heap bytes of the trained parameters (the single shared copy).
+    fn params_heap_bytes(&self) -> usize;
+
+    /// Parameter scalar count.
+    fn params_len(&self) -> usize;
+
+    /// Open a fresh session. `seed: None` reuses the trained core's own
+    /// memory-init seeds (bit-parity with train-mode forwards); `Some(s)`
+    /// derives per-session init noise from `s`.
+    fn open_session(&self, seed: Option<u64>) -> Box<dyn Session>;
+
+    /// One forward-only step. Panics if handed a session this model did
+    /// not open (wrong concrete type).
+    fn step(&self, session: &mut dyn Session, x: &[f32], y: &mut Vec<f32>);
+
+    /// One batched serving tick: implementations coalesce all sessions'
+    /// controller projections into one GEMM each ([`crate::cores::infer_tick`]).
+    /// The default serves models without a batched path by stepping each
+    /// session in order.
+    fn step_batch(
+        &self,
+        sessions: &mut [&mut dyn Session],
+        xs: &[&[f32]],
+        ys: &mut [Vec<f32>],
+        _batch: &mut CtrlBatch,
+    ) {
+        for ((s, x), y) in sessions.iter_mut().zip(xs).zip(ys.iter_mut()) {
+            self.step(&mut **s, x, y);
+        }
+    }
+}
+
+/// Glue: implement [`Session`] + the [`InferModel`] delegation for a
+/// (core, session) pair whose inherent methods follow the shared shape.
+macro_rules! impl_infer_model {
+    ($core:ty, $session:ty, $label:expr) => {
+        impl Session for $session {
+            fn as_any(&mut self) -> &mut dyn Any {
+                self
+            }
+            fn heap_bytes(&self) -> usize {
+                <$session>::heap_bytes(self)
+            }
+            fn tape_bytes(&self) -> usize {
+                <$session>::tape_bytes(self)
+            }
+            fn reset(&mut self) {
+                <$session>::reset(self)
+            }
+        }
+
+        impl InferModel for $core {
+            fn name(&self) -> &'static str {
+                Core::name(self)
+            }
+            fn x_dim(&self) -> usize {
+                Core::x_dim(self)
+            }
+            fn y_dim(&self) -> usize {
+                Core::y_dim(self)
+            }
+            fn params_heap_bytes(&self) -> usize {
+                <$core>::params_heap_bytes(self)
+            }
+            fn params_len(&self) -> usize {
+                <$core>::params_len(self)
+            }
+            fn open_session(&self, seed: Option<u64>) -> Box<dyn Session> {
+                Box::new(self.infer_session(seed))
+            }
+            fn step(&self, session: &mut dyn Session, x: &[f32], y: &mut Vec<f32>) {
+                let st = session
+                    .as_any()
+                    .downcast_mut::<$session>()
+                    .unwrap_or_else(|| panic!("{} model handed a foreign session", $label));
+                self.infer_step(st, x, y);
+            }
+        }
+    };
+}
+
+impl_infer_model!(LstmCore, LstmSession, "lstm");
+impl_infer_model!(NtmCore, NtmSession, "ntm");
+impl_infer_model!(DncCore, DncSession, "dnc");
+
+/// The three engine-backed cores override `step_batch` with the real
+/// coalesced-GEMM tick; the macro only covers the default-loop models, so
+/// these expand the body by hand.
+macro_rules! impl_infer_model_batched {
+    ($core:ty, $session:ty, $label:expr) => {
+        impl Session for $session {
+            fn as_any(&mut self) -> &mut dyn Any {
+                self
+            }
+            fn heap_bytes(&self) -> usize {
+                <$session>::heap_bytes(self)
+            }
+            fn tape_bytes(&self) -> usize {
+                <$session>::tape_bytes(self)
+            }
+            fn reset(&mut self) {
+                <$session>::reset(self)
+            }
+        }
+
+        impl InferModel for $core {
+            fn name(&self) -> &'static str {
+                Core::name(self)
+            }
+            fn x_dim(&self) -> usize {
+                Core::x_dim(self)
+            }
+            fn y_dim(&self) -> usize {
+                Core::y_dim(self)
+            }
+            fn params_heap_bytes(&self) -> usize {
+                <$core>::params_heap_bytes(self)
+            }
+            fn params_len(&self) -> usize {
+                <$core>::params_len(self)
+            }
+            fn open_session(&self, seed: Option<u64>) -> Box<dyn Session> {
+                Box::new(self.infer_session(seed))
+            }
+            fn step(&self, session: &mut dyn Session, x: &[f32], y: &mut Vec<f32>) {
+                let st = session
+                    .as_any()
+                    .downcast_mut::<$session>()
+                    .unwrap_or_else(|| panic!("{} model handed a foreign session", $label));
+                self.infer_step(st, x, y);
+            }
+            fn step_batch(
+                &self,
+                sessions: &mut [&mut dyn Session],
+                xs: &[&[f32]],
+                ys: &mut [Vec<f32>],
+                batch: &mut CtrlBatch,
+            ) {
+                let mut states: Vec<&mut $session> = sessions
+                    .iter_mut()
+                    .map(|s| {
+                        s.as_any()
+                            .downcast_mut::<$session>()
+                            .unwrap_or_else(|| panic!("{} model handed a foreign session", $label))
+                    })
+                    .collect();
+                self.infer_step_batch(batch, &mut states, xs, ys);
+            }
+        }
+    };
+}
+
+impl_infer_model_batched!(SamCore, SamSession, "sam");
+impl_infer_model_batched!(SdncCore, SdncSession, "sdnc");
+impl_infer_model_batched!(DamCore, DamSession, "dam");
+
+/// Build a shared-weight inference model of the requested kind. `params`,
+/// when given, overwrites the fresh init with checkpointed values
+/// (`HasParams::load_values` layout — see `coordinator::read_checkpoint`),
+/// so the server serves trained weights rather than an RNG init.
+pub fn build_infer_model(
+    kind: CoreKind,
+    cfg: &CoreConfig,
+    rng: &mut Rng,
+    params: Option<&[f32]>,
+) -> Arc<dyn InferModel> {
+    macro_rules! build {
+        ($core:ty) => {{
+            let mut core = <$core>::new(cfg, rng);
+            if let Some(p) = params {
+                core.load_values(p);
+            }
+            Arc::new(core) as Arc<dyn InferModel>
+        }};
+    }
+    match kind {
+        CoreKind::Lstm => build!(LstmCore),
+        CoreKind::Ntm => build!(NtmCore),
+        CoreKind::Dam => build!(DamCore),
+        CoreKind::Sam => build!(SamCore),
+        CoreKind::Dnc => build!(DncCore),
+        CoreKind::Sdnc => build!(SdncCore),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::AnnKind;
+
+    fn small_cfg() -> CoreConfig {
+        CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 8,
+            heads: 2,
+            word: 6,
+            mem_words: 16,
+            k: 3,
+            ann: AnnKind::Linear,
+            seed: 5,
+            ..CoreConfig::default()
+        }
+    }
+
+    #[test]
+    fn every_core_kind_builds_an_infer_model() {
+        for kind in CoreKind::all() {
+            let mut rng = Rng::new(5);
+            let model = build_infer_model(kind, &small_cfg(), &mut rng, None);
+            let mut s = model.open_session(Some(1));
+            let mut y = Vec::new();
+            model.step(s.as_mut(), &[1.0, 0.0, 0.0, 1.0], &mut y);
+            assert_eq!(y.len(), 3, "{kind:?}");
+            assert!(y.iter().all(|v| v.is_finite()), "{kind:?}");
+            assert_eq!(s.tape_bytes(), 0, "{kind:?} must serve with zero tape");
+            assert!(s.heap_bytes() > 0);
+            s.reset();
+        }
+    }
+
+    #[test]
+    fn checkpoint_params_are_applied() {
+        let mut rng = Rng::new(6);
+        let cfg = small_cfg();
+        let mut core = SamCore::new(&cfg, &mut rng);
+        let flat = core.save_values();
+        let zeros = vec![0.0f32; flat.len()];
+        let mut rng2 = Rng::new(6);
+        let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng2, Some(&zeros));
+        assert_eq!(model.params_len(), flat.len());
+        // All-zero params ⇒ all-zero output (bias init is zero).
+        let mut s = model.open_session(None);
+        let mut y = Vec::new();
+        model.step(s.as_mut(), &[1.0, 0.0, 0.0, 1.0], &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,245 @@
+//! The batched step scheduler: coalesces concurrent sessions' steps into
+//! one [`crate::serving::SessionManager::step_many`] tick.
+//!
+//! Worker threads don't step the model directly — they
+//! [`submit`](BatchScheduler::submit) `(session, input)` and block on the
+//! reply. A dedicated scheduler thread drains the inbox every tick
+//! (`tick` long, or immediately once `max_batch` requests are waiting) and
+//! runs the whole tick through the manager, so the controller GEMMs of
+//! every concurrent session coalesce (see `cores::infer_tick`). Under a
+//! single client the added latency is bounded by one tick; under load the
+//! tick fills and batching is free.
+
+use super::session::{SessionError, SessionManager};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Pending {
+    id: u64,
+    x: Vec<f32>,
+    reply: Sender<Result<Vec<f32>, SessionError>>,
+}
+
+struct Shared {
+    inbox: Mutex<Vec<Pending>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// Handle to the scheduler thread. Cheap to clone via `Arc`; dropping the
+/// last handle does NOT stop the thread — call [`BatchScheduler::stop`].
+pub struct BatchScheduler {
+    shared: Arc<Shared>,
+    mgr: Arc<SessionManager>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl BatchScheduler {
+    /// Spawn the scheduler thread. `tick` bounds the coalescing wait;
+    /// `max_batch` triggers an early tick when enough requests queue up.
+    pub fn start(mgr: Arc<SessionManager>, tick: Duration, max_batch: usize) -> BatchScheduler {
+        let shared = Arc::new(Shared {
+            inbox: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let thread = {
+            let shared = shared.clone();
+            let mgr = mgr.clone();
+            std::thread::spawn(move || {
+                // A panic inside a tick must not wedge the server: without
+                // this, queued senders would sit in the inbox forever and
+                // every later step_blocking would block on recv. Flag the
+                // scheduler dead and drain with errors instead.
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    Self::run(&shared, &mgr, tick, max_batch)
+                }));
+                shared.stop.store(true, Ordering::SeqCst);
+                for p in shared.inbox.lock().unwrap().drain(..) {
+                    let _ = p.reply.send(Err(SessionError::NoSuchSession(p.id)));
+                }
+                if run.is_err() {
+                    eprintln!("batch scheduler thread panicked; serving steps now error");
+                }
+            })
+        };
+        BatchScheduler { shared, mgr, thread: Mutex::new(Some(thread)) }
+    }
+
+    /// The manager this scheduler ticks.
+    pub fn manager(&self) -> &Arc<SessionManager> {
+        &self.mgr
+    }
+
+    /// Enqueue one step and block until its tick completes.
+    pub fn step_blocking(&self, id: u64, x: Vec<f32>) -> Result<Vec<f32>, SessionError> {
+        if self.shared.stop.load(Ordering::SeqCst) {
+            return Err(SessionError::NoSuchSession(id)); // scheduler stopped/dead
+        }
+        let (tx, rx) = channel();
+        {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            inbox.push(Pending { id, x, reply: tx });
+            self.shared.cv.notify_one();
+        }
+        // Re-check after publishing: if the scheduler died between our
+        // first check and the push, its final drain may have missed us —
+        // drain the inbox ourselves so nobody (including us) hangs.
+        if self.shared.stop.load(Ordering::SeqCst) {
+            for p in self.shared.inbox.lock().unwrap().drain(..) {
+                let _ = p.reply.send(Err(SessionError::NoSuchSession(p.id)));
+            }
+        }
+        // A dropped reply (scheduler stopped mid-request) reads as a
+        // closed session rather than a panic.
+        rx.recv().unwrap_or(Err(SessionError::NoSuchSession(id)))
+    }
+
+    /// Stop the scheduler thread and drain outstanding requests with
+    /// errors. Idempotent.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+
+    fn run(shared: &Shared, mgr: &SessionManager, tick: Duration, max_batch: usize) {
+        let mut reqs: Vec<(u64, Vec<f32>)> = Vec::new();
+        let mut replies: Vec<Sender<Result<Vec<f32>, SessionError>>> = Vec::new();
+        let mut outs: Vec<Result<Vec<f32>, SessionError>> = Vec::new();
+        loop {
+            // Wait for work (or stop).
+            let mut inbox = shared.inbox.lock().unwrap();
+            while inbox.is_empty() && !shared.stop.load(Ordering::SeqCst) {
+                let (guard, _) = shared.cv.wait_timeout(inbox, Duration::from_millis(50)).unwrap();
+                inbox = guard;
+            }
+            if shared.stop.load(Ordering::SeqCst) {
+                // Drain with errors so blocked callers wake.
+                for p in inbox.drain(..) {
+                    let _ = p.reply.send(Err(SessionError::NoSuchSession(p.id)));
+                }
+                return;
+            }
+            // Coalesce: give other submitters one tick to join, unless the
+            // batch is already full.
+            if inbox.len() < max_batch {
+                let (guard, _) = shared.cv.wait_timeout(inbox, tick).unwrap();
+                inbox = guard;
+            }
+            reqs.clear();
+            replies.clear();
+            let n = inbox.len().min(max_batch);
+            for p in inbox.drain(..n) {
+                reqs.push((p.id, p.x));
+                replies.push(p.reply);
+            }
+            drop(inbox);
+            mgr.step_many(&reqs, &mut outs);
+            for (reply, out) in replies.drain(..).zip(outs.drain(..)) {
+                // Receiver may have given up; ignore.
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+impl Drop for BatchScheduler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::AnnKind;
+    use crate::cores::{CoreConfig, CoreKind};
+    use crate::serving::session::SessionConfig;
+    use crate::serving::build_infer_model;
+    use crate::util::rng::Rng;
+
+    fn scheduler() -> BatchScheduler {
+        let cfg = CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 8,
+            heads: 2,
+            word: 6,
+            mem_words: 16,
+            k: 3,
+            ann: AnnKind::Linear,
+            seed: 9,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(9);
+        let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+        let mgr = Arc::new(SessionManager::new(model, SessionConfig::default()));
+        BatchScheduler::start(mgr, Duration::from_micros(200), 64)
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let sched = Arc::new(scheduler());
+        let ids: Vec<u64> = (0..6).map(|i| sched.manager().open_seeded(Some(i))).collect();
+        let mut handles = Vec::new();
+        for &id in &ids {
+            let sched = sched.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut last = Vec::new();
+                for t in 0..10 {
+                    let x = vec![(t % 2) as f32, 1.0, 0.0, 0.0];
+                    last = sched.step_blocking(id, x).expect("step failed");
+                }
+                last
+            }));
+        }
+        for h in handles {
+            let y = h.join().unwrap();
+            assert_eq!(y.len(), 3);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+        sched.stop();
+    }
+
+    #[test]
+    fn scheduled_steps_match_direct_batched_steps() {
+        // One client stream through the scheduler equals the same stream
+        // through step_many directly (both take the padded batch path).
+        let sched = scheduler();
+        let id = sched.manager().open_seeded(Some(42));
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|t| vec![t as f32 * 0.1, 1.0 - t as f32 * 0.1, 0.5, 0.0])
+            .collect();
+        let via_sched: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| sched.step_blocking(id, x.clone()).unwrap())
+            .collect();
+        sched.stop();
+        let direct = scheduler();
+        let id2 = direct.manager().open_seeded(Some(42));
+        let mut outs = Vec::new();
+        for (t, x) in xs.iter().enumerate() {
+            direct.manager().step_many(&[(id2, x.clone())], &mut outs);
+            let y = outs[0].as_ref().unwrap();
+            for (a, b) in via_sched[t].iter().zip(y) {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t}");
+            }
+        }
+        direct.stop();
+    }
+
+    #[test]
+    fn stop_unblocks_pending_requests() {
+        let sched = Arc::new(scheduler());
+        // A request for a session that never existed still gets a reply.
+        let r = sched.step_blocking(999, vec![0.0; 4]);
+        assert!(r.is_err());
+        sched.stop();
+        sched.stop(); // idempotent
+    }
+}

@@ -157,6 +157,17 @@ const MR: usize = 4;
 /// Micro-tile cols (cols of C per register block).
 const NR: usize = 8;
 
+/// Public alias for the GEMM row-tile: a row of `gemm`/`gemm_nt` output is
+/// computed by the register micro-kernel iff it lies inside a full MR-row
+/// block (tail rows fall back to [`dot`]-shaped scalar code, which sums in
+/// a different lane order). Callers that need *batch-size-independent*
+/// bits — the serving tick coalesces a variable number of sessions into
+/// one GEMM — pad their row count to a multiple of this so every real row
+/// always takes the micro-kernel path. Within that path a row's result is
+/// a serial k-order sum independent of the row's position, so the same
+/// session stepped in a batch of 1 or of 64 produces identical bits.
+pub const GEMM_ROW_TILE: usize = MR;
+
 std::thread_local! {
     /// Packing scratch (A panel, B panel) reused across calls so the GEMMs
     /// allocate nothing in steady state (the zero-allocation step property
@@ -663,6 +674,40 @@ mod tests {
         let mut c = Matrix::zeros(2, 3);
         outer_acc(&mut c, &[2.0, 3.0], &[1.0, 10.0, 100.0]);
         assert_eq!(c.data, vec![2., 20., 200., 3., 30., 300.]);
+    }
+
+    #[test]
+    fn gemm_nt_rows_are_batch_size_independent_when_tile_padded() {
+        // The serving tick's correctness contract: with the row count padded
+        // to a multiple of GEMM_ROW_TILE, a given input row's output bits do
+        // not depend on how many other rows share the GEMM. (Tail rows take
+        // a different summation path, which is why padding matters.)
+        let mut rng = Rng::new(31);
+        let (k, n) = (37, 19); // deliberately odd shapes
+        let w = Matrix::from_rows(
+            (0..n).map(|_| (0..k).map(|_| rng.normal()).collect()).collect(),
+        );
+        let rows: Vec<Vec<f32>> =
+            (0..GEMM_ROW_TILE * 4).map(|_| (0..k).map(|_| rng.normal()).collect()).collect();
+        // Small batch: rows[0..4] padded to one tile.
+        let mut small = Matrix::zeros(GEMM_ROW_TILE, n);
+        let mut a_small = Matrix::zeros(GEMM_ROW_TILE, k);
+        a_small.row_mut(0).copy_from_slice(&rows[0]);
+        a_small.row_mut(1).copy_from_slice(&rows[1]);
+        gemm_nt(&mut small, &a_small, &w);
+        // Large batch: the same two rows embedded among 16.
+        let mut a_big = Matrix::from_rows(rows.clone());
+        a_big.row_mut(0).copy_from_slice(&rows[0]);
+        let mut big = Matrix::zeros(GEMM_ROW_TILE * 4, n);
+        gemm_nt(&mut big, &a_big, &w);
+        for j in 0..n {
+            assert_eq!(
+                small.get(0, j).to_bits(),
+                big.get(0, j).to_bits(),
+                "row 0 col {j} depends on batch size"
+            );
+            assert_eq!(small.get(1, j).to_bits(), big.get(1, j).to_bits(), "row 1 col {j}");
+        }
     }
 
     #[test]

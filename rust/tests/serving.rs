@@ -1,0 +1,328 @@
+//! The serving runtime's contracts (ISSUE 4 acceptance):
+//!
+//! * **Infer parity** — forward-only session outputs are bit-identical to
+//!   train-mode `forward_into` for SAM/SDNC/DAM on a fixed seed.
+//! * **Session isolation** — N interleaved sessions produce the same
+//!   outputs as N sequential episodes, bit for bit.
+//! * **Checkpoint round-trip** — save → load → identical outputs.
+//! * **One weight copy** — a multi-session manager holds exactly one copy
+//!   of the parameters regardless of session count, asserted through the
+//!   manager's heap accounting (params + Σ sessions + tick scratch).
+//! * **Zero tape** — `tape_bytes() == 0` while serving (the allocation
+//!   side is in rust/tests/zero_alloc.rs).
+//! * **Loopback serving** — the worker-pool TCP server keeps idle
+//!   keep-alive connections (and their sessions) alive across gaps longer
+//!   than the read timeout — the bug the old single-threaded server had.
+
+use sam::coordinator::{read_checkpoint, save_checkpoint, server};
+use sam::cores::{build_core, Core as _, CoreConfig, CoreKind};
+use sam::nn::param::HasParams as _;
+use sam::serving::{build_infer_model, InferModel as _, Session as _, SessionConfig, SessionManager};
+use sam::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_cfg(seed: u64) -> CoreConfig {
+    CoreConfig {
+        x_dim: 4,
+        y_dim: 3,
+        hidden: 10,
+        heads: 2,
+        word: 6,
+        mem_words: 16,
+        k: 3,
+        k_l: 4,
+        seed,
+        ..CoreConfig::default()
+    }
+}
+
+fn random_inputs(x_dim: usize, t_len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..t_len)
+        .map(|_| (0..x_dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+        .collect()
+}
+
+#[test]
+fn infer_mode_matches_train_mode_bitwise() {
+    // The headline parity guarantee, per servable sparse/dense-control core.
+    for kind in [CoreKind::Sam, CoreKind::Sdnc, CoreKind::Dam] {
+        let cfg = small_cfg(31);
+        let mut rng_t = Rng::new(31);
+        let mut core = build_core(kind, &cfg, &mut rng_t);
+        let mut rng_i = Rng::new(31);
+        let model = build_infer_model(kind, &cfg, &mut rng_i, None);
+        let mut session = model.open_session(None);
+        let xs = random_inputs(cfg.x_dim, 8, 77);
+        let mut yi = Vec::new();
+        core.reset();
+        for (t, x) in xs.iter().enumerate() {
+            let yt = core.forward(x);
+            model.step(session.as_mut(), x, &mut yi);
+            for (a, b) in yt.iter().zip(&yi) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} t={t}");
+            }
+            assert_eq!(session.tape_bytes(), 0, "{kind:?} grew a tape while serving");
+        }
+        core.rollback();
+        core.end_episode();
+    }
+}
+
+#[test]
+fn interleaved_sessions_match_sequential_episodes() {
+    // Isolation: stepping N sessions round-robin must equal running the
+    // same N episodes one after another, bit for bit — no state can leak
+    // between sessions.
+    let cfg = small_cfg(32);
+    let mut rng = Rng::new(32);
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let n = 4;
+    let t_len = 8;
+    let streams: Vec<Vec<Vec<f32>>> =
+        (0..n).map(|i| random_inputs(cfg.x_dim, t_len, 100 + i as u64)).collect();
+
+    // Sequential: one session at a time, full episode each.
+    let mut sequential: Vec<Vec<Vec<u32>>> = Vec::new();
+    for (i, stream) in streams.iter().enumerate() {
+        let mut s = model.open_session(Some(500 + i as u64));
+        let mut y = Vec::new();
+        let mut bits = Vec::new();
+        for x in stream {
+            model.step(s.as_mut(), x, &mut y);
+            bits.push(y.iter().map(|v| v.to_bits()).collect::<Vec<u32>>());
+        }
+        sequential.push(bits);
+    }
+
+    // Interleaved: all sessions advance in lockstep.
+    let mut sessions: Vec<_> =
+        (0..n).map(|i| model.open_session(Some(500 + i as u64))).collect();
+    let mut y = Vec::new();
+    for t in 0..t_len {
+        for (i, s) in sessions.iter_mut().enumerate() {
+            model.step(s.as_mut(), &streams[i][t], &mut y);
+            let bits: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sequential[i][t], bits, "session {i} t={t} diverged when interleaved");
+        }
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_identical_outputs() {
+    // save → load → identical serving outputs, across a process-like
+    // boundary (fresh model built from the same config/seed).
+    let cfg = small_cfg(33);
+    let mut rng = Rng::new(33);
+    let mut core = build_core(CoreKind::Sam, &cfg, &mut rng);
+    // Perturb the params so the checkpoint differs from the fresh init.
+    let mut vals = core.save_values();
+    for (i, v) in vals.iter_mut().enumerate() {
+        *v += (i % 7) as f32 * 1e-3;
+    }
+    core.load_values(&vals);
+    let tmp = std::env::temp_dir().join("sam_serving_ckpt_test.bin");
+    save_checkpoint(core.as_mut(), &tmp).unwrap();
+
+    let params = read_checkpoint(&tmp).unwrap();
+    assert_eq!(params, vals);
+    let mut rng_a = Rng::new(33);
+    let model_a = build_infer_model(CoreKind::Sam, &cfg, &mut rng_a, Some(&params));
+    let mut rng_b = Rng::new(33);
+    let model_b = build_infer_model(CoreKind::Sam, &cfg, &mut rng_b, Some(&params));
+    let mut sa = model_a.open_session(None);
+    let mut sb = model_b.open_session(None);
+    let xs = random_inputs(cfg.x_dim, 6, 78);
+    let (mut ya, mut yb) = (Vec::new(), Vec::new());
+    for x in &xs {
+        model_a.step(sa.as_mut(), x, &mut ya);
+        model_b.step(sb.as_mut(), x, &mut yb);
+        for (a, b) in ya.iter().zip(&yb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    let _ = std::fs::remove_file(tmp);
+}
+
+#[test]
+fn shared_weights_hold_one_copy_regardless_of_session_count() {
+    let cfg = small_cfg(34);
+    let mut rng = Rng::new(34);
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let params_bytes = model.params_heap_bytes();
+    assert!(params_bytes > 0);
+
+    let mgr = SessionManager::new(model.clone(), SessionConfig::default());
+    assert!(Arc::ptr_eq(mgr.model(), &model), "manager must share, not copy, the model");
+
+    let mut per_session = Vec::new();
+    for n in [1usize, 8, 32] {
+        while mgr.session_count() < n {
+            mgr.open_seeded(Some(mgr.session_count() as u64));
+        }
+        // One parameter copy no matter how many sessions exist…
+        assert_eq!(mgr.params_heap_bytes(), params_bytes, "params scaled with sessions");
+        // …and total heap is exactly params + Σ sessions + tick scratch.
+        assert_eq!(
+            mgr.heap_bytes(),
+            mgr.params_heap_bytes() + mgr.state_heap_bytes() + mgr.batch_heap_bytes(),
+            "heap accounting must be the sum of its parts"
+        );
+        per_session.push(mgr.state_heap_bytes() as f64 / n as f64);
+    }
+    // State grows ~linearly: per-session cost roughly constant.
+    let (lo, hi) = (per_session[0], per_session[2]);
+    assert!(
+        (hi - lo).abs() / lo < 0.25,
+        "per-session state not ~constant: {per_session:?}"
+    );
+}
+
+#[test]
+fn server_keeps_idle_connections_and_their_sessions() {
+    // The idle-client fix, end to end over loopback: a keep-alive client
+    // that pauses LONGER than the server's read timeout must keep both its
+    // connection and its session state.
+    use std::io::{BufRead, BufReader, Write};
+
+    let cfg = small_cfg(35);
+    let mut rng = Rng::new(35);
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let serve_cfg = server::ServeConfig {
+        workers: 2,
+        read_timeout: Duration::from_millis(10),
+        tick: Duration::from_micros(100),
+        ..server::ServeConfig::default()
+    };
+    let mgr = Arc::new(SessionManager::new(model, serve_cfg.session.clone()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = "127.0.0.1:47512";
+    let handle = {
+        let mgr = mgr.clone();
+        let stop = stop.clone();
+        let serve_cfg = serve_cfg.clone();
+        std::thread::spawn(move || server::serve(mgr, addr, &serve_cfg, stop))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut roundtrip = |req: &str, line: &mut String| {
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(line).unwrap();
+        sam::util::json::Json::parse(line.trim()).unwrap()
+    };
+
+    let r = roundtrip(r#"{"open": {"seed": 1}}"#, &mut line);
+    let id = r.get("session").unwrap().as_f64().unwrap() as u64;
+    let r1 = roundtrip(&format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#), &mut line);
+    assert!(r1.get("output").is_some(), "{line}");
+
+    // Idle well past the read timeout: the connection must be parked, not
+    // dropped, and the session must survive.
+    std::thread::sleep(Duration::from_millis(120));
+    assert_eq!(mgr.session_count(), 1, "idle client lost its session");
+    let r2 = roundtrip(&format!(r#"{{"session": {id}, "input": [0,1,1,0]}}"#), &mut line);
+    assert!(r2.get("output").is_some(), "step after idle gap failed: {line}");
+
+    // Reference: the same two steps on a direct session are identical —
+    // the idle gap changed nothing.
+    let r_out: Vec<f32> = r2
+        .get("output")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let id2 = mgr.open_seeded(Some(1));
+    let mut outs = Vec::new();
+    mgr.step_many(&[(id2, vec![1.0, 0.0, 0.0, 1.0])], &mut outs);
+    mgr.step_many(&[(id2, vec![0.0, 1.0, 1.0, 0.0])], &mut outs);
+    let want = outs[0].as_ref().unwrap();
+    for (a, b) in r_out.iter().zip(want) {
+        assert!((a - b).abs() < 1e-5, "idle gap perturbed outputs");
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    drop(reader);
+    drop(writer);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn server_serves_concurrent_sessions_over_loopback() {
+    // The CI integration path: open N sessions from N client threads, step
+    // them concurrently (ticks coalesce server-side), assert every
+    // response, close.
+    use std::io::{BufRead, BufReader, Write};
+
+    let cfg = small_cfg(36);
+    let mut rng = Rng::new(36);
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let serve_cfg = server::ServeConfig {
+        workers: 3,
+        read_timeout: Duration::from_millis(10),
+        tick: Duration::from_micros(200),
+        ..server::ServeConfig::default()
+    };
+    let mgr = Arc::new(SessionManager::new(model, serve_cfg.session.clone()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = "127.0.0.1:47513";
+    let handle = {
+        let mgr = mgr.clone();
+        let stop = stop.clone();
+        let serve_cfg = serve_cfg.clone();
+        std::thread::spawn(move || server::serve(mgr, addr, &serve_cfg, stop))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+
+    let clients: Vec<_> = (0..4)
+        .map(|ci| {
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(addr).expect("connect");
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                let mut send = |req: String, line: &mut String| {
+                    writer.write_all(req.as_bytes()).unwrap();
+                    writer.write_all(b"\n").unwrap();
+                    writer.flush().unwrap();
+                    line.clear();
+                    reader.read_line(line).unwrap();
+                    sam::util::json::Json::parse(line.trim()).unwrap()
+                };
+                let r = send(format!(r#"{{"open": {{"seed": {ci}}}}}"#), &mut line);
+                let id = r.get("session").unwrap().as_f64().unwrap() as u64;
+                for t in 0..8 {
+                    let x = [t as f32 % 2.0, 1.0, 0.0, ci as f32 % 2.0];
+                    let r = send(
+                        format!(
+                            r#"{{"session": {id}, "input": [{},{},{},{}]}}"#,
+                            x[0], x[1], x[2], x[3]
+                        ),
+                        &mut line,
+                    );
+                    let out = r.get("output").expect("missing output").as_arr().unwrap();
+                    assert_eq!(out.len(), 3);
+                    assert!(out.iter().all(|v| v.as_f64().unwrap().is_finite()));
+                }
+                let r = send(format!(r#"{{"close": {id}}}"#), &mut line);
+                assert_eq!(r.get("closed").unwrap().as_bool(), Some(true));
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(mgr.session_count(), 0, "all sessions closed");
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}

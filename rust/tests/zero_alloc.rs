@@ -105,6 +105,51 @@ fn sdnc_steps_allocate_nothing_after_warmup() {
 }
 
 #[test]
+fn sam_infer_steps_allocate_nothing_after_warmup() {
+    // The serving acceptance criterion: a forward-only SAM step performs
+    // ZERO journal/tape allocations — in fact zero allocations at all —
+    // and the session's tape stays at 0 bytes throughout. Warm-up works
+    // like training: one episode populates the pools.
+    use sam::cores::sam::SamCore;
+
+    let c = cfg(5, 4);
+    let mut rng = Rng::new(7);
+    let core = SamCore::new(&c, &mut rng);
+    let mut session = core.infer_session(None);
+    let t_len = 8;
+    let mut xrng = Rng::new(1234);
+    let xs: Vec<Vec<f32>> = (0..t_len)
+        .map(|_| (0..5).map(|_| if xrng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let mut y: Vec<f32> = Vec::new();
+    let mut first_bits: Vec<Vec<u32>> = Vec::new();
+    for ep in 0..=WARMUP_EPISODES {
+        session.reset();
+        let mut allocs = 0usize;
+        let mut bits: Vec<Vec<u32>> = Vec::new();
+        for x in &xs {
+            let before = thread_alloc_count();
+            core.infer_step(&mut session, x, &mut y);
+            allocs += thread_alloc_count() - before;
+            assert_eq!(session.tape_bytes(), 0, "infer step grew a tape");
+            bits.push(y.iter().map(|v| v.to_bits()).collect());
+        }
+        if ep == 0 {
+            first_bits = bits;
+        } else {
+            assert_eq!(first_bits, bits, "session reset/recycling changed outputs in ep {ep}");
+        }
+        if ep == WARMUP_EPISODES {
+            assert_eq!(
+                allocs, 0,
+                "steady-state serving episode performed {allocs} allocations \
+                 across {t_len} infer_step calls"
+            );
+        }
+    }
+}
+
+#[test]
 fn sam_steps_stay_lean_at_larger_scale() {
     // A second shape point (more heads, bigger memory) so the guarantee
     // isn't an artifact of one tiny configuration.
