@@ -114,9 +114,78 @@ fn assert_engine_accounting() {
     );
 }
 
+/// Sharded twin of [`assert_engine_accounting`]: heap identities must hold
+/// across shard counts with independently computed ground truths, the
+/// striped stores must sum to exactly the unsharded store, only the global
+/// ring may exist, and a sharded episode's tape must stay within a small
+/// constant factor of the unsharded tape (same saved rows + S-1 extra
+/// empty journal shells per write) — Fig 1b's flat line survives sharding.
+fn assert_sharded_accounting() {
+    let (n, word, t_steps) = (256usize, 32usize, 8usize);
+    let mut tapes = Vec::new();
+    for shards in [1usize, 4] {
+        let cfg = CoreConfig {
+            x_dim: 8,
+            y_dim: 8,
+            hidden: 32,
+            heads: 4,
+            word,
+            mem_words: n,
+            k: 4,
+            ann: AnnKind::Linear,
+            shards,
+            seed: 7,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(7);
+        let mut core = sam::cores::sam::SamCore::new(&cfg, &mut rng);
+        core.reset();
+        let x = vec![0.5f32; 8];
+        for _ in 0..t_steps {
+            core.forward(&x);
+        }
+        let e = core.engine();
+        assert_eq!(e.store_heap_bytes(), n * word * 4, "striped stores must sum to N*W (S={shards})");
+        assert_eq!(
+            e.ring_heap_bytes(),
+            2 * n * std::mem::size_of::<usize>(),
+            "exactly one (global) ring (S={shards})"
+        );
+        assert!(e.ann_heap_bytes() >= n * word * 4, "shard ANNs must account row copies");
+        assert_eq!(
+            e.heap_bytes(),
+            e.store_heap_bytes()
+                + e.ann_heap_bytes()
+                + e.ring_heap_bytes()
+                + e.journal_heap_bytes()
+                + e.grad_heap_bytes(),
+            "sharded heap must be the sum of its parts (S={shards})"
+        );
+        tapes.push(e.tape_bytes());
+        core.rollback();
+        core.end_episode();
+        assert_eq!(core.engine().tape_bytes(), 0, "sharded rollback must drain every shard tape");
+    }
+    // Same journaled rows either way; the sharded tape adds only empty
+    // per-shard journal shells (bounded, N-independent).
+    assert!(
+        tapes[1] >= tapes[0] && tapes[1] <= tapes[0] * 2,
+        "sharded tape {} vs unsharded {} out of expected envelope",
+        tapes[1],
+        tapes[0]
+    );
+}
+
 fn main() {
     assert_engine_accounting();
+    assert_sharded_accounting();
     let args = Args::from_env();
+    // CI leg: just the accounting identities above (cheap, seconds),
+    // without the Fig 1b measurement sweep.
+    if args.has("accounting-only") {
+        println!("engine + sharded heap-accounting identities OK");
+        return;
+    }
     let paper = args.has("paper-scale");
     let t_steps = args.usize_or("steps", if paper { 100 } else { 50 });
 

@@ -117,6 +117,35 @@ pub trait AnnIndex: Send + Sync {
         }
     }
 
+    /// `query_many_into` where each result carries the backend's **raw
+    /// ranking key** (ascending = more similar) instead of the cosine — the
+    /// merge key for [`crate::memory::sharded::ShardedMemoryEngine`]'s
+    /// sharded fan-out. Per-shard top-K lists merged by `(key, global id)`
+    /// must reproduce a single index's candidate *order* exactly, and the
+    /// cosine↔key conversion is not injective in f32 (two distinct d² can
+    /// round to one cosine), so the merge has to happen in key space.
+    ///
+    /// * [`LinearIndex`] overrides this with the squared L2 distance
+    ///   between unit vectors — the quantity its scan actually compares —
+    ///   which is what makes the merged sharded result bit-identical to
+    ///   the unsharded scan (see `linear_rank_keys_are_raw_distances`).
+    /// * Approximate backends keep the default (negated cosine): any
+    ///   per-run-deterministic key consistent with their own ranking is
+    ///   enough, since kd/LSH results are approximate to begin with.
+    fn query_many_rank_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        k: usize,
+        out: &mut Vec<Vec<(usize, f32)>>,
+    ) {
+        self.query_many_into(queries, k, out);
+        for res in out.iter_mut() {
+            for e in res.iter_mut() {
+                e.1 = -e.1;
+            }
+        }
+    }
+
     /// Rebuild internal structure from scratch (the paper rebuilds every N
     /// insertions to keep trees balanced). Incremental maintenance makes
     /// this an amortized background concern, not a per-episode requirement.
@@ -286,6 +315,23 @@ impl AnnIndex for LinearIndex {
         k: usize,
         out: &mut Vec<Vec<(usize, f32)>>,
     ) {
+        self.query_many_rank_into(queries, k, out);
+        for best in out.iter_mut() {
+            for e in best.iter_mut() {
+                e.1 = unit_dist_sq_to_cosine(e.1);
+            }
+        }
+    }
+
+    /// The same shared traversal with results left in raw-d² form (the
+    /// ranking the scan actually uses). This ordering — ascending d², ties
+    /// by ascending id — is what the sharded merge reproduces globally.
+    fn query_many_rank_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        k: usize,
+        out: &mut Vec<Vec<(usize, f32)>>,
+    ) {
         let dim = self.dim;
         self.qn_scratch.clear();
         for q in queries {
@@ -321,11 +367,6 @@ impl AnnIndex for LinearIndex {
                         best.pop();
                     }
                 }
-            }
-        }
-        for best in out.iter_mut() {
-            for e in best.iter_mut() {
-                e.1 = unit_dist_sq_to_cosine(e.1);
             }
         }
     }
@@ -423,6 +464,68 @@ mod tests {
             let want = idx.query_many(&qrefs, 4);
             idx.query_many_into(&queries, 4, &mut out);
             assert_eq!(want, out, "round {round} (buffer reuse must not leak state)");
+        }
+    }
+
+    #[test]
+    fn linear_rank_keys_are_raw_distances() {
+        // Same ids in the same order as the cosine path, with keys equal to
+        // the squared unit distance the scan compared — the property the
+        // sharded merge depends on.
+        let mut rng = Rng::new(9);
+        let mut idx = LinearIndex::new(64, 8);
+        for i in 0..64 {
+            let v: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            idx.insert(i, &v);
+        }
+        let queries: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let mut cos = Vec::new();
+        let mut rank = Vec::new();
+        idx.query_many_into(&queries, 5, &mut cos);
+        idx.query_many_rank_into(&queries, 5, &mut rank);
+        assert_eq!(cos.len(), rank.len());
+        for (c, r) in cos.iter().zip(&rank) {
+            let c_ids: Vec<usize> = c.iter().map(|&(i, _)| i).collect();
+            let r_ids: Vec<usize> = r.iter().map(|&(i, _)| i).collect();
+            assert_eq!(c_ids, r_ids);
+            for (&(_, cv), &(_, rv)) in c.iter().zip(r) {
+                assert!(rv >= 0.0, "rank key must be a distance");
+                assert_eq!(cv.to_bits(), unit_dist_sq_to_cosine(rv).to_bits());
+            }
+            // Keys ascend (best first), ties broken by ascending id.
+            for w in r.windows(2) {
+                assert!(
+                    w[0].1 < w[1].1 || (w[0].1 == w[1].1 && w[0].0 < w[1].0),
+                    "rank order violated: {w:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn default_rank_keys_order_like_cosine() {
+        // The trait default (negated cosine) must preserve the backend's
+        // own ranking — checked through the KdForest, which does not
+        // override it.
+        let mut rng = Rng::new(12);
+        let mut kd = KdForest::with_defaults(64, 8, 3);
+        for i in 0..64 {
+            let v: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            kd.insert(i, &v);
+        }
+        let queries: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let mut cos = Vec::new();
+        let mut rank = Vec::new();
+        kd.query_many_into(&queries, 4, &mut cos);
+        kd.query_many_rank_into(&queries, 4, &mut rank);
+        for (c, r) in cos.iter().zip(&rank) {
+            assert_eq!(c.len(), r.len());
+            for (&(ci, cv), &(ri, rv)) in c.iter().zip(r) {
+                assert_eq!(ci, ri);
+                assert_eq!((-cv).to_bits(), rv.to_bits());
+            }
         }
     }
 

@@ -57,9 +57,23 @@ impl ExperimentConfig {
             ann,
             delta: args.f32_or("delta", 0.005),
             lambda: args.f32_or("lambda", 0.99),
+            // Memory shards for the sparse engines (SAM/SDNC): 1 = the
+            // unsharded engine; any S is bit-identical to S=1 for
+            // ann=linear, so this is a pure throughput knob for training
+            // AND serving (sessions inherit it via the core config).
+            shards: args.usize_or("shards", 1).max(1),
             seed: args.u64_or("seed", 1),
             ..CoreConfig::default()
         };
+        // Validate here so a bad flag combination is a usage error, not a
+        // panic from the engine's own invariant assert at construction.
+        if core_cfg.shards > core_cfg.mem_words {
+            return Err(anyhow!(
+                "--shards {} exceeds --memory {} (at most one shard per memory word)",
+                core_cfg.shards,
+                core_cfg.mem_words
+            ));
+        }
         let train_cfg = TrainConfig {
             lr: args.f32_or("lr", 1e-4),
             batch: args.usize_or("batch", 8),
@@ -236,6 +250,19 @@ mod tests {
         assert_eq!(cfg.task, "babi");
         assert_eq!(cfg.core_cfg.mem_words, 64);
         assert_eq!(cfg.core_cfg.ann, AnnKind::KdForest);
+    }
+
+    #[test]
+    fn shards_flag_parsed_and_defaulted() {
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().core_cfg.shards, 1);
+        let args = Args::parse("--shards 4".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().core_cfg.shards, 4);
+        let args = Args::parse("--shards 0".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().core_cfg.shards, 1);
+        // More shards than memory words is a config error, not a panic.
+        let args = Args::parse("--memory 4 --shards 8".split_whitespace().map(String::from));
+        assert!(ExperimentConfig::from_args(&args).is_err());
     }
 
     #[test]

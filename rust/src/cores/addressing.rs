@@ -2,7 +2,7 @@
 //! interpolation (eq. 5) — forward *and* hand-derived backward, shared by
 //! all cores. Dense variants cost O(N·W); sparse variants cost O(K·W).
 
-use crate::memory::store::MemoryStore;
+use crate::memory::store::RowSource;
 use crate::nn::act::{dsigmoid, dsoftplus, sigmoid, softplus};
 use crate::tensor::csr::SparseVec;
 use crate::tensor::matrix::{dot, norm, softmax_inplace, softmax_backward};
@@ -73,7 +73,15 @@ impl ContentRead {
 }
 
 /// Compute content weights softmax(β·cos(q, M(rows))) over `rows`.
-pub fn content_weights(q: &[f32], beta_raw: f32, mem: &MemoryStore, rows: Vec<usize>) -> ContentRead {
+/// Generic over [`RowSource`] so the candidate rows may live in one
+/// [`MemoryStore`] or be striped across a sharded engine's stores — the
+/// math reads rows one at a time either way.
+pub fn content_weights(
+    q: &[f32],
+    beta_raw: f32,
+    mem: &impl RowSource,
+    rows: Vec<usize>,
+) -> ContentRead {
     content_weights_into(q, beta_raw, mem, rows, Vec::new(), Vec::new())
 }
 
@@ -83,7 +91,7 @@ pub fn content_weights(q: &[f32], beta_raw: f32, mem: &MemoryStore, rows: Vec<us
 pub fn content_weights_into(
     q: &[f32],
     beta_raw: f32,
-    mem: &MemoryStore,
+    mem: &impl RowSource,
     rows: Vec<usize>,
     mut sims: Vec<CosSim>,
     mut weights: Vec<f32>,
@@ -107,7 +115,7 @@ pub fn content_weights_into(
 /// traversal. `rows_per_query[i]` is the candidate set for `queries[i]`.
 pub fn content_weights_many(
     queries: &[(Vec<f32>, f32)],
-    mem: &MemoryStore,
+    mem: &impl RowSource,
     rows_per_query: Vec<Vec<usize>>,
 ) -> Vec<ContentRead> {
     assert_eq!(queries.len(), rows_per_query.len());
@@ -123,7 +131,7 @@ pub fn content_weights_many(
 pub fn content_weights_backward(
     cr: &ContentRead,
     q: &[f32],
-    mem: &MemoryStore,
+    mem: &impl RowSource,
     dweights: &[f32],
     dq: &mut [f32],
     dbeta_raw: &mut f32,
@@ -139,7 +147,7 @@ pub fn content_weights_backward(
 pub fn content_weights_backward_ws(
     cr: &ContentRead,
     q: &[f32],
-    mem: &MemoryStore,
+    mem: &impl RowSource,
     dweights: &[f32],
     dq: &mut [f32],
     dbeta_raw: &mut f32,
@@ -251,6 +259,7 @@ pub fn write_gate_backward_ws(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memory::store::MemoryStore;
     use crate::util::rng::Rng;
 
     #[test]

@@ -76,6 +76,12 @@ pub struct CoreConfig {
     pub lambda: f32,
     /// SDNC temporal-link row truncation K_L (paper: 8).
     pub k_l: usize,
+    /// Memory shards S for the sparse engines (SAM/SDNC): rows stripe
+    /// across S independent stores+ANNs and `query_many` fans out across a
+    /// worker pool. 1 (the default) is exactly the unsharded engine; any S
+    /// is bit-identical to S=1 for `AnnKind::Linear` (see
+    /// `memory::sharded`, rust/tests/shard_parity.rs).
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -93,6 +99,7 @@ impl Default for CoreConfig {
             delta: 0.005,
             lambda: 0.99,
             k_l: 8,
+            shards: 1,
             seed: 1,
         }
     }

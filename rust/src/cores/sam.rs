@@ -9,8 +9,10 @@
 //!      O(log N) for the ANN query, O(K·W) for everything else.
 //!
 //! All memory/ANN/usage/journal state lives in the shared
-//! [`SparseMemoryEngine`]: the core owns only its controller, head
-//! parameters and the recurrent read state. BPTT (§3.4, Supp Fig 5) is the
+//! [`ShardedMemoryEngine`] (S memory shards with a parallel fan-out query;
+//! `CoreConfig::shards = 1`, the default, is exactly the single
+//! [`crate::memory::engine::SparseMemoryEngine`]): the core owns only its
+//! controller, head parameters and the recurrent read state. BPTT (§3.4, Supp Fig 5) is the
 //! engine's journaled rollback — O(1) space per step instead of O(N); the
 //! carried row-sparse memory gradient also lives engine-side.
 //!
@@ -21,7 +23,8 @@
 
 use super::addressing::{ContentRead, WriteGate};
 use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
-use crate::memory::engine::{SparseMemoryEngine, TopKRead};
+use crate::memory::engine::TopKRead;
+use crate::memory::sharded::ShardedMemoryEngine;
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::SparseVec;
 use crate::tensor::matrix::axpy;
@@ -53,7 +56,7 @@ struct SamStep {
 pub struct SamCore {
     cfg: CoreConfig,
     ctrl: Controller,
-    engine: SparseMemoryEngine,
+    engine: ShardedMemoryEngine,
     /// Seeds the training engine was built from, recorded so
     /// [`SamCore::infer_session`] can construct per-session engines whose
     /// episode-start state is bit-identical to the trained core's.
@@ -98,7 +101,7 @@ impl SamCore {
         // here so sessions can re-derive the identical episode-start state.
         let mem_seed = rng.next_u64();
         let ann_seed = rng.next_u64();
-        let engine = SparseMemoryEngine::new_sparse_from_seeds(
+        let engine = ShardedMemoryEngine::new_sparse_from_seeds(
             cfg.mem_words,
             cfg.word,
             cfg.k,
@@ -106,6 +109,7 @@ impl SamCore {
             cfg.ann,
             mem_seed,
             ann_seed,
+            cfg.shards,
         );
         SamCore {
             ctrl,
@@ -132,7 +136,7 @@ impl SamCore {
 
     /// The shared memory engine (read-only) — exposed for the accounting
     /// checks in `benches/fig1_memory.rs` and the parity tests.
-    pub fn engine(&self) -> &SparseMemoryEngine {
+    pub fn engine(&self) -> &ShardedMemoryEngine {
         &self.engine
     }
 
@@ -154,7 +158,7 @@ impl SamCore {
         };
         SamSession {
             ctrl: self.ctrl.new_state(),
-            engine: SparseMemoryEngine::new_sparse_from_seeds(
+            engine: ShardedMemoryEngine::new_sparse_from_seeds(
                 self.cfg.mem_words,
                 self.cfg.word,
                 self.cfg.k,
@@ -162,6 +166,7 @@ impl SamCore {
                 self.cfg.ann,
                 mem_seed,
                 ann_seed,
+                self.cfg.shards,
             ),
             w_read_prev: vec![SparseVec::new(); self.cfg.heads],
             r_prev: vec![vec![0.0; self.cfg.word]; self.cfg.heads],
@@ -273,7 +278,7 @@ impl SamCore {
 /// buffer pools. Parameters live in the shared [`SamCore`].
 pub struct SamSession {
     ctrl: ControllerState,
-    engine: SparseMemoryEngine,
+    engine: ShardedMemoryEngine,
     w_read_prev: Vec<SparseVec>,
     r_prev: Vec<Vec<f32>>,
     ws: Workspace,
@@ -298,7 +303,7 @@ impl SamSession {
     }
 
     /// The session's memory engine (read-only) — for accounting tests.
-    pub fn engine(&self) -> &SparseMemoryEngine {
+    pub fn engine(&self) -> &ShardedMemoryEngine {
         &self.engine
     }
 

@@ -11,8 +11,11 @@
 //! linkage matrices (Supp D.1), but do flow through the read mixture.
 //!
 //! Memory, ANN, LRA ring, write journals and the carried memory gradient
-//! all live in the shared [`SparseMemoryEngine`]; the SDNC keeps only its
-//! temporal-link state (N/P/precedence and their per-step journals) local.
+//! all live in the shared [`ShardedMemoryEngine`] (S memory shards with a
+//! parallel fan-out query; `CoreConfig::shards = 1` is exactly the single
+//! engine); the SDNC keeps only its temporal-link state (N/P/precedence
+//! and their per-step journals) local — linkage is over *global* row ids,
+//! so sharding is invisible to it.
 //!
 //! **Zero-allocation steps**: linkage journals move the replaced rows (no
 //! clones), the N/P row updates are sorted two-pointer merges into pooled
@@ -22,7 +25,7 @@
 
 use super::addressing::{ContentRead, WriteGate};
 use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
-use crate::memory::engine::SparseMemoryEngine;
+use crate::memory::sharded::ShardedMemoryEngine;
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::{SparseLinkMatrix, SparseVec};
 use crate::tensor::matrix::{axpy, softmax_backward, softmax_inplace};
@@ -65,7 +68,7 @@ struct SdncStep {
 pub struct SdncCore {
     cfg: CoreConfig,
     ctrl: Controller,
-    engine: SparseMemoryEngine,
+    engine: ShardedMemoryEngine,
     /// Engine seeds recorded for [`SdncCore::infer_session`] parity.
     mem_seed: u64,
     ann_seed: u64,
@@ -113,7 +116,7 @@ impl SdncCore {
         // Same seed draw order as `SparseMemoryEngine::new_sparse`.
         let mem_seed = rng.next_u64();
         let ann_seed = rng.next_u64();
-        let engine = SparseMemoryEngine::new_sparse_from_seeds(
+        let engine = ShardedMemoryEngine::new_sparse_from_seeds(
             cfg.mem_words,
             cfg.word,
             cfg.k,
@@ -121,6 +124,7 @@ impl SdncCore {
             cfg.ann,
             mem_seed,
             ann_seed,
+            cfg.shards,
         );
         SdncCore {
             ctrl,
@@ -340,7 +344,7 @@ impl SdncCore {
         };
         SdncSession {
             ctrl: self.ctrl.new_state(),
-            engine: SparseMemoryEngine::new_sparse_from_seeds(
+            engine: ShardedMemoryEngine::new_sparse_from_seeds(
                 self.cfg.mem_words,
                 self.cfg.word,
                 self.cfg.k,
@@ -348,6 +352,7 @@ impl SdncCore {
                 self.cfg.ann,
                 mem_seed,
                 ann_seed,
+                self.cfg.shards,
             ),
             n_link: SparseLinkMatrix::new(self.cfg.k_l),
             p_link: SparseLinkMatrix::new(self.cfg.k_l),
@@ -554,7 +559,7 @@ impl SdncCore {
 /// buffer pools. Parameters live in the shared [`SdncCore`].
 pub struct SdncSession {
     ctrl: ControllerState,
-    engine: SparseMemoryEngine,
+    engine: ShardedMemoryEngine,
     n_link: SparseLinkMatrix,
     p_link: SparseLinkMatrix,
     precedence: SparseVec,

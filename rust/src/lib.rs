@@ -7,9 +7,13 @@
 //! SAM, DNC, SDNC) with hand-derived backward passes, the sparse-memory
 //! substrates that give SAM its asymptotics (approximate-nearest-neighbour
 //! indexes, a least-recently-accessed ring, CSR sparse tensors, and a
-//! rollback journal for O(1)-space BPTT), the paper's task suite and
-//! curriculum, a trainer, and a PJRT runtime that executes JAX/Pallas
-//! AOT-compiled cells from Rust.
+//! rollback journal for O(1)-space BPTT), an S-way **sharded memory
+//! engine** whose parallel ANN fan-out serves million-slot memories
+//! (bit-identical to the unsharded engine for the exact Linear index —
+//! `shards`/`--shards` is a pure throughput knob), the paper's task suite
+//! and curriculum, a trainer, a shared-weight multi-session serving
+//! runtime, and a PJRT seam that executes JAX/Pallas AOT-compiled cells
+//! from Rust.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
@@ -18,7 +22,14 @@
 //! use sam::prelude::*;
 //!
 //! let mut rng = Rng::new(42);
-//! let cfg = CoreConfig { mem_words: 1 << 16, ann: AnnKind::KdForest, ..CoreConfig::default() };
+//! // A million-slot SAM memory striped across 4 shards: queries fan out
+//! // across a persistent worker pool and merge deterministically.
+//! let cfg = CoreConfig {
+//!     mem_words: 1 << 20,
+//!     ann: AnnKind::Linear,
+//!     shards: 4,
+//!     ..CoreConfig::default()
+//! };
 //! let mut core = build_core(CoreKind::Sam, &cfg, &mut rng);
 //! core.reset();
 //! let y = core.forward(&vec![0.0; cfg.x_dim]);

@@ -37,6 +37,10 @@ Common flags (paper defaults in parens):
   --heads R         access heads (4)
   --k K             sparse reads per head (4)
   --ann linear|kdtree|lsh  (linear)
+  --shards S        memory shards for SAM/SDNC (1); rows stripe across S
+                    stores+ANNs and queries fan out across a worker pool.
+                    Bit-identical to S=1 for --ann linear at any S — a pure
+                    throughput knob for train, eval AND serve
   --hidden H        controller LSTM size (100)
   --lr LR           learning rate (1e-4)
   --batch B         episodes per update (8)
@@ -76,9 +80,9 @@ fn main() -> Result<()> {
 fn train(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
     println!(
-        "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?}, workers={})",
+        "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?}, shards={}, workers={})",
         cfg.core, cfg.task, cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads,
-        cfg.core_cfg.k, cfg.core_cfg.ann, cfg.workers
+        cfg.core_cfg.k, cfg.core_cfg.ann, cfg.core_cfg.shards, cfg.workers
     );
     let (mut trainer, log) = run_experiment(&cfg)?;
     println!(
@@ -156,9 +160,9 @@ fn info(args: &Args) -> Result<()> {
     println!("task:  {} (x_dim {}, y_dim {})", cfg.task, task.x_dim(), task.y_dim());
     println!("params: {}", trainer.core.param_count());
     println!(
-        "memory: {} words x {} (heads {}, K {}, ann {:?})",
+        "memory: {} words x {} (heads {}, K {}, ann {:?}, shards {})",
         cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads, cfg.core_cfg.k,
-        cfg.core_cfg.ann
+        cfg.core_cfg.ann, cfg.core_cfg.shards
     );
     // PJRT artifacts, if built.
     let dir = sam::runtime::artifacts_dir();

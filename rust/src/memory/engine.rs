@@ -24,6 +24,11 @@
 //! loop and no full rebuild on the default path — index restructuring is
 //! amortized inside the index implementations themselves.
 //!
+//! NOTE: `memory/sharded.rs` mirrors this engine's write/backward float-op
+//! sequences for its S>1 paths (see the mirror-maintenance contract there)
+//! — numerics changes here must be reflected there, with
+//! rust/tests/shard_parity.rs as the bitwise drift alarm.
+//!
 //! **Zero-allocation hot path**: every per-step buffer (journal rows, gate
 //! weights, content-read caches, read words, gradient vectors) is drawn
 //! from the caller's [`Workspace`] and recycled back when its step is
@@ -70,6 +75,29 @@ pub struct TopKRead {
     pub r: Vec<f32>,
 }
 
+/// Shared tail of `read_topk_into`: turn each drained [`ContentRead`] into
+/// a [`TopKRead`] (pooled weight vector + mixture read through
+/// `read_mixture`). One implementation serves both the single engine and
+/// the sharded wrapper so their assembly can never drift.
+pub(crate) fn assemble_topk_reads(
+    crs: &mut Vec<ContentRead>,
+    word: usize,
+    out: &mut Vec<TopKRead>,
+    ws: &mut Workspace,
+    mut read_mixture: impl FnMut(&SparseVec, &mut Vec<f32>),
+) {
+    for read in crs.drain(..) {
+        let mut pairs = ws.take_pairs();
+        pairs.extend(read.rows.iter().copied().zip(read.weights.iter().copied()));
+        let mut weights = ws.take_sparse();
+        weights.assign_from_pairs(&mut pairs);
+        ws.recycle_pairs(pairs);
+        let mut r = ws.take_f32(word);
+        read_mixture(&weights, &mut r);
+        out.push(TopKRead { read, weights, r });
+    }
+}
+
 /// Owns the external memory and every auxiliary structure that must stay
 /// consistent with it. Cores own only their controller, head parameters and
 /// model-specific state (e.g. the SDNC's temporal links).
@@ -93,6 +121,14 @@ pub struct SparseMemoryEngine {
     /// serving session can [`reinit`](SparseMemoryEngine::reinit) back to
     /// the episode-start state without journals, allocation-free.
     mem_seed: u64,
+    /// Global-id mapping for row init: local row `l` seeds as global row
+    /// `l * init_stride + init_offset`. (1, 0) for a standalone engine;
+    /// (S, s) when this engine is shard `s` of a
+    /// [`crate::memory::sharded::ShardedMemoryEngine`], which is what makes
+    /// a sharded memory's episode-start contents bit-identical to the
+    /// unsharded layout.
+    init_stride: usize,
+    init_offset: usize,
     // -- reusable scratch (engine-internal; never per-episode state) --------
     /// Drained journal shells awaiting refill (their `saved` capacity).
     spare_journals: Vec<StepJournal>,
@@ -154,6 +190,53 @@ impl SparseMemoryEngine {
             k,
             delta,
             mem_seed,
+            init_stride: 1,
+            init_offset: 0,
+            spare_journals: Vec::new(),
+            neigh: Vec::new(),
+            sim_pool: Pool::new(),
+            cr_tmp: Vec::new(),
+            dw_scratch: Vec::new(),
+        }
+    }
+
+    /// One shard of a [`crate::memory::sharded::ShardedMemoryEngine`]:
+    /// `n_local` rows that are the global rows `l * stride + offset`,
+    /// seeded from the *global* `mem_seed` so the union of S shards holds
+    /// bit-identical contents to one unsharded engine. A shard owns its
+    /// store, ANN index and journal tape; the LRA ring, carried gradient
+    /// and read/write orchestration stay global in the sharded wrapper, so
+    /// no ring is allocated and the ring-dependent entry points
+    /// (`sparse_write`, `read_topk_into`, …) must not be called on it —
+    /// shards are driven through the `shard_*` methods below.
+    pub fn new_shard(
+        n_local: usize,
+        word: usize,
+        kind: AnnKind,
+        mem_seed: u64,
+        ann_seed: u64,
+        stride: usize,
+        offset: usize,
+    ) -> SparseMemoryEngine {
+        let mut mem = MemoryStore::zeros(n_local, word);
+        for l in 0..n_local {
+            init_row(mem_seed, l * stride + offset, mem.row_mut(l));
+        }
+        let mut ann = build_index(kind, n_local, word, ann_seed);
+        for l in 0..n_local {
+            ann.insert(l, mem.row(l));
+        }
+        SparseMemoryEngine {
+            mem,
+            ann: Some(ann),
+            ring: None,
+            journals: Vec::new(),
+            dmem: RowSparse::new(word),
+            k: 0,
+            delta: 0.0,
+            mem_seed,
+            init_stride: stride,
+            init_offset: offset,
             spare_journals: Vec::new(),
             neigh: Vec::new(),
             sim_pool: Pool::new(),
@@ -175,6 +258,8 @@ impl SparseMemoryEngine {
             k: 0,
             delta: 0.0,
             mem_seed: 0,
+            init_stride: 1,
+            init_offset: 0,
             spare_journals: Vec::new(),
             neigh: Vec::new(),
             sim_pool: Pool::new(),
@@ -276,17 +361,20 @@ impl SparseMemoryEngine {
     pub fn reinit(&mut self) {
         debug_assert!(self.journals.is_empty(), "reinit with live journals (infer mode only)");
         let n = self.mem.n();
-        if self.ring.is_some() {
+        if self.ann.is_some() {
+            // Sparse mode (standalone or shard): regenerate the seeded init
+            // through the global-id mapping and re-sync the index in place.
+            let (seed, stride, offset) = (self.mem_seed, self.init_stride, self.init_offset);
             for i in 0..n {
-                let seed = self.mem_seed;
-                init_row(seed, i, self.mem.row_mut(i));
+                init_row(seed, i * stride + offset, self.mem.row_mut(i));
             }
-            if let Some(ann) = self.ann.as_mut() {
-                for i in 0..n {
-                    ann.update_row(i, self.mem.row(i));
-                }
+            let ann = self.ann.as_mut().unwrap();
+            for i in 0..n {
+                ann.update_row(i, self.mem.row(i));
             }
-            self.ring.as_mut().unwrap().reset();
+            if let Some(ring) = self.ring.as_mut() {
+                ring.reset();
+            }
         } else {
             self.mem.fill(0.0);
         }
@@ -309,16 +397,8 @@ impl SparseMemoryEngine {
     ) {
         let mut crs = std::mem::take(&mut self.cr_tmp);
         self.content_read_many_into(queries, betas, &mut crs, ws);
-        for read in crs.drain(..) {
-            let mut pairs = ws.take_pairs();
-            pairs.extend(read.rows.iter().copied().zip(read.weights.iter().copied()));
-            let mut weights = ws.take_sparse();
-            weights.assign_from_pairs(&mut pairs);
-            ws.recycle_pairs(pairs);
-            let mut r = ws.take_f32(self.mem.word_size());
-            self.read_mixture_into(&weights, &mut r);
-            out.push(TopKRead { read, weights, r });
-        }
+        let word = self.mem.word_size();
+        assemble_topk_reads(&mut crs, word, out, ws, |w, r| self.read_mixture_into(w, r));
         self.cr_tmp = crs;
     }
 
@@ -535,6 +615,98 @@ impl SparseMemoryEngine {
                 ann.update_row(row, self.mem.row(row));
             }
         }
+    }
+
+    // -- shard-level API (driven by `memory::sharded::ShardedMemoryEngine`) --
+    //
+    // A shard is this engine minus the global orchestration: the wrapper
+    // pops the (global) LRA target, evaluates the write gate once, splits
+    // its support by `i % S`, and hands each shard its local slice here.
+    // Every global write maps to exactly one `shard_write` per shard (the
+    // slice may be empty), so per-shard journal tapes stay aligned with the
+    // global step count and `shard_revert_last` rolls all shards back in
+    // lockstep.
+
+    /// Apply one global write's local slice: journal the touched local
+    /// rows, erase `erase_local` if this shard owns the LRA row, apply the
+    /// sparse add and incrementally sync the ANN. Always pushes a journal
+    /// (possibly empty) to keep the shard tape aligned.
+    pub fn shard_write(
+        &mut self,
+        erase_local: Option<usize>,
+        weights_local: &SparseVec,
+        word: &[f32],
+        ws: &mut Workspace,
+    ) {
+        debug_assert!(self.ring.is_none(), "shard_write is for ring-less shard engines");
+        let mut journal = self.spare_journals.pop().unwrap_or_default();
+        self.mem
+            .journal_sparse_write_opt(erase_local, weights_local, word, &mut journal, ws);
+        self.sync_rows(&journal);
+        self.journals.push(journal);
+    }
+
+    /// Journal-free twin of [`SparseMemoryEngine::shard_write`] (serving
+    /// mode): same write semantics and ANN sync over the same row set, no
+    /// tape.
+    pub fn shard_infer_write(
+        &mut self,
+        erase_local: Option<usize>,
+        weights_local: &SparseVec,
+        word: &[f32],
+    ) {
+        self.mem.apply_sparse_write_opt(erase_local, weights_local, word);
+        if let Some(ann) = self.ann.as_mut() {
+            if let Some(er) = erase_local {
+                ann.update_row(er, self.mem.row(er));
+            }
+            for (i, _) in weights_local.iter() {
+                if erase_local != Some(i) {
+                    ann.update_row(i, self.mem.row(i));
+                }
+            }
+        }
+    }
+
+    /// Pop and revert this shard's most recent journal (one global write),
+    /// re-syncing the restored ANN rows. Panics if the tape is empty — the
+    /// wrapper's global step count and the shard tapes must never diverge.
+    pub fn shard_revert_last(&mut self, ws: &mut Workspace) {
+        let mut journal = self
+            .journals
+            .pop()
+            .expect("shard_revert_last on an empty shard tape (wrapper sequencing bug)");
+        self.mem.revert(&journal);
+        self.sync_rows(&journal);
+        journal.recycle_rows(ws);
+        self.spare_journals.push(journal);
+    }
+
+    /// Live journals on this shard's tape (wrapper sequencing asserts).
+    pub fn journals_len(&self) -> usize {
+        self.journals.len()
+    }
+
+    /// Batched rank-keyed ANN query over this shard's local rows — the
+    /// per-shard leg of the sharded engine's fan-out (see
+    /// [`AnnIndex::query_many_rank_into`] for the key contract).
+    pub fn ann_query_rank_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        k: usize,
+        out: &mut Vec<Vec<(usize, f32)>>,
+    ) {
+        self.ann
+            .as_mut()
+            .expect("ann_query_rank_into needs a sparse engine")
+            .query_many_rank_into(queries, k, out);
+    }
+
+    /// Full rebuilds performed by this engine's ANN (0 for dense engines) —
+    /// lets the sharding tests pin that rollback fuzzing stays on the
+    /// incremental maintenance path.
+    pub fn ann_full_rebuilds(&self) -> usize {
+        self.ann.as_ref().map(|a| a.full_rebuilds()).unwrap_or(0)
     }
 
     // -- compatibility wrappers (tests / cold paths) -------------------------

@@ -1,7 +1,10 @@
 //! External-memory substrates: the dense store with sparse-write rollback
-//! journal (§3.4), usage tracking (§3.2, Supp A.3), and the shared
+//! journal (§3.4), usage tracking (§3.2, Supp A.3), the shared
 //! [`engine::SparseMemoryEngine`] that owns store + ANN + ring + journals
-//! on behalf of the sparse cores.
+//! on behalf of the sparse cores, and the S-way
+//! [`sharded::ShardedMemoryEngine`] that stripes those slots across
+//! independent shards with a parallel, deterministically-merged ANN query.
 pub mod engine;
+pub mod sharded;
 pub mod store;
 pub mod usage;

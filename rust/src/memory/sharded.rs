@@ -1,0 +1,907 @@
+//! Sharded sparse memory: N slots striped across S independent
+//! [`SparseMemoryEngine`] shards, with the ANN query fanned out across a
+//! persistent worker pool — the "scale it further (sharding)" step that
+//! takes `query_many` from one O(N) scan on one core to S scans of N/S
+//! rows on S cores, which is what makes million-slot memories answer at
+//! interactive latency (see `benches/fig1_speed.rs`'s BENCH_shard.json
+//! section).
+//!
+//! ## Index mapping
+//!
+//! Global row `i` lives in shard `i % S` at local row `i / S`
+//! (`i = local * S + shard`). The striping is stable and bijective, shard
+//! stores are seeded through the *global* row id
+//! ([`crate::memory::engine::init_row`]), so the
+//! union of shard contents is bit-identical to one unsharded store at
+//! every step — [`ShardedMemoryEngine::snapshot`] reassembles the global
+//! layout and existing snapshot-equality tests hold unchanged.
+//!
+//! ## Deterministic merge
+//!
+//! Each shard answers a batched top-K query over its own rows in **raw
+//! rank-key space** ([`crate::ann::AnnIndex::query_many_rank_into`]);
+//! the wrapper merges the ≤ S·K candidates by `(key, global id)` and keeps
+//! the best K. Results are therefore bitwise independent of thread
+//! scheduling (per-shard results land in per-shard slots; the merge is a
+//! total order), and for [`crate::ann::LinearIndex`] — whose rank key is
+//! the exact squared unit distance its scan compares, with ties resolved
+//! by ascending id exactly as the unsharded scan resolves them — the
+//! merged candidate list is **bit-identical to the S=1 scan**, which makes
+//! the whole training stack bit-identical (rust/tests/shard_parity.rs).
+//! Approximate backends (kd/LSH) keep per-run determinism but not S-parity
+//! (their per-shard trees see different row subsets).
+//!
+//! ## Journal sequencing
+//!
+//! A global gated write pops the **global** LRA target (the ring stays
+//! unsharded — LRA order is a global property), evaluates eq. 5's gate
+//! once, splits the support by `i % S` and hands every shard its local
+//! slice. Every global write pushes exactly one journal on *every* shard
+//! (possibly empty), so the S shard tapes stay aligned with the global
+//! step count: `backward_write_into`/`rollback` revert one journal per
+//! shard per step, restoring disjoint row sets — bit-exact in any order.
+//! The carried memory gradient ∂L/∂M also stays global (row-sparse over
+//! global ids), so the backward float-op order matches S=1 exactly.
+//!
+//! ## S = 1
+//!
+//! With one shard (the default everywhere) every method delegates straight
+//! to the inner [`SparseMemoryEngine`] — today's exact behavior by
+//! construction, not by re-derivation. The generic S>1 path is the one
+//! `shard_parity.rs` proves equal to it.
+
+use crate::ann::AnnKind;
+use crate::cores::addressing::{
+    content_weights_backward_ws, content_weights_into, write_gate_backward_ws, write_gate_ws,
+    ContentRead, CosSim, WriteGate,
+};
+use crate::memory::engine::{assemble_topk_reads, SparseMemoryEngine, TopKRead};
+use crate::memory::store::RowSource;
+use crate::memory::usage::LraRing;
+use crate::tensor::csr::{RowSparse, SparseVec};
+use crate::tensor::matrix::dot;
+use crate::tensor::workspace::{Pool, Workspace};
+use crate::util::pool::ShardPool;
+use crate::util::rng::Rng;
+
+/// Below this many total rows the fan-out runs serially on the calling
+/// thread: queue/wake costs exceed an L2-resident scan, and the merge rule
+/// makes serial and pooled execution bitwise identical anyway, so the
+/// threshold is pure scheduling, never semantics.
+pub const SHARD_PARALLEL_MIN_ROWS: usize = 1 << 14;
+
+/// Read-only striped view over the shard stores — the [`RowSource`] the
+/// shared addressing math reads global rows through.
+struct ShardRows<'a> {
+    shards: &'a [SparseMemoryEngine],
+    s: usize,
+}
+
+impl RowSource for ShardRows<'_> {
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        self.shards[i % self.s].store().row(i / self.s)
+    }
+}
+
+/// S-way sharded drop-in for [`SparseMemoryEngine`]: same differentiable
+/// API, global semantics, per-shard storage and parallel query. See the
+/// module docs for the invariants.
+pub struct ShardedMemoryEngine {
+    shards: Vec<SparseMemoryEngine>,
+    s: usize,
+    n: usize,
+    word: usize,
+    k: usize,
+    delta: f32,
+    mem_seed: u64,
+    /// Global LRA ring (S>1; the S=1 inner engine owns its own).
+    ring: Option<LraRing>,
+    /// Global carried ∂L/∂M over global row ids (S>1).
+    dmem: RowSparse,
+    /// Number of global writes currently journaled across all shards.
+    live_writes: usize,
+    // -- persistent S>1 scratch (the "merge buffers"; all capacity-warm
+    //    after one episode, see rust/tests/zero_alloc.rs) ------------------
+    /// Per-shard local write-weight staging for the current global write.
+    split_w: Vec<SparseVec>,
+    /// Per-shard, per-head rank-keyed ANN results from the last fan-out.
+    neigh: Vec<Vec<Vec<(usize, f32)>>>,
+    /// (key, global id) merge staging, sorted per head.
+    cand: Vec<(f32, usize)>,
+    /// CosSim cache pool for ContentRead (mirrors the engine's).
+    sim_pool: Pool<CosSim>,
+    /// ContentRead staging for `read_topk_into`.
+    cr_tmp: Vec<ContentRead>,
+    /// dL/dweights staging for `backward_read_topk`.
+    dw_scratch: Vec<f32>,
+}
+
+impl ShardedMemoryEngine {
+    /// Sharded sparse engine; draws `mem_seed` then the ANN seed from
+    /// `rng`, in the same order as [`SparseMemoryEngine::new_sparse`].
+    pub fn new_sparse(
+        n: usize,
+        word: usize,
+        k: usize,
+        delta: f32,
+        kind: AnnKind,
+        rng: &mut Rng,
+        shards: usize,
+    ) -> ShardedMemoryEngine {
+        let mem_seed = rng.next_u64();
+        let ann_seed = rng.next_u64();
+        ShardedMemoryEngine::new_sparse_from_seeds(
+            n, word, k, delta, kind, mem_seed, ann_seed, shards,
+        )
+    }
+
+    /// [`ShardedMemoryEngine::new_sparse`] with explicit seeds (the serving
+    /// sessions' parity contract). `shards == 1` constructs exactly the
+    /// engine [`SparseMemoryEngine::new_sparse_from_seeds`] constructs;
+    /// `shards > 1` stripes the rows, seeding shard ANNs from `ann_seed`
+    /// xor-mixed with the shard id (deterministic per run).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_sparse_from_seeds(
+        n: usize,
+        word: usize,
+        k: usize,
+        delta: f32,
+        kind: AnnKind,
+        mem_seed: u64,
+        ann_seed: u64,
+        shards: usize,
+    ) -> ShardedMemoryEngine {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(shards <= n, "more shards ({shards}) than memory rows ({n})");
+        let (engines, ring, dmem) = if shards == 1 {
+            let inner = SparseMemoryEngine::new_sparse_from_seeds(
+                n, word, k, delta, kind, mem_seed, ann_seed,
+            );
+            (vec![inner], None, RowSparse::new(word))
+        } else {
+            let engines = (0..shards)
+                .map(|sh| {
+                    let n_local = (n - sh).div_ceil(shards);
+                    let shard_ann_seed =
+                        ann_seed ^ (sh as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                    SparseMemoryEngine::new_shard(
+                        n_local,
+                        word,
+                        kind,
+                        mem_seed,
+                        shard_ann_seed,
+                        shards,
+                        sh,
+                    )
+                })
+                .collect();
+            (engines, Some(LraRing::new(n)), RowSparse::new(word))
+        };
+        ShardedMemoryEngine {
+            shards: engines,
+            s: shards,
+            n,
+            word,
+            k,
+            delta,
+            mem_seed,
+            ring,
+            dmem,
+            live_writes: 0,
+            split_w: (0..shards).map(|_| SparseVec::new()).collect(),
+            neigh: (0..shards).map(|_| Vec::new()).collect(),
+            cand: Vec::new(),
+            sim_pool: Pool::new(),
+            cr_tmp: Vec::new(),
+            dw_scratch: Vec::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn word_size(&self) -> usize {
+        self.word
+    }
+
+    /// Shard count S.
+    pub fn num_shards(&self) -> usize {
+        self.s
+    }
+
+    /// Read access to one shard engine (tests, benches, accounting).
+    pub fn shard(&self, sh: usize) -> &SparseMemoryEngine {
+        &self.shards[sh]
+    }
+
+    /// Global memory row `i` (striped lookup).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.shards[i % self.s].store().row(i / self.s)
+    }
+
+    /// The memory seed rows were initialized from (recorded for serving
+    /// sessions, like the engine's).
+    pub fn mem_seed(&self) -> u64 {
+        self.mem_seed
+    }
+
+    // -- forward ------------------------------------------------------------
+
+    /// Gated sparse write (eq. 5/8): global LRA pop, one gate evaluation,
+    /// per-shard journaled application, global ring touches — the same
+    /// observable sequence as [`SparseMemoryEngine::sparse_write`].
+    pub fn sparse_write(
+        &mut self,
+        alpha_raw: f32,
+        gamma_raw: f32,
+        w_read_prev: &SparseVec,
+        word: &[f32],
+        ws: &mut Workspace,
+    ) -> WriteGate {
+        if self.s == 1 {
+            return self.shards[0].sparse_write(alpha_raw, gamma_raw, w_read_prev, word, ws);
+        }
+        let ring = self.ring.as_mut().expect("sharded sparse engine has a global ring");
+        let lra_row = ring.pop_lra();
+        let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
+        Self::scatter(&gate.weights, self.s, &mut self.split_w);
+        for sh in 0..self.s {
+            let erase = if lra_row % self.s == sh { Some(lra_row / self.s) } else { None };
+            self.shards[sh].shard_write(erase, &self.split_w[sh], word, ws);
+        }
+        let ring = self.ring.as_mut().unwrap();
+        for (i, wv) in gate.weights.iter() {
+            if wv.abs() > self.delta {
+                ring.touch(i);
+            }
+        }
+        self.live_writes += 1;
+        gate
+    }
+
+    /// Forward-only gated write (serving): identical semantics and ANN
+    /// sync, no journals anywhere, tape stays 0. Returns the pooled write
+    /// weights like [`SparseMemoryEngine::infer_write`].
+    pub fn infer_write(
+        &mut self,
+        alpha_raw: f32,
+        gamma_raw: f32,
+        w_read_prev: &SparseVec,
+        word: &[f32],
+        ws: &mut Workspace,
+    ) -> SparseVec {
+        if self.s == 1 {
+            return self.shards[0].infer_write(alpha_raw, gamma_raw, w_read_prev, word, ws);
+        }
+        let ring = self.ring.as_mut().expect("sharded sparse engine has a global ring");
+        let lra_row = ring.pop_lra();
+        let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
+        Self::scatter(&gate.weights, self.s, &mut self.split_w);
+        for sh in 0..self.s {
+            let erase = if lra_row % self.s == sh { Some(lra_row / self.s) } else { None };
+            self.shards[sh].shard_infer_write(erase, &self.split_w[sh], word);
+        }
+        let ring = self.ring.as_mut().unwrap();
+        for (i, wv) in gate.weights.iter() {
+            if wv.abs() > self.delta {
+                ring.touch(i);
+            }
+        }
+        gate.weights
+    }
+
+    /// Split global sparse weights into per-shard local vectors. Global
+    /// indices ascend, so each shard's locals ascend too — `push` keeps the
+    /// CSR invariant without sorting.
+    fn scatter(weights: &SparseVec, s: usize, split: &mut [SparseVec]) {
+        for sv in split.iter_mut() {
+            sv.clear();
+        }
+        for (i, v) in weights.iter() {
+            split[i % s].push(i / s, v);
+        }
+    }
+
+    /// Batched content reads for all heads: one parallel sharded fan-out,
+    /// one merge per head, then the same per-head softmax/read/touch
+    /// sequence as [`SparseMemoryEngine::read_topk_into`].
+    pub fn read_topk_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<TopKRead>,
+        ws: &mut Workspace,
+    ) {
+        if self.s == 1 {
+            return self.shards[0].read_topk_into(queries, betas, out, ws);
+        }
+        let mut crs = std::mem::take(&mut self.cr_tmp);
+        self.content_read_many_into(queries, betas, &mut crs, ws);
+        let word = self.word;
+        assemble_topk_reads(&mut crs, word, out, ws, |w, r| self.read_mixture_into(w, r));
+        self.cr_tmp = crs;
+    }
+
+    /// Batched content-weight computation (no memory read, no touches) —
+    /// the sharded twin of [`SparseMemoryEngine::content_read_many_into`].
+    pub fn content_read_many_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<ContentRead>,
+        ws: &mut Workspace,
+    ) {
+        if self.s == 1 {
+            return self.shards[0].content_read_many_into(queries, betas, out, ws);
+        }
+        assert_eq!(queries.len(), betas.len());
+        self.query_shards(queries);
+        for (hi, (q, &beta_raw)) in queries.iter().zip(betas).enumerate() {
+            let mut rows = ws.take_usize(self.k);
+            self.cand.clear();
+            for sh in 0..self.s {
+                for &(l, key) in &self.neigh[sh][hi] {
+                    self.cand.push((key, l * self.s + sh));
+                }
+            }
+            // Total order (key asc, global id asc): equals the unsharded
+            // LinearIndex scan order — see module docs. total_cmp is safe
+            // here (keys are finite; d² of finite unit vectors) and makes
+            // the merge order well-defined for any backend.
+            self.cand
+                .sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            rows.extend(self.cand.iter().take(self.k).map(|&(_, gid)| gid));
+            let sims = self.sim_pool.take();
+            let wbuf = ws.take_f32_empty(self.k);
+            let view = ShardRows { shards: &self.shards, s: self.s };
+            let cr = content_weights_into(q, beta_raw, &view, rows, sims, wbuf);
+            out.push(cr);
+        }
+    }
+
+    /// Fan the rank-keyed batched query out across the shards. Parallel via
+    /// the global [`ShardPool`] above [`SHARD_PARALLEL_MIN_ROWS`] total
+    /// rows, serial below — bitwise identical either way (per-shard result
+    /// slots + deterministic merge).
+    fn query_shards(&mut self, queries: &[Vec<f32>]) {
+        let k = self.k;
+        let shards = &mut self.shards[..];
+        let neigh = &mut self.neigh[..];
+        debug_assert_eq!(shards.len(), neigh.len());
+        if self.n >= SHARD_PARALLEL_MIN_ROWS {
+            ShardPool::global().run2(shards, neigh, &(queries, k), |_i, shard, out, ctx| {
+                shard.ann_query_rank_into(ctx.0, ctx.1, out);
+            });
+        } else {
+            for (shard, out) in shards.iter_mut().zip(neigh.iter_mut()) {
+                shard.ann_query_rank_into(queries, k, out);
+            }
+        }
+    }
+
+    /// Sparse read r = Σᵢ w(sᵢ)·M(sᵢ) over global ids with global ring
+    /// touches — same value and op order as the unsharded engine (weights
+    /// iterate in ascending global order either way).
+    pub fn read_mixture_into(&mut self, w_read: &SparseVec, r: &mut Vec<f32>) {
+        if self.s == 1 {
+            return self.shards[0].read_mixture_into(w_read, r);
+        }
+        r.clear();
+        r.resize(self.word, 0.0);
+        for (i, wv) in w_read.iter() {
+            let row = self.row(i);
+            for (o, m) in r.iter_mut().zip(row) {
+                *o += wv * m;
+            }
+        }
+        let ring = self.ring.as_mut().expect("sharded sparse engine has a global ring");
+        for (i, wv) in w_read.iter() {
+            if wv > self.delta {
+                ring.touch(i);
+            }
+        }
+    }
+
+    /// Return a ContentRead's pooled buffers (tape recycling at backward).
+    pub fn recycle_content_read(&mut self, cr: ContentRead, ws: &mut Workspace) {
+        if self.s == 1 {
+            return self.shards[0].recycle_content_read(cr, ws);
+        }
+        ws.recycle_usize(cr.rows);
+        ws.recycle_f32(cr.weights);
+        self.sim_pool.recycle(cr.sims);
+    }
+
+    // -- backward -----------------------------------------------------------
+    //
+    // MIRROR-MAINTENANCE CONTRACT: the S>1 bodies below intentionally
+    // restate the engine's float-op sequences over the global gradient and
+    // striped rows (sharing them outright would mean threading ring/dmem
+    // injection through the engine's hot paths, trading the S=1
+    // exact-behavior guarantee for DRY). Any numerics change in
+    // `SparseMemoryEngine`'s write/backward paths MUST be mirrored here;
+    // rust/tests/shard_parity.rs is the drift alarm (bitwise, for Linear).
+
+    /// Backward of one head's `read_topk_into` result; global carried
+    /// gradient, striped row reads — float-op order matches S=1.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_read_topk(
+        &mut self,
+        read: &ContentRead,
+        query: &[f32],
+        dr: &[f32],
+        carried_dw: &SparseVec,
+        dq: &mut [f32],
+        dbeta_raw: &mut f32,
+        ws: &mut Workspace,
+    ) {
+        if self.s == 1 {
+            return self.shards[0]
+                .backward_read_topk(read, query, dr, carried_dw, dq, dbeta_raw, ws);
+        }
+        let mut dws = std::mem::take(&mut self.dw_scratch);
+        dws.clear();
+        for (j, &row) in read.rows.iter().enumerate() {
+            let g = dot(self.row(row), dr) + carried_dw.get(row);
+            dws.push(g);
+            self.dmem.axpy_row(row, read.weights[j], dr);
+        }
+        self.backward_content(read, query, &dws, dq, dbeta_raw, ws);
+        self.dw_scratch = dws;
+    }
+
+    /// Backward of a sparse mixture read (SDNC): dL/dw over the support
+    /// plus carried gradient; ∂L/∂M accumulates into the global gradient.
+    pub fn backward_sparse_read(
+        &mut self,
+        w_read: &SparseVec,
+        dr: &[f32],
+        carried_dw: &SparseVec,
+        ws: &mut Workspace,
+    ) -> SparseVec {
+        if self.s == 1 {
+            return self.shards[0].backward_sparse_read(w_read, dr, carried_dw, ws);
+        }
+        let mut out = ws.take_sparse();
+        for (i, wv) in w_read.iter() {
+            let g = dot(self.row(i), dr) + carried_dw.get(i);
+            self.dmem.axpy_row(i, wv, dr);
+            out.push(i, g);
+        }
+        out
+    }
+
+    /// Content-softmax backward with ∂L/∂M rows accumulated into the global
+    /// carried gradient, rows read through the striped view.
+    pub fn backward_content(
+        &mut self,
+        read: &ContentRead,
+        query: &[f32],
+        dweights: &[f32],
+        dq: &mut [f32],
+        dbeta_raw: &mut f32,
+        ws: &mut Workspace,
+    ) {
+        if self.s == 1 {
+            return self.shards[0].backward_content(read, query, dweights, dq, dbeta_raw, ws);
+        }
+        let view = ShardRows { shards: &self.shards, s: self.s };
+        let dmem = &mut self.dmem;
+        content_weights_backward_ws(read, query, &view, dweights, dq, dbeta_raw, ws, |row, d| {
+            dmem.axpy_row(row, 1.0, d)
+        });
+    }
+
+    /// Backward of one head's `sparse_write`: same gate/gradient math as
+    /// the engine on the global carried gradient, then one journal pop per
+    /// shard (this global write's slices) rolling all stores back in
+    /// lockstep.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_write_into(
+        &mut self,
+        gate: &WriteGate,
+        word: &[f32],
+        w_read_used: &SparseVec,
+        dalpha_raw: &mut f32,
+        dgamma_raw: &mut f32,
+        da: &mut [f32],
+        ws: &mut Workspace,
+    ) -> SparseVec {
+        if self.s == 1 {
+            return self.shards[0].backward_write_into(
+                gate, word, w_read_used, dalpha_raw, dgamma_raw, da, ws,
+            );
+        }
+        debug_assert_eq!(da.len(), self.word);
+        let mut dw = ws.take_sparse();
+        for (i, wv) in gate.weights.iter() {
+            if let Some(drow) = self.dmem.row(i) {
+                for (daj, dj) in da.iter_mut().zip(drow) {
+                    *daj += wv * dj;
+                }
+                dw.push(i, dot(word, drow));
+            }
+        }
+        self.dmem.clear_row(gate.lra_row);
+        let dw_prev = write_gate_backward_ws(gate, w_read_used, &dw, dalpha_raw, dgamma_raw, ws);
+        ws.recycle_sparse(dw);
+        assert!(self.live_writes > 0, "backward_write without a matching sparse_write");
+        for shard in &mut self.shards {
+            shard.shard_revert_last(ws);
+        }
+        self.live_writes -= 1;
+        dw_prev
+    }
+
+    // -- episode lifecycle ---------------------------------------------------
+
+    /// Discard the remaining write tape: revert every outstanding global
+    /// write (one journal per shard each), newest first.
+    pub fn rollback_ws(&mut self, ws: &mut Workspace) {
+        if self.s == 1 {
+            return self.shards[0].rollback_ws(ws);
+        }
+        while self.live_writes > 0 {
+            for shard in &mut self.shards {
+                shard.shard_revert_last(ws);
+            }
+            self.live_writes -= 1;
+        }
+    }
+
+    /// [`ShardedMemoryEngine::rollback_ws`] without buffer reuse (tests /
+    /// cold paths).
+    pub fn rollback(&mut self) {
+        let mut ws = Workspace::new();
+        self.rollback_ws(&mut ws);
+    }
+
+    /// Start a new episode (rolls back abandoned tape, resets the global
+    /// ring, clears the carried gradient).
+    pub fn reset(&mut self, ws: &mut Workspace) {
+        if self.s == 1 {
+            return self.shards[0].reset(ws);
+        }
+        self.rollback_ws(ws);
+        if let Some(ring) = self.ring.as_mut() {
+            ring.reset();
+        }
+        self.dmem.clear();
+    }
+
+    /// Called after the last backward of an episode; asserts every shard
+    /// tape drained in lockstep with the global count.
+    pub fn end_episode(&mut self) {
+        if self.s == 1 {
+            return self.shards[0].end_episode();
+        }
+        debug_assert_eq!(self.live_writes, 0, "end_episode with outstanding writes");
+        for shard in &self.shards {
+            debug_assert_eq!(shard.journals_len(), 0, "shard tape out of lockstep");
+        }
+    }
+
+    /// Serving episode boundary: every shard regenerates its seeded init
+    /// (through the global-id mapping) and re-syncs its ANN in place; the
+    /// global ring resets. Allocation-free, like the engine's.
+    pub fn reinit(&mut self) {
+        if self.s == 1 {
+            return self.shards[0].reinit();
+        }
+        for shard in &mut self.shards {
+            shard.reinit();
+        }
+        if let Some(ring) = self.ring.as_mut() {
+            ring.reset();
+        }
+        self.dmem.clear();
+    }
+
+    /// Total full ANN rebuilds across all shards (0 on the incremental
+    /// default path — pinned by the sharded rollback fuzz).
+    pub fn ann_full_rebuilds(&self) -> usize {
+        self.shards.iter().map(|sh| sh.ann_full_rebuilds()).sum()
+    }
+
+    // -- compatibility wrappers (tests / cold paths) -------------------------
+
+    /// Allocating wrapper over [`ShardedMemoryEngine::read_topk_into`].
+    pub fn read_topk(&mut self, queries: Vec<(Vec<f32>, f32)>) -> Vec<TopKRead> {
+        let mut ws = Workspace::new();
+        let (qs, betas): (Vec<Vec<f32>>, Vec<f32>) = queries.into_iter().unzip();
+        let mut out = Vec::new();
+        self.read_topk_into(&qs, &betas, &mut out, &mut ws);
+        out
+    }
+
+    /// Allocating wrapper over
+    /// [`ShardedMemoryEngine::content_read_many_into`].
+    pub fn content_read_many(&mut self, queries: &[(Vec<f32>, f32)]) -> Vec<ContentRead> {
+        let mut ws = Workspace::new();
+        let qs: Vec<Vec<f32>> = queries.iter().map(|(q, _)| q.clone()).collect();
+        let betas: Vec<f32> = queries.iter().map(|&(_, b)| b).collect();
+        let mut out = Vec::new();
+        self.content_read_many_into(&qs, &betas, &mut out, &mut ws);
+        out
+    }
+
+    /// Allocating wrapper over [`ShardedMemoryEngine::read_mixture_into`].
+    pub fn read_mixture(&mut self, w_read: &SparseVec) -> Vec<f32> {
+        let mut r = Vec::new();
+        self.read_mixture_into(w_read, &mut r);
+        r
+    }
+
+    /// Full snapshot **in global row order** — shard layout is invisible,
+    /// so S=1 and S=8 snapshots of the same logical memory are equal.
+    pub fn snapshot(&self) -> Vec<f32> {
+        if self.s == 1 {
+            return self.shards[0].snapshot();
+        }
+        let mut out = Vec::with_capacity(self.n * self.word);
+        for i in 0..self.n {
+            out.extend_from_slice(self.row(i));
+        }
+        out
+    }
+
+    // -- accounting ----------------------------------------------------------
+
+    /// Bytes of per-episode BPTT state (the Fig 1b quantity).
+    pub fn tape_bytes(&self) -> usize {
+        self.journal_heap_bytes()
+    }
+
+    pub fn store_heap_bytes(&self) -> usize {
+        self.shards.iter().map(|sh| sh.store_heap_bytes()).sum()
+    }
+
+    pub fn ann_heap_bytes(&self) -> usize {
+        self.shards.iter().map(|sh| sh.ann_heap_bytes()).sum()
+    }
+
+    pub fn ring_heap_bytes(&self) -> usize {
+        self.shards.iter().map(|sh| sh.ring_heap_bytes()).sum::<usize>()
+            + self.ring.as_ref().map(|r| r.heap_bytes()).unwrap_or(0)
+    }
+
+    pub fn journal_heap_bytes(&self) -> usize {
+        self.shards.iter().map(|sh| sh.journal_heap_bytes()).sum()
+    }
+
+    pub fn grad_heap_bytes(&self) -> usize {
+        self.shards.iter().map(|sh| sh.grad_heap_bytes()).sum::<usize>()
+            + self.dmem.heap_bytes()
+    }
+
+    /// Total engine heap — exactly the sum of its parts (asserted in
+    /// `benches/fig1_memory.rs` across shard counts).
+    pub fn heap_bytes(&self) -> usize {
+        self.store_heap_bytes()
+            + self.ann_heap_bytes()
+            + self.ring_heap_bytes()
+            + self.journal_heap_bytes()
+            + self.grad_heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engines(seed: u64, n: usize, word: usize, s: usize) -> (ShardedMemoryEngine, ShardedMemoryEngine) {
+        // Same seeds → same logical memory; one unsharded, one S-sharded.
+        let mut r1 = Rng::new(seed);
+        let mut r2 = Rng::new(seed);
+        let a = ShardedMemoryEngine::new_sparse(n, word, 3, 0.005, AnnKind::Linear, &mut r1, 1);
+        let b = ShardedMemoryEngine::new_sparse(n, word, 3, 0.005, AnnKind::Linear, &mut r2, s);
+        (a, b)
+    }
+
+    #[test]
+    fn striping_reassembles_the_unsharded_init() {
+        for s in [2usize, 3, 5] {
+            let (a, b) = engines(7, 23, 6, s);
+            assert_eq!(a.snapshot(), b.snapshot(), "S={s} init layout");
+            for i in 0..23 {
+                assert_eq!(a.row(i), b.row(i), "row {i} S={s}");
+                assert_eq!(b.shard(i % s).store().row(i / s), b.row(i));
+            }
+        }
+    }
+
+    #[test]
+    fn write_read_backward_rollback_match_unsharded_bitwise() {
+        for s in [2usize, 3, 8] {
+            let (mut a, mut b) = engines(11, 32, 6, s);
+            let mut ws_a = Workspace::new();
+            let mut ws_b = Workspace::new();
+            let mut rng = Rng::new(99);
+            let start = a.snapshot();
+            let mut wp_a = SparseVec::new();
+            let mut wp_b = SparseVec::new();
+            let mut tape = Vec::new();
+            for _ in 0..10 {
+                let word: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+                let (ar, gr) = (rng.normal(), rng.normal());
+                let ga = a.sparse_write(ar, gr, &wp_a, &word, &mut ws_a);
+                let gb = b.sparse_write(ar, gr, &wp_b, &word, &mut ws_b);
+                assert_eq!(ga.lra_row, gb.lra_row, "LRA choice must match (S={s})");
+                assert_eq!(ga.weights, gb.weights);
+                let q: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+                let ra = a.read_topk(vec![(q.clone(), 0.4)]);
+                let rb = b.read_topk(vec![(q, 0.4)]);
+                assert_eq!(ra[0].read.rows, rb[0].read.rows, "candidate order (S={s})");
+                assert_eq!(ra[0].read.weights, rb[0].read.weights);
+                assert_eq!(ra[0].r, rb[0].r);
+                wp_a = ra.into_iter().next().unwrap().weights;
+                wp_b = rb.into_iter().next().unwrap().weights;
+                tape.push((ga, gb, word));
+            }
+            assert_eq!(a.snapshot(), b.snapshot(), "post-write memory (S={s})");
+            // Backward through the writes (no read backward here; the full
+            // stack parity lives in rust/tests/shard_parity.rs).
+            let dr: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            let da_seed = a.backward_sparse_read(&wp_a, &dr, &SparseVec::new(), &mut ws_a);
+            let db_seed = b.backward_sparse_read(&wp_b, &dr, &SparseVec::new(), &mut ws_b);
+            assert_eq!(da_seed, db_seed);
+            for (ga, gb, word) in tape.iter().rev() {
+                let (mut ar_a, mut gr_a, mut ar_b, mut gr_b) = (0.0, 0.0, 0.0, 0.0);
+                let mut da_a = vec![0.0; 6];
+                let mut da_b = vec![0.0; 6];
+                let empty = SparseVec::new();
+                let dwa = a.backward_write_into(
+                    ga, word, &empty, &mut ar_a, &mut gr_a, &mut da_a, &mut ws_a,
+                );
+                let dwb = b.backward_write_into(
+                    gb, word, &empty, &mut ar_b, &mut gr_b, &mut da_b, &mut ws_b,
+                );
+                assert_eq!(ar_a.to_bits(), ar_b.to_bits());
+                assert_eq!(gr_a.to_bits(), gr_b.to_bits());
+                assert_eq!(da_a, da_b);
+                assert_eq!(dwa, dwb);
+            }
+            a.end_episode();
+            b.end_episode();
+            assert_eq!(a.snapshot(), start, "unsharded rollback");
+            assert_eq!(b.snapshot(), start, "sharded rollback (S={s})");
+        }
+    }
+
+    #[test]
+    fn rollback_restores_memory_and_ann_answers() {
+        let mut rng = Rng::new(3);
+        let mut e = ShardedMemoryEngine::new_sparse(24, 5, 3, 0.005, AnnKind::Linear, &mut rng, 3);
+        let mut ws = Workspace::new();
+        let start = e.snapshot();
+        let q: Vec<f32> = (0..5).map(|i| 0.2 * (i as f32 + 1.0)).collect();
+        let before = e.content_read_many(&[(q.clone(), 0.5)]);
+        let mut wp = SparseVec::new();
+        for _ in 0..7 {
+            let word: Vec<f32> = (0..5).map(|_| rng.normal()).collect();
+            let gate = e.sparse_write(rng.normal(), rng.normal(), &wp, &word, &mut ws);
+            wp = gate.weights;
+        }
+        assert_ne!(e.snapshot(), start);
+        assert!(e.tape_bytes() > 0);
+        e.rollback();
+        assert_eq!(e.snapshot(), start, "sharded rollback must be bit-exact");
+        assert_eq!(e.tape_bytes(), 0);
+        let after = e.content_read_many(&[(q, 0.5)]);
+        assert_eq!(before[0].rows, after[0].rows, "shard ANNs must be back in sync");
+        for (x, y) in before[0].weights.iter().zip(&after[0].weights) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn infer_write_matches_sparse_write_with_zero_tape() {
+        // a journals (train), b infers — same S=4 sharded semantics
+        // required (cross-S parity is covered above).
+        let mut r1 = Rng::new(17);
+        let mut r2 = Rng::new(17);
+        let mut a = ShardedMemoryEngine::new_sparse(24, 6, 3, 0.005, AnnKind::Linear, &mut r1, 4);
+        let mut b = ShardedMemoryEngine::new_sparse(24, 6, 3, 0.005, AnnKind::Linear, &mut r2, 4);
+        let mut ws_a = Workspace::new();
+        let mut ws_b = Workspace::new();
+        let mut rng = Rng::new(18);
+        let mut wp_a = SparseVec::new();
+        let mut wp_b = SparseVec::new();
+        for _ in 0..6 {
+            let word: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            let (ar, gr) = (rng.normal(), rng.normal());
+            let gate = a.sparse_write(ar, gr, &wp_a, &word, &mut ws_a);
+            let wts = b.infer_write(ar, gr, &wp_b, &word, &mut ws_b);
+            assert_eq!(gate.weights, wts);
+            let q: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            let ra = a.read_topk(vec![(q.clone(), 0.4)]);
+            let rb = b.read_topk(vec![(q, 0.4)]);
+            assert_eq!(ra[0].weights, rb[0].weights);
+            assert_eq!(ra[0].r, rb[0].r);
+            wp_a = ra.into_iter().next().unwrap().weights;
+            wp_b = rb.into_iter().next().unwrap().weights;
+            ws_b.recycle_sparse(wts);
+            assert_eq!(b.tape_bytes(), 0, "infer path must journal nothing");
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+        a.rollback();
+    }
+
+    #[test]
+    fn reinit_restores_episode_start_across_shards() {
+        let mut rng = Rng::new(21);
+        let mut e = ShardedMemoryEngine::new_sparse(20, 4, 3, 0.005, AnnKind::Linear, &mut rng, 4);
+        let start = e.snapshot();
+        let q: Vec<f32> = (0..4).map(|i| 0.3 * (i as f32 + 1.0)).collect();
+        let before = e.content_read_many(&[(q.clone(), 0.5)]);
+        let mut ws = Workspace::new();
+        for _ in 0..5 {
+            let word: Vec<f32> = (0..4).map(|_| rng.normal()).collect();
+            let wts = e.infer_write(rng.normal(), rng.normal(), &SparseVec::new(), &word, &mut ws);
+            ws.recycle_sparse(wts);
+        }
+        assert_ne!(e.snapshot(), start);
+        e.reinit();
+        assert_eq!(e.snapshot(), start, "reinit must regenerate the striped seeded init");
+        let after = e.content_read_many(&[(q, 0.5)]);
+        assert_eq!(before[0].rows, after[0].rows, "shard ANNs must re-sync on reinit");
+    }
+
+    #[test]
+    fn heap_bytes_is_sum_of_parts_and_accounts_all_shards() {
+        let mut rng = Rng::new(31);
+        let mut e = ShardedMemoryEngine::new_sparse(32, 8, 3, 0.005, AnnKind::Linear, &mut rng, 4);
+        let mut ws = Workspace::new();
+        let mut wp = SparseVec::new();
+        for _ in 0..5 {
+            let word: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            let gate = e.sparse_write(rng.normal(), rng.normal(), &wp, &word, &mut ws);
+            wp = gate.weights;
+        }
+        assert_eq!(
+            e.heap_bytes(),
+            e.store_heap_bytes()
+                + e.ann_heap_bytes()
+                + e.ring_heap_bytes()
+                + e.journal_heap_bytes()
+                + e.grad_heap_bytes()
+        );
+        // Stores across shards sum to exactly the unsharded store.
+        assert_eq!(e.store_heap_bytes(), 32 * 8 * 4);
+        // The global ring is the only ring.
+        assert_eq!(e.ring_heap_bytes(), 2 * 32 * std::mem::size_of::<usize>());
+        assert!(e.tape_bytes() > 0);
+        e.rollback();
+        assert_eq!(e.tape_bytes(), 0);
+    }
+
+    #[test]
+    fn kd_and_lsh_shards_are_run_deterministic() {
+        for kind in [AnnKind::KdForest, AnnKind::Lsh] {
+            let run = |seed: u64| -> Vec<u32> {
+                let mut rng = Rng::new(seed);
+                let mut e =
+                    ShardedMemoryEngine::new_sparse(48, 8, 3, 0.005, kind, &mut rng, 3);
+                let mut ws = Workspace::new();
+                let mut wp = SparseVec::new();
+                let mut bits = Vec::new();
+                for _ in 0..6 {
+                    let word: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+                    let gate = e.sparse_write(rng.normal(), rng.normal(), &wp, &word, &mut ws);
+                    let q: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+                    let r = e.read_topk(vec![(q, 0.4)]);
+                    bits.extend(r[0].r.iter().map(|v| v.to_bits()));
+                    bits.extend(r[0].read.rows.iter().map(|&i| i as u32));
+                    wp = r.into_iter().next().unwrap().weights;
+                    drop(gate);
+                }
+                e.rollback();
+                bits
+            };
+            assert_eq!(run(5), run(5), "{kind:?} sharded run must be deterministic");
+        }
+    }
+}

@@ -15,12 +15,29 @@
 use crate::tensor::csr::SparseVec;
 use crate::tensor::workspace::Workspace;
 
+/// Row-addressed read access to memory contents. The addressing math
+/// (`cores::addressing`) is written against this instead of a concrete
+/// [`MemoryStore`] so the sharded engine can present N rows that physically
+/// live in S different stores (global row `i` → shard `i % S`, local row
+/// `i / S`) without copying. For a plain store, `row(i)` is the slice it
+/// always was.
+pub trait RowSource {
+    fn row(&self, i: usize) -> &[f32];
+}
+
 /// Dense external memory of `n` words (rows) of width `w`.
 #[derive(Debug, Clone)]
 pub struct MemoryStore {
     n: usize,
     w: usize,
     data: Vec<f32>,
+}
+
+impl RowSource for MemoryStore {
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        MemoryStore::row(self, i)
+    }
 }
 
 /// One write step's sparse modification record: the prior contents of every
@@ -168,18 +185,38 @@ impl MemoryStore {
         journal: &mut StepJournal,
         ws: &mut Workspace,
     ) {
+        self.journal_sparse_write_opt(Some(erase_row), weights, word, journal, ws);
+    }
+
+    /// [`MemoryStore::journal_sparse_write`] with the erase row optional —
+    /// the shard-local form of a global gated write: only the shard that
+    /// owns the LRA row erases; the others journal and apply just their
+    /// slice of the add support (possibly empty, which still records an
+    /// empty journal so per-shard tapes stay aligned step-for-step).
+    pub fn journal_sparse_write_opt(
+        &mut self,
+        erase_row: Option<usize>,
+        weights: &SparseVec,
+        word: &[f32],
+        journal: &mut StepJournal,
+        ws: &mut Workspace,
+    ) {
         assert_eq!(word.len(), self.w);
         debug_assert!(journal.is_empty(), "journal shell must arrive drained");
-        journal
-            .saved
-            .push((erase_row, ws.take_f32_copy(self.row(erase_row))));
+        if let Some(erase_row) = erase_row {
+            journal
+                .saved
+                .push((erase_row, ws.take_f32_copy(self.row(erase_row))));
+        }
         for (i, _) in weights.iter() {
-            if i != erase_row {
+            if erase_row != Some(i) {
                 let row_copy = ws.take_f32_copy(self.row(i));
                 journal.saved.push((i, row_copy));
             }
         }
-        self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        if let Some(erase_row) = erase_row {
+            self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        }
         for (i, wv) in weights.iter() {
             let row = self.row_mut(i);
             for (m, a) in row.iter_mut().zip(word) {
@@ -194,8 +231,22 @@ impl MemoryStore {
     /// irreversibly and the step costs zero tape bytes. Serving sessions
     /// never backpropagate, so the journal would be pure overhead.
     pub fn apply_sparse_write(&mut self, erase_row: usize, weights: &SparseVec, word: &[f32]) {
+        self.apply_sparse_write_opt(Some(erase_row), weights, word);
+    }
+
+    /// [`MemoryStore::apply_sparse_write`] with the erase row optional —
+    /// the journal-free shard-local write (serving mode on a sharded
+    /// engine).
+    pub fn apply_sparse_write_opt(
+        &mut self,
+        erase_row: Option<usize>,
+        weights: &SparseVec,
+        word: &[f32],
+    ) {
         assert_eq!(word.len(), self.w);
-        self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        if let Some(erase_row) = erase_row {
+            self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        }
         for (i, wv) in weights.iter() {
             let row = self.row_mut(i);
             for (m, a) in row.iter_mut().zip(word) {
@@ -366,6 +417,30 @@ mod tests {
         a.journal_sparse_write(5, &weights, &word, &mut j, &mut ws);
         b.apply_sparse_write(5, &weights, &word);
         assert_eq!(a.snapshot(), b.snapshot(), "infer write must match the journaled write");
+    }
+
+    #[test]
+    fn opt_erase_write_journals_and_reverts() {
+        // The shard-local form: no erase row, support-only journal; and the
+        // fully-empty write still leaves a (revertible) empty journal.
+        let mut rng = Rng::new(13);
+        let mut m = random_store(8, 3, &mut rng);
+        let before = m.snapshot();
+        let mut ws = Workspace::new();
+        let weights = SparseVec::from_pairs(vec![(2, 0.5), (6, -1.0)]);
+        let word = vec![1.0, 2.0, 3.0];
+        let mut j = StepJournal::default();
+        m.journal_sparse_write_opt(None, &weights, &word, &mut j, &mut ws);
+        assert_eq!(j.touched_rows().collect::<Vec<_>>(), vec![2, 6]);
+        assert_ne!(m.snapshot(), before);
+        m.revert(&j);
+        assert_eq!(m.snapshot(), before);
+        let mut j2 = StepJournal::default();
+        m.journal_sparse_write_opt(None, &SparseVec::new(), &word, &mut j2, &mut ws);
+        assert!(j2.is_empty(), "empty shard write must journal nothing");
+        assert_eq!(m.snapshot(), before, "empty shard write must not touch memory");
+        m.revert(&j2);
+        assert_eq!(m.snapshot(), before);
     }
 
     #[test]

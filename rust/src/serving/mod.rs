@@ -24,6 +24,12 @@
 //! sessions' steps into one controller GEMM per tick via
 //! [`crate::cores::infer_tick`]. The TCP protocol lives in
 //! `coordinator::server`.
+//!
+//! Sessions inherit the model's `CoreConfig::shards` (the `sam serve
+//! --shards` flag): each session's private memory stripes across S
+//! shards with the parallel fan-out query, bit-identical to S=1 for the
+//! Linear index (rust/tests/shard_parity.rs pins this end-to-end through
+//! the SessionManager).
 
 pub mod scheduler;
 pub mod session;

@@ -4,5 +4,13 @@
 pub mod alloc;
 pub mod args;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod timer;
+
+/// Shard-count override for shard-sensitive test suites: CI's
+/// `SAM_TEST_SHARDS=4` matrix leg re-runs them at that S in addition to
+/// their built-in shard sets (see rust/tests/shard_parity.rs).
+pub fn env_shards() -> Option<usize> {
+    std::env::var("SAM_TEST_SHARDS").ok().and_then(|v| v.parse().ok()).filter(|&s| s >= 1)
+}

@@ -1,0 +1,386 @@
+//! A persistent worker pool for deterministic same-shape fan-out — the
+//! thread substrate behind [`crate::memory::sharded::ShardedMemoryEngine`]'s
+//! parallel ANN query.
+//!
+//! `std::thread::scope` would spawn and join OS threads on every call,
+//! which at a few tens of microseconds per spawn swamps the win of
+//! splitting a single memory-query step. [`ShardPool`] keeps its workers
+//! alive for the process lifetime and hands them *claimable task batches*
+//! instead of closures:
+//!
+//! * A batch is an index range `0..total` plus type-erased pointers to the
+//!   task storage; workers (and the dispatching caller itself) claim task
+//!   indices with a CAS loop, so a batch completes even if every worker is
+//!   busy elsewhere — the caller never blocks on pool availability.
+//! * Dispatch order never affects results: callers get back per-task
+//!   output slots, written disjointly. Determinism is the *caller's*
+//!   merge-rule job (see the sharded engine's rank merge); the pool only
+//!   guarantees every task ran exactly once and completed before
+//!   [`ShardPool::run2`] returns.
+//! * Steady-state dispatch performs **zero heap allocations** on the
+//!   calling thread: the batch object is a thread-local `Arc` allocated
+//!   once per calling thread and reused, and the queue is a `VecDeque`
+//!   whose capacity converges (asserted in rust/tests/zero_alloc.rs).
+//!
+//! Safety model: `run2` borrows two equal-length `&mut` slices and a
+//! shared context. Workers only touch `a[i]`/`b[i]` for indices they
+//! claimed; a claim is a CAS on a single `(epoch << 32) | next` word whose
+//! success proves the claimed index was validated against the *current*
+//! epoch's task count (the epoch bumps on every open and close, so the
+//! word is strictly increasing and a stale bound can never pass the CAS —
+//! see [`Batch`]); and the caller does not return until `done == total`,
+//! so the borrows outlive every access. Late queue entries from a
+//! previous dispatch observe the closed sentinel, or legitimately help
+//! the current dispatch of the same thread-local batch — never stale
+//! pointers: pointers are republished *before* the epoch opens, all
+//! `SeqCst`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// `state` low-word sentinel marking the batch closed (no claimable work).
+const CLOSED: u64 = u32::MAX as u64;
+
+/// One dispatch's shared claim state. Reused across dispatches from the
+/// same calling thread (thread-local), kept alive by the `Arc`s the queue
+/// and workers hold.
+///
+/// The claim word packs `(epoch << 32) | next` into ONE atomic. The epoch
+/// bumps on every open *and* every close (owner-thread-only writes), so
+/// the state value is strictly increasing and a successful CAS on it
+/// proves the state did not change between a worker's bound check and its
+/// claim — closing the stale-`total` race where a preempted worker holds
+/// an old bound across a dispatch boundary and claims an out-of-range
+/// index of a newer, smaller dispatch. (Epoch wrap needs 2^32 dispatches
+/// from one thread AND an exact state collision at the wrap point —
+/// beyond any realistic session.)
+struct Batch {
+    /// `(epoch << 32) | next`; low word is [`CLOSED`] between dispatches.
+    state: AtomicU64,
+    /// Completed task count; `done == total` unblocks the caller.
+    done: AtomicUsize,
+    /// Open task count of the current epoch. Written only while the batch
+    /// is closed; readers validate it via the `state` CAS.
+    total: AtomicUsize,
+    /// Type-erased `RunCtx<A, B, C>` for the live dispatch.
+    data: AtomicPtr<()>,
+    /// Monomorphized trampoline: `run(data, i)` executes task `i`.
+    run: AtomicPtr<()>,
+    /// Set when any task panicked; the dispatching caller re-panics after
+    /// the batch drains (a silent deadlock would be strictly worse).
+    poisoned: AtomicUsize,
+    m: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Batch {
+    fn new() -> Batch {
+        Batch {
+            state: AtomicU64::new(CLOSED),
+            done: AtomicUsize::new(0),
+            total: AtomicUsize::new(0),
+            data: AtomicPtr::new(std::ptr::null_mut()),
+            run: AtomicPtr::new(std::ptr::null_mut()),
+            poisoned: AtomicUsize::new(0),
+            m: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Claim-and-run until no task is claimable. Returns how many tasks
+    /// this thread executed.
+    fn work(&self) -> usize {
+        let mut ran = 0;
+        loop {
+            let s = self.state.load(SeqCst);
+            let i = s & 0xFFFF_FFFF;
+            if i == CLOSED {
+                return ran;
+            }
+            let t = self.total.load(SeqCst) as u64;
+            if i >= t {
+                return ran;
+            }
+            // CAS on the packed word: success proves `state` (and hence
+            // the epoch) did not change since `s` was read, so `t` is THIS
+            // epoch's bound and index `i` is in range — the pointers
+            // published before this epoch opened are the ones loaded below.
+            if self.state.compare_exchange(s, s + 1, SeqCst, SeqCst).is_err() {
+                continue;
+            }
+            let run: unsafe fn(*mut (), usize) =
+                unsafe { std::mem::transmute(self.run.load(SeqCst)) };
+            let data = self.data.load(SeqCst);
+            // Task panics must still count toward `done`, or the caller
+            // deadlocks; the caller re-raises after the batch drains.
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                run(data, i as usize)
+            }));
+            if ok.is_err() {
+                self.poisoned.fetch_add(1, SeqCst);
+            }
+            ran += 1;
+            let d = self.done.fetch_add(1, SeqCst) + 1;
+            if d >= self.total.load(SeqCst) {
+                // Lock-then-notify so a caller between its predicate check
+                // and `cv.wait` cannot miss the wakeup.
+                let _g = self.m.lock().unwrap();
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Batch>>>,
+    available: Condvar,
+}
+
+/// The persistent fan-out pool. One global instance ([`ShardPool::global`])
+/// serves every sharded engine in the process; concurrent dispatches (e.g.
+/// from data-parallel trainer threads) interleave safely on the shared
+/// worker set.
+pub struct ShardPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+}
+
+/// Typed context a dispatch pins on its stack; the trampoline reconstructs
+/// the types from the monomorphized fn pointer stored alongside.
+struct RunCtx<A, B, C> {
+    a: *mut A,
+    b: *mut B,
+    ctx: *const C,
+    f: fn(usize, &mut A, &mut B, &C),
+}
+
+unsafe fn trampoline<A, B, C>(data: *mut (), i: usize) {
+    let rc = &*(data as *const RunCtx<A, B, C>);
+    (rc.f)(i, &mut *rc.a.add(i), &mut *rc.b.add(i), &*rc.ctx);
+}
+
+thread_local! {
+    /// Per-calling-thread reusable batch (one allocation per thread, ever).
+    static LOCAL_BATCH: Arc<Batch> = Arc::new(Batch::new());
+}
+
+impl ShardPool {
+    /// Spawn a pool with `workers` background threads. Workers park on a
+    /// condvar between dispatches; they are never joined (process-lifetime,
+    /// like the global allocator — there is deliberately no shutdown).
+    pub fn new(workers: usize) -> ShardPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        });
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("sam-shard-{w}"))
+                .spawn(move || loop {
+                    let batch = {
+                        let mut q = sh.queue.lock().unwrap();
+                        loop {
+                            if let Some(b) = q.pop_front() {
+                                break b;
+                            }
+                            q = sh.available.wait(q).unwrap();
+                        }
+                    };
+                    batch.work();
+                })
+                .expect("spawn shard worker");
+        }
+        ShardPool { shared, workers }
+    }
+
+    /// The process-wide pool, created on first use with
+    /// `min(available_parallelism - 1, 7)` workers (overridable via
+    /// `SAM_SHARD_THREADS`). The dispatching thread always participates,
+    /// so even `SAM_SHARD_THREADS=0` completes every batch (serially).
+    pub fn global() -> &'static ShardPool {
+        static POOL: OnceLock<ShardPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let default = std::thread::available_parallelism()
+                .map(|p| p.get().saturating_sub(1).min(7))
+                .unwrap_or(3);
+            let workers = std::env::var("SAM_SHARD_THREADS")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(default);
+            ShardPool::new(workers)
+        })
+    }
+
+    /// Background worker count (the caller thread is an extra worker during
+    /// its own dispatches).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(i, &mut a[i], &mut b[i], ctx)` for every `i`, distributing
+    /// across the pool; returns when all calls completed. `f` is a plain fn
+    /// pointer (capture state in `ctx` / the task slices) so dispatches
+    /// stay allocation-free. A panic inside any task is caught on the
+    /// worker (so the batch still drains), then re-raised here.
+    pub fn run2<A: Send, B: Send, C: Sync>(
+        &self,
+        a: &mut [A],
+        b: &mut [B],
+        ctx: &C,
+        f: fn(usize, &mut A, &mut B, &C),
+    ) {
+        assert_eq!(a.len(), b.len());
+        let total = a.len();
+        assert!((total as u64) < CLOSED, "task count overflows the claim word");
+        if total == 0 {
+            return;
+        }
+        if total == 1 || self.workers == 0 {
+            for i in 0..total {
+                f(i, &mut a[i], &mut b[i], ctx);
+            }
+            return;
+        }
+        let rc = RunCtx::<A, B, C> { a: a.as_mut_ptr(), b: b.as_mut_ptr(), ctx, f };
+        LOCAL_BATCH.with(|batch| {
+            // Publish pointers and counters first, then open the claim
+            // window by bumping the epoch with next = 0. Stale workers
+            // either see a closed low word, or a live epoch whose bound
+            // they validate atomically with their claim (see Batch docs) —
+            // never stale pointers or a stale bound.
+            batch.data.store(&rc as *const _ as *mut (), SeqCst);
+            let tramp: unsafe fn(*mut (), usize) = trampoline::<A, B, C>;
+            batch.run.store(tramp as *mut (), SeqCst);
+            batch.poisoned.store(0, SeqCst);
+            batch.done.store(0, SeqCst);
+            batch.total.store(total, SeqCst);
+            let epoch = batch.state.load(SeqCst) >> 32;
+            batch.state.store((epoch + 1) << 32, SeqCst);
+            {
+                let mut q = self.shared.queue.lock().unwrap();
+                let helpers = self.workers.min(total - 1);
+                for _ in 0..helpers {
+                    q.push_back(Arc::clone(batch));
+                }
+                self.shared.available.notify_all();
+            }
+            // The caller is a worker too: claim until dry, then wait for
+            // stragglers.
+            batch.work();
+            let mut g = batch.m.lock().unwrap();
+            while batch.done.load(SeqCst) < total {
+                g = batch.cv.wait(g).unwrap();
+            }
+            drop(g);
+            // Close the claim window before the task storage goes out of
+            // scope: bump the epoch again with the CLOSED sentinel.
+            // `done == total` proves no claimed task is still running;
+            // unclaimed stale pops now see the closed low word (or fail
+            // their claim CAS against the newer epoch).
+            batch.state.store(((epoch + 2) << 32) | CLOSED, SeqCst);
+            let poisoned = batch.poisoned.load(SeqCst);
+            assert!(poisoned == 0, "{poisoned} pool task(s) panicked");
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = ShardPool::new(3);
+        let mut counts = vec![0u32; 64];
+        let mut outs = vec![0usize; 64];
+        pool.run2(&mut counts, &mut outs, &7usize, |i, c, o, ctx| {
+            *c += 1;
+            *o = i * ctx;
+        });
+        assert!(counts.iter().all(|&c| c == 1));
+        for (i, &o) in outs.iter().enumerate() {
+            assert_eq!(o, i * 7);
+        }
+    }
+
+    #[test]
+    fn reuse_across_dispatches_is_clean() {
+        let pool = ShardPool::new(2);
+        for round in 0..200usize {
+            let n = 1 + round % 5;
+            let mut a = vec![0usize; n];
+            let mut b = vec![0usize; n];
+            pool.run2(&mut a, &mut b, &round, |i, a, b, ctx| {
+                *a = i + ctx;
+                *b = i * 2;
+            });
+            for i in 0..n {
+                assert_eq!(a[i], i + round, "round {round}");
+                assert_eq!(b[i], i * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_workers_degrades_to_serial() {
+        let pool = ShardPool::new(0);
+        let mut a = vec![0u8; 9];
+        let mut b = vec![0u8; 9];
+        pool.run2(&mut a, &mut b, &(), |i, a, _b, _| *a = i as u8 + 1);
+        assert_eq!(a, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let pool = Arc::new(ShardPool::new(2));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let p = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..50usize {
+                    let mut a = vec![0u64; 8];
+                    let mut b = vec![0u64; 8];
+                    p.run2(&mut a, &mut b, &t, |i, a, b, ctx| {
+                        *a = i as u64 + ctx * 100;
+                        *b = 1;
+                    });
+                    for i in 0..8 {
+                        assert_eq!(a[i], i as u64 + t * 100, "thread {t} round {round}");
+                    }
+                    assert_eq!(b.iter().sum::<u64>(), 8);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn heavy_tasks_actually_parallelize_without_loss() {
+        // Not a timing assertion (CI noise), just correctness under real
+        // contention: tasks big enough that workers and caller interleave.
+        let pool = ShardPool::new(3);
+        let mut sums = vec![0u64; 16];
+        let mut dummy = vec![(); 16];
+        pool.run2(&mut sums, &mut dummy, &(), |i, s, _d, _| {
+            let mut acc = 0u64;
+            for x in 0..200_000u64 {
+                acc = acc.wrapping_add(x ^ i as u64);
+            }
+            *s = acc;
+        });
+        let expect: Vec<u64> = (0..16)
+            .map(|i| {
+                let mut acc = 0u64;
+                for x in 0..200_000u64 {
+                    acc = acc.wrapping_add(x ^ i as u64);
+                }
+                acc
+            })
+            .collect();
+        assert_eq!(sums, expect);
+    }
+}

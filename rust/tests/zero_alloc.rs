@@ -150,6 +150,81 @@ fn sam_infer_steps_allocate_nothing_after_warmup() {
 }
 
 #[test]
+fn sam_sharded_steps_allocate_nothing_after_warmup() {
+    // The sharded tentpole's steady-state guarantee at S=4 (or CI's
+    // SAM_TEST_SHARDS): the global write split, the per-shard journals and
+    // the per-head merge buffers must all recycle — zero allocations per
+    // step after warm-up, bit-stable episode over episode.
+    let s = sam::util::env_shards().unwrap_or(4);
+    let mut rng = Rng::new(7);
+    let c = CoreConfig { shards: s, ..cfg(5, 4) };
+    let core = build_core(CoreKind::Sam, &c, &mut rng);
+    run_core(core, 5, 4, "sam-sharded");
+}
+
+#[test]
+fn sdnc_sharded_steps_allocate_nothing_after_warmup() {
+    let s = sam::util::env_shards().unwrap_or(4);
+    let mut rng = Rng::new(8);
+    let c = CoreConfig { shards: s, ..cfg(5, 4) };
+    let core = build_core(CoreKind::Sdnc, &c, &mut rng);
+    run_core(core, 5, 4, "sdnc-sharded");
+}
+
+#[test]
+fn sharded_parallel_query_dispatch_allocates_nothing_after_warmup() {
+    // Above SHARD_PARALLEL_MIN_ROWS the fan-out goes through the global
+    // ShardPool; the dispatch itself (thread-local batch, queue pushes,
+    // merge) must be allocation-free on the calling thread in steady
+    // state. Engine-level, N past the threshold, S=4.
+    use sam::memory::sharded::{ShardedMemoryEngine, SHARD_PARALLEL_MIN_ROWS};
+    use sam::tensor::csr::SparseVec;
+    use sam::tensor::workspace::Workspace;
+
+    let n = SHARD_PARALLEL_MIN_ROWS * 2;
+    let word = 16;
+    let mut rng = Rng::new(17);
+    let mut e = ShardedMemoryEngine::new_sparse(n, word, 4, 0.005, AnnKind::Linear, &mut rng, 4);
+    let mut ws = Workspace::new();
+    let queries: Vec<Vec<f32>> = (0..2)
+        .map(|h| (0..word).map(|j| ((h + j) as f32).sin()).collect())
+        .collect();
+    let betas = vec![0.4f32; 2];
+    let word_v: Vec<f32> = vec![0.25; word];
+    let empty = SparseVec::new();
+    let mut out: Vec<sam::memory::engine::TopKRead> = Vec::new();
+    // The serving-shaped step: journal-free write + batched sharded read —
+    // the write keeps shard contents (and thus ANN sync work) moving while
+    // the read exercises the pool dispatch and the merge.
+    macro_rules! step {
+        () => {{
+            let wts = e.infer_write(0.3, -0.2, &empty, &word_v, &mut ws);
+            ws.recycle_sparse(wts);
+            e.read_topk_into(&queries, &betas, &mut out, &mut ws);
+            for tk in out.drain(..) {
+                ws.recycle_sparse(tk.weights);
+                ws.recycle_f32(tk.r);
+                e.recycle_content_read(tk.read, &mut ws);
+            }
+        }};
+    }
+    // Warm up pools, the thread-local pool batch and the queue capacity.
+    for _ in 0..8 {
+        step!();
+    }
+    let before = thread_alloc_count();
+    for _ in 0..8 {
+        step!();
+    }
+    let allocs = thread_alloc_count() - before;
+    assert_eq!(
+        allocs, 0,
+        "steady-state sharded parallel query performed {allocs} caller-side allocations"
+    );
+    assert_eq!(e.tape_bytes(), 0);
+}
+
+#[test]
 fn sam_steps_stay_lean_at_larger_scale() {
     // A second shape point (more heads, bigger memory) so the guarantee
     // isn't an artifact of one tiny configuration.
