@@ -1,5 +1,5 @@
 //! Figure 1a: wall-clock time of a single forward+backward pass vs memory
-//! size N, for NTM / DAM / SAM-linear / SAM-kdtree / SAM-LSH.
+//! size N, for NTM / DAM / SAM-linear / SAM-kdtree / SAM-LSH / SAM-HNSW.
 //!
 //! Paper (Supp E): LSTM-100 controller, word size 32, 4 access heads.
 //! Paper headline: at N = 1M, NTM takes 12 s vs SAM 7 ms (~1600×).
@@ -16,7 +16,13 @@
 //! largest N recorded in the JSON. `-- --shard-only` runs just that
 //! section at full N (CI's bench-smoke leg).
 //!
-//!     cargo bench --bench fig1_speed [-- --paper-scale --workers 4 | --shard-only]
+//! And the ANN-backend comparison (→ `BENCH_ann.json`): raw per-query
+//! latency of linear/kdtree/lsh/hnsw at N ∈ {64k, 256k, 1M}, with the
+//! sub-linear-scaling verdict for hnsw (its 1M/64k time ratio must sit well
+//! below the 15.6× row ratio). `-- --ann-only` runs just that section at
+//! full N (CI's bench-smoke leg).
+//!
+//!     cargo bench --bench fig1_speed [-- --paper-scale --workers 4 | --shard-only | --ann-only]
 
 use sam::bench::{fmt_time, measure, save_bench_root, save_results, Table};
 use sam::memory::sharded::ShardedMemoryEngine;
@@ -209,6 +215,102 @@ fn shard_scale_section(full: bool) {
     );
 }
 
+/// The HNSW tentpole's acceptance section (→ `BENCH_ann.json`): raw
+/// per-query latency of each ANN backend at N ∈ {64k, 256k, 1M} (smaller Ns
+/// off `--paper-scale`/`--ann-only`), measured through the batched
+/// `query_many_into` hot path on the bare indexes. The JSON records the
+/// hnsw sub-linear-scaling verdict: its largest-N/smallest-N per-query time
+/// ratio must sit well below the row-count ratio (15.6× for 1M/64k) — a
+/// linear-time backend tracks the row ratio, an O(log N) graph tracks
+/// log N ≈ 1.25×.
+fn ann_backend_section(full: bool) {
+    use sam::ann::build_index;
+    let (dim, k, heads) = (32usize, 16usize, 4usize);
+    let ns: &[usize] = if full { &[1 << 16, 1 << 18, 1 << 20] } else { &[1 << 12, 1 << 14] };
+    let kinds: &[(&str, AnnKind)] = &[
+        ("linear", AnnKind::Linear),
+        ("kdtree", AnnKind::KdForest),
+        ("lsh", AnnKind::Lsh),
+        ("hnsw", AnnKind::Hnsw),
+    ];
+    println!("\nANN backends — per-query latency, {heads}-query batch, k={k}, dim={dim}\n");
+    let mut table = Table::new(&["backend", "N", "build", "time/query", "vs linear"]);
+    let mut rows = Vec::new();
+    let mut hnsw_t: Vec<(usize, f64)> = Vec::new();
+    for &n in ns {
+        // One deterministic point set per N, shared by every backend.
+        let mut rng = Rng::new(0xA55 ^ n as u64);
+        let mut pts = vec![0.0f32; n * dim];
+        rng.fill_normal(&mut pts, 1.0);
+        // Queries perturbed around stored rows (the SAM regime; uniformly
+        // random queries are the known ANN worst case, not the workload).
+        let queries: Vec<Vec<f32>> = (0..heads)
+            .map(|h| {
+                let base = (h * 65_537) % n;
+                pts[base * dim..(base + 1) * dim]
+                    .iter()
+                    .map(|x| x + 0.1 * rng.normal())
+                    .collect()
+            })
+            .collect();
+        let mut linear_t = f64::NAN;
+        for &(label, kind) in kinds {
+            let bt = Timer::start();
+            let mut idx = build_index(kind, n, dim, 0xD1CE);
+            for i in 0..n {
+                idx.insert(i, &pts[i * dim..(i + 1) * dim]);
+            }
+            let build_s = bt.elapsed_s();
+            let mut out = Vec::new();
+            idx.query_many_into(&queries, k, &mut out); // warm the scratch
+            let reps = if n >= 1 << 20 { 3 } else { 5 };
+            let stats = measure(reps, || idx.query_many_into(&queries, k, &mut out));
+            let per_query = stats.min / heads as f64;
+            if kind == AnnKind::Linear {
+                linear_t = per_query;
+            }
+            if kind == AnnKind::Hnsw {
+                hnsw_t.push((n, per_query));
+            }
+            table.row(vec![
+                label.to_string(),
+                n.to_string(),
+                fmt_time(build_s),
+                fmt_time(per_query),
+                format!("{:.1}x", linear_t / per_query),
+            ]);
+            rows.push(Json::obj(vec![
+                ("backend", Json::str(label)),
+                ("n", Json::num(n as f64)),
+                ("build_s", Json::num(build_s)),
+                ("seconds_per_query", Json::num(per_query)),
+            ]));
+        }
+    }
+    table.print();
+    let (n_min, t_min) = hnsw_t[0];
+    let (n_max, t_max) = *hnsw_t.last().unwrap();
+    let row_ratio = n_max as f64 / n_min as f64;
+    let time_ratio = t_max / t_min.max(1e-12);
+    let sublinear = time_ratio < row_ratio / 2.0;
+    println!(
+        "\nhnsw scaling: time(N={n_max})/time(N={n_min}) = {time_ratio:.2}x vs row ratio \
+         {row_ratio:.1}x -> {}",
+        if sublinear { "sub-linear" } else { "NOT SUB-LINEAR" }
+    );
+    save_bench_root(
+        "ann",
+        Json::obj(vec![
+            ("rows", Json::arr(rows)),
+            ("largest_n", Json::num(n_max as f64)),
+            ("smallest_n", Json::num(n_min as f64)),
+            ("hnsw_time_ratio_largest_vs_smallest", Json::num(time_ratio)),
+            ("row_ratio", Json::num(row_ratio)),
+            ("hnsw_sublinear", Json::Bool(sublinear)),
+        ]),
+    );
+}
+
 fn main() {
     let args = Args::from_env();
     let paper = args.has("paper-scale");
@@ -218,6 +320,11 @@ fn main() {
     // to 1M), skipping the Figure 1a model sweep.
     if args.has("shard-only") {
         shard_scale_section(true);
+        return;
+    }
+    // CI's ANN-backend leg: just the backend comparison at full N.
+    if args.has("ann-only") {
+        ann_backend_section(true);
         return;
     }
 
@@ -231,6 +338,7 @@ fn main() {
         ("SAM linear", CoreKind::Sam, AnnKind::Linear, sparse_max),
         ("SAM kd-tree", CoreKind::Sam, AnnKind::KdForest, sparse_max),
         ("SAM LSH", CoreKind::Sam, AnnKind::Lsh, sparse_max),
+        ("SAM HNSW", CoreKind::Sam, AnnKind::Hnsw, sparse_max),
     ];
 
     let mut ns = Vec::new();
@@ -314,6 +422,10 @@ fn main() {
     // Sharded memory scale section (BENCH_shard.json): full N sweep to 1M
     // at --paper-scale, the 64k point otherwise.
     shard_scale_section(paper);
+
+    // ANN backend comparison (BENCH_ann.json): full N sweep to 1M at
+    // --paper-scale, smaller Ns otherwise.
+    ann_backend_section(paper);
 
     save_results("fig1_speed", Json::arr(results));
 }

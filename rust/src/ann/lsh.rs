@@ -30,13 +30,20 @@ pub struct LshIndex {
     pub min_candidates: usize,
     stamp: Vec<u32>,
     stamp_now: u32,
-    /// Inserts since the last bucket compaction. Bucket vectors only grow
-    /// (remove() retains capacity), so a long update stream slowly bloats
-    /// the tables; every `compact_every` inserts we rehash once, amortizing
-    /// the O(N) compaction over O(N) incremental updates.
+    /// Inserts *and removes* since the last bucket compaction. Bucket
+    /// vectors only grow (remove() retains capacity), so long update or
+    /// remove-heavy streams slowly bloat the tables; every `compact_every`
+    /// ops we rehash once, amortizing the O(N) compaction over O(N)
+    /// incremental updates.
     ops_since_compact: usize,
     compact_every: usize,
     rebuilds: usize,
+    /// Reused query scratch: flat normalized queries (one dim-sized segment
+    /// per query), per-(query, table) bucket keys, and the candidate pool —
+    /// so the query hot path allocates nothing beyond its result.
+    qn_scratch: Vec<f32>,
+    qkeys: Vec<u64>,
+    cand: Vec<usize>,
 }
 
 impl LshIndex {
@@ -72,6 +79,9 @@ impl LshIndex {
             ops_since_compact: 0,
             compact_every: 8 * n.max(64),
             rebuilds: 0,
+            qn_scratch: Vec::new(),
+            qkeys: Vec::new(),
+            cand: Vec::new(),
         }
     }
 
@@ -100,6 +110,60 @@ impl LshIndex {
             self.stamp_now = 1;
         }
         self.stamp_now
+    }
+}
+
+/// Append the L2-normalized copy of `v` to `buf` (zero vectors stay zero).
+fn push_normalized(buf: &mut Vec<f32>, v: &[f32]) {
+    let n = dot(v, v).sqrt();
+    let start = buf.len();
+    buf.extend_from_slice(v);
+    if n >= 1e-12 {
+        let inv = 1.0 / n;
+        buf[start..].iter_mut().for_each(|x| *x *= inv);
+    }
+}
+
+/// Candidate gathering for one query whose per-table bucket keys are `keys`:
+/// exact buckets first, then multiprobe 1-bit flips until the pool reaches
+/// `want` (stopping at 2·want). Free function over split borrows so `query`
+/// and `query_many_into` share it — which is what keeps them value-identical.
+fn gather_candidates(
+    tables: &[HashMap<u64, Vec<usize>>],
+    bits: usize,
+    keys: &[u64],
+    want: usize,
+    stamp: &mut [u32],
+    stamp_val: u32,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    for (t, &key) in keys.iter().enumerate() {
+        if let Some(bucket) = tables[t].get(&key) {
+            for &id in bucket {
+                if stamp[id] != stamp_val {
+                    stamp[id] = stamp_val;
+                    out.push(id);
+                }
+            }
+        }
+    }
+    if out.len() < want {
+        'probe: for b in 0..bits {
+            for (t, &key) in keys.iter().enumerate() {
+                if let Some(bucket) = tables[t].get(&(key ^ (1 << b))) {
+                    for &id in bucket {
+                        if stamp[id] != stamp_val {
+                            stamp[id] = stamp_val;
+                            out.push(id);
+                        }
+                    }
+                }
+                if out.len() >= want * 2 {
+                    break 'probe;
+                }
+            }
+        }
     }
 }
 
@@ -149,47 +213,38 @@ impl AnnIndex for LshIndex {
         }
         self.present[id] = false;
         self.count -= 1;
+        // Removes bloat the tables exactly like inserts do (retained bucket
+        // capacity), so they count toward the compaction budget too — a
+        // remove-heavy stream must still trigger the promised compaction.
+        self.ops_since_compact += 1;
+        if self.ops_since_compact >= self.compact_every {
+            self.rebuild();
+        }
     }
 
     fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
-        let qn = normalized(q);
+        assert_eq!(q.len(), self.dim);
+        self.qn_scratch.clear();
+        push_normalized(&mut self.qn_scratch, q);
+        self.qkeys.clear();
+        for t in 0..self.tables.len() {
+            let key = self.hash(t, &self.qn_scratch);
+            self.qkeys.push(key);
+        }
         let stamp = self.next_stamp();
-        let mut candidates: Vec<usize> = Vec::with_capacity(self.min_candidates * 2);
-
-        // Exact buckets first.
-        let keys: Vec<u64> = (0..self.tables.len()).map(|t| self.hash(t, &qn)).collect();
-        for (t, &key) in keys.iter().enumerate() {
-            if let Some(bucket) = self.tables[t].get(&key) {
-                for &id in bucket {
-                    if self.stamp[id] != stamp {
-                        self.stamp[id] = stamp;
-                        candidates.push(id);
-                    }
-                }
-            }
-        }
-        // Multiprobe: 1-bit flips until the candidate pool is large enough.
-        if candidates.len() < self.min_candidates.max(k) {
-            'probe: for b in 0..self.bits {
-                for (t, &key) in keys.iter().enumerate() {
-                    if let Some(bucket) = self.tables[t].get(&(key ^ (1 << b))) {
-                        for &id in bucket {
-                            if self.stamp[id] != stamp {
-                                self.stamp[id] = stamp;
-                                candidates.push(id);
-                            }
-                        }
-                    }
-                    if candidates.len() >= self.min_candidates.max(k) * 2 {
-                        break 'probe;
-                    }
-                }
-            }
-        }
-
+        let want = self.min_candidates.max(k);
+        gather_candidates(
+            &self.tables,
+            self.bits,
+            &self.qkeys,
+            want,
+            &mut self.stamp,
+            stamp,
+            &mut self.cand,
+        );
         let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
-        for id in candidates {
-            let d2 = dist_sq(&qn, self.point(id));
+        for &id in &self.cand {
+            let d2 = dist_sq(&self.qn_scratch, self.point(id));
             if best.len() < k || d2 < best.last().unwrap().1 {
                 let pos = best.partition_point(|&(_, bd)| bd <= d2);
                 best.insert(pos, (id, d2));
@@ -203,17 +258,80 @@ impl AnnIndex for LshIndex {
             .collect()
     }
 
+    /// Batched probe: hash all H queries against each table's hyperplanes up
+    /// front (one pass per table serves every query while its planes are hot
+    /// in cache), then probe and rank per query. Value-identical to issuing
+    /// `query` per element — both paths share `gather_candidates` and the
+    /// same ranking loop over identically normalized queries.
+    fn query_many_into(
+        &mut self,
+        queries: &[Vec<f32>],
+        k: usize,
+        out: &mut Vec<Vec<(usize, f32)>>,
+    ) {
+        let dim = self.dim;
+        let nt = self.tables.len();
+        self.qn_scratch.clear();
+        for q in queries {
+            assert_eq!(q.len(), dim);
+            push_normalized(&mut self.qn_scratch, q);
+        }
+        self.qkeys.clear();
+        self.qkeys.resize(queries.len() * nt, 0);
+        for t in 0..nt {
+            for qi in 0..queries.len() {
+                let key = self.hash(t, &self.qn_scratch[qi * dim..(qi + 1) * dim]);
+                self.qkeys[qi * nt + t] = key;
+            }
+        }
+        while out.len() < queries.len() {
+            out.push(Vec::new());
+        }
+        out.truncate(queries.len());
+        for (qi, slot) in out.iter_mut().enumerate() {
+            let stamp = self.next_stamp();
+            let want = self.min_candidates.max(k);
+            gather_candidates(
+                &self.tables,
+                self.bits,
+                &self.qkeys[qi * nt..(qi + 1) * nt],
+                want,
+                &mut self.stamp,
+                stamp,
+                &mut self.cand,
+            );
+            slot.clear();
+            slot.reserve(k + 1);
+            for &id in &self.cand {
+                let d2 = dist_sq(&self.qn_scratch[qi * dim..(qi + 1) * dim], self.point(id));
+                if slot.len() < k || d2 < slot.last().unwrap().1 {
+                    let pos = slot.partition_point(|&(_, bd)| bd <= d2);
+                    slot.insert(pos, (id, d2));
+                    if slot.len() > k {
+                        slot.pop();
+                    }
+                }
+            }
+            for e in slot.iter_mut() {
+                e.1 = unit_dist_sq_to_cosine(e.1);
+            }
+        }
+    }
+
     fn rebuild(&mut self) {
         // Rehash everything (hyperplanes are static; this compacts buckets).
-        let ids: Vec<usize> =
-            (0..self.present.len()).filter(|&i| self.present[i]).collect();
         for t in &mut self.tables {
             t.clear();
         }
-        for id in ids {
-            for t in 0..self.tables.len() {
-                let key = self.hash(t, &self.point(id).to_vec());
-                self.keys[id * self.tables.len() + t] = key;
+        let nt = self.tables.len();
+        for id in 0..self.present.len() {
+            if !self.present[id] {
+                continue;
+            }
+            for t in 0..nt {
+                // Hash the row slice in place — no per-(row, table) copy.
+                let key = self.hash(t, &self.data[id * self.dim..(id + 1) * self.dim]);
+                self.keys[id * nt + t] = key;
                 self.tables[t].entry(key).or_default().push(id);
             }
         }
@@ -236,6 +354,9 @@ impl AnnIndex for LshIndex {
             + self.present.capacity()
             + self.keys.capacity() * 8
             + self.stamp.capacity() * 4
+            + self.qn_scratch.capacity() * 4
+            + self.qkeys.capacity() * 8
+            + self.cand.capacity() * 8
             + bucket_bytes
     }
 }
@@ -315,6 +436,122 @@ mod tests {
         let r = lsh.query(&target, 1);
         assert_ne!(r[0].0, 5);
         assert_eq!(lsh.len(), 31);
+    }
+
+    #[test]
+    fn query_many_into_matches_sequential_query() {
+        let dim = 32;
+        let n = 256;
+        let pts = random_points(n, dim, 25);
+        let mut lsh = LshIndex::with_defaults(n, dim, 5);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+        }
+        let mut out = Vec::new();
+        let mut rng = Rng::new(6);
+        for round in 0..3 {
+            let queries: Vec<Vec<f32>> = (0..4)
+                .map(|qi| {
+                    pts[(round * 31 + qi * 7) % n]
+                        .iter()
+                        .map(|x| x + 0.1 * rng.normal())
+                        .collect()
+                })
+                .collect();
+            lsh.query_many_into(&queries, 4, &mut out);
+            for (q, got) in queries.iter().zip(&out) {
+                assert_eq!(lsh.query(q, 4), *got, "round {round} (batched != sequential)");
+            }
+        }
+    }
+
+    #[test]
+    fn remove_heavy_stream_triggers_compaction() {
+        // Regression: remove() never advanced ops_since_compact, so a
+        // remove-heavy stream kept every bucket's stale capacity forever.
+        let dim = 16;
+        let n = 64;
+        let pts = random_points(n, dim, 26);
+        let mut lsh = LshIndex::with_defaults(n, dim, 7);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+        }
+        // Bloat the buckets with update churn (remove+insert retains bucket
+        // capacity), then drain with a pure-remove stream.
+        let mut rng = Rng::new(8);
+        for step in 0..4 * n {
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            lsh.update(step % n, &v);
+        }
+        let bloated = lsh.heap_bytes();
+        let rebuilds_before = lsh.full_rebuilds();
+        lsh.ops_since_compact = 0;
+        lsh.compact_every = n / 2;
+        for id in 0..n / 2 {
+            lsh.remove(id);
+        }
+        assert!(
+            lsh.full_rebuilds() > rebuilds_before,
+            "pure-remove stream never compacted"
+        );
+        assert!(
+            lsh.heap_bytes() < bloated,
+            "compaction must shrink the tables: {} vs {bloated}",
+            lsh.heap_bytes()
+        );
+        assert_eq!(lsh.len(), n / 2);
+        // Post-compaction correctness: surviving rows are still findable.
+        for id in (n / 2..n).step_by(5) {
+            let p = lsh.point(id).to_vec();
+            let r = lsh.query(&p, 1);
+            assert_eq!(r[0].0, id);
+        }
+    }
+
+    #[test]
+    fn rebuild_allocates_per_bucket_not_per_row() {
+        // Regression: rebuild used to copy every row once per table just to
+        // hash it. Allocation events in a warm rebuild must now be bounded
+        // by bucket growth — strictly below one per (row, table) pair.
+        let dim = 16;
+        let n = 64;
+        let n_tables = 4;
+        let pts = random_points(n, dim, 27);
+        let mut lsh = LshIndex::new(n, dim, n_tables, 3, 16, 9);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+        }
+        lsh.rebuild(); // warm the table capacities
+        let before = crate::util::alloc::thread_alloc_count();
+        lsh.rebuild();
+        let allocs = crate::util::alloc::thread_alloc_count() - before;
+        assert!(
+            allocs < n * n_tables,
+            "rebuild allocated {allocs} times for {} bucket entries",
+            n * n_tables
+        );
+    }
+
+    #[test]
+    fn warm_query_allocates_only_its_result() {
+        // Regression: query used to allocate its per-table key Vec (and a
+        // normalized copy, and the candidate pool) on every call.
+        let dim = 32;
+        let n = 256;
+        let pts = random_points(n, dim, 28);
+        let mut lsh = LshIndex::with_defaults(n, dim, 10);
+        for (i, p) in pts.iter().enumerate() {
+            lsh.insert(i, p);
+        }
+        let q = pts[17].clone();
+        // Warm the scratch capacities.
+        lsh.query(&q, 4);
+        lsh.query(&q, 4);
+        let before = crate::util::alloc::thread_alloc_count();
+        let r = lsh.query(&q, 4);
+        let allocs = crate::util::alloc::thread_alloc_count() - before;
+        assert_eq!(r[0].0, 17);
+        assert!(allocs <= 3, "query hot path allocated {allocs} times");
     }
 
     #[test]

@@ -7,14 +7,18 @@
 //!
 //! We follow the paper: a FLANN-style randomized k-d-tree ensemble
 //! ([`KdForest`]) for small word sizes, hyperplane LSH ([`LshIndex`]) for
-//! large ones, and an exact [`LinearIndex`] baseline ("SAM linear"). All
-//! indexes store L2-normalized copies of the rows so that nearest-in-L2
-//! equals highest-cosine, which is the similarity used by content-based
-//! addressing (eq. 2).
+//! large ones, and an exact [`LinearIndex`] baseline ("SAM linear"). Beyond
+//! the paper's 2016-era choices, [`HnswIndex`] adds a navigable-small-world
+//! graph with O(log N) queries — the backend for million-to-ten-million-slot
+//! configs. All indexes store L2-normalized copies of the rows so that
+//! nearest-in-L2 equals highest-cosine, which is the similarity used by
+//! content-based addressing (eq. 2).
 
+pub mod hnsw;
 pub mod kdtree;
 pub mod lsh;
 
+pub use hnsw::HnswIndex;
 pub use kdtree::KdForest;
 pub use lsh::LshIndex;
 
@@ -29,6 +33,9 @@ pub enum AnnKind {
     KdForest,
     /// Hyperplane locality-sensitive hashing — "SAM ANN (LSH)".
     Lsh,
+    /// HNSW-style small-world graph — O(log N) queries, the post-paper
+    /// backend for very large memories.
+    Hnsw,
 }
 
 impl std::str::FromStr for AnnKind {
@@ -38,7 +45,8 @@ impl std::str::FromStr for AnnKind {
             "linear" => Ok(AnnKind::Linear),
             "kdtree" | "kd" | "kdforest" => Ok(AnnKind::KdForest),
             "lsh" => Ok(AnnKind::Lsh),
-            other => Err(format!("unknown ann kind {other:?} (linear|kdtree|lsh)")),
+            "hnsw" => Ok(AnnKind::Hnsw),
+            other => Err(format!("unknown ann kind {other:?} (linear|kdtree|lsh|hnsw)")),
         }
     }
 }
@@ -374,7 +382,7 @@ impl AnnIndex for LinearIndex {
     fn rebuild(&mut self) {}
 
     fn heap_bytes(&self) -> usize {
-        self.data.capacity() * 4 + self.present.capacity()
+        self.data.capacity() * 4 + self.present.capacity() + self.qn_scratch.capacity() * 4
     }
 }
 
@@ -384,6 +392,7 @@ pub fn build_index(kind: AnnKind, n: usize, dim: usize, seed: u64) -> Box<dyn An
         AnnKind::Linear => Box::new(LinearIndex::new(n, dim)),
         AnnKind::KdForest => Box::new(KdForest::with_defaults(n, dim, seed)),
         AnnKind::Lsh => Box::new(LshIndex::with_defaults(n, dim, seed)),
+        AnnKind::Hnsw => Box::new(HnswIndex::with_defaults(n, dim, seed)),
     }
 }
 
@@ -527,6 +536,28 @@ mod tests {
                 assert_eq!((-cv).to_bits(), rv.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn linear_heap_bytes_counts_query_scratch() {
+        // Regression: heap_bytes used to omit qn_scratch, so the sum-of-parts
+        // heap identities undercounted after the first batched query.
+        let mut rng = Rng::new(14);
+        let mut idx = LinearIndex::new(32, 8);
+        for i in 0..32 {
+            let v: Vec<f32> = (0..8).map(|_| rng.normal()).collect();
+            idx.insert(i, &v);
+        }
+        let before = idx.heap_bytes();
+        let queries: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..8).map(|_| rng.normal()).collect()).collect();
+        let mut out = Vec::new();
+        idx.query_many_rank_into(&queries, 4, &mut out);
+        assert!(
+            idx.heap_bytes() > before,
+            "warm query scratch must show up in heap_bytes"
+        );
+        assert!(idx.heap_bytes() >= before + queries.len() * 8 * 4);
     }
 
     #[test]

@@ -250,6 +250,9 @@ mod tests {
         assert_eq!(cfg.task, "babi");
         assert_eq!(cfg.core_cfg.mem_words, 64);
         assert_eq!(cfg.core_cfg.ann, AnnKind::KdForest);
+        // The graph backend parses through the same FromStr path.
+        let args = Args::parse("--ann hnsw".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().core_cfg.ann, AnnKind::Hnsw);
     }
 
     #[test]

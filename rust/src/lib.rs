@@ -6,7 +6,9 @@
 //! The crate implements six memory-augmented model cores (LSTM, NTM, DAM,
 //! SAM, DNC, SDNC) with hand-derived backward passes, the sparse-memory
 //! substrates that give SAM its asymptotics (approximate-nearest-neighbour
-//! indexes, a least-recently-accessed ring, CSR sparse tensors, and a
+//! indexes — exact linear scan, the paper's kd-forest and LSH, plus an
+//! O(log N) HNSW graph, selected with `--ann linear|kdtree|lsh|hnsw` —
+//! a least-recently-accessed ring, CSR sparse tensors, and a
 //! rollback journal for O(1)-space BPTT), an S-way **sharded memory
 //! engine** whose parallel ANN fan-out serves million-slot memories
 //! (bit-identical to the unsharded engine for the exact Linear index —

@@ -36,7 +36,7 @@ Common flags (paper defaults in parens):
   --word W          word size (32)
   --heads R         access heads (4)
   --k K             sparse reads per head (4)
-  --ann linear|kdtree|lsh  (linear)
+  --ann linear|kdtree|lsh|hnsw  (linear)
   --shards S        memory shards for SAM/SDNC (1); rows stripe across S
                     stores+ANNs and queries fan out across a worker pool.
                     Bit-identical to S=1 for --ann linear at any S — a pure

@@ -880,7 +880,7 @@ mod tests {
 
     #[test]
     fn kd_and_lsh_shards_are_run_deterministic() {
-        for kind in [AnnKind::KdForest, AnnKind::Lsh] {
+        for kind in [AnnKind::KdForest, AnnKind::Lsh, AnnKind::Hnsw] {
             let run = |seed: u64| -> Vec<u32> {
                 let mut rng = Rng::new(seed);
                 let mut e =

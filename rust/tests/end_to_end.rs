@@ -67,7 +67,7 @@ fn memory_cores_train_on_sort_and_babi_and_omniglot() {
 #[test]
 fn sam_with_every_ann_backend() {
     let task = CopyTask::new(4);
-    for ann in [AnnKind::Linear, AnnKind::KdForest, AnnKind::Lsh] {
+    for ann in [AnnKind::Linear, AnnKind::KdForest, AnnKind::Lsh, AnnKind::Hnsw] {
         let cfg = CoreConfig { ann, ..tiny_cfg(&task, 16) };
         let mut rng = Rng::new(16);
         let core = build_core(CoreKind::Sam, &cfg, &mut rng);

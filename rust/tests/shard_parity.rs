@@ -4,7 +4,7 @@
 //!   reproduces the unsharded scan order exactly, so the ENTIRE training
 //!   stack — per-step losses, post-episode parameters AND gradients — must
 //!   be bit-identical between S=1 and any S, for SAM and SDNC alike.
-//! * **Per-run determinism**: kd-tree / LSH shards see different row
+//! * **Per-run determinism**: kd-tree / LSH / HNSW shards see different row
 //!   subsets than one big index, so S-parity is not promised — but two
 //!   identical runs must agree bit-for-bit.
 //! * **Rollback fuzz**: random interleavings of write / read / rollback /
@@ -127,7 +127,7 @@ fn linear_sharding_is_bit_identical_to_unsharded_for_sam_and_sdnc() {
 fn kd_and_lsh_sharded_training_is_run_deterministic() {
     // No S-parity promise for the approximate backends — but identical
     // runs must produce identical bits at every S.
-    for ann in [AnnKind::KdForest, AnnKind::Lsh] {
+    for ann in [AnnKind::KdForest, AnnKind::Lsh, AnnKind::Hnsw] {
         for s in shard_set(&[2, 3]) {
             let a = fingerprint(CoreKind::Sam, ann, s, 11, 2);
             let b = fingerprint(CoreKind::Sam, ann, s, 11, 2);
@@ -305,6 +305,23 @@ fn rollback_fuzz_lsh_shards_stay_on_the_incremental_path() {
         assert_eq!(
             after, rebuilds0,
             "rollback/reset forced an LSH rehash off the incremental path (S={s})"
+        );
+    }
+}
+
+#[test]
+fn rollback_fuzz_hnsw_shards_never_rebuild() {
+    // HNSW has no automatic rebuild trigger at all: update_row relinks in
+    // place and remove_row repairs neighbors, so the counter is pinned at
+    // exactly 0 — construction included — across write/rollback/reset churn.
+    for s in shard_set(&[2, 4]) {
+        if s == 1 {
+            continue;
+        }
+        let after = approx_fuzz(AnnKind::Hnsw, 256, 8, s, 51);
+        assert_eq!(
+            after, 0,
+            "rollback/reset knocked an HNSW shard off the incremental path (S={s})"
         );
     }
 }
