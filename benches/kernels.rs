@@ -15,9 +15,12 @@
 //! `--smoke` runs reduced shapes/reps (CI keeps it under a minute) but
 //! still writes both files, tagged `"smoke": true`.
 
+use sam::ann::{AnnIndex, LinearIndex};
 use sam::bench::{fmt_time, gflops, measure, save_bench_root, Table};
 use sam::prelude::*;
 use sam::tensor::matrix::{self, reference, Matrix};
+use sam::tensor::rowcodec::RowFormat;
+use sam::tensor::simd::{kernel_path, kernel_path_name, KernelPath};
 use sam::util::json::Json;
 
 fn random_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
@@ -161,10 +164,33 @@ fn step_time_us(kind: CoreKind, n: usize, t_steps: usize, reps: usize) -> f64 {
     stats.min / t_steps as f64 * 1e6
 }
 
+/// Rows/s for a LinearIndex scan (`query_many_rank_into`) over `n` rows of
+/// width `w` stored in `fmt` — the bandwidth-bound ANN hot path that row
+/// compaction targets.
+fn scan_rows_per_s(fmt: RowFormat, n: usize, w: usize, heads: usize, reps: usize) -> f64 {
+    let mut rng = Rng::new(7);
+    let mut idx = LinearIndex::with_format(n, w, fmt);
+    let mut row = vec![0.0f32; w];
+    for i in 0..n {
+        for v in row.iter_mut() {
+            *v = rng.normal();
+        }
+        idx.insert(i, &row);
+    }
+    let queries: Vec<Vec<f32>> =
+        (0..heads).map(|_| (0..w).map(|_| rng.normal()).collect()).collect();
+    let mut out = Vec::new();
+    idx.query_many_rank_into(&queries, 16, &mut out); // warm scratch
+    let t = measure(reps, || idx.query_many_rank_into(&queries, 16, &mut out)).min;
+    (n * heads) as f64 / t.max(1e-12)
+}
+
 fn main() {
     let args = Args::from_env();
     let smoke = args.has("smoke");
     let t_steps = args.usize_or("steps", 10);
+    let vectorized = kernel_path() == KernelPath::Avx2Fma;
+    println!("kernel dispatch: {}\n", kernel_path_name());
 
     // --- kernels ----------------------------------------------------------
     println!("Kernel GFLOP/s — register-blocked vs reference\n");
@@ -191,12 +217,71 @@ fn main() {
         ]));
     }
     ktable.print();
+    // Acceptance floor: blocked GEMM ≥ 2× the dot-product reference on the
+    // vectorized path. Scalar-dispatch machines report the fallback and
+    // skip the ratio verdict (the blocked-vs-reference gap there is the
+    // old, separately-tracked baseline).
+    let gemm_speedup = kernels
+        .iter()
+        .find(|r| r.kernel == "gemm")
+        .map(|r| r.gflops_blocked / r.gflops_reference.max(1e-12))
+        .unwrap_or(0.0);
+    let gemm_verdict = if !vectorized {
+        "skipped (scalar dispatch)".to_string()
+    } else if gemm_speedup >= 2.0 {
+        "pass".to_string()
+    } else {
+        format!("fail ({gemm_speedup:.2}x < 2x)")
+    };
+    println!("\ngemm >=2x verdict: {gemm_verdict}");
+
+    // --- linear-scan bandwidth per row format ------------------------------
+    // The ANN scan is bandwidth-bound, so rows/s should track bytes/row:
+    // bf16 halves traffic, int8 quarters it (plus one scale per row).
+    let (sn, sw, sheads, sreps) = if smoke { (1 << 16, 64, 4, 3) } else { (1 << 20, 64, 4, 5) };
+    println!("\nLinear-scan bandwidth (N={sn}, W={sw}, {sheads} heads, k=16)\n");
+    let mut scantable = Table::new(&["format", "rows/s", "vs f32"]);
+    let mut scanjson = Vec::new();
+    let mut rows_per_s = std::collections::BTreeMap::new();
+    for fmt in [RowFormat::F32, RowFormat::Bf16, RowFormat::Int8] {
+        let rps = scan_rows_per_s(fmt, sn, sw, sheads, sreps);
+        rows_per_s.insert(fmt.name(), rps);
+        let ratio = rps / rows_per_s["f32"].max(1e-12);
+        scantable.row(vec![
+            fmt.name().to_string(),
+            format!("{:.2}M", rps / 1e6),
+            format!("{ratio:.2}x"),
+        ]);
+        scanjson.push(Json::obj(vec![
+            ("row_format", Json::str(fmt.name())),
+            ("n", Json::num(sn as f64)),
+            ("w", Json::num(sw as f64)),
+            ("rows_per_s", Json::num(rps)),
+            ("vs_f32", Json::num(ratio)),
+        ]));
+    }
+    scantable.print();
+    let bf16_speedup = rows_per_s["bf16"] / rows_per_s["f32"].max(1e-12);
+    let scan_verdict = if !vectorized {
+        "skipped (scalar dispatch)".to_string()
+    } else if bf16_speedup >= 1.7 {
+        "pass".to_string()
+    } else {
+        format!("fail ({bf16_speedup:.2}x < 1.7x)")
+    };
+    println!("\nbf16 scan >=1.7x verdict: {scan_verdict}");
+
     save_bench_root(
         "kernels",
         Json::obj(vec![
             ("generated_by", Json::str("benches/kernels.rs")),
             ("smoke", Json::Bool(smoke)),
             ("kernels", Json::arr(kjson)),
+            ("gemm_speedup", Json::num(gemm_speedup)),
+            ("gemm_verdict", Json::str(gemm_verdict.as_str())),
+            ("linear_scan", Json::arr(scanjson)),
+            ("scan_bf16_speedup", Json::num(bf16_speedup)),
+            ("scan_verdict", Json::str(scan_verdict.as_str())),
         ]),
     );
 

@@ -22,7 +22,8 @@ pub use hnsw::HnswIndex;
 pub use kdtree::KdForest;
 pub use lsh::LshIndex;
 
-use crate::tensor::matrix::{dist_sq, dot};
+use crate::tensor::matrix::dot;
+use crate::tensor::rowcodec::{RowFormat, RowStore};
 
 /// Which ANN backs a SAM memory (CLI / config selectable).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -193,26 +194,46 @@ pub(crate) fn unit_dist_sq_to_cosine(d2: f32) -> f32 {
 /// Exact KNN by linear scan over normalized rows — O(N) per query.
 /// This is the paper's "SAM linear" configuration and the ground truth the
 /// approximate indexes are property-tested against.
+///
+/// Rows live in a [`RowStore`], so the scan can run over compact (bf16 /
+/// int8) storage with decode fused into the distance kernel — the index's
+/// bandwidth then tracks the memory's `--row-format`. Compaction costs a
+/// little precision in the stored unit vectors (ranking stays within the
+/// quantization error; see `rust/tests/ann_recall.rs`).
 pub struct LinearIndex {
     dim: usize,
-    /// Flat normalized row storage; row i at [i*dim, (i+1)*dim).
-    data: Vec<f32>,
+    /// Normalized row storage (row codec selected at construction).
+    rows: RowStore,
     present: Vec<bool>,
     count: usize,
     /// Normalized-query scratch for `query_many_into` (flat, one dim-sized
     /// segment per query), reused across steps.
     qn_scratch: Vec<f32>,
+    /// Normalized-row staging for compact-format inserts (empty for f32,
+    /// which normalizes in place in the slot).
+    norm_scratch: Vec<f32>,
 }
 
 impl LinearIndex {
     pub fn new(capacity: usize, dim: usize) -> LinearIndex {
+        LinearIndex::with_format(capacity, dim, RowFormat::F32)
+    }
+
+    /// [`LinearIndex::new`] with an explicit row-storage codec.
+    pub fn with_format(capacity: usize, dim: usize, fmt: RowFormat) -> LinearIndex {
         LinearIndex {
             dim,
-            data: vec![0.0; capacity * dim],
+            rows: RowStore::zeros(capacity, dim, fmt),
             present: vec![false; capacity],
             count: 0,
             qn_scratch: Vec::new(),
+            norm_scratch: if fmt == RowFormat::F32 { Vec::new() } else { vec![0.0; dim] },
         }
+    }
+
+    /// Storage codec of the indexed rows.
+    pub fn row_format(&self) -> RowFormat {
+        self.rows.fmt()
     }
 }
 
@@ -225,17 +246,26 @@ impl AnnIndex for LinearIndex {
         assert_eq!(v.len(), self.dim);
         if id >= self.present.len() {
             self.present.resize(id + 1, false);
-            self.data.resize((id + 1) * self.dim, 0.0);
+            self.rows.grow(id + 1);
         }
-        // Normalize in place in the slot: insert is the per-write ANN sync
-        // (every sparse_write AND every backward revert), so it must not
-        // allocate a temporary like `normalized` does.
+        // Normalize without a fresh allocation: insert is the per-write ANN
+        // sync (every sparse_write AND every backward revert). f32 rows
+        // normalize in place in the slot; compact rows stage the unit
+        // vector in the persistent `norm_scratch` and encode it.
         let n = dot(v, v).sqrt();
-        let slot = &mut self.data[id * self.dim..(id + 1) * self.dim];
-        slot.copy_from_slice(v);
-        if n >= 1e-12 {
-            let inv = 1.0 / n;
-            slot.iter_mut().for_each(|x| *x *= inv);
+        if self.rows.fmt() == RowFormat::F32 {
+            let slot = self.rows.row_mut(id);
+            slot.copy_from_slice(v);
+            if n >= 1e-12 {
+                let inv = 1.0 / n;
+                slot.iter_mut().for_each(|x| *x *= inv);
+            }
+        } else {
+            let inv = if n >= 1e-12 { 1.0 / n } else { 1.0 };
+            for (o, &x) in self.norm_scratch.iter_mut().zip(v) {
+                *o = x * inv;
+            }
+            self.rows.set_row(id, &self.norm_scratch);
         }
         if !self.present[id] {
             self.present[id] = true;
@@ -265,7 +295,7 @@ impl AnnIndex for LinearIndex {
             if !self.present[id] {
                 continue;
             }
-            let d2 = dist_sq(&qn, &self.data[id * self.dim..(id + 1) * self.dim]);
+            let d2 = self.rows.dist_sq_to(id, &qn);
             if best.len() < k || d2 < best.last().unwrap().1 {
                 let pos = best.partition_point(|&(_, bd)| bd <= d2);
                 best.insert(pos, (id, d2));
@@ -291,9 +321,8 @@ impl AnnIndex for LinearIndex {
             if !self.present[id] {
                 continue;
             }
-            let row = &self.data[id * self.dim..(id + 1) * self.dim];
             for (qn, best) in qns.iter().zip(bests.iter_mut()) {
-                let d2 = dist_sq(qn, row);
+                let d2 = self.rows.dist_sq_to(id, qn);
                 if best.len() < k || d2 < best.last().unwrap().1 {
                     let pos = best.partition_point(|&(_, bd)| bd <= d2);
                     best.insert(pos, (id, d2));
@@ -364,10 +393,9 @@ impl AnnIndex for LinearIndex {
             if !self.present[id] {
                 continue;
             }
-            let row = &self.data[id * dim..(id + 1) * dim];
             for (qi, best) in out.iter_mut().enumerate() {
                 let qn = &self.qn_scratch[qi * dim..(qi + 1) * dim];
-                let d2 = dist_sq(qn, row);
+                let d2 = self.rows.dist_sq_to(id, qn);
                 if best.len() < k || d2 < best.last().unwrap().1 {
                     let pos = best.partition_point(|&(_, bd)| bd <= d2);
                     best.insert(pos, (id, d2));
@@ -382,14 +410,31 @@ impl AnnIndex for LinearIndex {
     fn rebuild(&mut self) {}
 
     fn heap_bytes(&self) -> usize {
-        self.data.capacity() * 4 + self.present.capacity() + self.qn_scratch.capacity() * 4
+        self.rows.heap_bytes()
+            + self.present.capacity()
+            + self.qn_scratch.capacity() * 4
+            + self.norm_scratch.capacity() * 4
     }
 }
 
 /// Construct an index of the given kind sized for `n` rows of width `dim`.
 pub fn build_index(kind: AnnKind, n: usize, dim: usize, seed: u64) -> Box<dyn AnnIndex> {
+    build_index_fmt(kind, n, dim, seed, RowFormat::F32)
+}
+
+/// [`build_index`] with a row-storage codec. Only [`LinearIndex`] honours
+/// compact formats (its scan is the bandwidth-bound path row compaction
+/// targets); the tree/hash/graph backends keep f32 internals regardless —
+/// their footprint is dominated by structure, not row payloads.
+pub fn build_index_fmt(
+    kind: AnnKind,
+    n: usize,
+    dim: usize,
+    seed: u64,
+    fmt: RowFormat,
+) -> Box<dyn AnnIndex> {
     match kind {
-        AnnKind::Linear => Box::new(LinearIndex::new(n, dim)),
+        AnnKind::Linear => Box::new(LinearIndex::with_format(n, dim, fmt)),
         AnnKind::KdForest => Box::new(KdForest::with_defaults(n, dim, seed)),
         AnnKind::Lsh => Box::new(LshIndex::with_defaults(n, dim, seed)),
         AnnKind::Hnsw => Box::new(HnswIndex::with_defaults(n, dim, seed)),
@@ -399,6 +444,7 @@ pub fn build_index(kind: AnnKind, n: usize, dim: usize, seed: u64) -> Box<dyn An
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::matrix::dist_sq;
     use crate::util::rng::Rng;
 
     #[test]
@@ -411,6 +457,45 @@ mod tests {
         assert_eq!(r[0].0, 0);
         assert_eq!(r[1].0, 2);
         assert!(r[0].1 > r[1].1);
+    }
+
+    #[test]
+    fn linear_compact_formats_rank_like_f32() {
+        // Well-separated vectors: compact unit-row storage must preserve
+        // the ranking, and the reported cosines must sit within the codec's
+        // quantization error of the f32 scan.
+        let mut rng = Rng::new(21);
+        let data: Vec<Vec<f32>> = (0..48).map(|_| (0..16).map(|_| rng.normal()).collect()).collect();
+        let queries: Vec<Vec<f32>> =
+            (0..6).map(|_| (0..16).map(|_| rng.normal()).collect()).collect();
+        let mut f32_idx = LinearIndex::new(48, 16);
+        for (i, v) in data.iter().enumerate() {
+            f32_idx.insert(i, v);
+        }
+        for (fmt, tol) in [(RowFormat::Bf16, 0.02), (RowFormat::Int8, 0.04)] {
+            let mut idx = LinearIndex::with_format(48, 16, fmt);
+            assert_eq!(idx.row_format(), fmt);
+            for (i, v) in data.iter().enumerate() {
+                idx.insert(i, v);
+            }
+            for q in &queries {
+                let want = f32_idx.query(q, 4);
+                let got = idx.query(q, 4);
+                assert_eq!(got.len(), want.len());
+                for (&(_, wc), &(_, gc)) in want.iter().zip(&got) {
+                    assert!(
+                        (wc - gc).abs() < tol,
+                        "{}: cosine drifted {wc} vs {gc}",
+                        fmt.name()
+                    );
+                }
+            }
+            // Growth past capacity must work for compact stores too.
+            idx.insert(100, &data[0]);
+            assert_eq!(idx.len(), 49);
+            let top = idx.query(&data[0], 1);
+            assert!(top[0].0 == 100 || top[0].0 == 0, "duplicate row must win: {top:?}");
+        }
     }
 
     #[test]

@@ -69,13 +69,35 @@ pub fn save_results(bench: &str, value: Json) {
 /// measured perf trajectory: `benches/kernels.rs` populates them, CI
 /// uploads them as artifacts, and future kernel/hot-path changes are
 /// judged against the numbers they record.
+///
+/// Every object payload is stamped with the dispatched kernel path
+/// (`"kernel_path"`: avx2 | scalar) and the memory-row codec
+/// (`"row_format"`, default `"f32"`) unless the bench already set them —
+/// perf numbers are meaningless without knowing which code path and row
+/// width produced them.
 pub fn save_bench_root(name: &str, value: Json) {
+    let value = stamp_bench_context(value);
     let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
     let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
     if let Err(e) = std::fs::write(&path, value.encode()) {
         eprintln!("warn: could not write {path:?}: {e}");
     } else {
         println!("\nbench results written to {path:?}");
+    }
+}
+
+/// Inject `kernel_path` / `row_format` into an object payload when absent
+/// (non-object payloads pass through untouched).
+fn stamp_bench_context(value: Json) -> Json {
+    match value {
+        Json::Obj(mut map) => {
+            map.entry("kernel_path".to_string())
+                .or_insert_with(|| Json::Str(crate::tensor::simd::kernel_path_name().to_string()));
+            map.entry("row_format".to_string())
+                .or_insert_with(|| Json::Str("f32".to_string()));
+            Json::Obj(map)
+        }
+        other => other,
     }
 }
 
@@ -114,6 +136,26 @@ mod tests {
         t.row(vec!["ntm".into(), "64".into(), "12.0".into()]);
         t.print(); // should not panic
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn bench_payloads_are_stamped_with_dispatch_context() {
+        let stamped = stamp_bench_context(Json::obj(vec![("x", Json::Num(1.0))]));
+        let Json::Obj(map) = &stamped else { panic!("object in, object out") };
+        assert_eq!(
+            map.get("kernel_path"),
+            Some(&Json::Str(crate::tensor::simd::kernel_path_name().to_string()))
+        );
+        assert_eq!(map.get("row_format"), Some(&Json::Str("f32".to_string())));
+        // Bench-provided values win over the injected defaults.
+        let explicit = stamp_bench_context(Json::obj(vec![(
+            "row_format",
+            Json::Str("bf16".to_string()),
+        )]));
+        let Json::Obj(map) = &explicit else { panic!() };
+        assert_eq!(map.get("row_format"), Some(&Json::Str("bf16".to_string())));
+        // Non-object payloads pass through untouched.
+        assert_eq!(stamp_bench_context(Json::Num(3.0)), Json::Num(3.0));
     }
 
     #[test]

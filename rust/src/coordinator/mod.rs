@@ -12,6 +12,7 @@ use crate::tasks::{
     babi::BabiTask, copy::CopyTask, omniglot::OmniglotTask, recall::AssociativeRecall,
     sort::PrioritySort, Task,
 };
+use crate::tensor::rowcodec::RowFormat;
 use crate::training::workers::ParallelTrainer;
 use crate::training::{TrainConfig, Trainer, TrainLog};
 use crate::util::args::Args;
@@ -46,6 +47,10 @@ impl ExperimentConfig {
             .str_or("ann", "linear")
             .parse()
             .map_err(|e: String| anyhow!(e))?;
+        let row_format: RowFormat = args
+            .str_or("row-format", "f32")
+            .parse()
+            .map_err(|e: String| anyhow!(e))?;
         let task = args.str_or("task", "copy");
         let core_cfg = CoreConfig {
             hidden: args.usize_or("hidden", 100),
@@ -62,6 +67,9 @@ impl ExperimentConfig {
             // ann=linear, so this is a pure throughput knob for training
             // AND serving (sessions inherit it via the core config).
             shards: args.usize_or("shards", 1).max(1),
+            // Memory-row codec: f32 (default, the only train-legal format)
+            // or bf16/int8 compact rows for serve/eval bandwidth.
+            row_format,
             seed: args.u64_or("seed", 1),
             ..CoreConfig::default()
         };
@@ -72,6 +80,15 @@ impl ExperimentConfig {
                 "--shards {} exceeds --memory {} (at most one shard per memory word)",
                 core_cfg.shards,
                 core_cfg.mem_words
+            ));
+        }
+        if core_cfg.row_format != RowFormat::F32
+            && !matches!(core, CoreKind::Sam | CoreKind::Sdnc)
+        {
+            return Err(anyhow!(
+                "--row-format {} requires a sparse-memory model (sam|sdnc); \
+                 --model {core:?} stores rows as plain f32",
+                core_cfg.row_format.name()
             ));
         }
         let train_cfg = TrainConfig {
@@ -266,6 +283,30 @@ mod tests {
         // More shards than memory words is a config error, not a panic.
         let args = Args::parse("--memory 4 --shards 8".split_whitespace().map(String::from));
         assert!(ExperimentConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn row_format_flag_parsed_and_validated() {
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(
+            ExperimentConfig::from_args(&args).unwrap().core_cfg.row_format,
+            RowFormat::F32
+        );
+        for (flag, want) in [("bf16", RowFormat::Bf16), ("int8", RowFormat::Int8)] {
+            let args =
+                Args::parse(format!("--row-format {flag}").split_whitespace().map(String::from));
+            assert_eq!(ExperimentConfig::from_args(&args).unwrap().core_cfg.row_format, want);
+        }
+        // Unknown codec is a usage error.
+        let args = Args::parse("--row-format f16".split_whitespace().map(String::from));
+        assert!(ExperimentConfig::from_args(&args).is_err());
+        // Compact rows only exist in the sparse engines.
+        let args =
+            Args::parse("--model dam --row-format bf16".split_whitespace().map(String::from));
+        assert!(ExperimentConfig::from_args(&args).is_err());
+        let args =
+            Args::parse("--model sdnc --row-format int8".split_whitespace().map(String::from));
+        assert!(ExperimentConfig::from_args(&args).is_ok());
     }
 
     #[test]

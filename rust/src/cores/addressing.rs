@@ -98,8 +98,17 @@ pub fn content_weights_into(
 ) -> ContentRead {
     let beta = softplus(beta_raw) + 1.0;
     sims.clear();
+    // Per row, one fused (q·m, m·m) pass through the RowSource — for f32
+    // stores these are the identical dot() calls cos_sim always made
+    // (bit-identical), for compact stores the decode happens inside the
+    // kernel. |q| is hoisted: it was recomputed per row before, but it is
+    // the same dot(q,q) every time, so the bits don't change.
+    let nq = norm(q);
     for &i in &rows {
-        sims.push(cos_sim(q, mem.row(i)));
+        let (dqm, nmsq) = mem.row_dot_normsq(i, q);
+        let nm = nmsq.sqrt();
+        let d = nq.max(NORM_FLOOR) * nm.max(NORM_FLOOR);
+        sims.push(CosSim { value: dqm / d, nq, nm });
     }
     weights.clear();
     for s in &sims {

@@ -19,6 +19,7 @@ use crate::nn::linear::Linear;
 use crate::nn::lstm::{Lstm, LstmState};
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::matrix::{gemm_nt, Matrix, GEMM_ROW_TILE};
+use crate::tensor::rowcodec::RowFormat;
 use crate::util::rng::Rng;
 
 /// Which model to build.
@@ -82,6 +83,10 @@ pub struct CoreConfig {
     /// is bit-identical to S=1 for `AnnKind::Linear` (see
     /// `memory::sharded`, rust/tests/shard_parity.rs).
     pub shards: usize,
+    /// Memory-row storage codec (`--row-format`). Compact formats (bf16 /
+    /// int8) are serve/eval-only: training borrows rows as `&[f32]`, so the
+    /// CLI rejects them for `train` (see [`RowFormat::train_legal`]).
+    pub row_format: RowFormat,
     pub seed: u64,
 }
 
@@ -100,6 +105,7 @@ impl Default for CoreConfig {
             lambda: 0.99,
             k_l: 8,
             shards: 1,
+            row_format: RowFormat::F32,
             seed: 1,
         }
     }

@@ -101,7 +101,7 @@ impl SamCore {
         // here so sessions can re-derive the identical episode-start state.
         let mem_seed = rng.next_u64();
         let ann_seed = rng.next_u64();
-        let engine = ShardedMemoryEngine::new_sparse_from_seeds(
+        let engine = ShardedMemoryEngine::new_sparse_from_seeds_fmt(
             cfg.mem_words,
             cfg.word,
             cfg.k,
@@ -110,6 +110,7 @@ impl SamCore {
             mem_seed,
             ann_seed,
             cfg.shards,
+            cfg.row_format,
         );
         SamCore {
             ctrl,
@@ -158,7 +159,7 @@ impl SamCore {
         };
         SamSession {
             ctrl: self.ctrl.new_state(),
-            engine: ShardedMemoryEngine::new_sparse_from_seeds(
+            engine: ShardedMemoryEngine::new_sparse_from_seeds_fmt(
                 self.cfg.mem_words,
                 self.cfg.word,
                 self.cfg.k,
@@ -167,6 +168,7 @@ impl SamCore {
                 mem_seed,
                 ann_seed,
                 self.cfg.shards,
+                self.cfg.row_format,
             ),
             w_read_prev: vec![SparseVec::new(); self.cfg.heads],
             r_prev: vec![vec![0.0; self.cfg.word]; self.cfg.heads],

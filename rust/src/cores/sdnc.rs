@@ -116,7 +116,7 @@ impl SdncCore {
         // Same seed draw order as `SparseMemoryEngine::new_sparse`.
         let mem_seed = rng.next_u64();
         let ann_seed = rng.next_u64();
-        let engine = ShardedMemoryEngine::new_sparse_from_seeds(
+        let engine = ShardedMemoryEngine::new_sparse_from_seeds_fmt(
             cfg.mem_words,
             cfg.word,
             cfg.k,
@@ -125,6 +125,7 @@ impl SdncCore {
             mem_seed,
             ann_seed,
             cfg.shards,
+            cfg.row_format,
         );
         SdncCore {
             ctrl,
@@ -344,7 +345,7 @@ impl SdncCore {
         };
         SdncSession {
             ctrl: self.ctrl.new_state(),
-            engine: ShardedMemoryEngine::new_sparse_from_seeds(
+            engine: ShardedMemoryEngine::new_sparse_from_seeds_fmt(
                 self.cfg.mem_words,
                 self.cfg.word,
                 self.cfg.k,
@@ -353,6 +354,7 @@ impl SdncCore {
                 mem_seed,
                 ann_seed,
                 self.cfg.shards,
+                self.cfg.row_format,
             ),
             n_link: SparseLinkMatrix::new(self.cfg.k_l),
             p_link: SparseLinkMatrix::new(self.cfg.k_l),

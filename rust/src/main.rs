@@ -37,6 +37,10 @@ Common flags (paper defaults in parens):
   --heads R         access heads (4)
   --k K             sparse reads per head (4)
   --ann linear|kdtree|lsh|hnsw  (linear)
+  --row-format f32|bf16|int8    memory-row storage codec (f32). Compact
+                    rows (bf16: 2 B/value; int8: 1 B/value + per-row scale)
+                    cut scan bandwidth for eval AND serve; training is
+                    f32-only (backward borrows rows as f32)
   --shards S        memory shards for SAM/SDNC (1); rows stripe across S
                     stores+ANNs and queries fan out across a worker pool.
                     Bit-identical to S=1 for --ann linear at any S — a pure
@@ -79,6 +83,14 @@ fn main() -> Result<()> {
 
 fn train(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
+    // Compact rows are serve/eval-only: the backward pass borrows memory
+    // rows as `&[f32]`, which quantized storage cannot lend.
+    if !cfg.core_cfg.row_format.train_legal() {
+        return Err(anyhow!(
+            "--row-format {} is serve/eval-only; train requires f32 rows",
+            cfg.core_cfg.row_format.name()
+        ));
+    }
     println!(
         "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?}, shards={}, workers={})",
         cfg.core, cfg.task, cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads,
@@ -160,10 +172,11 @@ fn info(args: &Args) -> Result<()> {
     println!("task:  {} (x_dim {}, y_dim {})", cfg.task, task.x_dim(), task.y_dim());
     println!("params: {}", trainer.core.param_count());
     println!(
-        "memory: {} words x {} (heads {}, K {}, ann {:?}, shards {})",
+        "memory: {} words x {} (heads {}, K {}, ann {:?}, shards {}, rows {})",
         cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads, cfg.core_cfg.k,
-        cfg.core_cfg.ann, cfg.core_cfg.shards
+        cfg.core_cfg.ann, cfg.core_cfg.shards, cfg.core_cfg.row_format.name()
     );
+    println!("kernels: {} dispatch", sam::tensor::simd::kernel_path_name());
     // PJRT artifacts, if built.
     let dir = sam::runtime::artifacts_dir();
     match sam::runtime::Runtime::cpu() {

@@ -39,7 +39,7 @@
 //! `Workspace::recycle_*` during backward — the same workspace must serve
 //! all of a core's engine calls.
 
-use crate::ann::{build_index, AnnIndex, AnnKind};
+use crate::ann::{build_index_fmt, AnnIndex, AnnKind};
 use crate::cores::addressing::{
     content_weights_backward_ws, content_weights_into, write_gate_backward_ws, write_gate_ws,
     ContentRead, CosSim, WriteGate,
@@ -48,6 +48,7 @@ use crate::memory::store::{MemoryStore, StepJournal};
 use crate::memory::usage::LraRing;
 use crate::tensor::csr::{RowSparse, SparseVec};
 use crate::tensor::matrix::dot;
+use crate::tensor::rowcodec::RowFormat;
 use crate::tensor::workspace::{Pool, Workspace};
 use crate::util::rng::Rng;
 
@@ -141,6 +142,9 @@ pub struct SparseMemoryEngine {
     cr_tmp: Vec<ContentRead>,
     /// dL/dweights staging for `backward_read_topk`.
     dw_scratch: Vec<f32>,
+    /// Decoded-row staging for ANN sync on compact-format stores (empty
+    /// for f32, where the row is borrowed directly).
+    row_scratch: Vec<f32>,
 }
 
 impl SparseMemoryEngine {
@@ -173,14 +177,37 @@ impl SparseMemoryEngine {
         mem_seed: u64,
         ann_seed: u64,
     ) -> SparseMemoryEngine {
-        let mut mem = MemoryStore::zeros(n, word);
-        for i in 0..n {
-            init_row(mem_seed, i, mem.row_mut(i));
-        }
-        let mut ann = build_index(kind, n, word, ann_seed);
-        for i in 0..n {
-            ann.insert(i, mem.row(i));
-        }
+        SparseMemoryEngine::new_sparse_from_seeds_fmt(
+            n,
+            word,
+            k,
+            delta,
+            kind,
+            mem_seed,
+            ann_seed,
+            RowFormat::F32,
+        )
+    }
+
+    /// [`new_sparse_from_seeds`](SparseMemoryEngine::new_sparse_from_seeds)
+    /// with an explicit row format. Compact stores are initialized by
+    /// encoding the same deterministic [`init_row`] noise, and the ANN is
+    /// fed the *decoded* rows (what the store actually holds), keeping the
+    /// index consistent with every later decode-on-read scan.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_sparse_from_seeds_fmt(
+        n: usize,
+        word: usize,
+        k: usize,
+        delta: f32,
+        kind: AnnKind,
+        mem_seed: u64,
+        ann_seed: u64,
+        fmt: RowFormat,
+    ) -> SparseMemoryEngine {
+        let (mem, ann, row_scratch) = Self::build_store_and_index(
+            n, word, kind, mem_seed, ann_seed, 1, 0, fmt,
+        );
         SparseMemoryEngine {
             mem,
             ann: Some(ann),
@@ -197,6 +224,45 @@ impl SparseMemoryEngine {
             sim_pool: Pool::new(),
             cr_tmp: Vec::new(),
             dw_scratch: Vec::new(),
+            row_scratch,
+        }
+    }
+
+    /// Shared store+index construction: deterministic row init through the
+    /// global-id mapping, f32 rows borrowed straight into the ANN, compact
+    /// rows encoded then re-decoded for the insert.
+    #[allow(clippy::too_many_arguments)]
+    fn build_store_and_index(
+        n_local: usize,
+        word: usize,
+        kind: AnnKind,
+        mem_seed: u64,
+        ann_seed: u64,
+        stride: usize,
+        offset: usize,
+        fmt: RowFormat,
+    ) -> (MemoryStore, Box<dyn AnnIndex>, Vec<f32>) {
+        let mut mem = MemoryStore::zeros_fmt(n_local, word, fmt);
+        let mut ann = build_index_fmt(kind, n_local, word, ann_seed, fmt);
+        if fmt == RowFormat::F32 {
+            for l in 0..n_local {
+                init_row(mem_seed, l * stride + offset, mem.row_mut(l));
+            }
+            for l in 0..n_local {
+                ann.insert(l, mem.row(l));
+            }
+            (mem, ann, Vec::new())
+        } else {
+            let mut scratch = vec![0.0; word];
+            for l in 0..n_local {
+                init_row(mem_seed, l * stride + offset, &mut scratch);
+                mem.set_row(l, &scratch);
+            }
+            for l in 0..n_local {
+                mem.decode_row_into(l, &mut scratch);
+                ann.insert(l, &scratch);
+            }
+            (mem, ann, scratch)
         }
     }
 
@@ -218,14 +284,36 @@ impl SparseMemoryEngine {
         stride: usize,
         offset: usize,
     ) -> SparseMemoryEngine {
-        let mut mem = MemoryStore::zeros(n_local, word);
-        for l in 0..n_local {
-            init_row(mem_seed, l * stride + offset, mem.row_mut(l));
-        }
-        let mut ann = build_index(kind, n_local, word, ann_seed);
-        for l in 0..n_local {
-            ann.insert(l, mem.row(l));
-        }
+        SparseMemoryEngine::new_shard_fmt(
+            n_local,
+            word,
+            kind,
+            mem_seed,
+            ann_seed,
+            stride,
+            offset,
+            RowFormat::F32,
+        )
+    }
+
+    /// [`new_shard`](SparseMemoryEngine::new_shard) with an explicit row
+    /// format; see
+    /// [`new_sparse_from_seeds_fmt`](SparseMemoryEngine::new_sparse_from_seeds_fmt)
+    /// for the compact-initialization contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_shard_fmt(
+        n_local: usize,
+        word: usize,
+        kind: AnnKind,
+        mem_seed: u64,
+        ann_seed: u64,
+        stride: usize,
+        offset: usize,
+        fmt: RowFormat,
+    ) -> SparseMemoryEngine {
+        let (mem, ann, row_scratch) = Self::build_store_and_index(
+            n_local, word, kind, mem_seed, ann_seed, stride, offset, fmt,
+        );
         SparseMemoryEngine {
             mem,
             ann: Some(ann),
@@ -242,6 +330,7 @@ impl SparseMemoryEngine {
             sim_pool: Pool::new(),
             cr_tmp: Vec::new(),
             dw_scratch: Vec::new(),
+            row_scratch,
         }
     }
 
@@ -265,6 +354,7 @@ impl SparseMemoryEngine {
             sim_pool: Pool::new(),
             cr_tmp: Vec::new(),
             dw_scratch: Vec::new(),
+            row_scratch: Vec::new(),
         }
     }
 
@@ -280,6 +370,11 @@ impl SparseMemoryEngine {
     /// `&MemoryStore` (e.g. the dense models' `content_weights`).
     pub fn store(&self) -> &MemoryStore {
         &self.mem
+    }
+
+    /// Storage format of the memory rows (f32 or a compact codec).
+    pub fn row_format(&self) -> RowFormat {
+        self.mem.fmt()
     }
 
     // -- forward ------------------------------------------------------------
@@ -342,15 +437,29 @@ impl SparseMemoryEngine {
         }
         // ANN sync over the same row set the journaled path touches: the
         // erased row first, then the add support (minus the erase row).
-        if let Some(ann) = self.ann.as_mut() {
-            ann.update_row(lra_row, self.mem.row(lra_row));
+        if self.ann.is_some() {
+            self.ann_sync_row(lra_row);
             for (i, _) in gate.weights.iter() {
                 if i != lra_row {
-                    ann.update_row(i, self.mem.row(i));
+                    self.ann_sync_row(i);
                 }
             }
         }
         gate.weights
+    }
+
+    /// Push one store row into the ANN index. F32 stores lend the row
+    /// slice directly; compact stores decode into the persistent
+    /// `row_scratch` first so the index always mirrors the *decoded*
+    /// (post-quantization) contents, allocation-free in steady state.
+    fn ann_sync_row(&mut self, row: usize) {
+        let Some(ann) = self.ann.as_mut() else { return };
+        if self.mem.fmt() == RowFormat::F32 {
+            ann.update_row(row, self.mem.row(row));
+        } else {
+            self.mem.decode_row_into(row, &mut self.row_scratch);
+            ann.update_row(row, &self.row_scratch);
+        }
     }
 
     /// Re-initialize to the episode-start state without journals: memory
@@ -365,12 +474,18 @@ impl SparseMemoryEngine {
             // Sparse mode (standalone or shard): regenerate the seeded init
             // through the global-id mapping and re-sync the index in place.
             let (seed, stride, offset) = (self.mem_seed, self.init_stride, self.init_offset);
-            for i in 0..n {
-                init_row(seed, i * stride + offset, self.mem.row_mut(i));
+            if self.mem.fmt() == RowFormat::F32 {
+                for i in 0..n {
+                    init_row(seed, i * stride + offset, self.mem.row_mut(i));
+                }
+            } else {
+                for i in 0..n {
+                    init_row(seed, i * stride + offset, &mut self.row_scratch);
+                    self.mem.set_row(i, &self.row_scratch);
+                }
             }
-            let ann = self.ann.as_mut().unwrap();
             for i in 0..n {
-                ann.update_row(i, self.mem.row(i));
+                self.ann_sync_row(i);
             }
             if let Some(ring) = self.ring.as_mut() {
                 ring.reset();
@@ -610,9 +725,9 @@ impl SparseMemoryEngine {
     /// bit-parity with the pre-engine code (same caveat class as
     /// DESIGN.md's worker-count note).
     fn sync_rows(&mut self, journal: &StepJournal) {
-        if let Some(ann) = self.ann.as_mut() {
+        if self.ann.is_some() {
             for row in journal.touched_rows() {
-                ann.update_row(row, self.mem.row(row));
+                self.ann_sync_row(row);
             }
         }
     }
@@ -656,13 +771,13 @@ impl SparseMemoryEngine {
         word: &[f32],
     ) {
         self.mem.apply_sparse_write_opt(erase_local, weights_local, word);
-        if let Some(ann) = self.ann.as_mut() {
+        if self.ann.is_some() {
             if let Some(er) = erase_local {
-                ann.update_row(er, self.mem.row(er));
+                self.ann_sync_row(er);
             }
             for (i, _) in weights_local.iter() {
                 if erase_local != Some(i) {
-                    ann.update_row(i, self.mem.row(i));
+                    self.ann_sync_row(i);
                 }
             }
         }

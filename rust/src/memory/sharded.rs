@@ -60,6 +60,7 @@ use crate::memory::store::RowSource;
 use crate::memory::usage::LraRing;
 use crate::tensor::csr::{RowSparse, SparseVec};
 use crate::tensor::matrix::dot;
+use crate::tensor::rowcodec::RowFormat;
 use crate::tensor::workspace::{Pool, Workspace};
 use crate::util::pool::ShardPool;
 use crate::util::rng::Rng;
@@ -81,6 +82,19 @@ impl RowSource for ShardRows<'_> {
     #[inline]
     fn row(&self, i: usize) -> &[f32] {
         self.shards[i % self.s].store().row(i / self.s)
+    }
+
+    // Forward the codec-aware kernels to the owning shard's store, so
+    // compact-format shards keep decode fused into the scan instead of
+    // falling back to the borrow-a-row defaults (which panic on compact).
+    #[inline]
+    fn row_dot_normsq(&self, i: usize, q: &[f32]) -> (f32, f32) {
+        self.shards[i % self.s].store().row_dot_normsq(i / self.s, q)
+    }
+
+    #[inline]
+    fn row_axpy(&self, i: usize, coeff: f32, out: &mut [f32]) {
+        self.shards[i % self.s].store().row_axpy(i / self.s, coeff, out);
     }
 }
 
@@ -152,11 +166,38 @@ impl ShardedMemoryEngine {
         ann_seed: u64,
         shards: usize,
     ) -> ShardedMemoryEngine {
+        ShardedMemoryEngine::new_sparse_from_seeds_fmt(
+            n,
+            word,
+            k,
+            delta,
+            kind,
+            mem_seed,
+            ann_seed,
+            shards,
+            RowFormat::F32,
+        )
+    }
+
+    /// [`ShardedMemoryEngine::new_sparse_from_seeds`] with an explicit row
+    /// format for every shard store (and the per-shard linear ANN).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_sparse_from_seeds_fmt(
+        n: usize,
+        word: usize,
+        k: usize,
+        delta: f32,
+        kind: AnnKind,
+        mem_seed: u64,
+        ann_seed: u64,
+        shards: usize,
+        fmt: RowFormat,
+    ) -> ShardedMemoryEngine {
         assert!(shards >= 1, "need at least one shard");
         assert!(shards <= n, "more shards ({shards}) than memory rows ({n})");
         let (engines, ring, dmem) = if shards == 1 {
-            let inner = SparseMemoryEngine::new_sparse_from_seeds(
-                n, word, k, delta, kind, mem_seed, ann_seed,
+            let inner = SparseMemoryEngine::new_sparse_from_seeds_fmt(
+                n, word, k, delta, kind, mem_seed, ann_seed, fmt,
             );
             (vec![inner], None, RowSparse::new(word))
         } else {
@@ -165,7 +206,7 @@ impl ShardedMemoryEngine {
                     let n_local = (n - sh).div_ceil(shards);
                     let shard_ann_seed =
                         ann_seed ^ (sh as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-                    SparseMemoryEngine::new_shard(
+                    SparseMemoryEngine::new_shard_fmt(
                         n_local,
                         word,
                         kind,
@@ -173,6 +214,7 @@ impl ShardedMemoryEngine {
                         shard_ann_seed,
                         shards,
                         sh,
+                        fmt,
                     )
                 })
                 .collect();
@@ -392,10 +434,9 @@ impl ShardedMemoryEngine {
         r.clear();
         r.resize(self.word, 0.0);
         for (i, wv) in w_read.iter() {
-            let row = self.row(i);
-            for (o, m) in r.iter_mut().zip(row) {
-                *o += wv * m;
-            }
+            // Codec-aware accumulate (decode fused for compact shards);
+            // bit-identical to the old manual loop for f32 rows.
+            self.shards[i % self.s].store().row_axpy(i / self.s, wv, r);
         }
         let ring = self.ring.as_mut().expect("sharded sparse engine has a global ring");
         for (i, wv) in w_read.iter() {
@@ -635,17 +676,24 @@ impl ShardedMemoryEngine {
         r
     }
 
-    /// Full snapshot **in global row order** — shard layout is invisible,
-    /// so S=1 and S=8 snapshots of the same logical memory are equal.
+    /// Full snapshot **in global row order** (decoded to f32 whatever the
+    /// row format) — shard layout is invisible, so S=1 and S=8 snapshots
+    /// of the same logical memory are equal.
     pub fn snapshot(&self) -> Vec<f32> {
         if self.s == 1 {
             return self.shards[0].snapshot();
         }
-        let mut out = Vec::with_capacity(self.n * self.word);
+        let mut out = vec![0.0; self.n * self.word];
         for i in 0..self.n {
-            out.extend_from_slice(self.row(i));
+            let sh = self.shards[i % self.s].store();
+            sh.decode_row_into(i / self.s, &mut out[i * self.word..(i + 1) * self.word]);
         }
         out
+    }
+
+    /// Storage format of the shard stores (uniform across shards).
+    pub fn row_format(&self) -> RowFormat {
+        self.shards[0].row_format()
     }
 
     // -- accounting ----------------------------------------------------------

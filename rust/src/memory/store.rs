@@ -13,6 +13,8 @@
 //! O(N) reset is needed between episodes.
 
 use crate::tensor::csr::SparseVec;
+use crate::tensor::matrix::{axpy, dot};
+use crate::tensor::rowcodec::{RowFormat, RowStore};
 use crate::tensor::workspace::Workspace;
 
 /// Row-addressed read access to memory contents. The addressing math
@@ -21,22 +23,55 @@ use crate::tensor::workspace::Workspace;
 /// live in S different stores (global row `i` → shard `i % S`, local row
 /// `i / S`) without copying. For a plain store, `row(i)` is the slice it
 /// always was.
+///
+/// The two fused kernels have row-borrowing defaults (exactly the float-op
+/// sequences the addressing/read paths always ran), and codec-aware
+/// implementors override them so compact rows are decoded inside the scan
+/// instead of borrowed — `row()` itself stays the f32/training accessor and
+/// panics on compact formats.
 pub trait RowSource {
     fn row(&self, i: usize) -> &[f32];
+
+    /// Fused `(q·row(i), row(i)·row(i))` — the content-addressing read.
+    #[inline]
+    fn row_dot_normsq(&self, i: usize, q: &[f32]) -> (f32, f32) {
+        let r = self.row(i);
+        (dot(q, r), dot(r, r))
+    }
+
+    /// `out += coeff · row(i)` — the sparse-read mixture kernel.
+    #[inline]
+    fn row_axpy(&self, i: usize, coeff: f32, out: &mut [f32]) {
+        axpy(out, coeff, self.row(i));
+    }
 }
 
-/// Dense external memory of `n` words (rows) of width `w`.
+/// Dense external memory of `n` words (rows) of width `w`, stored in one of
+/// the [`RowFormat`] codecs (f32 by default; bf16/int8 for serve/eval).
 #[derive(Debug, Clone)]
 pub struct MemoryStore {
     n: usize,
     w: usize,
-    data: Vec<f32>,
+    rows: RowStore,
+    /// Decode staging for compact-format writes (empty for f32; persistent
+    /// so the journal-free serving write stays zero-allocation).
+    scratch: Vec<f32>,
 }
 
 impl RowSource for MemoryStore {
     #[inline]
     fn row(&self, i: usize) -> &[f32] {
         MemoryStore::row(self, i)
+    }
+
+    #[inline]
+    fn row_dot_normsq(&self, i: usize, q: &[f32]) -> (f32, f32) {
+        self.rows.dot_normsq(i, q)
+    }
+
+    #[inline]
+    fn row_axpy(&self, i: usize, coeff: f32, out: &mut [f32]) {
+        self.rows.axpy_into(i, coeff, out);
     }
 }
 
@@ -87,10 +122,16 @@ pub struct WriteOp {
 }
 
 impl MemoryStore {
-    /// Allocate an n×w memory initialized to zero (O(N) — the one-off init
-    /// cost of Supp A.1).
+    /// Allocate an n×w f32 memory initialized to zero (O(N) — the one-off
+    /// init cost of Supp A.1).
     pub fn zeros(n: usize, w: usize) -> MemoryStore {
-        MemoryStore { n, w, data: vec![0.0; n * w] }
+        MemoryStore::zeros_fmt(n, w, RowFormat::F32)
+    }
+
+    /// [`MemoryStore::zeros`] in an explicit row format (`--row-format`).
+    pub fn zeros_fmt(n: usize, w: usize, fmt: RowFormat) -> MemoryStore {
+        let scratch = if fmt == RowFormat::F32 { Vec::new() } else { vec![0.0; w] };
+        MemoryStore { n, w, rows: RowStore::zeros(n, w, fmt), scratch }
     }
 
     pub fn n(&self) -> usize {
@@ -101,29 +142,53 @@ impl MemoryStore {
         self.w
     }
 
+    /// The storage codec rows are held in.
+    #[inline]
+    pub fn fmt(&self) -> RowFormat {
+        self.rows.fmt()
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.w..(i + 1) * self.w]
+        self.rows.row(i)
     }
 
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.w..(i + 1) * self.w]
+        self.rows.row_mut(i)
+    }
+
+    /// Decode row `i` into a caller buffer (any format; the ANN re-insert
+    /// and journaling path for compact rows).
+    #[inline]
+    pub fn decode_row_into(&self, i: usize, out: &mut [f32]) {
+        self.rows.decode_into(i, out);
+    }
+
+    /// Encode `vals` into row `i` (quantize-on-write for compact formats).
+    #[inline]
+    pub fn set_row(&mut self, i: usize, vals: &[f32]) {
+        self.rows.set_row(i, vals);
+    }
+
+    /// Squared distance from `q` to row `i`, decode fused in.
+    #[inline]
+    pub fn row_dist_sq(&self, i: usize, q: &[f32]) -> f32 {
+        self.rows.dist_sq_to(i, q)
     }
 
     pub fn fill(&mut self, v: f32) {
-        self.data.iter_mut().for_each(|x| *x = v);
+        self.rows.fill(v);
     }
 
-    /// Sparse read r = Σᵢ w̃(sᵢ) M(sᵢ) (paper eq. 4) in O(K·W).
+    /// Sparse read r = Σᵢ w̃(sᵢ) M(sᵢ) (paper eq. 4) in O(K·W). For f32
+    /// rows this is the exact historical float-op sequence (axpy per
+    /// support row); compact rows decode inside the same fused loop.
     pub fn read_sparse(&self, weights: &SparseVec, out: &mut [f32]) {
         assert_eq!(out.len(), self.w);
         out.iter_mut().for_each(|x| *x = 0.0);
         for (i, wv) in weights.iter() {
-            let row = self.row(i);
-            for (o, m) in out.iter_mut().zip(row) {
-                *o += wv * m;
-            }
+            self.rows.axpy_into(i, wv, out);
         }
     }
 
@@ -134,30 +199,31 @@ impl MemoryStore {
         out.iter_mut().for_each(|x| *x = 0.0);
         for (i, &wv) in weights.iter().enumerate() {
             if wv != 0.0 {
-                let row = self.row(i);
-                for (o, m) in out.iter_mut().zip(row) {
-                    *o += wv * m;
-                }
+                self.rows.axpy_into(i, wv, out);
             }
         }
     }
 
     /// Apply a sparse write, journaling prior contents of touched rows.
-    /// O(K·W) time and space, independent of N.
+    /// O(K·W) time and space, independent of N. f32-only (the generic
+    /// dense/test path; the engine's hot writes go through
+    /// [`MemoryStore::journal_sparse_write_opt`], which handles every
+    /// format).
     pub fn apply_write(&mut self, op: &WriteOp) -> StepJournal {
         assert_eq!(op.word.len(), self.w);
+        assert!(self.fmt() == RowFormat::F32, "apply_write is f32-only");
         // Save each distinct touched row once (erase ∪ add supports).
         let mut journal = StepJournal::default();
-        let save = |store: &Vec<f32>, j: &mut StepJournal, i: usize, w: usize| {
+        let save = |store: &RowStore, j: &mut StepJournal, i: usize| {
             if !j.saved.iter().any(|(r, _)| *r == i) {
-                j.saved.push((i, store[i * w..(i + 1) * w].to_vec()));
+                j.saved.push((i, store.row(i).to_vec()));
             }
         };
         for &i in &op.erase_rows {
-            save(&self.data, &mut journal, i, self.w);
+            save(&self.rows, &mut journal, i);
         }
         for (i, _) in op.weights.iter() {
-            save(&self.data, &mut journal, i, self.w);
+            save(&self.rows, &mut journal, i);
         }
         // Erase then add (paper: the LRA word is set to zero before writing).
         for &i in &op.erase_rows {
@@ -203,26 +269,55 @@ impl MemoryStore {
     ) {
         assert_eq!(word.len(), self.w);
         debug_assert!(journal.is_empty(), "journal shell must arrive drained");
+        if self.fmt() == RowFormat::F32 {
+            if let Some(erase_row) = erase_row {
+                journal
+                    .saved
+                    .push((erase_row, ws.take_f32_copy(self.row(erase_row))));
+            }
+            for (i, _) in weights.iter() {
+                if erase_row != Some(i) {
+                    let row_copy = ws.take_f32_copy(self.row(i));
+                    journal.saved.push((i, row_copy));
+                }
+            }
+            if let Some(erase_row) = erase_row {
+                self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+            }
+            for (i, wv) in weights.iter() {
+                let row = self.row_mut(i);
+                for (m, a) in row.iter_mut().zip(word) {
+                    *m += wv * a;
+                }
+            }
+            return;
+        }
+        // Compact rows: journal the *decoded* contents (plus, for int8, the
+        // row's scale as a trailing element) so revert can re-encode the
+        // exact prior storage bits; then decode-modify-encode each touched
+        // row (quantize-on-write).
         if let Some(erase_row) = erase_row {
-            journal
-                .saved
-                .push((erase_row, ws.take_f32_copy(self.row(erase_row))));
+            journal.saved.push((erase_row, self.journal_row_copy(erase_row, ws)));
         }
         for (i, _) in weights.iter() {
             if erase_row != Some(i) {
-                let row_copy = ws.take_f32_copy(self.row(i));
+                let row_copy = self.journal_row_copy(i, ws);
                 journal.saved.push((i, row_copy));
             }
         }
-        if let Some(erase_row) = erase_row {
-            self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        self.apply_sparse_write_opt(erase_row, weights, word);
+    }
+
+    /// Journal payload for one compact row: the decoded values, with the
+    /// int8 dequant scale appended so revert restores identical bits.
+    fn journal_row_copy(&self, i: usize, ws: &mut Workspace) -> Vec<f32> {
+        let extra = (self.fmt() == RowFormat::Int8) as usize;
+        let mut buf = ws.take_f32(self.w + extra);
+        self.rows.decode_into(i, &mut buf[..self.w]);
+        if extra == 1 {
+            buf[self.w] = self.rows.row_scale(i);
         }
-        for (i, wv) in weights.iter() {
-            let row = self.row_mut(i);
-            for (m, a) in row.iter_mut().zip(word) {
-                *m += wv * a;
-            }
-        }
+        buf
     }
 
     /// Journal-free twin of [`MemoryStore::journal_sparse_write`] for
@@ -244,14 +339,38 @@ impl MemoryStore {
         word: &[f32],
     ) {
         assert_eq!(word.len(), self.w);
-        if let Some(erase_row) = erase_row {
-            self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+        if self.fmt() == RowFormat::F32 {
+            if let Some(erase_row) = erase_row {
+                self.row_mut(erase_row).iter_mut().for_each(|x| *x = 0.0);
+            }
+            for (i, wv) in weights.iter() {
+                let row = self.row_mut(i);
+                for (m, a) in row.iter_mut().zip(word) {
+                    *m += wv * a;
+                }
+            }
+            return;
+        }
+        // Compact rows: decode-modify-encode per touched row, in f32, via
+        // the persistent scratch (zero allocations in steady state). The
+        // erase row starts from zero; if it is not also in the add support
+        // it is written back as an encoded zero row.
+        if let Some(er) = erase_row {
+            if !weights.iter().any(|(i, _)| i == er) {
+                self.scratch.iter_mut().for_each(|x| *x = 0.0);
+                self.rows.set_row(er, &self.scratch);
+            }
         }
         for (i, wv) in weights.iter() {
-            let row = self.row_mut(i);
-            for (m, a) in row.iter_mut().zip(word) {
+            if erase_row == Some(i) {
+                self.scratch.iter_mut().for_each(|x| *x = 0.0);
+            } else {
+                self.rows.decode_into(i, &mut self.scratch);
+            }
+            for (m, a) in self.scratch.iter_mut().zip(word) {
                 *m += wv * a;
             }
+            self.rows.set_row(i, &self.scratch);
         }
     }
 
@@ -274,32 +393,63 @@ impl MemoryStore {
         }
     }
 
-    /// Revert a journaled write: restore the saved rows (bit-exact).
+    /// Revert a journaled write: restore the saved rows (bit-exact in every
+    /// format — f32 copies bytes back; bf16 re-encodes losslessly
+    /// (`encode∘decode` is the identity); int8 re-encodes against the
+    /// journaled scale, which reproduces the original codes exactly).
     pub fn revert(&mut self, journal: &StepJournal) {
-        for (i, old) in journal.saved.iter().rev() {
-            self.row_mut(*i).copy_from_slice(old);
+        match self.fmt() {
+            RowFormat::F32 => {
+                for (i, old) in journal.saved.iter().rev() {
+                    self.row_mut(*i).copy_from_slice(old);
+                }
+            }
+            RowFormat::Bf16 => {
+                for (i, old) in journal.saved.iter().rev() {
+                    self.rows.set_row(*i, old);
+                }
+            }
+            RowFormat::Int8 => {
+                for (i, old) in journal.saved.iter().rev() {
+                    let (vals, scale) = old.split_at(self.w);
+                    self.rows.set_row_with_scale(*i, vals, scale[0]);
+                }
+            }
         }
     }
 
-    /// Full snapshot (used by the dense baselines' BPTT tape — this O(N·W)
-    /// copy per step is exactly the overhead SAM eliminates).
+    /// Full snapshot as decoded f32 (used by the dense baselines' BPTT
+    /// tape — this O(N·W) copy per step is exactly the overhead SAM
+    /// eliminates).
     pub fn snapshot(&self) -> Vec<f32> {
-        self.data.clone()
+        let mut out = Vec::new();
+        self.snapshot_into(&mut out);
+        out
     }
 
     /// Snapshot into a reused buffer (the dense baselines' per-step copy
-    /// without the per-step allocation).
+    /// without the per-step allocation). Compact rows are decoded; pairing
+    /// with [`MemoryStore::restore`] is value-faithful, not bit-identical
+    /// to the pre-snapshot *storage* for int8 (scales are recomputed).
     pub fn snapshot_into(&self, out: &mut Vec<f32>) {
         out.clear();
-        out.extend_from_slice(&self.data);
+        out.reserve(self.n * self.w);
+        for i in 0..self.n {
+            let len = out.len();
+            out.resize(len + self.w, 0.0);
+            self.rows.decode_into(i, &mut out[len..]);
+        }
     }
 
     pub fn restore(&mut self, snap: &[f32]) {
-        self.data.copy_from_slice(snap);
+        assert_eq!(snap.len(), self.n * self.w);
+        for i in 0..self.n {
+            self.rows.set_row(i, &snap[i * self.w..(i + 1) * self.w]);
+        }
     }
 
     pub fn heap_bytes(&self) -> usize {
-        self.data.capacity() * 4
+        self.rows.heap_bytes() + self.scratch.capacity() * 4
     }
 }
 
@@ -468,6 +618,100 @@ mod tests {
         // row0: [1*(1-0.5*1)+0.5*10, 2*(1-0.5*0.5)+0.5*10] = [5.5, 6.5]
         assert_eq!(m.row(0), &[5.5, 6.5]);
         assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    // -- compact-row (bf16/int8) write/rollback contract --------------------
+
+    fn random_compact_store(n: usize, w: usize, fmt: RowFormat, rng: &mut Rng) -> MemoryStore {
+        let mut m = MemoryStore::zeros_fmt(n, w, fmt);
+        let mut buf = vec![0.0; w];
+        for i in 0..n {
+            for v in buf.iter_mut() {
+                *v = rng.normal() * 0.02;
+            }
+            m.set_row(i, &buf);
+        }
+        m
+    }
+
+    #[test]
+    fn compact_write_then_revert_is_bit_exact() {
+        for fmt in [RowFormat::Bf16, RowFormat::Int8] {
+            for seed in 0..10u64 {
+                let mut rng = Rng::new(seed);
+                let (n, w) = (32, 12);
+                let mut m = random_compact_store(n, w, fmt, &mut rng);
+                // Compare decoded contents before/after; storage bits are
+                // a function of decoded values + (journaled) scales.
+                let before = m.snapshot();
+                let scales: Vec<f32> = (0..n).map(|i| m.rows.row_scale(i)).collect();
+                let mut ws = Workspace::new();
+                let mut journals = Vec::new();
+                for _ in 0..25 {
+                    let k = rng.int_in(1, 4);
+                    let idx = rng.sample_indices(n, k);
+                    let weights = SparseVec::from_pairs(
+                        idx.iter().map(|&i| (i, rng.normal())).collect(),
+                    );
+                    let erase = if rng.bernoulli(0.8) { Some(rng.below(n)) } else { None };
+                    let word: Vec<f32> = (0..w).map(|_| rng.normal() * 0.02).collect();
+                    let mut j = StepJournal::default();
+                    m.journal_sparse_write_opt(erase, &weights, &word, &mut j, &mut ws);
+                    journals.push(j);
+                }
+                for j in journals.iter().rev() {
+                    m.revert(j);
+                }
+                assert_eq!(m.snapshot(), before, "{fmt:?} seed {seed}: decoded rollback");
+                let scales_after: Vec<f32> = (0..n).map(|i| m.rows.row_scale(i)).collect();
+                assert_eq!(scales, scales_after, "{fmt:?} seed {seed}: scale rollback");
+            }
+        }
+    }
+
+    #[test]
+    fn compact_infer_write_matches_journaled_write() {
+        for fmt in [RowFormat::Bf16, RowFormat::Int8] {
+            let mut rng = Rng::new(17);
+            let mut a = random_compact_store(16, 6, fmt, &mut rng);
+            let mut b = a.clone();
+            let weights = SparseVec::from_pairs(vec![(2, 0.3), (5, 1.0), (9, -0.7)]);
+            let word: Vec<f32> = (0..6).map(|_| rng.normal() * 0.02).collect();
+            let mut ws = Workspace::new();
+            let mut j = StepJournal::default();
+            a.journal_sparse_write(5, &weights, &word, &mut j, &mut ws);
+            b.apply_sparse_write(5, &weights, &word);
+            assert_eq!(a.snapshot(), b.snapshot(), "{fmt:?}: infer write must match");
+        }
+    }
+
+    #[test]
+    fn compact_erase_zeroes_before_add() {
+        for fmt in [RowFormat::Bf16, RowFormat::Int8] {
+            let mut m = MemoryStore::zeros_fmt(4, 2, fmt);
+            m.set_row(1, &[9.0, 9.0]);
+            m.apply_sparse_write(1, &SparseVec::from_pairs(vec![(1, 0.5)]), &[2.0, 4.0]);
+            let mut dec = vec![0.0; 2];
+            m.decode_row_into(1, &mut dec);
+            // 0 + 0.5·word, old 9s gone; both values are exactly encodable.
+            assert_eq!(dec, vec![1.0, 2.0], "{fmt:?}");
+            // Erase-only (row not in support) leaves an encoded zero row.
+            m.apply_sparse_write(1, &SparseVec::new(), &[2.0, 4.0]);
+            m.decode_row_into(1, &mut dec);
+            assert_eq!(dec, vec![0.0, 0.0], "{fmt:?} erase-only");
+        }
+    }
+
+    #[test]
+    fn compact_heap_bytes_shrink() {
+        let (n, w) = (64, 16);
+        let f32b = MemoryStore::zeros(n, w).heap_bytes();
+        let bf = MemoryStore::zeros_fmt(n, w, RowFormat::Bf16).heap_bytes();
+        let i8b = MemoryStore::zeros_fmt(n, w, RowFormat::Int8).heap_bytes();
+        assert_eq!(f32b, n * w * 4);
+        // Compact stores carry a w-float decode scratch on top of storage.
+        assert_eq!(bf, n * w * 2 + w * 4);
+        assert_eq!(i8b, n * w + n * 4 + w * 4);
     }
 
     #[test]

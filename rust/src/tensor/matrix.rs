@@ -16,6 +16,19 @@
 //! NOTE: blocking reorders float additions relative to [`reference`], so
 //! results agree to ~1e-6 relative, not bitwise. The engine-parity fixture
 //! (rust/tests/engine_parity.rs) is blessed on top of the blocked kernels.
+//!
+//! The hot kernels (`dot`, `dist_sq`, `gemv`'s row blocks, and the 4×8
+//! micro-kernel) additionally dispatch once per process to explicit
+//! AVX2+FMA intrinsics when the host supports them
+//! ([`crate::tensor::simd`]; `SAM_FORCE_SCALAR=1` pins the scalar path).
+//! The scalar bodies below are the fallback *and* the ground truth the
+//! SIMD parity tests compare against; both paths share the same
+//! lane/remainder structure, so cross-path drift is bounded by FMA
+//! contraction (~1e-6 relative), and within one process all results are
+//! bit-deterministic because the path never changes mid-run.
+
+#[cfg(target_arch = "x86_64")]
+use crate::tensor::simd::{self, KernelPath};
 
 /// Dense row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]
@@ -102,12 +115,25 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
-/// Dot product.
+/// Dot product (dispatched: AVX2+FMA when the process-wide kernel path is
+/// vectorized, the scalar body below otherwise).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd::kernel_path() == KernelPath::Avx2Fma {
+        return unsafe { simd::avx2::dot(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// The scalar dot body: 8 independent accumulator lanes over
+/// bounds-check-free chunks (so LLVM emits wide FMA SIMD without
+/// reassociating a serial reduction), serial lane sum, serial remainder —
+/// the same reduction shape as the AVX2 path, which keeps cross-path drift
+/// down to FMA contraction.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 8 independent accumulator lanes over bounds-check-free chunks so
-    // LLVM emits wide FMA SIMD without reassociating a serial reduction.
     const LANES: usize = 8;
     let mut acc = [0.0f32; LANES];
     let (ca, ra) = a.split_at(a.len() - a.len() % LANES);
@@ -130,9 +156,23 @@ pub fn norm(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
 
-/// Squared Euclidean distance.
+/// Squared Euclidean distance (dispatched like [`dot`]). The scalar body
+/// is a strictly serial sum while the AVX2 path uses an 8-lane
+/// accumulator, so the two *paths* reorder additions — fine, because the
+/// path is fixed per process and d² values are only ever compared within
+/// one run (ANN rank keys, shard merges).
 #[inline]
 pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if simd::kernel_path() == KernelPath::Avx2Fma {
+        return unsafe { simd::avx2::dist_sq(a, b) };
+    }
+    dist_sq_scalar(a, b)
+}
+
+/// The scalar [`dist_sq`] body (serial accumulation).
+#[inline]
+pub fn dist_sq_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut s = 0.0;
     for (x, y) in a.iter().zip(b) {
@@ -178,10 +218,31 @@ std::thread_local! {
 
 /// The shared micro-kernel: `tile[r][c] += Σ_kk ap[kk·MR+r] · b(kk)[c]`
 /// where `b(kk)` is the NR-wide slice at `bdata[bpos + kk·bstride ..]`.
-/// Fixed-size array views keep the inner 4×8 fully unrolled with no bounds
-/// checks; the tile (32 floats) stays in registers across the k loop.
+/// Dispatched to the AVX2+FMA body when the process kernel path is
+/// vectorized; both bodies accumulate each tile element in serial k-order,
+/// so the `GEMM_ROW_TILE` batch-size-independence contract holds on either
+/// path (cross-path difference is FMA contraction only).
 #[inline(always)]
 fn microkernel_4x8(
+    kr: usize,
+    ap: &[f32],
+    bdata: &[f32],
+    bpos: usize,
+    bstride: usize,
+    tile: &mut [[f32; NR]; MR],
+) {
+    #[cfg(target_arch = "x86_64")]
+    if simd::kernel_path() == KernelPath::Avx2Fma {
+        return unsafe { simd::avx2::microkernel_4x8(kr, ap, bdata, bpos, bstride, tile) };
+    }
+    microkernel_4x8_scalar(kr, ap, bdata, bpos, bstride, tile)
+}
+
+/// Scalar micro-kernel body: fixed-size array views keep the inner 4×8
+/// fully unrolled with no bounds checks; the tile (32 floats) stays in
+/// registers across the k loop.
+#[inline(always)]
+fn microkernel_4x8_scalar(
     kr: usize,
     ap: &[f32],
     bdata: &[f32],
@@ -270,6 +331,18 @@ pub fn gemv(y: &mut [f32], a: &Matrix, x: &[f32]) {
     let mut i0 = 0;
     while i0 < m_main {
         let rows: [&[f32]; MR] = [a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3)];
+        // Vectorized path: each row runs exactly the AVX2 `dot` op
+        // sequence (x chunks shared across the 4 rows), so blocked-gemv
+        // bits == dot bits on this path too.
+        #[cfg(target_arch = "x86_64")]
+        if simd::kernel_path() == KernelPath::Avx2Fma {
+            let s = unsafe { simd::avx2::gemv_block4(rows, x) };
+            for r in 0..MR {
+                y[i0 + r] += s[r];
+            }
+            i0 += MR;
+            continue;
+        }
         let mut acc = [[0.0f32; NR]; MR];
         let mut kk = 0;
         while kk < nfull {
@@ -851,6 +924,74 @@ mod tests {
                 for (g, w) in y.iter().zip(&want) {
                     // gemv keeps dot's summation order: exact match.
                     assert_eq!(g.to_bits(), w.to_bits(), "gemv {m}x{n}");
+                }
+            }
+        }
+    }
+
+    // -- SIMD vs scalar parity ---------------------------------------------
+
+    /// AVX2 kernels vs the scalar bodies, across every 4/8/16 residue
+    /// class. Runs only where the CPU has AVX2+FMA (the dispatcher would
+    /// never pick the path elsewhere); CI's SAM_FORCE_SCALAR leg covers the
+    /// env-override route end-to-end. Tolerance is FMA contraction only —
+    /// both paths share lane structure and reduction order.
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn simd_kernels_match_scalar_bodies() {
+        use crate::tensor::simd::{avx2, host_has_avx2_fma};
+        if !host_has_avx2_fma() {
+            eprintln!("skipping SIMD parity: host lacks avx2+fma");
+            return;
+        }
+        let close = |tag: &str, got: f32, want: f32| {
+            let tol = 1e-5 * want.abs().max(1.0);
+            assert!((got - want).abs() <= tol, "{tag}: avx2 {got} vs scalar {want}");
+        };
+        let mut rng = Rng::new(106);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 24, 31, 32, 33, 64] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            close(&format!("dot n={n}"), unsafe { avx2::dot(&a, &b) }, dot_scalar(&a, &b));
+            close(
+                &format!("dist_sq n={n}"),
+                unsafe { avx2::dist_sq(&a, &b) },
+                dist_sq_scalar(&a, &b),
+            );
+        }
+        // gemv 4-row block: per-row bits must equal avx2::dot's.
+        for n in [1usize, 7, 8, 9, 16, 33] {
+            let rows_v: Vec<Vec<f32>> =
+                (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let rows: [&[f32]; 4] =
+                [&rows_v[0], &rows_v[1], &rows_v[2], &rows_v[3]];
+            let s = unsafe { avx2::gemv_block4(rows, &x) };
+            for r in 0..4 {
+                let d = unsafe { avx2::dot(rows[r], &x) };
+                assert_eq!(
+                    s[r].to_bits(),
+                    d.to_bits(),
+                    "gemv_block4 row {r} n={n} diverges from avx2 dot"
+                );
+            }
+        }
+        // Micro-kernel: every kr residue, non-zero starting tile.
+        for kr in [0usize, 1, 2, 3, 4, 5, 8, 13] {
+            let ap: Vec<f32> = (0..kr * MR).map(|_| rng.normal()).collect();
+            let bdata: Vec<f32> = (0..(kr.max(1)) * NR + 3).map(|_| rng.normal()).collect();
+            let mut t_simd = [[0.0f32; NR]; MR];
+            for row in t_simd.iter_mut() {
+                for v in row.iter_mut() {
+                    *v = rng.normal();
+                }
+            }
+            let mut t_scalar = t_simd;
+            unsafe { avx2::microkernel_4x8(kr, &ap, &bdata, 0, NR, &mut t_simd) };
+            microkernel_4x8_scalar(kr, &ap, &bdata, 0, NR, &mut t_scalar);
+            for r in 0..MR {
+                for c in 0..NR {
+                    close(&format!("micro kr={kr} [{r}][{c}]"), t_simd[r][c], t_scalar[r][c]);
                 }
             }
         }

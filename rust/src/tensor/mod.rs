@@ -3,4 +3,6 @@
 //! path draws its buffers from.
 pub mod csr;
 pub mod matrix;
+pub mod rowcodec;
+pub mod simd;
 pub mod workspace;

@@ -1,0 +1,518 @@
+//! Compact memory-row storage: f32 | bf16 | int8 (per-row-scaled) codecs
+//! behind one [`RowStore`], with decode fused into every read kernel.
+//!
+//! ## Contract
+//!
+//! * **f32 accumulation everywhere.** Whatever the storage format, every
+//!   kernel decodes lanes in-register and accumulates in f32 — compact rows
+//!   change memory traffic, never the accumulator type, and no kernel ever
+//!   materializes an f32 copy of a row to scan it.
+//! * **bf16** stores the high 16 bits of the f32 pattern, encoded with
+//!   round-to-nearest-even. `encode(decode(x))` is the identity (every bf16
+//!   value is exactly representable in f32), which is what makes the
+//!   journal/revert cycle bit-exact for bf16 rows.
+//! * **int8** stores one signed byte per value plus one f32 scale per row
+//!   (`scale = maxabs/127`, zero rows get scale 0): `decode = code·scale`.
+//!   Re-encoding a decoded row *with its saved scale* recovers the original
+//!   codes exactly (the decode error per value is ≪ half a quantization
+//!   step), so revert restores identical storage bits; see
+//!   [`RowStore::set_row_with_scale`].
+//! * **Training is f32-only.** Compact formats are serve/eval-only: the
+//!   backward paths borrow rows as `&[f32]` ([`RowStore::row`] panics on
+//!   compact formats) and the CLI validates `--row-format` up front.
+//!
+//! The AVX2 fused-decode kernels live in [`crate::tensor::simd::avx2`];
+//! this module holds the codec, the scalar fallbacks, and the per-call
+//! dispatch on [`crate::tensor::simd::kernel_path`].
+
+use crate::tensor::matrix::{axpy, dist_sq, dot};
+use crate::tensor::simd::{kernel_path, KernelPath};
+
+/// Storage format for memory rows (`--row-format f32|bf16|int8`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum RowFormat {
+    /// 4 bytes/value; the training format and the default everywhere.
+    #[default]
+    F32,
+    /// 2 bytes/value, ~2× scan bandwidth, ≤2⁻⁸ relative rounding error.
+    Bf16,
+    /// 1 byte/value + one f32 scale per row, ~4× scan bandwidth,
+    /// ≤ scale/2 absolute error per value.
+    Int8,
+}
+
+impl RowFormat {
+    /// Stable name recorded in BENCH_*.json payloads and `--row-format`.
+    pub fn name(self) -> &'static str {
+        match self {
+            RowFormat::F32 => "f32",
+            RowFormat::Bf16 => "bf16",
+            RowFormat::Int8 => "int8",
+        }
+    }
+
+    /// Whether the training path accepts this format (compact rows are
+    /// serve/eval-only: the backward pass borrows rows as `&[f32]`).
+    pub fn train_legal(self) -> bool {
+        self == RowFormat::F32
+    }
+}
+
+impl std::str::FromStr for RowFormat {
+    type Err = String;
+    fn from_str(s: &str) -> Result<RowFormat, String> {
+        match s {
+            "f32" => Ok(RowFormat::F32),
+            "bf16" => Ok(RowFormat::Bf16),
+            "int8" => Ok(RowFormat::Int8),
+            other => Err(format!("unknown row format '{other}' (expected f32|bf16|int8)")),
+        }
+    }
+}
+
+/// bf16 → f32: exact (bf16 is a prefix of the f32 bit pattern).
+#[inline]
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+/// f32 → bf16 with round-to-nearest-even (NaN payloads kept non-signaling).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Truncate but force a nonzero mantissa so the NaN survives.
+        return ((bits >> 16) as u16) | 1;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits + round) >> 16) as u16
+}
+
+/// Largest int8 code magnitude (the per-row scale maps maxabs onto it).
+pub const INT8_QMAX: f32 = 127.0;
+
+/// `n × w` memory rows stored in one of the [`RowFormat`]s. All read
+/// kernels decode on the fly; all mutation goes through whole-row encodes.
+#[derive(Clone, Debug)]
+pub struct RowStore {
+    n: usize,
+    w: usize,
+    fmt: RowFormat,
+    f32d: Vec<f32>,
+    bf16d: Vec<u16>,
+    i8d: Vec<i8>,
+    /// Per-row dequant scale (Int8 only; empty otherwise).
+    scales: Vec<f32>,
+}
+
+impl RowStore {
+    pub fn zeros(n: usize, w: usize, fmt: RowFormat) -> RowStore {
+        let (f32d, bf16d, i8d, scales) = match fmt {
+            RowFormat::F32 => (vec![0.0; n * w], Vec::new(), Vec::new(), Vec::new()),
+            RowFormat::Bf16 => (Vec::new(), vec![0u16; n * w], Vec::new(), Vec::new()),
+            RowFormat::Int8 => (Vec::new(), Vec::new(), vec![0i8; n * w], vec![0.0; n]),
+        };
+        RowStore { n, w, fmt, f32d, bf16d, i8d, scales }
+    }
+
+    /// Extend to at least `n_new` rows, zero-filling the tail (no-op when
+    /// already large enough). Lets growable consumers (the ANN linear
+    /// index) take ids past their initial capacity.
+    pub fn grow(&mut self, n_new: usize) {
+        if n_new <= self.n {
+            return;
+        }
+        match self.fmt {
+            RowFormat::F32 => self.f32d.resize(n_new * self.w, 0.0),
+            RowFormat::Bf16 => self.bf16d.resize(n_new * self.w, 0),
+            RowFormat::Int8 => {
+                self.i8d.resize(n_new * self.w, 0);
+                self.scales.resize(n_new, 0.0);
+            }
+        }
+        self.n = n_new;
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn w(&self) -> usize {
+        self.w
+    }
+
+    #[inline]
+    pub fn fmt(&self) -> RowFormat {
+        self.fmt
+    }
+
+    /// Borrow row `i` as f32 — the training-path accessor; compact formats
+    /// have no borrowable f32 row and panic (train is f32-only by CLI
+    /// validation, so hitting this is a wiring bug, not a user error).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(
+            self.fmt == RowFormat::F32,
+            "row(): {} rows have no borrowable f32 slice (train/backward is f32-only)",
+            self.fmt.name()
+        );
+        &self.f32d[i * self.w..(i + 1) * self.w]
+    }
+
+    /// Mutable f32 row (F32 format only, same contract as [`RowStore::row`]).
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert!(
+            self.fmt == RowFormat::F32,
+            "row_mut(): {} rows are encode-only (use set_row)",
+            self.fmt.name()
+        );
+        &mut self.f32d[i * self.w..(i + 1) * self.w]
+    }
+
+    /// Dequant scale of row `i` (Int8; other formats return 1.0).
+    #[inline]
+    pub fn row_scale(&self, i: usize) -> f32 {
+        match self.fmt {
+            RowFormat::Int8 => self.scales[i],
+            _ => 1.0,
+        }
+    }
+
+    /// Decode row `i` into `out` (length `w`). The only place a full f32
+    /// copy of a compact row is built — used for ANN re-inserts and
+    /// journaling, never for scans.
+    pub fn decode_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.w);
+        let lo = i * self.w;
+        match self.fmt {
+            RowFormat::F32 => out.copy_from_slice(&self.f32d[lo..lo + self.w]),
+            RowFormat::Bf16 => {
+                for (o, &u) in out.iter_mut().zip(&self.bf16d[lo..lo + self.w]) {
+                    *o = bf16_to_f32(u);
+                }
+            }
+            RowFormat::Int8 => {
+                let s = self.scales[i];
+                for (o, &q) in out.iter_mut().zip(&self.i8d[lo..lo + self.w]) {
+                    *o = q as f32 * s;
+                }
+            }
+        }
+    }
+
+    /// Encode `vals` into row `i` (quantize-on-write). Int8 recomputes the
+    /// row scale from the new content.
+    pub fn set_row(&mut self, i: usize, vals: &[f32]) {
+        debug_assert_eq!(vals.len(), self.w);
+        let lo = i * self.w;
+        match self.fmt {
+            RowFormat::F32 => self.f32d[lo..lo + self.w].copy_from_slice(vals),
+            RowFormat::Bf16 => {
+                for (u, &x) in self.bf16d[lo..lo + self.w].iter_mut().zip(vals) {
+                    *u = f32_to_bf16(x);
+                }
+            }
+            RowFormat::Int8 => {
+                let maxabs = vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let scale = if maxabs > 0.0 { maxabs / INT8_QMAX } else { 0.0 };
+                self.encode_i8_row(i, vals, scale);
+            }
+        }
+    }
+
+    /// Int8-only: encode `vals` against a caller-supplied scale — the
+    /// revert path, which must reproduce the journaled row's storage bits
+    /// (decoded values divided by their own scale round back to the
+    /// original codes exactly).
+    pub fn set_row_with_scale(&mut self, i: usize, vals: &[f32], scale: f32) {
+        assert!(self.fmt == RowFormat::Int8, "set_row_with_scale is Int8-only");
+        self.encode_i8_row(i, vals, scale);
+    }
+
+    fn encode_i8_row(&mut self, i: usize, vals: &[f32], scale: f32) {
+        let lo = i * self.w;
+        self.scales[i] = scale;
+        if scale == 0.0 {
+            self.i8d[lo..lo + self.w].iter_mut().for_each(|q| *q = 0);
+            return;
+        }
+        let inv = 1.0 / scale;
+        for (q, &x) in self.i8d[lo..lo + self.w].iter_mut().zip(vals) {
+            *q = (x * inv).round().clamp(-INT8_QMAX, INT8_QMAX) as i8;
+        }
+    }
+
+    /// Fused `(q·row, row·row)` — the content-addressing read (one pass
+    /// over the row regardless of format, f32 accumulation).
+    #[inline]
+    pub fn dot_normsq(&self, i: usize, q: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(q.len(), self.w);
+        let lo = i * self.w;
+        match self.fmt {
+            RowFormat::F32 => {
+                let r = &self.f32d[lo..lo + self.w];
+                (dot(q, r), dot(r, r))
+            }
+            RowFormat::Bf16 => {
+                let r = &self.bf16d[lo..lo + self.w];
+                #[cfg(target_arch = "x86_64")]
+                if kernel_path() == KernelPath::Avx2Fma {
+                    return unsafe { crate::tensor::simd::avx2::dot_normsq_bf16(q, r) };
+                }
+                let (mut sq, mut sn) = (0.0f32, 0.0f32);
+                for (&qq, &u) in q.iter().zip(r) {
+                    let x = bf16_to_f32(u);
+                    sq += qq * x;
+                    sn += x * x;
+                }
+                (sq, sn)
+            }
+            RowFormat::Int8 => {
+                let r = &self.i8d[lo..lo + self.w];
+                let s = self.scales[i];
+                #[cfg(target_arch = "x86_64")]
+                if kernel_path() == KernelPath::Avx2Fma {
+                    return unsafe { crate::tensor::simd::avx2::dot_normsq_i8(q, r, s) };
+                }
+                let (mut sq, mut sn) = (0.0f32, 0.0f32);
+                for (&qq, &c) in q.iter().zip(r) {
+                    let x = c as f32;
+                    sq += qq * x;
+                    sn += x * x;
+                }
+                (s * sq, s * s * sn)
+            }
+        }
+    }
+
+    /// Squared distance from `q` to row `i` — the linear-ANN scan kernel.
+    #[inline]
+    pub fn dist_sq_to(&self, i: usize, q: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), self.w);
+        let lo = i * self.w;
+        match self.fmt {
+            RowFormat::F32 => dist_sq(q, &self.f32d[lo..lo + self.w]),
+            RowFormat::Bf16 => {
+                let r = &self.bf16d[lo..lo + self.w];
+                #[cfg(target_arch = "x86_64")]
+                if kernel_path() == KernelPath::Avx2Fma {
+                    return unsafe { crate::tensor::simd::avx2::dist_sq_bf16(q, r) };
+                }
+                let mut s = 0.0f32;
+                for (&qq, &u) in q.iter().zip(r) {
+                    let d = qq - bf16_to_f32(u);
+                    s += d * d;
+                }
+                s
+            }
+            RowFormat::Int8 => {
+                let r = &self.i8d[lo..lo + self.w];
+                let sc = self.scales[i];
+                #[cfg(target_arch = "x86_64")]
+                if kernel_path() == KernelPath::Avx2Fma {
+                    return unsafe { crate::tensor::simd::avx2::dist_sq_i8(q, r, sc) };
+                }
+                let mut s = 0.0f32;
+                for (&qq, &c) in q.iter().zip(r) {
+                    let d = qq - c as f32 * sc;
+                    s += d * d;
+                }
+                s
+            }
+        }
+    }
+
+    /// `out += coeff · decode(row i)` — the sparse-read mixture kernel.
+    #[inline]
+    pub fn axpy_into(&self, i: usize, coeff: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.w);
+        let lo = i * self.w;
+        match self.fmt {
+            RowFormat::F32 => axpy(out, coeff, &self.f32d[lo..lo + self.w]),
+            RowFormat::Bf16 => {
+                let r = &self.bf16d[lo..lo + self.w];
+                #[cfg(target_arch = "x86_64")]
+                if kernel_path() == KernelPath::Avx2Fma {
+                    return unsafe { crate::tensor::simd::avx2::axpy_bf16(out, coeff, r) };
+                }
+                for (o, &u) in out.iter_mut().zip(r) {
+                    *o += coeff * bf16_to_f32(u);
+                }
+            }
+            RowFormat::Int8 => {
+                // Fold the row scale into the coefficient: one multiply per
+                // row instead of one per lane.
+                let c = coeff * self.scales[i];
+                let r = &self.i8d[lo..lo + self.w];
+                #[cfg(target_arch = "x86_64")]
+                if kernel_path() == KernelPath::Avx2Fma {
+                    return unsafe { crate::tensor::simd::avx2::axpy_i8(out, c, r) };
+                }
+                for (o, &q) in out.iter_mut().zip(r) {
+                    *o += c * q as f32;
+                }
+            }
+        }
+    }
+
+    /// Fill every row with the constant `v` (the dense baselines' reset).
+    /// Int8 encodes `v` at full code range (zero fills get the canonical
+    /// zero scale); the decoded value matches `v` to within one rounding.
+    pub fn fill(&mut self, v: f32) {
+        match self.fmt {
+            RowFormat::F32 => self.f32d.iter_mut().for_each(|x| *x = v),
+            RowFormat::Bf16 => {
+                let u = f32_to_bf16(v);
+                self.bf16d.iter_mut().for_each(|x| *x = u);
+            }
+            RowFormat::Int8 => {
+                let (scale, code) = if v == 0.0 {
+                    (0.0, 0)
+                } else {
+                    (v.abs() / INT8_QMAX, if v > 0.0 { 127 } else { -127 })
+                };
+                self.i8d.iter_mut().for_each(|q| *q = code);
+                self.scales.iter_mut().for_each(|s| *s = scale);
+            }
+        }
+    }
+
+    /// Exact heap bytes of the row storage (the Fig 1b accounting: bf16
+    /// halves it, int8 quarters it plus one f32 scale per row).
+    pub fn heap_bytes(&self) -> usize {
+        self.f32d.capacity() * 4
+            + self.bf16d.capacity() * 2
+            + self.i8d.capacity()
+            + self.scales.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pattern(w: usize, seed: f32) -> Vec<f32> {
+        (0..w).map(|j| ((j as f32 + seed) * 0.731).sin() * (1.0 + seed)).collect()
+    }
+
+    #[test]
+    fn bf16_decode_encode_is_identity() {
+        for u in [0u16, 1, 0x3F80, 0x8000, 0xC2F0, 0x7F7F] {
+            assert_eq!(f32_to_bf16(bf16_to_f32(u)), u);
+        }
+        // RNE: 1.0 + 2⁻⁹ is exactly halfway between bf16(1.0) and the next
+        // value up; it must round to the even mantissa (1.0).
+        assert_eq!(f32_to_bf16(1.0 + 0.001953125), 0x3F80);
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_relative_error_bound() {
+        for w in [1, 7, 8, 16, 33] {
+            let vals = pattern(w, 0.3);
+            let mut st = RowStore::zeros(2, w, RowFormat::Bf16);
+            st.set_row(1, &vals);
+            let mut dec = vec![0.0; w];
+            st.decode_into(1, &mut dec);
+            for (x, d) in vals.iter().zip(&dec) {
+                // bf16 has 8 mantissa bits; RNE error ≤ 2⁻⁸ relative.
+                assert!((x - d).abs() <= x.abs() * (1.0 / 256.0) + 1e-30, "{x} vs {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_error_bound_and_scale() {
+        let w = 24;
+        let vals = pattern(w, 1.7);
+        let maxabs = vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut st = RowStore::zeros(1, w, RowFormat::Int8);
+        st.set_row(0, &vals);
+        let scale = st.row_scale(0);
+        assert!((scale - maxabs / INT8_QMAX).abs() < 1e-12);
+        let mut dec = vec![0.0; w];
+        st.decode_into(0, &mut dec);
+        for (x, d) in vals.iter().zip(&dec) {
+            assert!((x - d).abs() <= scale * 0.5 + 1e-6, "{x} vs {d}");
+        }
+    }
+
+    #[test]
+    fn int8_zero_row_has_zero_scale() {
+        let mut st = RowStore::zeros(1, 8, RowFormat::Int8);
+        st.set_row(0, &[0.0; 8]);
+        assert_eq!(st.row_scale(0), 0.0);
+        let mut dec = vec![1.0; 8];
+        st.decode_into(0, &mut dec);
+        assert!(dec.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn int8_reencode_with_saved_scale_is_bit_exact() {
+        // The journal/revert contract: decode a row, re-encode it with the
+        // saved scale, and the storage bits must be identical.
+        let w = 19;
+        let vals = pattern(w, 0.9);
+        let mut st = RowStore::zeros(1, w, RowFormat::Int8);
+        st.set_row(0, &vals);
+        let codes_before = st.i8d.clone();
+        let scale = st.row_scale(0);
+        let mut dec = vec![0.0; w];
+        st.decode_into(0, &mut dec);
+        st.set_row(0, &pattern(w, 4.2)); // clobber
+        st.set_row_with_scale(0, &dec, scale);
+        assert_eq!(st.i8d, codes_before);
+        assert_eq!(st.row_scale(0), scale);
+    }
+
+    #[test]
+    fn fused_kernels_match_decode_then_scalar() {
+        // Whatever path dispatch picked, the fused kernels must agree with
+        // decode-then-f32-math to ~1e-5 relative on every residue class.
+        for fmt in [RowFormat::F32, RowFormat::Bf16, RowFormat::Int8] {
+            for w in [1, 4, 7, 8, 9, 16, 17, 64] {
+                let vals = pattern(w, 0.5);
+                let q = pattern(w, 2.1);
+                let mut st = RowStore::zeros(3, w, fmt);
+                st.set_row(2, &vals);
+                let mut dec = vec![0.0; w];
+                st.decode_into(2, &mut dec);
+
+                let (dq, nsq) = st.dot_normsq(2, &q);
+                let (edq, ensq) = (
+                    q.iter().zip(&dec).map(|(a, b)| a * b).sum::<f32>(),
+                    dec.iter().map(|x| x * x).sum::<f32>(),
+                );
+                let tol = |e: f32| e.abs() * 2e-5 + 2e-5;
+                assert!((dq - edq).abs() <= tol(edq), "{fmt:?} w={w} dot {dq} vs {edq}");
+                assert!((nsq - ensq).abs() <= tol(ensq), "{fmt:?} w={w} normsq {nsq} vs {ensq}");
+
+                let d2 = st.dist_sq_to(2, &q);
+                let ed2 = q.iter().zip(&dec).map(|(a, b)| (a - b) * (a - b)).sum::<f32>();
+                assert!((d2 - ed2).abs() <= tol(ed2), "{fmt:?} w={w} d2 {d2} vs {ed2}");
+
+                let mut out = pattern(w, 3.3);
+                let mut expect = out.clone();
+                st.axpy_into(2, 0.37, &mut out);
+                for (e, d) in expect.iter_mut().zip(&dec) {
+                    *e += 0.37 * d;
+                }
+                for (o, e) in out.iter().zip(&expect) {
+                    assert!((o - e).abs() <= tol(*e), "{fmt:?} w={w} axpy {o} vs {e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heap_bytes_is_exact_per_format() {
+        let (n, w) = (10, 16);
+        assert_eq!(RowStore::zeros(n, w, RowFormat::F32).heap_bytes(), n * w * 4);
+        assert_eq!(RowStore::zeros(n, w, RowFormat::Bf16).heap_bytes(), n * w * 2);
+        assert_eq!(RowStore::zeros(n, w, RowFormat::Int8).heap_bytes(), n * w + n * 4);
+    }
+}

@@ -1,0 +1,420 @@
+//! Runtime-dispatched SIMD micro-kernels (AVX2+FMA) for the crate's hot
+//! float loops, plus the dispatch-once kernel-path selector.
+//!
+//! ## Dispatch contract
+//!
+//! The kernel path is chosen **once per process** ([`kernel_path`], backed
+//! by a `OnceLock`): `SAM_FORCE_SCALAR=1` forces the scalar path, otherwise
+//! x86-64 hosts with AVX2+FMA take the vectorized path and everything else
+//! (including non-x86 targets) falls back to the scalar kernels that live
+//! on in `tensor::matrix`. One process therefore never mixes paths — every
+//! dot/gemv/gemm/scan in a run sums floats in the same order, which is what
+//! keeps per-run determinism (fixtures, shard parity, rollback
+//! bit-exactness) intact even though the *two paths disagree in the low
+//! bits* (SIMD reorders float additions; this is exactly DESIGN.md's
+//! re-bless case, and `rust/tests/engine_parity.rs` records the blessed
+//! path in its fixture header so a fixture is only enforced on the path
+//! that produced it).
+//!
+//! ## Summation-order contract (per kernel)
+//!
+//! * [`avx2::dot`] — one 8-lane FMA accumulator over 8-element chunks,
+//!   lanes reduced serially in lane order 0..8, then a serial scalar
+//!   remainder. This is the *same shape* as the scalar `matrix::dot`
+//!   (8 independent lanes, serial lane sum, serial remainder); the only
+//!   cross-path difference is FMA contraction (no intermediate rounding of
+//!   the products).
+//! * [`avx2::gemv_block4`] — each of the 4 rows runs exactly the
+//!   [`avx2::dot`] op sequence (the x chunk is loaded once and shared),
+//!   so blocked-gemv bits == dot bits on this path, mirroring the scalar
+//!   guarantee `gemv_parity_odd_shapes` pins.
+//! * [`avx2::microkernel_4x8`] — every C-tile element is a serial k-order
+//!   FMA sum, same k order as the scalar micro-kernel, preserving the
+//!   `GEMM_ROW_TILE` batch-size-independence contract within the path.
+//! * [`avx2::dist_sq`] — 8-lane sub+FMA accumulator (the scalar `dist_sq`
+//!   is a strictly serial sum, so the two paths reorder; ANN rank keys are
+//!   only compared within one process, where the path is fixed).
+//!
+//! ## Compact-row kernels
+//!
+//! The bf16/int8 variants fuse the row decode into the scan loop — bf16
+//! widens `u16 → f32` by a 16-bit shift in-register, int8 sign-extends and
+//! converts with the per-row scale applied either per lane (`dist_sq_i8`,
+//! where the subtraction needs decoded values) or hoisted out of the loop
+//! entirely (`dot_normsq_i8` returns `scale·Σ q·r` / `scale²·Σ r·r`).
+//! **Accumulation is always f32** regardless of the storage format; no
+//! materialized f32 copy of a row is ever built.
+
+use std::sync::OnceLock;
+
+/// Which kernel implementation this process dispatches to (chosen once).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelPath {
+    /// x86-64 AVX2+FMA intrinsics ([`avx2`]).
+    Avx2Fma,
+    /// The portable scalar kernels in `tensor::matrix` / `tensor::rowcodec`.
+    Scalar,
+}
+
+impl KernelPath {
+    /// Short stable name recorded in BENCH_*.json payloads and the parity
+    /// fixture header ("avx2" | "scalar").
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Avx2Fma => "avx2",
+            KernelPath::Scalar => "scalar",
+        }
+    }
+}
+
+static PATH: OnceLock<KernelPath> = OnceLock::new();
+
+/// The dispatch decision as a pure function of its inputs, separated from
+/// the process-global `OnceLock` so tests can exercise both branches in one
+/// process (the lock fires once; CI's forced-scalar leg covers the env
+/// override end-to-end).
+#[inline]
+pub fn detect_path(force_scalar: bool, has_avx2_fma: bool) -> KernelPath {
+    if force_scalar || !has_avx2_fma {
+        KernelPath::Scalar
+    } else {
+        KernelPath::Avx2Fma
+    }
+}
+
+/// Runtime CPU probe: true iff this host can execute the AVX2+FMA kernels.
+#[cfg(target_arch = "x86_64")]
+pub fn host_has_avx2_fma() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Non-x86 targets never take the AVX2 path (NEON is covered by the scalar
+/// kernels' auto-vectorization for now).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn host_has_avx2_fma() -> bool {
+    false
+}
+
+/// The process-wide kernel path. First call reads `SAM_FORCE_SCALAR` and
+/// probes the CPU; every later call returns the cached decision.
+#[inline]
+pub fn kernel_path() -> KernelPath {
+    *PATH.get_or_init(|| {
+        let force = std::env::var("SAM_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false);
+        detect_path(force, host_has_avx2_fma())
+    })
+}
+
+/// `kernel_path().name()` — the string benches and fixtures record.
+pub fn kernel_path_name() -> &'static str {
+    kernel_path().name()
+}
+
+/// AVX2+FMA kernel bodies. Every function is `unsafe` with
+/// `#[target_feature(enable = "avx2,fma")]`; callers must have checked
+/// [`kernel_path`] == [`KernelPath::Avx2Fma`] (which implies the CPU probe
+/// passed) before calling.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Serial lane-order reduction of one 8-lane accumulator — the same
+    /// order as the scalar kernels' `acc.iter().sum::<f32>()`.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(acc: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        lanes.iter().sum::<f32>()
+    }
+
+    /// Widen 8 bf16 values (stored as the high 16 bits of an f32) to f32.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn load_bf16_8(p: *const u16) -> __m256 {
+        let half = _mm_loadu_si128(p as *const __m128i);
+        let wide = _mm256_cvtepu16_epi32(half);
+        _mm256_castsi256_ps(_mm256_slli_epi32(wide, 16))
+    }
+
+    /// Sign-extend 8 int8 codes and convert to f32 (scale not applied).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn load_i8_8(p: *const i8) -> __m256 {
+        let bytes = _mm_loadl_epi64(p as *const __m128i);
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes))
+    }
+
+    /// Dot product; see the module docs for the summation-order contract.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let main = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        for j in main..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// Squared Euclidean distance (8-lane sub+FMA accumulator).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let main = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let av = _mm256_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let d = _mm256_sub_ps(av, bv);
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        for j in main..n {
+            let d = a[j] - b[j];
+            s += d * d;
+        }
+        s
+    }
+
+    /// Four gemv rows against one shared x: each row runs exactly the
+    /// [`dot`] op sequence (x chunks loaded once), returning the four full
+    /// row sums including the scalar remainder.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemv_block4(rows: [&[f32]; 4], x: &[f32]) -> [f32; 4] {
+        let n = x.len();
+        let main = n - n % 8;
+        let mut acc = [_mm256_setzero_ps(); 4];
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            for r in 0..4 {
+                let av = _mm256_loadu_ps(rows[r].as_ptr().add(i));
+                acc[r] = _mm256_fmadd_ps(av, xv, acc[r]);
+            }
+            i += 8;
+        }
+        let mut out = [0.0f32; 4];
+        for r in 0..4 {
+            let mut s = hsum(acc[r]);
+            for k in main..n {
+                s += rows[r][k] * x[k];
+            }
+            out[r] = s;
+        }
+        out
+    }
+
+    /// The 4×8 GEMM micro-kernel: `tile[r][c] += Σ_kk ap[kk·4+r]·b(kk)[c]`
+    /// with `b(kk) = bdata[bpos + kk·bstride ..][..8]`. Serial k-order per
+    /// tile element, matching the scalar micro-kernel.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn microkernel_4x8(
+        kr: usize,
+        ap: &[f32],
+        bdata: &[f32],
+        bpos: usize,
+        bstride: usize,
+        tile: &mut [[f32; 8]; 4],
+    ) {
+        let mut c0 = _mm256_loadu_ps(tile[0].as_ptr());
+        let mut c1 = _mm256_loadu_ps(tile[1].as_ptr());
+        let mut c2 = _mm256_loadu_ps(tile[2].as_ptr());
+        let mut c3 = _mm256_loadu_ps(tile[3].as_ptr());
+        let mut pos = bpos;
+        for kk in 0..kr {
+            debug_assert!(pos + 8 <= bdata.len() && kk * 4 + 4 <= ap.len());
+            let b8 = _mm256_loadu_ps(bdata.as_ptr().add(pos));
+            let a = ap.as_ptr().add(kk * 4);
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), b8, c0);
+            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), b8, c1);
+            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), b8, c2);
+            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), b8, c3);
+            pos += bstride;
+        }
+        _mm256_storeu_ps(tile[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(tile[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(tile[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(tile[3].as_mut_ptr(), c3);
+    }
+
+    // -- compact-row (fused decode) kernels ---------------------------------
+
+    /// Fused `(q·row, row·row)` over a bf16 row — one pass, two FMA
+    /// accumulators, decode in-register, f32 accumulation.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_normsq_bf16(q: &[f32], row: &[u16]) -> (f32, f32) {
+        debug_assert_eq!(q.len(), row.len());
+        let n = q.len();
+        let main = n - n % 8;
+        let mut accq = _mm256_setzero_ps();
+        let mut accn = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let rv = load_bf16_8(row.as_ptr().add(i));
+            let qv = _mm256_loadu_ps(q.as_ptr().add(i));
+            accq = _mm256_fmadd_ps(qv, rv, accq);
+            accn = _mm256_fmadd_ps(rv, rv, accn);
+            i += 8;
+        }
+        let mut sq = hsum(accq);
+        let mut sn = hsum(accn);
+        for j in main..n {
+            let r = f32::from_bits((row[j] as u32) << 16);
+            sq += q[j] * r;
+            sn += r * r;
+        }
+        (sq, sn)
+    }
+
+    /// Squared distance from `q` to a bf16 row, decode fused into the loop.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dist_sq_bf16(q: &[f32], row: &[u16]) -> f32 {
+        debug_assert_eq!(q.len(), row.len());
+        let n = q.len();
+        let main = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let rv = load_bf16_8(row.as_ptr().add(i));
+            let qv = _mm256_loadu_ps(q.as_ptr().add(i));
+            let d = _mm256_sub_ps(qv, rv);
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        for j in main..n {
+            let d = q[j] - f32::from_bits((row[j] as u32) << 16);
+            s += d * d;
+        }
+        s
+    }
+
+    /// `out += coeff · decode(row)` over a bf16 row.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_bf16(out: &mut [f32], coeff: f32, row: &[u16]) {
+        debug_assert_eq!(out.len(), row.len());
+        let n = out.len();
+        let main = n - n % 8;
+        let cv = _mm256_set1_ps(coeff);
+        let mut i = 0;
+        while i < main {
+            let rv = load_bf16_8(row.as_ptr().add(i));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(cv, rv, ov));
+            i += 8;
+        }
+        for j in main..n {
+            out[j] += coeff * f32::from_bits((row[j] as u32) << 16);
+        }
+    }
+
+    /// Fused `(q·row, row·row)` over an int8 row: accumulates against the
+    /// raw codes and applies `scale` / `scale²` once at the end.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_normsq_i8(q: &[f32], row: &[i8], scale: f32) -> (f32, f32) {
+        debug_assert_eq!(q.len(), row.len());
+        let n = q.len();
+        let main = n - n % 8;
+        let mut accq = _mm256_setzero_ps();
+        let mut accn = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let rv = load_i8_8(row.as_ptr().add(i));
+            let qv = _mm256_loadu_ps(q.as_ptr().add(i));
+            accq = _mm256_fmadd_ps(qv, rv, accq);
+            accn = _mm256_fmadd_ps(rv, rv, accn);
+            i += 8;
+        }
+        let mut sq = hsum(accq);
+        let mut sn = hsum(accn);
+        for j in main..n {
+            let r = row[j] as f32;
+            sq += q[j] * r;
+            sn += r * r;
+        }
+        (scale * sq, scale * scale * sn)
+    }
+
+    /// Squared distance from `q` to an int8 row (scale applied per lane —
+    /// the subtraction needs decoded values).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dist_sq_i8(q: &[f32], row: &[i8], scale: f32) -> f32 {
+        debug_assert_eq!(q.len(), row.len());
+        let n = q.len();
+        let main = n - n % 8;
+        let sv = _mm256_set1_ps(scale);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let rv = _mm256_mul_ps(load_i8_8(row.as_ptr().add(i)), sv);
+            let qv = _mm256_loadu_ps(q.as_ptr().add(i));
+            let d = _mm256_sub_ps(qv, rv);
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        for j in main..n {
+            let d = q[j] - row[j] as f32 * scale;
+            s += d * d;
+        }
+        s
+    }
+
+    /// `out += (coeff·scale) · codes` over an int8 row — the caller folds
+    /// the row scale into the coefficient.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_i8(out: &mut [f32], coeff_times_scale: f32, row: &[i8]) {
+        debug_assert_eq!(out.len(), row.len());
+        let n = out.len();
+        let main = n - n % 8;
+        let cv = _mm256_set1_ps(coeff_times_scale);
+        let mut i = 0;
+        while i < main {
+            let rv = load_i8_8(row.as_ptr().add(i));
+            let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(cv, rv, ov));
+            i += 8;
+        }
+        for j in main..n {
+            out[j] += coeff_times_scale * row[j] as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_path_truth_table() {
+        assert_eq!(detect_path(false, true), KernelPath::Avx2Fma);
+        assert_eq!(detect_path(true, true), KernelPath::Scalar);
+        assert_eq!(detect_path(false, false), KernelPath::Scalar);
+        assert_eq!(detect_path(true, false), KernelPath::Scalar);
+    }
+
+    #[test]
+    fn kernel_path_is_stable_and_named() {
+        let p = kernel_path();
+        assert_eq!(p, kernel_path(), "dispatch must be chosen once");
+        assert!(matches!(kernel_path_name(), "avx2" | "scalar"));
+        // If the env override is set (CI's forced-scalar leg), the cached
+        // decision must honor it.
+        if std::env::var("SAM_FORCE_SCALAR").as_deref() == Ok("1") {
+            assert_eq!(p, KernelPath::Scalar);
+        }
+    }
+}

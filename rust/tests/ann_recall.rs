@@ -229,6 +229,28 @@ fn hnsw_recall_at_16_vs_exact() {
     assert!(r >= 0.95, "hnsw recall@{k} at N={n} = {r}");
 }
 
+/// Row-compaction recall gate: bf16-stored rows quantize the unit vectors
+/// the linear scan ranks, so recall@16 against the f32 scan may degrade by
+/// at most 0.01 at the paper's W=64 word size. Full N=100k only in release
+/// builds (same tier-1 rationale as `hnsw_recall_at_16_vs_exact`); a
+/// 2048-row leg keeps the property exercised in debug.
+#[test]
+fn bf16_rows_recall_at_16_degrades_at_most_1pct() {
+    use sam::tensor::rowcodec::RowFormat;
+    let (dim, k) = (64usize, 16usize);
+    let n = if cfg!(debug_assertions) { 2048 } else { 100_000 };
+    let pts = random_points(n, dim, 81);
+    let mut exact = LinearIndex::new(n, dim);
+    let mut compact = LinearIndex::with_format(n, dim, RowFormat::Bf16);
+    for (i, p) in pts.iter().enumerate() {
+        exact.insert(i, p);
+        compact.insert(i, p);
+    }
+    let queries = near_queries(&pts, 64, 0.1, 82);
+    let r = recall(&mut compact, &mut exact, &queries, k);
+    assert!(r >= 0.99, "bf16 rows recall@{k} at N={n} = {r} (must stay within 0.01 of f32)");
+}
+
 /// Exact cosine top-k over the engine's rows by brute force (ground truth
 /// for the recall comparison; O(N) per query).
 fn exact_topk(e: &sam::memory::sharded::ShardedMemoryEngine, q: &[f32], k: usize) -> Vec<usize> {

@@ -150,6 +150,52 @@ fn sam_infer_steps_allocate_nothing_after_warmup() {
 }
 
 #[test]
+fn sam_infer_steps_with_compact_rows_allocate_nothing_after_warmup() {
+    // Compact-row twin of the serving guarantee: with bf16 storage, the
+    // decode-fused read path, the quantize-on-write path and the ANN sync
+    // (which stages decoded rows in a persistent scratch) must all stay
+    // allocation-free in steady state — whatever kernel dispatch is active.
+    use sam::cores::sam::SamCore;
+    use sam::tensor::rowcodec::RowFormat;
+
+    let c = CoreConfig { row_format: RowFormat::Bf16, ..cfg(5, 4) };
+    let mut rng = Rng::new(7);
+    let core = SamCore::new(&c, &mut rng);
+    let mut session = core.infer_session(None);
+    let t_len = 8;
+    let mut xrng = Rng::new(1234);
+    let xs: Vec<Vec<f32>> = (0..t_len)
+        .map(|_| (0..5).map(|_| if xrng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let mut y: Vec<f32> = Vec::new();
+    let mut first_bits: Vec<Vec<u32>> = Vec::new();
+    for ep in 0..=WARMUP_EPISODES {
+        session.reset();
+        let mut allocs = 0usize;
+        let mut bits: Vec<Vec<u32>> = Vec::new();
+        for x in &xs {
+            let before = thread_alloc_count();
+            core.infer_step(&mut session, x, &mut y);
+            allocs += thread_alloc_count() - before;
+            assert_eq!(session.tape_bytes(), 0, "compact infer step grew a tape");
+            bits.push(y.iter().map(|v| v.to_bits()).collect());
+        }
+        if ep == 0 {
+            first_bits = bits;
+        } else {
+            assert_eq!(first_bits, bits, "compact session recycling changed outputs in ep {ep}");
+        }
+        if ep == WARMUP_EPISODES {
+            assert_eq!(
+                allocs, 0,
+                "steady-state bf16-row serving episode performed {allocs} allocations \
+                 across {t_len} infer_step calls"
+            );
+        }
+    }
+}
+
+#[test]
 fn sam_sharded_steps_allocate_nothing_after_warmup() {
     // The sharded tentpole's steady-state guarantee at S=4 (or CI's
     // SAM_TEST_SHARDS): the global write split, the per-shard journals and
