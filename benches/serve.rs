@@ -125,6 +125,60 @@ fn main() {
         mgr.session_count()
     );
 
+    // ---- durability: spill / rehydrate latency ---------------------------
+    // Demote one warmed session to disk and load it back, round-robin over
+    // a handful of iterations — the cost a served client pays for the
+    // transparent rehydrate-on-next-step path.
+    let spill_dir = std::env::temp_dir().join(format!("sam-bench-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    std::fs::create_dir_all(&spill_dir).unwrap();
+    let durable = SessionManager::new(
+        {
+            let mut rng = Rng::new(21);
+            build_infer_model(CoreKind::Sam, &cfg, &mut rng, None)
+        },
+        SessionConfig {
+            idle_expiry: std::time::Duration::from_millis(0),
+            spill_dir: Some(spill_dir.clone()),
+            ..SessionConfig::default()
+        },
+    );
+    let sid = durable.open_seeded(Some(9));
+    for _ in 0..8 {
+        let x: Vec<f32> = (0..cfg.x_dim).map(|_| xrng.normal()).collect();
+        durable.step(sid, &x, &mut y).unwrap();
+    }
+    let spill_iters = if smoke { 4 } else { 16 };
+    let (mut spill_s, mut rehydrate_s) = (0.0, 0.0);
+    for _ in 0..spill_iters {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let t = Timer::start();
+        assert_eq!(durable.expire_idle(), 1, "bench session failed to spill");
+        spill_s += t.elapsed_s();
+        let x: Vec<f32> = (0..cfg.x_dim).map(|_| xrng.normal()).collect();
+        let t = Timer::start();
+        durable.step(sid, &x, &mut y).unwrap(); // rehydrates + one step
+        rehydrate_s += t.elapsed_s();
+    }
+    let spill_bytes = std::fs::metadata(sam::serving::spill::spill_path(&spill_dir, sid))
+        .map(|m| m.len())
+        .unwrap_or_else(|_| {
+            // The file was consumed by the last rehydrate; spill once more
+            // just to measure its size.
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            durable.expire_idle();
+            std::fs::metadata(sam::serving::spill::spill_path(&spill_dir, sid))
+                .map(|m| m.len())
+                .unwrap_or(0)
+        });
+    let spill_us = spill_s / spill_iters as f64 * 1e6;
+    let rehydrate_us = rehydrate_s / spill_iters as f64 * 1e6;
+    println!(
+        "spill/rehydrate (N={mem_words}): spill {spill_us:.1} µs  rehydrate+step {rehydrate_us:.1} µs  file {}",
+        fmt_bytes(spill_bytes as usize)
+    );
+    let _ = std::fs::remove_dir_all(&spill_dir);
+
     save_bench_root(
         "serve",
         Json::obj(vec![
@@ -136,6 +190,15 @@ fn main() {
             ("p99_us", Json::num(p99)),
             ("params_bytes", Json::num(params_bytes as f64)),
             ("levels", Json::Arr(level_rows)),
+            (
+                "spill",
+                Json::obj(vec![
+                    ("iters", Json::num(spill_iters as f64)),
+                    ("spill_us", Json::num(spill_us)),
+                    ("rehydrate_step_us", Json::num(rehydrate_us)),
+                    ("file_bytes", Json::num(spill_bytes as f64)),
+                ]),
+            ),
         ]),
     );
 }

@@ -189,12 +189,22 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<(Trainer, TrainLog)> {
 // ---------------------------------------------------------------------------
 
 /// Save core parameters to a simple binary checkpoint with a JSON header.
-pub fn save_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
+/// The version-2 header records the core kind and the shape knobs that
+/// determine the parameter layout, so a load into a differently-shaped (or
+/// different-kind) core is rejected instead of silently misassigning
+/// weights.
+pub fn save_checkpoint(core: &mut dyn Core, cfg: &CoreConfig, path: &Path) -> Result<()> {
     let values = core.save_values();
     let header = Json::obj(vec![
         ("name", Json::str(core.name())),
         ("params", Json::num(values.len() as f64)),
-        ("version", Json::num(1.0)),
+        ("version", Json::num(2.0)),
+        ("x_dim", Json::num(cfg.x_dim as f64)),
+        ("y_dim", Json::num(cfg.y_dim as f64)),
+        ("hidden", Json::num(cfg.hidden as f64)),
+        ("heads", Json::num(cfg.heads as f64)),
+        ("word", Json::num(cfg.word as f64)),
+        ("mem_words", Json::num(cfg.mem_words as f64)),
     ])
     .encode();
     let mut bytes = Vec::with_capacity(8 + header.len() + values.len() * 4);
@@ -207,16 +217,19 @@ pub fn save_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Read a checkpoint produced by [`save_checkpoint`] back into flat f32
-/// values (`HasParams::load_values` layout). The serving runtime uses this
-/// to load trained weights into an `InferModel` at build time
-/// (`serving::build_infer_model`).
-pub fn read_checkpoint(path: &Path) -> Result<Vec<f32>> {
+/// Parse a checkpoint into (header, values), validating the body against
+/// the header's param count and rejecting non-finite values — a NaN/inf
+/// weight would poison every session sharing the Arc'd params, and serving
+/// only guards its *inputs*.
+fn parse_checkpoint(path: &Path) -> Result<(Json, Vec<f32>)> {
     let bytes = std::fs::read(path).with_context(|| format!("read checkpoint {path:?}"))?;
     if bytes.len() < 8 {
         return Err(anyhow!("truncated checkpoint"));
     }
     let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+    if bytes.len() < 8 + hlen {
+        return Err(anyhow!("truncated checkpoint header"));
+    }
     let header = std::str::from_utf8(&bytes[8..8 + hlen]).context("bad header")?;
     let meta = Json::parse(header).map_err(|e| anyhow!("header json: {e}"))?;
     let expect = meta
@@ -228,15 +241,81 @@ pub fn read_checkpoint(path: &Path) -> Result<Vec<f32>> {
     if n != expect as usize {
         return Err(anyhow!("checkpoint has {n} params, header says {expect}"));
     }
-    Ok(body
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    let mut values = Vec::with_capacity(n);
+    for (i, c) in body.chunks_exact(4).enumerate() {
+        let v = f32::from_le_bytes(c.try_into().unwrap());
+        if !v.is_finite() {
+            return Err(anyhow!(
+                "checkpoint param {i} is not finite ({v}); refusing to load a poisoned model"
+            ));
+        }
+        values.push(v);
+    }
+    Ok((meta, values))
 }
 
-/// Load a checkpoint produced by [`save_checkpoint`] into `core`.
-pub fn load_checkpoint(core: &mut dyn Core, path: &Path) -> Result<()> {
-    let values = read_checkpoint(path)?;
+/// Validate the checkpoint header against the target core's kind and shape.
+/// Legacy version-1 headers carry no shape fields, so only the kind (and
+/// the param count, checked by the caller) can be verified for those.
+fn validate_checkpoint_header(meta: &Json, name: &str, cfg: &CoreConfig) -> Result<()> {
+    let ckpt_name = meta
+        .get("name")
+        .and_then(|j| j.as_str())
+        .ok_or_else(|| anyhow!("header missing name"))?;
+    if ckpt_name != name {
+        return Err(anyhow!(
+            "checkpoint is for core {ckpt_name:?} but the target core is {name:?}"
+        ));
+    }
+    for (key, want) in [
+        ("x_dim", cfg.x_dim),
+        ("y_dim", cfg.y_dim),
+        ("hidden", cfg.hidden),
+        ("heads", cfg.heads),
+        ("word", cfg.word),
+        ("mem_words", cfg.mem_words),
+    ] {
+        // Absent in legacy v1 headers: skip, the param-count check remains.
+        if let Some(got) = meta.get(key).and_then(|j| j.as_f64()) {
+            if got as usize != want {
+                return Err(anyhow!(
+                    "checkpoint {key} is {} but the target core has {key} {want}",
+                    got as usize
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a checkpoint produced by [`save_checkpoint`] back into flat f32
+/// values (`HasParams::load_values` layout). The serving runtime uses this
+/// to load trained weights into an `InferModel` at build time
+/// (`serving::build_infer_model`).
+pub fn read_checkpoint(path: &Path) -> Result<Vec<f32>> {
+    Ok(parse_checkpoint(path)?.1)
+}
+
+/// [`read_checkpoint`] plus header validation against the core kind `name`
+/// and shape `cfg` the values are destined for — the serve path's guard.
+pub fn read_checkpoint_for(path: &Path, name: &str, cfg: &CoreConfig) -> Result<Vec<f32>> {
+    let (meta, values) = parse_checkpoint(path)?;
+    validate_checkpoint_header(&meta, name, cfg)?;
+    Ok(values)
+}
+
+/// Load a checkpoint produced by [`save_checkpoint`] into `core`, rejecting
+/// a checkpoint whose recorded kind or shape does not match.
+pub fn load_checkpoint(core: &mut dyn Core, cfg: &CoreConfig, path: &Path) -> Result<()> {
+    let (meta, values) = parse_checkpoint(path)?;
+    validate_checkpoint_header(&meta, core.name(), cfg)?;
+    if values.len() != core.param_count() {
+        return Err(anyhow!(
+            "checkpoint has {} params but the target core has {}",
+            values.len(),
+            core.param_count()
+        ));
+    }
     core.load_values(&values);
     Ok(())
 }
@@ -336,29 +415,89 @@ mod tests {
         assert!(errs >= 0.0);
     }
 
-    #[test]
-    fn checkpoint_roundtrip() {
+    fn test_core_cfg(seed: u64) -> CoreConfig {
         let task = CopyTask::new(4);
-        let core_cfg = CoreConfig {
+        CoreConfig {
             x_dim: task.x_dim(),
             y_dim: task.y_dim(),
             hidden: 8,
             heads: 1,
             word: 6,
             mem_words: 8,
-            seed: 3,
+            seed,
             ..CoreConfig::default()
-        };
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let core_cfg = test_core_cfg(3);
         let mut rng = Rng::new(3);
         let mut core = build_core(CoreKind::Sam, &core_cfg, &mut rng);
         let orig = core.save_values();
         let tmp = std::env::temp_dir().join("sam_ckpt_test.bin");
-        save_checkpoint(core.as_mut(), &tmp).unwrap();
+        save_checkpoint(core.as_mut(), &core_cfg, &tmp).unwrap();
         // perturb then reload
         let zeros = vec![0.0f32; orig.len()];
         core.load_values(&zeros);
-        load_checkpoint(core.as_mut(), &tmp).unwrap();
+        load_checkpoint(core.as_mut(), &core_cfg, &tmp).unwrap();
         assert_eq!(core.save_values(), orig);
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn checkpoint_kind_and_shape_mismatches_rejected() {
+        // A checkpoint from one core kind/shape must not silently load into
+        // another — wrong-kind and wrong-shape loads both fail with a clear
+        // error even when param counts happen to be irrelevant.
+        let core_cfg = test_core_cfg(5);
+        let mut rng = Rng::new(5);
+        let mut sam = build_core(CoreKind::Sam, &core_cfg, &mut rng);
+        let tmp = std::env::temp_dir().join("sam_ckpt_mismatch_test.bin");
+        save_checkpoint(sam.as_mut(), &core_cfg, &tmp).unwrap();
+
+        // Wrong core kind.
+        let mut rng = Rng::new(5);
+        let mut dnc = build_core(CoreKind::Dnc, &core_cfg, &mut rng);
+        let err = load_checkpoint(dnc.as_mut(), &core_cfg, &tmp).unwrap_err();
+        assert!(err.to_string().contains("core"), "unhelpful error: {err}");
+
+        // Wrong memory shape, same kind.
+        let mut wide = core_cfg.clone();
+        wide.mem_words = 16;
+        let mut rng = Rng::new(5);
+        let mut sam_wide = build_core(CoreKind::Sam, &wide, &mut rng);
+        let err = load_checkpoint(sam_wide.as_mut(), &wide, &tmp).unwrap_err();
+        assert!(err.to_string().contains("mem_words"), "unhelpful error: {err}");
+
+        // The serve-path reader applies the same validation.
+        assert!(read_checkpoint_for(&tmp, "sam", &core_cfg).is_ok());
+        assert!(read_checkpoint_for(&tmp, "dnc", &core_cfg).is_err());
+        assert!(read_checkpoint_for(&tmp, "sam", &wide).is_err());
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn checkpoint_with_non_finite_params_rejected() {
+        // A NaN weight would poison every session sharing the params; the
+        // reader must refuse it with the offending index.
+        let core_cfg = test_core_cfg(6);
+        let mut rng = Rng::new(6);
+        let mut core = build_core(CoreKind::Sam, &core_cfg, &mut rng);
+        let tmp = std::env::temp_dir().join("sam_ckpt_nan_test.bin");
+        save_checkpoint(core.as_mut(), &core_cfg, &tmp).unwrap();
+
+        // Corrupt one param in the body to NaN (header length prefix +
+        // header text precede the flat f32 body).
+        let mut bytes = std::fs::read(&tmp).unwrap();
+        let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        let body = 8 + hlen;
+        bytes[body..body + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&tmp, &bytes).unwrap();
+
+        let err = read_checkpoint(&tmp).unwrap_err();
+        assert!(err.to_string().contains("not finite"), "unhelpful error: {err}");
+        assert!(load_checkpoint(core.as_mut(), &core_cfg, &tmp).is_err());
         let _ = std::fs::remove_file(tmp);
     }
 

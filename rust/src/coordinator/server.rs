@@ -31,12 +31,23 @@
 //!   → {"inputs": [[f32…], …]}               stateless episode (open-step-close)
 //!   → {"ping": true}  /  {"stats": true}    health / accounting
 //!   ← {"session": id} / {"session": id, "output": [f32…]} / {"closed": b}
-//!     {"outputs": [[f32…], …]} / {"pong": true} / {"error": "…"}
+//!     {"outputs": [[f32…], …]} / {"pong": true}
+//!     {"error": "…", "retryable": false}
+//!     {"error": "overloaded", "retryable": true, "retry_after_ms": n}
 //!
 //! Sessions opened over a connection are closed when that connection goes
 //! away (EOF or error), never when it merely idles.
+//!
+//! Graceful degradation: every error reply carries a `retryable` flag
+//! (true only for transient conditions — currently overload shedding, when
+//! the byte budget is exhausted AND spilling to disk is failing, so
+//! admitting a session could only destroy another one). Response writes
+//! retry transient socket errors with capped exponential backoff before
+//! the connection is declared dead. With `--spill-dir`, the session table
+//! demotes/rehydrates through checksummed spill files (serving/spill.rs)
+//! and a cold restart reloads every surviving session before accepting.
 
-use crate::serving::{BatchScheduler, InferModel, SessionConfig, SessionManager};
+use crate::serving::{BatchScheduler, InferModel, SessionConfig, SessionError, SessionManager};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
@@ -139,6 +150,15 @@ pub fn serve(
 ) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
+    // Crash-safe restart: before accepting any client, reload every
+    // surviving spilled session so ids handed out before the crash keep
+    // working. Corrupt files are detected (CRC), dropped and counted —
+    // never loaded.
+    if let Some(dir) = cfg.session.spill_dir.as_ref() {
+        let dir = dir.display().to_string();
+        let (loaded, corrupt) = mgr.rehydrate_all();
+        eprintln!("sam-serve spill dir {dir}: rehydrated {loaded} sessions, dropped {corrupt} corrupt");
+    }
     eprintln!(
         "sam-serve listening on {addr} ({} workers, tick {:?}, budget {} bytes)",
         cfg.workers, cfg.tick, cfg.session.byte_budget
@@ -262,18 +282,63 @@ fn serve_one_line(conn: &mut Conn, ctx: &ServerCtx) -> ConnState {
     }
     let response = match handle_request(ctx, conn.line.trim(), &mut conn.sessions) {
         Ok(j) => j,
-        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+        // Request-level failures are reported in-band, and they are final:
+        // replaying the same malformed/rejected request cannot succeed.
+        // (Transient conditions — overload — come back as Ok replies with
+        // retryable=true from handle_request.)
+        Err(e) => Json::obj(vec![
+            ("error", Json::str(format!("{e:#}"))),
+            ("retryable", Json::Bool(false)),
+        ]),
     };
     conn.line.clear();
-    let ok = conn
-        .writer
-        .write_all(response.encode().as_bytes())
-        .and_then(|_| conn.writer.write_all(b"\n"))
-        .and_then(|_| conn.writer.flush());
-    match (ok, eof) {
+    let mut bytes = response.encode().into_bytes();
+    bytes.push(b'\n');
+    match (write_response(&mut conn.writer, &bytes), eof) {
         (Ok(()), false) => ConnState::Park,
         _ => ConnState::Closed,
     }
+}
+
+/// Write one response, retrying transient socket errors (timeout /
+/// would-block) with capped exponential backoff before giving up on the
+/// connection. Progress is tracked byte-by-byte so a retry never resends
+/// bytes the kernel already accepted — a timed-out `write_all` would lose
+/// track of the partial write and corrupt the stream on retry.
+fn write_response(writer: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
+    const MAX_RETRIES: u32 = 3;
+    const BACKOFF_CAP: Duration = Duration::from_millis(100);
+    let mut written = 0usize;
+    let mut retries = 0u32;
+    let mut backoff = Duration::from_millis(10);
+    while written < bytes.len() {
+        match writer.write(&bytes[written..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "socket closed mid-response",
+                ));
+            }
+            Ok(n) => {
+                written += n;
+                retries = 0; // progress resets the retry budget
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if retries < MAX_RETRIES
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                retries += 1;
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(BACKOFF_CAP);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    writer.flush()
 }
 
 /// Parse a JSON array into finite f32s. Non-finite values (or f64s that
@@ -300,17 +365,37 @@ pub fn handle_request(ctx: &ServerCtx, line: &str, conn_sessions: &mut Vec<u64>)
         return Ok(Json::obj(vec![("pong", Json::Bool(true))]));
     }
     if req.get("stats").is_some() {
+        let (spilled, rehydrated, corrupt) = ctx.mgr.spill_stats();
         return Ok(Json::obj(vec![
             ("sessions", Json::num(ctx.mgr.session_count() as f64)),
             ("state_bytes", Json::num(ctx.mgr.state_heap_bytes() as f64)),
             ("params_bytes", Json::num(ctx.mgr.params_heap_bytes() as f64)),
             ("params", Json::num(ctx.mgr.model().params_len() as f64)),
+            ("spilled", Json::num(spilled as f64)),
+            ("rehydrated", Json::num(rehydrated as f64)),
+            ("corrupt_dropped", Json::num(corrupt as f64)),
         ]));
     }
     if let Some(open) = req.get("open") {
-        let id = match open.get("seed").and_then(|s| s.as_f64()) {
-            Some(seed) => ctx.mgr.open_seeded(Some(seed as u64)),
-            None => ctx.mgr.open(),
+        let opened = match open.get("seed").and_then(|s| s.as_f64()) {
+            Some(seed) => ctx.mgr.open_checked(Some(seed as u64)),
+            None => ctx.mgr.open_auto_checked(),
+        };
+        let id = match opened {
+            Ok(id) => id,
+            Err(SessionError::Overloaded { retry_after_ms }) => {
+                // Shed rather than destroy: the budget is exhausted and
+                // spilling is failing, so admitting this session would evict
+                // someone else's state with no copy left anywhere. Tell the
+                // client to come back instead. Structured reply (not Err):
+                // this is a protocol-level answer, not a malformed request.
+                return Ok(Json::obj(vec![
+                    ("error", Json::str("overloaded")),
+                    ("retryable", Json::Bool(true)),
+                    ("retry_after_ms", Json::num(retry_after_ms as f64)),
+                ]));
+            }
+            Err(e) => return Err(anyhow!("{e}")),
         };
         conn_sessions.push(id);
         return Ok(Json::obj(vec![("session", Json::num(id as f64))]));
@@ -533,6 +618,60 @@ mod tests {
         assert!(handle_request(&ctx, r#"{"inputs": [[1,0]]}"#, &mut owned).is_err());
         assert!(handle_request(&ctx, r#"{}"#, &mut owned).is_err());
         ctx.sched.stop();
+    }
+
+    #[test]
+    fn overload_is_shed_with_retryable_reply() {
+        // Byte budget exhausted + spill dir that cannot be written (it is a
+        // file, not a directory) → the open that would need to demote fails
+        // its spill, and the NEXT open is shed with a structured retryable
+        // reply instead of destroying a resident session.
+        let blocker = std::env::temp_dir()
+            .join(format!("sam-server-spill-blocker-{}", std::process::id()));
+        std::fs::write(&blocker, b"not a directory").unwrap();
+
+        let cfg = CoreConfig {
+            x_dim: 4,
+            y_dim: 3,
+            hidden: 8,
+            heads: 1,
+            word: 6,
+            mem_words: 8,
+            seed: 9,
+            ..CoreConfig::default()
+        };
+        let mut rng = Rng::new(9);
+        let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+        let session = SessionConfig {
+            byte_budget: 1, // any session exceeds it
+            spill_dir: Some(blocker.clone()),
+            ..SessionConfig::default()
+        };
+        let mgr = Arc::new(SessionManager::new(model, session));
+        let sched = Arc::new(BatchScheduler::start(
+            mgr.clone(),
+            Duration::from_micros(100),
+            16,
+        ));
+        let ctx = ServerCtx { mgr: mgr.clone(), sched };
+
+        let mut owned = Vec::new();
+        // First open fits trivially (a lone session is never its own
+        // victim); the second triggers a demotion attempt that fails.
+        handle_request(&ctx, r#"{"open": {"seed": 1}}"#, &mut owned).unwrap();
+        handle_request(&ctx, r#"{"open": {"seed": 2}}"#, &mut owned).unwrap();
+        assert_eq!(mgr.session_count(), 2, "failed spill must keep the victim resident");
+        assert!(mgr.spill_failures() > 0);
+
+        let r = handle_request(&ctx, r#"{"open": {"seed": 3}}"#, &mut owned).unwrap();
+        assert_eq!(r.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(r.get("retryable").unwrap().as_bool(), Some(true));
+        assert!(r.get("retry_after_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(mgr.session_count(), 2, "shed open must not destroy state");
+        assert_eq!(owned.len(), 2, "shed open must not record ownership");
+
+        ctx.sched.stop();
+        let _ = std::fs::remove_file(&blocker);
     }
 
     #[test]

@@ -52,6 +52,19 @@ impl CoreKind {
     pub fn all() -> [CoreKind; 6] {
         [CoreKind::Lstm, CoreKind::Ntm, CoreKind::Dam, CoreKind::Sam, CoreKind::Dnc, CoreKind::Sdnc]
     }
+
+    /// The `Core::name()` string of cores of this kind (checkpoint headers
+    /// record it, and loads match against it).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CoreKind::Lstm => "lstm",
+            CoreKind::Ntm => "ntm",
+            CoreKind::Dam => "dam",
+            CoreKind::Sam => "sam",
+            CoreKind::Dnc => "dnc",
+            CoreKind::Sdnc => "sdnc",
+        }
+    }
 }
 
 /// Hyper-parameters shared by every core (paper Supp C / E defaults).

@@ -25,6 +25,7 @@ use super::addressing::{ContentRead, WriteGate};
 use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
 use crate::memory::engine::TopKRead;
 use crate::memory::sharded::ShardedMemoryEngine;
+use crate::serving::spill::SessionSnapshot;
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::SparseVec;
 use crate::tensor::matrix::axpy;
@@ -307,6 +308,93 @@ impl SamSession {
     /// The session's memory engine (read-only) — for accounting tests.
     pub fn engine(&self) -> &ShardedMemoryEngine {
         &self.engine
+    }
+
+    /// Capture everything an infer step mutates into a plain-vector
+    /// snapshot (the spill payload): decoded memory rows + Int8 scales,
+    /// LRA ring order, LSTM h/c and the recurrent read state. Scratch
+    /// buffers (`ws`, `queries`, `betas`, `topk_tmp`) are rebuilt by the
+    /// next step and deliberately excluded.
+    pub fn export_state(&mut self) -> SessionSnapshot {
+        SessionSnapshot {
+            n: self.engine.n(),
+            word: self.engine.word_size(),
+            row_format: self.engine.row_format(),
+            mem_seed: self.engine.mem_seed(),
+            rows: self.engine.snapshot(),
+            scales: self.engine.row_scales(),
+            ring_order: self.engine.ring_order(),
+            h: self.ctrl.lstm.h.clone(),
+            c: self.ctrl.lstm.c.clone(),
+            w_read_prev: self.w_read_prev.iter().map(|w| w.iter().collect()).collect(),
+            r_prev: self.r_prev.clone(),
+        }
+    }
+
+    /// Restore a spilled snapshot into this freshly opened session,
+    /// overwriting rows (re-syncing each ANN slot, mirroring `reset`'s
+    /// reinit discipline), ring order, h/c and read state. The session
+    /// must have been opened from the same model with the same open seed —
+    /// shape, row format and `mem_seed` are all checked. Bit-identical
+    /// continuation for ann=linear; approximate indexes rebuild
+    /// deterministically from the same rows but may break score ties
+    /// differently than the live index they replace (DESIGN.md).
+    pub fn import_state(&mut self, snap: &SessionSnapshot) -> anyhow::Result<()> {
+        use anyhow::bail;
+        if snap.n != self.engine.n() || snap.word != self.engine.word_size() {
+            bail!(
+                "snapshot shape {}x{} != session memory {}x{}",
+                snap.n,
+                snap.word,
+                self.engine.n(),
+                self.engine.word_size()
+            );
+        }
+        if snap.row_format != self.engine.row_format() {
+            bail!(
+                "snapshot row format {} != session row format {}",
+                snap.row_format.name(),
+                self.engine.row_format().name()
+            );
+        }
+        if snap.mem_seed != self.engine.mem_seed() {
+            bail!(
+                "snapshot mem_seed {:#x} != session mem_seed {:#x} (different open seed?)",
+                snap.mem_seed,
+                self.engine.mem_seed()
+            );
+        }
+        if snap.heads() != self.w_read_prev.len() || snap.r_prev.len() != self.r_prev.len() {
+            bail!(
+                "snapshot heads {} != session heads {}",
+                snap.heads(),
+                self.w_read_prev.len()
+            );
+        }
+        if snap.h.len() != self.ctrl.lstm.h.len() || snap.c.len() != self.ctrl.lstm.c.len() {
+            bail!(
+                "snapshot hidden width {} != session hidden width {}",
+                snap.h.len(),
+                self.ctrl.lstm.h.len()
+            );
+        }
+        if snap.r_prev.iter().any(|r| r.len() != snap.word) {
+            bail!("snapshot r_prev width != word");
+        }
+        self.engine.import_state(&snap.rows, &snap.scales, &snap.ring_order);
+        self.ctrl.lstm.h.copy_from_slice(&snap.h);
+        self.ctrl.lstm.c.copy_from_slice(&snap.c);
+        for (dst, src) in self.w_read_prev.iter_mut().zip(&snap.w_read_prev) {
+            dst.clear();
+            for &(i, v) in src {
+                dst.push(i, v);
+            }
+        }
+        for (dst, src) in self.r_prev.iter_mut().zip(&snap.r_prev) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        Ok(())
     }
 
     /// Heap bytes of this session's state; the memory store dominates.

@@ -13,8 +13,8 @@
 
 use anyhow::{anyhow, Result};
 use sam::coordinator::{
-    build_task, build_trainer, load_checkpoint, read_checkpoint, run_experiment, save_checkpoint,
-    server, ExperimentConfig,
+    build_task, build_trainer, load_checkpoint, read_checkpoint_for, resolved_core_cfg,
+    run_experiment, save_checkpoint, server, ExperimentConfig,
 };
 use sam::serving::{build_infer_model, SessionConfig};
 use sam::util::args::Args;
@@ -64,6 +64,11 @@ Serve flags (shared-weight multi-session runtime):
   --session-budget-mb M episodic-state byte budget, LRU-evicted (1024)
   --idle-expiry-s S     drop sessions idle this long (300)
   --read-timeout-ms T   park idle connections after this (25)
+  --spill-dir PATH      durable sessions: evicted/idle sessions demote to
+                        checksummed spill files here instead of being
+                        destroyed, rehydrate transparently on their next
+                        step, and survive a server restart. Unset (default)
+                        keeps destroy-eviction
 ";
 
 fn main() -> Result<()> {
@@ -104,7 +109,9 @@ fn train(args: &Args) -> Result<()> {
         log.final_level
     );
     if let Some(path) = args.get("checkpoint") {
-        save_checkpoint(trainer.core.as_mut(), &PathBuf::from(path))?;
+        let task = build_task(&cfg.task)?;
+        let core_cfg = resolved_core_cfg(&cfg, task.as_ref());
+        save_checkpoint(trainer.core.as_mut(), &core_cfg, &PathBuf::from(path))?;
         println!("checkpoint written to {path}");
     }
     if let Some(path) = args.get("log-json") {
@@ -119,7 +126,8 @@ fn eval(args: &Args) -> Result<()> {
     let task = build_task(&cfg.task)?;
     let mut trainer = build_trainer(&cfg, task.as_ref());
     if let Some(path) = args.get("checkpoint") {
-        load_checkpoint(trainer.core.as_mut(), &PathBuf::from(path))?;
+        let core_cfg = resolved_core_cfg(&cfg, task.as_ref());
+        load_checkpoint(trainer.core.as_mut(), &core_cfg, &PathBuf::from(path))?;
     }
     let level = args.usize_or("level", task.base_level());
     let episodes = args.usize_or("episodes", 20);
@@ -137,15 +145,18 @@ fn serve_cmd(args: &Args) -> Result<()> {
     // One copy of trained weights, shared read-only across the worker pool
     // and every session (the parameters/state split — see DESIGN.md
     // "Serving runtime").
+    let core_cfg = resolved_core_cfg(&cfg, task.as_ref());
     let params = match args.get("checkpoint") {
         Some(path) => {
-            let p = read_checkpoint(&PathBuf::from(&path))?;
+            // Validated against the served core's kind and shape — serving
+            // a checkpoint from the wrong model must fail here, not produce
+            // garbage outputs per-request.
+            let p = read_checkpoint_for(&PathBuf::from(&path), cfg.core.as_str(), &core_cfg)?;
             println!("loaded checkpoint {path} ({} params)", p.len());
             Some(p)
         }
         None => None,
     };
-    let core_cfg = sam::coordinator::resolved_core_cfg(&cfg, task.as_ref());
     let mut rng = Rng::new(core_cfg.seed);
     let model = build_infer_model(cfg.core, &core_cfg, &mut rng, params.as_deref());
     let serve_cfg = server::ServeConfig {
@@ -157,8 +168,13 @@ fn serve_cmd(args: &Args) -> Result<()> {
             byte_budget: args.usize_or("session-budget-mb", 1024) * (1 << 20),
             idle_expiry: Duration::from_secs(args.u64_or("idle-expiry-s", 300)),
             seed: cfg.core_cfg.seed ^ 0x5E55,
+            spill_dir: args.get("spill-dir").map(PathBuf::from),
         },
     };
+    if let Some(dir) = serve_cfg.session.spill_dir.as_deref() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("cannot create spill dir {}: {e}", dir.display()))?;
+    }
     let addr = args.str_or("addr", "127.0.0.1:7878");
     let stop = Arc::new(AtomicBool::new(false));
     server::serve_model(model, &addr, &serve_cfg, stop).map_err(|e| anyhow!("server: {e:#}"))
@@ -177,6 +193,17 @@ fn info(args: &Args) -> Result<()> {
         cfg.core_cfg.ann, cfg.core_cfg.shards, cfg.core_cfg.row_format.name()
     );
     println!("kernels: {} dispatch", sam::tensor::simd::kernel_path_name());
+    // Durable-session spill directory, if one is configured.
+    if let Some(dir) = args.get("spill-dir").map(PathBuf::from) {
+        let report = sam::serving::spill::scan_dir(&dir);
+        println!(
+            "spill dir {}: {} session files, {} bytes, {} corrupt",
+            dir.display(),
+            report.files(),
+            report.bytes,
+            report.corrupt
+        );
+    }
     // PJRT artifacts, if built.
     let dir = sam::runtime::artifacts_dir();
     match sam::runtime::Runtime::cpu() {

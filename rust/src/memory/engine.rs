@@ -496,6 +496,39 @@ impl SparseMemoryEngine {
         self.dmem.clear();
     }
 
+    // -- spill/rehydrate state hooks ----------------------------------------
+
+    /// Overwrite local row `local` with decoded values and re-sync the ANN
+    /// slot, mirroring [`reinit`](SparseMemoryEngine::reinit)'s set-then-sync
+    /// order. For Int8 stores the journaled per-row `scale` reproduces the
+    /// original storage codes bit-exactly; other formats quantize-on-write
+    /// (f32 copies, bf16 re-encode is exact because the values being set
+    /// were themselves bf16-decoded).
+    pub(crate) fn import_row(&mut self, local: usize, vals: &[f32], scale: f32) {
+        if self.mem.fmt() == RowFormat::Int8 {
+            self.mem.set_row_with_scale(local, vals, scale);
+        } else {
+            self.mem.set_row(local, vals);
+        }
+        self.ann_sync_row(local);
+    }
+
+    /// Dequant scale of local row `local` (1.0 outside Int8).
+    pub(crate) fn row_scale(&self, local: usize) -> f32 {
+        self.mem.row_scale(local)
+    }
+
+    /// LRA ring order, least- to most-recently used (sparse engines only).
+    pub(crate) fn ring_order(&self) -> Vec<usize> {
+        self.ring.as_ref().expect("ring_order needs a sparse engine").order()
+    }
+
+    /// Restore a captured LRA ring order (sparse engines only).
+    pub(crate) fn set_ring_order(&mut self, order: &[usize]) {
+        self.ring.as_mut().expect("set_ring_order needs a sparse engine").set_order(order);
+        self.dmem.clear();
+    }
+
     /// Batched content reads for all heads (SAM's read path): one
     /// `query_many_into` index traversal, then per-head softmax weights,
     /// sparse read and ring touches, in head order. Results append to

@@ -696,6 +696,47 @@ impl ShardedMemoryEngine {
         self.shards[0].row_format()
     }
 
+    // -- spill/rehydrate state export + import -------------------------------
+
+    /// Per-row dequant scales **in global row order** (all 1.0 outside
+    /// Int8). Spilled next to [`snapshot`](ShardedMemoryEngine::snapshot)
+    /// so Int8 rehydration re-encodes the exact storage codes.
+    pub fn row_scales(&self) -> Vec<f32> {
+        (0..self.n).map(|i| self.shards[i % self.s].row_scale(i / self.s)).collect()
+    }
+
+    /// LRA ring order (global row ids, least- to most-recently used).
+    /// S=1 reads the shard's own ring; S>1 the single global ring.
+    pub fn ring_order(&self) -> Vec<usize> {
+        if self.s == 1 {
+            return self.shards[0].ring_order();
+        }
+        self.ring.as_ref().expect("sparse sharded engine has a global ring").order()
+    }
+
+    /// Restore spilled session state: overwrite every row from the decoded
+    /// global-order snapshot (re-syncing each shard's ANN slot, mirroring
+    /// [`reinit`](ShardedMemoryEngine::reinit)'s set-then-sync order),
+    /// re-encode Int8 rows against their journaled `scales`, and restore
+    /// the LRA ring order. Leaves no tape; serving path only.
+    pub fn import_state(&mut self, rows: &[f32], scales: &[f32], ring_order: &[usize]) {
+        assert_eq!(rows.len(), self.n * self.word, "imported rows shape mismatch");
+        assert_eq!(scales.len(), self.n, "imported scales length mismatch");
+        for i in 0..self.n {
+            let vals = &rows[i * self.word..(i + 1) * self.word];
+            self.shards[i % self.s].import_row(i / self.s, vals, scales[i]);
+        }
+        if self.s == 1 {
+            self.shards[0].set_ring_order(ring_order);
+        } else {
+            self.ring
+                .as_mut()
+                .expect("sparse sharded engine has a global ring")
+                .set_order(ring_order);
+        }
+        self.dmem.clear();
+    }
+
     // -- accounting ----------------------------------------------------------
 
     /// Bytes of per-episode BPTT state (the Fig 1b quantity).

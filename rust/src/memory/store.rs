@@ -171,6 +171,22 @@ impl MemoryStore {
         self.rows.set_row(i, vals);
     }
 
+    /// Dequant scale of row `i` (Int8; other formats return 1.0). Spilled
+    /// alongside decoded rows so rehydration can re-encode Int8 storage
+    /// bits exactly (see [`MemoryStore::set_row_with_scale`]).
+    #[inline]
+    pub fn row_scale(&self, i: usize) -> f32 {
+        self.rows.row_scale(i)
+    }
+
+    /// Int8-only: encode `vals` against a caller-supplied scale, so decoded
+    /// values round back to the original storage codes bit-exactly (the
+    /// journal-revert and spill-rehydration path).
+    #[inline]
+    pub fn set_row_with_scale(&mut self, i: usize, vals: &[f32], scale: f32) {
+        self.rows.set_row_with_scale(i, vals, scale);
+    }
+
     /// Squared distance from `q` to row `i`, decode fused in.
     #[inline]
     pub fn row_dist_sq(&self, i: usize, q: &[f32]) -> f32 {

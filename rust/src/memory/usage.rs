@@ -89,6 +89,25 @@ impl LraRing {
         self.head = 0;
     }
 
+    /// Restore a previously captured [`order`](Self::order): `order[0]`
+    /// becomes the LRA head, `order[n-1]` the most recent. `order` must be
+    /// a permutation of 0..n. O(N) — spill-rehydration boundary only.
+    pub fn set_order(&mut self, order: &[usize]) {
+        assert_eq!(order.len(), self.n, "ring order length mismatch");
+        let mut seen = vec![false; self.n];
+        for &i in order {
+            assert!(i < self.n && !seen[i], "ring order is not a permutation of 0..n");
+            seen[i] = true;
+        }
+        for j in 0..self.n {
+            let cur = order[j];
+            let nxt = order[(j + 1) % self.n];
+            self.next[cur] = nxt;
+            self.prev[nxt] = cur;
+        }
+        self.head = order[0];
+    }
+
     /// Access order from least- to most-recently used (O(N); test/debug).
     pub fn order(&self) -> Vec<usize> {
         let mut out = Vec::with_capacity(self.n);
@@ -221,6 +240,35 @@ mod tests {
         assert_eq!(ring.lra(), 3);
         ring.reset();
         assert_eq!(ring.order(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn set_order_round_trips_arbitrary_states() {
+        for seed in 0..5u64 {
+            let mut rng = Rng::new(seed);
+            let n = 12;
+            let mut ring = LraRing::new(n);
+            for _ in 0..200 {
+                match rng.below(2) {
+                    0 => ring.touch(rng.below(n)),
+                    _ => {
+                        ring.pop_lra();
+                    }
+                }
+            }
+            let order = ring.order();
+            let mut fresh = LraRing::new(n);
+            fresh.set_order(&order);
+            assert_eq!(fresh.order(), order, "seed {seed}");
+            assert_eq!(fresh.lra(), ring.lra());
+            // The restored ring must behave identically going forward.
+            for _ in 0..50 {
+                let i = rng.below(n);
+                ring.touch(i);
+                fresh.touch(i);
+                assert_eq!(ring.pop_lra(), fresh.pop_lra());
+            }
+        }
     }
 
     #[test]

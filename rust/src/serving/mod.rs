@@ -33,9 +33,11 @@
 
 pub mod scheduler;
 pub mod session;
+pub mod spill;
 
 pub use scheduler::BatchScheduler;
 pub use session::{SessionConfig, SessionError, SessionManager};
+pub use spill::{SessionSnapshot, SpillDirReport, SpillMeta};
 
 use crate::cores::dam::{DamCore, DamSession};
 use crate::cores::dnc::{DncCore, DncSession};

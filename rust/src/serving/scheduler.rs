@@ -139,6 +139,11 @@ impl BatchScheduler {
                 replies.push(p.reply);
             }
             drop(inbox);
+            // Fault-injection point for the crash-recovery tests: a worker
+            // panic here exercises the catch_unwind + drain path above.
+            if crate::util::fault::fire("sched.tick").is_some() {
+                panic!("injected scheduler panic at sched.tick");
+            }
             mgr.step_many(&reqs, &mut outs);
             for (reply, out) in replies.drain(..).zip(outs.drain(..)) {
                 // Receiver may have given up; ignore.

@@ -7,13 +7,28 @@
 //! any session; the batched [`SessionManager::step_many`] is the
 //! scheduler's tick entry and coalesces the controller math of every
 //! distinct session in the tick into one GEMM per projection.
+//!
+//! **Durability** (`spill_dir` set): going over the byte budget *demotes*
+//! the LRU session to a checksummed spill file instead of destroying it,
+//! and a later step/reset of a spilled id transparently rehydrates it —
+//! from the caller's perspective the session never went away. Idle expiry
+//! demotes too. A cold restart calls
+//! [`SessionManager::rehydrate_all`] to reload every surviving spill
+//! file. When the disk is failing, sessions are **never** destroyed:
+//! the victim stays resident, the failure is counted, and new opens are
+//! shed with [`SessionError::Overloaded`] until a spill succeeds again.
 
+use super::spill::{self, SpillMeta};
 use super::{InferModel, Session};
 use crate::cores::CtrlBatch;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Suggested client backoff when opens are shed under overload.
+pub const OVERLOAD_RETRY_MS: u64 = 1000;
 
 /// Session-table policy knobs.
 #[derive(Debug, Clone)]
@@ -21,11 +36,15 @@ pub struct SessionConfig {
     /// Total per-session state bytes to keep resident; the least-recently
     /// used sessions are evicted once the table exceeds this.
     pub byte_budget: usize,
-    /// Sessions untouched for this long are dropped by
-    /// [`SessionManager::expire_idle`].
+    /// Sessions untouched for this long are dropped (or, with `spill_dir`
+    /// set, demoted to disk) by [`SessionManager::expire_idle`].
     pub idle_expiry: Duration,
     /// Seed stream for per-session memory init.
     pub seed: u64,
+    /// Demote-to-disk directory. `None` (the default) keeps the historical
+    /// destroy-evict behavior; `Some(dir)` turns eviction and idle expiry
+    /// into spills and makes spilled sessions step-transparent.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for SessionConfig {
@@ -34,6 +53,7 @@ impl Default for SessionConfig {
             byte_budget: 1 << 30, // 1 GiB of episodic state
             idle_expiry: Duration::from_secs(300),
             seed: 0x5E55_1045,
+            spill_dir: None,
         }
     }
 }
@@ -48,6 +68,9 @@ struct Entry {
     /// Cached `state.heap_bytes()`, refreshed whenever the session is
     /// touched, so the byte-budget check never walks every session.
     bytes: usize,
+    /// The seed this session was opened with, recorded in its spill meta
+    /// so rehydration re-opens a session with identical engine seeds.
+    open_seed: Option<u64>,
 }
 
 struct Inner {
@@ -63,6 +86,17 @@ struct Inner {
     evicted: u64,
     /// Sessions dropped by idle expiry since construction (stats).
     expired: u64,
+    /// Sessions demoted to disk (stats).
+    spilled: u64,
+    /// Sessions transparently reloaded from disk (stats).
+    rehydrated: u64,
+    /// Spill files dropped because CRC/shape validation failed (stats).
+    corrupt_dropped: u64,
+    /// Spill write attempts that failed (disk full, I/O error, ...).
+    spill_failures: u64,
+    /// The most recent spill attempt failed: shed new opens instead of
+    /// destroying sessions until a spill succeeds again.
+    spill_failing: bool,
 }
 
 impl Inner {
@@ -81,7 +115,14 @@ impl Inner {
     /// Evict least-recently-touched sessions until the cached total fits
     /// the budget. Sessions touched at the CURRENT clock tick are exempt —
     /// a step (or batched tick) must never evict a session it just served.
-    fn enforce_budget(&mut self, budget: usize) {
+    ///
+    /// With `spill` set, eviction is demotion: the victim is written to a
+    /// checksummed spill file and only removed from the table once the
+    /// atomic rename succeeded. A failed spill keeps the victim resident
+    /// (over budget beats destroyed state), flags `spill_failing` so new
+    /// opens shed, and stops — retried on the next budget check. Session
+    /// types without spill support fall back to destroy-eviction.
+    fn enforce_budget(&mut self, budget: usize, spill: Option<(&Path, &str)>) {
         while self.state_bytes > budget && self.sessions.len() > 1 {
             let clock = self.clock;
             let victim = self
@@ -90,12 +131,40 @@ impl Inner {
                 .filter(|(_, e)| e.last_touch < clock)
                 .min_by_key(|(_, e)| e.last_touch)
                 .map(|(id, _)| *id);
-            match victim {
-                Some(id) => {
-                    self.remove(id);
-                    self.evicted += 1;
+            let Some(id) = victim else { return }; // all touched this tick
+            if let Some((dir, model)) = spill {
+                if !self.demote(id, dir, model) {
+                    return;
                 }
-                None => return, // everything live was touched this tick
+            } else {
+                self.remove(id);
+                self.evicted += 1;
+            }
+        }
+    }
+
+    /// Demote one session to disk. Returns false (leaving the session
+    /// resident) iff the spill write failed.
+    fn demote(&mut self, id: u64, dir: &Path, model: &str) -> bool {
+        let entry = self.sessions.get_mut(&id).expect("demote of unknown session");
+        let Some(snap) = spill::snapshot_session(entry.state.as_mut()) else {
+            // This session type cannot spill: historical destroy-evict.
+            self.remove(id);
+            self.evicted += 1;
+            return true;
+        };
+        let meta = SpillMeta { model: model.to_string(), open_seed: entry.open_seed };
+        match spill::write_spill(&spill::spill_path(dir, id), &meta, &snap) {
+            Ok(()) => {
+                self.remove(id);
+                self.spilled += 1;
+                self.spill_failing = false;
+                true
+            }
+            Err(_) => {
+                self.spill_failures += 1;
+                self.spill_failing = true;
+                false
             }
         }
     }
@@ -108,6 +177,16 @@ pub enum SessionError {
     NoSuchSession(u64),
     /// Input width did not match the model.
     BadInput { want: usize, got: usize },
+    /// Shed under overload: the byte budget is exhausted and spilling is
+    /// failing, so opening would destroy an existing session. Retryable.
+    Overloaded { retry_after_ms: u64 },
+}
+
+impl SessionError {
+    /// Whether the client should retry the identical request later.
+    pub fn retryable(&self) -> bool {
+        matches!(self, SessionError::Overloaded { .. })
+    }
 }
 
 impl std::fmt::Display for SessionError {
@@ -116,6 +195,9 @@ impl std::fmt::Display for SessionError {
             SessionError::NoSuchSession(id) => write!(f, "no such session {id}"),
             SessionError::BadInput { want, got } => {
                 write!(f, "input has {got} dims, model wants {want}")
+            }
+            SessionError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded, retry in {retry_after_ms} ms")
             }
         }
     }
@@ -144,6 +226,11 @@ impl SessionManager {
                 state_bytes: 0,
                 evicted: 0,
                 expired: 0,
+                spilled: 0,
+                rehydrated: 0,
+                corrupt_dropped: 0,
+                spill_failures: 0,
+                spill_failing: false,
             }),
         }
     }
@@ -152,6 +239,16 @@ impl SessionManager {
     /// sessions exist).
     pub fn model(&self) -> &Arc<dyn InferModel> {
         &self.model
+    }
+
+    /// The demote-to-disk directory, when durability is on.
+    pub fn spill_dir(&self) -> Option<&Path> {
+        self.cfg.spill_dir.as_deref()
+    }
+
+    /// Spill target for the budget enforcer (`None` = destroy-evict mode).
+    fn spill_opts(&self) -> Option<(&Path, &str)> {
+        self.cfg.spill_dir.as_deref().map(|d| (d, self.model.name()))
     }
 
     /// Open a session with a manager-drawn per-session memory seed.
@@ -171,19 +268,134 @@ impl SessionManager {
         let id = inner.next_id;
         inner.next_id += 1;
         inner.clock += 1;
-        let entry =
-            Entry { state, last_touch: inner.clock, last_used: Instant::now(), bytes: 0 };
+        let entry = Entry {
+            state,
+            last_touch: inner.clock,
+            last_used: Instant::now(),
+            bytes: 0,
+            open_seed: seed,
+        };
         inner.insert(id, entry);
-        inner.enforce_budget(self.cfg.byte_budget);
+        inner.enforce_budget(self.cfg.byte_budget, self.spill_opts());
         id
     }
 
-    /// Close a session; returns whether it existed.
-    pub fn close(&self, id: u64) -> bool {
-        self.inner.lock().unwrap().remove(id).is_some()
+    /// Overload-checked open for the serving front door: sheds with
+    /// [`SessionError::Overloaded`] when the byte budget is exhausted AND
+    /// spilling is failing — the one situation where admitting a session
+    /// could only be paid for by destroying another one.
+    pub fn open_checked(&self, seed: Option<u64>) -> Result<u64, SessionError> {
+        self.check_overload()?;
+        Ok(self.open_seeded(seed))
     }
 
-    /// One forward step of one session.
+    /// [`SessionManager::open`] (manager-drawn seed) with the same
+    /// overload shedding as [`SessionManager::open_checked`].
+    pub fn open_auto_checked(&self) -> Result<u64, SessionError> {
+        self.check_overload()?;
+        Ok(self.open())
+    }
+
+    fn check_overload(&self) -> Result<(), SessionError> {
+        if self.cfg.spill_dir.is_none() {
+            return Ok(()); // destroy-evict mode never sheds
+        }
+        let inner = self.inner.lock().unwrap();
+        if inner.spill_failing && inner.state_bytes > self.cfg.byte_budget {
+            return Err(SessionError::Overloaded { retry_after_ms: OVERLOAD_RETRY_MS });
+        }
+        Ok(())
+    }
+
+    /// Close a session; returns whether it existed (resident or spilled).
+    /// Closing also deletes any spill file so a closed id can never
+    /// rehydrate.
+    pub fn close(&self, id: u64) -> bool {
+        let resident = self.inner.lock().unwrap().remove(id).is_some();
+        let on_disk = self
+            .cfg
+            .spill_dir
+            .as_deref()
+            .is_some_and(|d| std::fs::remove_file(spill::spill_path(d, id)).is_ok());
+        resident || on_disk
+    }
+
+    /// Reload a spilled session under the table lock. Any validation
+    /// failure (CRC, shape, model mismatch) deletes the file and counts a
+    /// corrupt drop — a defective spill is never loaded and never retried.
+    fn try_rehydrate(&self, inner: &mut Inner, id: u64) -> bool {
+        let Some(dir) = self.cfg.spill_dir.as_deref() else { return false };
+        let path = spill::spill_path(dir, id);
+        if !path.exists() {
+            return false;
+        }
+        let (meta, snap) = match spill::read_spill(&path) {
+            Ok(ok) => ok,
+            Err(_) => {
+                let _ = std::fs::remove_file(&path);
+                inner.corrupt_dropped += 1;
+                return false;
+            }
+        };
+        if meta.model != self.model.name() {
+            let _ = std::fs::remove_file(&path);
+            inner.corrupt_dropped += 1;
+            return false;
+        }
+        // Re-opening with the recorded seed re-derives the engine seeds the
+        // snapshot was captured under (import_state checks mem_seed).
+        let mut state = self.model.open_session(meta.open_seed);
+        if spill::restore_session(state.as_mut(), &snap).is_err() {
+            let _ = std::fs::remove_file(&path);
+            inner.corrupt_dropped += 1;
+            return false;
+        }
+        let _ = std::fs::remove_file(&path);
+        inner.clock += 1;
+        let entry = Entry {
+            state,
+            last_touch: inner.clock,
+            last_used: Instant::now(),
+            bytes: 0,
+            open_seed: meta.open_seed,
+        };
+        inner.insert(id, entry);
+        if inner.next_id <= id {
+            inner.next_id = id + 1;
+        }
+        inner.rehydrated += 1;
+        true
+    }
+
+    /// Cold-restart recovery: reload every surviving spill file in the
+    /// configured directory. Returns (loaded, corrupt-dropped). Loading
+    /// may exceed the byte budget; the next step's budget check demotes
+    /// the LRU tail again rather than refusing recovery.
+    pub fn rehydrate_all(&self) -> (usize, usize) {
+        let Some(dir) = self.cfg.spill_dir.as_deref() else { return (0, 0) };
+        let mut ids: Vec<u64> = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                if let Some(id) = e.file_name().to_str().and_then(spill::parse_spill_id) {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let before_corrupt = inner.corrupt_dropped;
+        let mut loaded = 0;
+        for id in ids {
+            if !inner.sessions.contains_key(&id) && self.try_rehydrate(inner, id) {
+                loaded += 1;
+            }
+        }
+        (loaded, (inner.corrupt_dropped - before_corrupt) as usize)
+    }
+
+    /// One forward step of one session. A spilled session rehydrates
+    /// transparently — demotion is invisible to the caller.
     pub fn step(&self, id: u64, x: &[f32], y: &mut Vec<f32>) -> Result<(), SessionError> {
         if x.len() != self.model.x_dim() {
             return Err(SessionError::BadInput { want: self.model.x_dim(), got: x.len() });
@@ -192,7 +404,10 @@ impl SessionManager {
         let inner = &mut *inner;
         inner.clock += 1;
         let clock = inner.clock;
-        let entry = inner.sessions.get_mut(&id).ok_or(SessionError::NoSuchSession(id))?;
+        if !inner.sessions.contains_key(&id) && !self.try_rehydrate(inner, id) {
+            return Err(SessionError::NoSuchSession(id));
+        }
+        let entry = inner.sessions.get_mut(&id).expect("session present after rehydrate");
         entry.last_touch = clock;
         entry.last_used = Instant::now();
         self.model.step(entry.state.as_mut(), x, y);
@@ -200,16 +415,19 @@ impl SessionManager {
         let new_bytes = entry.state.heap_bytes();
         inner.state_bytes = inner.state_bytes - entry.bytes + new_bytes;
         entry.bytes = new_bytes;
-        inner.enforce_budget(self.cfg.byte_budget);
+        inner.enforce_budget(self.cfg.byte_budget, self.spill_opts());
         Ok(())
     }
 
     /// Reset a session's episode (memory + recurrent state to episode
-    /// start) without closing it.
+    /// start) without closing it. Rehydrates a spilled session first.
     pub fn reset(&self, id: u64) -> Result<(), SessionError> {
         let mut inner = self.inner.lock().unwrap();
         let inner = &mut *inner;
-        let entry = inner.sessions.get_mut(&id).ok_or(SessionError::NoSuchSession(id))?;
+        if !inner.sessions.contains_key(&id) && !self.try_rehydrate(inner, id) {
+            return Err(SessionError::NoSuchSession(id));
+        }
+        let entry = inner.sessions.get_mut(&id).expect("session present after rehydrate");
         entry.state.reset();
         let new_bytes = entry.state.heap_bytes();
         inner.state_bytes = inner.state_bytes - entry.bytes + new_bytes;
@@ -265,40 +483,48 @@ impl SessionManager {
                 }
             }
             // Detach the round's sessions from the table so we can hold
-            // simultaneous &muts (Box moves are cheap).
-            let mut taken: Vec<(usize, u64, Box<dyn Session>)> = Vec::with_capacity(round.len());
+            // simultaneous &muts (Box moves are cheap). A spilled id
+            // rehydrates first, same as the single-step path.
+            let mut taken: Vec<(usize, u64, Box<dyn Session>, Option<u64>)> =
+                Vec::with_capacity(round.len());
             for &idx in &round {
                 let id = reqs[idx].0;
+                if !inner.sessions.contains_key(&id) {
+                    self.try_rehydrate(inner, id);
+                }
                 match inner.remove(id) {
-                    Some(entry) => taken.push((idx, id, entry.state)),
+                    Some(entry) => taken.push((idx, id, entry.state, entry.open_seed)),
                     None => outs[idx] = Err(SessionError::NoSuchSession(id)),
                 }
             }
             if !taken.is_empty() {
-                let xs: Vec<&[f32]> = taken.iter().map(|&(idx, _, _)| reqs[idx].1.as_slice()).collect();
+                let xs: Vec<&[f32]> =
+                    taken.iter().map(|&(idx, _, _, _)| reqs[idx].1.as_slice()).collect();
                 let mut ys: Vec<Vec<f32>> = taken.iter().map(|_| Vec::new()).collect();
                 {
                     let mut sessions: Vec<&mut dyn Session> =
-                        taken.iter_mut().map(|(_, _, s)| s.as_mut()).collect();
+                        taken.iter_mut().map(|(_, _, s, _)| s.as_mut()).collect();
                     self.model.step_batch(&mut sessions, &xs, &mut ys, &mut inner.batch);
                 }
                 let now = Instant::now();
-                for ((idx, id, state), y) in taken.into_iter().zip(ys) {
+                for ((idx, id, state, open_seed), y) in taken.into_iter().zip(ys) {
                     outs[idx] = Ok(y);
                     inner.insert(
                         id,
-                        Entry { state, last_touch: tick_clock, last_used: now, bytes: 0 },
+                        Entry { state, last_touch: tick_clock, last_used: now, bytes: 0, open_seed },
                     );
                 }
             }
         }
-        inner.enforce_budget(self.cfg.byte_budget);
+        inner.enforce_budget(self.cfg.byte_budget, self.spill_opts());
     }
 
-    /// Drop sessions idle longer than the configured expiry; returns how
-    /// many were dropped. The server's accept loop calls this periodically.
+    /// Drop sessions idle longer than the configured expiry (demote to
+    /// disk instead when `spill_dir` is set); returns how many left the
+    /// resident table. The server's accept loop calls this periodically.
     pub fn expire_idle(&self) -> usize {
         let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
         let deadline = self.cfg.idle_expiry;
         let expired: Vec<u64> = inner
             .sessions
@@ -306,11 +532,21 @@ impl SessionManager {
             .filter(|(_, e)| e.last_used.elapsed() > deadline)
             .map(|(id, _)| *id)
             .collect();
+        let mut dropped = 0;
         for id in &expired {
-            inner.remove(*id);
+            if let Some((dir, model)) = self.spill_opts() {
+                // A failed spill keeps the session resident — idle state
+                // is still user state.
+                if inner.demote(*id, dir, model) {
+                    dropped += 1;
+                }
+            } else {
+                inner.remove(*id);
+                dropped += 1;
+            }
         }
-        inner.expired += expired.len() as u64;
-        expired.len()
+        inner.expired += dropped as u64;
+        dropped
     }
 
     // -- accounting ---------------------------------------------------------
@@ -354,6 +590,17 @@ impl SessionManager {
         let inner = self.inner.lock().unwrap();
         (inner.evicted, inner.expired)
     }
+
+    /// (spilled, rehydrated, corrupt-dropped) durability counters.
+    pub fn spill_stats(&self) -> (u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.spilled, inner.rehydrated, inner.corrupt_dropped)
+    }
+
+    /// Failed spill-write attempts (the overload-shedding signal).
+    pub fn spill_failures(&self) -> u64 {
+        self.inner.lock().unwrap().spill_failures
+    }
 }
 
 #[cfg(test)]
@@ -363,7 +610,7 @@ mod tests {
     use crate::cores::{CoreConfig, CoreKind};
     use crate::serving::build_infer_model;
 
-    fn manager(budget: usize) -> SessionManager {
+    fn manager_with(budget: usize, spill_dir: Option<PathBuf>) -> SessionManager {
         let cfg = CoreConfig {
             x_dim: 4,
             y_dim: 3,
@@ -380,8 +627,12 @@ mod tests {
         let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
         SessionManager::new(
             model,
-            SessionConfig { byte_budget: budget, ..SessionConfig::default() },
+            SessionConfig { byte_budget: budget, spill_dir, ..SessionConfig::default() },
         )
+    }
+
+    fn manager(budget: usize) -> SessionManager {
+        manager_with(budget, None)
     }
 
     #[test]
@@ -424,6 +675,48 @@ mod tests {
         // own step even if its pools grew past the budget.
         assert_eq!(mgr.session_count(), 1);
         assert_eq!(mgr.eviction_stats().0, 1);
+    }
+
+    #[test]
+    fn spill_mode_demotes_and_rehydrates_transparently() {
+        let dir = std::env::temp_dir()
+            .join(format!("sam-session-spill-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let probe = manager(1 << 30);
+        probe.open();
+        let one_session = probe.state_heap_bytes();
+
+        let mgr = manager_with(one_session, Some(dir.clone()));
+        let a = mgr.open_seeded(Some(11));
+        let x = [1.0, 0.0, 0.0, 1.0];
+        let mut y_a = Vec::new();
+        mgr.step(a, &x, &mut y_a).unwrap();
+        let _b = mgr.open_seeded(Some(12)); // over budget → a demoted to disk
+        assert_eq!(mgr.session_count(), 1);
+        assert_eq!(mgr.spill_stats(), (1, 0, 0));
+        assert_eq!(mgr.eviction_stats().0, 0, "spill mode must not destroy-evict");
+        assert!(spill::spill_path(&dir, a).exists());
+
+        // Stepping the spilled id rehydrates transparently and matches the
+        // never-evicted reference bitwise.
+        let reference = manager(1 << 30);
+        let a_ref = reference.open_seeded(Some(11));
+        let mut y_ref = Vec::new();
+        reference.step(a_ref, &x, &mut y_ref).unwrap();
+        assert_eq!(y_a, y_ref);
+        reference.step(a_ref, &x, &mut y_ref).unwrap();
+        let mut y_a2 = Vec::new();
+        mgr.step(a, &x, &mut y_a2).unwrap();
+        assert_eq!(mgr.spill_stats().1, 1);
+        assert_eq!(y_a2, y_ref, "rehydrated step must be bit-identical");
+
+        // Closing a session also removes any spill file it left behind.
+        mgr.step(a, &x, &mut y_a2).unwrap(); // keep a resident, b spilled
+        assert!(mgr.close(_b));
+        assert!(!spill::spill_path(&dir, _b).exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

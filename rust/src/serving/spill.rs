@@ -1,0 +1,661 @@
+//! Versioned, checksummed session spill files — the durability layer under
+//! [`SessionManager`](crate::serving::session::SessionManager).
+//!
+//! A spill file captures everything a [`SamSession`] step mutates: the
+//! decoded memory rows (plus per-row Int8 dequant scales so compact
+//! storage bits re-encode exactly), the LRA ring order, the controller's
+//! LSTM h/c, and the recurrent read state (`w_read_prev`, `r_prev`).
+//! Restoring replays the engine's own reinit discipline — set each row,
+//! re-sync its ANN slot, restore the ring — so a rehydrated session is
+//! bit-identical to the never-evicted one for ann=linear (kd/LSH/HNSW
+//! rebuild deterministically from the same rows and seeds but may order
+//! equal-score ties differently; see DESIGN.md).
+//!
+//! ## On-disk layout (version 1)
+//!
+//! ```text
+//! magic  b"SAMSPILL"                       (8 bytes)
+//! version u32 LE                           (4 bytes)
+//! record* : tag u32 | len u64 | payload[len] | crc32(payload) u32   (all LE)
+//! ```
+//!
+//! Tags: 1=META (JSON), 2=ROWS (f32), 3=SCALES (f32), 4=RING (u64),
+//! 5=LSTM_H (f32), 6=LSTM_C (f32), 7=WREAD (per-head sparse pairs),
+//! 8=RPREV (per-head f32 vectors), 9=END (empty). Every record carries its
+//! own CRC32 (IEEE, hand-rolled table — the build is offline) and the
+//! reader requires the full tag set terminated by END, so a torn tail, a
+//! flipped byte or a truncated file is *detected and refused*, never
+//! silently loaded. Writers stage the entire file in memory, write it to
+//! `<name>.tmp`, fsync, then atomically rename — a crash mid-spill leaves
+//! either the old complete file or an ignorable `.tmp`, and a
+//! non-atomic-filesystem torn write still trips the CRC/END checks.
+//!
+//! u64 seeds are serialized as decimal strings inside the JSON meta (the
+//! hand-rolled JSON holds numbers as f64, which cannot round-trip u64).
+
+use crate::cores::sam::SamSession;
+use crate::serving::Session;
+use crate::tensor::rowcodec::RowFormat;
+use crate::util::fault::{self, FaultKind};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+pub const MAGIC: &[u8; 8] = b"SAMSPILL";
+pub const VERSION: u32 = 1;
+
+const TAG_META: u32 = 1;
+const TAG_ROWS: u32 = 2;
+const TAG_SCALES: u32 = 3;
+const TAG_RING: u32 = 4;
+const TAG_LSTM_H: u32 = 5;
+const TAG_LSTM_C: u32 = 6;
+const TAG_WREAD: u32 = 7;
+const TAG_RPREV: u32 = 8;
+const TAG_END: u32 = 9;
+
+// -- CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) --------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC32 of `data` (matches zlib's `crc32(0, ...)`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// -- snapshot ----------------------------------------------------------------
+
+/// Everything a SAM serving step mutates, decoded to plain vectors. Built
+/// by [`SamSession::export_state`], consumed by
+/// [`SamSession::import_state`] and the codec below.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    /// Memory rows (global order).
+    pub n: usize,
+    /// Word width W.
+    pub word: usize,
+    /// Storage codec of the live store (restore target must match).
+    pub row_format: RowFormat,
+    /// The session engine's memory-init seed — a consistency check that a
+    /// spill is restored into a session deriving identical init rows.
+    pub mem_seed: u64,
+    /// Decoded memory rows, n×word, global row order.
+    pub rows: Vec<f32>,
+    /// Per-row Int8 dequant scales (all 1.0 outside Int8), length n.
+    pub scales: Vec<f32>,
+    /// LRA ring order, least- to most-recently used, a permutation of 0..n.
+    pub ring_order: Vec<usize>,
+    /// Controller LSTM hidden state.
+    pub h: Vec<f32>,
+    /// Controller LSTM cell state.
+    pub c: Vec<f32>,
+    /// Previous read weights per head (sparse index/value pairs).
+    pub w_read_prev: Vec<Vec<(usize, f32)>>,
+    /// Previous read vectors per head, each of length `word`.
+    pub r_prev: Vec<Vec<f32>>,
+}
+
+impl SessionSnapshot {
+    pub fn heads(&self) -> usize {
+        self.w_read_prev.len()
+    }
+}
+
+/// Identity half of a spill file: which model and open-seed the session
+/// belongs to, so a cold restart can re-open an equivalent session before
+/// importing state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpillMeta {
+    /// `InferModel::name()` of the owning model ("sam", ...).
+    pub model: String,
+    /// The seed the session was opened with (`None` = the model's own
+    /// parity seeds). Re-opening with the same value re-derives identical
+    /// engine seeds, which import_state verifies via `mem_seed`.
+    pub open_seed: Option<u64>,
+}
+
+// -- downcast seam -----------------------------------------------------------
+
+/// Capture a spillable snapshot from a type-erased session, or `None` if
+/// this session type has no spill support (the manager falls back to
+/// destroy-eviction for those).
+pub fn snapshot_session(state: &mut dyn Session) -> Option<SessionSnapshot> {
+    state.as_any().downcast_mut::<SamSession>().map(|s| s.export_state())
+}
+
+/// Restore a snapshot into a freshly opened session of the same model.
+pub fn restore_session(state: &mut dyn Session, snap: &SessionSnapshot) -> Result<()> {
+    let s = state
+        .as_any()
+        .downcast_mut::<SamSession>()
+        .ok_or_else(|| anyhow!("spill restore: session type does not support spill"))?;
+    s.import_state(snap)
+}
+
+// -- paths -------------------------------------------------------------------
+
+/// Spill file path for session `id`: `<dir>/sess-<id>.spill`.
+pub fn spill_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("sess-{id}.spill"))
+}
+
+/// Parse a session id back out of a spill file name.
+pub fn parse_spill_id(file_name: &str) -> Option<u64> {
+    file_name.strip_prefix("sess-")?.strip_suffix(".spill")?.parse().ok()
+}
+
+// -- encode ------------------------------------------------------------------
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(buf: &mut Vec<u8>, vals: &[f32]) {
+    for &x in vals {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_record(buf: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    push_u32(buf, tag);
+    push_u64(buf, payload.len() as u64);
+    buf.extend_from_slice(payload);
+    push_u32(buf, crc32(payload));
+}
+
+/// Serialize a complete spill file into memory (staged, so the on-disk
+/// write is a single write_all + fsync + rename).
+pub fn encode_spill(meta: &SpillMeta, snap: &SessionSnapshot) -> Vec<u8> {
+    let mut header = vec![("model", Json::str(meta.model.clone()))];
+    if let Some(s) = meta.open_seed {
+        header.push(("open_seed", Json::str(format!("{s}"))));
+    }
+    header.push(("n", Json::num(snap.n as f64)));
+    header.push(("word", Json::num(snap.word as f64)));
+    header.push(("heads", Json::num(snap.heads() as f64)));
+    header.push(("row_format", Json::str(snap.row_format.name())));
+    header.push(("mem_seed", Json::str(format!("{}", snap.mem_seed))));
+    let meta_json = Json::obj(header).encode();
+
+    let mut buf = Vec::with_capacity(64 + snap.rows.len() * 4 + snap.n * 12);
+    buf.extend_from_slice(MAGIC);
+    push_u32(&mut buf, VERSION);
+    push_record(&mut buf, TAG_META, meta_json.as_bytes());
+
+    let mut payload = Vec::with_capacity(snap.rows.len() * 4);
+    push_f32s(&mut payload, &snap.rows);
+    push_record(&mut buf, TAG_ROWS, &payload);
+
+    payload.clear();
+    push_f32s(&mut payload, &snap.scales);
+    push_record(&mut buf, TAG_SCALES, &payload);
+
+    payload.clear();
+    for &i in &snap.ring_order {
+        push_u64(&mut payload, i as u64);
+    }
+    push_record(&mut buf, TAG_RING, &payload);
+
+    payload.clear();
+    push_f32s(&mut payload, &snap.h);
+    push_record(&mut buf, TAG_LSTM_H, &payload);
+
+    payload.clear();
+    push_f32s(&mut payload, &snap.c);
+    push_record(&mut buf, TAG_LSTM_C, &payload);
+
+    payload.clear();
+    for head in &snap.w_read_prev {
+        push_u64(&mut payload, head.len() as u64);
+        for &(i, v) in head {
+            push_u64(&mut payload, i as u64);
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    push_record(&mut buf, TAG_WREAD, &payload);
+
+    payload.clear();
+    for r in &snap.r_prev {
+        push_u64(&mut payload, r.len() as u64);
+        push_f32s(&mut payload, r);
+    }
+    push_record(&mut buf, TAG_RPREV, &payload);
+
+    push_record(&mut buf, TAG_END, &[]);
+    buf
+}
+
+/// Write a spill file atomically: stage to `<path>.tmp`, fsync, rename.
+///
+/// Fault-injection points (`fault-inject` feature only): `spill.write`
+/// (IoError fails the staging write; ShortWrite truncates the staged bytes
+/// *and still renames*, simulating a non-atomic filesystem tearing the
+/// file so the reader's CRC/END checks are exercised) and `spill.rename`
+/// (IoError fails after staging, leaving an ignorable `.tmp`).
+pub fn write_spill(path: &Path, meta: &SpillMeta, snap: &SessionSnapshot) -> std::io::Result<()> {
+    let buf = encode_spill(meta, snap);
+    let cut = match fault::check_io("spill.write")? {
+        Some(FaultKind::ShortWrite) => buf.len() / 2,
+        _ => buf.len(),
+    };
+    let tmp = path.with_extension("spill.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&buf[..cut])?;
+        f.sync_all()?;
+    }
+    if let Err(e) = fault::check_io("spill.rename") {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+}
+
+// -- decode ------------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            bail!("truncated spill file ({} bytes short)", n - (self.b.len() - self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn f32s(payload: &[u8]) -> Result<Vec<f32>> {
+    if payload.len() % 4 != 0 {
+        bail!("f32 record length {} not a multiple of 4", payload.len());
+    }
+    Ok(payload.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn meta_u64(meta: &Json, key: &str) -> Result<u64> {
+    meta.get(key)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("spill meta missing {key}"))?
+        .parse()
+        .map_err(|_| anyhow!("spill meta {key} is not a u64"))
+}
+
+fn meta_usize(meta: &Json, key: &str) -> Result<usize> {
+    let v = meta
+        .get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("spill meta missing {key}"))?;
+    Ok(v as usize)
+}
+
+fn row_format_from_name(name: &str) -> Result<RowFormat> {
+    match name {
+        "f32" => Ok(RowFormat::F32),
+        "bf16" => Ok(RowFormat::Bf16),
+        "int8" => Ok(RowFormat::Int8),
+        other => bail!("unknown row format in spill meta: {other:?}"),
+    }
+}
+
+/// Decode and fully validate a spill image. Any defect — bad magic, bad
+/// version, CRC mismatch, missing record, truncation, shape inconsistency
+/// — is an error; a partially valid file is never returned.
+pub fn decode_spill(bytes: &[u8]) -> Result<(SpillMeta, SessionSnapshot)> {
+    let mut cur = Cursor { b: bytes, i: 0 };
+    if cur.take(8)? != MAGIC {
+        bail!("bad spill magic (not a spill file)");
+    }
+    let version = cur.u32()?;
+    if version != VERSION {
+        bail!("unsupported spill version {version} (want {VERSION})");
+    }
+
+    let mut records: Vec<(u32, &[u8])> = Vec::new();
+    let mut saw_end = false;
+    while cur.i < bytes.len() {
+        let tag = cur.u32()?;
+        let len = cur.u64()? as usize;
+        let payload = cur.take(len).with_context(|| format!("record tag {tag}"))?;
+        let crc = cur.u32()?;
+        if crc != crc32(payload) {
+            bail!("CRC mismatch in record tag {tag} (torn or corrupted spill)");
+        }
+        if tag == TAG_END {
+            saw_end = true;
+            break;
+        }
+        records.push((tag, payload));
+    }
+    if !saw_end {
+        bail!("spill file has no END record (torn write)");
+    }
+
+    let get = |tag: u32| -> Result<&[u8]> {
+        records
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, p)| *p)
+            .ok_or_else(|| anyhow!("spill file missing record tag {tag}"))
+    };
+
+    let meta_json = std::str::from_utf8(get(TAG_META)?).context("spill meta is not UTF-8")?;
+    let meta = Json::parse(meta_json).map_err(|e| anyhow!("spill meta parse: {e}"))?;
+    let model = meta
+        .get("model")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("spill meta missing model"))?
+        .to_string();
+    let open_seed = match meta.get("open_seed") {
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| anyhow!("spill meta open_seed is not a string"))?
+                .parse::<u64>()
+                .map_err(|_| anyhow!("spill meta open_seed is not a u64"))?,
+        ),
+        None => None,
+    };
+    let n = meta_usize(&meta, "n")?;
+    let word = meta_usize(&meta, "word")?;
+    let heads = meta_usize(&meta, "heads")?;
+    let row_format = row_format_from_name(
+        meta.get("row_format")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("spill meta missing row_format"))?,
+    )?;
+    let mem_seed = meta_u64(&meta, "mem_seed")?;
+
+    let rows = f32s(get(TAG_ROWS)?)?;
+    if rows.len() != n * word {
+        bail!("spill rows length {} != n*word {}", rows.len(), n * word);
+    }
+    let scales = f32s(get(TAG_SCALES)?)?;
+    if scales.len() != n {
+        bail!("spill scales length {} != n {}", scales.len(), n);
+    }
+
+    let ring_bytes = get(TAG_RING)?;
+    if ring_bytes.len() != n * 8 {
+        bail!("spill ring length {} != n*8 {}", ring_bytes.len(), n * 8);
+    }
+    let ring_order: Vec<usize> = ring_bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect();
+    let mut seen = vec![false; n];
+    for &i in &ring_order {
+        if i >= n || seen[i] {
+            bail!("spill ring order is not a permutation of 0..{n}");
+        }
+        seen[i] = true;
+    }
+
+    let h = f32s(get(TAG_LSTM_H)?)?;
+    let c = f32s(get(TAG_LSTM_C)?)?;
+    if h.len() != c.len() {
+        bail!("spill LSTM h/c length mismatch ({} vs {})", h.len(), c.len());
+    }
+
+    let wread_bytes = get(TAG_WREAD)?;
+    let mut wc = Cursor { b: wread_bytes, i: 0 };
+    let mut w_read_prev = Vec::with_capacity(heads);
+    for _ in 0..heads {
+        let cnt = wc.u64().context("spill w_read_prev head count")? as usize;
+        if cnt > n {
+            bail!("spill w_read_prev head has {cnt} entries for {n} rows");
+        }
+        let mut head: Vec<(usize, f32)> = Vec::with_capacity(cnt);
+        for _ in 0..cnt {
+            let idx = wc.u64()? as usize;
+            let val = f32::from_le_bytes(wc.take(4)?.try_into().unwrap());
+            if idx >= n {
+                bail!("spill w_read_prev index {idx} out of range (n={n})");
+            }
+            // SparseVec indices are strictly ascending by contract.
+            if head.last().is_some_and(|&(last, _)| last >= idx) {
+                bail!("spill w_read_prev indices out of order");
+            }
+            head.push((idx, val));
+        }
+        w_read_prev.push(head);
+    }
+    if wc.i != wread_bytes.len() {
+        bail!("spill w_read_prev record has trailing bytes");
+    }
+
+    let rprev_bytes = get(TAG_RPREV)?;
+    let mut rc = Cursor { b: rprev_bytes, i: 0 };
+    let mut r_prev = Vec::with_capacity(heads);
+    for _ in 0..heads {
+        let len = rc.u64().context("spill r_prev head length")? as usize;
+        if len != word {
+            bail!("spill r_prev head length {len} != word {word}");
+        }
+        r_prev.push(f32s(rc.take(len * 4)?)?);
+    }
+    if rc.i != rprev_bytes.len() {
+        bail!("spill r_prev record has trailing bytes");
+    }
+
+    Ok((
+        SpillMeta { model, open_seed },
+        SessionSnapshot {
+            n,
+            word,
+            row_format,
+            mem_seed,
+            rows,
+            scales,
+            ring_order,
+            h,
+            c,
+            w_read_prev,
+            r_prev,
+        },
+    ))
+}
+
+/// Read and validate a spill file. Fault-injection point: `spill.read`
+/// (IoError).
+pub fn read_spill(path: &Path) -> Result<(SpillMeta, SessionSnapshot)> {
+    fault::check_io("spill.read").map_err(|e| anyhow!("{e}"))?;
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading spill {}", path.display()))?;
+    decode_spill(&bytes).with_context(|| format!("decoding spill {}", path.display()))
+}
+
+// -- directory audit ---------------------------------------------------------
+
+/// What a spill directory holds — `sam info --spill-dir` and the cold
+/// restart both scan with this.
+#[derive(Debug, Default, Clone)]
+pub struct SpillDirReport {
+    /// Session ids of spill files that decoded and validated cleanly.
+    pub ids: Vec<u64>,
+    /// Total bytes across recognized spill files (valid + corrupt).
+    pub bytes: u64,
+    /// Files matching the spill naming scheme that failed validation.
+    pub corrupt: usize,
+}
+
+impl SpillDirReport {
+    pub fn files(&self) -> usize {
+        self.ids.len() + self.corrupt
+    }
+}
+
+/// Scan `dir` for `sess-*.spill` files and validate each one. Stale
+/// `*.tmp` staging files (a crash mid-spill) and unrelated files are
+/// ignored. A missing directory reads as empty.
+pub fn scan_dir(dir: &Path) -> SpillDirReport {
+    let mut report = SpillDirReport::default();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return report,
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(id) = parse_spill_id(name) else { continue };
+        let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
+        report.bytes += len;
+        match read_spill(&entry.path()) {
+            Ok(_) => report.ids.push(id),
+            Err(_) => report.corrupt += 1,
+        }
+    }
+    report.ids.sort_unstable();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> SessionSnapshot {
+        SessionSnapshot {
+            n: 4,
+            word: 3,
+            row_format: RowFormat::F32,
+            mem_seed: 0xDEAD_BEEF_CAFE_F00D,
+            rows: (0..12).map(|i| i as f32 * 0.25 - 1.0).collect(),
+            scales: vec![1.0; 4],
+            ring_order: vec![2, 0, 3, 1],
+            h: vec![0.5, -0.5],
+            c: vec![1.5, -1.5],
+            w_read_prev: vec![vec![(1, 0.75), (3, 0.25)], vec![]],
+            r_prev: vec![vec![0.1, 0.2, 0.3], vec![0.0, 0.0, 0.0]],
+        }
+    }
+
+    fn sample_meta() -> SpillMeta {
+        SpillMeta { model: "sam".into(), open_seed: Some(u64::MAX - 7) }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC32 check values.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let (meta, snap) = (sample_meta(), sample_snapshot());
+        let bytes = encode_spill(&meta, &snap);
+        let (m2, s2) = decode_spill(&bytes).unwrap();
+        assert_eq!(m2, meta);
+        assert_eq!(s2, snap);
+    }
+
+    #[test]
+    fn u64_seeds_survive_json_meta() {
+        // f64 JSON numbers cannot hold u64::MAX-7; the string encoding must.
+        let (meta, mut snap) = (sample_meta(), sample_snapshot());
+        snap.mem_seed = u64::MAX;
+        let (m2, s2) = decode_spill(&encode_spill(&meta, &snap)).unwrap();
+        assert_eq!(m2.open_seed, Some(u64::MAX - 7));
+        assert_eq!(s2.mem_seed, u64::MAX);
+    }
+
+    #[test]
+    fn every_truncation_is_detected() {
+        let bytes = encode_spill(&sample_meta(), &sample_snapshot());
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_spill(&bytes[..cut]).is_err(),
+                "truncation to {cut}/{} bytes went undetected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        let bytes = encode_spill(&sample_meta(), &sample_snapshot());
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            // A flip must either fail decode or (never) silently change
+            // contents; CRC-per-record means it always fails.
+            assert!(decode_spill(&bad).is_err(), "byte flip at {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn wrong_version_and_magic_rejected() {
+        let mut bytes = encode_spill(&sample_meta(), &sample_snapshot());
+        bytes[0] = b'X';
+        assert!(decode_spill(&bytes).is_err());
+        let mut bytes = encode_spill(&sample_meta(), &sample_snapshot());
+        bytes[8] = 0xFF; // version
+        assert!(decode_spill(&bytes).is_err());
+    }
+
+    #[test]
+    fn atomic_write_then_scan() {
+        let dir = std::env::temp_dir().join(format!("sam-spill-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (meta, snap) = (sample_meta(), sample_snapshot());
+        write_spill(&spill_path(&dir, 7), &meta, &snap).unwrap();
+        write_spill(&spill_path(&dir, 9), &meta, &snap).unwrap();
+        // A corrupt file and an orphaned .tmp must be counted / ignored.
+        std::fs::write(spill_path(&dir, 11), b"SAMSPILLgarbage").unwrap();
+        std::fs::write(dir.join("sess-5.spill.tmp"), b"partial").unwrap();
+        let report = scan_dir(&dir);
+        assert_eq!(report.ids, vec![7, 9]);
+        assert_eq!(report.corrupt, 1);
+        assert_eq!(report.files(), 3);
+        assert!(report.bytes > 0);
+        let (m2, s2) = read_spill(&spill_path(&dir, 7)).unwrap();
+        assert_eq!(m2, meta);
+        assert_eq!(s2, snap);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn spill_id_naming_round_trips() {
+        assert_eq!(parse_spill_id("sess-42.spill"), Some(42));
+        assert_eq!(parse_spill_id("sess-42.spill.tmp"), None);
+        assert_eq!(parse_spill_id("other.spill"), None);
+        let p = spill_path(Path::new("/tmp/x"), 42);
+        assert_eq!(parse_spill_id(p.file_name().unwrap().to_str().unwrap()), Some(42));
+    }
+}

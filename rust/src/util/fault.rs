@@ -1,0 +1,164 @@
+//! Deterministic fault injection for crash-recovery testing.
+//!
+//! Test code arms named injection points ("spill.write", "sched.tick", …)
+//! with a fault kind and a deterministic trigger (fire on the Nth hit, or
+//! with a seeded probability); production code consults
+//! [`fire`] at each point and simulates the fault it is told to. With the
+//! `fault-inject` cargo feature **off** (the default), every hook compiles
+//! to an inlined `None`/no-op — zero branches, zero globals, zero cost on
+//! the serving hot path. The feature is enabled only by the dedicated CI
+//! leg running rust/tests/durability.rs' crash-recovery suite.
+//!
+//! Determinism: triggers are hit-counted or drawn from a seeded
+//! [`crate::util::rng::Rng`] stream per rule — the same arm() sequence
+//! produces the same fault schedule on every run, which is what makes a
+//! torn-write reproduction a regression test rather than a flake.
+
+/// What a triggered injection point should simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the operation with a synthetic I/O error.
+    IoError,
+    /// Complete only part of a write (torn write / truncation).
+    ShortWrite,
+    /// Panic on the worker thread (crash mid-operation).
+    Panic,
+}
+
+#[cfg(feature = "fault-inject")]
+mod imp {
+    use super::FaultKind;
+    use crate::util::rng::Rng;
+    use std::sync::Mutex;
+
+    enum Trigger {
+        /// Fire on hits `after < hit <= after + count` (0-based `after`).
+        Nth { after: usize, count: usize },
+        /// Fire each hit independently with probability `p` from a seeded
+        /// stream.
+        Prob { rng: Rng, p: f64 },
+    }
+
+    struct Rule {
+        point: &'static str,
+        kind: FaultKind,
+        trigger: Trigger,
+        hits: usize,
+        fired: usize,
+    }
+
+    static RULES: Mutex<Vec<Rule>> = Mutex::new(Vec::new());
+
+    /// Arm `point` to fire `kind` on `count` consecutive hits after
+    /// skipping the first `after` hits.
+    pub fn arm(point: &'static str, kind: FaultKind, after: usize, count: usize) {
+        RULES.lock().unwrap().push(Rule {
+            point,
+            kind,
+            trigger: Trigger::Nth { after, count },
+            hits: 0,
+            fired: 0,
+        });
+    }
+
+    /// Arm `point` to fire `kind` on each hit with probability `p`, drawn
+    /// from a stream seeded with `seed` (deterministic per rule).
+    pub fn arm_prob(point: &'static str, kind: FaultKind, seed: u64, p: f64) {
+        RULES.lock().unwrap().push(Rule {
+            point,
+            kind,
+            trigger: Trigger::Prob { rng: Rng::new(seed), p },
+            hits: 0,
+            fired: 0,
+        });
+    }
+
+    /// Disarm every rule (test teardown).
+    pub fn clear() {
+        RULES.lock().unwrap().clear();
+    }
+
+    /// Times any rule for `point` has actually fired.
+    pub fn fired_count(point: &str) -> usize {
+        RULES.lock().unwrap().iter().filter(|r| r.point == point).map(|r| r.fired).sum()
+    }
+
+    /// Consult the registry at an injection point. First matching rule that
+    /// triggers wins.
+    pub fn fire(point: &str) -> Option<FaultKind> {
+        let mut rules = RULES.lock().unwrap();
+        for r in rules.iter_mut() {
+            if r.point != point {
+                continue;
+            }
+            let hit = r.hits;
+            r.hits += 1;
+            let fires = match &mut r.trigger {
+                Trigger::Nth { after, count } => hit >= *after && hit < *after + *count,
+                Trigger::Prob { rng, p } => (rng.next_u64() as f64 / u64::MAX as f64) < *p,
+            };
+            if fires {
+                r.fired += 1;
+                return Some(r.kind);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+pub use imp::{arm, arm_prob, clear, fire, fired_count};
+
+/// No-op stubs: with the feature off every consultation inlines to `None`
+/// and the arming API disappears (so production code cannot arm faults by
+/// accident — only `#[cfg(feature = "fault-inject")]` test code can).
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn fire(_point: &str) -> Option<FaultKind> {
+    None
+}
+
+/// Convenience: fail with a synthetic I/O error if `point` is armed with
+/// [`FaultKind::IoError`]; panic if armed with [`FaultKind::Panic`].
+/// [`FaultKind::ShortWrite`] is reported back for the caller to simulate
+/// (only writers know how to tear their own writes).
+pub fn check_io(point: &str) -> std::io::Result<Option<FaultKind>> {
+    match fire(point) {
+        Some(FaultKind::IoError) => Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected I/O fault at {point}"),
+        )),
+        Some(FaultKind::Panic) => panic!("injected panic at {point}"),
+        other => Ok(other),
+    }
+}
+
+#[cfg(all(test, feature = "fault-inject"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nth_trigger_fires_deterministically() {
+        clear();
+        arm("t.point", FaultKind::IoError, 2, 1);
+        assert_eq!(fire("t.point"), None);
+        assert_eq!(fire("t.point"), None);
+        assert_eq!(fire("t.point"), Some(FaultKind::IoError));
+        assert_eq!(fire("t.point"), None);
+        assert_eq!(fired_count("t.point"), 1);
+        clear();
+        assert_eq!(fire("t.point"), None);
+    }
+
+    #[test]
+    fn prob_trigger_is_reproducible() {
+        let run = || {
+            clear();
+            arm_prob("t.prob", FaultKind::ShortWrite, 42, 0.5);
+            let seq: Vec<bool> = (0..32).map(|_| fire("t.prob").is_some()).collect();
+            clear();
+            seq
+        };
+        assert_eq!(run(), run(), "seeded probability schedule must be reproducible");
+    }
+}

@@ -3,6 +3,7 @@
 //! timers.
 pub mod alloc;
 pub mod args;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod rng;

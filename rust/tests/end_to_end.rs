@@ -138,11 +138,11 @@ fn checkpoint_preserves_eval_behaviour() {
     let before = trainer.evaluate(&task, 3, 5, 99);
 
     let tmp = std::env::temp_dir().join("sam_e2e_ckpt.bin");
-    sam::coordinator::save_checkpoint(trainer.core.as_mut(), &tmp).unwrap();
+    sam::coordinator::save_checkpoint(trainer.core.as_mut(), &cfg, &tmp).unwrap();
     // Fresh core, load checkpoint, same eval.
     let mut rng2 = Rng::new(999);
     let mut core2 = build_core(CoreKind::Sam, &cfg, &mut rng2);
-    sam::coordinator::load_checkpoint(core2.as_mut(), &tmp).unwrap();
+    sam::coordinator::load_checkpoint(core2.as_mut(), &cfg, &tmp).unwrap();
     let mut trainer2 = Trainer::new(
         core2,
         Box::new(RmsProp::new(1e-3)),

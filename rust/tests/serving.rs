@@ -124,7 +124,7 @@ fn checkpoint_roundtrip_identical_outputs() {
     }
     core.load_values(&vals);
     let tmp = std::env::temp_dir().join("sam_serving_ckpt_test.bin");
-    save_checkpoint(core.as_mut(), &tmp).unwrap();
+    save_checkpoint(core.as_mut(), &cfg, &tmp).unwrap();
 
     let params = read_checkpoint(&tmp).unwrap();
     assert_eq!(params, vals);
@@ -324,5 +324,146 @@ fn server_serves_concurrent_sessions_over_loopback() {
     }
     assert_eq!(mgr.session_count(), 0, "all sessions closed");
     stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn server_protocol_errors_are_structured_and_nonfatal() {
+    // Error paths over loopback (ISSUE 8 satellite): malformed JSON, an
+    // unknown op, and a step after close must each return a structured
+    // `{"error": …, "retryable": false}` reply — and leave the connection
+    // fully usable and the session table consistent.
+    use std::io::{BufRead, BufReader, Write};
+
+    let cfg = small_cfg(37);
+    let mut rng = Rng::new(37);
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let serve_cfg = server::ServeConfig {
+        workers: 2,
+        read_timeout: Duration::from_millis(10),
+        tick: Duration::from_micros(100),
+        ..server::ServeConfig::default()
+    };
+    let mgr = Arc::new(SessionManager::new(model, serve_cfg.session.clone()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = "127.0.0.1:47514";
+    let handle = {
+        let mgr = mgr.clone();
+        let stop = stop.clone();
+        let serve_cfg = serve_cfg.clone();
+        std::thread::spawn(move || server::serve(mgr, addr, &serve_cfg, stop))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    let mut roundtrip = |req: &str, line: &mut String| {
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(line).unwrap();
+        sam::util::json::Json::parse(line.trim()).unwrap()
+    };
+    let assert_final_error = |r: &sam::util::json::Json, what: &str| {
+        assert!(r.get("error").is_some(), "{what}: no error field");
+        assert_eq!(
+            r.get("retryable").and_then(|v| v.as_bool()),
+            Some(false),
+            "{what}: request-level failures must be final (retryable=false)"
+        );
+    };
+
+    // Malformed JSON.
+    let r = roundtrip("this is not json", &mut line);
+    assert_final_error(&r, "malformed json");
+    // Unknown op.
+    let r = roundtrip(r#"{"frobnicate": true}"#, &mut line);
+    assert_final_error(&r, "unknown op");
+    // The connection survived both errors.
+    let r = roundtrip(r#"{"ping": true}"#, &mut line);
+    assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+
+    // Step after close: structured error, ownership dropped, table clean.
+    let r = roundtrip(r#"{"open": {"seed": 4}}"#, &mut line);
+    let id = r.get("session").unwrap().as_f64().unwrap() as u64;
+    let r = roundtrip(&format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#), &mut line);
+    assert!(r.get("output").is_some());
+    let r = roundtrip(&format!(r#"{{"close": {id}}}"#), &mut line);
+    assert_eq!(r.get("closed").unwrap().as_bool(), Some(true));
+    let r = roundtrip(&format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#), &mut line);
+    assert_final_error(&r, "step after close");
+    assert_eq!(mgr.session_count(), 0, "closed session must stay closed");
+    // Still alive after the whole error gauntlet.
+    let r = roundtrip(r#"{"ping": true}"#, &mut line);
+    assert_eq!(r.get("pong").unwrap().as_bool(), Some(true));
+
+    stop.store(true, Ordering::Relaxed);
+    drop(reader);
+    drop(writer);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn server_closes_connection_on_oversized_line_and_frees_sessions() {
+    // A line over the 1 MiB cap closes the connection (a newline-free
+    // flood must not grow server memory without bound) — and the sessions
+    // that connection owned are released, keeping the table consistent.
+    use std::io::{BufRead, BufReader, Read, Write};
+
+    let cfg = small_cfg(38);
+    let mut rng = Rng::new(38);
+    let model = build_infer_model(CoreKind::Sam, &cfg, &mut rng, None);
+    let serve_cfg = server::ServeConfig {
+        workers: 2,
+        read_timeout: Duration::from_millis(10),
+        tick: Duration::from_micros(100),
+        ..server::ServeConfig::default()
+    };
+    let mgr = Arc::new(SessionManager::new(model, serve_cfg.session.clone()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = "127.0.0.1:47515";
+    let handle = {
+        let mgr = mgr.clone();
+        let stop = stop.clone();
+        let serve_cfg = serve_cfg.clone();
+        std::thread::spawn(move || server::serve(mgr, addr, &serve_cfg, stop))
+    };
+    std::thread::sleep(Duration::from_millis(100));
+
+    let stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+    writer.write_all(br#"{"open": {"seed": 6}}"#).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    let r = sam::util::json::Json::parse(line.trim()).unwrap();
+    assert!(r.get("session").is_some());
+    assert_eq!(mgr.session_count(), 1);
+
+    // One 2 MiB garbage line. The server must close the connection rather
+    // than answer, and release the session the connection owned.
+    let junk = vec![b'x'; 2 << 20];
+    writer.write_all(&junk).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut rest = Vec::new();
+    let n = reader.read_to_end(&mut rest).unwrap_or(0);
+    assert_eq!(n, 0, "oversized line must be dropped, not answered: {rest:?}");
+
+    // Session cleanup happens when a worker observes the closed state.
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while mgr.session_count() != 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(mgr.session_count(), 0, "dropped connection must free its sessions");
+
+    stop.store(true, Ordering::Relaxed);
+    drop(reader);
+    drop(writer);
     handle.join().unwrap().unwrap();
 }
