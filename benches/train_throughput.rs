@@ -1,0 +1,190 @@
+//! Training-throughput harness for the threads × batch path: episodes/s
+//! for the serial `Trainer`, the threads-only `ParallelTrainer`, and the
+//! `FusedTrainer` (`--workers W --batch-fuse B`) at several lane counts
+//! and memory sizes. All three follow the same canonical batch protocol,
+//! so the comparison is pure mechanism overhead vs fusion payoff.
+//!
+//! Writes `BENCH_train.json` at the repo root (CI uploads it as an
+//! artifact next to BENCH_kernels.json / BENCH_serve.json), including a
+//! `verdict` object: threads × batch at B=8 on the largest memory must
+//! clear ≥ 1.5× the threads-only episode rate.
+//!
+//!     cargo bench --bench train_throughput [-- --smoke] [-- --workers 4]
+
+use sam::bench::{save_bench_root, Table};
+use sam::cores::{CoreConfig, CoreKind};
+use sam::prelude::*;
+use sam::training::TrainLog;
+use sam::util::json::Json;
+use sam::util::timer::Timer;
+
+/// The B=8 threads×batch rate must clear this multiple of threads-only.
+const VERDICT_MIN_SPEEDUP: f64 = 1.5;
+const VERDICT_B: usize = 8;
+
+fn core_cfg(task: &dyn Task, mem_words: usize, smoke: bool) -> CoreConfig {
+    CoreConfig {
+        x_dim: task.x_dim(),
+        y_dim: task.y_dim(),
+        hidden: if smoke { 32 } else { 64 },
+        heads: 4,
+        word: 16,
+        mem_words,
+        k: 4,
+        ann: AnnKind::Linear,
+        seed: 21,
+        ..CoreConfig::default()
+    }
+}
+
+fn train_cfg(updates: usize, batch: usize, batch_fuse: usize) -> TrainConfig {
+    TrainConfig {
+        lr: 1e-4,
+        batch,
+        updates,
+        log_every: updates,
+        seed: 21,
+        verbose: false,
+        batch_fuse,
+    }
+}
+
+fn eps_per_s(log: &TrainLog, elapsed: f64) -> f64 {
+    if elapsed > 0.0 {
+        log.total_episodes as f64 / elapsed
+    } else {
+        0.0
+    }
+}
+
+fn run_serial(task: &dyn Task, cfg: &CoreConfig, tcfg: TrainConfig, level: usize) -> f64 {
+    let mut t = Trainer::new(
+        build_core(CoreKind::Sam, cfg, &mut Rng::new(cfg.seed)),
+        Box::new(RmsProp::new(1e-4)),
+        tcfg,
+    );
+    let mut cur = Curriculum::fixed(level);
+    let timer = Timer::start();
+    let log = t.run(task, &mut cur);
+    eps_per_s(&log, timer.elapsed_s())
+}
+
+fn run_threads(
+    task: &dyn Task,
+    cfg: &CoreConfig,
+    tcfg: TrainConfig,
+    workers: usize,
+    level: usize,
+) -> f64 {
+    let mut factory = |_i: usize| build_core(CoreKind::Sam, cfg, &mut Rng::new(cfg.seed));
+    let mut pt = ParallelTrainer::new(&mut factory, workers, Box::new(RmsProp::new(1e-4)), tcfg);
+    let mut cur = Curriculum::fixed(level);
+    let timer = Timer::start();
+    let log = pt.run(task, &mut cur);
+    eps_per_s(&log, timer.elapsed_s())
+}
+
+fn run_fused(
+    task: &dyn Task,
+    cfg: &CoreConfig,
+    tcfg: TrainConfig,
+    workers: usize,
+    level: usize,
+) -> f64 {
+    let mut ft =
+        FusedTrainer::new(CoreKind::Sam, cfg, workers, Box::new(RmsProp::new(1e-4)), tcfg);
+    let mut cur = Curriculum::fixed(level);
+    let timer = Timer::start();
+    let log = ft.run(task, &mut cur);
+    eps_per_s(&log, timer.elapsed_s())
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let workers = args.usize_or("workers", if smoke { 2 } else { 4 });
+    let updates = args.usize_or("updates", if smoke { 3 } else { 12 });
+    let level = args.usize_or("level", if smoke { 4 } else { 8 });
+    let lane_counts: Vec<usize> = vec![1, 4, 8];
+    // Episodes per update: enough to fill every worker's lanes at the
+    // largest B, so the fused groups actually run full.
+    let batch = workers * *lane_counts.last().unwrap();
+    let mem_sizes: Vec<usize> = if smoke { vec![1 << 10] } else { vec![1 << 14, 1 << 16] };
+
+    let task = CopyTask::new(8);
+    let mut table = Table::new(&["N", "mode", "episodes/s", "vs threads-only"]);
+    let mut config_rows = Vec::new();
+    let mut verdict_speedup = 0.0f64;
+    let mut verdict_n = 0usize;
+
+    for &n in &mem_sizes {
+        let cfg = core_cfg(&task, n, smoke);
+        let serial = run_serial(&task, &cfg, train_cfg(updates, batch, 1), level);
+        let threads = run_threads(&task, &cfg, train_cfg(updates, batch, 1), workers, level);
+        table.row(vec![n.to_string(), "serial".into(), format!("{serial:.1}"), "-".into()]);
+        table.row(vec![
+            n.to_string(),
+            format!("threads x{workers}"),
+            format!("{threads:.1}"),
+            "1.00x".into(),
+        ]);
+        let mut lane_rows = Vec::new();
+        for &b in &lane_counts {
+            let fused = run_fused(&task, &cfg, train_cfg(updates, batch, b), workers, level);
+            let speedup = if threads > 0.0 { fused / threads } else { 0.0 };
+            table.row(vec![
+                n.to_string(),
+                format!("threads x{workers} b{b}"),
+                format!("{fused:.1}"),
+                format!("{speedup:.2}x"),
+            ]);
+            lane_rows.push(Json::obj(vec![
+                ("batch_fuse", Json::num(b as f64)),
+                ("episodes_per_s", Json::num(fused)),
+                ("speedup_vs_threads", Json::num(speedup)),
+            ]));
+            if b == VERDICT_B {
+                // Verdict taken at the largest memory: that is where the
+                // merged ANN dispatch and fused GEMVs have the most to win.
+                verdict_speedup = speedup;
+                verdict_n = n;
+            }
+        }
+        config_rows.push(Json::obj(vec![
+            ("mem_words", Json::num(n as f64)),
+            ("serial_episodes_per_s", Json::num(serial)),
+            ("threads_episodes_per_s", Json::num(threads)),
+            ("fused", Json::Arr(lane_rows)),
+        ]));
+    }
+    table.print();
+
+    let pass = verdict_speedup >= VERDICT_MIN_SPEEDUP;
+    println!(
+        "\nverdict: threads x{workers} b{VERDICT_B} at N={verdict_n}: {verdict_speedup:.2}x \
+         vs threads-only (need >= {VERDICT_MIN_SPEEDUP:.1}x) -> {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    save_bench_root(
+        "train",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke)),
+            ("workers", Json::num(workers as f64)),
+            ("updates", Json::num(updates as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("level", Json::num(level as f64)),
+            ("configs", Json::Arr(config_rows)),
+            (
+                "verdict",
+                Json::obj(vec![
+                    ("batch_fuse", Json::num(VERDICT_B as f64)),
+                    ("mem_words", Json::num(verdict_n as f64)),
+                    ("speedup_vs_threads", Json::num(verdict_speedup)),
+                    ("min_required", Json::num(VERDICT_MIN_SPEEDUP)),
+                    ("pass", Json::Bool(pass)),
+                ]),
+            ),
+        ]),
+    );
+}

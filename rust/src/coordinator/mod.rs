@@ -13,6 +13,7 @@ use crate::tasks::{
     sort::PrioritySort, Task,
 };
 use crate::tensor::rowcodec::RowFormat;
+use crate::training::batched::FusedTrainer;
 use crate::training::workers::ParallelTrainer;
 use crate::training::{TrainConfig, Trainer, TrainLog};
 use crate::util::args::Args;
@@ -98,6 +99,10 @@ impl ExperimentConfig {
             log_every: args.usize_or("log-every", 10),
             seed: args.u64_or("seed", 1) ^ 0x5555,
             verbose: !args.has("quiet"),
+            // Episode lanes fused per worker through the batched training
+            // tick (1 = the serial per-episode path). Same seed ⇒ same
+            // result at any B for ann=linear; see `training::batched`.
+            batch_fuse: args.usize_or("batch-fuse", 1).max(1),
         };
         Ok(ExperimentConfig {
             core,
@@ -161,10 +166,22 @@ pub fn build_parallel_trainer(cfg: &ExperimentConfig, task: &dyn Task) -> Parall
     ParallelTrainer::new(&mut factory, cfg.workers, make_optimizer(cfg), cfg.train_cfg.clone())
 }
 
+/// Build the threads × batch trainer: `cfg.workers` threads, each fusing
+/// up to `train_cfg.batch_fuse` episode lanes per tick (all lanes are
+/// identical replicas; see `training::batched` for the determinism
+/// contract).
+pub fn build_fused_trainer(cfg: &ExperimentConfig, task: &dyn Task) -> FusedTrainer {
+    let core_cfg = resolved_core_cfg(cfg, task);
+    FusedTrainer::new(cfg.core, &core_cfg, cfg.workers, make_optimizer(cfg), cfg.train_cfg.clone())
+}
+
 /// Run a full training experiment; returns (trainer, log). With
-/// `cfg.workers > 1` training runs on the threaded [`ParallelTrainer`] and
-/// the primary replica is handed back wrapped in a serial [`Trainer`] so
-/// checkpointing/eval flows are identical either way.
+/// `--batch-fuse B > 1` training runs on the lane-fused [`FusedTrainer`]
+/// (threads × batch); otherwise `cfg.workers > 1` runs on the threaded
+/// [`ParallelTrainer`]. Either way the primary replica is handed back
+/// wrapped in a serial [`Trainer`] so checkpointing/eval flows are
+/// identical, and a fixed seed gives bit-identical results across all
+/// three paths for `ann=linear`.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<(Trainer, TrainLog)> {
     let task = build_task(&cfg.task)?;
     let mut curriculum = match cfg.curriculum_max {
@@ -173,6 +190,12 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<(Trainer, TrainLog)> {
         }
         None => Curriculum::fixed(task.base_level()),
     };
+    if cfg.train_cfg.batch_fuse > 1 {
+        let mut ft = build_fused_trainer(cfg, task.as_ref());
+        let log = ft.run(task.as_ref(), &mut curriculum);
+        let (core, opt) = ft.into_primary();
+        return Ok((Trainer::new(core, opt, cfg.train_cfg.clone()), log));
+    }
     if cfg.workers > 1 {
         let mut pt = build_parallel_trainer(cfg, task.as_ref());
         let log = pt.run(task.as_ref(), &mut curriculum);
@@ -396,6 +419,32 @@ mod tests {
         assert_eq!(ExperimentConfig::from_args(&args).unwrap().workers, 4);
         let args = Args::parse("--workers 0".split_whitespace().map(String::from));
         assert_eq!(ExperimentConfig::from_args(&args).unwrap().workers, 1);
+    }
+
+    #[test]
+    fn batch_fuse_flag_parsed_and_defaulted() {
+        let args = Args::parse(Vec::<String>::new());
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().train_cfg.batch_fuse, 1);
+        let args = Args::parse("--batch-fuse 8".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().train_cfg.batch_fuse, 8);
+        let args = Args::parse("--batch-fuse 0".split_whitespace().map(String::from));
+        assert_eq!(ExperimentConfig::from_args(&args).unwrap().train_cfg.batch_fuse, 1);
+    }
+
+    #[test]
+    fn run_experiment_fused_path() {
+        let args = Args::parse(
+            "--model sam --task copy --hidden 8 --memory 8 --word 6 --heads 1 --k 2 \
+             --batch 3 --updates 3 --workers 2 --batch-fuse 2 --quiet"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let cfg = ExperimentConfig::from_args(&args).unwrap();
+        let (mut trainer, log) = run_experiment(&cfg).unwrap();
+        assert_eq!(log.total_episodes, 9);
+        let task = build_task("copy").unwrap();
+        let errs = trainer.evaluate(task.as_ref(), 2, 2, 7);
+        assert!(errs >= 0.0);
     }
 
     #[test]

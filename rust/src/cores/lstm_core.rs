@@ -2,7 +2,7 @@
 //! Uses the same controller width and output projection as the MANNs so the
 //! comparison isolates the memory.
 
-use super::{Core, CoreConfig};
+use super::{BatchCore, Core, CoreConfig, LaneWeights};
 use crate::nn::linear::Linear;
 use crate::nn::lstm::{Lstm, LstmState};
 use crate::nn::param::{HasParams, Param};
@@ -128,6 +128,74 @@ impl Core for LstmCore {
     }
 }
 
+/// The dense witness for the batched training path: no head projection, no
+/// memory phase — just the cell and the output projection, fused across
+/// lanes. Exercises the `head = None` legs of the batched ticks.
+impl BatchCore for LstmCore {
+    fn cell_in_dim(&self) -> usize {
+        self.x_dim
+    }
+
+    fn cell_hidden(&self) -> usize {
+        self.lstm.hidden
+    }
+
+    fn head_param_dim(&self) -> usize {
+        0
+    }
+
+    fn out_in_dim(&self) -> usize {
+        self.out.in_dim()
+    }
+
+    fn weights(&self) -> LaneWeights<'_> {
+        LaneWeights {
+            wx: &self.lstm.wx.w,
+            wh: &self.lstm.wh.w,
+            head: None,
+            out: (&self.out.w.w, &self.out.b.w.data),
+        }
+    }
+
+    fn stage_input(&self, x: &[f32], x_row: &mut [f32], h_row: &mut [f32]) {
+        x_row.copy_from_slice(x);
+        h_row.copy_from_slice(&self.lstm.h);
+    }
+
+    fn cell_step(&mut self, x_row: &[f32], zx_row: &mut [f32], zh_row: &[f32]) {
+        self.steps += 1;
+        for (zv, (bv, zhv)) in zx_row.iter_mut().zip(self.lstm.b.w.data.iter().zip(zh_row)) {
+            *zv = (*zv + bv) + zhv;
+        }
+        self.lstm.step_with_z(x_row, zx_row);
+    }
+
+    fn h(&self) -> &[f32] {
+        &self.lstm.h
+    }
+
+    fn stage_output(&self, o_row: &mut [f32]) {
+        o_row.copy_from_slice(&self.lstm.h);
+    }
+
+    fn note_forward_out(&mut self, o_row: &[f32]) {
+        self.out.note_forward(o_row);
+    }
+
+    fn note_output_backward(&mut self, dy: &[f32], _d_o_row: &[f32]) {
+        self.out.note_backward(dy);
+    }
+
+    fn backward_cell_z(&mut self, dh_row: &mut [f32], dz_row: &mut [f32]) {
+        self.lstm.backward_z_into(dh_row, dz_row);
+        self.steps -= 1;
+    }
+
+    fn finish_backward(&mut self, dz_row: &[f32], dh_prev_row: &[f32], _dx_row: &[f32]) {
+        self.lstm.backward_finish(dz_row, dh_prev_row);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +216,86 @@ mod tests {
             check_core_gradients(&mut core, &xs, &ts, &mut rng, 8, 1e-2, 0.15);
         assert!(checked >= 30);
         assert_eq!(failed, 0, "{failed}/{checked} gradient checks failed");
+    }
+
+    /// Dense witness for the batched training ticks: ragged lanes driven in
+    /// lockstep through `train_tick_forward`/`train_tick_backward` produce
+    /// bit-identical outputs AND parameter gradients to the serial
+    /// `forward`/`backward` path.
+    #[test]
+    fn batched_ticks_match_serial_core_bitwise() {
+        use crate::cores::{train_tick_backward, train_tick_forward, TrainBatch};
+        let cfg = CoreConfig { x_dim: 4, y_dim: 3, hidden: 8, ..CoreConfig::default() };
+        let lens = [5usize, 3, 5];
+        let t_max = 5;
+        let mut lanes: Vec<LstmCore> =
+            (0..3).map(|i| LstmCore::new(&cfg, &mut Rng::new(50 + i))).collect();
+        let mut serial: Vec<LstmCore> =
+            (0..3).map(|i| LstmCore::new(&cfg, &mut Rng::new(50 + i))).collect();
+        let mut data_rng = Rng::new(7);
+        let mut mk = |len: usize, dim: usize| -> Vec<Vec<f32>> {
+            (0..len).map(|_| (0..dim).map(|_| data_rng.uniform_in(-1.0, 1.0)).collect()).collect()
+        };
+        let xs: Vec<Vec<Vec<f32>>> = lens.iter().map(|&len| mk(len, 4)).collect();
+        let dys: Vec<Vec<Vec<f32>>> = lens.iter().map(|&len| mk(len, 3)).collect();
+
+        // Serial reference.
+        let mut ys_ref: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (l, core) in serial.iter_mut().enumerate() {
+            core.reset();
+            let mut ys = Vec::new();
+            for x in &xs[l] {
+                ys.push(core.forward(x));
+            }
+            for dy in dys[l].iter().rev() {
+                core.backward(dy);
+            }
+            ys_ref.push(ys);
+        }
+
+        // Batched lockstep.
+        for lane in lanes.iter_mut() {
+            lane.reset();
+        }
+        let mut batch = TrainBatch::new();
+        let mut ys_bat: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 3];
+        for t in 0..t_max {
+            let step_xs: Vec<Option<&[f32]>> =
+                (0..3).map(|l| xs[l].get(t).map(|v| v.as_slice())).collect();
+            train_tick_forward(&mut lanes, &mut batch, &step_xs);
+            for (l, &len) in lens.iter().enumerate() {
+                if t < len {
+                    ys_bat[l].push(batch.y_row(l).to_vec());
+                }
+            }
+        }
+        for t in (0..t_max).rev() {
+            let active: Vec<bool> = lens.iter().map(|&len| t < len).collect();
+            batch.stage_dy(3, 3);
+            for (l, &len) in lens.iter().enumerate() {
+                if t < len {
+                    batch.dy_row_mut(l).copy_from_slice(&dys[l][t]);
+                }
+            }
+            train_tick_backward(&mut lanes, &mut batch, &active);
+        }
+
+        for l in 0..3 {
+            assert_eq!(ys_ref[l].len(), ys_bat[l].len());
+            for (a, b) in ys_ref[l].iter().zip(&ys_bat[l]) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "lane {l} output mismatch");
+                }
+            }
+            let mut ga: Vec<f32> = Vec::new();
+            serial[l].visit_params(&mut |p| ga.extend_from_slice(&p.g.data));
+            let mut gb: Vec<f32> = Vec::new();
+            lanes[l].visit_params(&mut |p| gb.extend_from_slice(&p.g.data));
+            assert_eq!(ga.len(), gb.len());
+            for (x, y) in ga.iter().zip(&gb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "lane {l} grad mismatch");
+            }
+        }
     }
 
     #[test]

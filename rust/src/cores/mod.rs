@@ -15,11 +15,13 @@ pub mod sam;
 pub mod sdnc;
 
 use crate::ann::AnnKind;
+use crate::memory::sharded::SHARD_PARALLEL_MIN_ROWS;
 use crate::nn::linear::Linear;
 use crate::nn::lstm::{Lstm, LstmState};
 use crate::nn::param::{HasParams, Param};
-use crate::tensor::matrix::{gemm_nt, Matrix, GEMM_ROW_TILE};
+use crate::tensor::matrix::{gemm_nt, gemm_rowsweep, gemv_many, Matrix, GEMM_ROW_TILE};
 use crate::tensor::rowcodec::RowFormat;
+use crate::util::pool::ShardPool;
 use crate::util::rng::Rng;
 
 /// Which model to build.
@@ -363,6 +365,109 @@ impl Controller {
         self.lstm.cache_bytes() + self.head_lin.cache_bytes() + self.out_lin.cache_bytes()
     }
 
+    // -- batched-training staging hooks (see `train_tick_forward`) ----------
+    //
+    // These split `step_hot`/`output_hot`/`backward_output_hot`/
+    // `backward_step_hot` at their GEMV seams so the batched trainer can run
+    // each projection as one lane-fused kernel across B episode lanes while
+    // every per-lane op keeps the exact serial float sequence.
+
+    /// F1: write this lane's [x_t, r_{t-1}..] into `x_row` and h_{t-1} into
+    /// `h_row` (the serial `step_hot` gather, landing in batch rows).
+    pub fn stage_input_row(
+        &self,
+        x: &[f32],
+        r_prev: &[Vec<f32>],
+        x_row: &mut [f32],
+        h_row: &mut [f32],
+    ) {
+        x_row[..x.len()].copy_from_slice(x);
+        let mut off = x.len();
+        for r in r_prev {
+            x_row[off..off + r.len()].copy_from_slice(r);
+            off += r.len();
+        }
+        debug_assert_eq!(off, self.lstm.input);
+        h_row.copy_from_slice(&self.lstm.h);
+    }
+
+    /// F3: assemble z = (zx + b) + zh in `zx_row` (the serial add order of
+    /// `step_with_zx`: bias onto zx, then complete recurrent dots) and run
+    /// the taped cell step; h_t lands in `self.lstm.h`.
+    pub fn cell_step_row(&mut self, x_row: &[f32], zx_row: &mut [f32], zh_row: &[f32]) {
+        for (zv, (bv, zhv)) in zx_row.iter_mut().zip(self.lstm.b.w.data.iter().zip(zh_row)) {
+            *zv = (*zv + bv) + zhv;
+        }
+        self.lstm.step_with_z(x_row, zx_row);
+    }
+
+    /// F5: head-projection bookkeeping for the lane-fused head GEMV — push
+    /// the activation cache entry and stash the lane's raw head params.
+    pub fn note_head_forward(&mut self, p_row: &[f32]) {
+        self.head_lin.note_forward(&self.lstm.h);
+        self.p_buf.clear();
+        self.p_buf.extend_from_slice(p_row);
+    }
+
+    /// F7: write [h_t, r_t..] into `o_row` (the serial `output_hot` gather).
+    pub fn stage_output_row(&self, reads: &[Vec<f32>], o_row: &mut [f32]) {
+        o_row[..self.hidden].copy_from_slice(&self.lstm.h);
+        let mut off = self.hidden;
+        for r in reads {
+            o_row[off..off + r.len()].copy_from_slice(r);
+            off += r.len();
+        }
+    }
+
+    /// F9: output-projection bookkeeping — push the activation cache entry.
+    pub fn note_forward_out(&mut self, o_row: &[f32]) {
+        self.out_lin.note_forward(o_row);
+    }
+
+    /// B3: output-projection backward bookkeeping + the `backward_output_hot`
+    /// split of the swept d[h,r..] row into dh / per-head dreads.
+    pub fn note_output_backward(&mut self, dy: &[f32], d_o_row: &[f32]) {
+        self.out_lin.note_backward(dy);
+        self.dh_buf.clear();
+        self.dh_buf.extend_from_slice(&d_o_row[..self.hidden]);
+        for hd in 0..self.heads {
+            let seg = &d_o_row[self.hidden + hd * self.word..self.hidden + (hd + 1) * self.word];
+            self.dreads[hd].clear();
+            self.dreads[hd].extend_from_slice(seg);
+        }
+    }
+
+    /// B6: head backward bookkeeping + dh assembly + the elementwise half of
+    /// the cell backward. `dh_row` arrives as this lane's dP·W_head sweep
+    /// result and gets the stored output-side dh added (the serial
+    /// `backward_step_hot` order); the cell's gate gradients land in
+    /// `dz_row`.
+    pub fn backward_cell_z_row(&mut self, dp: &[f32], dh_row: &mut [f32], dz_row: &mut [f32]) {
+        self.head_lin.note_backward(dp);
+        for (a, b) in dh_row.iter_mut().zip(&self.dh_buf) {
+            *a += b;
+        }
+        self.lstm.backward_z_into(dh_row, dz_row);
+    }
+
+    /// B8: queue the cell's weight-grad rows, carry dh_next, and split
+    /// d(r_prev) per head out of the swept dZ·Wx row.
+    pub fn finish_backward_row(
+        &mut self,
+        dz_row: &[f32],
+        dh_prev_row: &[f32],
+        dx_row: &[f32],
+        dr_out: &mut [Vec<f32>],
+    ) {
+        self.lstm.backward_finish(dz_row, dh_prev_row);
+        let x_dim = dx_row.len() - self.heads * self.word;
+        for (hd, dr) in dr_out.iter_mut().enumerate() {
+            let seg = &dx_row[x_dim + hd * self.word..x_dim + (hd + 1) * self.word];
+            dr.clear();
+            dr.extend_from_slice(seg);
+        }
+    }
+
     // -- forward-only inference (shared weights, detached state) ------------
 
     /// Fresh zeroed per-session controller state.
@@ -603,6 +708,400 @@ pub fn infer_tick<S, M>(
     for (i, y) in ys.iter_mut().enumerate() {
         y.clear();
         y.extend_from_slice(batch.y.row(i));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched-episode training (the threads × batch path)
+// ---------------------------------------------------------------------------
+
+/// Borrowed lane-0 weight views for the batched training ticks. Every lane
+/// holds identical parameter values (the trainer re-broadcasts after each
+/// optimizer step), so the fused kernels stream lane 0's weights across all
+/// lanes' rows.
+pub struct LaneWeights<'a> {
+    /// Cell input weights (4H × in_dim).
+    pub wx: &'a Matrix,
+    /// Cell recurrent weights (4H × H).
+    pub wh: &'a Matrix,
+    /// Head projection (weights, bias) — `None` for the dense LSTM witness,
+    /// which has no head projection and no memory phase.
+    pub head: Option<(&'a Matrix, &'a [f32])>,
+    /// Output projection (weights, bias).
+    pub out: (&'a Matrix, &'a [f32]),
+}
+
+/// The seams a core exposes so the batched trainer can drive B independent
+/// episode lanes of it in lockstep (see [`train_tick_forward`] /
+/// [`train_tick_backward`]). Each lane is a full core instance — private
+/// memory, journal, tape — and only the controller's dense projections fuse
+/// across lanes. Every per-lane method replays the exact float-op sequence
+/// of the serial [`Core`] path, which is what makes batched training
+/// bit-identical to serial (rust/tests/batch_parity.rs).
+pub trait BatchCore: Core {
+    /// Cell input width ([x, r_prev..]).
+    fn cell_in_dim(&self) -> usize;
+    /// Controller LSTM width.
+    fn cell_hidden(&self) -> usize;
+    /// Raw head-parameter width (0 for the dense LSTM witness).
+    fn head_param_dim(&self) -> usize;
+    /// Output-projection input width ([h, r..]).
+    fn out_in_dim(&self) -> usize;
+    /// Weight views for the fused kernels.
+    fn weights(&self) -> LaneWeights<'_>;
+    /// F1: write this lane's [x_t, r_{t-1}..] into `x_row` and h_{t-1} into
+    /// `h_row`.
+    fn stage_input(&self, x: &[f32], x_row: &mut [f32], h_row: &mut [f32]);
+    /// F3: assemble z = (zx + b) + zh in `zx_row` (serial add order) and run
+    /// the taped cell step; h_t lands in the cell.
+    fn cell_step(&mut self, x_row: &[f32], zx_row: &mut [f32], zh_row: &[f32]);
+    /// h_t after [`BatchCore::cell_step`].
+    fn h(&self) -> &[f32];
+    /// F5: head-projection bookkeeping — consume this lane's raw head
+    /// params from the fused head GEMV.
+    fn note_head_forward(&mut self, _p_row: &[f32]) {}
+    /// F6a: memory writes/links + content-query staging — everything up to
+    /// the ANN lookup. No-op for memoryless cores.
+    fn mem_stage(&mut self) {}
+    /// F6b: run the ANN fill staged by [`BatchCore::mem_stage`] (no-op when
+    /// nothing is staged). `nested` means the call is already on a
+    /// `ShardPool` worker, so the body must stay strictly serial.
+    fn ann_fill(&mut self, _nested: bool) {}
+    /// Memory rows the staged fill will scan (the merged-dispatch
+    /// heuristic); 0 when nothing is staged.
+    fn ann_fill_rows(&self) -> usize {
+        0
+    }
+    /// F6c: finish the content reads from the filled neighbour lists
+    /// (updates r_t). No-op for memoryless cores.
+    fn mem_finish(&mut self) {}
+    /// F7: write [h_t, r_t..] into `o_row`.
+    fn stage_output(&self, o_row: &mut [f32]);
+    /// F9: output-projection bookkeeping — push `o_row` on the activation
+    /// cache.
+    fn note_forward_out(&mut self, o_row: &[f32]);
+    /// B3: output-projection backward bookkeeping + split the swept
+    /// `d_o_row` into dh / per-head dreads.
+    fn note_output_backward(&mut self, dy: &[f32], d_o_row: &[f32]);
+    /// B4: memory backward between the output and cell backwards (consumes
+    /// dreads, fills the lane's dp). No-op for memoryless cores.
+    fn backward_mem(&mut self) {}
+    /// The lane's head-parameter gradient after [`BatchCore::backward_mem`].
+    fn dp(&self) -> &[f32] {
+        &[]
+    }
+    /// B6: head backward bookkeeping + dh assembly + the elementwise cell
+    /// backward; writes this lane's dZ row. `dh_row` arrives as the lane's
+    /// dP·W_head sweep result (or the raw output-side dh when there is no
+    /// head projection).
+    fn backward_cell_z(&mut self, dh_row: &mut [f32], dz_row: &mut [f32]);
+    /// B8: queue the cell's weight-grad rows (`dz_row`), carry dh_next
+    /// (`dh_prev_row`), split d(r_prev) from the swept `dx_row`.
+    fn finish_backward(&mut self, dz_row: &[f32], dh_prev_row: &[f32], dx_row: &[f32]);
+}
+
+/// Reusable gather/scatter scratch for the batched *training* ticks, the
+/// training analogue of [`CtrlBatch`]. One per worker lane-group; capacities
+/// converge after the first step (the steady-state tick allocates nothing —
+/// rust/tests/zero_alloc.rs).
+pub struct TrainBatch {
+    x_in: Matrix,
+    h: Matrix,
+    z: Matrix,
+    zh: Matrix,
+    p: Matrix,
+    o_in: Matrix,
+    y: Matrix,
+    dy: Matrix,
+    d_o: Matrix,
+    dp: Matrix,
+    dh_tot: Matrix,
+    dz: Matrix,
+    dx_in: Matrix,
+    dh_prev: Matrix,
+    /// Zero-sized companion slice for the merged-ANN `ShardPool::run2`
+    /// dispatch (a `Vec<()>` never allocates).
+    fill_dummy: Vec<()>,
+}
+
+impl Default for TrainBatch {
+    fn default() -> Self {
+        TrainBatch::new()
+    }
+}
+
+impl TrainBatch {
+    pub fn new() -> TrainBatch {
+        TrainBatch {
+            x_in: Matrix::zeros(0, 0),
+            h: Matrix::zeros(0, 0),
+            z: Matrix::zeros(0, 0),
+            zh: Matrix::zeros(0, 0),
+            p: Matrix::zeros(0, 0),
+            o_in: Matrix::zeros(0, 0),
+            y: Matrix::zeros(0, 0),
+            dy: Matrix::zeros(0, 0),
+            d_o: Matrix::zeros(0, 0),
+            dp: Matrix::zeros(0, 0),
+            dh_tot: Matrix::zeros(0, 0),
+            dz: Matrix::zeros(0, 0),
+            dx_in: Matrix::zeros(0, 0),
+            dh_prev: Matrix::zeros(0, 0),
+            fill_dummy: Vec::new(),
+        }
+    }
+
+    /// Lane `lane`'s output row after [`train_tick_forward`].
+    pub fn y_row(&self, lane: usize) -> &[f32] {
+        self.y.row(lane)
+    }
+
+    /// Size + zero the dY staging ahead of a backward tick.
+    pub fn stage_dy(&mut self, lanes: usize, y_dim: usize) {
+        fit(&mut self.dy, lanes, y_dim);
+    }
+
+    /// Lane `lane`'s dY row — write the loss gradient here after
+    /// [`TrainBatch::stage_dy`]; idle lanes stay zero.
+    pub fn dy_row_mut(&mut self, lane: usize) -> &mut [f32] {
+        self.dy.row_mut(lane)
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.x_in.heap_bytes()
+            + self.h.heap_bytes()
+            + self.z.heap_bytes()
+            + self.zh.heap_bytes()
+            + self.p.heap_bytes()
+            + self.o_in.heap_bytes()
+            + self.y.heap_bytes()
+            + self.dy.heap_bytes()
+            + self.d_o.heap_bytes()
+            + self.dp.heap_bytes()
+            + self.dh_tot.heap_bytes()
+            + self.dz.heap_bytes()
+            + self.dx_in.heap_bytes()
+            + self.dh_prev.heap_bytes()
+    }
+}
+
+/// One batched *training* tick over B lanes (independent episodes) of the
+/// same core kind: each controller projection — input gates, recurrent
+/// gates, head parameters, output — runs as ONE lane-fused kernel
+/// ([`gemv_many`]) across all lanes, with the per-lane nonlinearity / tape /
+/// memory phases in between. The ANN lookups of all lanes are merged into a
+/// single `ShardPool` dispatch when the combined scan is large enough.
+///
+/// Unlike the serving tick ([`infer_tick`]: micro-kernel GEMMs, tolerance
+/// contract), the training tick uses the order-preserving lane-fused
+/// kernels, so every lane's episode is bit-identical to running it through
+/// the serial [`Core::forward_into`] / [`Core::backward`] path at any B and
+/// any worker count — the contract pinned by rust/tests/batch_parity.rs and
+/// documented in DESIGN.md "Batched training".
+///
+/// `xs[l] = None` marks a lane idle this step (episodes in a batch may have
+/// different lengths): its rows stay zero, every per-lane phase skips it,
+/// and the fused kernels' arithmetic on its zero rows is never observed.
+/// Lane outputs land in [`TrainBatch::y_row`].
+pub fn train_tick_forward<C: BatchCore>(
+    lanes: &mut [C],
+    batch: &mut TrainBatch,
+    xs: &[Option<&[f32]>],
+) {
+    let l = lanes.len();
+    assert!(l > 0, "train_tick_forward needs at least one lane");
+    assert_eq!(xs.len(), l);
+    let in_dim = lanes[0].cell_in_dim();
+    let hidden = lanes[0].cell_hidden();
+    let p_dim = lanes[0].head_param_dim();
+    let o_dim = lanes[0].out_in_dim();
+    let y_dim = lanes[0].y_dim();
+
+    // F1: gather [x, r_prev..] and h_{t-1} rows.
+    fit(&mut batch.x_in, l, in_dim);
+    fit(&mut batch.h, l, hidden);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if let Some(x) = xs[i] {
+            lane.stage_input(x, batch.x_in.row_mut(i), batch.h.row_mut(i));
+        }
+    }
+
+    // F2: gate pre-activations, lane-fused: Zx = lanes·Wxᵀ, Zh = lanes·Whᵀ.
+    fit(&mut batch.z, l, 4 * hidden);
+    fit(&mut batch.zh, l, 4 * hidden);
+    {
+        let w = lanes[0].weights();
+        gemv_many(&mut batch.z, w.wx, &batch.x_in);
+        gemv_many(&mut batch.zh, w.wh, &batch.h);
+    }
+
+    // F3: per-lane z assembly + gate nonlinearity + tape push; the updated
+    // h's re-fill batch.h for the head projection.
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if xs[i].is_none() {
+            continue;
+        }
+        lane.cell_step(batch.x_in.row(i), batch.z.row_mut(i), batch.zh.row(i));
+        batch.h.row_mut(i).copy_from_slice(lane.h());
+    }
+
+    // F4–F6: head parameters + the memory phase (skipped wholesale by the
+    // dense witness, which has neither).
+    fit(&mut batch.p, l, p_dim);
+    if p_dim > 0 {
+        {
+            let w = lanes[0].weights();
+            let (hw, hb) = w.head.expect("head_param_dim > 0 without head weights");
+            for i in 0..l {
+                if xs[i].is_some() {
+                    batch.p.row_mut(i).copy_from_slice(hb);
+                }
+            }
+            // F4: P = bias + H'·W_headᵀ, lane-fused.
+            gemv_many(&mut batch.p, hw, &batch.h);
+        }
+        // F5 + F6a: per-lane head bookkeeping, then memory writes/links and
+        // content-query staging.
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if xs[i].is_none() {
+                continue;
+            }
+            lane.note_head_forward(batch.p.row(i));
+            lane.mem_stage();
+        }
+        // F6b: the merged ANN fill — one pool dispatch across all lanes'
+        // staged queries when the combined scan is worth fanning out;
+        // otherwise each lane fills through its engine's own path (which
+        // still shard-parallelizes a single big memory). Fills write
+        // disjoint per-engine neighbour lists, so dispatch shape never
+        // affects bits.
+        let active = xs.iter().filter(|x| x.is_some()).count();
+        let rows: usize = lanes.iter().map(|c| c.ann_fill_rows()).sum();
+        if active > 1 && rows >= SHARD_PARALLEL_MIN_ROWS {
+            batch.fill_dummy.resize(l, ());
+            ShardPool::global().run2(lanes, &mut batch.fill_dummy, &(), |_i, lane, _d, _ctx| {
+                lane.ann_fill(true);
+            });
+        } else {
+            for lane in lanes.iter_mut() {
+                lane.ann_fill(false);
+            }
+        }
+        // F6c: finish the reads.
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if xs[i].is_none() {
+                continue;
+            }
+            lane.mem_finish();
+        }
+    }
+
+    // F7: gather [h_t, r_t..] rows + output bias rows.
+    fit(&mut batch.o_in, l, o_dim);
+    fit(&mut batch.y, l, y_dim);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if xs[i].is_none() {
+            continue;
+        }
+        lane.stage_output(batch.o_in.row_mut(i));
+    }
+    {
+        let w = lanes[0].weights();
+        let (ow, ob) = w.out;
+        for i in 0..l {
+            if xs[i].is_some() {
+                batch.y.row_mut(i).copy_from_slice(ob);
+            }
+        }
+        // F8: Y = bias + O·W_outᵀ, lane-fused.
+        gemv_many(&mut batch.y, ow, &batch.o_in);
+    }
+    // F9: per-lane output bookkeeping.
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if xs[i].is_none() {
+            continue;
+        }
+        lane.note_forward_out(batch.o_in.row(i));
+    }
+}
+
+/// The backward half of the batched training tick: call once per forward
+/// tick, in reverse step order, with the loss gradients staged via
+/// [`TrainBatch::stage_dy`] / [`TrainBatch::dy_row_mut`] (idle lanes' rows
+/// left zero and `active[l] = false`). The three weight sweeps — dY·W_out,
+/// dP·W_head, dZ·{Wx,Wh} — each run as one lane-fused [`gemm_rowsweep`];
+/// zero rows are skipped wholesale by its `!= 0.0` guard, so idle lanes
+/// cost nothing.
+pub fn train_tick_backward<C: BatchCore>(
+    lanes: &mut [C],
+    batch: &mut TrainBatch,
+    active: &[bool],
+) {
+    let l = lanes.len();
+    assert!(l > 0, "train_tick_backward needs at least one lane");
+    assert_eq!(active.len(), l);
+    assert_eq!(batch.dy.rows, l, "stage_dy must size dY before the backward tick");
+    let in_dim = lanes[0].cell_in_dim();
+    let hidden = lanes[0].cell_hidden();
+    let p_dim = lanes[0].head_param_dim();
+    let o_dim = lanes[0].out_in_dim();
+
+    // B2: d[h,r..] = dY·W_out, lane-fused.
+    fit(&mut batch.d_o, l, o_dim);
+    {
+        let w = lanes[0].weights();
+        gemm_rowsweep(&mut batch.d_o, &batch.dy, w.out.0);
+    }
+    // B3 + B4: per-lane output bookkeeping (split dh/dreads) + memory
+    // backward (fills the lane's dp).
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if !active[i] {
+            continue;
+        }
+        lane.note_output_backward(batch.dy.row(i), batch.d_o.row(i));
+        lane.backward_mem();
+    }
+    // B5: dH = dP·W_head, lane-fused, when the core has a head projection;
+    // the dense witness feeds d_o straight to the cell.
+    fit(&mut batch.dz, l, 4 * hidden);
+    if p_dim > 0 {
+        fit(&mut batch.dp, l, p_dim);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            if active[i] {
+                batch.dp.row_mut(i).copy_from_slice(lane.dp());
+            }
+        }
+        fit(&mut batch.dh_tot, l, hidden);
+        {
+            let w = lanes[0].weights();
+            let (hw, _) = w.head.expect("head_param_dim > 0 without head weights");
+            gemm_rowsweep(&mut batch.dh_tot, &batch.dp, hw);
+        }
+    }
+    // B6: per-lane dh assembly + elementwise cell backward → dZ rows.
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if !active[i] {
+            continue;
+        }
+        let dh_row =
+            if p_dim > 0 { batch.dh_tot.row_mut(i) } else { batch.d_o.row_mut(i) };
+        lane.backward_cell_z(dh_row, batch.dz.row_mut(i));
+    }
+    // B7: input/recurrent sweeps, lane-fused: dX_in = dZ·Wx, dH_prev = dZ·Wh.
+    fit(&mut batch.dx_in, l, in_dim);
+    fit(&mut batch.dh_prev, l, hidden);
+    {
+        let w = lanes[0].weights();
+        gemm_rowsweep(&mut batch.dx_in, &batch.dz, w.wx);
+        gemm_rowsweep(&mut batch.dh_prev, &batch.dz, w.wh);
+    }
+    // B8: per-lane finish — queue the cell's weight-grad rows, carry
+    // dh_next, split d(r_prev).
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if !active[i] {
+            continue;
+        }
+        lane.finish_backward(batch.dz.row(i), batch.dh_prev.row(i), batch.dx_in.row(i));
     }
 }
 

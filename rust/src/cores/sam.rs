@@ -22,7 +22,7 @@
 //! touch the allocator zero times (rust/tests/zero_alloc.rs).
 
 use super::addressing::{ContentRead, WriteGate};
-use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
+use super::{BatchCore, Controller, ControllerState, Core, CoreConfig, CtrlBatch, LaneWeights};
 use crate::memory::engine::TopKRead;
 use crate::memory::sharded::ShardedMemoryEngine;
 use crate::serving::spill::SessionSnapshot;
@@ -67,6 +67,10 @@ pub struct SamCore {
     w_read_prev: Vec<SparseVec>,
     r_prev: Vec<Vec<f32>>,
     tape: Vec<SamStep>,
+    /// The step under construction between `mem_stage_phase` and
+    /// `mem_finish_phase` (the batched tick interleaves other lanes'
+    /// phases in the gap; the serial forward runs the phases back to back).
+    staged_step: Option<SamStep>,
     // ---- carried backward state ----
     d_r: Vec<Vec<f32>>,
     d_wread: Vec<SparseVec>,
@@ -121,6 +125,7 @@ impl SamCore {
             w_read_prev: vec![SparseVec::new(); cfg.heads],
             r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
             tape: Vec::new(),
+            staged_step: None,
             d_r: vec![vec![0.0; cfg.word]; cfg.heads],
             d_wread: vec![SparseVec::new(); cfg.heads],
             ws: Workspace::new(),
@@ -272,6 +277,138 @@ impl SamCore {
             self.engine.recycle_content_read(h.read, &mut self.ws);
         }
         self.spare_steps.push(step);
+    }
+
+    // -- memory-phase seams (shared by the serial path and the batched
+    //    training tick; consume the raw head params in `self.ctrl`) --------
+
+    /// F6a: per-head gated writes (previous step's read weights, eq. 5) and
+    /// content-query staging — everything up to the ANN lookup.
+    fn mem_stage_phase(&mut self) {
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let mut step = self.spare_steps.pop().unwrap_or_else(|| SamStep { heads: Vec::new() });
+        debug_assert!(step.heads.is_empty());
+        for hi in 0..self.cfg.heads {
+            let (alpha_raw, gamma_raw) = {
+                let p = self.ctrl.head_params();
+                (p[hi * hd + 2 * w], p[hi * hd + 2 * w + 1])
+            };
+            let a = {
+                let p = self.ctrl.head_params();
+                self.ws.take_f32_copy(&p[hi * hd + w..hi * hd + 2 * w])
+            };
+            let gate = self.engine.sparse_write(
+                alpha_raw,
+                gamma_raw,
+                &self.w_read_prev[hi],
+                &a,
+                &mut self.ws,
+            );
+            step.heads.push(HeadStep {
+                gate,
+                w_read_used: std::mem::take(&mut self.w_read_prev[hi]),
+                write_word: a,
+                // placeholder read fields, filled by `mem_finish_phase`
+                read: ContentRead::empty(),
+                query: Vec::new(),
+            });
+        }
+        for hi in 0..self.cfg.heads {
+            let p = self.ctrl.head_params();
+            self.queries[hi].clear();
+            self.queries[hi].extend_from_slice(&p[hi * hd..hi * hd + w]);
+            self.betas[hi] = p[hi * hd + 2 * w + 2];
+        }
+        self.staged_step = Some(step);
+    }
+
+    /// F6b: run the ANN lookup over the staged queries into the engine's
+    /// neighbour lists. `nested` keeps the fill strictly serial (the batched
+    /// tick's merged dispatch already runs each lane on a pool worker).
+    fn ann_fill_phase(&mut self, nested: bool) {
+        if self.staged_step.is_none() {
+            return;
+        }
+        self.engine.ann_fill_neigh(&self.queries, nested);
+    }
+
+    /// F6c: finish the reads from the filled neighbour lists (post-write
+    /// memory M_t; eq. 2/4), update the recurrent read state and push the
+    /// completed step on the tape.
+    fn mem_finish_phase(&mut self) {
+        let mut step = self.staged_step.take().expect("mem_finish without mem_stage");
+        debug_assert!(self.topk_tmp.is_empty());
+        let mut topk = std::mem::take(&mut self.topk_tmp);
+        self.engine.read_topk_from_neigh(&self.queries, &self.betas, &mut topk, &mut self.ws);
+        for (hi, tk) in topk.drain(..).enumerate() {
+            self.w_read_prev[hi] = tk.weights;
+            self.r_prev[hi].clear();
+            self.r_prev[hi].extend_from_slice(&tk.r);
+            self.ws.recycle_f32(tk.r);
+            let hstep = &mut step.heads[hi];
+            hstep.read = tk.read;
+            hstep.query = self.ws.take_f32_copy(&self.queries[hi]);
+        }
+        self.topk_tmp = topk;
+        self.tape.push(step);
+    }
+
+    /// B4: memory backward for one step — read backward over M_t, then
+    /// write backward in reverse head order rolling memory back — filling
+    /// `self.dp_buf` with the raw head-parameter gradient.
+    fn backward_mem_phase(&mut self, step: &SamStep) {
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        self.dp_buf.clear();
+        self.dp_buf.resize(self.cfg.heads * hd, 0.0);
+
+        // --- read backward (memory is M_t here) ---
+        for (hi, hstep) in step.heads.iter().enumerate() {
+            // dr = dL/dr_t from the output + r_t's feed of step t+1's input.
+            self.dr_buf.clear();
+            self.dr_buf.extend_from_slice(&self.ctrl.dreads()[hi]);
+            axpy(&mut self.dr_buf, 1.0, &self.d_r[hi]);
+            // w̃^R_t also fed step t+1's write gate (carried d_wread).
+            self.dq_buf.clear();
+            self.dq_buf.resize(w, 0.0);
+            let mut dbeta_raw = 0.0;
+            self.engine.backward_read_topk(
+                &hstep.read,
+                &hstep.query,
+                &self.dr_buf,
+                &self.d_wread[hi],
+                &mut self.dq_buf,
+                &mut dbeta_raw,
+                &mut self.ws,
+            );
+            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+            dslice[..w].iter_mut().zip(&self.dq_buf).for_each(|(a, b)| *a += b);
+            dslice[2 * w + 2] += dbeta_raw;
+        }
+
+        // --- write backward (reverse head order, rolling memory back) ---
+        for hi in (0..self.cfg.heads).rev() {
+            let hstep = &step.heads[hi];
+            let (mut dar, mut dgr) = (0.0f32, 0.0f32);
+            self.da_buf.clear();
+            self.da_buf.resize(w, 0.0);
+            let dw_prev = self.engine.backward_write_into(
+                &hstep.gate,
+                &hstep.write_word,
+                &hstep.w_read_used,
+                &mut dar,
+                &mut dgr,
+                &mut self.da_buf,
+                &mut self.ws,
+            );
+            let old = std::mem::replace(&mut self.d_wread[hi], dw_prev);
+            self.ws.recycle_sparse(old);
+            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
+            dslice[w..2 * w].iter_mut().zip(&self.da_buf).for_each(|(x, d)| *x += d);
+            dslice[2 * w] += dar;
+            dslice[2 * w + 1] += dgr;
+        }
     }
 }
 
@@ -428,6 +565,9 @@ impl Core for SamCore {
 
     fn reset(&mut self) {
         self.ctrl.reset();
+        if let Some(step) = self.staged_step.take() {
+            self.recycle_step(step);
+        }
         while let Some(step) = self.tape.pop() {
             self.recycle_step(step);
         }
@@ -449,124 +589,20 @@ impl Core for SamCore {
     }
 
     fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
-        let w = self.cfg.word;
-        let hd = head_dim(w);
         self.ctrl.step_hot(x, &self.r_prev);
-        let mut step = self.spare_steps.pop().unwrap_or_else(|| SamStep { heads: Vec::new() });
-        debug_assert!(step.heads.is_empty());
-
-        // --- writes (use previous step's read weights, eq. 5) ---
-        for hi in 0..self.cfg.heads {
-            let (alpha_raw, gamma_raw) = {
-                let p = self.ctrl.head_params();
-                (p[hi * hd + 2 * w], p[hi * hd + 2 * w + 1])
-            };
-            let a = {
-                let p = self.ctrl.head_params();
-                self.ws.take_f32_copy(&p[hi * hd + w..hi * hd + 2 * w])
-            };
-            let gate = self.engine.sparse_write(
-                alpha_raw,
-                gamma_raw,
-                &self.w_read_prev[hi],
-                &a,
-                &mut self.ws,
-            );
-            step.heads.push(HeadStep {
-                gate,
-                w_read_used: std::mem::take(&mut self.w_read_prev[hi]),
-                write_word: a,
-                // placeholder read fields, filled below
-                read: ContentRead::empty(),
-                query: Vec::new(),
-            });
-        }
-
-        // --- reads (post-write memory M_t; one batched index traversal
-        //     answers every head) ---
-        for hi in 0..self.cfg.heads {
-            let p = self.ctrl.head_params();
-            self.queries[hi].clear();
-            self.queries[hi].extend_from_slice(&p[hi * hd..hi * hd + w]);
-            self.betas[hi] = p[hi * hd + 2 * w + 2];
-        }
-        debug_assert!(self.topk_tmp.is_empty());
-        let mut topk = std::mem::take(&mut self.topk_tmp);
-        self.engine.read_topk_into(&self.queries, &self.betas, &mut topk, &mut self.ws);
-        for (hi, tk) in topk.drain(..).enumerate() {
-            self.w_read_prev[hi] = tk.weights;
-            self.r_prev[hi].clear();
-            self.r_prev[hi].extend_from_slice(&tk.r);
-            self.ws.recycle_f32(tk.r);
-            let hstep = &mut step.heads[hi];
-            hstep.read = tk.read;
-            hstep.query = self.ws.take_f32_copy(&self.queries[hi]);
-        }
-        self.topk_tmp = topk;
-
+        // The same memory-phase seams the batched tick drives, back to back.
+        self.mem_stage_phase();
+        self.ann_fill_phase(false);
+        self.mem_finish_phase();
         self.ctrl.output_hot(&self.r_prev, y);
-        self.tape.push(step);
     }
 
     fn backward(&mut self, dy: &[f32]) {
         let step = self.tape.pop().expect("backward without forward");
-        let w = self.cfg.word;
-        let hd = head_dim(w);
         self.ctrl.backward_output_hot(dy);
-
-        self.dp_buf.clear();
-        self.dp_buf.resize(self.cfg.heads * hd, 0.0);
-
-        // --- read backward (memory is M_t here) ---
-        for (hi, hstep) in step.heads.iter().enumerate() {
-            // dr = dL/dr_t from the output + r_t's feed of step t+1's input.
-            self.dr_buf.clear();
-            self.dr_buf.extend_from_slice(&self.ctrl.dreads()[hi]);
-            axpy(&mut self.dr_buf, 1.0, &self.d_r[hi]);
-            // w̃^R_t also fed step t+1's write gate (carried d_wread).
-            self.dq_buf.clear();
-            self.dq_buf.resize(w, 0.0);
-            let mut dbeta_raw = 0.0;
-            self.engine.backward_read_topk(
-                &hstep.read,
-                &hstep.query,
-                &self.dr_buf,
-                &self.d_wread[hi],
-                &mut self.dq_buf,
-                &mut dbeta_raw,
-                &mut self.ws,
-            );
-            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
-            dslice[..w].iter_mut().zip(&self.dq_buf).for_each(|(a, b)| *a += b);
-            dslice[2 * w + 2] += dbeta_raw;
-        }
-
-        // --- write backward (reverse head order, rolling memory back) ---
-        for hi in (0..self.cfg.heads).rev() {
-            let hstep = &step.heads[hi];
-            let (mut dar, mut dgr) = (0.0f32, 0.0f32);
-            self.da_buf.clear();
-            self.da_buf.resize(w, 0.0);
-            let dw_prev = self.engine.backward_write_into(
-                &hstep.gate,
-                &hstep.write_word,
-                &hstep.w_read_used,
-                &mut dar,
-                &mut dgr,
-                &mut self.da_buf,
-                &mut self.ws,
-            );
-            let old = std::mem::replace(&mut self.d_wread[hi], dw_prev);
-            self.ws.recycle_sparse(old);
-            let dslice = &mut self.dp_buf[hi * hd..(hi + 1) * hd];
-            dslice[w..2 * w].iter_mut().zip(&self.da_buf).for_each(|(x, d)| *x += d);
-            dslice[2 * w] += dar;
-            dslice[2 * w + 1] += dgr;
-        }
-
+        self.backward_mem_phase(&step);
         // --- controller backward (writes d_r_prev into self.d_r) ---
         self.ctrl.backward_step_hot(&self.dp_buf, &mut self.d_r);
-
         // Tape recycling: every pooled buffer this step held goes home.
         self.recycle_step(step);
     }
@@ -610,6 +646,103 @@ impl Core for SamCore {
             })
             .sum();
         step_bytes + self.engine.tape_bytes() + self.ctrl.cache_bytes()
+    }
+}
+
+/// Batched-training seams: the controller hooks delegate to the shared
+/// [`Controller`] staging methods; the memory phases are the same
+/// `mem_*_phase`/`backward_mem_phase` bodies the serial path runs back to
+/// back (one code path, bit-identical by construction).
+impl BatchCore for SamCore {
+    fn cell_in_dim(&self) -> usize {
+        self.ctrl.lstm.input
+    }
+
+    fn cell_hidden(&self) -> usize {
+        self.ctrl.lstm.hidden
+    }
+
+    fn head_param_dim(&self) -> usize {
+        self.cfg.heads * head_dim(self.cfg.word)
+    }
+
+    fn out_in_dim(&self) -> usize {
+        self.ctrl.out_lin.in_dim()
+    }
+
+    fn weights(&self) -> LaneWeights<'_> {
+        LaneWeights {
+            wx: &self.ctrl.lstm.wx.w,
+            wh: &self.ctrl.lstm.wh.w,
+            head: Some((&self.ctrl.head_lin.w.w, &self.ctrl.head_lin.b.w.data)),
+            out: (&self.ctrl.out_lin.w.w, &self.ctrl.out_lin.b.w.data),
+        }
+    }
+
+    fn stage_input(&self, x: &[f32], x_row: &mut [f32], h_row: &mut [f32]) {
+        self.ctrl.stage_input_row(x, &self.r_prev, x_row, h_row);
+    }
+
+    fn cell_step(&mut self, x_row: &[f32], zx_row: &mut [f32], zh_row: &[f32]) {
+        self.ctrl.cell_step_row(x_row, zx_row, zh_row);
+    }
+
+    fn h(&self) -> &[f32] {
+        self.ctrl.h()
+    }
+
+    fn note_head_forward(&mut self, p_row: &[f32]) {
+        self.ctrl.note_head_forward(p_row);
+    }
+
+    fn mem_stage(&mut self) {
+        self.mem_stage_phase();
+    }
+
+    fn ann_fill(&mut self, nested: bool) {
+        self.ann_fill_phase(nested);
+    }
+
+    fn ann_fill_rows(&self) -> usize {
+        if self.staged_step.is_some() {
+            self.cfg.mem_words
+        } else {
+            0
+        }
+    }
+
+    fn mem_finish(&mut self) {
+        self.mem_finish_phase();
+    }
+
+    fn stage_output(&self, o_row: &mut [f32]) {
+        self.ctrl.stage_output_row(&self.r_prev, o_row);
+    }
+
+    fn note_forward_out(&mut self, o_row: &[f32]) {
+        self.ctrl.note_forward_out(o_row);
+    }
+
+    fn note_output_backward(&mut self, dy: &[f32], d_o_row: &[f32]) {
+        self.ctrl.note_output_backward(dy, d_o_row);
+    }
+
+    fn backward_mem(&mut self) {
+        let step = self.tape.pop().expect("backward without forward");
+        self.backward_mem_phase(&step);
+        self.recycle_step(step);
+    }
+
+    fn dp(&self) -> &[f32] {
+        &self.dp_buf
+    }
+
+    fn backward_cell_z(&mut self, dh_row: &mut [f32], dz_row: &mut [f32]) {
+        self.ctrl.backward_cell_z_row(&self.dp_buf, dh_row, dz_row);
+    }
+
+    fn finish_backward(&mut self, dz_row: &[f32], dh_prev_row: &[f32], dx_row: &[f32]) {
+        self.ctrl.finish_backward_row(dz_row, dh_prev_row, dx_row, &mut self.d_r);
     }
 }
 

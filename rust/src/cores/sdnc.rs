@@ -24,7 +24,7 @@
 //! (rust/tests/zero_alloc.rs).
 
 use super::addressing::{ContentRead, WriteGate};
-use super::{Controller, ControllerState, Core, CoreConfig, CtrlBatch};
+use super::{BatchCore, Controller, ControllerState, Core, CoreConfig, CtrlBatch, LaneWeights};
 use crate::memory::sharded::ShardedMemoryEngine;
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::csr::{SparseLinkMatrix, SparseVec};
@@ -78,6 +78,10 @@ pub struct SdncCore {
     w_read_prev: Vec<SparseVec>,
     r_prev: Vec<Vec<f32>>,
     tape: Vec<SdncStep>,
+    /// The step under construction between `mem_stage_phase` and
+    /// `mem_finish_phase` (the batched tick interleaves other lanes'
+    /// phases in between; `None` on the serial path outside a step).
+    staged_step: Option<SdncStep>,
     // carried backward state
     d_r: Vec<Vec<f32>>,
     d_wread: Vec<SparseVec>,
@@ -138,6 +142,7 @@ impl SdncCore {
             w_read_prev: vec![SparseVec::new(); cfg.heads],
             r_prev: vec![vec![0.0; cfg.word]; cfg.heads],
             tape: Vec::new(),
+            staged_step: None,
             d_r: vec![vec![0.0; cfg.word]; cfg.heads],
             d_wread: vec![SparseVec::new(); cfg.heads],
             d_wread_next: vec![SparseVec::new(); cfg.heads],
@@ -554,133 +559,16 @@ impl SdncCore {
         }
         self.spare_steps.push(step);
     }
-}
 
-/// Detached per-session episodic state for SDNC serving: controller h/c,
-/// private memory engine (no journals), sparse temporal-link state and the
-/// buffer pools. Parameters live in the shared [`SdncCore`].
-pub struct SdncSession {
-    ctrl: ControllerState,
-    engine: ShardedMemoryEngine,
-    n_link: SparseLinkMatrix,
-    p_link: SparseLinkMatrix,
-    precedence: SparseVec,
-    w_read_prev: Vec<SparseVec>,
-    /// w̃^R_{t-1} staged per head for this step's write gate + link follows.
-    w_read_used: Vec<SparseVec>,
-    r_prev: Vec<Vec<f32>>,
-    ws: Workspace,
-    queries: Vec<Vec<f32>>,
-    betas: Vec<f32>,
-    content_tmp: Vec<ContentRead>,
-    affected_buf: Vec<usize>,
-}
+    // -- memory-phase seams (shared by the serial path and the batched
+    //    training tick; consume the raw head params in `self.ctrl`) --------
 
-impl SdncSession {
-    /// Start a new episode: memory re-seeded, linkage cleared, recurrent
-    /// state zeroed. Allocation-free once the pools are warm.
-    pub fn reset(&mut self) {
-        self.ctrl.reset();
-        self.engine.reinit();
-        for (_, r) in self.n_link.rows.drain() {
-            self.ws.recycle_sparse(r);
-        }
-        for (_, r) in self.p_link.rows.drain() {
-            self.ws.recycle_sparse(r);
-        }
-        let old = std::mem::take(&mut self.precedence);
-        self.ws.recycle_sparse(old);
-        for hi in 0..self.w_read_prev.len() {
-            let old = std::mem::take(&mut self.w_read_prev[hi]);
-            self.ws.recycle_sparse(old);
-            let old = std::mem::take(&mut self.w_read_used[hi]);
-            self.ws.recycle_sparse(old);
-        }
-        for r in &mut self.r_prev {
-            r.iter_mut().for_each(|x| *x = 0.0);
-        }
-    }
-
-    pub fn heap_bytes(&self) -> usize {
-        let links: usize = self
-            .n_link
-            .rows
-            .values()
-            .chain(self.p_link.rows.values())
-            .map(|r| r.heap_bytes() + 64)
-            .sum();
-        self.engine.heap_bytes()
-            + self.ws.heap_bytes()
-            + self.ctrl.heap_bytes()
-            + links
-            + self.precedence.heap_bytes()
-            + self
-                .w_read_prev
-                .iter()
-                .chain(self.w_read_used.iter())
-                .map(|v| v.heap_bytes())
-                .sum::<usize>()
-            + self.r_prev.iter().map(|r| r.capacity() * 4).sum::<usize>()
-            + self.queries.iter().map(|q| q.capacity() * 4).sum::<usize>()
-    }
-
-    pub fn tape_bytes(&self) -> usize {
-        self.engine.tape_bytes()
-    }
-}
-
-impl HasParams for SdncCore {
-    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
-        self.ctrl.visit_params(f);
-    }
-}
-
-impl Core for SdncCore {
-    fn name(&self) -> &'static str {
-        "sdnc"
-    }
-
-    fn reset(&mut self) {
-        self.ctrl.reset();
-        // Abandoned episodes: revert outstanding linkage journals in
-        // reverse order, recycling as we go, then clear defensively.
-        while let Some(mut step) = self.tape.pop() {
-            let mut links = std::mem::take(&mut step.links);
-            self.revert_links(&mut links);
-            step.links = links;
-            self.recycle_step(step);
-        }
-        self.engine.reset(&mut self.ws);
-        let n_rows: Vec<SparseVec> = self.n_link.rows.drain().map(|(_, r)| r).collect();
-        for r in n_rows {
-            self.ws.recycle_sparse(r);
-        }
-        let p_rows: Vec<SparseVec> = self.p_link.rows.drain().map(|(_, r)| r).collect();
-        for r in p_rows {
-            self.ws.recycle_sparse(r);
-        }
-        let old = std::mem::take(&mut self.precedence);
-        self.ws.recycle_sparse(old);
-        for hi in 0..self.cfg.heads {
-            let old = std::mem::take(&mut self.w_read_prev[hi]);
-            self.ws.recycle_sparse(old);
-            let old = std::mem::take(&mut self.d_wread[hi]);
-            self.ws.recycle_sparse(old);
-            let old = std::mem::take(&mut self.d_wread_next[hi]);
-            self.ws.recycle_sparse(old);
-        }
-        for r in &mut self.r_prev {
-            r.iter_mut().for_each(|x| *x = 0.0);
-        }
-        for r in &mut self.d_r {
-            r.iter_mut().for_each(|x| *x = 0.0);
-        }
-    }
-
-    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
+    /// F6a: per-head gated writes aggregating the link-update weights, the
+    /// sparse temporal-linkage update (eq. 17-20, journaled into the step),
+    /// and content-query staging — everything up to the ANN lookup.
+    fn mem_stage_phase(&mut self) {
         let w = self.cfg.word;
         let hd = head_dim(w);
-        self.ctrl.step_hot(x, &self.r_prev);
         let mut step = self.spare_steps.pop().unwrap_or_else(|| SdncStep {
             heads: Vec::new(),
             links: LinkJournal::default(),
@@ -708,6 +596,7 @@ impl Core for SdncCore {
                 gate,
                 w_read_used: std::mem::take(&mut self.w_read_prev[hi]),
                 write_word: a,
+                // placeholder read fields, filled by `mem_finish_phase`
                 read: ContentRead::empty(),
                 query: Vec::new(),
                 modes: [0.0; 3],
@@ -725,17 +614,40 @@ impl Core for SdncCore {
         self.update_links_into(&w_agg, &mut step.links);
         self.ws.recycle_sparse(w_agg);
 
-        // --- reads: 3-way mix of content / forward-link / backward-link,
-        //     content candidates from one batched ANN traversal ---
         for hi in 0..self.cfg.heads {
             let p = self.ctrl.head_params();
             self.queries[hi].clear();
             self.queries[hi].extend_from_slice(&p[hi * hd..hi * hd + w]);
             self.betas[hi] = p[hi * hd + 2 * w + 2];
         }
+        self.staged_step = Some(step);
+    }
+
+    /// F6b: run the ANN lookup over the staged queries into the engine's
+    /// neighbour lists. `nested` keeps the fill strictly serial (the batched
+    /// tick's merged dispatch already runs each lane on a pool worker).
+    fn ann_fill_phase(&mut self, nested: bool) {
+        if self.staged_step.is_none() {
+            return;
+        }
+        self.engine.ann_fill_neigh(&self.queries, nested);
+    }
+
+    /// F6c: finish the reads from the filled neighbour lists — the 3-way
+    /// mix of content / forward-link / backward-link per head (eq. 21-22) —
+    /// update the recurrent read state and push the completed step.
+    fn mem_finish_phase(&mut self) {
+        let w = self.cfg.word;
+        let hd = head_dim(w);
+        let mut step = self.staged_step.take().expect("mem_finish without mem_stage");
         debug_assert!(self.content_tmp.is_empty());
         let mut crs = std::mem::take(&mut self.content_tmp);
-        self.engine.content_read_many_into(&self.queries, &self.betas, &mut crs, &mut self.ws);
+        self.engine.content_read_many_from_neigh(
+            &self.queries,
+            &self.betas,
+            &mut crs,
+            &mut self.ws,
+        );
         for (hi, read) in crs.drain(..).enumerate() {
             let mut modes = {
                 let p = self.ctrl.head_params();
@@ -782,16 +694,17 @@ impl Core for SdncCore {
             hstep.w_read = w_read;
         }
         self.content_tmp = crs;
-
-        self.ctrl.output_hot(&self.r_prev, y);
         self.tape.push(step);
     }
 
-    fn backward(&mut self, dy: &[f32]) {
-        let mut step = self.tape.pop().expect("backward without forward");
+    /// B4: memory backward for one step — read backward (mode mixture,
+    /// content path, link follows) over M_t/N_t/P_t, write backward in
+    /// reverse head order rolling memory back, then the linkage rollback to
+    /// N_{t-1}/P_{t-1} — filling `self.dp_buf` with the raw head-parameter
+    /// gradient.
+    fn backward_mem_phase(&mut self, step: &mut SdncStep) {
         let w = self.cfg.word;
         let hd = head_dim(w);
-        self.ctrl.backward_output_hot(dy);
         self.dp_buf.clear();
         self.dp_buf.resize(self.cfg.heads * hd, 0.0);
 
@@ -904,7 +817,149 @@ impl Core for SdncCore {
         let mut links = std::mem::take(&mut step.links);
         self.revert_links(&mut links);
         step.links = links;
+    }
+}
 
+/// Detached per-session episodic state for SDNC serving: controller h/c,
+/// private memory engine (no journals), sparse temporal-link state and the
+/// buffer pools. Parameters live in the shared [`SdncCore`].
+pub struct SdncSession {
+    ctrl: ControllerState,
+    engine: ShardedMemoryEngine,
+    n_link: SparseLinkMatrix,
+    p_link: SparseLinkMatrix,
+    precedence: SparseVec,
+    w_read_prev: Vec<SparseVec>,
+    /// w̃^R_{t-1} staged per head for this step's write gate + link follows.
+    w_read_used: Vec<SparseVec>,
+    r_prev: Vec<Vec<f32>>,
+    ws: Workspace,
+    queries: Vec<Vec<f32>>,
+    betas: Vec<f32>,
+    content_tmp: Vec<ContentRead>,
+    affected_buf: Vec<usize>,
+}
+
+impl SdncSession {
+    /// Start a new episode: memory re-seeded, linkage cleared, recurrent
+    /// state zeroed. Allocation-free once the pools are warm.
+    pub fn reset(&mut self) {
+        self.ctrl.reset();
+        self.engine.reinit();
+        for (_, r) in self.n_link.rows.drain() {
+            self.ws.recycle_sparse(r);
+        }
+        for (_, r) in self.p_link.rows.drain() {
+            self.ws.recycle_sparse(r);
+        }
+        let old = std::mem::take(&mut self.precedence);
+        self.ws.recycle_sparse(old);
+        for hi in 0..self.w_read_prev.len() {
+            let old = std::mem::take(&mut self.w_read_prev[hi]);
+            self.ws.recycle_sparse(old);
+            let old = std::mem::take(&mut self.w_read_used[hi]);
+            self.ws.recycle_sparse(old);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        let links: usize = self
+            .n_link
+            .rows
+            .values()
+            .chain(self.p_link.rows.values())
+            .map(|r| r.heap_bytes() + 64)
+            .sum();
+        self.engine.heap_bytes()
+            + self.ws.heap_bytes()
+            + self.ctrl.heap_bytes()
+            + links
+            + self.precedence.heap_bytes()
+            + self
+                .w_read_prev
+                .iter()
+                .chain(self.w_read_used.iter())
+                .map(|v| v.heap_bytes())
+                .sum::<usize>()
+            + self.r_prev.iter().map(|r| r.capacity() * 4).sum::<usize>()
+            + self.queries.iter().map(|q| q.capacity() * 4).sum::<usize>()
+    }
+
+    pub fn tape_bytes(&self) -> usize {
+        self.engine.tape_bytes()
+    }
+}
+
+impl HasParams for SdncCore {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.ctrl.visit_params(f);
+    }
+}
+
+impl Core for SdncCore {
+    fn name(&self) -> &'static str {
+        "sdnc"
+    }
+
+    fn reset(&mut self) {
+        self.ctrl.reset();
+        // Abandoned episodes: revert outstanding linkage journals in
+        // reverse order, recycling as we go, then clear defensively.
+        if let Some(mut step) = self.staged_step.take() {
+            let mut links = std::mem::take(&mut step.links);
+            self.revert_links(&mut links);
+            step.links = links;
+            self.recycle_step(step);
+        }
+        while let Some(mut step) = self.tape.pop() {
+            let mut links = std::mem::take(&mut step.links);
+            self.revert_links(&mut links);
+            step.links = links;
+            self.recycle_step(step);
+        }
+        self.engine.reset(&mut self.ws);
+        let n_rows: Vec<SparseVec> = self.n_link.rows.drain().map(|(_, r)| r).collect();
+        for r in n_rows {
+            self.ws.recycle_sparse(r);
+        }
+        let p_rows: Vec<SparseVec> = self.p_link.rows.drain().map(|(_, r)| r).collect();
+        for r in p_rows {
+            self.ws.recycle_sparse(r);
+        }
+        let old = std::mem::take(&mut self.precedence);
+        self.ws.recycle_sparse(old);
+        for hi in 0..self.cfg.heads {
+            let old = std::mem::take(&mut self.w_read_prev[hi]);
+            self.ws.recycle_sparse(old);
+            let old = std::mem::take(&mut self.d_wread[hi]);
+            self.ws.recycle_sparse(old);
+            let old = std::mem::take(&mut self.d_wread_next[hi]);
+            self.ws.recycle_sparse(old);
+        }
+        for r in &mut self.r_prev {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for r in &mut self.d_r {
+            r.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    fn forward_into(&mut self, x: &[f32], y: &mut Vec<f32>) {
+        self.ctrl.step_hot(x, &self.r_prev);
+        // The same memory-phase seams the batched tick drives, back to back.
+        self.mem_stage_phase();
+        self.ann_fill_phase(false);
+        self.mem_finish_phase();
+        self.ctrl.output_hot(&self.r_prev, y);
+    }
+
+    fn backward(&mut self, dy: &[f32]) {
+        let mut step = self.tape.pop().expect("backward without forward");
+        self.ctrl.backward_output_hot(dy);
+        self.backward_mem_phase(&mut step);
         self.ctrl.backward_step_hot(&self.dp_buf, &mut self.d_r);
         self.recycle_step(step);
     }
@@ -963,6 +1018,103 @@ impl Core for SdncCore {
             })
             .sum();
         step + self.engine.tape_bytes() + self.ctrl.cache_bytes()
+    }
+}
+
+/// Batched-training seams: the controller hooks delegate to the shared
+/// [`Controller`] staging methods; the memory phases are the same
+/// `mem_*_phase`/`backward_mem_phase` bodies the serial path runs back to
+/// back (one code path, bit-identical by construction).
+impl BatchCore for SdncCore {
+    fn cell_in_dim(&self) -> usize {
+        self.ctrl.lstm.input
+    }
+
+    fn cell_hidden(&self) -> usize {
+        self.ctrl.lstm.hidden
+    }
+
+    fn head_param_dim(&self) -> usize {
+        self.cfg.heads * head_dim(self.cfg.word)
+    }
+
+    fn out_in_dim(&self) -> usize {
+        self.ctrl.out_lin.in_dim()
+    }
+
+    fn weights(&self) -> LaneWeights<'_> {
+        LaneWeights {
+            wx: &self.ctrl.lstm.wx.w,
+            wh: &self.ctrl.lstm.wh.w,
+            head: Some((&self.ctrl.head_lin.w.w, &self.ctrl.head_lin.b.w.data)),
+            out: (&self.ctrl.out_lin.w.w, &self.ctrl.out_lin.b.w.data),
+        }
+    }
+
+    fn stage_input(&self, x: &[f32], x_row: &mut [f32], h_row: &mut [f32]) {
+        self.ctrl.stage_input_row(x, &self.r_prev, x_row, h_row);
+    }
+
+    fn cell_step(&mut self, x_row: &[f32], zx_row: &mut [f32], zh_row: &[f32]) {
+        self.ctrl.cell_step_row(x_row, zx_row, zh_row);
+    }
+
+    fn h(&self) -> &[f32] {
+        self.ctrl.h()
+    }
+
+    fn note_head_forward(&mut self, p_row: &[f32]) {
+        self.ctrl.note_head_forward(p_row);
+    }
+
+    fn mem_stage(&mut self) {
+        self.mem_stage_phase();
+    }
+
+    fn ann_fill(&mut self, nested: bool) {
+        self.ann_fill_phase(nested);
+    }
+
+    fn ann_fill_rows(&self) -> usize {
+        if self.staged_step.is_some() {
+            self.cfg.mem_words
+        } else {
+            0
+        }
+    }
+
+    fn mem_finish(&mut self) {
+        self.mem_finish_phase();
+    }
+
+    fn stage_output(&self, o_row: &mut [f32]) {
+        self.ctrl.stage_output_row(&self.r_prev, o_row);
+    }
+
+    fn note_forward_out(&mut self, o_row: &[f32]) {
+        self.ctrl.note_forward_out(o_row);
+    }
+
+    fn note_output_backward(&mut self, dy: &[f32], d_o_row: &[f32]) {
+        self.ctrl.note_output_backward(dy, d_o_row);
+    }
+
+    fn backward_mem(&mut self) {
+        let mut step = self.tape.pop().expect("backward without forward");
+        self.backward_mem_phase(&mut step);
+        self.recycle_step(step);
+    }
+
+    fn dp(&self) -> &[f32] {
+        &self.dp_buf
+    }
+
+    fn backward_cell_z(&mut self, dh_row: &mut [f32], dz_row: &mut [f32]) {
+        self.ctrl.backward_cell_z_row(&self.dp_buf, dh_row, dz_row);
+    }
+
+    fn finish_backward(&mut self, dz_row: &[f32], dh_prev_row: &[f32], dx_row: &[f32]) {
+        self.ctrl.finish_backward_row(dz_row, dh_prev_row, dx_row, &mut self.d_r);
     }
 }
 

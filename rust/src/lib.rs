@@ -72,6 +72,7 @@ pub mod prelude {
         babi::BabiTask, copy::CopyTask, omniglot::OmniglotTask, recall::AssociativeRecall,
         sort::PrioritySort, Episode, Task,
     };
+    pub use crate::training::batched::FusedTrainer;
     pub use crate::training::workers::ParallelTrainer;
     pub use crate::training::{TrainConfig, Trainer};
     pub use crate::util::args::Args;

@@ -52,6 +52,10 @@ Common flags (paper defaults in parens):
   --curriculum-max H  enable exponential curriculum up to H
   --workers N       data-parallel worker threads (1); same seed ⇒ same
                     result at any N (deterministic fixed-order reduction)
+  --batch-fuse B    episode lanes fused per worker (1): each worker drives
+                    B episodes in lockstep so controller GEMMs batch across
+                    lanes and ANN lookups merge into one dispatch. Same
+                    seed ⇒ same result at any (N, B) for --ann linear
   --seed S          RNG seed (1)
   --checkpoint PATH save/load parameters
   --quiet           suppress progress lines
@@ -97,9 +101,10 @@ fn train(args: &Args) -> Result<()> {
         ));
     }
     println!(
-        "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?}, shards={}, workers={})",
+        "training {:?} on {:?} (N={}, W={}, heads={}, K={}, ann={:?}, shards={}, workers={}, batch-fuse={})",
         cfg.core, cfg.task, cfg.core_cfg.mem_words, cfg.core_cfg.word, cfg.core_cfg.heads,
-        cfg.core_cfg.k, cfg.core_cfg.ann, cfg.core_cfg.shards, cfg.workers
+        cfg.core_cfg.k, cfg.core_cfg.ann, cfg.core_cfg.shards, cfg.workers,
+        cfg.train_cfg.batch_fuse
     );
     let (mut trainer, log) = run_experiment(&cfg)?;
     println!(

@@ -543,11 +543,36 @@ impl SparseMemoryEngine {
         out: &mut Vec<TopKRead>,
         ws: &mut Workspace,
     ) {
+        self.ann_fill_neigh(queries);
+        self.read_topk_from_neigh(queries, betas, out, ws);
+    }
+
+    /// The post-ANN half of [`read_topk_into`](Self::read_topk_into):
+    /// per-head softmax weights, sparse read and ring touches from the
+    /// neighbour lists already filled by
+    /// [`ann_fill_neigh`](Self::ann_fill_neigh). The batched training tick
+    /// calls the halves separately so B lanes' ANN lookups can merge into
+    /// one pool dispatch.
+    pub fn read_topk_from_neigh(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<TopKRead>,
+        ws: &mut Workspace,
+    ) {
         let mut crs = std::mem::take(&mut self.cr_tmp);
-        self.content_read_many_into(queries, betas, &mut crs, ws);
+        self.content_read_many_from_neigh(queries, betas, &mut crs, ws);
         let word = self.mem.word_size();
         assemble_topk_reads(&mut crs, word, out, ws, |w, r| self.read_mixture_into(w, r));
         self.cr_tmp = crs;
+    }
+
+    /// Run the ANN lookup for a batch of queries into `self.neigh` (the
+    /// first half of the content-read path; a single index, so always
+    /// serial at this level).
+    pub fn ann_fill_neigh(&mut self, queries: &[Vec<f32>]) {
+        let ann = self.ann.as_mut().expect("content reads need a sparse engine (ANN)");
+        ann.query_many_into(queries, self.k, &mut self.neigh);
     }
 
     /// Batched content-weight computation without the memory read or ring
@@ -560,9 +585,21 @@ impl SparseMemoryEngine {
         out: &mut Vec<ContentRead>,
         ws: &mut Workspace,
     ) {
+        self.ann_fill_neigh(queries);
+        self.content_read_many_from_neigh(queries, betas, out, ws);
+    }
+
+    /// The post-ANN half of
+    /// [`content_read_many_into`](Self::content_read_many_into): per-head
+    /// softmax weights over the neighbour lists already in `self.neigh`.
+    pub fn content_read_many_from_neigh(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<ContentRead>,
+        ws: &mut Workspace,
+    ) {
         assert_eq!(queries.len(), betas.len());
-        let ann = self.ann.as_mut().expect("content reads need a sparse engine (ANN)");
-        ann.query_many_into(queries, self.k, &mut self.neigh);
         for (hi, (q, &beta_raw)) in queries.iter().zip(betas).enumerate() {
             let mut rows = ws.take_usize(self.k);
             rows.extend(self.neigh[hi].iter().map(|&(i, _)| i));

@@ -357,14 +357,50 @@ impl ShardedMemoryEngine {
         out: &mut Vec<TopKRead>,
         ws: &mut Workspace,
     ) {
+        self.ann_fill_neigh(queries, false);
+        self.read_topk_from_neigh(queries, betas, out, ws);
+    }
+
+    /// The post-ANN half of [`read_topk_into`](Self::read_topk_into) — see
+    /// [`SparseMemoryEngine::read_topk_from_neigh`]. Requires the neighbour
+    /// lists filled by [`ann_fill_neigh`](Self::ann_fill_neigh).
+    pub fn read_topk_from_neigh(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<TopKRead>,
+        ws: &mut Workspace,
+    ) {
         if self.s == 1 {
-            return self.shards[0].read_topk_into(queries, betas, out, ws);
+            return self.shards[0].read_topk_from_neigh(queries, betas, out, ws);
         }
         let mut crs = std::mem::take(&mut self.cr_tmp);
-        self.content_read_many_into(queries, betas, &mut crs, ws);
+        self.content_read_many_from_neigh(queries, betas, &mut crs, ws);
         let word = self.word;
         assemble_topk_reads(&mut crs, word, out, ws, |w, r| self.read_mixture_into(w, r));
         self.cr_tmp = crs;
+    }
+
+    /// Fan the ANN lookup for a batch of queries out across the shards into
+    /// the per-shard neighbour lists. `serial` forces the strictly serial
+    /// fan-out even above [`SHARD_PARALLEL_MIN_ROWS`] — the batched
+    /// training tick sets it when the call is already running on a
+    /// [`ShardPool`] worker, where the lanes themselves are the parallel
+    /// unit and a nested dispatch would only queue behind the outer one.
+    /// Bitwise identical either way: per-shard result slots +
+    /// deterministic merge.
+    pub fn ann_fill_neigh(&mut self, queries: &[Vec<f32>], serial: bool) {
+        if self.s == 1 {
+            return self.shards[0].ann_fill_neigh(queries);
+        }
+        if serial {
+            let k = self.k;
+            for (shard, out) in self.shards.iter_mut().zip(self.neigh.iter_mut()) {
+                shard.ann_query_rank_into(queries, k, out);
+            }
+        } else {
+            self.query_shards(queries);
+        }
     }
 
     /// Batched content-weight computation (no memory read, no touches) —
@@ -376,11 +412,26 @@ impl ShardedMemoryEngine {
         out: &mut Vec<ContentRead>,
         ws: &mut Workspace,
     ) {
+        self.ann_fill_neigh(queries, false);
+        self.content_read_many_from_neigh(queries, betas, out, ws);
+    }
+
+    /// The post-ANN half of
+    /// [`content_read_many_into`](Self::content_read_many_into): per-head
+    /// total-order candidate merge + softmax weights over the per-shard
+    /// neighbour lists already filled by
+    /// [`ann_fill_neigh`](Self::ann_fill_neigh).
+    pub fn content_read_many_from_neigh(
+        &mut self,
+        queries: &[Vec<f32>],
+        betas: &[f32],
+        out: &mut Vec<ContentRead>,
+        ws: &mut Workspace,
+    ) {
         if self.s == 1 {
-            return self.shards[0].content_read_many_into(queries, betas, out, ws);
+            return self.shards[0].content_read_many_from_neigh(queries, betas, out, ws);
         }
         assert_eq!(queries.len(), betas.len());
-        self.query_shards(queries);
         for (hi, (q, &beta_raw)) in queries.iter().zip(betas).enumerate() {
             let mut rows = ws.take_usize(self.k);
             self.cand.clear();

@@ -4,9 +4,12 @@
 //!
 //! Hot-path upgrades over a naive per-sample implementation:
 //!
-//! * **Batched GEMM API** — [`Linear::forward_batch`]/[`Linear::backward_batch`]
-//!   process a whole T×in matrix of samples with three GEMMs
-//!   (Y = X Wᵀ + b, dW += dYᵀ X, dX = dY W).
+//! * **Batched entries** — the batched trainer runs the projection itself
+//!   (lane-fused `gemv_many` across B episodes) and enters through
+//!   [`Linear::note_forward`]/[`Linear::note_backward`], which carry only
+//!   the cache/deferred-gradient bookkeeping of the `*_into` pair; the
+//!   serving tick coalesces sessions with the forward-only
+//!   [`Linear::infer_batch`]. There is no separate training GEMM path.
 //! * **Deferred weight gradients** — the per-step backward no longer does a
 //!   rank-1 `outer_acc` per call; it queues (dy, x) pairs and folds the
 //!   whole episode's weight gradient in as one `dW += dYᵀ X` GEMM when the
@@ -20,7 +23,7 @@
 //!   [`Linear::backward`] wrappers remain for cold callers and tests.
 
 use super::param::{HasParams, Param};
-use crate::tensor::matrix::{axpy, col_sum_acc, dot, gemm, gemm_nt, gemm_tn, Matrix};
+use crate::tensor::matrix::{axpy, col_sum_acc, dot, gemm_nt, gemm_tn, Matrix};
 use crate::tensor::workspace::Workspace;
 use crate::util::rng::Rng;
 
@@ -30,8 +33,6 @@ pub struct Linear {
     pub b: Param, // 1 × out
     /// Cached inputs, one per un-backpropagated step forward call.
     cache_x: Vec<Vec<f32>>,
-    /// Cached input matrices, one per un-backpropagated batch forward call.
-    cache_batch: Vec<Matrix>,
     /// (dy, x) pairs awaiting the episode-level GEMM gradient flush.
     pending: Vec<(Vec<f32>, Vec<f32>)>,
     /// Layer-private buffer pool (see [`crate::tensor::workspace`]).
@@ -44,7 +45,6 @@ impl Linear {
             w: Param::fan_in(&format!("{name}.w"), out_dim, in_dim, in_dim, rng),
             b: Param::zeros(&format!("{name}.b"), 1, out_dim),
             cache_x: Vec::new(),
-            cache_batch: Vec::new(),
             pending: Vec::new(),
             ws: Workspace::new(),
         }
@@ -139,30 +139,30 @@ impl Linear {
         dx
     }
 
-    /// Batched forward: Y = X Wᵀ + b over T samples (X: T×in, Y: T×out),
-    /// one GEMM. Caches X for the matching [`Linear::backward_batch`].
-    pub fn forward_batch(&mut self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.in_dim());
-        let mut y = Matrix::zeros(x.rows, self.out_dim());
-        for t in 0..y.rows {
-            y.row_mut(t).copy_from_slice(&self.b.w.data);
-        }
-        gemm_nt(&mut y, x, &self.w.w);
-        self.cache_batch.push(x.clone());
-        y
+    /// Batched-training forward bookkeeping: the caller computed this
+    /// lane's y itself (bias row + lane-fused `gemv_many`, which carries
+    /// [`Linear::forward_into`]'s bits exactly); cache `x` for the
+    /// matching [`Linear::note_backward`]. This is `forward_into` minus
+    /// the projection.
+    pub fn note_forward(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.in_dim());
+        let xb = self.ws.take_f32_copy(x);
+        self.cache_x.push(xb);
     }
 
-    /// Batched backward for the most recent [`Linear::forward_batch`]:
-    /// accumulates dW += dYᵀ X and db += colsum(dY), returns dX = dY W.
-    pub fn backward_batch(&mut self, dy: &Matrix) -> Matrix {
-        assert_eq!(dy.cols, self.out_dim());
-        let x = self.cache_batch.pop().expect("backward_batch without forward_batch");
-        assert_eq!(dy.rows, x.rows);
-        gemm_tn(&mut self.w.g, dy, &x);
-        col_sum_acc(&mut self.b.g.data, dy);
-        let mut dx = Matrix::zeros(dy.rows, self.in_dim());
-        gemm(&mut dx, dy, &self.w.w);
-        dx
+    /// Batched-training backward bookkeeping: the caller swept dX = dY·W
+    /// itself (lane-fused `gemm_rowsweep`, the serial axpy sweep's bits);
+    /// pop the cached x, queue (dy, x) for the episode-level GEMM flush and
+    /// flush when the cache empties. This is [`Linear::backward_into`]
+    /// minus the dx sweep.
+    pub fn note_backward(&mut self, dy: &[f32]) {
+        assert_eq!(dy.len(), self.out_dim());
+        let x = self.cache_x.pop().expect("backward without forward");
+        let dyb = self.ws.take_f32_copy(dy);
+        self.pending.push((dyb, x));
+        if self.cache_x.is_empty() {
+            self.flush_grads();
+        }
     }
 
     /// Fold all queued per-step weight gradients in as one GEMM:
@@ -196,12 +196,10 @@ impl Linear {
         while let Some(x) = self.cache_x.pop() {
             self.ws.recycle_f32(x);
         }
-        self.cache_batch.clear();
     }
 
     pub fn cache_bytes(&self) -> usize {
         self.cache_x.iter().map(|x| x.capacity() * 4 + 24).sum::<usize>()
-            + self.cache_batch.iter().map(|m| m.heap_bytes() + 24).sum::<usize>()
             + self
                 .pending
                 .iter()
@@ -344,11 +342,17 @@ mod tests {
     }
 
     #[test]
-    fn batch_matches_per_step() {
-        let mut rng = Rng::new(5);
-        let mut a = Linear::new("a", 3, 2, &mut rng);
-        let mut rng2 = Rng::new(5);
-        let mut b = Linear::new("b", 3, 2, &mut rng2);
+    fn note_hooks_with_fused_kernels_match_per_step_bitwise() {
+        // The batched-training decomposition of this layer: lanes' ys via
+        // bias rows + gemv_many, dx via gemm_rowsweep, bookkeeping via
+        // note_forward/note_backward. Must carry the serial per-step
+        // path's exact bits (here "lanes" play the role of B episodes all
+        // doing their step-t forward at once).
+        use crate::tensor::matrix::{gemm_rowsweep, gemv_many};
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let mut a = Linear::new("a", 3, 2, &mut r1);
+        let mut b = Linear::new("b", 3, 2, &mut r2);
         let xs = vec![
             vec![0.5, -1.0, 2.0],
             vec![1.0, 0.0, 0.0],
@@ -356,7 +360,7 @@ mod tests {
         ];
         let dys = vec![vec![1.0, -1.0], vec![0.5, 0.5], vec![0.0, 2.0]];
 
-        // Per-step path.
+        // Serial per-step path (one lane at a time).
         let mut ys = Vec::new();
         for x in &xs {
             ys.push(a.forward(x));
@@ -367,23 +371,37 @@ mod tests {
         }
         dxs.reverse();
 
-        // Batched path.
-        let yb = b.forward_batch(&Matrix::from_rows(xs.clone()));
-        let dxb = b.backward_batch(&Matrix::from_rows(dys.clone()));
+        // Fused path: all three "lanes" at once.
+        let xm = Matrix::from_rows(xs.clone());
+        let mut ym = Matrix::zeros(3, 2);
+        for l in 0..3 {
+            ym.row_mut(l).copy_from_slice(&b.b.w.data);
+            b.note_forward(xm.row(l));
+        }
+        gemv_many(&mut ym, &b.w.w, &xm);
+        // LIFO: lanes' note_backwards pop caches newest-first, matching
+        // the serial loop's reverse order.
+        let dym = Matrix::from_rows(dys.iter().rev().cloned().collect());
+        let mut dxm = Matrix::zeros(3, 3);
+        gemm_rowsweep(&mut dxm, &dym, &b.w.w);
+        for l in 0..3 {
+            b.note_backward(dym.row(l));
+        }
 
         for (t, y) in ys.iter().enumerate() {
             for (j, v) in y.iter().enumerate() {
-                assert!((v - yb.get(t, j)).abs() < 1e-5, "y[{t}][{j}]");
+                assert_eq!(v.to_bits(), ym.get(t, j).to_bits(), "y[{t}][{j}]");
             }
             for (j, v) in dxs[t].iter().enumerate() {
-                assert!((v - dxb.get(t, j)).abs() < 1e-5, "dx[{t}][{j}]");
+                // dxs is in forward order; dxm rows are reversed.
+                assert_eq!(v.to_bits(), dxm.get(2 - t, j).to_bits(), "dx[{t}][{j}]");
             }
         }
         for (ga, gb) in a.w.g.data.iter().zip(&b.w.g.data) {
-            assert!((ga - gb).abs() < 1e-5, "dW mismatch");
+            assert_eq!(ga.to_bits(), gb.to_bits(), "dW mismatch");
         }
         for (ga, gb) in a.b.g.data.iter().zip(&b.b.g.data) {
-            assert!((ga - gb).abs() < 1e-5, "db mismatch");
+            assert_eq!(ga.to_bits(), gb.to_bits(), "db mismatch");
         }
     }
 }

@@ -4,9 +4,11 @@
 //! Hot-path structure (the controller is the densest compute in every core):
 //!
 //! * the per-step gate pre-activations are two GEMVs (`Wx·x`, `Wh·h`);
-//! * [`Lstm::forward_seq`] batches the input projection of a whole episode
-//!   into one `Z_x = X Wxᵀ` GEMM before the (inherently sequential)
-//!   recurrence — usable whenever the inputs are known up front;
+//! * the batched trainer computes both projections lane-fused across B
+//!   episodes (`gemv_many`) and enters through [`Lstm::step_with_z`] /
+//!   the split [`Lstm::backward_z_into`]+[`Lstm::backward_finish`] pair,
+//!   which are bitwise-identical recompositions of the serial hot path
+//!   (see DESIGN.md "Batched training");
 //! * the backward pass defers both weight gradients: instead of two rank-1
 //!   `outer_acc` updates per step it queues (dz, x, h_prev) rows and folds
 //!   the episode in as `dWx += dZᵀ X`, `dWh += dZᵀ H` — two GEMMs — when
@@ -22,7 +24,7 @@
 
 use super::act::{dsigmoid, dtanh, sigmoid, tanh};
 use super::param::{HasParams, Param};
-use crate::tensor::matrix::{axpy, col_sum_acc, gemm_nt, gemm_tn, gemv, Matrix};
+use crate::tensor::matrix::{axpy, col_sum_acc, gemm_tn, gemv};
 use crate::tensor::workspace::Workspace;
 use crate::util::rng::Rng;
 
@@ -76,6 +78,9 @@ pub struct Lstm {
     tape: Vec<StepCache>,
     /// (dz, x, h_prev) rows awaiting the episode-level GEMM gradient flush.
     pending: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    /// (x, h_prev) of the step between [`Lstm::backward_z_into`] and
+    /// [`Lstm::backward_finish`] on the split (batched) backward path.
+    staged: Option<(Vec<f32>, Vec<f32>)>,
     /// Layer-private buffer pool; tape buffers never escape the layer, so
     /// the take/recycle cycle closes here.
     ws: Workspace,
@@ -96,6 +101,7 @@ impl Lstm {
             dc_next: vec![0.0; hidden],
             tape: Vec::new(),
             pending: Vec::new(),
+            staged: None,
             ws: Workspace::new(),
             forget_bias: 1.0,
         }
@@ -112,6 +118,10 @@ impl Lstm {
         self.dc_next.iter_mut().for_each(|x| *x = 0.0);
         while let Some(cache) = self.tape.pop() {
             self.recycle_cache(cache);
+        }
+        if let Some((x, h_prev)) = self.staged.take() {
+            self.ws.recycle_f32(x);
+            self.ws.recycle_f32(h_prev);
         }
     }
 
@@ -200,29 +210,36 @@ impl Lstm {
         self.wx.heap_bytes() + self.wh.heap_bytes() + self.b.heap_bytes()
     }
 
-    /// Forward a whole episode whose inputs are known up front (one row per
-    /// step): the input projection of every step runs as a single
-    /// `Z_x = X Wxᵀ` GEMM, then the recurrence consumes one row at a time.
-    /// Equivalent to calling [`Lstm::step`] per row; returns the h_t rows.
-    pub fn forward_seq(&mut self, xs: &Matrix) -> Matrix {
-        assert_eq!(xs.cols, self.input);
-        let mut zx = Matrix::zeros(xs.rows, 4 * self.hidden);
-        gemm_nt(&mut zx, xs, &self.wx.w);
-        let mut hs = Matrix::zeros(xs.rows, self.hidden);
-        for t in 0..xs.rows {
-            self.step_with_zx(xs.row(t).to_vec(), zx.row(t).to_vec());
-            hs.row_mut(t).copy_from_slice(&self.h);
-        }
-        hs
-    }
-
     /// Shared step body: `z` arrives holding Wx·x and picks up b + Wh·h.
     /// Takes ownership of (pooled or fresh) `x`/`z` buffers; `x` goes to
     /// the tape, `z` is recycled.
     fn step_with_zx(&mut self, x: Vec<f32>, mut z: Vec<f32>) {
-        let hs = self.hidden;
         axpy(&mut z, 1.0, &self.b.w.data);
         gemv(&mut z, &self.wh.w, &self.h);
+        self.step_tail(x, z);
+    }
+
+    /// Batched-training forward entry: consume fully assembled gate
+    /// pre-activations z = (Wx·x + b) + Wh·h_prev, tape the step and update
+    /// h/c — [`Lstm::step_hot`] minus the two projections, which the
+    /// batched trainer runs lane-fused (`gemv_many`) across B episodes.
+    /// Bitwise contract: `gemv` adds each complete dot onto the running z
+    /// exactly once, so a caller that assembles `(zx[i] + b[i]) + zh[i]`
+    /// per element (zx/zh each a plain dot into a zeroed row) reproduces
+    /// [`Lstm::step_with_zx`]'s z bits, and everything downstream of z is
+    /// shared code.
+    pub fn step_with_z(&mut self, x: &[f32], z: &[f32]) {
+        assert_eq!(x.len(), self.input);
+        assert_eq!(z.len(), 4 * self.hidden);
+        let xb = self.ws.take_f32_copy(x);
+        let zb = self.ws.take_f32_copy(z);
+        self.step_tail(xb, zb);
+    }
+
+    /// Gate nonlinearity + state update + tape push over an assembled z
+    /// (the common tail of [`Lstm::step_with_zx`] / [`Lstm::step_with_z`]).
+    fn step_tail(&mut self, x: Vec<f32>, z: Vec<f32>) {
+        let hs = self.hidden;
         let mut gates = self.ws.take_f32(4 * hs);
         for j in 0..hs {
             gates[j] = sigmoid(z[j]); // i
@@ -305,6 +322,69 @@ impl Lstm {
         let mut dx = Vec::new();
         self.backward_into(dh_ext, &mut dx);
         dx
+    }
+
+    /// First half of the split (batched) backward step: pop the newest
+    /// taped step, run the elementwise gate backward — consuming the
+    /// carried dh_next/dc_next and updating dc_next — and write dL/dz into
+    /// `dz_out` (length 4H, typically a lane's row of the batched dZ
+    /// matrix). The step's (x, h_prev) are staged for
+    /// [`Lstm::backward_finish`]; the caller turns the lanes' dZ rows into
+    /// dX / dH_prev with lane-fused `gemm_rowsweep`s against Wx / Wh.
+    /// This is exactly [`Lstm::backward_into`]'s per-j loop, so dz bits
+    /// match the serial path.
+    pub fn backward_z_into(&mut self, dh_ext: &[f32], dz_out: &mut [f32]) {
+        let cache = self.tape.pop().expect("lstm backward without forward");
+        let hs = self.hidden;
+        assert_eq!(dz_out.len(), 4 * hs);
+        let mut dh = self.ws.take_f32_copy(dh_ext);
+        axpy(&mut dh, 1.0, &self.dh_next);
+        let mut dc_prev = self.ws.take_f32(hs);
+        for j in 0..hs {
+            let (i, f, g, o) = (
+                cache.gates[j],
+                cache.gates[hs + j],
+                cache.gates[2 * hs + j],
+                cache.gates[3 * hs + j],
+            );
+            let tc = tanh(cache.c[j]);
+            let d_o = dh[j] * tc;
+            let dc = self.dc_next[j] + dh[j] * o * dtanh(tc);
+            let d_i = dc * g;
+            let d_f = dc * cache.c_prev[j];
+            let d_g = dc * i;
+            dc_prev[j] = dc * f;
+            dz_out[j] = d_i * dsigmoid(i);
+            dz_out[hs + j] = d_f * dsigmoid(f);
+            dz_out[2 * hs + j] = d_g * dtanh(g);
+            dz_out[3 * hs + j] = d_o * dsigmoid(o);
+        }
+        let old = std::mem::replace(&mut self.dc_next, dc_prev);
+        self.ws.recycle_f32(old);
+        self.ws.recycle_f32(dh);
+        self.ws.recycle_f32(cache.gates);
+        self.ws.recycle_f32(cache.c);
+        self.ws.recycle_f32(cache.c_prev);
+        self.staged = Some((cache.x, cache.h_prev));
+    }
+
+    /// Second half of the split backward step: consume this lane's dZ row
+    /// (queued with the staged x/h_prev for the episode-level GEMM flush)
+    /// and its dH_prev row (→ the carried dh_next), flushing when the tape
+    /// empties. `dh_prev` must be the lane's row of a zero-initialized
+    /// dH_prev accumulator swept with dZ·Wh — which is bit-for-bit the
+    /// serial backward's own dh_prev (zeroed pooled buffer + the same axpy
+    /// sequence).
+    pub fn backward_finish(&mut self, dz: &[f32], dh_prev: &[f32]) {
+        let (x, h_prev) =
+            self.staged.take().expect("backward_finish without backward_z_into");
+        assert_eq!(dh_prev.len(), self.hidden);
+        self.dh_next.copy_from_slice(dh_prev);
+        let dzb = self.ws.take_f32_copy(dz);
+        self.pending.push((dzb, x, h_prev));
+        if self.tape.is_empty() {
+            self.flush_grads();
+        }
     }
 
     /// Fold all queued per-step weight gradients in as two GEMMs:
@@ -473,7 +553,12 @@ mod tests {
     }
 
     #[test]
-    fn forward_seq_matches_step_loop() {
+    fn split_step_and_backward_match_hot_path_bitwise() {
+        // The batched entry points (externally assembled z, split
+        // backward with lane-fused dZ sweeps) must carry exactly the
+        // serial hot path's bits — the cell-level leg of the batched-vs-
+        // serial training contract.
+        use crate::tensor::matrix::{gemm_rowsweep, Matrix};
         let (input, hidden, t_len) = (3, 5, 7);
         let mut r1 = Rng::new(12);
         let mut r2 = Rng::new(12);
@@ -483,27 +568,48 @@ mod tests {
         let xs: Vec<Vec<f32>> = (0..t_len)
             .map(|_| (0..input).map(|_| xr.normal()).collect())
             .collect();
-        let hs_seq = a.forward_seq(&Matrix::from_rows(xs.clone()));
-        for (t, x) in xs.iter().enumerate() {
-            let h = b.step(x);
-            for (j, v) in h.iter().enumerate() {
-                assert!(
-                    (v - hs_seq.get(t, j)).abs() < 1e-5,
-                    "h[{t}][{j}]: {} vs {}",
-                    v,
-                    hs_seq.get(t, j)
-                );
+        for ep in 0..2 {
+            for (t, x) in xs.iter().enumerate() {
+                a.step_hot(x);
+                // The batched trainer's assembly: both projections as
+                // plain dots into zeroed rows, then (zx + b) + zh.
+                let mut zx = vec![0.0f32; 4 * hidden];
+                gemv(&mut zx, &b.wx.w, x);
+                let mut zh = vec![0.0f32; 4 * hidden];
+                gemv(&mut zh, &b.wh.w, &b.h);
+                let z: Vec<f32> = (0..4 * hidden)
+                    .map(|i| (zx[i] + b.b.w.data[i]) + zh[i])
+                    .collect();
+                b.step_with_z(x, &z);
+                for (ha, hb) in a.h.iter().zip(&b.h) {
+                    assert_eq!(ha.to_bits(), hb.to_bits(), "h ep {ep} t {t}");
+                }
+                for (ca, cb) in a.c.iter().zip(&b.c) {
+                    assert_eq!(ca.to_bits(), cb.to_bits(), "c ep {ep} t {t}");
+                }
             }
-        }
-        assert_eq!(a.tape_len(), t_len, "seq forward must tape every step");
-        // Backward works identically off the shared tape.
-        let probe = vec![1.0f32; hidden];
-        for _ in 0..t_len {
-            a.backward(&probe);
-            b.backward(&probe);
-        }
-        for (ga, gb) in a.wx.g.data.iter().zip(&b.wx.g.data) {
-            assert!((ga - gb).abs() < 1e-5);
+            let probe = vec![0.3f32, -0.2, 0.5, 0.1, -0.4];
+            let mut dx_a = Vec::new();
+            for t in 0..t_len {
+                a.backward_into(&probe, &mut dx_a);
+                let mut dz = Matrix::zeros(1, 4 * hidden);
+                b.backward_z_into(&probe, dz.row_mut(0));
+                let mut dx_b = Matrix::zeros(1, input);
+                let mut dh_prev = Matrix::zeros(1, hidden);
+                gemm_rowsweep(&mut dx_b, &dz, &b.wx.w);
+                gemm_rowsweep(&mut dh_prev, &dz, &b.wh.w);
+                b.backward_finish(dz.row(0), dh_prev.row(0));
+                for (da, db) in dx_a.iter().zip(dx_b.row(0)) {
+                    assert_eq!(da.to_bits(), db.to_bits(), "dx ep {ep} t {t}");
+                }
+            }
+            for (p, q) in [(&a.wx, &b.wx), (&a.wh, &b.wh), (&a.b, &b.b)] {
+                for (ga, gb) in p.g.data.iter().zip(&q.g.data) {
+                    assert_eq!(ga.to_bits(), gb.to_bits(), "grads ep {ep}");
+                }
+            }
+            a.reset();
+            b.reset();
         }
     }
 

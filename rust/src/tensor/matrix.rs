@@ -17,6 +17,13 @@
 //! results agree to ~1e-6 relative, not bitwise. The engine-parity fixture
 //! (rust/tests/engine_parity.rs) is blessed on top of the blocked kernels.
 //!
+//! The lane-fused kernels (`gemv_many`, `gemm_rowsweep`) are the batched-
+//! training pair: they stream the shared weight operand once across L
+//! independent lanes while keeping each lane's op sequence identical to
+//! the single-lane `gemv`/axpy-sweep path — so batched training is bitwise
+//! equal to serial training, which the micro-kernel GEMMs (reassociating)
+//! could not provide. See DESIGN.md "Batched training".
+//!
 //! The hot kernels (`dot`, `dist_sq`, `gemv`'s row blocks, and the 4×8
 //! micro-kernel) additionally dispatch once per process to explicit
 //! AVX2+FMA intrinsics when the host supports them
@@ -325,47 +332,125 @@ fn row_block_4(
 pub fn gemv(y: &mut [f32], a: &Matrix, x: &[f32]) {
     assert_eq!(a.cols, x.len());
     assert_eq!(a.rows, y.len());
-    let n = a.cols;
-    let nfull = n - n % NR;
     let m_main = a.rows - a.rows % MR;
     let mut i0 = 0;
     while i0 < m_main {
         let rows: [&[f32]; MR] = [a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3)];
-        // Vectorized path: each row runs exactly the AVX2 `dot` op
-        // sequence (x chunks shared across the 4 rows), so blocked-gemv
-        // bits == dot bits on this path too.
-        #[cfg(target_arch = "x86_64")]
-        if simd::kernel_path() == KernelPath::Avx2Fma {
-            let s = unsafe { simd::avx2::gemv_block4(rows, x) };
-            for r in 0..MR {
-                y[i0 + r] += s[r];
-            }
-            i0 += MR;
-            continue;
-        }
-        let mut acc = [[0.0f32; NR]; MR];
-        let mut kk = 0;
-        while kk < nfull {
-            let xv: &[f32; NR] = x[kk..kk + NR].try_into().unwrap();
-            for r in 0..MR {
-                let av: &[f32; NR] = rows[r][kk..kk + NR].try_into().unwrap();
-                for l in 0..NR {
-                    acc[r][l] += av[l] * xv[l];
-                }
-            }
-            kk += NR;
-        }
+        let s = gemv_block4(rows, x);
         for r in 0..MR {
-            let mut s = acc[r].iter().sum::<f32>();
-            for k in nfull..n {
-                s += rows[r][k] * x[k];
-            }
-            y[i0 + r] += s;
+            y[i0 + r] += s[r];
         }
         i0 += MR;
     }
     for i in m_main..a.rows {
         y[i] += dot(a.row(i), x);
+    }
+}
+
+/// Four complete row·x dots at once (the gemv row-block body), dispatched
+/// like [`dot`]. On the vectorized path each row runs exactly the AVX2
+/// `dot` op sequence (x chunks shared across the 4 rows); the scalar body
+/// keeps [`dot_scalar`]'s lane/remainder structure per row. Either way a
+/// returned dot's bits equal `dot(rows[r], x)`, which is what makes
+/// [`gemv`] — and the lane-fused [`gemv_many`] — bitwise equal to the
+/// one-dot-per-row reference.
+#[inline]
+fn gemv_block4(rows: [&[f32]; MR], x: &[f32]) -> [f32; MR] {
+    #[cfg(target_arch = "x86_64")]
+    if simd::kernel_path() == KernelPath::Avx2Fma {
+        return unsafe { simd::avx2::gemv_block4(rows, x) };
+    }
+    gemv_block4_scalar(rows, x)
+}
+
+/// Scalar body of [`gemv_block4`]: 8 accumulator lanes per row over
+/// bounds-check-free NR chunks, serial lane sum, serial remainder — the
+/// former inline scalar block of [`gemv`], factored out unchanged so the
+/// single-x and many-x entry points share one op sequence.
+#[inline]
+fn gemv_block4_scalar(rows: [&[f32]; MR], x: &[f32]) -> [f32; MR] {
+    let n = x.len();
+    let nfull = n - n % NR;
+    let mut acc = [[0.0f32; NR]; MR];
+    let mut kk = 0;
+    while kk < nfull {
+        let xv: &[f32; NR] = x[kk..kk + NR].try_into().unwrap();
+        for r in 0..MR {
+            let av: &[f32; NR] = rows[r][kk..kk + NR].try_into().unwrap();
+            for l in 0..NR {
+                acc[r][l] += av[l] * xv[l];
+            }
+        }
+        kk += NR;
+    }
+    let mut s = [0.0f32; MR];
+    for r in 0..MR {
+        let mut sr = acc[r].iter().sum::<f32>();
+        for k in nfull..n {
+            sr += rows[r][k] * x[k];
+        }
+        s[r] = sr;
+    }
+    s
+}
+
+/// Lane-fused gemv: `ys.row(l) += A · xs.row(l)` for every lane l.
+///
+/// This is the batched-training controller kernel (A: out×in weights,
+/// xs: L×in lane inputs, ys: L×out lane outputs). The weight matrix is
+/// streamed ONCE per 4-row block across all L lanes — the bandwidth win
+/// over L separate [`gemv`] calls at M=1 — while each lane's per-element
+/// op sequence is exactly `gemv(ys.row_mut(l), a, xs.row(l))`: every
+/// output element receives one `+=` of one complete [`gemv_block4`]/
+/// [`dot`] result, so lane bits are identical to the serial path at any
+/// lane count and any lane position (unlike the micro-kernel GEMMs, which
+/// reassociate — see the module NOTE).
+pub fn gemv_many(ys: &mut Matrix, a: &Matrix, xs: &Matrix) {
+    assert_eq!(ys.rows, xs.rows);
+    assert_eq!(a.cols, xs.cols);
+    assert_eq!(a.rows, ys.cols);
+    let lanes = xs.rows;
+    let m_main = a.rows - a.rows % MR;
+    let mut i0 = 0;
+    while i0 < m_main {
+        let rows: [&[f32]; MR] = [a.row(i0), a.row(i0 + 1), a.row(i0 + 2), a.row(i0 + 3)];
+        for l in 0..lanes {
+            let s = gemv_block4(rows, xs.row(l));
+            let y = ys.row_mut(l);
+            for r in 0..MR {
+                y[i0 + r] += s[r];
+            }
+        }
+        i0 += MR;
+    }
+    for i in m_main..a.rows {
+        for l in 0..lanes {
+            ys.data[l * a.rows + i] += dot(a.row(i), xs.row(l));
+        }
+    }
+}
+
+/// Lane-fused axpy-sweep GEMM: `C.row(l) += A.row(l) · B` for every lane l.
+///
+/// The batched-training backward kernel (A: L×k lane coefficients, B: k×n
+/// weights, C: L×n lane accumulators). Loop order is k outer / lanes
+/// inner so each B row is streamed once across all lanes, but a fixed
+/// lane's op sequence — including the `!= 0.0` sparsity skip — is exactly
+/// the serial backward's `for k { if a[k] != 0 { axpy(c, a[k], B.row(k)) } }`
+/// sweep, so lane bits match the serial path at any lane count.
+pub fn gemm_rowsweep(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+    assert_eq!(a.rows, c.rows);
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.cols, b.cols);
+    let (lanes, n) = (a.rows, b.cols);
+    for k in 0..b.rows {
+        let brow = b.row(k);
+        for l in 0..lanes {
+            let alk = a.get(l, k);
+            if alk != 0.0 {
+                axpy(&mut c.data[l * n..(l + 1) * n], alk, brow);
+            }
+        }
     }
 }
 
@@ -924,6 +1009,72 @@ mod tests {
                 for (g, w) in y.iter().zip(&want) {
                     // gemv keeps dot's summation order: exact match.
                     assert_eq!(g.to_bits(), w.to_bits(), "gemv {m}x{n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_many_matches_gemv_per_lane_bitwise() {
+        // The batched-training forward contract: every lane of gemv_many
+        // carries exactly the serial gemv's bits, at any lane count and
+        // any lane position.
+        let mut rng = Rng::new(107);
+        for &m in &DIMS {
+            for &n in &DIMS {
+                for lanes in [1usize, 2, 3, 8] {
+                    let a = random_matrix(m, n, &mut rng);
+                    let xs = random_matrix(lanes, n, &mut rng);
+                    // Non-zero ys start exercises accumulation semantics.
+                    let mut ys = random_matrix(lanes, m, &mut rng);
+                    let mut want = ys.clone();
+                    for l in 0..lanes {
+                        let mut y = want.row(l).to_vec();
+                        gemv(&mut y, &a, xs.row(l));
+                        want.row_mut(l).copy_from_slice(&y);
+                    }
+                    gemv_many(&mut ys, &a, &xs);
+                    for (i, (g, w)) in ys.data.iter().zip(&want.data).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "gemv_many {m}x{n} lanes={lanes} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_rowsweep_matches_serial_axpy_sweep_bitwise() {
+        // The batched-training backward contract: a fixed lane's bits match
+        // the serial per-row axpy sweep (with its != 0.0 skip) exactly.
+        let mut rng = Rng::new(108);
+        for &k in &DIMS {
+            for &n in &DIMS {
+                for lanes in [1usize, 2, 5, 8] {
+                    let a = random_matrix(lanes, k, &mut rng);
+                    let b = random_matrix(k, n, &mut rng);
+                    let mut c = random_matrix(lanes, n, &mut rng);
+                    let mut want = c.clone();
+                    for l in 0..lanes {
+                        let crow = &mut want.data[l * n..(l + 1) * n];
+                        for kk in 0..k {
+                            let alk = a.get(l, kk);
+                            if alk != 0.0 {
+                                axpy(crow, alk, b.row(kk));
+                            }
+                        }
+                    }
+                    gemm_rowsweep(&mut c, &a, &b);
+                    for (i, (g, w)) in c.data.iter().zip(&want.data).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "gemm_rowsweep k={k} n={n} lanes={lanes} elem {i}: {g} vs {w}"
+                        );
+                    }
                 }
             }
         }

@@ -1,0 +1,456 @@
+//! Batched-episode training (`--batch-fuse B`): each worker drives B
+//! episode lanes in lockstep through the fused training ticks
+//! ([`crate::cores::train_tick_forward`] / [`crate::cores::train_tick_backward`]),
+//! so every controller projection runs as ONE lane-fused kernel per step
+//! and the lanes' ANN lookups merge into a single `ShardPool` dispatch.
+//!
+//! The trainer follows the exact canonical batch protocol of
+//! [`crate::training::Trainer`] and [`super::workers::ParallelTrainer`]:
+//!
+//! 1. the primary lane's parameters are broadcast to every lane of every
+//!    worker;
+//! 2. the whole batch is sampled on the main thread in episode order;
+//! 3. episodes are dealt round-robin (episode e → worker e mod W, exactly
+//!    as `ParallelTrainer`) and each worker runs its slice in consecutive
+//!    groups of ≤ B lanes;
+//! 4. the main thread reduces the per-episode gradients in episode order
+//!    and the optimizer steps.
+//!
+//! Each lane is a full core replica (private memory, ANN, journals, tape)
+//! holding identical parameters; only the controller's dense projections
+//! fuse across lanes, via the order-preserving kernels (`gemv_many` /
+//! `gemm_rowsweep`). Every lane therefore replays the serial float-op
+//! sequence exactly, per-episode gradients are computed from zeroed
+//! accumulators as always, and the reduction is the same fixed-order sum —
+//! so a given seed is **bit-identical at any (workers, batch_fuse)
+//! combination**, including (1, 1) = the serial trainer, for `ann=linear`
+//! (the same caveat as worker count: history-dependent ANN indices can
+//! diverge across lane counts; see `workers`). Pinned by
+//! rust/tests/batch_parity.rs, documented in DESIGN.md "Batched training".
+//!
+//! Cores without a batched seam (`ntm` / `dam` / `dnc`) fall back to the
+//! per-episode serial path inside the same worker/reduction harness, so
+//! `--batch-fuse` is accepted — and deterministic — for every model.
+
+use crate::cores::lstm_core::LstmCore;
+use crate::cores::sam::SamCore;
+use crate::cores::sdnc::SdncCore;
+use crate::cores::{
+    build_core, train_tick_backward, train_tick_forward, BatchCore, Core, CoreConfig, CoreKind,
+    TrainBatch,
+};
+use crate::curriculum::Curriculum;
+use crate::optim::Optimizer;
+use crate::tasks::{episode_loss_grad, Episode, Task};
+use crate::training::{
+    episode_grad, reduce_episode_grads, sample_batch, EpisodeGrad, LogPoint, TrainConfig,
+    TrainLog,
+};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// One worker's lane group: B identical replicas of a batch-capable core,
+/// or the serial fallback for kinds without a batched seam.
+pub enum FusedLanes {
+    Sam(Vec<SamCore>),
+    Sdnc(Vec<SdncCore>),
+    Lstm(Vec<LstmCore>),
+    /// Per-episode serial path (ntm/dam/dnc) inside the same harness.
+    Serial(Box<dyn Core>),
+}
+
+impl FusedLanes {
+    /// Build a lane group. Every lane is constructed from a fresh
+    /// `Rng::new(cfg.seed)` so all lanes (and all workers' lanes) hold
+    /// bit-identical parameters — the same replica contract as
+    /// [`super::workers::ParallelTrainer`].
+    pub fn build(kind: CoreKind, cfg: &CoreConfig, lanes: usize) -> FusedLanes {
+        assert!(lanes >= 1);
+        match kind {
+            CoreKind::Sam => FusedLanes::Sam(
+                (0..lanes).map(|_| SamCore::new(cfg, &mut Rng::new(cfg.seed))).collect(),
+            ),
+            CoreKind::Sdnc => FusedLanes::Sdnc(
+                (0..lanes).map(|_| SdncCore::new(cfg, &mut Rng::new(cfg.seed))).collect(),
+            ),
+            CoreKind::Lstm => FusedLanes::Lstm(
+                (0..lanes).map(|_| LstmCore::new(cfg, &mut Rng::new(cfg.seed))).collect(),
+            ),
+            other => FusedLanes::Serial(build_core(other, cfg, &mut Rng::new(cfg.seed))),
+        }
+    }
+
+    /// The primary lane as a `Core` (lane 0 — parameters are broadcast from
+    /// worker 0's primary every update).
+    fn primary_mut(&mut self) -> &mut dyn Core {
+        match self {
+            FusedLanes::Sam(v) => &mut v[0],
+            FusedLanes::Sdnc(v) => &mut v[0],
+            FusedLanes::Lstm(v) => &mut v[0],
+            FusedLanes::Serial(c) => c.as_mut(),
+        }
+    }
+
+    /// Load `flat` into every lane, optionally skipping lane 0 (the
+    /// broadcast source itself).
+    fn load_all(&mut self, flat: &[f32], skip_primary: bool) {
+        let skip = usize::from(skip_primary);
+        match self {
+            FusedLanes::Sam(v) => v.iter_mut().skip(skip).for_each(|c| c.load_values(flat)),
+            FusedLanes::Sdnc(v) => v.iter_mut().skip(skip).for_each(|c| c.load_values(flat)),
+            FusedLanes::Lstm(v) => v.iter_mut().skip(skip).for_each(|c| c.load_values(flat)),
+            FusedLanes::Serial(c) => {
+                if !skip_primary {
+                    c.load_values(flat);
+                }
+            }
+        }
+    }
+
+    /// Run one group of ≤ B episodes, pushing `(global episode index,
+    /// gradient)` results. Fused kinds run the lockstep ticks; the serial
+    /// fallback runs [`episode_grad`] per episode.
+    fn run_group(
+        &mut self,
+        batch: &mut TrainBatch,
+        task: &dyn Task,
+        eps: &[(usize, &Episode)],
+        out: &mut Vec<(usize, EpisodeGrad)>,
+    ) {
+        match self {
+            FusedLanes::Sam(v) => run_group(v, batch, task, eps, out),
+            FusedLanes::Sdnc(v) => run_group(v, batch, task, eps, out),
+            FusedLanes::Lstm(v) => run_group(v, batch, task, eps, out),
+            FusedLanes::Serial(c) => {
+                for (e, ep) in eps {
+                    out.push((*e, episode_grad(c.as_mut(), task, ep)));
+                }
+            }
+        }
+    }
+}
+
+/// Drive one group of episodes through the fused ticks: lockstep forward
+/// over max-length steps (shorter episodes idle their lane), loss gradients
+/// staged per step, lockstep backward in reverse. Per-episode isolation is
+/// structural — each lane owns its accumulators and is zeroed up front, so
+/// the extracted flat gradients are exactly the serial [`episode_grad`]
+/// vectors.
+fn run_group<C: BatchCore>(
+    lanes: &mut [C],
+    batch: &mut TrainBatch,
+    task: &dyn Task,
+    eps: &[(usize, &Episode)],
+    out: &mut Vec<(usize, EpisodeGrad)>,
+) {
+    let n = eps.len();
+    assert!(n <= lanes.len(), "group of {n} episodes exceeds {} lanes", lanes.len());
+    if n == 0 {
+        return;
+    }
+    let lanes = &mut lanes[..n];
+    let y_dim = lanes[0].y_dim();
+    let t_max = eps.iter().map(|(_, ep)| ep.len()).max().unwrap_or(0);
+    for lane in lanes.iter_mut() {
+        lane.zero_grads();
+        lane.reset();
+    }
+    let mut losses = vec![0.0f64; n];
+    let mut outputs: Vec<Vec<Vec<f32>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut dys: Vec<Vec<Vec<f32>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut xs: Vec<Option<&[f32]>> = Vec::with_capacity(n);
+    for t in 0..t_max {
+        xs.clear();
+        xs.extend(eps.iter().map(|(_, ep)| ep.inputs.get(t).map(|v| v.as_slice())));
+        train_tick_forward(lanes, batch, &xs);
+        for (l, (_, ep)) in eps.iter().enumerate() {
+            if t < ep.len() {
+                let y = batch.y_row(l).to_vec();
+                let (lo, dy) = episode_loss_grad(ep, t, &y);
+                losses[l] += lo as f64;
+                dys[l].push(dy);
+                outputs[l].push(y);
+            }
+        }
+    }
+    let mut active: Vec<bool> = Vec::with_capacity(n);
+    for t in (0..t_max).rev() {
+        active.clear();
+        active.extend(eps.iter().map(|(_, ep)| t < ep.len()));
+        batch.stage_dy(n, y_dim);
+        for (l, (_, ep)) in eps.iter().enumerate() {
+            if t < ep.len() {
+                batch.dy_row_mut(l).copy_from_slice(&dys[l][t]);
+            }
+        }
+        train_tick_backward(lanes, batch, &active);
+    }
+    for (l, (e, ep)) in eps.iter().enumerate() {
+        lanes[l].end_episode();
+        out.push((
+            *e,
+            EpisodeGrad {
+                loss: losses[l],
+                scored: ep.scored_steps(),
+                errors: task.errors(ep, &outputs[l]),
+                grad: lanes[l].save_grads(),
+            },
+        ));
+    }
+}
+
+/// One worker thread's state: its lane group plus the reusable tick scratch.
+struct FusedWorker {
+    lanes: FusedLanes,
+    batch: TrainBatch,
+}
+
+/// The threads × batch trainer (`--workers W --batch-fuse B`): W OS threads,
+/// each fusing up to B episode lanes per tick. See the module docs for the
+/// determinism contract.
+pub struct FusedTrainer {
+    workers: Vec<FusedWorker>,
+    pub opt: Box<dyn Optimizer>,
+    pub cfg: TrainConfig,
+}
+
+impl FusedTrainer {
+    pub fn new(
+        kind: CoreKind,
+        core_cfg: &CoreConfig,
+        n_workers: usize,
+        opt: Box<dyn Optimizer>,
+        cfg: TrainConfig,
+    ) -> FusedTrainer {
+        assert!(n_workers >= 1);
+        let lanes = cfg.batch_fuse.max(1);
+        let mut workers: Vec<FusedWorker> = (0..n_workers)
+            .map(|_| FusedWorker {
+                lanes: FusedLanes::build(kind, core_cfg, lanes),
+                batch: TrainBatch::new(),
+            })
+            .collect();
+        let reference = workers[0].lanes.primary_mut().save_values();
+        for (i, w) in workers.iter_mut().enumerate().skip(1) {
+            assert_eq!(
+                w.lanes.primary_mut().save_values(),
+                reference,
+                "worker {i} replica differs from the primary"
+            );
+        }
+        FusedTrainer { workers, opt, cfg }
+    }
+
+    /// Hand back the primary lane and optimizer (for checkpointing or
+    /// wrapping in a serial [`crate::training::Trainer`] after training).
+    pub fn into_primary(mut self) -> (Box<dyn Core>, Box<dyn Optimizer>) {
+        let w = self.workers.swap_remove(0);
+        let core: Box<dyn Core> = match w.lanes {
+            FusedLanes::Sam(mut v) => Box::new(v.swap_remove(0)),
+            FusedLanes::Sdnc(mut v) => Box::new(v.swap_remove(0)),
+            FusedLanes::Lstm(mut v) => Box::new(v.swap_remove(0)),
+            FusedLanes::Serial(c) => c,
+        };
+        (core, self.opt)
+    }
+
+    pub fn run(&mut self, task: &dyn Task, curriculum: &mut Curriculum) -> TrainLog {
+        let n_workers = self.workers.len();
+        let b = self.cfg.batch_fuse.max(1);
+        let mut log = TrainLog::default();
+        let timer = Timer::start();
+        let mut window_loss = 0.0f64;
+        let mut window_scored = 0usize;
+        let mut window_errors = 0.0f64;
+        let mut window_eps = 0usize;
+        let mut rng = Rng::new(self.cfg.seed);
+
+        for update in 1..=self.cfg.updates {
+            // Broadcast parameters from the primary lane to every lane.
+            let flat = self.workers[0].lanes.primary_mut().save_values();
+            for (wi, w) in self.workers.iter_mut().enumerate() {
+                w.lanes.load_all(&flat, wi == 0);
+            }
+            // Pre-sample the batch on the main thread, in episode order.
+            let episodes = sample_batch(task, curriculum, &mut rng, self.cfg.batch);
+
+            // Deal episodes round-robin (same schedule as ParallelTrainer)
+            // and run each worker's slice in consecutive groups of ≤ B.
+            let mut results: Vec<(usize, EpisodeGrad)> = std::thread::scope(|scope| {
+                let eps = &episodes;
+                let handles: Vec<_> = self
+                    .workers
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(w, worker)| {
+                        scope.spawn(move || {
+                            let mut mine: Vec<(usize, &Episode)> = Vec::new();
+                            let mut e = w;
+                            while e < eps.len() {
+                                mine.push((e, &eps[e]));
+                                e += n_workers;
+                            }
+                            let mut out = Vec::new();
+                            for chunk in mine.chunks(b) {
+                                worker.lanes.run_group(
+                                    &mut worker.batch,
+                                    task,
+                                    chunk,
+                                    &mut out,
+                                );
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+
+            // Deterministic fixed-order reduction: episode order, on this
+            // thread, regardless of lane/worker provenance.
+            results.sort_by_key(|&(e, _)| e);
+            let ordered: Vec<EpisodeGrad> = results.into_iter().map(|(_, r)| r).collect();
+            reduce_episode_grads(self.workers[0].lanes.primary_mut(), &ordered);
+            for r in &ordered {
+                let scored = r.scored.max(1);
+                curriculum.report(r.loss / scored as f64);
+                window_loss += r.loss;
+                window_scored += scored;
+                window_errors += r.errors;
+                window_eps += 1;
+                log.total_episodes += 1;
+            }
+            self.opt.step(self.workers[0].lanes.primary_mut());
+
+            if update % self.cfg.log_every == 0 || update == self.cfg.updates {
+                let point = LogPoint {
+                    update,
+                    loss: window_loss / window_scored.max(1) as f64,
+                    errors: window_errors / window_eps.max(1) as f64,
+                    level: curriculum.h,
+                    wall_s: timer.elapsed_s(),
+                };
+                if self.cfg.verbose {
+                    println!(
+                        "[{}x{}b{}] update {:>5} loss/step {:.4} errors/ep {:.3} level {}",
+                        self.workers[0].lanes.primary_mut().name(),
+                        n_workers,
+                        b,
+                        point.update,
+                        point.loss,
+                        point.errors,
+                        point.level
+                    );
+                }
+                log.points.push(point);
+                window_loss = 0.0;
+                window_scored = 0;
+                window_errors = 0.0;
+                window_eps = 0;
+            }
+        }
+        log.final_level = curriculum.h;
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::RmsProp;
+    use crate::tasks::copy::CopyTask;
+    use crate::training::Trainer;
+
+    fn core_cfg(task: &CopyTask, seed: u64) -> CoreConfig {
+        CoreConfig {
+            x_dim: task.x_dim(),
+            y_dim: task.y_dim(),
+            hidden: 10,
+            heads: 1,
+            word: 6,
+            mem_words: 12,
+            k: 2,
+            seed,
+            ..CoreConfig::default()
+        }
+    }
+
+    fn train_cfg(batch_fuse: usize) -> TrainConfig {
+        TrainConfig {
+            lr: 2e-3,
+            batch: 5,
+            updates: 8,
+            log_every: 4,
+            seed: 11,
+            verbose: false,
+            batch_fuse,
+        }
+    }
+
+    /// The fused trainer at B ∈ {2, 8} (lanes exceeding the batch included)
+    /// produces bit-identical parameters to the serial Trainer for the
+    /// dense witness. The full SAM/SDNC × workers matrix lives in
+    /// rust/tests/batch_parity.rs.
+    #[test]
+    fn fused_lstm_matches_serial_trainer_bitwise() {
+        let task = CopyTask::new(4);
+        let ccfg = core_cfg(&task, 21);
+        let mut serial = Trainer::new(
+            build_core(CoreKind::Lstm, &ccfg, &mut Rng::new(21)),
+            Box::new(RmsProp::new(2e-3)),
+            train_cfg(1),
+        );
+        let mut cur = Curriculum::fixed(2);
+        let slog = serial.run(&task, &mut cur);
+        let sparams = serial.core.save_values();
+
+        for b in [2usize, 8] {
+            let mut fused = FusedTrainer::new(
+                CoreKind::Lstm,
+                &ccfg,
+                1,
+                Box::new(RmsProp::new(2e-3)),
+                train_cfg(b),
+            );
+            let mut cur = Curriculum::fixed(2);
+            let flog = fused.run(&task, &mut cur);
+            assert_eq!(flog.total_episodes, slog.total_episodes);
+            for (a, p) in slog.points.iter().zip(&flog.points) {
+                assert_eq!(a.loss.to_bits(), p.loss.to_bits(), "B={b} loss diverged");
+            }
+            let (mut core, _) = fused.into_primary();
+            let fparams = core.save_values();
+            assert_eq!(sparams.len(), fparams.len());
+            for (x, y) in sparams.iter().zip(&fparams) {
+                assert_eq!(x.to_bits(), y.to_bits(), "B={b} param diverged");
+            }
+        }
+    }
+
+    /// Serial-fallback kinds run through the same harness unchanged.
+    #[test]
+    fn fallback_kind_matches_serial_trainer_bitwise() {
+        let task = CopyTask::new(4);
+        let ccfg = core_cfg(&task, 23);
+        let mut serial = Trainer::new(
+            build_core(CoreKind::Ntm, &ccfg, &mut Rng::new(23)),
+            Box::new(RmsProp::new(2e-3)),
+            train_cfg(1),
+        );
+        let mut cur = Curriculum::fixed(2);
+        serial.run(&task, &mut cur);
+        let sparams = serial.core.save_values();
+
+        let mut fused = FusedTrainer::new(
+            CoreKind::Ntm,
+            &ccfg,
+            2,
+            Box::new(RmsProp::new(2e-3)),
+            train_cfg(4),
+        );
+        let mut cur = Curriculum::fixed(2);
+        fused.run(&task, &mut cur);
+        let (mut core, _) = fused.into_primary();
+        assert_eq!(core.save_values(), sparams);
+    }
+}

@@ -1,6 +1,7 @@
 //! Training stack: episode runner, BPTT trainer with curriculum, and
 //! (optionally) multi-worker data parallelism ([`workers`]).
 
+pub mod batched;
 pub mod workers;
 
 use crate::cores::Core;
@@ -23,11 +24,23 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Print progress lines.
     pub verbose: bool,
+    /// Episode lanes fused per worker through the batched training tick
+    /// (`--batch-fuse`; see [`batched::FusedTrainer`]). 1 = the serial
+    /// per-episode path. Bit-identical at any value for `ann=linear`.
+    pub batch_fuse: usize,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { lr: 1e-4, batch: 8, updates: 200, log_every: 10, seed: 7, verbose: false }
+        TrainConfig {
+            lr: 1e-4,
+            batch: 8,
+            updates: 200,
+            log_every: 10,
+            seed: 7,
+            verbose: false,
+            batch_fuse: 1,
+        }
     }
 }
 

@@ -15,3 +15,10 @@ pub mod timer;
 pub fn env_shards() -> Option<usize> {
     std::env::var("SAM_TEST_SHARDS").ok().and_then(|v| v.parse().ok()).filter(|&s| s >= 1)
 }
+
+/// Batch-lane override for batch-sensitive test suites: CI's
+/// `SAM_TEST_BATCH=4` matrix leg re-runs them at that B in addition to
+/// their built-in lane sets (see rust/tests/batch_parity.rs).
+pub fn env_batch() -> Option<usize> {
+    std::env::var("SAM_TEST_BATCH").ok().and_then(|v| v.parse().ok()).filter(|&b| b >= 1)
+}

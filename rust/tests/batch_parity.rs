@@ -1,0 +1,327 @@
+//! Determinism of the batched-episode training path (`--batch-fuse B`):
+//! the `FusedTrainer` must produce **bit-identical** loss curves,
+//! curriculum trajectories and final parameters to the serial `Trainer`
+//! at every (workers, batch_fuse) combination, and the batched backward
+//! tick must agree with finite differences of the batched forward loss.
+//!
+//! Why this holds: each lane is a full core replica holding identical
+//! parameters, the lane-fused kernels (`gemv_many` / `gemm_rowsweep`)
+//! preserve the serial per-lane reduction order exactly, and the trainer
+//! reduces per-episode gradients in episode order on the main thread —
+//! see `training::batched` docs and DESIGN.md "Batched training".
+//!
+//! Cores here use `AnnKind::Linear` (content-deterministic reads), the
+//! same caveat as rust/tests/parallel_parity.rs: the approximate indexes
+//! keep per-(W, B) determinism but not cross-count parity.
+//!
+//! CI re-runs the matrix with `SAM_TEST_BATCH=4` (see `sam::util::env_batch`),
+//! which adds that B to the built-in {1, 2, 8} set.
+
+use sam::cores::{train_tick_backward, train_tick_forward, BatchCore, TrainBatch};
+use sam::prelude::*;
+use sam::tasks::episode_loss_grad;
+use sam::training::TrainLog;
+use sam::util::env_batch;
+
+fn core_cfg(task: &dyn Task, seed: u64) -> CoreConfig {
+    CoreConfig {
+        x_dim: task.x_dim(),
+        y_dim: task.y_dim(),
+        hidden: 12,
+        heads: 2,
+        word: 8,
+        mem_words: 16,
+        k: 2,
+        k_l: 3,
+        ann: AnnKind::Linear,
+        seed,
+        ..CoreConfig::default()
+    }
+}
+
+fn train_cfg(seed: u64, batch_fuse: usize) -> TrainConfig {
+    TrainConfig {
+        lr: 2e-3,
+        batch: 5,
+        updates: 12,
+        log_every: 2,
+        seed,
+        batch_fuse,
+        ..TrainConfig::default()
+    }
+}
+
+fn curriculum() -> Curriculum {
+    // Exponential so curriculum *decisions* (report ordering) are part of
+    // the parity check, with a threshold loose enough to actually advance.
+    let mut c = Curriculum::exponential(2, 16, 3.0);
+    c.patience = 4;
+    c
+}
+
+/// The built-in lane counts plus CI's `SAM_TEST_BATCH` override, if any.
+fn lane_counts() -> Vec<usize> {
+    let mut bs = vec![1usize, 2, 8];
+    if let Some(extra) = env_batch() {
+        if !bs.contains(&extra) {
+            bs.push(extra);
+        }
+    }
+    bs
+}
+
+fn run_serial(kind: CoreKind, seed: u64) -> (TrainLog, Vec<f32>) {
+    let task = CopyTask::new(4);
+    let cfg = core_cfg(&task, seed);
+    let mut rng = Rng::new(seed);
+    let core = build_core(kind, &cfg, &mut rng);
+    let mut t = Trainer::new(core, Box::new(RmsProp::new(2e-3)), train_cfg(seed, 1));
+    let mut cur = curriculum();
+    let log = t.run(&task, &mut cur);
+    let params = t.core.save_values();
+    (log, params)
+}
+
+fn run_fused(kind: CoreKind, seed: u64, workers: usize, b: usize) -> (TrainLog, Vec<f32>) {
+    let task = CopyTask::new(4);
+    let cfg = core_cfg(&task, seed);
+    let mut ft =
+        FusedTrainer::new(kind, &cfg, workers, Box::new(RmsProp::new(2e-3)), train_cfg(seed, b));
+    let mut cur = curriculum();
+    let log = ft.run(&task, &mut cur);
+    let (mut core, _) = ft.into_primary();
+    let params = core.save_values();
+    (log, params)
+}
+
+fn assert_logs_bit_identical(a: &TrainLog, b: &TrainLog, what: &str) {
+    assert_eq!(a.total_episodes, b.total_episodes, "{what}: episode counts");
+    assert_eq!(a.final_level, b.final_level, "{what}: final curriculum level");
+    assert_eq!(a.points.len(), b.points.len(), "{what}: log point counts");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.update, pb.update, "{what}: update index");
+        assert_eq!(
+            pa.loss.to_bits(),
+            pb.loss.to_bits(),
+            "{what}: loss differs at update {} ({} vs {})",
+            pa.update,
+            pa.loss,
+            pb.loss
+        );
+        assert_eq!(
+            pa.errors.to_bits(),
+            pb.errors.to_bits(),
+            "{what}: errors differ at update {}",
+            pa.update
+        );
+        assert_eq!(pa.level, pb.level, "{what}: curriculum level at update {}", pa.update);
+    }
+}
+
+fn assert_params_bit_identical(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: param counts");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: param[{i}] {x} vs {y}");
+    }
+}
+
+fn parity_matrix(kind: CoreKind, seed: u64, name: &str) {
+    let (serial_log, serial_params) = run_serial(kind, seed);
+    for b in lane_counts() {
+        for workers in [1usize, 4] {
+            let what = format!("{name} x{workers} b{b}");
+            let (log, params) = run_fused(kind, seed, workers, b);
+            assert_logs_bit_identical(&serial_log, &log, &what);
+            assert_params_bit_identical(&serial_params, &params, &what);
+        }
+    }
+}
+
+#[test]
+fn sam_batched_all_lane_and_worker_counts_bit_identical() {
+    parity_matrix(CoreKind::Sam, 42, "sam");
+}
+
+#[test]
+fn sdnc_batched_all_lane_and_worker_counts_bit_identical() {
+    parity_matrix(CoreKind::Sdnc, 9, "sdnc");
+}
+
+#[test]
+fn batched_training_actually_learns() {
+    // Guard against a parity fix that silently zeroes the gradients: the
+    // fused run must still reduce the loss.
+    let (log, _) = run_fused(CoreKind::Sam, 11, 2, 4);
+    assert!(log.points.len() >= 2);
+    assert!(
+        log.best_loss() <= log.points[0].loss,
+        "no learning signal: {:?}",
+        log.points.iter().map(|p| p.loss).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Finite-difference check of the batched backward ticks
+// ---------------------------------------------------------------------------
+//
+// The fused kernels stream lane 0's weights across every lane, so a
+// parameter perturbation must be loaded into ALL lanes; the derivative of
+// the summed batch loss w.r.t. one shared parameter is then the sum of the
+// per-lane analytic gradients at that index.
+
+
+/// Total batched loss over the group at the given parameters: forward
+/// ticks only, tape discarded via rollback (the eval-only protocol).
+fn batched_loss<C: BatchCore>(
+    lanes: &mut [C],
+    batch: &mut TrainBatch,
+    eps: &[Episode],
+    flat: &[f32],
+) -> f64 {
+    let n = eps.len();
+    let lanes = &mut lanes[..n];
+    for lane in lanes.iter_mut() {
+        lane.load_values(flat);
+        lane.zero_grads();
+        lane.reset();
+    }
+    let t_max = eps.iter().map(|ep| ep.inputs.len()).max().unwrap_or(0);
+    let mut total = 0.0f64;
+    let mut xs: Vec<Option<&[f32]>> = Vec::with_capacity(n);
+    for t in 0..t_max {
+        xs.clear();
+        xs.extend(eps.iter().map(|ep| ep.inputs.get(t).map(|v| v.as_slice())));
+        train_tick_forward(lanes, batch, &xs);
+        for (l, ep) in eps.iter().enumerate() {
+            if t < ep.inputs.len() {
+                let (lo, _) = episode_loss_grad(ep, t, batch.y_row(l));
+                total += lo as f64;
+            }
+        }
+    }
+    for lane in lanes.iter_mut() {
+        lane.rollback();
+        lane.end_episode();
+    }
+    total
+}
+
+/// Per-lane analytic gradients of the batched loss: the full
+/// forward-then-reverse tick protocol of `FusedLanes::run_group`.
+fn batched_grads<C: BatchCore>(
+    lanes: &mut [C],
+    batch: &mut TrainBatch,
+    eps: &[Episode],
+    flat: &[f32],
+) -> Vec<Vec<f32>> {
+    let n = eps.len();
+    let lanes = &mut lanes[..n];
+    let y_dim = lanes[0].y_dim();
+    for lane in lanes.iter_mut() {
+        lane.load_values(flat);
+        lane.zero_grads();
+        lane.reset();
+    }
+    let t_max = eps.iter().map(|ep| ep.inputs.len()).max().unwrap_or(0);
+    let mut dys: Vec<Vec<Vec<f32>>> = (0..n).map(|_| Vec::new()).collect();
+    let mut xs: Vec<Option<&[f32]>> = Vec::with_capacity(n);
+    for t in 0..t_max {
+        xs.clear();
+        xs.extend(eps.iter().map(|ep| ep.inputs.get(t).map(|v| v.as_slice())));
+        train_tick_forward(lanes, batch, &xs);
+        for (l, ep) in eps.iter().enumerate() {
+            if t < ep.inputs.len() {
+                let (_, dy) = episode_loss_grad(ep, t, batch.y_row(l));
+                dys[l].push(dy);
+            }
+        }
+    }
+    let mut active: Vec<bool> = Vec::with_capacity(n);
+    for t in (0..t_max).rev() {
+        active.clear();
+        active.extend(eps.iter().map(|ep| t < ep.inputs.len()));
+        batch.stage_dy(n, y_dim);
+        for (l, ep) in eps.iter().enumerate() {
+            if t < ep.inputs.len() {
+                batch.dy_row_mut(l).copy_from_slice(&dys[l][t]);
+            }
+        }
+        train_tick_backward(lanes, batch, &active);
+    }
+    lanes
+        .iter_mut()
+        .map(|lane| {
+            let g = lane.save_grads();
+            lane.end_episode();
+            g
+        })
+        .collect()
+}
+
+/// Same failure-fraction scheme as rust/tests/grad_check.rs: f32 forward
+/// cancellation noise and discrete structure (ANN top-K, LRA argmin)
+/// flipping under the FD perturbation account for a tolerated few, while
+/// a systematic backward-tick bug fails essentially every probe.
+fn grad_check<C: BatchCore>(mut lanes: Vec<C>, fd_eps: f32, tol: f64, name: &str) {
+    let task = CopyTask::new(4);
+    let mut rng = Rng::new(5);
+    // Ragged lengths so the idle-lane legs of both ticks are exercised.
+    let eps: Vec<Episode> =
+        (0..lanes.len()).map(|i| task.sample(2 + i, &mut rng)).collect();
+    let mut batch = TrainBatch::new();
+    let flat = lanes[0].save_values();
+    let grads = batched_grads(&mut lanes, &mut batch, &eps, &flat);
+    let n = flat.len();
+    assert!(grads.iter().all(|g| g.len() == n));
+
+    let probes = 16usize;
+    let mut checked = 0usize;
+    let mut failed = 0usize;
+    for s in 0..probes {
+        // Indices spread across the whole parameter vector (cell, head and
+        // output projections all land in the sample).
+        let idx = s * (n - 1) / (probes - 1);
+        let mut up = flat.clone();
+        up[idx] += fd_eps;
+        let mut dn = flat.clone();
+        dn[idx] -= fd_eps;
+        let lp = batched_loss(&mut lanes, &mut batch, &eps, &up);
+        let lm = batched_loss(&mut lanes, &mut batch, &eps, &dn);
+        let fd = (lp - lm) / (2.0 * fd_eps as f64);
+        // The fused kernels stream shared weights, so the derivative of
+        // the summed batch loss is the SUM of per-lane gradients here.
+        let analytic: f64 = grads.iter().map(|g| g[idx] as f64).sum();
+        if fd.abs() < 1e-3 && analytic.abs() < 1e-3 {
+            continue; // both negligible: nothing to compare at f32 precision
+        }
+        checked += 1;
+        let denom = fd.abs().max(analytic.abs()).max(5e-2);
+        if (fd - analytic).abs() / denom > tol {
+            eprintln!("{name}: param[{idx}] analytic {analytic:.6} vs FD {fd:.6}");
+            failed += 1;
+        }
+    }
+    assert!(checked >= 6, "{name}: too few non-trivial FD probes ({checked})");
+    assert!(
+        failed * 8 <= checked,
+        "{name}: {failed}/{checked} batched FD probes failed (allowed 1/8)"
+    );
+}
+
+#[test]
+fn sam_batched_backward_matches_finite_differences() {
+    let task = CopyTask::new(4);
+    let cfg = core_cfg(&task, 31);
+    let lanes: Vec<sam::cores::sam::SamCore> =
+        (0..3).map(|_| sam::cores::sam::SamCore::new(&cfg, &mut Rng::new(31))).collect();
+    grad_check(lanes, 5e-3, 0.2, "sam");
+}
+
+#[test]
+fn sdnc_batched_backward_matches_finite_differences() {
+    let task = CopyTask::new(4);
+    let cfg = core_cfg(&task, 33);
+    let lanes: Vec<sam::cores::sdnc::SdncCore> =
+        (0..3).map(|_| sam::cores::sdnc::SdncCore::new(&cfg, &mut Rng::new(33))).collect();
+    grad_check(lanes, 1e-2, 0.25, "sdnc");
+}

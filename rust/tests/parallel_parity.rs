@@ -31,7 +31,7 @@ fn core_cfg(task: &dyn Task, seed: u64) -> CoreConfig {
 }
 
 fn train_cfg(seed: u64) -> TrainConfig {
-    TrainConfig { lr: 2e-3, batch: 5, updates: 12, log_every: 2, seed, verbose: false }
+    TrainConfig { lr: 2e-3, batch: 5, updates: 12, log_every: 2, seed, ..TrainConfig::default() }
 }
 
 fn curriculum() -> Curriculum {

@@ -270,6 +270,108 @@ fn sharded_parallel_query_dispatch_allocates_nothing_after_warmup() {
     assert_eq!(e.tape_bytes(), 0);
 }
 
+fn run_batched_ticks<C: sam::cores::BatchCore>(mut lanes: Vec<C>, y_dim: usize, label: &str) {
+    // The batched-training twin of `run_core`: after warm-up, a full
+    // B-lane training tick — `train_tick_forward` + `train_tick_backward`
+    // — allocates nothing. The `TrainBatch` gather/scatter matrices, every
+    // lane's tape/journal pools and the merged ANN staging all converge
+    // during warm-up; dY staging and the loss computation sit outside the
+    // measured window exactly like the loss in `run_core`.
+    use sam::cores::{train_tick_backward, train_tick_forward, TrainBatch};
+
+    let b = lanes.len();
+    let x_dim = lanes[0].x_dim();
+    let t_len = 8;
+    let mut rng = Rng::new(1234);
+    let xs: Vec<Vec<Vec<f32>>> = (0..t_len)
+        .map(|_| {
+            (0..b)
+                .map(|_| (0..x_dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+                .collect()
+        })
+        .collect();
+    let ts: Vec<Vec<Vec<f32>>> = (0..t_len)
+        .map(|_| {
+            (0..b)
+                .map(|_| (0..y_dim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+                .collect()
+        })
+        .collect();
+
+    let mut batch = TrainBatch::new();
+    let active = vec![true; b];
+    let mut lane_refs: Vec<Option<&[f32]>>;
+    let mut dys: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut first_bits: Vec<Vec<u32>> = Vec::new();
+
+    for ep in 0..=WARMUP_EPISODES {
+        for lane in lanes.iter_mut() {
+            lane.zero_grads();
+            lane.reset();
+        }
+        dys.clear();
+        let mut allocs = 0usize;
+        let mut bits: Vec<Vec<u32>> = Vec::new();
+        for t in 0..t_len {
+            lane_refs = xs[t].iter().map(|x| Some(x.as_slice())).collect();
+            let before = thread_alloc_count();
+            train_tick_forward(&mut lanes, &mut batch, &lane_refs);
+            allocs += thread_alloc_count() - before;
+            let mut step_dys = Vec::new();
+            for l in 0..b {
+                bits.push(batch.y_row(l).iter().map(|v| v.to_bits()).collect());
+                step_dys.push(sigmoid_xent(batch.y_row(l), &ts[t][l]).1);
+            }
+            dys.push(step_dys);
+        }
+        for t in (0..t_len).rev() {
+            batch.stage_dy(b, y_dim);
+            for l in 0..b {
+                batch.dy_row_mut(l).copy_from_slice(&dys[t][l]);
+            }
+            let before = thread_alloc_count();
+            train_tick_backward(&mut lanes, &mut batch, &active);
+            allocs += thread_alloc_count() - before;
+        }
+        for lane in lanes.iter_mut() {
+            lane.end_episode();
+        }
+        if ep == 0 {
+            first_bits = bits;
+        } else {
+            assert_eq!(
+                first_bits, bits,
+                "{label}: batch-buffer recycling changed outputs in episode {ep}"
+            );
+        }
+        if ep == WARMUP_EPISODES {
+            assert_eq!(
+                allocs, 0,
+                "{label}: steady-state batched episode performed {allocs} allocations \
+                 across {t_len} forward + {t_len} backward ticks over {b} lanes"
+            );
+        }
+    }
+}
+
+#[test]
+fn sam_batched_ticks_allocate_nothing_after_warmup() {
+    use sam::cores::sam::SamCore;
+    let b = sam::util::env_batch().unwrap_or(4);
+    let c = cfg(5, 4);
+    let lanes: Vec<SamCore> = (0..b).map(|_| SamCore::new(&c, &mut Rng::new(7))).collect();
+    run_batched_ticks(lanes, 4, "sam-batched");
+}
+
+#[test]
+fn sdnc_batched_ticks_allocate_nothing_after_warmup() {
+    use sam::cores::sdnc::SdncCore;
+    let b = sam::util::env_batch().unwrap_or(4);
+    let c = cfg(5, 4);
+    let lanes: Vec<SdncCore> = (0..b).map(|_| SdncCore::new(&c, &mut Rng::new(8))).collect();
+    run_batched_ticks(lanes, 4, "sdnc-batched");
+}
+
 #[test]
 fn sam_steps_stay_lean_at_larger_scale() {
     // A second shape point (more heads, bigger memory) so the guarantee
