@@ -16,6 +16,7 @@ use sam::cores::{CoreConfig, CoreKind};
 use sam::prelude::*;
 use sam::serving::{build_infer_model, InferModel as _, SessionConfig, SessionManager};
 use sam::util::json::Json;
+use sam::util::metrics;
 use sam::util::timer::Timer;
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -197,6 +198,22 @@ fn main() {
                     ("spill_us", Json::num(spill_us)),
                     ("rehydrate_step_us", Json::num(rehydrate_us)),
                     ("file_bytes", Json::num(spill_bytes as f64)),
+                ]),
+            ),
+            // Registry view of the same run: the step-latency histogram the
+            // `{"metrics"}` endpoint would report (bucketed, so the
+            // percentiles are upper bounds vs the exact ones above).
+            (
+                "metrics",
+                Json::obj(vec![
+                    (
+                        "step_latency_us",
+                        metrics::hist_summary_json(&metrics::SERVE_STEP_LATENCY_US),
+                    ),
+                    (
+                        "queue_latency_us",
+                        metrics::hist_summary_json(&metrics::SERVE_QUEUE_LATENCY_US),
+                    ),
                 ]),
             ),
         ]),

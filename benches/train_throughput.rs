@@ -16,6 +16,7 @@ use sam::cores::{CoreConfig, CoreKind};
 use sam::prelude::*;
 use sam::training::TrainLog;
 use sam::util::json::Json;
+use sam::util::metrics;
 use sam::util::timer::Timer;
 
 /// The B=8 threads×batch rate must clear this multiple of threads-only.
@@ -183,6 +184,36 @@ fn main() {
                     ("speedup_vs_threads", Json::num(verdict_speedup)),
                     ("min_required", Json::num(VERDICT_MIN_SPEEDUP)),
                     ("pass", Json::Bool(pass)),
+                ]),
+            ),
+            // Where the tick time went, from the in-process registry: one
+            // summary per F/B phase plus the gradient-reduce histogram,
+            // accumulated over every configuration this run trained.
+            (
+                "metrics",
+                Json::obj(vec![
+                    (
+                        "grad_reduce_us",
+                        metrics::hist_summary_json(&metrics::TRAIN_GRAD_REDUCE_US),
+                    ),
+                    (
+                        "fwd_phase_us",
+                        Json::Arr(
+                            metrics::TRAIN_FWD_PHASE_US
+                                .iter()
+                                .map(metrics::hist_summary_json)
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "bwd_phase_us",
+                        Json::Arr(
+                            metrics::TRAIN_BWD_PHASE_US
+                                .iter()
+                                .map(metrics::hist_summary_json)
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
         ]),

@@ -86,6 +86,10 @@ struct SearchScratch {
     selected: Vec<u32>,
     /// Degree-overflow pruning staging.
     prune: Vec<(f32, u32)>,
+    /// Distance evaluations of the last `search_layer` call (the metrics
+    /// candidate count; also written by insert-side searches, read only by
+    /// queries).
+    visited: usize,
 }
 
 impl SearchScratch {
@@ -157,6 +161,7 @@ fn search_layer(
     sc.cand.clear();
     sc.best.clear();
     let d0 = dist_sq(qn, rowslice(data, dim, entry));
+    sc.visited = 1;
     sc.stamp[entry as usize] = stamp;
     sc.cand.push(Near(d0, entry));
     sc.best.push(Far(d0, entry));
@@ -170,6 +175,7 @@ fn search_layer(
             }
             sc.stamp[v as usize] = stamp;
             let dv = dist_sq(qn, rowslice(data, dim, v));
+            sc.visited += 1;
             if sc.best.len() < ef || dv < sc.best.peek().map_or(f32::INFINITY, |f| f.0) {
                 sc.cand.push(Near(dv, v));
                 sc.best.push(Far(dv, v));
@@ -367,6 +373,7 @@ impl HnswIndex {
                 sorted: Vec::new(),
                 selected: Vec::new(),
                 prune: Vec::new(),
+                visited: 0,
             },
             rebuilds: 0,
         }
@@ -543,6 +550,7 @@ impl HnswIndex {
             self.qn.iter_mut().for_each(|x| *x *= inv);
         }
         self.scratch.sorted.clear();
+        self.scratch.visited = 0;
         let Some(ep) = self.entry else {
             return;
         };
@@ -636,6 +644,8 @@ impl AnnIndex for HnswIndex {
 
     fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
         self.search_topk(q, k);
+        crate::util::metrics::ANN_QUERIES.inc();
+        crate::util::metrics::ANN_CANDIDATES.add(self.scratch.visited as u64);
         self.scratch
             .sorted
             .iter()
@@ -672,6 +682,8 @@ impl AnnIndex for HnswIndex {
         out.truncate(queries.len());
         for (q, slot) in queries.iter().zip(out.iter_mut()) {
             self.search_topk(q, k);
+            crate::util::metrics::ANN_QUERIES.inc();
+            crate::util::metrics::ANN_CANDIDATES.add(self.scratch.visited as u64);
             slot.clear();
             slot.extend(
                 self.scratch
@@ -690,6 +702,7 @@ impl AnnIndex for HnswIndex {
         }
         self.entry = None;
         self.rebuilds += 1;
+        crate::util::metrics::ANN_FULL_REBUILDS.inc();
         for id in 0..self.present.len() {
             if self.present[id] {
                 self.connect(id);

@@ -185,6 +185,7 @@ impl KdForest {
         self.trees = (0..self.n_trees).map(|_| self.build_tree()).collect();
         self.inserts_since_rebuild = 0;
         self.rebuilds += 1;
+        crate::util::metrics::ANN_FULL_REBUILDS.inc();
     }
 
     /// Descend to the leaf for `v` in tree `t`, returning the node index.
@@ -332,6 +333,8 @@ impl AnnIndex for KdForest {
                 }
             }
         }
+        crate::util::metrics::ANN_QUERIES.inc();
+        crate::util::metrics::ANN_CANDIDATES.add(checked as u64);
         best.into_iter()
             .map(|(id, d2)| (id, unit_dist_sq_to_cosine(d2)))
             .collect()

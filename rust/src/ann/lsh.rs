@@ -242,6 +242,8 @@ impl AnnIndex for LshIndex {
             stamp,
             &mut self.cand,
         );
+        crate::util::metrics::ANN_QUERIES.inc();
+        crate::util::metrics::ANN_CANDIDATES.add(self.cand.len() as u64);
         let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
         for &id in &self.cand {
             let d2 = dist_sq(&self.qn_scratch, self.point(id));
@@ -300,6 +302,8 @@ impl AnnIndex for LshIndex {
                 stamp,
                 &mut self.cand,
             );
+            crate::util::metrics::ANN_QUERIES.inc();
+            crate::util::metrics::ANN_CANDIDATES.add(self.cand.len() as u64);
             slot.clear();
             slot.reserve(k + 1);
             for &id in &self.cand {
@@ -337,6 +341,7 @@ impl AnnIndex for LshIndex {
         }
         self.ops_since_compact = 0;
         self.rebuilds += 1;
+        crate::util::metrics::ANN_FULL_REBUILDS.inc();
     }
 
     fn full_rebuilds(&self) -> usize {

@@ -24,6 +24,7 @@ pub use lsh::LshIndex;
 
 use crate::tensor::matrix::dot;
 use crate::tensor::rowcodec::{RowFormat, RowStore};
+use crate::util::metrics;
 
 /// Which ANN backs a SAM memory (CLI / config selectable).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -287,6 +288,8 @@ impl AnnIndex for LinearIndex {
     }
 
     fn query(&mut self, q: &[f32], k: usize) -> Vec<(usize, f32)> {
+        metrics::ANN_QUERIES.inc();
+        metrics::ANN_CANDIDATES.add(self.count as u64);
         let qn = normalized(q);
         // Max-heap on (negated) distance of current top-k via simple vec;
         // k is tiny (4-16) so insertion into a sorted vec is fastest.
@@ -314,6 +317,8 @@ impl AnnIndex for LinearIndex {
     /// scans. Per-query results are bit-identical to sequential `query`
     /// calls (same comparisons in the same id order).
     fn query_many(&mut self, queries: &[&[f32]], k: usize) -> Vec<Vec<(usize, f32)>> {
+        metrics::ANN_QUERIES.add(queries.len() as u64);
+        metrics::ANN_CANDIDATES.add(self.count as u64 * queries.len() as u64);
         let qns: Vec<Vec<f32>> = queries.iter().map(|q| normalized(q)).collect();
         let mut bests: Vec<Vec<(usize, f32)>> =
             (0..queries.len()).map(|_| Vec::with_capacity(k + 1)).collect();
@@ -369,6 +374,8 @@ impl AnnIndex for LinearIndex {
         k: usize,
         out: &mut Vec<Vec<(usize, f32)>>,
     ) {
+        metrics::ANN_QUERIES.add(queries.len() as u64);
+        metrics::ANN_CANDIDATES.add(self.count as u64 * queries.len() as u64);
         let dim = self.dim;
         self.qn_scratch.clear();
         for q in queries {

@@ -30,10 +30,13 @@
 //!   → {"close": id}                         close a session
 //!   → {"inputs": [[f32…], …]}               stateless episode (open-step-close)
 //!   → {"ping": true}  /  {"stats": true}    health / accounting
+//!   → {"metrics": true}                     Prometheus text exposition
 //!   ← {"session": id} / {"session": id, "output": [f32…]} / {"closed": b}
 //!     {"outputs": [[f32…], …]} / {"pong": true}
+//!     {"metrics": "# TYPE sam_serve_steps_total counter\n…"}
 //!     {"error": "…", "retryable": false}
 //!     {"error": "overloaded", "retryable": true, "retry_after_ms": n}
+//!     {"error": "unavailable", "retryable": true}   (scheduler stopped/dead)
 //!
 //! Sessions opened over a connection are closed when that connection goes
 //! away (EOF or error), never when it merely idles.
@@ -49,6 +52,7 @@
 
 use crate::serving::{BatchScheduler, InferModel, SessionConfig, SessionError, SessionManager};
 use crate::util::json::Json;
+use crate::util::metrics;
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
@@ -366,6 +370,7 @@ pub fn handle_request(ctx: &ServerCtx, line: &str, conn_sessions: &mut Vec<u64>)
     }
     if req.get("stats").is_some() {
         let (spilled, rehydrated, corrupt) = ctx.mgr.spill_stats();
+        let (evicted, expired) = ctx.mgr.eviction_stats();
         return Ok(Json::obj(vec![
             ("sessions", Json::num(ctx.mgr.session_count() as f64)),
             ("state_bytes", Json::num(ctx.mgr.state_heap_bytes() as f64)),
@@ -374,7 +379,25 @@ pub fn handle_request(ctx: &ServerCtx, line: &str, conn_sessions: &mut Vec<u64>)
             ("spilled", Json::num(spilled as f64)),
             ("rehydrated", Json::num(rehydrated as f64)),
             ("corrupt_dropped", Json::num(corrupt as f64)),
+            ("evicted", Json::num(evicted as f64)),
+            ("expired", Json::num(expired as f64)),
+            ("spill_failures", Json::num(ctx.mgr.spill_failures() as f64)),
+            // Process-wide serving metrics (the registry is global, so on a
+            // multi-manager process these cover every manager).
+            ("steps", Json::num(metrics::SERVE_STEPS.get() as f64)),
+            ("step_latency_us", metrics::hist_summary_json(&metrics::SERVE_STEP_LATENCY_US)),
+            ("queue_latency_us", metrics::hist_summary_json(&metrics::SERVE_QUEUE_LATENCY_US)),
+            ("ticks", Json::num(metrics::SERVE_TICKS.get() as f64)),
+            ("tick_requests", Json::num(metrics::SERVE_TICK_REQUESTS.get() as f64)),
+            ("tick_fill_permille", Json::num(metrics::SERVE_TICK_FILL_PERMILLE.get() as f64)),
         ]));
+    }
+    if req.get("metrics").is_some() {
+        // Full registry in Prometheus text exposition format, shipped as a
+        // single JSON string so the line protocol stays newline-delimited.
+        // A sidecar (or the CI smoke step) unwraps the "metrics" field and
+        // has a standard scrape body.
+        return Ok(Json::obj(vec![("metrics", Json::str(metrics::render_prometheus()))]));
     }
     if let Some(open) = req.get("open") {
         let opened = match open.get("seed").and_then(|s| s.as_f64()) {
@@ -435,8 +458,19 @@ pub fn handle_request(ctx: &ServerCtx, line: &str, conn_sessions: &mut Vec<u64>)
         let x = parse_floats(input)?;
         let y = match ctx.sched.step_blocking(id, x) {
             Ok(y) => y,
+            Err(SessionError::SchedulerStopped) => {
+                // The session still exists (possibly spilled) — only the
+                // scheduler is gone (shutdown or tick panic). Keep the
+                // ownership record and answer with a structured retryable
+                // reply, NOT a non-retryable Err: a client that retries
+                // against a restarted server finds its session again.
+                return Ok(Json::obj(vec![
+                    ("error", Json::str("unavailable")),
+                    ("retryable", Json::Bool(true)),
+                ]));
+            }
             Err(e) => {
-                if matches!(e, crate::serving::SessionError::NoSuchSession(_)) {
+                if matches!(e, SessionError::NoSuchSession(_)) {
                     conn_sessions.retain(|&s| s != id);
                 }
                 return Err(anyhow!("{e}"));
@@ -467,6 +501,13 @@ pub fn handle_request(ctx: &ServerCtx, line: &str, conn_sessions: &mut Vec<u64>)
         for x in xs {
             match ctx.sched.step_blocking(id, x) {
                 Ok(y) => outs.push(y),
+                Err(SessionError::SchedulerStopped) => {
+                    ctx.mgr.close(id);
+                    return Ok(Json::obj(vec![
+                        ("error", Json::str("unavailable")),
+                        ("retryable", Json::Bool(true)),
+                    ]));
+                }
                 Err(e) => {
                     ctx.mgr.close(id);
                     return Err(anyhow!("{e}"));
@@ -479,7 +520,7 @@ pub fn handle_request(ctx: &ServerCtx, line: &str, conn_sessions: &mut Vec<u64>)
             Json::arr(outs.iter().map(|o| Json::floats(o))),
         )]));
     }
-    Err(anyhow!("unknown request (want open/session/close/reset/inputs/ping/stats)"))
+    Err(anyhow!("unknown request (want open/session/close/reset/inputs/ping/stats/metrics)"))
 }
 
 #[cfg(test)]
@@ -672,6 +713,116 @@ mod tests {
 
         ctx.sched.stop();
         let _ = std::fs::remove_file(&blocker);
+    }
+
+    #[test]
+    fn stopped_scheduler_steps_answer_unavailable_retryable() {
+        // A step against a stopped scheduler must come back as a
+        // structured `{"error":"unavailable","retryable":true}` reply —
+        // not the non-retryable Err path, and never "no such session":
+        // the session still exists, only the scheduler is gone.
+        let (ctx, mgr) = test_ctx();
+        let mut owned = Vec::new();
+        let r = handle_request(&ctx, r#"{"open": {"seed": 4}}"#, &mut owned).unwrap();
+        let id = r.get("session").unwrap().as_f64().unwrap() as u64;
+        ctx.sched.stop();
+        let r = handle_request(
+            &ctx,
+            &format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#),
+            &mut owned,
+        )
+        .unwrap();
+        assert_eq!(r.get("error").unwrap().as_str(), Some("unavailable"));
+        assert_eq!(r.get("retryable").unwrap().as_bool(), Some(true));
+        assert_eq!(owned, vec![id], "ownership must survive an unavailable reply");
+        assert_eq!(mgr.session_count(), 1, "the session must survive too");
+        // The stateless episode path degrades the same way.
+        let r = handle_request(&ctx, r#"{"inputs": [[1,0,0,0]]}"#, &mut owned).unwrap();
+        assert_eq!(r.get("error").unwrap().as_str(), Some("unavailable"));
+        assert_eq!(r.get("retryable").unwrap().as_bool(), Some(true));
+    }
+
+    /// Minimal Prometheus-text validation shared with the CI smoke step's
+    /// shell check: a `# TYPE` header appears, every sample line parses as
+    /// `name[{labels}] <integer>`, and the three layer families are present.
+    fn assert_valid_prometheus(text: &str) {
+        assert!(text.starts_with("# TYPE "), "exposition must open with a TYPE line");
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').unwrap_or(("", ""));
+            assert!(!name.is_empty(), "malformed sample line {line:?}");
+            assert!(value.parse::<u64>().is_ok(), "non-numeric sample in {line:?}");
+        }
+        for family in ["sam_train_", "sam_serve_", "sam_sessions_", "sam_mem_", "sam_ann_"] {
+            assert!(text.contains(family), "metrics missing the {family}* family");
+        }
+    }
+
+    #[test]
+    fn metrics_render_under_concurrent_load_and_stay_monotonic() {
+        let (ctx, _) = test_ctx();
+        let ctx = Arc::new(ctx);
+        let mut owned = Vec::new();
+        let before = handle_request(&ctx, r#"{"metrics": true}"#, &mut owned).unwrap();
+        let before_text = before.get("metrics").unwrap().as_str().unwrap().to_string();
+        assert_valid_prometheus(&before_text);
+        let sample = |text: &str, name: &str| -> u64 {
+            text.lines()
+                .find(|l| l.split(' ').next() == Some(name))
+                .and_then(|l| l.rsplit_once(' '))
+                .and_then(|(_, v)| v.parse().ok())
+                .unwrap_or_else(|| panic!("{name} missing"))
+        };
+        // Concurrent sessions stepping while other threads scrape.
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let ctx = ctx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut owned = Vec::new();
+                let r = handle_request(&ctx, &format!(r#"{{"open": {{"seed": {t}}}}}"#), &mut owned)
+                    .unwrap();
+                let id = r.get("session").unwrap().as_f64().unwrap() as u64;
+                for _ in 0..5 {
+                    let r = handle_request(
+                        &ctx,
+                        &format!(r#"{{"session": {id}, "input": [1,0,0,1]}}"#),
+                        &mut owned,
+                    )
+                    .unwrap();
+                    assert!(r.get("output").is_some());
+                    let m = handle_request(&ctx, r#"{"metrics": true}"#, &mut owned).unwrap();
+                    assert!(m.get("metrics").unwrap().as_str().unwrap().contains("# TYPE"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let after = handle_request(&ctx, r#"{"metrics": true}"#, &mut owned).unwrap();
+        let after_text = after.get("metrics").unwrap().as_str().unwrap().to_string();
+        assert_valid_prometheus(&after_text);
+        // Counters are monotonic, and the 20 steps above are visible.
+        for name in [
+            "sam_serve_steps_total",
+            "sam_serve_ticks_total",
+            "sam_sessions_opened_total",
+            "sam_mem_reads_total",
+            "sam_mem_writes_total",
+            "sam_ann_queries_total",
+        ] {
+            assert!(
+                sample(&after_text, name) >= sample(&before_text, name),
+                "{name} went backwards"
+            );
+        }
+        assert!(
+            sample(&after_text, "sam_serve_steps_total")
+                >= sample(&before_text, "sam_serve_steps_total") + 20,
+            "20 steps must be counted"
+        );
+        ctx.sched.stop();
     }
 
     #[test]

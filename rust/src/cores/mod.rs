@@ -21,6 +21,7 @@ use crate::nn::lstm::{Lstm, LstmState};
 use crate::nn::param::{HasParams, Param};
 use crate::tensor::matrix::{gemm_nt, gemm_rowsweep, gemv_many, Matrix, GEMM_ROW_TILE};
 use crate::tensor::rowcodec::RowFormat;
+use crate::util::metrics;
 use crate::util::pool::ShardPool;
 use crate::util::rng::Rng;
 
@@ -916,6 +917,11 @@ pub fn train_tick_forward<C: BatchCore>(
     let p_dim = lanes[0].head_param_dim();
     let o_dim = lanes[0].out_in_dim();
     let y_dim = lanes[0].y_dim();
+    metrics::TRAIN_TICKS.inc();
+    // Phase boundaries follow the F1..F9 comments; sections a comment
+    // merges (F5+F6a, F6b+F6c) observe into the first phase's histogram
+    // per sub-section, so every µs of the tick lands in exactly one phase.
+    let mut clock = metrics::PhaseClock::start();
 
     // F1: gather [x, r_prev..] and h_{t-1} rows.
     fit(&mut batch.x_in, l, in_dim);
@@ -925,6 +931,7 @@ pub fn train_tick_forward<C: BatchCore>(
             lane.stage_input(x, batch.x_in.row_mut(i), batch.h.row_mut(i));
         }
     }
+    clock.lap(&metrics::TRAIN_FWD_PHASE_US[0]);
 
     // F2: gate pre-activations, lane-fused: Zx = lanes·Wxᵀ, Zh = lanes·Whᵀ.
     fit(&mut batch.z, l, 4 * hidden);
@@ -934,6 +941,7 @@ pub fn train_tick_forward<C: BatchCore>(
         gemv_many(&mut batch.z, w.wx, &batch.x_in);
         gemv_many(&mut batch.zh, w.wh, &batch.h);
     }
+    clock.lap(&metrics::TRAIN_FWD_PHASE_US[1]);
 
     // F3: per-lane z assembly + gate nonlinearity + tape push; the updated
     // h's re-fill batch.h for the head projection.
@@ -944,6 +952,7 @@ pub fn train_tick_forward<C: BatchCore>(
         lane.cell_step(batch.x_in.row(i), batch.z.row_mut(i), batch.zh.row(i));
         batch.h.row_mut(i).copy_from_slice(lane.h());
     }
+    clock.lap(&metrics::TRAIN_FWD_PHASE_US[2]);
 
     // F4–F6: head parameters + the memory phase (skipped wholesale by the
     // dense witness, which has neither).
@@ -960,8 +969,10 @@ pub fn train_tick_forward<C: BatchCore>(
             // F4: P = bias + H'·W_headᵀ, lane-fused.
             gemv_many(&mut batch.p, hw, &batch.h);
         }
+        clock.lap(&metrics::TRAIN_FWD_PHASE_US[3]);
         // F5 + F6a: per-lane head bookkeeping, then memory writes/links and
-        // content-query staging.
+        // content-query staging (timed as F5; the remaining F6 sub-phases
+        // observe into f6 below).
         for (i, lane) in lanes.iter_mut().enumerate() {
             if xs[i].is_none() {
                 continue;
@@ -969,6 +980,7 @@ pub fn train_tick_forward<C: BatchCore>(
             lane.note_head_forward(batch.p.row(i));
             lane.mem_stage();
         }
+        clock.lap(&metrics::TRAIN_FWD_PHASE_US[4]);
         // F6b: the merged ANN fill — one pool dispatch across all lanes'
         // staged queries when the combined scan is worth fanning out;
         // otherwise each lane fills through its engine's own path (which
@@ -994,6 +1006,7 @@ pub fn train_tick_forward<C: BatchCore>(
             }
             lane.mem_finish();
         }
+        clock.lap(&metrics::TRAIN_FWD_PHASE_US[5]);
     }
 
     // F7: gather [h_t, r_t..] rows + output bias rows.
@@ -1005,6 +1018,7 @@ pub fn train_tick_forward<C: BatchCore>(
         }
         lane.stage_output(batch.o_in.row_mut(i));
     }
+    clock.lap(&metrics::TRAIN_FWD_PHASE_US[6]);
     {
         let w = lanes[0].weights();
         let (ow, ob) = w.out;
@@ -1016,6 +1030,7 @@ pub fn train_tick_forward<C: BatchCore>(
         // F8: Y = bias + O·W_outᵀ, lane-fused.
         gemv_many(&mut batch.y, ow, &batch.o_in);
     }
+    clock.lap(&metrics::TRAIN_FWD_PHASE_US[7]);
     // F9: per-lane output bookkeeping.
     for (i, lane) in lanes.iter_mut().enumerate() {
         if xs[i].is_none() {
@@ -1023,6 +1038,7 @@ pub fn train_tick_forward<C: BatchCore>(
         }
         lane.note_forward_out(batch.o_in.row(i));
     }
+    clock.lap(&metrics::TRAIN_FWD_PHASE_US[8]);
 }
 
 /// The backward half of the batched training tick: call once per forward
@@ -1045,6 +1061,7 @@ pub fn train_tick_backward<C: BatchCore>(
     let hidden = lanes[0].cell_hidden();
     let p_dim = lanes[0].head_param_dim();
     let o_dim = lanes[0].out_in_dim();
+    let mut clock = metrics::PhaseClock::start();
 
     // B2: d[h,r..] = dY·W_out, lane-fused.
     fit(&mut batch.d_o, l, o_dim);
@@ -1052,15 +1069,22 @@ pub fn train_tick_backward<C: BatchCore>(
         let w = lanes[0].weights();
         gemm_rowsweep(&mut batch.d_o, &batch.dy, w.out.0);
     }
+    clock.lap(&metrics::TRAIN_BWD_PHASE_US[0]);
     // B3 + B4: per-lane output bookkeeping (split dh/dreads) + memory
-    // backward (fills the lane's dp).
+    // backward (fills the lane's dp). One fused loop; the two phases are
+    // timed per lane so the memory backward (B4, usually the dominant
+    // cost) stays separable from the bookkeeping (B3).
     for (i, lane) in lanes.iter_mut().enumerate() {
         if !active[i] {
             continue;
         }
+        let mut lane_clock = metrics::PhaseClock::start();
         lane.note_output_backward(batch.dy.row(i), batch.d_o.row(i));
+        lane_clock.lap(&metrics::TRAIN_BWD_PHASE_US[1]);
         lane.backward_mem();
+        lane_clock.lap(&metrics::TRAIN_BWD_PHASE_US[2]);
     }
+    clock = metrics::PhaseClock::start();
     // B5: dH = dP·W_head, lane-fused, when the core has a head projection;
     // the dense witness feeds d_o straight to the cell.
     fit(&mut batch.dz, l, 4 * hidden);
@@ -1078,6 +1102,7 @@ pub fn train_tick_backward<C: BatchCore>(
             gemm_rowsweep(&mut batch.dh_tot, &batch.dp, hw);
         }
     }
+    clock.lap(&metrics::TRAIN_BWD_PHASE_US[3]);
     // B6: per-lane dh assembly + elementwise cell backward → dZ rows.
     for (i, lane) in lanes.iter_mut().enumerate() {
         if !active[i] {
@@ -1087,6 +1112,7 @@ pub fn train_tick_backward<C: BatchCore>(
             if p_dim > 0 { batch.dh_tot.row_mut(i) } else { batch.d_o.row_mut(i) };
         lane.backward_cell_z(dh_row, batch.dz.row_mut(i));
     }
+    clock.lap(&metrics::TRAIN_BWD_PHASE_US[4]);
     // B7: input/recurrent sweeps, lane-fused: dX_in = dZ·Wx, dH_prev = dZ·Wh.
     fit(&mut batch.dx_in, l, in_dim);
     fit(&mut batch.dh_prev, l, hidden);
@@ -1095,6 +1121,7 @@ pub fn train_tick_backward<C: BatchCore>(
         gemm_rowsweep(&mut batch.dx_in, &batch.dz, w.wx);
         gemm_rowsweep(&mut batch.dh_prev, &batch.dz, w.wh);
     }
+    clock.lap(&metrics::TRAIN_BWD_PHASE_US[5]);
     // B8: per-lane finish — queue the cell's weight-grad rows, carry
     // dh_next, split d(r_prev).
     for (i, lane) in lanes.iter_mut().enumerate() {
@@ -1103,6 +1130,7 @@ pub fn train_tick_backward<C: BatchCore>(
         }
         lane.finish_backward(batch.dz.row(i), batch.dh_prev.row(i), batch.dx_in.row(i));
     }
+    clock.lap(&metrics::TRAIN_BWD_PHASE_US[6]);
 }
 
 impl HasParams for Controller {

@@ -58,6 +58,9 @@ Common flags (paper defaults in parens):
                     seed ⇒ same result at any (N, B) for --ann linear
   --seed S          RNG seed (1)
   --checkpoint PATH save/load parameters
+  --metrics-json P  write metrics-registry snapshots to P (~every 2s while
+                    training, plus a final snapshot; see DESIGN.md
+                    "Observability")
   --quiet           suppress progress lines
 
 Serve flags (shared-weight multi-session runtime):
@@ -106,7 +109,34 @@ fn train(args: &Args) -> Result<()> {
         cfg.core_cfg.k, cfg.core_cfg.ann, cfg.core_cfg.shards, cfg.workers,
         cfg.train_cfg.batch_fuse
     );
-    let (mut trainer, log) = run_experiment(&cfg)?;
+    // Periodic metrics snapshots while training runs; a final snapshot is
+    // written after the run so short runs still produce a complete file.
+    let metrics_path = args.get("metrics-json").map(PathBuf::from);
+    let snapshotter = metrics_path.clone().map(|path| {
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = std::sync::Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let mut ticks = 0u32;
+            while !flag.load(std::sync::atomic::Ordering::SeqCst) {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                ticks += 1;
+                if ticks % 20 == 0 {
+                    let _ = std::fs::write(&path, sam::util::metrics::snapshot_json().encode());
+                }
+            }
+        });
+        (stop, handle)
+    });
+    let run = run_experiment(&cfg);
+    if let Some((stop, handle)) = snapshotter {
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = handle.join();
+    }
+    let (mut trainer, log) = run?;
+    if let Some(path) = &metrics_path {
+        std::fs::write(path, sam::util::metrics::snapshot_json().encode())?;
+        println!("metrics snapshot written to {}", path.display());
+    }
     println!(
         "done: {} episodes, best loss/step {:.4}, final level {}",
         log.total_episodes,

@@ -50,6 +50,7 @@ use crate::tensor::csr::{RowSparse, SparseVec};
 use crate::tensor::matrix::dot;
 use crate::tensor::rowcodec::RowFormat;
 use crate::tensor::workspace::{Pool, Workspace};
+use crate::util::metrics;
 use crate::util::rng::Rng;
 
 /// Episode-start contents of memory row `i`: small deterministic noise
@@ -393,6 +394,7 @@ impl SparseMemoryEngine {
         word: &[f32],
         ws: &mut Workspace,
     ) -> WriteGate {
+        metrics::MEM_WRITES.inc();
         let ring = self.ring.as_mut().expect("sparse_write needs a sparse engine (LRA ring)");
         let lra_row = ring.pop_lra();
         let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
@@ -425,6 +427,7 @@ impl SparseMemoryEngine {
         word: &[f32],
         ws: &mut Workspace,
     ) -> SparseVec {
+        metrics::MEM_WRITES.inc();
         let ring = self.ring.as_mut().expect("infer_write needs a sparse engine (LRA ring)");
         let lra_row = ring.pop_lra();
         let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
@@ -560,6 +563,7 @@ impl SparseMemoryEngine {
         out: &mut Vec<TopKRead>,
         ws: &mut Workspace,
     ) {
+        metrics::MEM_READS.add(queries.len() as u64);
         let mut crs = std::mem::take(&mut self.cr_tmp);
         self.content_read_many_from_neigh(queries, betas, &mut crs, ws);
         let word = self.mem.word_size();
@@ -748,6 +752,9 @@ impl SparseMemoryEngine {
     /// memory (bit-exactly) and the ANN to the episode-start state. Journal
     /// rows recycle into `ws`.
     pub fn rollback_ws(&mut self, ws: &mut Workspace) {
+        if !self.journals.is_empty() {
+            metrics::MEM_ROLLBACKS.inc();
+        }
         while let Some(mut journal) = self.journals.pop() {
             self.mem.revert(&journal);
             self.sync_rows(&journal);

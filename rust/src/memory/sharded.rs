@@ -62,6 +62,7 @@ use crate::tensor::csr::{RowSparse, SparseVec};
 use crate::tensor::matrix::dot;
 use crate::tensor::rowcodec::RowFormat;
 use crate::tensor::workspace::{Pool, Workspace};
+use crate::util::metrics;
 use crate::util::pool::ShardPool;
 use crate::util::rng::Rng;
 
@@ -286,6 +287,7 @@ impl ShardedMemoryEngine {
         if self.s == 1 {
             return self.shards[0].sparse_write(alpha_raw, gamma_raw, w_read_prev, word, ws);
         }
+        metrics::MEM_WRITES.inc();
         let ring = self.ring.as_mut().expect("sharded sparse engine has a global ring");
         let lra_row = ring.pop_lra();
         let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
@@ -318,6 +320,7 @@ impl ShardedMemoryEngine {
         if self.s == 1 {
             return self.shards[0].infer_write(alpha_raw, gamma_raw, w_read_prev, word, ws);
         }
+        metrics::MEM_WRITES.inc();
         let ring = self.ring.as_mut().expect("sharded sparse engine has a global ring");
         let lra_row = ring.pop_lra();
         let gate = write_gate_ws(alpha_raw, gamma_raw, w_read_prev, lra_row, ws);
@@ -374,6 +377,7 @@ impl ShardedMemoryEngine {
         if self.s == 1 {
             return self.shards[0].read_topk_from_neigh(queries, betas, out, ws);
         }
+        metrics::MEM_READS.add(queries.len() as u64);
         let mut crs = std::mem::take(&mut self.cr_tmp);
         self.content_read_many_from_neigh(queries, betas, &mut crs, ws);
         let word = self.word;
@@ -635,6 +639,9 @@ impl ShardedMemoryEngine {
     pub fn rollback_ws(&mut self, ws: &mut Workspace) {
         if self.s == 1 {
             return self.shards[0].rollback_ws(ws);
+        }
+        if self.live_writes > 0 {
+            metrics::MEM_ROLLBACKS.inc();
         }
         while self.live_writes > 0 {
             for shard in &mut self.shards {

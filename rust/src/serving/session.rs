@@ -21,6 +21,7 @@
 use super::spill::{self, SpillMeta};
 use super::{InferModel, Session};
 use crate::cores::CtrlBatch;
+use crate::util::metrics;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -104,11 +105,13 @@ impl Inner {
         entry.bytes = entry.state.heap_bytes();
         self.state_bytes += entry.bytes;
         self.sessions.insert(id, entry);
+        metrics::SESSIONS_OPEN.set(self.sessions.len() as u64);
     }
 
     fn remove(&mut self, id: u64) -> Option<Entry> {
         let e = self.sessions.remove(&id)?;
         self.state_bytes -= e.bytes;
+        metrics::SESSIONS_OPEN.set(self.sessions.len() as u64);
         Some(e)
     }
 
@@ -139,6 +142,7 @@ impl Inner {
             } else {
                 self.remove(id);
                 self.evicted += 1;
+                metrics::SESSIONS_EVICTED.inc();
             }
         }
     }
@@ -151,6 +155,7 @@ impl Inner {
             // This session type cannot spill: historical destroy-evict.
             self.remove(id);
             self.evicted += 1;
+            metrics::SESSIONS_EVICTED.inc();
             return true;
         };
         let meta = SpillMeta { model: model.to_string(), open_seed: entry.open_seed };
@@ -158,11 +163,13 @@ impl Inner {
             Ok(()) => {
                 self.remove(id);
                 self.spilled += 1;
+                metrics::SESSIONS_SPILLED.inc();
                 self.spill_failing = false;
                 true
             }
             Err(_) => {
                 self.spill_failures += 1;
+                metrics::SESSIONS_SPILL_FAILURES.inc();
                 self.spill_failing = true;
                 false
             }
@@ -180,12 +187,16 @@ pub enum SessionError {
     /// Shed under overload: the byte budget is exhausted and spilling is
     /// failing, so opening would destroy an existing session. Retryable.
     Overloaded { retry_after_ms: u64 },
+    /// The batch scheduler is stopped or dead (shutdown or a tick panic).
+    /// The session itself still exists — possibly spilled — so this is a
+    /// retryable "server unavailable", distinct from `NoSuchSession`.
+    SchedulerStopped,
 }
 
 impl SessionError {
     /// Whether the client should retry the identical request later.
     pub fn retryable(&self) -> bool {
-        matches!(self, SessionError::Overloaded { .. })
+        matches!(self, SessionError::Overloaded { .. } | SessionError::SchedulerStopped)
     }
 }
 
@@ -198,6 +209,9 @@ impl std::fmt::Display for SessionError {
             }
             SessionError::Overloaded { retry_after_ms } => {
                 write!(f, "overloaded, retry in {retry_after_ms} ms")
+            }
+            SessionError::SchedulerStopped => {
+                write!(f, "scheduler stopped, retry against a live server")
             }
         }
     }
@@ -263,6 +277,7 @@ impl SessionManager {
     /// Open a session with an explicit seed policy (`None` = the trained
     /// core's own seeds, the bit-parity default used by the tests).
     pub fn open_seeded(&self, seed: Option<u64>) -> u64 {
+        metrics::SESSIONS_OPENED.inc();
         let state = self.model.open_session(seed);
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
@@ -334,12 +349,14 @@ impl SessionManager {
             Err(_) => {
                 let _ = std::fs::remove_file(&path);
                 inner.corrupt_dropped += 1;
+                metrics::SESSIONS_CORRUPT_DROPPED.inc();
                 return false;
             }
         };
         if meta.model != self.model.name() {
             let _ = std::fs::remove_file(&path);
             inner.corrupt_dropped += 1;
+            metrics::SESSIONS_CORRUPT_DROPPED.inc();
             return false;
         }
         // Re-opening with the recorded seed re-derives the engine seeds the
@@ -348,6 +365,7 @@ impl SessionManager {
         if spill::restore_session(state.as_mut(), &snap).is_err() {
             let _ = std::fs::remove_file(&path);
             inner.corrupt_dropped += 1;
+            metrics::SESSIONS_CORRUPT_DROPPED.inc();
             return false;
         }
         let _ = std::fs::remove_file(&path);
@@ -364,6 +382,7 @@ impl SessionManager {
             inner.next_id = id + 1;
         }
         inner.rehydrated += 1;
+        metrics::SESSIONS_REHYDRATED.inc();
         true
     }
 
@@ -409,8 +428,11 @@ impl SessionManager {
         }
         let entry = inner.sessions.get_mut(&id).expect("session present after rehydrate");
         entry.last_touch = clock;
-        entry.last_used = Instant::now();
+        let step_start = Instant::now();
+        entry.last_used = step_start;
         self.model.step(entry.state.as_mut(), x, y);
+        metrics::SERVE_STEPS.inc();
+        metrics::SERVE_STEP_LATENCY_US.observe_since(step_start);
         debug_assert_eq!(entry.state.tape_bytes(), 0, "serving step grew a tape");
         let new_bytes = entry.state.heap_bytes();
         inner.state_bytes = inner.state_bytes - entry.bytes + new_bytes;
@@ -501,10 +523,18 @@ impl SessionManager {
                 let xs: Vec<&[f32]> =
                     taken.iter().map(|&(idx, _, _, _)| reqs[idx].1.as_slice()).collect();
                 let mut ys: Vec<Vec<f32>> = taken.iter().map(|_| Vec::new()).collect();
+                let round_start = Instant::now();
                 {
                     let mut sessions: Vec<&mut dyn Session> =
                         taken.iter_mut().map(|(_, _, s, _)| s.as_mut()).collect();
                     self.model.step_batch(&mut sessions, &xs, &mut ys, &mut inner.batch);
+                }
+                // Each session in a coalesced round shares the round's
+                // wall time — the per-session latency a client observes.
+                let round_us = round_start.elapsed().as_micros() as u64;
+                metrics::SERVE_STEPS.add(taken.len() as u64);
+                for _ in 0..taken.len() {
+                    metrics::SERVE_STEP_LATENCY_US.observe_us(round_us);
                 }
                 let now = Instant::now();
                 for ((idx, id, state, open_seed), y) in taken.into_iter().zip(ys) {
@@ -546,6 +576,7 @@ impl SessionManager {
             }
         }
         inner.expired += dropped as u64;
+        metrics::SESSIONS_EXPIRED.add(dropped as u64);
         dropped
     }
 

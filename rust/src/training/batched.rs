@@ -46,6 +46,7 @@ use crate::training::{
     episode_grad, reduce_episode_grads, sample_batch, EpisodeGrad, LogPoint, TrainConfig,
     TrainLog,
 };
+use crate::util::metrics;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -310,6 +311,7 @@ impl FusedTrainer {
             // thread, regardless of lane/worker provenance.
             results.sort_by_key(|&(e, _)| e);
             let ordered: Vec<EpisodeGrad> = results.into_iter().map(|(_, r)| r).collect();
+            let reduce_start = std::time::Instant::now();
             reduce_episode_grads(self.workers[0].lanes.primary_mut(), &ordered);
             for r in &ordered {
                 let scored = r.scored.max(1);
@@ -320,7 +322,11 @@ impl FusedTrainer {
                 window_eps += 1;
                 log.total_episodes += 1;
             }
+            metrics::TRAIN_EPISODES.add(ordered.len() as u64);
             self.opt.step(self.workers[0].lanes.primary_mut());
+            // Reduce + apply time per update (the serial section between
+            // parallel episode groups — the scaling ceiling).
+            metrics::TRAIN_GRAD_REDUCE_US.observe_since(reduce_start);
 
             if update % self.cfg.log_every == 0 || update == self.cfg.updates {
                 let point = LogPoint {

@@ -216,6 +216,7 @@ impl Trainer {
                 .iter()
                 .map(|ep| episode_grad(self.core.as_mut(), task, ep))
                 .collect();
+            let reduce_start = std::time::Instant::now();
             reduce_episode_grads(self.core.as_mut(), &results);
             for r in &results {
                 let scored = r.scored.max(1);
@@ -226,7 +227,9 @@ impl Trainer {
                 window_eps += 1;
                 log.total_episodes += 1;
             }
+            crate::util::metrics::TRAIN_EPISODES.add(results.len() as u64);
             self.opt.step(self.core.as_mut());
+            crate::util::metrics::TRAIN_GRAD_REDUCE_US.observe_since(reduce_start);
             if update % self.cfg.log_every == 0 || update == self.cfg.updates {
                 let point = LogPoint {
                     update,

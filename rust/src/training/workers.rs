@@ -126,6 +126,7 @@ impl ParallelTrainer {
             // thread, regardless of which worker produced what when.
             results.sort_by_key(|&(e, _)| e);
             let ordered: Vec<EpisodeGrad> = results.into_iter().map(|(_, r)| r).collect();
+            let reduce_start = std::time::Instant::now();
             reduce_episode_grads(self.workers[0].as_mut(), &ordered);
             for r in &ordered {
                 let scored = r.scored.max(1);
@@ -136,7 +137,9 @@ impl ParallelTrainer {
                 window_eps += 1;
                 log.total_episodes += 1;
             }
+            crate::util::metrics::TRAIN_EPISODES.add(ordered.len() as u64);
             self.opt.step(self.workers[0].as_mut());
+            crate::util::metrics::TRAIN_GRAD_REDUCE_US.observe_since(reduce_start);
 
             if update % self.cfg.log_every == 0 || update == self.cfg.updates {
                 let point = LogPoint {

@@ -1,0 +1,574 @@
+//! Process-global, lock-light metrics registry: relaxed-atomic counters and
+//! gauges plus fixed-bucket latency histograms, all statically registered so
+//! the hot path is one `fetch_add(Relaxed)` on a `static` — no locks, no
+//! lazy-init, and **zero heap allocations** (pinned in
+//! rust/tests/zero_alloc.rs for the train-tick and serving-step paths).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Always-on.** Metrics are not feature-gated; the cost budget is one
+//!    relaxed atomic add (plus an `Instant::now()` pair for timed sections)
+//!    per event. That keeps every build honest — there is no "metrics
+//!    disabled" configuration whose performance differs from production.
+//! 2. **Const-constructible.** Every handle is a `static` built by a `const
+//!    fn`, so registration is the Rust linker's job: no registry mutex, no
+//!    `OnceLock`, no first-use branch on the hot path.
+//! 3. **Fixed buckets.** Histograms use power-of-2 µs buckets (`le = 1, 2,
+//!    4, … 2^24 µs ≈ 16.8 s`, then `+Inf`): bucket selection is a
+//!    `leading_zeros`, readout is a cumulative walk. Quantiles (p50/p95/p99)
+//!    are therefore upper-bound estimates with ≤ 2× resolution — exactly
+//!    what a regression gate needs, at zero allocation.
+//!
+//! Naming follows the Prometheus convention: `sam_<layer>_<what>_total` for
+//! counters, `sam_<layer>_<what>` for gauges, `sam_<layer>_<what>_us` for
+//! latency histograms (exposed with `_bucket`/`_sum`/`_count` series). The
+//! three layers are `train` (per-phase tick timers, episodes,
+//! gradient-reduce), `serve`/`sessions` (scheduler ticks, queue/step
+//! latency, session lifecycle) and `mem`/`ann` (reads, writes, rollbacks,
+//! ANN query volume). Readout surfaces: the server's `{"metrics"}` op
+//! (Prometheus text via [`render_prometheus`]), the enriched `{"stats"}`
+//! reply, `sam train --metrics-json` snapshots ([`snapshot_json`]), and
+//! the BENCH_serve/BENCH_train histogram summaries ([`hist_summary_json`]).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counter. `inc`/`add` are single relaxed atomic adds.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Relaxed)
+    }
+}
+
+/// Instantaneous value (current open sessions, last tick fill). `inc`/`dec`
+/// are relaxed adds/subs; `set` is a relaxed store — last writer wins, which
+/// is the right semantics for a sampled level.
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        // Saturating on readout rather than here would race; a transient
+        // underflow can only come from a bug in paired inc/dec call sites,
+        // so wrap loudly (u64::MAX in the readout) instead of masking it.
+        self.v.fetch_sub(1, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Relaxed)
+    }
+}
+
+/// Number of finite histogram buckets; bucket `i < BUCKETS-1` counts
+/// observations with `us <= 2^i`, the last bucket is `+Inf`.
+pub const BUCKETS: usize = 26;
+
+/// Upper bound (µs) of finite bucket `i`.
+#[inline]
+fn bucket_le(i: usize) -> u64 {
+    1u64 << i
+}
+
+/// Fixed-bucket latency histogram over microseconds. Preallocated
+/// power-of-2 buckets: `observe_us` is two relaxed adds plus a
+/// `leading_zeros` — no locks, no allocation, safe from any thread.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+/// p50/p95/p99 + count/sum readout of a [`Histogram`], as embedded in
+/// BENCH JSON and the `{"stats"}` reply. Quantiles are bucket upper
+/// bounds (≤ 2× overestimates by construction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum_us: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram { buckets: [Z; BUCKETS], count: AtomicU64::new(0), sum_us: AtomicU64::new(0) }
+    }
+
+    /// Bucket index for a duration: smallest `i` with `us <= 2^i`, clamped
+    /// into the `+Inf` bucket past `2^(BUCKETS-2)` µs.
+    #[inline]
+    fn idx(us: u64) -> usize {
+        if us <= 1 {
+            0
+        } else {
+            (64 - (us - 1).leading_zeros() as usize).min(BUCKETS - 1)
+        }
+    }
+
+    #[inline]
+    pub fn observe_us(&self, us: u64) {
+        self.buckets[Self::idx(us)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+    }
+
+    /// Observe the elapsed time since `start`. The idiom at call sites:
+    /// `let t = Instant::now(); …work…; HIST.observe_since(t);`
+    #[inline]
+    pub fn observe_since(&self, start: Instant) {
+        self.observe_us(start.elapsed().as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Relaxed)
+    }
+
+    /// Upper-bound quantile estimate: the `le` bound of the first bucket
+    /// whose cumulative count reaches `q * count`. The `+Inf` bucket
+    /// reports its predecessor's bound (the histogram's measurable
+    /// ceiling). 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count.load(Relaxed);
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum >= target {
+                return bucket_le(i.min(BUCKETS - 2));
+            }
+        }
+        bucket_le(BUCKETS - 2)
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            sum_us: self.sum_us(),
+            p50_us: self.quantile_us(0.50),
+            p95_us: self.quantile_us(0.95),
+            p99_us: self.quantile_us(0.99),
+        }
+    }
+}
+
+/// Sequential section timer for multi-phase hot loops (the F1–F9/B2–B8
+/// training-tick phases): each [`PhaseClock::lap`] observes the time since
+/// the previous lap into the given histogram and restarts the clock — one
+/// `Instant::now()` per boundary, zero allocations.
+pub struct PhaseClock {
+    t: Instant,
+}
+
+impl PhaseClock {
+    #[inline]
+    pub fn start() -> PhaseClock {
+        PhaseClock { t: Instant::now() }
+    }
+
+    #[inline]
+    pub fn lap(&mut self, h: &Histogram) {
+        let now = Instant::now();
+        h.observe_us(now.saturating_duration_since(self.t).as_micros() as u64);
+        self.t = now;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The static registry. Adding a metric = adding a static here plus one line
+// in each of render_prometheus()/snapshot_json() below; the hot path stays
+// a single atomic add on a linker-placed static.
+// ---------------------------------------------------------------------------
+
+/// Training-tick forward phases (F1..F9), indexable by phase number - 1.
+pub const FWD_PHASES: usize = 9;
+/// Training-tick backward phases (B2..B8), indexable by phase number - 2.
+pub const BWD_PHASES: usize = 7;
+
+const H: Histogram = Histogram::new();
+
+// -- training ---------------------------------------------------------------
+/// Episodes completed across all trainer kinds.
+pub static TRAIN_EPISODES: Counter = Counter::new();
+/// Fused training ticks (one forward+backward lockstep across lanes).
+pub static TRAIN_TICKS: Counter = Counter::new();
+/// Cross-worker gradient reduce + optimizer step time per update.
+pub static TRAIN_GRAD_REDUCE_US: Histogram = Histogram::new();
+/// Per-phase forward tick timers F1 (input gather) .. F9 (output notes).
+pub static TRAIN_FWD_PHASE_US: [Histogram; FWD_PHASES] = [H; FWD_PHASES];
+/// Per-phase backward tick timers B2 (output GEMM) .. B8 (finish).
+pub static TRAIN_BWD_PHASE_US: [Histogram; BWD_PHASES] = [H; BWD_PHASES];
+
+// -- serving ----------------------------------------------------------------
+/// Session steps executed (scheduler ticks + direct step calls).
+pub static SERVE_STEPS: Counter = Counter::new();
+/// Per-session step latency inside `step`/`step_many`.
+pub static SERVE_STEP_LATENCY_US: Histogram = Histogram::new();
+/// Submit-to-drain wait of a scheduled request in the coalescing inbox.
+pub static SERVE_QUEUE_LATENCY_US: Histogram = Histogram::new();
+/// Coalescing ticks executed by the batch scheduler.
+pub static SERVE_TICKS: Counter = Counter::new();
+/// Requests drained across all ticks (fill ratio = requests/ticks/max_batch).
+pub static SERVE_TICK_REQUESTS: Counter = Counter::new();
+/// Fill of the most recent tick, in permille of max_batch.
+pub static SERVE_TICK_FILL_PERMILLE: Gauge = Gauge::new();
+
+// -- sessions ---------------------------------------------------------------
+/// Currently open (resident or spilled) sessions.
+pub static SESSIONS_OPEN: Gauge = Gauge::new();
+pub static SESSIONS_OPENED: Counter = Counter::new();
+pub static SESSIONS_EVICTED: Counter = Counter::new();
+pub static SESSIONS_EXPIRED: Counter = Counter::new();
+pub static SESSIONS_SPILLED: Counter = Counter::new();
+pub static SESSIONS_REHYDRATED: Counter = Counter::new();
+pub static SESSIONS_CORRUPT_DROPPED: Counter = Counter::new();
+pub static SESSIONS_SPILL_FAILURES: Counter = Counter::new();
+
+// -- memory / ANN -----------------------------------------------------------
+/// Content-read queries answered by the memory engine (per head×lane).
+pub static MEM_READS: Counter = Counter::new();
+/// Sparse writes applied (journaled + forward-only).
+pub static MEM_WRITES: Counter = Counter::new();
+/// Episode rollbacks (tape reverts).
+pub static MEM_ROLLBACKS: Counter = Counter::new();
+/// Queries answered by ANN backends (all kinds).
+pub static ANN_QUERIES: Counter = Counter::new();
+/// Candidate rows scored across ANN queries (linear: present rows/query;
+/// graph/tree/hash backends: rows actually distance-evaluated).
+pub static ANN_CANDIDATES: Counter = Counter::new();
+/// Full index rebuilds — the incremental-maintenance regression signal;
+/// the default paths pin this at 0.
+pub static ANN_FULL_REBUILDS: Counter = Counter::new();
+
+// ---------------------------------------------------------------------------
+// Readout: Prometheus text + JSON snapshot
+// ---------------------------------------------------------------------------
+
+fn render_counter(out: &mut String, name: &str, c: &Counter) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push_str(" counter\n");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&c.get().to_string());
+    out.push('\n');
+}
+
+fn render_gauge(out: &mut String, name: &str, g: &Gauge) {
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push_str(" gauge\n");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&g.get().to_string());
+    out.push('\n');
+}
+
+/// One histogram series in Prometheus exposition format. `labels` is either
+/// empty or a `key="value"` fragment (joined with the `le` label); pass
+/// `emit_type` = false for the 2nd+ member of a labelled family so the
+/// `# TYPE` line appears once per family.
+fn render_hist(out: &mut String, name: &str, labels: &str, h: &Histogram, emit_type: bool) {
+    if emit_type {
+        out.push_str("# TYPE ");
+        out.push_str(name);
+        out.push_str(" histogram\n");
+    }
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cum = 0u64;
+    for i in 0..BUCKETS {
+        cum += h.buckets[i].load(Relaxed);
+        let le = if i == BUCKETS - 1 { "+Inf".to_string() } else { bucket_le(i).to_string() };
+        out.push_str(name);
+        out.push_str("_bucket{");
+        out.push_str(labels);
+        out.push_str(sep);
+        out.push_str("le=\"");
+        out.push_str(&le);
+        out.push_str("\"} ");
+        out.push_str(&cum.to_string());
+        out.push('\n');
+    }
+    let tail = |out: &mut String, suffix: &str, v: u64| {
+        out.push_str(name);
+        out.push_str(suffix);
+        if !labels.is_empty() {
+            out.push('{');
+            out.push_str(labels);
+            out.push('}');
+        }
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    };
+    tail(out, "_sum", h.sum_us());
+    tail(out, "_count", h.count());
+}
+
+/// Render every registered metric in Prometheus text exposition format.
+/// Cold path (the `{"metrics"}` server op, CI smoke): allocates freely.
+pub fn render_prometheus() -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    render_counter(&mut out, "sam_train_episodes_total", &TRAIN_EPISODES);
+    render_counter(&mut out, "sam_train_ticks_total", &TRAIN_TICKS);
+    render_hist(&mut out, "sam_train_grad_reduce_us", "", &TRAIN_GRAD_REDUCE_US, true);
+    for (i, h) in TRAIN_FWD_PHASE_US.iter().enumerate() {
+        let label = format!("phase=\"f{}\"", i + 1);
+        render_hist(&mut out, "sam_train_fwd_phase_us", &label, h, i == 0);
+    }
+    for (i, h) in TRAIN_BWD_PHASE_US.iter().enumerate() {
+        let label = format!("phase=\"b{}\"", i + 2);
+        render_hist(&mut out, "sam_train_bwd_phase_us", &label, h, i == 0);
+    }
+
+    render_counter(&mut out, "sam_serve_steps_total", &SERVE_STEPS);
+    render_hist(&mut out, "sam_serve_step_latency_us", "", &SERVE_STEP_LATENCY_US, true);
+    render_hist(&mut out, "sam_serve_queue_latency_us", "", &SERVE_QUEUE_LATENCY_US, true);
+    render_counter(&mut out, "sam_serve_ticks_total", &SERVE_TICKS);
+    render_counter(&mut out, "sam_serve_tick_requests_total", &SERVE_TICK_REQUESTS);
+    render_gauge(&mut out, "sam_serve_tick_fill_permille", &SERVE_TICK_FILL_PERMILLE);
+
+    render_gauge(&mut out, "sam_sessions_open", &SESSIONS_OPEN);
+    render_counter(&mut out, "sam_sessions_opened_total", &SESSIONS_OPENED);
+    render_counter(&mut out, "sam_sessions_evicted_total", &SESSIONS_EVICTED);
+    render_counter(&mut out, "sam_sessions_expired_total", &SESSIONS_EXPIRED);
+    render_counter(&mut out, "sam_sessions_spilled_total", &SESSIONS_SPILLED);
+    render_counter(&mut out, "sam_sessions_rehydrated_total", &SESSIONS_REHYDRATED);
+    render_counter(&mut out, "sam_sessions_corrupt_dropped_total", &SESSIONS_CORRUPT_DROPPED);
+    render_counter(&mut out, "sam_sessions_spill_failures_total", &SESSIONS_SPILL_FAILURES);
+
+    render_counter(&mut out, "sam_mem_reads_total", &MEM_READS);
+    render_counter(&mut out, "sam_mem_writes_total", &MEM_WRITES);
+    render_counter(&mut out, "sam_mem_rollbacks_total", &MEM_ROLLBACKS);
+    render_counter(&mut out, "sam_ann_queries_total", &ANN_QUERIES);
+    render_counter(&mut out, "sam_ann_candidates_scanned_total", &ANN_CANDIDATES);
+    render_counter(&mut out, "sam_ann_full_rebuilds_total", &ANN_FULL_REBUILDS);
+
+    out
+}
+
+/// Histogram summary as a JSON object (BENCH_serve/BENCH_train embeds,
+/// `{"stats"}` reply, `--metrics-json` snapshots).
+pub fn hist_summary_json(h: &Histogram) -> Json {
+    let s = h.summary();
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("sum_us", Json::num(s.sum_us as f64)),
+        ("p50_us", Json::num(s.p50_us as f64)),
+        ("p95_us", Json::num(s.p95_us as f64)),
+        ("p99_us", Json::num(s.p99_us as f64)),
+    ])
+}
+
+/// Full registry snapshot as JSON: counters/gauges as numbers, histograms
+/// as summary objects. The `sam train --metrics-json <path>` flag writes
+/// this periodically and at exit.
+pub fn snapshot_json() -> Json {
+    let phases = |hs: &'static [Histogram], base: usize, prefix: &str| {
+        Json::Obj(
+            hs.iter()
+                .enumerate()
+                .map(|(i, h)| (format!("{prefix}{}", base + i), hist_summary_json(h)))
+                .collect(),
+        )
+    };
+    Json::obj(vec![
+        (
+            "train",
+            Json::obj(vec![
+                ("episodes", Json::num(TRAIN_EPISODES.get() as f64)),
+                ("ticks", Json::num(TRAIN_TICKS.get() as f64)),
+                ("grad_reduce_us", hist_summary_json(&TRAIN_GRAD_REDUCE_US)),
+                ("fwd_phase_us", phases(&TRAIN_FWD_PHASE_US, 1, "f")),
+                ("bwd_phase_us", phases(&TRAIN_BWD_PHASE_US, 2, "b")),
+            ]),
+        ),
+        (
+            "serve",
+            Json::obj(vec![
+                ("steps", Json::num(SERVE_STEPS.get() as f64)),
+                ("step_latency_us", hist_summary_json(&SERVE_STEP_LATENCY_US)),
+                ("queue_latency_us", hist_summary_json(&SERVE_QUEUE_LATENCY_US)),
+                ("ticks", Json::num(SERVE_TICKS.get() as f64)),
+                ("tick_requests", Json::num(SERVE_TICK_REQUESTS.get() as f64)),
+                ("tick_fill_permille", Json::num(SERVE_TICK_FILL_PERMILLE.get() as f64)),
+            ]),
+        ),
+        (
+            "sessions",
+            Json::obj(vec![
+                ("open", Json::num(SESSIONS_OPEN.get() as f64)),
+                ("opened", Json::num(SESSIONS_OPENED.get() as f64)),
+                ("evicted", Json::num(SESSIONS_EVICTED.get() as f64)),
+                ("expired", Json::num(SESSIONS_EXPIRED.get() as f64)),
+                ("spilled", Json::num(SESSIONS_SPILLED.get() as f64)),
+                ("rehydrated", Json::num(SESSIONS_REHYDRATED.get() as f64)),
+                ("corrupt_dropped", Json::num(SESSIONS_CORRUPT_DROPPED.get() as f64)),
+                ("spill_failures", Json::num(SESSIONS_SPILL_FAILURES.get() as f64)),
+            ]),
+        ),
+        (
+            "memory",
+            Json::obj(vec![
+                ("reads", Json::num(MEM_READS.get() as f64)),
+                ("writes", Json::num(MEM_WRITES.get() as f64)),
+                ("rollbacks", Json::num(MEM_ROLLBACKS.get() as f64)),
+                ("ann_queries", Json::num(ANN_QUERIES.get() as f64)),
+                ("ann_candidates_scanned", Json::num(ANN_CANDIDATES.get() as f64)),
+                ("ann_full_rebuilds", Json::num(ANN_FULL_REBUILDS.get() as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        static C: Counter = Counter::new();
+        static G: Gauge = Gauge::new();
+        C.inc();
+        C.add(4);
+        assert_eq!(C.get(), 5);
+        G.set(7);
+        G.inc();
+        G.dec();
+        assert_eq!(G.get(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(Histogram::idx(0), 0);
+        assert_eq!(Histogram::idx(1), 0);
+        assert_eq!(Histogram::idx(2), 1);
+        assert_eq!(Histogram::idx(3), 2);
+        assert_eq!(Histogram::idx(4), 2);
+        assert_eq!(Histogram::idx(5), 3);
+        assert_eq!(Histogram::idx(u64::MAX), BUCKETS - 1);
+
+        assert_eq!(h.quantile_us(0.5), 0); // empty
+        for us in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 1000] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum_us(), 1009);
+        assert_eq!(h.quantile_us(0.50), 1);
+        // p95 of 10 samples lands on the 10th (ceil(0.95*10) = 10): the
+        // 1000 µs outlier, reported as its bucket bound 1024.
+        assert_eq!(h.quantile_us(0.95), 1024);
+        assert_eq!(h.quantile_us(0.99), 1024);
+        let s = h.summary();
+        assert_eq!((s.count, s.p50_us, s.p99_us), (10, 1, 1024));
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_reports_ceiling() {
+        let h = Histogram::new();
+        h.observe_us(u64::MAX / 2);
+        assert_eq!(h.quantile_us(0.5), 1u64 << (BUCKETS - 2));
+    }
+
+    #[test]
+    fn prometheus_render_is_well_formed() {
+        // Touch a few metrics so the render has nonzero series too.
+        MEM_READS.inc();
+        SERVE_STEP_LATENCY_US.observe_us(42);
+        let text = render_prometheus();
+        assert!(text.starts_with("# TYPE "));
+        for family in [
+            "sam_train_episodes_total",
+            "sam_train_fwd_phase_us_bucket{phase=\"f1\",le=\"1\"}",
+            "sam_train_bwd_phase_us_bucket{phase=\"b2\",le=\"+Inf\"}",
+            "sam_serve_step_latency_us_sum",
+            "sam_serve_step_latency_us_count",
+            "sam_sessions_open",
+            "sam_mem_reads_total",
+            "sam_ann_queries_total",
+        ] {
+            assert!(text.contains(family), "missing {family} in render");
+        }
+        // Every non-comment line is `name[{labels}] <integer>`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("line has a value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<u64>().is_ok(), "non-integer value in {line:?}");
+        }
+        // Histogram bucket series are cumulative: the +Inf bucket of the
+        // step-latency family equals its _count.
+        let count_line = text
+            .lines()
+            .find(|l| l.starts_with("sam_serve_step_latency_us_count"))
+            .unwrap();
+        let inf_line = text
+            .lines()
+            .find(|l| l.starts_with("sam_serve_step_latency_us_bucket{le=\"+Inf\"}"))
+            .unwrap();
+        let tail = |l: &str| l.rsplit_once(' ').unwrap().1.parse::<u64>().unwrap();
+        assert_eq!(tail(count_line), tail(inf_line));
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        TRAIN_EPISODES.inc();
+        let snap = snapshot_json();
+        let text = snap.encode();
+        let parsed = crate::util::json::Json::parse(&text).expect("snapshot parses");
+        for key in ["train", "serve", "sessions", "memory"] {
+            assert!(parsed.get(key).is_some(), "snapshot missing {key:?}");
+        }
+    }
+}

@@ -5,6 +5,7 @@ pub mod alloc;
 pub mod args;
 pub mod fault;
 pub mod json;
+pub mod metrics;
 pub mod pool;
 pub mod rng;
 pub mod timer;

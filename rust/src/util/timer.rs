@@ -41,21 +41,43 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Stats over the **finite** samples in `xs`. A NaN or ±Inf sample
+    /// (a zero-duration division, a poisoned measurement) must not poison
+    /// mean/min/max — BENCH_*.json verdict comparisons read these fields
+    /// and `NaN >= floor` is silently false. Non-finite samples are
+    /// dropped and `n` reports the finite count; an all-non-finite (or
+    /// empty) input panics, as an empty sample always has.
     pub fn of(xs: &[f64]) -> Stats {
-        assert!(!xs.is_empty());
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
+        let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        assert!(
+            !finite.is_empty(),
+            "Stats::of needs at least one finite sample ({} given, all non-finite or empty)",
+            xs.len()
+        );
+        let n = finite.len();
+        let mean = finite.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
-            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+            finite.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
         } else {
             0.0
         };
+        // total_cmp folds: immune to the NaN-absorbing behaviour of
+        // f64::min/max (defense in depth — the filter above already
+        // removed non-finite values).
         Stats {
             n,
             mean,
             std: var.sqrt(),
-            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
-            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            min: finite.iter().copied().fold(f64::INFINITY, |a, b| match a.total_cmp(&b) {
+                std::cmp::Ordering::Greater => b,
+                _ => a,
+            }),
+            max: finite.iter().copied().fold(f64::NEG_INFINITY, |a, b| {
+                match a.total_cmp(&b) {
+                    std::cmp::Ordering::Less => b,
+                    _ => a,
+                }
+            }),
         }
     }
 }
@@ -97,6 +119,25 @@ mod tests {
         assert!((s.std - 1.0).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn stats_reject_non_finite_samples() {
+        // A NaN sample used to poison mean AND min/max (f64::min/max
+        // propagate differently depending on argument order); now it is
+        // dropped and n counts only the finite samples.
+        let s = Stats::of(&[1.0, f64::NAN, 3.0, f64::INFINITY, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!(s.std.is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite sample")]
+    fn stats_all_nan_panics() {
+        Stats::of(&[f64::NAN, f64::NAN]);
     }
 
     #[test]

@@ -327,9 +327,17 @@ mod faulted {
 
         fault::arm("sched.tick", FaultKind::Panic, 0, 1);
         // The injected panic kills the scheduler thread; every in-flight
-        // and subsequent request must get an error reply, not a hang.
-        assert!(sched.step_blocking(id, x.clone()).is_err());
-        assert!(sched.step_blocking(id, x).is_err());
+        // and subsequent request must get an error reply, not a hang —
+        // and specifically the retryable SchedulerStopped, NOT
+        // NoSuchSession: the session still exists, only the scheduler is
+        // gone, so clients must be told to retry rather than to give the
+        // session up (regression: the drain paths used to misreport
+        // NoSuchSession, which the server renders non-retryable).
+        let e1 = sched.step_blocking(id, x.clone()).unwrap_err();
+        assert_eq!(e1, SessionError::SchedulerStopped);
+        assert!(e1.retryable());
+        let e2 = sched.step_blocking(id, x).unwrap_err();
+        assert_eq!(e2, SessionError::SchedulerStopped);
         fault::clear();
         sched.stop(); // idempotent on a dead scheduler
     }

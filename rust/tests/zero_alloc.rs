@@ -373,6 +373,85 @@ fn sdnc_batched_ticks_allocate_nothing_after_warmup() {
 }
 
 #[test]
+fn serving_manager_step_with_metrics_allocates_nothing_after_warmup() {
+    // The observability contract at the serving layer: a steady-state
+    // `SessionManager::step` — which now stamps SERVE_STEPS and the step
+    // latency histogram on every call — still performs zero caller-side
+    // heap allocations. Counters are relaxed atomics and the histogram is
+    // fixed buckets, so instrumentation must be invisible to the allocator.
+    use sam::serving::{build_infer_model, SessionConfig, SessionManager};
+    use sam::util::metrics;
+
+    let c = cfg(5, 4);
+    let mut rng = Rng::new(7);
+    let model = build_infer_model(CoreKind::Sam, &c, &mut rng, None);
+    let mgr = SessionManager::new(model, SessionConfig::default());
+    let id = mgr.open_seeded(None);
+    let t_len = 8;
+    let mut xrng = Rng::new(1234);
+    let xs: Vec<Vec<f32>> = (0..t_len)
+        .map(|_| (0..5).map(|_| if xrng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let mut y: Vec<f32> = Vec::new();
+    // Warm-up: pools, the session's state buffers and `y` reach capacity.
+    for _ in 0..WARMUP_EPISODES {
+        for x in &xs {
+            mgr.step(id, x, &mut y).unwrap();
+        }
+        mgr.reset(id).unwrap();
+    }
+    let steps_before = metrics::SERVE_STEPS.get();
+    let hist_before = metrics::SERVE_STEP_LATENCY_US.count();
+    let before = thread_alloc_count();
+    for x in &xs {
+        mgr.step(id, x, &mut y).unwrap();
+    }
+    let allocs = thread_alloc_count() - before;
+    assert_eq!(
+        allocs, 0,
+        "steady-state manager step with metrics performed {allocs} allocations \
+         across {t_len} steps"
+    );
+    // The registry is process-global (parallel tests may also bump it), so
+    // assert the delta floor, not equality.
+    assert!(
+        metrics::SERVE_STEPS.get() >= steps_before + t_len as u64,
+        "SERVE_STEPS did not advance across the measured steps"
+    );
+    assert!(
+        metrics::SERVE_STEP_LATENCY_US.count() >= hist_before + t_len as u64,
+        "step-latency histogram did not record the measured steps"
+    );
+}
+
+#[test]
+fn train_tick_metrics_advance_during_zero_alloc_ticks() {
+    // Companion to the batched-tick legs: the per-phase timers live inside
+    // the measured window of `run_batched_ticks`, so this checks they are
+    // actually firing — a tick bumps TRAIN_TICKS and lands one observation
+    // in every forward-phase histogram.
+    use sam::cores::sam::SamCore;
+    use sam::util::metrics;
+
+    let ticks_before = metrics::TRAIN_TICKS.get();
+    let phase_before: Vec<u64> =
+        metrics::TRAIN_FWD_PHASE_US.iter().map(|h| h.count()).collect();
+    let c = cfg(5, 4);
+    let lanes: Vec<SamCore> = (0..2).map(|_| SamCore::new(&c, &mut Rng::new(7))).collect();
+    run_batched_ticks(lanes, 4, "sam-batched-metrics");
+    assert!(
+        metrics::TRAIN_TICKS.get() > ticks_before,
+        "TRAIN_TICKS did not advance across batched training ticks"
+    );
+    for (i, h) in metrics::TRAIN_FWD_PHASE_US.iter().enumerate() {
+        assert!(
+            h.count() > phase_before[i],
+            "forward phase histogram {i} recorded nothing"
+        );
+    }
+}
+
+#[test]
 fn sam_steps_stay_lean_at_larger_scale() {
     // A second shape point (more heads, bigger memory) so the guarantee
     // isn't an artifact of one tiny configuration.
